@@ -1,0 +1,76 @@
+//! Real-time code assistant (paper §6.3): caching code-help prompts.
+//!
+//! The paper's example: "How do I write a function to reverse a string
+//! in Python?" should reuse the cached answer for "Python function to
+//! reverse text". This demo also exercises the TTL mechanism: cached
+//! answers expire so stale API docs don't persist (§2.7).
+//!
+//! `cargo run --release --example code_assistant`
+
+use std::sync::Arc;
+
+use semcache::cache::{CacheConfig, SemanticCache};
+use semcache::embedding::{BatcherConfig, EmbeddingService, Encoder, EncoderSpec, NativeEncoder};
+use semcache::llm::{SimLlm, SimLlmConfig};
+use semcache::runtime::{artifacts_available, artifacts_dir, ModelParams};
+use semcache::store::{Clock, ManualClock};
+
+fn main() -> anyhow::Result<()> {
+    let encoder: Arc<dyn Encoder> = if artifacts_available() {
+        Arc::new(EmbeddingService::spawn(
+            EncoderSpec::Pjrt(artifacts_dir()),
+            BatcherConfig::default(),
+        )?)
+    } else {
+        Arc::new(NativeEncoder::new(ModelParams::default()))
+    };
+
+    // Manual clock so the demo can fast-forward past the TTL.
+    let clock = Arc::new(ManualClock::new(0));
+    let cache = SemanticCache::with_clock(
+        CacheConfig { ttl_ms: 30 * 60 * 1000, ..Default::default() }, // 30 min TTL
+        clock.clone(),
+    );
+    let llm = SimLlm::new(SimLlmConfig::default());
+
+    let mut ask = |cache: &SemanticCache, prompt: &str| -> (String, bool) {
+        let e = encoder.encode_text(prompt);
+        match cache.lookup(&e) {
+            Some(hit) => {
+                println!("HIT  ({:.3})  {prompt}", hit.score);
+                (hit.entry.response, true)
+            }
+            None => {
+                let r = llm.call(prompt, None);
+                cache.insert(prompt, &e, &r.text);
+                println!("MISS ({:>5.0} ms simulated LLM)  {prompt}", r.latency_ms);
+                (r.text, false)
+            }
+        }
+    };
+
+    println!("--- developer session ---");
+    let (a1, hit1) = ask(&cache, "how do i write a function to reverse a string in python");
+    assert!(!hit1);
+    // The paper's paraphrase example reuses the cached completion:
+    let (a2, hit2) = ask(&cache, "write a python function to reverse a string");
+    assert!(hit2, "paraphrase should reuse the cached completion");
+    assert_eq!(a1, a2);
+
+    let (_, hit3) = ask(&cache, "how do i debug a segfault in my c extension");
+    assert!(!hit3, "unrelated prompt must go to the LLM");
+
+    // Same question a few minutes later: still cached.
+    clock.advance(5 * 60 * 1000);
+    let (_, hit4) = ask(&cache, "how do i write a function to reverse a string with python");
+    assert!(hit4);
+
+    // After the TTL expires the entry is refreshed from the LLM (§2.7).
+    clock.advance(40 * 60 * 1000);
+    println!("--- 40 minutes later (TTL = 30 min) ---");
+    let (_, hit5) = ask(&cache, "how do i write a function to reverse a string in python");
+    assert!(!hit5, "expired entry must be refreshed, not served stale");
+
+    println!("\ncache size after session: {} entries", cache.len());
+    Ok(())
+}

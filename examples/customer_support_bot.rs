@@ -1,0 +1,84 @@
+//! Customer-support chatbot (paper §6.1): a live serving demo.
+//!
+//! Populates the cache with the order-and-shipping knowledge base, then
+//! replays a bursty customer trace through the multi-worker coordinator
+//! with Poisson arrivals, printing the serving report — the scenario the
+//! paper's intro motivates (repetitive support questions).
+//!
+//! `cargo run --release --example customer_support_bot`
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use semcache::cache::CacheConfig;
+use semcache::coordinator::{Server, ServerConfig, TraceConfig, TraceRunner};
+use semcache::embedding::{BatcherConfig, EmbeddingService, Encoder, EncoderSpec, NativeEncoder};
+use semcache::llm::SimLlmConfig;
+use semcache::runtime::{artifacts_available, artifacts_dir, ModelParams};
+use semcache::workload::{Category, DatasetConfig, WorkloadGenerator};
+
+fn main() -> anyhow::Result<()> {
+    let encoder: Arc<dyn Encoder> = if artifacts_available() {
+        Arc::new(EmbeddingService::spawn(
+            EncoderSpec::Pjrt(artifacts_dir()),
+            BatcherConfig::default(),
+        )?)
+    } else {
+        Arc::new(NativeEncoder::new(ModelParams::default()))
+    };
+
+    // TTL + bounded cache: the production-ish configuration (§2.7).
+    let server = Arc::new(Server::new(
+        encoder,
+        ServerConfig {
+            cache: CacheConfig {
+                ttl_ms: 3_600_000,
+                capacity: 50_000,
+                ..CacheConfig::default()
+            },
+            llm: SimLlmConfig::default(),
+            judge: Default::default(),
+        },
+    ));
+
+    // Knowledge base: shipping-category QA pairs only.
+    let ds = WorkloadGenerator::new(0xB07).generate(&DatasetConfig::small());
+    let kb: Vec<_> = ds.base_for(Category::OrderShipping).cloned().collect();
+    println!("populating support knowledge base: {} QA pairs", kb.len());
+    server.populate(&kb);
+    server.register_ground_truth(&ds);
+    let _hk = server.start_housekeeping(Duration::from_millis(500));
+
+    // Customer trace: shipping test queries, replayed with 8 workers.
+    let trace: Vec<_> = ds.tests_for(Category::OrderShipping).cloned().collect();
+    println!("replaying {} customer queries through 8 workers...", trace.len());
+    let report = TraceRunner::new(server.clone()).run(
+        &trace,
+        &TraceConfig { workers: 8, qps: 0.0, use_cache: true, seed: 7 },
+    );
+
+    println!("\n=== serving report ===");
+    println!(
+        "answered {} queries in {:.2}s wall ({:.0} qps)",
+        report.replies.len(),
+        report.wall_secs,
+        report.throughput_qps
+    );
+    println!(
+        "cache hits: {} ({:.1}%), LLM calls: {}",
+        report.hits,
+        100.0 * report.hits as f64 / report.replies.len() as f64,
+        report.misses
+    );
+    println!(
+        "user-visible latency (incl. simulated LLM time): mean {:.1} ms, p50 {:.2} ms, p95 {:.1} ms",
+        report.latency.mean, report.latency.p50, report.latency.p95
+    );
+    let m = server.metrics().snapshot();
+    println!(
+        "hit accuracy (judged): {:.1}%  |  est. spend ${:.4}",
+        100.0 * m.positive_rate(),
+        m.cost_usd(&Default::default())
+    );
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! Quickstart: the paper's §2.5 workflow in ~40 lines.
+//!
+//! Run with `cargo run --release --example quickstart`.
+//! Uses the PJRT (AOT) encoder when `make artifacts` has been run,
+//! otherwise falls back to the pure-Rust native encoder.
+
+use std::sync::Arc;
+
+use semcache::coordinator::{ReplySource, Server, ServerConfig};
+use semcache::embedding::{BatcherConfig, EmbeddingService, Encoder, EncoderSpec, NativeEncoder};
+use semcache::runtime::{artifacts_available, artifacts_dir, ModelParams};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Pick an embedding backend (paper §2.2: pluggable models).
+    let encoder: Arc<dyn Encoder> = if artifacts_available() {
+        println!("using AOT JAX/Pallas encoder via PJRT");
+        Arc::new(EmbeddingService::spawn(
+            EncoderSpec::Pjrt(artifacts_dir()),
+            BatcherConfig::default(),
+        )?)
+    } else {
+        println!("artifacts not built; using native encoder (run `make artifacts`)");
+        Arc::new(NativeEncoder::new(ModelParams::default()))
+    };
+
+    // 2. Stand up the cache-fronted server (simulated GPT upstream).
+    let server = Server::new(encoder, ServerConfig::default());
+
+    // 3. First query: cache miss -> LLM -> cached.
+    let q1 = "How do I reset my online banking password?";
+    let r1 = server.handle(q1, None);
+    println!("\nQ1: {q1}\n  -> {:?}, {:.1} ms (llm {:.1} ms)", kind(&r1.source), r1.total_ms, r1.llm_ms);
+
+    // 4. Semantically similar query: served from the cache, no API call.
+    let q2 = "How can I reset my password for online banking?";
+    let r2 = server.handle(q2, None);
+    println!("Q2: {q2}\n  -> {:?}, {:.2} ms", kind(&r2.source), r2.total_ms);
+    if let ReplySource::Cache { score } = r2.source {
+        println!("  cosine similarity of match: {score:.3}");
+    }
+    assert_eq!(r1.response, r2.response, "cached response reused");
+
+    // 5. Unrelated query: correctly misses.
+    let q3 = "What is the capital of France?";
+    let r3 = server.handle(q3, None);
+    println!("Q3: {q3}\n  -> {:?}", kind(&r3.source));
+
+    let m = server.metrics().snapshot();
+    println!(
+        "\nmetrics: {} requests, {} cache hits, {} LLM calls (hit rate {:.0}%)",
+        m.requests,
+        m.cache_hits,
+        m.llm_calls,
+        100.0 * m.hit_rate()
+    );
+    println!(
+        "speedup on the cached query: {:.0}x",
+        r1.total_ms / r2.total_ms.max(1e-9)
+    );
+    Ok(())
+}
+
+fn kind(s: &ReplySource) -> &'static str {
+    match s {
+        ReplySource::Cache { .. } => "CACHE HIT",
+        ReplySource::Llm => "LLM CALL",
+    }
+}

@@ -1,0 +1,50 @@
+//! Threshold tuning (paper §5.3 + §2.10): sweep the similarity gate and
+//! demonstrate the adaptive-threshold controller converging after a
+//! burst of inaccurate hits.
+//!
+//! `cargo run --release --example threshold_tuning`
+
+use semcache::cache::AdaptiveThreshold;
+use semcache::embedding::NativeEncoder;
+use semcache::experiments::{sweep_grid, threshold_sweep, EvalContext};
+use semcache::llm::JudgeConfig;
+use semcache::runtime::ModelParams;
+use semcache::workload::DatasetConfig;
+
+fn main() {
+    // Small-scale sweep with the native encoder (fast, no artifacts).
+    println!("building evaluation context (small scale)...");
+    let enc = NativeEncoder::new(ModelParams::default());
+    let ctx = EvalContext::build(&enc, &DatasetConfig::tiny(), 0x7013);
+
+    let rows = threshold_sweep(
+        &ctx,
+        &Default::default(),
+        &JudgeConfig::default(),
+        &sweep_grid(),
+    );
+    println!("\nθ     hit-rate  positive-rate");
+    for r in &rows {
+        println!(
+            "{:.2}  {:>7.1}%  {:>12.1}%",
+            r.threshold,
+            100.0 * r.hit_rate(),
+            100.0 * r.positive_rate()
+        );
+    }
+
+    // Adaptive controller demo (§2.10 "Dynamic Threshold Adjustment"):
+    // a run of negative hits pushes the gate up; sustained accuracy
+    // relaxes it slowly.
+    println!("\nadaptive threshold controller:");
+    let mut adaptive = AdaptiveThreshold::new(0.80);
+    print!("start {:.3}", adaptive.get());
+    for _ in 0..4 {
+        adaptive.observe(false); // judge flagged bad hits
+    }
+    print!(" -> after 4 negatives {:.3}", adaptive.get());
+    for _ in 0..200 {
+        adaptive.observe(true); // long accurate streak
+    }
+    println!(" -> after 200 positives {:.3}", adaptive.get());
+}

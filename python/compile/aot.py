@@ -1,0 +1,132 @@
+"""AOT lowering: JAX/Pallas → HLO text artifacts + manifest.
+
+Run once by ``make artifacts``; Python never touches the request path.
+
+Interchange is HLO **text**, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts:
+  encoder_b{1,4,8,16,32}.hlo.txt   sentence encoder at fixed batch sizes
+  scorer_n{1024,4096}.hlo.txt      blocked cosine top-k scorer
+  manifest.json                    name → file + I/O shapes + model params
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+jax.config.update("jax_enable_x64", True)  # i64 token ids end-to-end
+
+from .kernels import scorer as scorer_kernel  # noqa: E402
+from .model import make_encoder  # noqa: E402
+from .weights import ModelParams, weight_table  # noqa: E402
+
+ENCODER_BATCH_SIZES = (1, 4, 8, 16, 32)
+SCORER_SIZES = (1024, 4096)
+SCORER_TOPK = 16
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_encoder(p: ModelParams, batch: int) -> tuple[str, dict]:
+    tokens = jax.ShapeDtypeStruct((batch, p.seq_len), jnp.int64)
+    wspecs = [
+        jax.ShapeDtypeStruct(shape, jnp.float32) for _, shape, _ in weight_table(p)
+    ]
+    encode = make_encoder(p, use_pallas=True, interpret=True)
+    lowered = jax.jit(encode).lower(tokens, *wspecs)
+    spec = {
+        "name": f"encoder_b{batch}",
+        "file": f"encoder_b{batch}.hlo.txt",
+        "input_shapes": [[batch, p.seq_len]] + [list(s) for _, s, _ in weight_table(p)],
+        "output_shapes": [[batch, p.dim]],
+    }
+    return to_hlo_text(lowered), spec
+
+
+def lower_scorer(p: ModelParams, n: int, k: int) -> tuple[str, dict]:
+    q = jax.ShapeDtypeStruct((p.dim,), jnp.float32)
+    corpus = jax.ShapeDtypeStruct((n, p.dim), jnp.float32)
+
+    def fn(q, corpus):
+        return scorer_kernel.topk(q, corpus, k, interpret=True)
+
+    lowered = jax.jit(fn).lower(q, corpus)
+    spec = {
+        "name": f"scorer_n{n}",
+        "file": f"scorer_n{n}.hlo.txt",
+        "input_shapes": [[p.dim], [n, p.dim]],
+        "output_shapes": [[k], [k]],
+    }
+    return to_hlo_text(lowered), spec
+
+
+def build(out_dir: str, p: ModelParams) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    artifacts = []
+
+    for b in ENCODER_BATCH_SIZES:
+        text, spec = lower_encoder(p, b)
+        path = os.path.join(out_dir, spec["file"])
+        with open(path, "w") as f:
+            f.write(text)
+        artifacts.append(spec)
+        print(f"  wrote {spec['file']} ({len(text) / 1024:.0f} KiB)")
+
+    for n in SCORER_SIZES:
+        text, spec = lower_scorer(p, n, SCORER_TOPK)
+        path = os.path.join(out_dir, spec["file"])
+        with open(path, "w") as f:
+            f.write(text)
+        artifacts.append(spec)
+        print(f"  wrote {spec['file']} ({len(text) / 1024:.0f} KiB)")
+
+    manifest = {
+        "artifacts": artifacts,
+        "model": {
+            "vocab_size": p.vocab_size,
+            "dim": p.dim,
+            "hidden": p.hidden,
+            "layers": p.layers,
+            "heads": p.heads,
+            "seq_len": p.seq_len,
+            "seed": p.seed,
+        },
+        "scorer_topk": SCORER_TOPK,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"  wrote manifest.json ({len(artifacts)} artifacts)")
+    return manifest
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    args = ap.parse_args()
+    p = ModelParams()
+    print(f"AOT-lowering encoder ({p.layers}L x {p.dim}d, vocab {p.vocab_size}) "
+          f"and scorer to {args.out}")
+    build(args.out, p)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,1 @@
+"""L1 Pallas kernels (attention, scorer) and their pure-jnp oracles."""

@@ -1,0 +1,44 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Everything the L1 kernels compute is re-expressed here with plain
+``jax.numpy`` ops. pytest asserts allclose between the two on swept shapes
+(hypothesis), and the L2 model can be built entirely from these refs
+(``use_pallas=False``) to isolate kernel bugs from model bugs.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, mask):
+    """Masked multi-head scaled-dot-product attention.
+
+    q, k, v: (B, H, S, Dh); mask: (B, S) with 1.0 = real token, 0.0 = pad.
+    Returns (B, H, S, Dh). Pad *keys* are masked out; pad query rows
+    produce garbage that pooling later ignores (same contract as the
+    Pallas kernel).
+    """
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], dtype=q.dtype))
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    neg = jnp.asarray(-1e9, dtype=q.dtype)
+    scores = scores + (1.0 - mask[:, None, None, :]) * neg
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def scores_ref(query, corpus):
+    """Cosine scores of one normalized query against normalized corpus rows.
+
+    query: (D,), corpus: (N, D) — both L2-normalized, so cosine == dot.
+    Returns (N,).
+    """
+    return corpus @ query
+
+
+def topk_ref(query, corpus, k):
+    """Top-k (values, indices) by cosine score."""
+    import jax.lax as lax
+
+    return lax.top_k(scores_ref(query, corpus), k)

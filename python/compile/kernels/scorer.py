@@ -1,0 +1,72 @@
+"""L1 Pallas kernel: blocked cosine scoring (the cache's similarity scan).
+
+Scores one normalized query against a block-resident corpus matrix — the
+exact-rerank / flat-baseline hot loop, expressed as the HBM→VMEM streaming
+schedule the paper's CUDA-ish analogue would tile with threadblocks:
+
+* the corpus (N, D) streams through VMEM in (BLOCK, D) tiles, one grid
+  step each (BLOCK=256 → 256·384·4 B = 384 KiB per tile);
+* the query vector is broadcast-resident across all steps
+  (``index_map = 0``), living in VMEM for the whole sweep;
+* each step emits a (BLOCK,) score slice; top-k reduction happens in the
+  surrounding jax graph with ``lax.top_k`` (data-dependent selection is
+  cheap at (N,) and keeps the kernel a pure streaming matvec the MXU can
+  saturate).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.lax as lax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 256
+
+
+def _score_kernel(q_ref, c_ref, o_ref):
+    """One corpus tile: (BLOCK, D) @ (D,) -> (BLOCK,)."""
+    o_ref[...] = c_ref[...] @ q_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def scores(query, corpus, interpret: bool = True):
+    """Cosine scores (N,) of `query` (D,) against `corpus` (N, D).
+
+    Both inputs must be L2-normalized (cosine == dot). N must be a
+    multiple of BLOCK — the AOT path compiles fixed-shape variants and the
+    Rust caller pads the final tile.
+    """
+    n, d = corpus.shape
+    assert n % BLOCK == 0, f"N={n} must be a multiple of {BLOCK}"
+    grid = (n // BLOCK,)
+    return pl.pallas_call(
+        _score_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((d,), lambda i: (0,)),        # query: resident
+            pl.BlockSpec((BLOCK, d), lambda i: (i, 0)),  # corpus: streamed
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), corpus.dtype),
+        interpret=interpret,
+    )(query, corpus)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def topk(query, corpus, k: int, interpret: bool = True):
+    """(values, indices) of the k best cosine scores; indices as f32.
+
+    Implemented with a full descending argsort rather than ``lax.top_k``:
+    top_k lowers to the ``topk(..., largest=true)`` HLO op, which the
+    xla_extension 0.5.1 text parser used by the Rust runtime predates.
+    A comparator ``sort`` parses cleanly and costs the same at N ≤ 4096.
+
+    Indices are cast to f32 so the whole output tuple is homogeneous —
+    the Rust runtime reads every output as f32 and rounds indices back.
+    """
+    s = scores(query, corpus, interpret=interpret)
+    order = jnp.argsort(-s)[:k]
+    return s[order], order.astype(jnp.float32)

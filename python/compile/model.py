@@ -1,0 +1,108 @@
+"""L2: the sentence encoder as a JAX computation.
+
+MiniLM-geometry transformer (paper §2.2 uses all-MiniLM-L6-v2; see
+DESIGN.md §3 for the generated-weights substitution):
+
+    token-embed + pos → [pre-LN attention + pre-LN GELU FFN] × L
+    → masked mean-pool → L2 normalize → (B, D) unit embeddings
+
+Weights are *inputs* to the lowered function (not baked constants), so the
+HLO stays small and the Rust runtime feeds the same generated tensors it
+derives from the shared splitmix64 streams; they are pre-uploaded to
+device buffers once at startup.
+
+The attention hot-spot is the L1 Pallas kernel
+(``kernels.attention``); ``use_pallas=False`` swaps in the pure-jnp
+oracle so pytest can isolate kernel bugs from model bugs. Norm/GELU
+formulas here are mirrored exactly by ``rust/src/embedding/native.rs``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention as attn_kernel
+from .kernels import ref as kref
+from .weights import ModelParams
+
+LN_EPS = 1e-6
+
+
+def layer_norm(x):
+    """Parameter-free LayerNorm over the last axis (eps mirrored in Rust)."""
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + LN_EPS)
+
+
+def gelu(x):
+    """tanh-approximate GELU — the exact formula the Rust twin implements."""
+    c = jnp.sqrt(jnp.asarray(2.0 / jnp.pi, dtype=x.dtype))
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def split_heads(x, heads: int):
+    """(B, S, D) → (B, H, S, Dh)."""
+    b, s, d = x.shape
+    return x.reshape(b, s, heads, d // heads).transpose(0, 2, 1, 3)
+
+
+def merge_heads(x):
+    """(B, H, S, Dh) → (B, S, D)."""
+    b, h, s, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+
+
+def encoder_fwd(tokens, embed, pos, wq, wk, wv, wo, w1, w2, *,
+                params: ModelParams, use_pallas: bool = True,
+                interpret: bool = True):
+    """Forward pass: token ids (B, S) int → unit embeddings (B, D) f32.
+
+    Weight arguments follow ``weights.weight_table`` order; the stacked
+    layer tensors (wq, ...) carry a leading ``layers`` axis.
+    """
+    p = params
+    mask = (tokens != 0).astype(jnp.float32)              # (B, S)
+    x = embed[tokens] + pos[None, :, :]                    # (B, S, D)
+    for l in range(p.layers):
+        h = layer_norm(x)
+        q = split_heads(h @ wq[l], p.heads)
+        k = split_heads(h @ wk[l], p.heads)
+        v = split_heads(h @ wv[l], p.heads)
+        if use_pallas:
+            ctx = attn_kernel.attention(q, k, v, mask, interpret=interpret)
+        else:
+            ctx = kref.attention_ref(q, k, v, mask)
+        x = x + merge_heads(ctx) @ wo[l]
+        h = layer_norm(x)
+        x = x + gelu(h @ w1[l]) @ w2[l]
+    x = layer_norm(x)
+    # Masked mean pool: pad rows contribute nothing.
+    denom = jnp.maximum(mask.sum(axis=1, keepdims=True), 1.0)
+    pooled = (x * mask[:, :, None]).sum(axis=1) / denom    # (B, D)
+    # L2 normalize (zero-safe, mirrored in Rust).
+    norm = jnp.sqrt((pooled * pooled).sum(axis=-1, keepdims=True))
+    return pooled / jnp.maximum(norm, 1e-12)
+
+
+def make_encoder(params: ModelParams, use_pallas: bool = True,
+                 interpret: bool = True):
+    """A jit-able ``f(tokens, *weights) -> (embeddings,)`` closure.
+
+    Returns a 1-tuple to match the rust loader's ``return_tuple=True``
+    unwrapping convention.
+    """
+
+    @functools.partial(jax.jit)
+    def encode(tokens, embed, pos, wq, wk, wv, wo, w1, w2):
+        return (
+            encoder_fwd(
+                tokens, embed, pos, wq, wk, wv, wo, w1, w2,
+                params=params, use_pallas=use_pallas, interpret=interpret,
+            ),
+        )
+
+    return encode

@@ -1,0 +1,80 @@
+"""splitmix64 PRNG — the bit-exact twin of ``rust/src/util/rng.rs``.
+
+Every encoder weight tensor is *generated*, not trained: both the JAX
+compile path (this file) and the Rust native encoder derive all parameters
+from the same named splitmix64 streams, so the two implementations agree
+without shipping a checkpoint. Any change here must be mirrored in Rust;
+the cross-language contract is pinned by known-answer tests on both sides
+(``python/tests/test_rng.py`` and ``util::rng::tests``).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+_GOLDEN = np.uint64(0x9E3779B97F4A7C15)
+_MIX1 = np.uint64(0xBF58476D1CE4E5B9)
+_MIX2 = np.uint64(0x94D049BB133111EB)
+_FNV_OFFSET = np.uint64(0xCBF29CE484222325)
+_FNV_PRIME = np.uint64(0x100000001B3)
+
+_U64 = np.uint64
+_INV_2_53 = 1.0 / 9007199254740992.0  # 2**-53
+
+
+def fnv1a64(data: bytes) -> int:
+    """FNV-1a 64-bit (twin: ``tokenizer::hash::fnv1a64``)."""
+    h = _FNV_OFFSET
+    with np.errstate(over="ignore"):
+        for b in data:
+            h = _U64(h ^ _U64(b)) * _FNV_PRIME
+    return int(h)
+
+
+def derive_seed(seed: int, label: str) -> int:
+    """Independent stream seed for a named tensor (twin: ``SplitMix64::derive``)."""
+    return int(_U64(seed) ^ _U64(fnv1a64(label.encode("utf-8"))))
+
+
+def splitmix64_block(seed: int, n: int) -> np.ndarray:
+    """The first ``n`` outputs of splitmix64(seed), vectorized.
+
+    state_i = seed + (i+1) * GOLDEN; output_i = mix(state_i) — identical to
+    the sequential Rust loop.
+    """
+    with np.errstate(over="ignore"):
+        i = np.arange(1, n + 1, dtype=np.uint64)
+        z = _U64(seed) + i * _GOLDEN
+        z = (z ^ (z >> _U64(30))) * _MIX1
+        z = (z ^ (z >> _U64(27))) * _MIX2
+        return z ^ (z >> _U64(31))
+
+
+def uniform53(bits: np.ndarray) -> np.ndarray:
+    """u64 -> f64 in [0, 1): top 53 bits / 2^53 (twin: ``next_f64``)."""
+    return (bits >> np.uint64(11)).astype(np.float64) * _INV_2_53
+
+
+def normal(seed: int, n: int, std: float) -> np.ndarray:
+    """``n`` N(0, std^2) floats — bit-exact twin of ``SplitMix64::fill_normal``.
+
+    Rust consumes draws in pairs (u1, u2) and emits (r cos, r sin); the last
+    pair of an odd-length fill emits only the cos half.
+    """
+    m = (n + 1) // 2
+    bits = splitmix64_block(seed, 2 * m)
+    u1 = 1.0 - uniform53(bits[0::2])
+    u2 = uniform53(bits[1::2])
+    r = np.sqrt(-2.0 * np.log(u1))
+    theta = 2.0 * np.pi * u2
+    out = np.empty(2 * m, dtype=np.float64)
+    out[0::2] = r * np.cos(theta) * std
+    out[1::2] = r * np.sin(theta) * std
+    # float32 rounding happens element-wise in Rust ("as f32"); match it.
+    return out[:n].astype(np.float32)
+
+
+def normal_tensor(seed: int, label: str, shape: tuple[int, ...], std: float) -> np.ndarray:
+    """Named tensor fill: derive the stream from (seed, label), row-major."""
+    n = int(np.prod(shape))
+    return normal(derive_seed(seed, label), n, std).reshape(shape)

@@ -1,0 +1,60 @@
+"""Deterministic hashing word tokenizer — twin of ``rust/src/tokenizer``.
+
+The compile path only needs the tokenizer for tests and example traces;
+the request path tokenizes in Rust. Both must agree exactly, so this file
+mirrors the Rust algorithm line for line:
+
+1. lowercase; split on anything outside ``[a-z0-9']``;
+2. word id = ``2 + fnv1a64(word) % (vocab_size - 2)``;
+3. ``[CLS] w0 w1 ...`` truncated / right-padded with PAD to ``seq_len``.
+"""
+
+from __future__ import annotations
+
+from .rng import fnv1a64
+
+PAD_ID = 0
+CLS_ID = 1
+FIRST_WORD_ID = 2
+
+
+def words(text: str) -> list[str]:
+    """Normalized word split (twin: ``Tokenizer::words``)."""
+    out: list[str] = []
+    cur: list[str] = []
+    for ch in text:
+        # ASCII-only lowercase: Rust uses to_ascii_lowercase, and Python's
+        # .lower() would diverge on chars like 'K' (U+212A) → 'k'.
+        c = ch.lower() if "A" <= ch <= "Z" else ch
+        if ("a" <= c <= "z") or ("0" <= c <= "9") or c == "'":
+            cur.append(c)
+        elif cur:
+            out.append("".join(cur))
+            cur = []
+    if cur:
+        out.append("".join(cur))
+    return out
+
+
+class Tokenizer:
+    """Fixed-vocab, fixed-length tokenizer (twin: ``tokenizer::Tokenizer``)."""
+
+    def __init__(self, vocab_size: int, seq_len: int):
+        assert vocab_size > 2 and seq_len >= 2
+        self.vocab_size = vocab_size
+        self.seq_len = seq_len
+
+    def word_id(self, word: str) -> int:
+        return FIRST_WORD_ID + fnv1a64(word.encode("utf-8")) % (self.vocab_size - 2)
+
+    def encode(self, text: str) -> list[int]:
+        ids = [CLS_ID]
+        for w in words(text):
+            if len(ids) == self.seq_len:
+                break
+            ids.append(self.word_id(w))
+        ids.extend([PAD_ID] * (self.seq_len - len(ids)))
+        return ids
+
+    def encode_batch(self, texts: list[str]) -> list[list[int]]:
+        return [self.encode(t) for t in texts]

@@ -1,0 +1,71 @@
+"""Generated encoder weights — the shared Python/Rust parameterization.
+
+The encoder is a MiniLM-geometry transformer whose parameters are drawn
+from named splitmix64 streams (see ``rng.py``). The Rust native encoder
+(`embedding::native`) generates the *same* tensors from the same
+``(seed, label, shape, std)`` table below; the table is therefore part of
+the cross-language contract — change it in both places or not at all.
+
+Initialization scales are chosen so the token-embedding (lexical) signal
+dominates and the transformer adds contextual refinement on top:
+output projections (wo, w2) are down-scaled 10x, positional encodings are
+small. This keeps the generated encoder's similarity structure monotone in
+lexical overlap — the property the semantic-cache experiments need (see
+DESIGN.md §3, Embedding substitution).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from . import rng
+
+
+@dataclass(frozen=True)
+class ModelParams:
+    """Encoder hyperparameters; must match ``runtime::manifest::ModelParams``."""
+
+    vocab_size: int = 4096
+    dim: int = 384
+    hidden: int = 768
+    layers: int = 4
+    heads: int = 6
+    seq_len: int = 32
+    seed: int = 0x5EEDCAFE
+
+    @property
+    def head_dim(self) -> int:
+        assert self.dim % self.heads == 0
+        return self.dim // self.heads
+
+
+def weight_table(p: ModelParams) -> list[tuple[str, tuple[int, ...], float]]:
+    """(label, shape, std) for every tensor, in canonical order."""
+    d, h, lyr = p.dim, p.hidden, p.layers
+    inv_sqrt_d = 1.0 / np.sqrt(d)
+    inv_sqrt_h = 1.0 / np.sqrt(h)
+    return [
+        ("embed", (p.vocab_size, d), 1.0),
+        ("pos", (p.seq_len, d), 0.1),
+        ("wq", (lyr, d, d), inv_sqrt_d),
+        ("wk", (lyr, d, d), inv_sqrt_d),
+        ("wv", (lyr, d, d), inv_sqrt_d),
+        ("wo", (lyr, d, d), 0.1 * inv_sqrt_d),
+        ("w1", (lyr, d, h), inv_sqrt_d),
+        ("w2", (lyr, h, d), 0.1 * inv_sqrt_h),
+    ]
+
+
+def generate(p: ModelParams) -> dict[str, np.ndarray]:
+    """All weight tensors as float32 numpy arrays, keyed by label."""
+    return {
+        label: rng.normal_tensor(p.seed, label, shape, std)
+        for label, shape, std in weight_table(p)
+    }
+
+
+def flat_inputs(weights: dict[str, np.ndarray], p: ModelParams) -> list[np.ndarray]:
+    """Weights in the positional order the AOT executable expects."""
+    return [weights[label] for label, _, _ in weight_table(p)]

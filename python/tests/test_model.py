@@ -1,0 +1,84 @@
+"""L2 model tests: shapes, invariants, pallas-vs-ref, semantic structure."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.model import make_encoder
+from compile.tokenizer import Tokenizer
+from compile.weights import ModelParams, flat_inputs, generate
+
+
+# Small geometry for speed; full geometry is covered by test_aot + parity.
+P_SMALL = ModelParams(vocab_size=512, dim=96, hidden=192, layers=2, heads=4, seq_len=16)
+
+
+@pytest.fixture(scope="module")
+def small():
+    w = generate(P_SMALL)
+    tok = Tokenizer(P_SMALL.vocab_size, P_SMALL.seq_len)
+    enc_ref = make_encoder(P_SMALL, use_pallas=False)
+    enc_pal = make_encoder(P_SMALL, use_pallas=True)
+    return w, tok, enc_ref, enc_pal
+
+
+def encode(enc, w, tok, texts):
+    ids = np.array(tok.encode_batch(texts), dtype=np.int64)
+    return np.asarray(enc(ids, *flat_inputs(w, P_SMALL))[0])
+
+
+def test_output_shape_and_norm(small):
+    w, tok, enc_ref, _ = small
+    e = encode(enc_ref, w, tok, ["hello", "two words here", ""])
+    assert e.shape == (3, P_SMALL.dim)
+    np.testing.assert_allclose(np.linalg.norm(e, axis=1), 1.0, rtol=1e-5)
+    assert np.isfinite(e).all()
+
+
+def test_pallas_equals_ref_full_model(small):
+    w, tok, enc_ref, enc_pal = small
+    texts = ["how do i reset my password", "the quick brown fox", "a", ""]
+    e1 = encode(enc_ref, w, tok, texts)
+    e2 = encode(enc_pal, w, tok, texts)
+    np.testing.assert_allclose(e1, e2, rtol=1e-5, atol=1e-5)
+
+
+def test_batch_independence(small):
+    """Each row depends only on its own text (padding never leaks)."""
+    w, tok, enc_ref, _ = small
+    alone = encode(enc_ref, w, tok, ["where is my order"])
+    batch = encode(enc_ref, w, tok, ["where is my order", "x", "something else"])
+    np.testing.assert_allclose(alone[0], batch[0], rtol=1e-5, atol=1e-6)
+
+
+def test_paraphrase_closer_than_unrelated(small):
+    w, tok, enc_ref, _ = small
+    e = encode(
+        enc_ref, w, tok,
+        [
+            "how do i reset my password",
+            "how can i reset my password",
+            "best pasta recipe with tomatoes",
+        ],
+    )
+    near = float(e[0] @ e[1])
+    far = float(e[0] @ e[2])
+    assert near > far + 0.1, f"near={near} far={far}"
+
+
+def test_word_order_matters_but_weakly(small):
+    w, tok, enc_ref, _ = small
+    e = encode(enc_ref, w, tok, ["alpha beta gamma delta", "delta gamma beta alpha"])
+    sim = float(e[0] @ e[1])
+    assert 0.5 < sim < 0.99999, f"positional signal out of range: {sim}"
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.text(alphabet="abcdefgh ", min_size=0, max_size=40), min_size=1, max_size=4))
+def test_encoder_total_on_arbitrary_text(small, texts):
+    w, tok, enc_ref, _ = small
+    e = encode(enc_ref, w, tok, texts)
+    assert e.shape == (len(texts), P_SMALL.dim)
+    assert np.isfinite(e).all()
+    np.testing.assert_allclose(np.linalg.norm(e, axis=1), 1.0, rtol=1e-4)

@@ -1,0 +1,60 @@
+"""Known-answer and statistical tests for the splitmix64 twin.
+
+The reference vectors here are asserted verbatim by the Rust side
+(``util::rng::tests``) — together they pin the cross-language contract.
+"""
+
+import numpy as np
+import pytest
+
+from compile import rng
+
+
+def test_splitmix_reference_vector():
+    out = rng.splitmix64_block(0, 3)
+    assert out[0] == 0xE220A8397B1DCDAF
+    assert out[1] == 0x6E789E6AA1B965F4
+    assert out[2] == 0x06C45D188009454F
+
+
+def test_fnv_reference_values():
+    assert rng.fnv1a64(b"") == 0xCBF29CE484222325
+    assert rng.fnv1a64(b"a") == 0xAF63DC4C8601EC8C
+    assert rng.fnv1a64(b"foobar") == 0x85944171F73967E8
+    assert rng.fnv1a64(b"hello") == 0xA430D84680AABD0B
+
+
+def test_derive_stable_and_label_sensitive():
+    a = rng.derive_seed(42, "layer0.wq")
+    b = rng.derive_seed(42, "layer0.wk")
+    assert a != b
+    assert a == rng.derive_seed(42, "layer0.wq")
+
+
+def test_uniform53_in_unit_interval():
+    bits = rng.splitmix64_block(7, 10_000)
+    u = rng.uniform53(bits)
+    assert (u >= 0.0).all() and (u < 1.0).all()
+    assert abs(u.mean() - 0.5) < 0.01
+
+
+def test_normal_moments():
+    v = rng.normal(7, 200_001, 2.0)  # odd length exercises the tail path
+    assert v.dtype == np.float32
+    assert abs(v.mean()) < 0.02
+    assert abs(v.astype(np.float64).var() - 4.0) < 0.08
+
+
+def test_normal_prefix_property():
+    """Generating n and n+1 values must agree on the shared prefix pair-wise."""
+    a = rng.normal(3, 10, 1.0)
+    b = rng.normal(3, 12, 1.0)
+    np.testing.assert_array_equal(a, b[:10])
+
+
+@pytest.mark.parametrize("label,shape,std", [("embed", (8, 4), 1.0), ("wq", (2, 3, 3), 0.5)])
+def test_normal_tensor_deterministic(label, shape, std):
+    t1 = rng.normal_tensor(99, label, shape, std)
+    t2 = rng.normal_tensor(99, label, shape, std)
+    assert t1.shape == shape
+    np.testing.assert_array_equal(t1, t2)

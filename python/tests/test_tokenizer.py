@@ -1,0 +1,60 @@
+"""Tokenizer twin tests — mirrors ``rust/src/tokenizer/mod.rs`` exactly."""
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.tokenizer import CLS_ID, PAD_ID, Tokenizer, words
+
+
+def tok():
+    return Tokenizer(4096, 32)
+
+
+def test_splits_and_normalizes():
+    assert words("How do I reset my-password?  ") == [
+        "how", "do", "i", "reset", "my", "password",
+    ]
+    assert words("don't stop") == ["don't", "stop"]
+    assert words("!!!") == []
+
+
+def test_encode_shape_and_padding():
+    ids = tok().encode("hello world")
+    assert len(ids) == 32
+    assert ids[0] == CLS_ID
+    assert ids[1] != PAD_ID and ids[2] != PAD_ID
+    assert all(i == PAD_ID for i in ids[3:])
+
+
+def test_truncates_long_input():
+    long = " ".join(f"w{i}" for i in range(100))
+    ids = tok().encode(long)
+    assert len(ids) == 32
+    assert all(i != PAD_ID for i in ids)
+
+
+def test_known_answer_matches_rust():
+    # Twin of tokenizer::tests::fnv_known_answer.
+    t = tok()
+    assert t.word_id("hello") == 2 + 0xA430D84680AABD0B % 4094
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.text(max_size=200))
+def test_encode_invariants(text):
+    t = tok()
+    ids = t.encode(text)
+    assert len(ids) == 32
+    assert ids[0] == CLS_ID
+    assert all(0 <= i < 4096 for i in ids)
+    # Case-insensitive (ASCII contract only: Rust uses to_ascii_lowercase,
+    # so non-ASCII case-folding like 'ß'→'SS' is out of scope).
+    if text.isascii():
+        assert t.encode(text.upper()) == t.encode(text.lower())
+    # Padding is a suffix: no PAD before a non-PAD.
+    seen_pad = False
+    for i in ids[1:]:
+        if i == PAD_ID:
+            seen_pad = True
+        else:
+            assert not seen_pad, "PAD in the middle of a sequence"

@@ -1,0 +1,10 @@
+//! Figure 2 regeneration: API-call frequency, traditional vs cached.
+mod common;
+use semcache::experiments::{render_fig2, run_paper_eval, PaperEvalConfig};
+
+fn main() {
+    let ctx = common::eval_context();
+    let eval = run_paper_eval(&ctx, &PaperEvalConfig::default());
+    println!("\n{}", render_fig2(&eval));
+    println!("paper Figure 2: API calls reduced to 33% / 33% / 31.2% / 38.4%");
+}

@@ -1,0 +1,10 @@
+//! Figure 3 regeneration: average query response time with/without cache.
+mod common;
+use semcache::experiments::{render_fig3, run_paper_eval, PaperEvalConfig};
+
+fn main() {
+    let ctx = common::eval_context();
+    let eval = run_paper_eval(&ctx, &PaperEvalConfig::default());
+    println!("\n{}", render_fig3(&eval));
+    println!("paper Figure 3 shape: cached path is an order of magnitude faster");
+}

@@ -1,0 +1,10 @@
+//! Figure 4 regeneration: hit rates + positive-match accuracy.
+mod common;
+use semcache::experiments::{render_fig4, run_paper_eval, PaperEvalConfig};
+
+fn main() {
+    let ctx = common::eval_context();
+    let eval = run_paper_eval(&ctx, &PaperEvalConfig::default());
+    println!("\n{}", render_fig4(&eval));
+    println!("paper Figure 4: hit rates 61.6-68.8%, positive accuracy 92.5-97.3%");
+}

@@ -1,0 +1,14 @@
+//! §2.4 regeneration: HNSW O(log n) vs exhaustive O(n) scaling study.
+mod common;
+use semcache::experiments::{render_scaling, scaling_study, ScalingConfig};
+
+fn main() {
+    let mut cfg = ScalingConfig::default();
+    if std::env::var("SEMCACHE_BENCH_SCALE").as_deref() != Ok("paper") {
+        cfg.sizes = vec![1_000, 2_000, 4_000, 8_000, 16_000];
+        cfg.queries = 100;
+    }
+    let rows = scaling_study(&cfg);
+    println!("\n{}", render_scaling(&rows));
+    println!("paper §2.4 claim: HNSW reduces O(n) search to ~O(log n)");
+}

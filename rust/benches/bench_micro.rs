@@ -1,0 +1,115 @@
+//! Microbenchmarks for the hot paths (§Perf in EXPERIMENTS.md):
+//! vector math, HNSW insert/search, flat scan, KV store ops, tokenizer,
+//! native-encoder forward, end-to-end cache lookup, and — when artifacts
+//! are built — the PJRT encoder path that production serving uses.
+
+mod common;
+
+use semcache::cache::{CacheConfig, SemanticCache};
+use semcache::embedding::{Encoder, NativeEncoder, PjrtEncoder};
+use semcache::index::{FlatIndex, HnswConfig, HnswIndex, VectorIndex};
+use semcache::runtime::{artifacts_available, artifacts_dir, ModelParams};
+use semcache::store::{KvStore, StoreConfig};
+use semcache::tokenizer::Tokenizer;
+use semcache::util::{dot, Rng};
+
+use common::{bench, bench_throughput};
+
+fn random_vecs(n: usize, dim: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| (0..dim).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect())
+        .collect()
+}
+
+fn main() {
+    let dim = 384;
+
+    // --- vector math ---
+    let vs = random_vecs(2, dim, 1);
+    let (a, b) = (vs[0].clone(), vs[1].clone());
+    bench_throughput("dot 384-d", 1000, 2_000_000, || {
+        std::hint::black_box(dot(&a, &b));
+        1
+    });
+
+    // --- index ---
+    let data = random_vecs(10_000, dim, 2);
+    let queries = random_vecs(256, dim, 3);
+
+    let mut hnsw = HnswIndex::new(dim, HnswConfig::default());
+    let t0 = std::time::Instant::now();
+    for (i, v) in data.iter().enumerate() {
+        hnsw.insert(i as u64, v);
+    }
+    println!(
+        "{:<44} {:>10.1} inserts/s  (10k x 384-d build)",
+        "hnsw insert",
+        10_000.0 / t0.elapsed().as_secs_f64()
+    );
+    let mut flat = FlatIndex::new(dim);
+    for (i, v) in data.iter().enumerate() {
+        flat.insert(i as u64, v);
+    }
+    let mut qi = 0;
+    bench("hnsw search k=5 (n=10k)", 100, 2000, || {
+        std::hint::black_box(hnsw.search(&queries[qi % queries.len()], 5));
+        qi += 1;
+    });
+    bench("flat search k=5 (n=10k)", 10, 200, || {
+        std::hint::black_box(flat.search(&queries[qi % queries.len()], 5));
+        qi += 1;
+    });
+
+    // --- store ---
+    let store: KvStore<u64> = KvStore::new(StoreConfig::default());
+    for i in 0..10_000u64 {
+        store.set(&format!("key{i}"), i);
+    }
+    let mut k = 0u64;
+    bench_throughput("kv store get (10k entries)", 1000, 1_000_000, || {
+        std::hint::black_box(store.get(&format!("key{}", k % 10_000)));
+        k += 1;
+        1
+    });
+
+    // --- tokenizer ---
+    let tok = Tokenizer::new(4096, 32);
+    bench_throughput("tokenize (typical query)", 1000, 500_000, || {
+        std::hint::black_box(tok.encode("how do i reset my online banking password today"));
+        1
+    });
+
+    // --- native encoder forward ---
+    let enc = NativeEncoder::new(ModelParams::default());
+    bench("native encoder forward (1 query)", 3, 30, || {
+        std::hint::black_box(enc.encode_text("how do i reset my online banking password"));
+    });
+
+    // --- end-to-end cache lookup (hot path without LLM) ---
+    let cache = SemanticCache::new(CacheConfig::default());
+    for (i, v) in data.iter().take(8_000).enumerate() {
+        cache.insert(&format!("q{i}"), v, "resp");
+    }
+    let mut qi = 0;
+    bench("cache lookup incl. threshold (n=8k)", 100, 2000, || {
+        std::hint::black_box(cache.lookup(&queries[qi % queries.len()]));
+        qi += 1;
+    });
+
+    // --- PJRT encoder (production path) ---
+    if artifacts_available() {
+        let pjrt = PjrtEncoder::from_artifacts_dir(&artifacts_dir()).expect("artifacts");
+        bench("pjrt encoder b=1", 2, 20, || {
+            std::hint::black_box(
+                pjrt.encode_text("how do i reset my online banking password").unwrap(),
+            );
+        });
+        let texts: Vec<&str> = (0..32).map(|_| "how do i reset my password").collect();
+        bench("pjrt encoder b=32 (batch)", 2, 10, || {
+            std::hint::black_box(pjrt.encode_batch(&texts).unwrap());
+        });
+    } else {
+        println!("(artifacts not built; skipping PJRT encoder benches)");
+    }
+}

@@ -1,0 +1,13 @@
+//! Table 1 regeneration: cache hits & positive hits per category.
+//! `cargo bench --bench bench_table1_hits` (SEMCACHE_BENCH_SCALE=paper for 500q/category).
+mod common;
+use semcache::experiments::{render_table1, run_paper_eval, PaperEvalConfig};
+
+fn main() {
+    let ctx = common::eval_context();
+    let t = std::time::Instant::now();
+    let eval = run_paper_eval(&ctx, &PaperEvalConfig::default());
+    println!("\n{}", render_table1(&eval));
+    println!("paper Table 1 (per 500): hits 335/335/344/308, positives 310/326/331/298");
+    println!("(evaluation protocol wall time: {:.2}s)", t.elapsed().as_secs_f64());
+}

@@ -1,0 +1,11 @@
+//! §5.3 regeneration: similarity threshold sweep 0.60..0.90 step 0.05.
+mod common;
+use semcache::experiments::{render_sweep, sweep_grid, threshold_sweep};
+use semcache::llm::JudgeConfig;
+
+fn main() {
+    let ctx = common::eval_context();
+    let rows = threshold_sweep(&ctx, &Default::default(), &JudgeConfig::default(), &sweep_grid());
+    println!("\n{}", render_sweep(&rows));
+    println!("paper §5.3: hits fall / accuracy rises with θ; 0.8 is the knee");
+}

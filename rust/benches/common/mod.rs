@@ -1,0 +1,67 @@
+//! Shared bench harness (criterion is unavailable offline): warmup +
+//! timed iterations with mean/σ/p50 reporting, plus helpers to build the
+//! evaluation fixtures each paper-table bench needs.
+
+use std::time::Instant;
+
+use semcache::util::Summary;
+
+/// Run `f` repeatedly: `warmup` unmeasured runs, then `iters` measured,
+/// printing a criterion-style line. Returns the per-iteration summary (ms).
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    let s = Summary::of(&samples);
+    println!(
+        "{name:<44} {:>10.4} ms/iter  (p50 {:>9.4}, p95 {:>9.4}, n={})",
+        s.mean, s.p50, s.p95, s.n
+    );
+    s
+}
+
+/// Like [`bench`] but the closure reports how many items it processed;
+/// prints throughput.
+pub fn bench_throughput<F: FnMut() -> usize>(name: &str, warmup: usize, iters: usize, mut f: F) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut total_items = 0usize;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        total_items += f();
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "{name:<44} {:>10.0} items/s  ({} items in {:.2}s)",
+        total_items as f64 / secs,
+        total_items,
+        secs
+    );
+}
+
+/// Evaluation fixture shared by the paper-table benches: a small-scale
+/// context (fast) or paper-scale when `SEMCACHE_BENCH_SCALE=paper`.
+pub fn eval_context() -> semcache::experiments::EvalContext {
+    use semcache::embedding::NativeEncoder;
+    use semcache::runtime::ModelParams;
+    use semcache::workload::DatasetConfig;
+    let scale = std::env::var("SEMCACHE_BENCH_SCALE").unwrap_or_else(|_| "small".into());
+    let cfg = match scale.as_str() {
+        "paper" => DatasetConfig::paper(),
+        "tiny" => DatasetConfig::tiny(),
+        _ => DatasetConfig::small(),
+    };
+    let enc = NativeEncoder::new(ModelParams::default());
+    println!(
+        "[bench fixture: {} scale, native encoder; set SEMCACHE_BENCH_SCALE=paper for full]",
+        scale
+    );
+    semcache::experiments::EvalContext::build(&enc, &cfg, 0xBEC)
+}

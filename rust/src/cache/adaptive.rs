@@ -1,0 +1,117 @@
+//! Dynamic threshold adjustment — the paper's §2.10 extension,
+//! implemented as a per-category additive-increase / additive-decrease
+//! controller driven by judge feedback:
+//!
+//! * a **negative** hit (judge says the cached answer was wrong) means
+//!   the gate let a bad match through → raise the threshold;
+//! * a long run of positive hits means the gate may be too strict
+//!   (cache hits being left on the table) → lower it slowly.
+//!
+//! The asymmetric step sizes (fast up, slow down) keep accuracy pinned
+//! near the target while recovering hit rate over time; the threshold is
+//! clamped to a sane band around the paper's 0.8.
+
+/// AIAD threshold controller.
+#[derive(Debug, Clone)]
+pub struct AdaptiveThreshold {
+    value: f32,
+    /// Raise by this much on a negative hit.
+    up_step: f32,
+    /// Lower by this much per `down_every` consecutive positives.
+    down_step: f32,
+    down_every: u32,
+    streak: u32,
+    min: f32,
+    max: f32,
+}
+
+impl AdaptiveThreshold {
+    pub fn new(initial: f32) -> Self {
+        Self {
+            value: initial,
+            up_step: 0.01,
+            down_step: 0.002,
+            down_every: 20,
+            streak: 0,
+            min: 0.70,
+            max: 0.95,
+        }
+    }
+
+    pub fn with_band(initial: f32, min: f32, max: f32) -> Self {
+        let mut a = Self::new(initial);
+        a.min = min;
+        a.max = max;
+        a.value = initial.clamp(min, max);
+        a
+    }
+
+    /// Current threshold.
+    pub fn get(&self) -> f32 {
+        self.value
+    }
+
+    /// Feed one judged hit.
+    pub fn observe(&mut self, positive: bool) {
+        if positive {
+            self.streak += 1;
+            if self.streak >= self.down_every {
+                self.streak = 0;
+                self.value = (self.value - self.down_step).max(self.min);
+            }
+        } else {
+            self.streak = 0;
+            self.value = (self.value + self.up_step).min(self.max);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn negatives_raise_threshold() {
+        let mut a = AdaptiveThreshold::new(0.8);
+        for _ in 0..5 {
+            a.observe(false);
+        }
+        assert!((a.get() - 0.85).abs() < 1e-6);
+    }
+
+    #[test]
+    fn positives_lower_slowly() {
+        let mut a = AdaptiveThreshold::new(0.8);
+        for _ in 0..40 {
+            a.observe(true);
+        }
+        assert!((a.get() - (0.8 - 2.0 * 0.002)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn clamped_to_band() {
+        let mut a = AdaptiveThreshold::with_band(0.8, 0.75, 0.85);
+        for _ in 0..100 {
+            a.observe(false);
+        }
+        assert_eq!(a.get(), 0.85);
+        for _ in 0..100_000 {
+            a.observe(true);
+        }
+        assert_eq!(a.get(), 0.75);
+    }
+
+    #[test]
+    fn negative_resets_streak() {
+        let mut a = AdaptiveThreshold::new(0.8);
+        for _ in 0..19 {
+            a.observe(true);
+        }
+        a.observe(false); // resets streak and bumps up
+        for _ in 0..19 {
+            a.observe(true);
+        }
+        // Never reached 20-streak after the negative: no down-steps.
+        assert!((a.get() - 0.81).abs() < 1e-6);
+    }
+}

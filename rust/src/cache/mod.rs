@@ -1,0 +1,272 @@
+//! The semantic cache — the paper's core contribution (§2).
+//!
+//! Workflow (paper §2.5/§2.8): a query embedding is searched in the ANN
+//! index; if the best live neighbor clears the similarity threshold the
+//! cached response is returned (hit), otherwise the caller fetches a
+//! fresh response from the LLM and inserts it (miss). Entries carry TTL
+//! (§2.7) and live in the Redis-substitute [`KvStore`]; the cache is
+//! partitioned by embedding dimensionality (§2.3) so multiple embedding
+//! models can coexist; tombstoned/expired index entries are reclaimed by
+//! the periodic rebuild ("rebalancing", §2.4).
+
+mod adaptive;
+mod partition;
+
+pub use adaptive::AdaptiveThreshold;
+pub use partition::Partition;
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::index::HnswConfig;
+use crate::store::Clock;
+
+/// Which ANN index backs each partition.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum IndexKind {
+    /// HNSW (paper's production choice).
+    Hnsw,
+    /// Exhaustive scan (paper's O(n) baseline).
+    Flat,
+}
+
+/// Cache configuration (paper defaults).
+#[derive(Debug, Clone)]
+pub struct CacheConfig {
+    /// Cosine similarity gate (paper §2.6: 0.8).
+    pub threshold: f32,
+    /// Entry TTL in ms (0 = immortal; paper §2.7).
+    pub ttl_ms: u64,
+    /// Max entries per partition (0 = unbounded, LRU beyond).
+    pub capacity: usize,
+    /// Neighbors fetched per lookup before thresholding.
+    pub top_k: usize,
+    pub index: IndexKind,
+    pub hnsw: HnswConfig,
+    /// Rebuild a partition's index when its tombstone ratio exceeds this.
+    pub rebuild_garbage_ratio: f64,
+    /// KV-store shards per partition.
+    pub store_shards: usize,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        Self {
+            threshold: 0.8,
+            ttl_ms: 0,
+            capacity: 0,
+            top_k: 5,
+            index: IndexKind::Hnsw,
+            hnsw: HnswConfig::default(),
+            rebuild_garbage_ratio: 0.3,
+            store_shards: 16,
+        }
+    }
+}
+
+/// A cached entry (what Redis holds in the paper).
+#[derive(Debug, Clone)]
+pub struct CachedEntry {
+    pub question: String,
+    pub response: String,
+    /// Ground-truth answer-group id (carried for judge evaluation; a
+    /// production deployment would not have this field).
+    pub cluster: u64,
+}
+
+/// A successful lookup.
+#[derive(Debug, Clone)]
+pub struct CacheHit {
+    pub entry: CachedEntry,
+    /// Cosine similarity of the matched embedding.
+    pub score: f32,
+    /// Internal id of the matched entry.
+    pub id: u64,
+}
+
+/// Dimension-partitioned semantic cache. All methods take `&self`; each
+/// partition is internally locked, and lookups only hold the lock for the
+/// ANN search (sub-millisecond).
+pub struct SemanticCache {
+    cfg: CacheConfig,
+    partitions: std::sync::Mutex<HashMap<usize, Arc<Partition>>>,
+    clock: Arc<dyn Clock>,
+}
+
+impl SemanticCache {
+    pub fn new(cfg: CacheConfig) -> Self {
+        Self::with_clock(cfg, Arc::new(crate::store::SystemClock))
+    }
+
+    pub fn with_clock(cfg: CacheConfig, clock: Arc<dyn Clock>) -> Self {
+        Self { cfg, partitions: std::sync::Mutex::new(HashMap::new()), clock }
+    }
+
+    pub fn config(&self) -> &CacheConfig {
+        &self.cfg
+    }
+
+    /// The partition for a given embedding size, created on first use
+    /// (paper §2.3: "the cache is partitioned based on the embedding size").
+    pub fn partition(&self, dim: usize) -> Arc<Partition> {
+        let mut parts = self.partitions.lock().unwrap();
+        parts
+            .entry(dim)
+            .or_insert_with(|| Arc::new(Partition::new(dim, &self.cfg, self.clock.clone())))
+            .clone()
+    }
+
+    /// Lookup with the configured threshold.
+    pub fn lookup(&self, embedding: &[f32]) -> Option<CacheHit> {
+        self.lookup_with_threshold(embedding, self.cfg.threshold)
+    }
+
+    /// Lookup with an explicit threshold (threshold-sweep experiments).
+    pub fn lookup_with_threshold(&self, embedding: &[f32], threshold: f32) -> Option<CacheHit> {
+        self.partition(embedding.len()).lookup(embedding, threshold)
+    }
+
+    /// Insert a question/response pair under its embedding.
+    pub fn insert(&self, question: &str, embedding: &[f32], response: &str) -> u64 {
+        self.insert_entry(
+            embedding,
+            CachedEntry {
+                question: question.to_string(),
+                response: response.to_string(),
+                cluster: 0,
+            },
+        )
+    }
+
+    pub fn insert_entry(&self, embedding: &[f32], entry: CachedEntry) -> u64 {
+        self.partition(embedding.len()).insert(embedding, entry)
+    }
+
+    /// Total live entries across partitions.
+    pub fn len(&self) -> usize {
+        let parts = self.partitions.lock().unwrap();
+        parts.values().map(|p| p.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Housekeeping pass: sweep expired entries and rebuild indexes whose
+    /// garbage ratio exceeds the configured bound. Returns (expired,
+    /// rebuilt-partition count). Driven by the coordinator's timer.
+    pub fn housekeep(&self) -> (usize, usize) {
+        let parts: Vec<Arc<Partition>> =
+            self.partitions.lock().unwrap().values().cloned().collect();
+        let mut expired = 0;
+        let mut rebuilt = 0;
+        for p in parts {
+            expired += p.sweep_expired();
+            if p.garbage_ratio() > self.cfg.rebuild_garbage_ratio && p.rebuild() {
+                rebuilt += 1;
+            }
+        }
+        (expired, rebuilt)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::ManualClock;
+
+    fn unit(dim: usize, hot: usize) -> Vec<f32> {
+        let mut v = vec![0.0; dim];
+        v[hot] = 1.0;
+        v
+    }
+
+    /// A vector leaning toward axis `hot` with a controlled cosine.
+    fn near(dim: usize, hot: usize, cos: f32) -> Vec<f32> {
+        let mut v = vec![0.0; dim];
+        v[hot] = cos;
+        v[(hot + 1) % dim] = (1.0 - cos * cos).sqrt();
+        v
+    }
+
+    #[test]
+    fn miss_insert_hit_workflow() {
+        let cache = SemanticCache::new(CacheConfig::default());
+        let e = unit(16, 3);
+        assert!(cache.lookup(&e).is_none());
+        cache.insert("q", &e, "r");
+        let hit = cache.lookup(&e).expect("exact match hits");
+        assert_eq!(hit.entry.response, "r");
+        assert!(hit.score > 0.999);
+    }
+
+    #[test]
+    fn threshold_gates_hits() {
+        let cache = SemanticCache::new(CacheConfig::default());
+        cache.insert("q", &unit(16, 0), "r");
+        // cos 0.9 passes the 0.8 gate; cos 0.7 does not.
+        assert!(cache.lookup(&near(16, 0, 0.9)).is_some());
+        assert!(cache.lookup(&near(16, 0, 0.7)).is_none());
+        // but a lenient explicit threshold accepts it.
+        assert!(cache.lookup_with_threshold(&near(16, 0, 0.7), 0.6).is_some());
+    }
+
+    #[test]
+    fn partitions_by_dim_are_independent() {
+        let cache = SemanticCache::new(CacheConfig::default());
+        cache.insert("a", &unit(16, 0), "r16");
+        cache.insert("b", &unit(32, 0), "r32");
+        assert_eq!(cache.len(), 2);
+        let hit = cache.lookup(&unit(32, 0)).unwrap();
+        assert_eq!(hit.entry.response, "r32");
+        let hit = cache.lookup(&unit(16, 0)).unwrap();
+        assert_eq!(hit.entry.response, "r16");
+    }
+
+    #[test]
+    fn ttl_expires_entries() {
+        let clock = Arc::new(ManualClock::new(0));
+        let cfg = CacheConfig { ttl_ms: 1_000, ..Default::default() };
+        let cache = SemanticCache::with_clock(cfg, clock.clone());
+        let e = unit(8, 2);
+        cache.insert("q", &e, "r");
+        assert!(cache.lookup(&e).is_some());
+        clock.advance(1_500);
+        assert!(cache.lookup(&e).is_none(), "expired entry must not hit");
+        // Sweep reclaims both store and (after rebuild check) index slots.
+        let (expired, _) = cache.housekeep();
+        // The lazy lookup above already dropped it from the store; sweep
+        // finds zero or counts it once depending on timing — both fine,
+        // but len() must be 0 either way.
+        let _ = expired;
+        assert_eq!(cache.len(), 0);
+    }
+
+    #[test]
+    fn best_of_multiple_candidates_wins() {
+        let cache = SemanticCache::new(CacheConfig::default());
+        cache.insert("far", &near(16, 0, 0.85), "far-r");
+        cache.insert("near", &unit(16, 0), "near-r");
+        let hit = cache.lookup(&unit(16, 0)).unwrap();
+        assert_eq!(hit.entry.response, "near-r");
+    }
+
+    #[test]
+    fn housekeep_rebuilds_garbage_heavy_partition() {
+        let clock = Arc::new(ManualClock::new(0));
+        let cfg = CacheConfig { ttl_ms: 100, rebuild_garbage_ratio: 0.2, ..Default::default() };
+        let cache = SemanticCache::with_clock(cfg, clock.clone());
+        for i in 0..50 {
+            cache.insert(&format!("q{i}"), &near(16, i % 16, 0.99), "r");
+        }
+        clock.advance(200);
+        let (expired, rebuilt) = cache.housekeep();
+        assert_eq!(expired, 50);
+        assert_eq!(rebuilt, 1, "all entries dead -> garbage ratio 1.0 -> rebuild");
+        assert_eq!(cache.len(), 0);
+        // Cache still works after rebuild.
+        cache.insert("fresh", &unit(16, 5), "fr");
+        clock.advance(50);
+        assert!(cache.lookup(&unit(16, 5)).is_some());
+    }
+}

@@ -1,0 +1,213 @@
+//! One embedding-size partition: ANN index + TTL'd entry store.
+//!
+//! The index and the store can disagree transiently: the index may hold
+//! ids whose store entry has expired (TTL) or been LRU-evicted. Lookups
+//! treat such ids as dead — they are skipped (and the index tombstoned)
+//! — and the housekeeping rebuild reclaims the slots. This mirrors the
+//! paper's Redis-TTL + ANN-index split, where Redis expiry is the source
+//! of truth (§2.7).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::index::{FlatIndex, HnswIndex, VectorIndex};
+use crate::store::{Clock, KvStore, StoreConfig};
+
+use super::{CacheConfig, CacheHit, CachedEntry, IndexKind};
+
+pub struct Partition {
+    dim: usize,
+    index: Mutex<Box<dyn VectorIndex>>,
+    store: KvStore<CachedEntry>,
+    next_id: AtomicU64,
+    /// Embeddings of live entries, kept for rebuilds (id -> embedding).
+    embeddings: Mutex<std::collections::HashMap<u64, Vec<f32>>>,
+    top_k: usize,
+}
+
+fn key(id: u64) -> String {
+    format!("e{id:016x}")
+}
+
+impl Partition {
+    pub fn new(dim: usize, cfg: &CacheConfig, clock: Arc<dyn Clock>) -> Self {
+        let index: Box<dyn VectorIndex> = match cfg.index {
+            IndexKind::Hnsw => Box::new(HnswIndex::new(dim, cfg.hnsw.clone())),
+            IndexKind::Flat => Box::new(FlatIndex::new(dim)),
+        };
+        let store = KvStore::with_clock(
+            StoreConfig {
+                shards: cfg.store_shards,
+                capacity: cfg.capacity,
+                default_ttl_ms: cfg.ttl_ms,
+            },
+            clock,
+        );
+        Self {
+            dim,
+            index: Mutex::new(index),
+            store,
+            next_id: AtomicU64::new(1),
+            embeddings: Mutex::new(std::collections::HashMap::new()),
+            top_k: cfg.top_k.max(1),
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn lookup(&self, embedding: &[f32], threshold: f32) -> Option<CacheHit> {
+        assert_eq!(embedding.len(), self.dim, "embedding dim mismatch");
+        let neighbors = {
+            let index = self.index.lock().unwrap();
+            index.search(embedding, self.top_k)
+        };
+        for n in neighbors {
+            if n.score < threshold {
+                break; // results are sorted; nothing below can pass
+            }
+            match self.store.get(&key(n.id)) {
+                Some(entry) => {
+                    return Some(CacheHit { entry, score: n.score, id: n.id });
+                }
+                None => {
+                    // Expired/evicted in the store: tombstone the index id
+                    // so future searches skip it; rebuild reclaims later.
+                    self.index.lock().unwrap().remove(n.id);
+                    self.embeddings.lock().unwrap().remove(&n.id);
+                }
+            }
+        }
+        None
+    }
+
+    pub fn insert(&self, embedding: &[f32], entry: CachedEntry) -> u64 {
+        assert_eq!(embedding.len(), self.dim, "embedding dim mismatch");
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.store.set(&key(id), entry);
+        self.embeddings.lock().unwrap().insert(id, embedding.to_vec());
+        self.index.lock().unwrap().insert(id, embedding);
+        id
+    }
+
+    /// Live entry count (store is the source of truth).
+    pub fn len(&self) -> usize {
+        self.store.len()
+    }
+
+    /// Drop expired store entries; returns the count.
+    pub fn sweep_expired(&self) -> usize {
+        self.store.sweep_expired()
+    }
+
+    /// Tombstone fraction of the index (0 when empty).
+    pub fn garbage_ratio(&self) -> f64 {
+        let index = self.index.lock().unwrap();
+        let live = self.store.len();
+        let slots = index.len().max(live);
+        // Index len() counts non-tombstoned nodes; entries expired in the
+        // store but still live in the index also count as garbage.
+        if slots == 0 {
+            return 0.0;
+        }
+        1.0 - live as f64 / slots as f64
+    }
+
+    /// Rebuild the index from live store entries; true if rebuilt.
+    pub fn rebuild(&self) -> bool {
+        // Collect live ids from the store.
+        let mut live: Vec<(u64, Vec<f32>)> = Vec::new();
+        {
+            let embeddings = self.embeddings.lock().unwrap();
+            self.store.for_each(|k, _| {
+                if let Ok(id) = u64::from_str_radix(&k[1..], 16) {
+                    if let Some(e) = embeddings.get(&id) {
+                        live.push((id, e.clone()));
+                    }
+                }
+            });
+        }
+        let mut index = self.index.lock().unwrap();
+        if index.len() == 0 && live.is_empty() {
+            return false;
+        }
+        // Recreate the same concrete index kind, populated with live rows.
+        let mut fresh: Box<dyn VectorIndex> = if index.is_hnsw() {
+            Box::new(HnswIndex::new(self.dim, index.hnsw_config().expect("hnsw").clone()))
+        } else {
+            Box::new(FlatIndex::new(self.dim))
+        };
+        for (id, e) in &live {
+            fresh.insert(*id, e);
+        }
+        *index = fresh;
+        // Drop embeddings of dead ids.
+        let live_ids: std::collections::HashSet<u64> = live.iter().map(|(id, _)| *id).collect();
+        self.embeddings.lock().unwrap().retain(|id, _| live_ids.contains(id));
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::ManualClock;
+
+    fn part(ttl: u64, capacity: usize) -> (Partition, Arc<ManualClock>) {
+        let clock = Arc::new(ManualClock::new(0));
+        let cfg = CacheConfig { ttl_ms: ttl, capacity, ..Default::default() };
+        (Partition::new(8, &cfg, clock.clone()), clock)
+    }
+
+    fn axis(i: usize) -> Vec<f32> {
+        let mut v = vec![0.0; 8];
+        v[i] = 1.0;
+        v
+    }
+
+    fn entry(s: &str) -> CachedEntry {
+        CachedEntry { question: s.into(), response: s.into(), cluster: 0 }
+    }
+
+    #[test]
+    fn expired_index_ids_are_skipped_and_tombstoned() {
+        let (p, clock) = part(100, 0);
+        p.insert(&axis(0), entry("old"));
+        clock.advance(200);
+        // Entry dead in store but still in index: lookup must miss.
+        assert!(p.lookup(&axis(0), 0.8).is_none());
+        // And a fresh same-direction insert must hit (index not poisoned).
+        p.insert(&axis(0), entry("new"));
+        let hit = p.lookup(&axis(0), 0.8).unwrap();
+        assert_eq!(hit.entry.response, "new");
+    }
+
+    #[test]
+    fn lru_eviction_consistency() {
+        // Capacity 2 in a 1-shard-ish store: inserting 3 evicts one; the
+        // evicted id must not be returned by lookups.
+        let clock = Arc::new(ManualClock::new(0));
+        let cfg = CacheConfig { capacity: 2, store_shards: 1, ..Default::default() };
+        let p = Partition::new(8, &cfg, clock);
+        p.insert(&axis(0), entry("a"));
+        p.insert(&axis(1), entry("b"));
+        p.insert(&axis(2), entry("c")); // evicts "a" (coldest)
+        assert!(p.lookup(&axis(0), 0.8).is_none(), "evicted entry returned");
+        assert!(p.lookup(&axis(1), 0.8).is_some());
+        assert!(p.lookup(&axis(2), 0.8).is_some());
+    }
+
+    #[test]
+    fn rebuild_preserves_live_entries() {
+        let (p, clock) = part(1_000, 0);
+        for i in 0..8 {
+            p.insert(&axis(i), entry(&format!("e{i}")));
+        }
+        clock.advance(500);
+        assert!(p.rebuild());
+        for i in 0..8 {
+            assert!(p.lookup(&axis(i), 0.9).is_some(), "entry {i} lost by rebuild");
+        }
+    }
+}

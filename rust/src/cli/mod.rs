@@ -1,0 +1,141 @@
+//! Hand-rolled CLI argument parser (no `clap` in the offline build).
+//!
+//! Grammar: `semcache <subcommand> [--key value]... [--flag]...`
+//! Unknown keys are an error; `--help` short-circuits.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: String,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from raw argv (excluding argv[0]).
+    pub fn parse(argv: &[String]) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = it.next().unwrap().clone();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if key.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                // --key=value or --key value or boolean flag.
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.options.insert(key.to_string(), it.next().unwrap().clone());
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(raw) => raw
+                .parse()
+                .map_err(|_| anyhow::anyhow!("invalid value for --{key}: '{raw}'")),
+        }
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// All `--key value` options (for config overrides).
+    pub fn options(&self) -> &BTreeMap<String, String> {
+        &self.options
+    }
+}
+
+pub const USAGE: &str = "\
+GPT Semantic Cache — reproduction of Regmi & Pun (2024)
+
+USAGE:
+    semcache <SUBCOMMAND> [OPTIONS]
+
+SUBCOMMANDS:
+    info         Show build/artifact/runtime information
+    dataset      Generate the evaluation dataset (writes JSON)
+    experiment   Run the paper evaluation (table1 | fig2 | fig3 | fig4 | all)
+    sweep        §5.3 similarity-threshold sweep (0.60..0.90)
+    scaling      §2.4 HNSW vs exhaustive-search scaling study
+    serve        Run the live serving demo over a generated trace
+    help         Show this message
+
+COMMON OPTIONS:
+    --config <path>          TOML config file (configs/*.toml)
+    --encoder <pjrt|native>  Embedding backend (default: pjrt if artifacts exist)
+    --scale <paper|small|tiny>  Dataset scale (default: paper)
+    --seed <u64>             Workload seed
+    --out <dir>              Output directory for reports (default: results)
+    --<config-key> <value>   Any config key (e.g. --similarity_threshold 0.75)
+
+EXAMPLES:
+    semcache experiment all --scale small --encoder native
+    semcache sweep --out results
+    semcache serve --qps 200 --workers 8
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(&s.iter().map(|x| x.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn subcommand_options_flags() {
+        let a = parse(&["experiment", "table1", "--seed", "42", "--fast", "--out=res"]);
+        assert_eq!(a.subcommand, "experiment");
+        assert_eq!(a.positional(), &["table1".to_string()]);
+        assert_eq!(a.opt("seed"), Some("42"));
+        assert_eq!(a.opt("out"), Some("res"));
+        assert!(a.flag("fast"));
+        assert!(!a.flag("slow"));
+        assert_eq!(a.opt_parse::<u64>("seed", 0).unwrap(), 42);
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse(&[]);
+        assert_eq!(a.subcommand, "");
+        assert_eq!(a.opt_parse::<usize>("missing", 7).unwrap(), 7);
+        let a = parse(&["x", "--n", "abc"]);
+        assert!(a.opt_parse::<usize>("n", 0).is_err());
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["serve", "--real-sleep", "--verbose"]);
+        assert!(a.flag("real-sleep"));
+        assert!(a.flag("verbose"));
+        assert!(a.opt("real-sleep").is_none());
+    }
+}

@@ -1,0 +1,232 @@
+//! Typed configuration for the whole system.
+//!
+//! Sources, in increasing precedence: built-in defaults → a TOML-subset
+//! config file (`--config path`) → `key=value` CLI overrides. The TOML
+//! subset supports `[section]` headers, `key = value` with strings,
+//! numbers, booleans — everything the shipped configs use (see
+//! `configs/*.toml`).
+
+mod toml;
+
+pub use toml::{parse_toml, TomlError};
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Full system configuration. Field groups mirror DESIGN.md §4 modules.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Config {
+    // Cache (paper §2.5, §2.6, §2.7)
+    /// Cosine similarity threshold gating cache hits (paper: 0.8).
+    pub similarity_threshold: f32,
+    /// TTL for cached entries, seconds (0 = immortal).
+    pub ttl_secs: u64,
+    /// Max cached entries (0 = unbounded); LRU beyond that.
+    pub cache_capacity: usize,
+    /// Top-k neighbors fetched per lookup.
+    pub top_k: usize,
+
+    // Index (paper §2.4)
+    /// "hnsw" or "flat".
+    pub index_kind: String,
+    pub hnsw_m: usize,
+    pub hnsw_ef_construction: usize,
+    pub hnsw_ef_search: usize,
+    /// Rebuild when tombstone ratio exceeds this (paper's rebalancing).
+    pub rebuild_garbage_ratio: f64,
+
+    // Embedding (paper §2.2)
+    /// "pjrt" (AOT artifacts) or "native" (pure-Rust twin).
+    pub encoder_kind: String,
+    /// Micro-batching window for the embedding batcher, microseconds.
+    pub batch_window_us: u64,
+    /// Max batch size (must be one of the AOT-compiled sizes for pjrt).
+    pub max_batch: usize,
+
+    // Store
+    pub store_shards: usize,
+
+    // Simulated upstream (DESIGN.md §3 substitution)
+    /// Mean network round-trip to the simulated LLM API, ms.
+    pub llm_rtt_ms: f64,
+    /// Per-output-token decode time of the simulated LLM, ms.
+    pub llm_ms_per_token: f64,
+    /// Mean response length in tokens.
+    pub llm_mean_output_tokens: f64,
+    /// Wall-clock pacing: if false the latency model is virtual-time only
+    /// (experiments run fast); if true the server actually sleeps.
+    pub llm_real_sleep: bool,
+
+    // Workload
+    pub workload_seed: u64,
+    /// Queries per second for the trace generator (Poisson).
+    pub trace_qps: f64,
+
+    // Coordinator
+    pub workers: usize,
+    /// Housekeeping cadence (TTL sweep + rebuild check), ms.
+    pub housekeeping_ms: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            similarity_threshold: 0.8,
+            ttl_secs: 0,
+            cache_capacity: 0,
+            top_k: 5,
+            index_kind: "hnsw".into(),
+            hnsw_m: 16,
+            hnsw_ef_construction: 200,
+            hnsw_ef_search: 64,
+            rebuild_garbage_ratio: 0.3,
+            encoder_kind: "native".into(),
+            batch_window_us: 200,
+            max_batch: 8,
+            store_shards: 16,
+            llm_rtt_ms: 150.0,
+            llm_ms_per_token: 12.0,
+            llm_mean_output_tokens: 120.0,
+            llm_real_sleep: false,
+            workload_seed: 0xC0FFEE,
+            trace_qps: 200.0,
+            workers: 4,
+            housekeeping_ms: 1000,
+        }
+    }
+}
+
+impl Config {
+    /// Load from a TOML-subset file, applying it over defaults.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        let mut cfg = Self::default();
+        cfg.apply_table(&parse_toml(&text)?)?;
+        Ok(cfg)
+    }
+
+    /// Apply flat `section.key -> raw string` pairs.
+    pub fn apply_table(&mut self, table: &BTreeMap<String, String>) -> Result<()> {
+        for (k, v) in table {
+            self.set(k, v)?;
+        }
+        Ok(())
+    }
+
+    /// Set one key (section-qualified or bare) from its string form.
+    pub fn set(&mut self, key: &str, raw: &str) -> Result<()> {
+        // Accept both "cache.similarity_threshold" and "similarity_threshold".
+        let bare = key.rsplit('.').next().unwrap_or(key);
+        macro_rules! num {
+            () => {
+                raw.parse().with_context(|| format!("config {key}={raw}"))?
+            };
+        }
+        match bare {
+            "similarity_threshold" => self.similarity_threshold = num!(),
+            "ttl_secs" => self.ttl_secs = num!(),
+            "cache_capacity" => self.cache_capacity = num!(),
+            "top_k" => self.top_k = num!(),
+            "index_kind" => self.index_kind = raw.to_string(),
+            "hnsw_m" => self.hnsw_m = num!(),
+            "hnsw_ef_construction" => self.hnsw_ef_construction = num!(),
+            "hnsw_ef_search" => self.hnsw_ef_search = num!(),
+            "rebuild_garbage_ratio" => self.rebuild_garbage_ratio = num!(),
+            "encoder_kind" => self.encoder_kind = raw.to_string(),
+            "batch_window_us" => self.batch_window_us = num!(),
+            "max_batch" => self.max_batch = num!(),
+            "store_shards" => self.store_shards = num!(),
+            "llm_rtt_ms" => self.llm_rtt_ms = num!(),
+            "llm_ms_per_token" => self.llm_ms_per_token = num!(),
+            "llm_mean_output_tokens" => self.llm_mean_output_tokens = num!(),
+            "llm_real_sleep" => self.llm_real_sleep = num!(),
+            "workload_seed" => self.workload_seed = num!(),
+            "trace_qps" => self.trace_qps = num!(),
+            "workers" => self.workers = num!(),
+            "housekeeping_ms" => self.housekeeping_ms = num!(),
+            other => bail!("unknown config key '{other}'"),
+        }
+        Ok(())
+    }
+
+    /// Validate cross-field invariants.
+    pub fn validate(&self) -> Result<()> {
+        if !(0.0..=1.0).contains(&self.similarity_threshold) {
+            bail!("similarity_threshold must be in [0,1]");
+        }
+        if self.top_k == 0 {
+            bail!("top_k must be >= 1");
+        }
+        match self.index_kind.as_str() {
+            "hnsw" | "flat" => {}
+            other => bail!("index_kind must be hnsw|flat, got '{other}'"),
+        }
+        match self.encoder_kind.as_str() {
+            "pjrt" | "native" => {}
+            other => bail!("encoder_kind must be pjrt|native, got '{other}'"),
+        }
+        if self.workers == 0 {
+            bail!("workers must be >= 1");
+        }
+        if self.max_batch == 0 {
+            bail!("max_batch must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = Config::default();
+        assert_eq!(c.similarity_threshold, 0.8);
+        assert_eq!(c.index_kind, "hnsw");
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn set_and_validate() {
+        let mut c = Config::default();
+        c.set("cache.similarity_threshold", "0.75").unwrap();
+        c.set("hnsw_m", "8").unwrap();
+        c.set("index.index_kind", "flat").unwrap();
+        assert_eq!(c.similarity_threshold, 0.75);
+        assert_eq!(c.hnsw_m, 8);
+        assert_eq!(c.index_kind, "flat");
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn bad_values_rejected() {
+        let mut c = Config::default();
+        assert!(c.set("similarity_threshold", "abc").is_err());
+        assert!(c.set("nonexistent_key", "1").is_err());
+        c.similarity_threshold = 1.5;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.index_kind = "annoy".into();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("semcache_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.toml");
+        std::fs::write(
+            &p,
+            "# comment\n[cache]\nsimilarity_threshold = 0.7\nttl_secs = 60\n\n[llm]\nllm_real_sleep = true\n",
+        )
+        .unwrap();
+        let c = Config::from_file(&p).unwrap();
+        assert_eq!(c.similarity_threshold, 0.7);
+        assert_eq!(c.ttl_secs, 60);
+        assert!(c.llm_real_sleep);
+    }
+}

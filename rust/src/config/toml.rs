@@ -1,0 +1,104 @@
+//! TOML-subset parser: `[section]` headers, `key = value` lines, `#`
+//! comments. Values keep their raw string form (quotes stripped); typed
+//! parsing happens in [`super::Config::set`]. Flattens to
+//! `section.key -> value`.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config parse error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+/// Parse the subset; returns flattened `section.key -> raw value`.
+pub fn parse_toml(text: &str) -> Result<BTreeMap<String, String>, TomlError> {
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+    for (i, raw_line) in text.lines().enumerate() {
+        let line_no = i + 1;
+        let line = strip_comment(raw_line).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| TomlError { line: line_no, msg: "unterminated section".into() })?
+                .trim();
+            if name.is_empty() {
+                return Err(TomlError { line: line_no, msg: "empty section name".into() });
+            }
+            section = name.to_string();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| TomlError { line: line_no, msg: "expected key = value".into() })?;
+        let key = line[..eq].trim();
+        let mut value = line[eq + 1..].trim().to_string();
+        if key.is_empty() {
+            return Err(TomlError { line: line_no, msg: "empty key".into() });
+        }
+        // Strip matching quotes.
+        if (value.starts_with('"') && value.ends_with('"') && value.len() >= 2)
+            || (value.starts_with('\'') && value.ends_with('\'') && value.len() >= 2)
+        {
+            value = value[1..value.len() - 1].to_string();
+        }
+        let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+        out.insert(full, value);
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside quotes.
+    let mut in_str: Option<char> = None;
+    for (i, c) in line.char_indices() {
+        match (c, in_str) {
+            ('"' | '\'', None) => in_str = Some(c),
+            (c, Some(q)) if c == q => in_str = None,
+            ('#', None) => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sections_flatten() {
+        let t = parse_toml("a = 1\n[s]\nb = 2\n[t]\nc = \"x y\"\n").unwrap();
+        assert_eq!(t["a"], "1");
+        assert_eq!(t["s.b"], "2");
+        assert_eq!(t["t.c"], "x y");
+    }
+
+    #[test]
+    fn comments_and_blank_lines() {
+        let t = parse_toml("# full comment\n\nk = 5 # trailing\nq = \"has # inside\"\n").unwrap();
+        assert_eq!(t["k"], "5");
+        assert_eq!(t["q"], "has # inside");
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse_toml("good = 1\nbad line\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = parse_toml("[unclosed\n").unwrap_err();
+        assert_eq!(e.line, 1);
+    }
+}

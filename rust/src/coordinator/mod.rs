@@ -1,0 +1,23 @@
+//! The serving coordinator (L3): request routing over cache + LLM.
+//!
+//! Owns the full paper workflow (§2.8) behind a thread-safe [`Server`]:
+//!
+//! ```text
+//!   query ──► embedding batcher ──► ANN lookup ──► hit? ──► cached reply
+//!                                         │
+//!                                        miss ──► SimLlm ──► insert ──► reply
+//! ```
+//!
+//! Latency accounting mixes *measured* wall-clock for everything the
+//! Rust process does (tokenize, encode, search, insert) with the
+//! *simulated* upstream latency for LLM calls, so Figure 3's
+//! with/without-cache comparison is apples-to-apples (DESIGN.md §3).
+//!
+//! A housekeeping thread periodically sweeps TTLs and rebuilds
+//! garbage-heavy index partitions (§2.4 "rebalancing", §2.7 TTL).
+
+mod server;
+mod trace;
+
+pub use server::{Reply, ReplySource, Server, ServerConfig};
+pub use trace::{TraceConfig, TraceReport, TraceRunner};

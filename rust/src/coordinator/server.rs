@@ -1,0 +1,388 @@
+//! The `Server`: cache-fronted query handling.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+use crate::cache::{CacheConfig, CachedEntry, SemanticCache};
+use crate::embedding::Encoder;
+use crate::llm::{Judge, JudgeConfig, SimLlm, SimLlmConfig};
+use crate::metrics::Metrics;
+use crate::workload::{Dataset, QaPair};
+
+/// Server construction knobs.
+pub struct ServerConfig {
+    pub cache: CacheConfig,
+    pub llm: SimLlmConfig,
+    pub judge: JudgeConfig,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            cache: CacheConfig::default(),
+            llm: SimLlmConfig::default(),
+            judge: JudgeConfig::default(),
+        }
+    }
+}
+
+/// Where a reply came from.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ReplySource {
+    /// Served from the semantic cache (similarity score attached).
+    Cache { score: f32 },
+    /// Fetched from the (simulated) LLM API.
+    Llm,
+}
+
+/// One answered query with its latency breakdown.
+#[derive(Debug, Clone)]
+pub struct Reply {
+    pub response: String,
+    pub source: ReplySource,
+    /// End-to-end latency: measured compute + simulated LLM time, ms.
+    pub total_ms: f64,
+    pub embed_ms: f64,
+    pub index_ms: f64,
+    /// Simulated upstream latency (0 for cache hits).
+    pub llm_ms: f64,
+    /// Judge verdict for cache hits when ground truth was provided.
+    pub judged_positive: Option<bool>,
+    /// Cluster of the cached entry that served a hit.
+    pub matched_cluster: Option<u64>,
+}
+
+/// Thread-safe serving facade. Clone-cheap via `Arc<Server>`.
+pub struct Server {
+    encoder: Arc<dyn Encoder>,
+    cache: SemanticCache,
+    llm: SimLlm,
+    judge: Judge,
+    metrics: Arc<Metrics>,
+    /// Ground-truth answers by cluster (populated from the workload) so
+    /// simulated LLM calls return the *right* answer for their cluster.
+    ground_truth: RwLock<HashMap<u64, String>>,
+    /// Per-request threshold override (adaptive-threshold experiments).
+    threshold_override: Mutex<Option<f32>>,
+    housekeeping_stop: Arc<AtomicBool>,
+}
+
+impl Server {
+    pub fn new(encoder: Arc<dyn Encoder>, cfg: ServerConfig) -> Self {
+        Self {
+            encoder,
+            cache: SemanticCache::new(cfg.cache),
+            llm: SimLlm::new(cfg.llm),
+            judge: Judge::new(cfg.judge),
+            metrics: Arc::new(Metrics::new()),
+            ground_truth: RwLock::new(HashMap::new()),
+            threshold_override: Mutex::new(None),
+            housekeeping_stop: Arc::new(AtomicBool::new(false)),
+        }
+    }
+
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.metrics.clone()
+    }
+
+    pub fn cache(&self) -> &SemanticCache {
+        &self.cache
+    }
+
+    pub fn encoder(&self) -> &dyn Encoder {
+        self.encoder.as_ref()
+    }
+
+    pub fn llm(&self) -> &SimLlm {
+        &self.llm
+    }
+
+    /// Override the similarity threshold for subsequent requests
+    /// (sweep/adaptive experiments); `None` restores the config value.
+    pub fn set_threshold(&self, t: Option<f32>) {
+        *self.threshold_override.lock().unwrap() = t;
+    }
+
+    pub fn effective_threshold(&self) -> f32 {
+        self.threshold_override
+            .lock()
+            .unwrap()
+            .unwrap_or(self.cache.config().threshold)
+    }
+
+    /// Pre-populate the cache from the workload's base QA pairs,
+    /// batch-encoding questions through the embedding backend
+    /// (paper §3.1 "Dataset Preparation and Cache Population").
+    pub fn populate(&self, pairs: &[QaPair]) {
+        {
+            let mut gt = self.ground_truth.write().unwrap();
+            for p in pairs {
+                gt.insert(p.answer_group, p.answer.clone());
+            }
+        }
+        const CHUNK: usize = 64;
+        for chunk in pairs.chunks(CHUNK) {
+            let texts: Vec<&str> = chunk.iter().map(|p| p.question.as_str()).collect();
+            let embeddings = self.encoder.encode_batch(&texts);
+            for (p, e) in chunk.iter().zip(embeddings) {
+                self.cache.insert_entry(
+                    &e,
+                    CachedEntry {
+                        question: p.question.clone(),
+                        response: p.answer.clone(),
+                        cluster: p.answer_group,
+                    },
+                );
+            }
+        }
+    }
+
+    /// Register ground truth for the whole dataset (answers for novel
+    /// test clusters too, so misses insert the right response).
+    pub fn register_ground_truth(&self, ds: &Dataset) {
+        let mut gt = self.ground_truth.write().unwrap();
+        for p in &ds.base {
+            gt.insert(p.answer_group, p.answer.clone());
+        }
+    }
+
+    /// Handle one query through the full workflow. `cluster` is the
+    /// ground-truth identity when known (evaluation traces); production
+    /// callers pass `None`.
+    pub fn handle(&self, text: &str, cluster: Option<u64>) -> Reply {
+        self.metrics.record_request();
+        let threshold = self.effective_threshold();
+
+        // 1. Embed (measured).
+        let t0 = Instant::now();
+        let embedding = self.encoder.encode_text(text);
+        let embed_ms = t0.elapsed().as_secs_f64() * 1e3;
+        self.metrics.record_embedding(crate::llm::approx_tokens(text));
+        self.metrics.observe_embed_ms(embed_ms);
+
+        // 2. ANN lookup (measured).
+        let t1 = Instant::now();
+        let hit = self.cache.lookup_with_threshold(&embedding, threshold);
+        let index_ms = t1.elapsed().as_secs_f64() * 1e3;
+        self.metrics.observe_index_ms(index_ms);
+
+        if let Some(hit) = hit {
+            // 3a. Cache hit: validate when ground truth is available.
+            self.metrics.record_hit();
+            let judged = cluster.map(|c| {
+                let ok = self.judge.validate(c, hit.entry.cluster);
+                self.metrics.record_judgement(ok);
+                ok
+            });
+            let total_ms = embed_ms + index_ms;
+            self.metrics.observe_total_ms(total_ms);
+            return Reply {
+                response: hit.entry.response.clone(),
+                source: ReplySource::Cache { score: hit.score },
+                total_ms,
+                embed_ms,
+                index_ms,
+                llm_ms: 0.0,
+                judged_positive: judged,
+                matched_cluster: Some(hit.entry.cluster),
+            };
+        }
+
+        // 3b. Miss: call the (simulated) LLM, insert, reply.
+        self.metrics.record_miss();
+        let ground_truth = cluster.and_then(|c| {
+            self.ground_truth.read().unwrap().get(&c).cloned()
+        });
+        let resp = self.llm.call(text, ground_truth.as_deref());
+        self.metrics.record_llm_call(resp.input_tokens, resp.output_tokens);
+        self.metrics.observe_llm_ms(resp.latency_ms);
+
+        let t2 = Instant::now();
+        self.cache.insert_entry(
+            &embedding,
+            CachedEntry {
+                question: text.to_string(),
+                response: resp.text.clone(),
+                cluster: cluster.unwrap_or(0),
+            },
+        );
+        let insert_ms = t2.elapsed().as_secs_f64() * 1e3;
+
+        let total_ms = embed_ms + index_ms + resp.latency_ms + insert_ms;
+        self.metrics.observe_total_ms(total_ms);
+        Reply {
+            response: resp.text,
+            source: ReplySource::Llm,
+            total_ms,
+            embed_ms,
+            index_ms,
+            llm_ms: resp.latency_ms,
+            judged_positive: None,
+            matched_cluster: None,
+        }
+    }
+
+    /// The traditional (no-cache) path: always call the LLM. Used for the
+    /// Figure 2/3 baselines.
+    pub fn handle_without_cache(&self, text: &str, cluster: Option<u64>) -> Reply {
+        let ground_truth =
+            cluster.and_then(|c| self.ground_truth.read().unwrap().get(&c).cloned());
+        let resp = self.llm.call(text, ground_truth.as_deref());
+        Reply {
+            response: resp.text,
+            source: ReplySource::Llm,
+            total_ms: resp.latency_ms,
+            embed_ms: 0.0,
+            index_ms: 0.0,
+            llm_ms: resp.latency_ms,
+            judged_positive: None,
+            matched_cluster: None,
+        }
+    }
+
+    /// Spawn the housekeeping thread (TTL sweep + index rebuild check).
+    /// Returns a guard; dropping it stops the thread.
+    pub fn start_housekeeping(self: &Arc<Self>, interval: Duration) -> HousekeepingGuard {
+        let stop = self.housekeeping_stop.clone();
+        stop.store(false, Ordering::SeqCst);
+        let server = self.clone();
+        let handle = std::thread::Builder::new()
+            .name("housekeeping".into())
+            .spawn(move || {
+                while !server.housekeeping_stop.load(Ordering::SeqCst) {
+                    std::thread::sleep(interval);
+                    server.cache.housekeep();
+                }
+            })
+            .expect("spawn housekeeping");
+        HousekeepingGuard { stop: self.housekeeping_stop.clone(), handle: Some(handle) }
+    }
+}
+
+/// Stops the housekeeping thread on drop.
+pub struct HousekeepingGuard {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Drop for HousekeepingGuard {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embedding::NativeEncoder;
+    use crate::runtime::ModelParams;
+    use crate::workload::{DatasetConfig, WorkloadGenerator};
+
+    fn small_encoder() -> Arc<dyn Encoder> {
+        let mut p = ModelParams::default();
+        p.layers = 1;
+        p.vocab_size = 1024;
+        p.dim = 96;
+        p.hidden = 192;
+        p.heads = 4;
+        Arc::new(NativeEncoder::new(p))
+    }
+
+    fn server() -> Arc<Server> {
+        Arc::new(Server::new(small_encoder(), ServerConfig::default()))
+    }
+
+    #[test]
+    fn miss_then_hit_same_query() {
+        let s = server();
+        let r1 = s.handle("how do i reset my password", None);
+        assert_eq!(r1.source, ReplySource::Llm);
+        let r2 = s.handle("how do i reset my password", None);
+        assert!(matches!(r2.source, ReplySource::Cache { .. }));
+        assert_eq!(r2.response, r1.response, "cached response equals original");
+        assert!(r2.total_ms < r1.total_ms, "cache path faster than llm path");
+        let m = s.metrics().snapshot();
+        assert_eq!(m.requests, 2);
+        assert_eq!(m.cache_hits, 1);
+        assert_eq!(m.llm_calls, 1);
+    }
+
+    #[test]
+    fn paraphrase_hits_and_is_judged_positive() {
+        let s = server();
+        let r1 = s.handle("how do i reset my password", Some(42));
+        assert_eq!(r1.source, ReplySource::Llm);
+        let r2 = s.handle("how can i reset my password", Some(42));
+        assert!(matches!(r2.source, ReplySource::Cache { .. }), "paraphrase should hit");
+        assert_eq!(r2.judged_positive, Some(true));
+        assert_eq!(r2.matched_cluster, Some(42));
+    }
+
+    #[test]
+    fn populate_then_serve_ground_truth() {
+        let s = server();
+        let ds = WorkloadGenerator::new(3).generate(&DatasetConfig::tiny());
+        s.populate(&ds.base);
+        assert_eq!(s.cache().len(), ds.base.len());
+        // Exact cached question must hit and return its stored answer.
+        let p = &ds.base[0];
+        let r = s.handle(&p.question, Some(p.answer_group));
+        assert!(matches!(r.source, ReplySource::Cache { .. }));
+        assert_eq!(r.response, p.answer);
+        assert_eq!(r.judged_positive, Some(true));
+    }
+
+    #[test]
+    fn without_cache_baseline_always_calls_llm() {
+        let s = server();
+        for _ in 0..3 {
+            let r = s.handle_without_cache("same question every time", None);
+            assert_eq!(r.source, ReplySource::Llm);
+            assert!(r.llm_ms > 0.0);
+        }
+    }
+
+    #[test]
+    fn threshold_override_changes_gating() {
+        let s = server();
+        s.handle("tell me about the acme laptop", Some(1));
+        // An unrelated query under an absurdly lenient threshold hits.
+        s.set_threshold(Some(-1.0));
+        let r = s.handle("completely different topic entirely", Some(2));
+        assert!(matches!(r.source, ReplySource::Cache { .. }));
+        assert_eq!(r.judged_positive, Some(false), "wrong-cluster hit judged negative");
+        s.set_threshold(None);
+        assert_eq!(s.effective_threshold(), 0.8);
+    }
+
+    #[test]
+    fn housekeeping_thread_runs_and_stops() {
+        let s = server();
+        let guard = s.start_housekeeping(Duration::from_millis(5));
+        std::thread::sleep(Duration::from_millis(30));
+        drop(guard); // must join cleanly
+    }
+
+    #[test]
+    fn concurrent_handles_are_safe() {
+        let s = server();
+        let mut joins = Vec::new();
+        for t in 0..4 {
+            let s = s.clone();
+            joins.push(std::thread::spawn(move || {
+                for i in 0..20 {
+                    s.handle(&format!("thread {t} query {i}"), None);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(s.metrics().snapshot().requests, 80);
+    }
+}

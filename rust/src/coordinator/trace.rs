@@ -1,0 +1,176 @@
+//! Concurrent trace driver: replay a test-query trace against a server
+//! with a worker pool and (optionally) Poisson-paced arrivals. Produces
+//! the throughput/latency report used by Figure 3 and the serving demo.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::util::{Rng, Summary};
+use crate::workload::TestQuery;
+
+use super::server::{Reply, ReplySource, Server};
+
+/// Trace execution knobs.
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    pub workers: usize,
+    /// Poisson arrival rate (queries/sec); 0 = replay as fast as possible.
+    pub qps: f64,
+    /// Route through the cache (true) or the traditional path (false).
+    pub use_cache: bool,
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        Self { workers: 4, qps: 0.0, use_cache: true, seed: 0xACE }
+    }
+}
+
+/// Aggregate results of a trace replay.
+#[derive(Debug, Clone)]
+pub struct TraceReport {
+    pub replies: Vec<(usize, Reply)>,
+    /// Wall-clock of the whole replay, seconds.
+    pub wall_secs: f64,
+    /// Requests per wall-clock second.
+    pub throughput_qps: f64,
+    /// Summary over per-request total latency (virtual+measured), ms.
+    pub latency: Summary,
+    pub hits: usize,
+    pub misses: usize,
+}
+
+/// Runs traces against an `Arc<Server>`.
+pub struct TraceRunner {
+    server: Arc<Server>,
+}
+
+impl TraceRunner {
+    pub fn new(server: Arc<Server>) -> Self {
+        Self { server }
+    }
+
+    pub fn run(&self, queries: &[TestQuery], cfg: &TraceConfig) -> TraceReport {
+        let next = AtomicUsize::new(0);
+        let replies: std::sync::Mutex<Vec<(usize, Reply)>> =
+            std::sync::Mutex::new(Vec::with_capacity(queries.len()));
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            for w in 0..cfg.workers.max(1) {
+                let next = &next;
+                let replies = &replies;
+                let server = self.server.clone();
+                let mut rng = Rng::new(cfg.seed ^ (w as u64));
+                let cfg = cfg.clone();
+                scope.spawn(move || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= queries.len() {
+                        break;
+                    }
+                    if cfg.qps > 0.0 {
+                        // Per-worker thinning of the Poisson process.
+                        let worker_rate = cfg.qps / cfg.workers.max(1) as f64;
+                        let gap = rng.exponential(1000.0 / worker_rate);
+                        std::thread::sleep(std::time::Duration::from_micros(
+                            (gap * 1e3) as u64,
+                        ));
+                    }
+                    let q = &queries[i];
+                    let reply = if cfg.use_cache {
+                        server.handle(&q.text, Some(q.answer_group))
+                    } else {
+                        server.handle_without_cache(&q.text, Some(q.answer_group))
+                    };
+                    replies.lock().unwrap().push((i, reply));
+                });
+            }
+        });
+        let wall_secs = t0.elapsed().as_secs_f64();
+        let mut replies = replies.into_inner().unwrap();
+        replies.sort_by_key(|(i, _)| *i);
+        let lat: Vec<f64> = replies.iter().map(|(_, r)| r.total_ms).collect();
+        let hits = replies
+            .iter()
+            .filter(|(_, r)| matches!(r.source, ReplySource::Cache { .. }))
+            .count();
+        let misses = replies.len() - hits;
+        TraceReport {
+            throughput_qps: replies.len() as f64 / wall_secs.max(1e-9),
+            latency: Summary::of(&lat),
+            wall_secs,
+            hits,
+            misses,
+            replies,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ServerConfig;
+    use crate::embedding::NativeEncoder;
+    use crate::runtime::ModelParams;
+    use crate::workload::{Category, TestQuery};
+
+    fn tiny_server() -> Arc<Server> {
+        let mut p = ModelParams::default();
+        p.layers = 1;
+        p.vocab_size = 512;
+        p.dim = 64;
+        p.hidden = 128;
+        p.heads = 4;
+        Arc::new(Server::new(
+            Arc::new(NativeEncoder::new(p)),
+            ServerConfig::default(),
+        ))
+    }
+
+    fn queries(n: usize) -> Vec<TestQuery> {
+        (0..n)
+            .map(|i| TestQuery {
+                text: format!("synthetic query number {}", i % 10),
+                cluster: (i % 10) as u64,
+                answer_group: (i % 10) as u64,
+                category: Category::PythonBasics,
+                novel: false,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn replay_covers_every_query_once() {
+        let r = TraceRunner::new(tiny_server()).run(&queries(50), &TraceConfig::default());
+        assert_eq!(r.replies.len(), 50);
+        // Indices are exactly 0..50 after sort.
+        for (expect, (i, _)) in r.replies.iter().enumerate() {
+            assert_eq!(*i, expect);
+        }
+        assert_eq!(r.hits + r.misses, 50);
+        // 10 distinct texts, 50 queries: repeats must hit.
+        assert!(r.hits >= 30, "hits {} too low", r.hits);
+        assert!(r.throughput_qps > 0.0);
+    }
+
+    #[test]
+    fn no_cache_mode_never_hits() {
+        let cfg = TraceConfig { use_cache: false, ..Default::default() };
+        let r = TraceRunner::new(tiny_server()).run(&queries(20), &cfg);
+        assert_eq!(r.hits, 0);
+        assert_eq!(r.misses, 20);
+    }
+
+    #[test]
+    fn single_worker_matches_multi_worker_counts() {
+        let one = TraceRunner::new(tiny_server())
+            .run(&queries(30), &TraceConfig { workers: 1, ..Default::default() });
+        let four = TraceRunner::new(tiny_server())
+            .run(&queries(30), &TraceConfig { workers: 4, ..Default::default() });
+        assert_eq!(one.replies.len(), four.replies.len());
+        // Hit counts may differ by interleaving, but only slightly: every
+        // repeated text after its first appearance should hit in both.
+        assert!((one.hits as i64 - four.hits as i64).abs() <= 8);
+    }
+}

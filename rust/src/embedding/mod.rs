@@ -1,0 +1,83 @@
+//! Embedding generation (paper §2.2).
+//!
+//! The paper supports pluggable embedding backends (OpenAI API or local
+//! ONNX models); we mirror that with the [`Encoder`] trait and two
+//! implementations:
+//!
+//! * [`PjrtEncoder`] — the production path: runs the AOT-compiled JAX/
+//!   Pallas encoder through PJRT, weights resident on device, one
+//!   executable per compiled batch size;
+//! * [`NativeEncoder`] — a pure-Rust forward pass of the *same* model
+//!   (same generated weights, same formulas), used when artifacts are not
+//!   built and as the parity oracle in `rust/tests/parity.rs`.
+//!
+//! Both produce L2-normalized `dim`-dimensional vectors and agree to
+//! ~1e-4 max abs difference.
+
+mod native;
+mod pjrt;
+mod service;
+mod weights;
+
+pub use native::NativeEncoder;
+pub use pjrt::PjrtEncoder;
+pub use service::{BatcherConfig, EmbeddingHandle, EmbeddingService, EncoderSpec};
+pub use weights::EncoderWeights;
+
+use crate::runtime::ModelParams;
+
+/// A sentence-embedding backend. Embeddings are unit-norm f32 vectors.
+pub trait Encoder: Send + Sync {
+    /// Embedding dimensionality.
+    fn dim(&self) -> usize;
+    /// Encode a batch of texts (one vector per text, unit norm).
+    fn encode_batch(&self, texts: &[&str]) -> Vec<Vec<f32>>;
+    /// Convenience single-text encode.
+    fn encode_text(&self, text: &str) -> Vec<f32> {
+        self.encode_batch(&[text]).pop().expect("one embedding")
+    }
+    /// Hyperparameters of the underlying model.
+    fn params(&self) -> &ModelParams;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::norm;
+
+    #[test]
+    fn native_encoder_semantics() {
+        let enc = NativeEncoder::minilm_sim();
+        let e = enc.encode_batch(&[
+            "how do i reset my password",
+            "how can i reset my password",
+            "what is the capital of france",
+        ]);
+        assert_eq!(e.len(), 3);
+        for v in &e {
+            assert_eq!(v.len(), enc.dim());
+            assert!((norm(v) - 1.0).abs() < 1e-4, "unit norm");
+        }
+        let near = crate::util::dot(&e[0], &e[1]);
+        let far = crate::util::dot(&e[0], &e[2]);
+        assert!(near > 0.8, "paraphrase sim {near}");
+        assert!(far < 0.5, "unrelated sim {far}");
+        assert!(near > far + 0.2);
+    }
+
+    #[test]
+    fn deterministic() {
+        let enc = NativeEncoder::minilm_sim();
+        let a = enc.encode_text("hello there general kenobi");
+        let b = enc.encode_text("hello there general kenobi");
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn empty_text_is_finite() {
+        let enc = NativeEncoder::minilm_sim();
+        let v = enc.encode_text("");
+        assert!(v.iter().all(|x| x.is_finite()));
+        assert!((norm(&v) - 1.0).abs() < 1e-4); // CLS-only sequence
+    }
+}

@@ -1,0 +1,284 @@
+//! Pure-Rust forward pass of the encoder — the artifact-free twin of the
+//! L2 JAX model. Formula-for-formula identical to `python/compile/model.py`
+//! (parameter-free LayerNorm eps 1e-6, tanh-approximate GELU, masked mean
+//! pool, zero-safe L2 normalize); `rust/tests/parity.rs` asserts the two
+//! agree through PJRT to ~1e-4.
+
+use crate::runtime::ModelParams;
+use crate::tokenizer::{Tokenizer, PAD_ID};
+use crate::util::dot;
+
+use super::weights::EncoderWeights;
+use super::Encoder;
+
+/// CPU-native encoder: tokenizer + generated weights + forward pass.
+pub struct NativeEncoder {
+    weights: EncoderWeights,
+    tokenizer: Tokenizer,
+}
+
+const LN_EPS: f32 = 1e-6;
+
+impl NativeEncoder {
+    pub fn new(params: ModelParams) -> Self {
+        let tokenizer = Tokenizer::new(params.vocab_size, params.seq_len);
+        Self { weights: EncoderWeights::generate(&params), tokenizer }
+    }
+
+    /// The default MiniLM-geometry simulation encoder (DESIGN.md §3).
+    pub fn minilm_sim() -> Self {
+        Self::new(ModelParams::default())
+    }
+
+    pub fn tokenizer(&self) -> &Tokenizer {
+        &self.tokenizer
+    }
+
+    pub fn weights(&self) -> &EncoderWeights {
+        &self.weights
+    }
+
+    /// Encode pre-tokenized ids (one sequence) to a unit vector.
+    pub fn encode_ids(&self, ids: &[i64]) -> Vec<f32> {
+        let p = &self.weights.params;
+        assert_eq!(ids.len(), p.seq_len);
+        let (s, d, h) = (p.seq_len, p.dim, p.hidden);
+        let heads = p.heads;
+        let dh = d / heads;
+
+        // x = embed[tokens] + pos
+        let mut x = vec![0.0f32; s * d];
+        for (i, &t) in ids.iter().enumerate() {
+            let row = self.weights.embed_row(t);
+            let pos = &self.weights.pos[i * d..(i + 1) * d];
+            for j in 0..d {
+                x[i * d + j] = row[j] + pos[j];
+            }
+        }
+        let mask: Vec<f32> =
+            ids.iter().map(|&t| if t == PAD_ID { 0.0 } else { 1.0 }).collect();
+
+        let mut hbuf = vec![0.0f32; s * d];
+        let mut q = vec![0.0f32; s * d];
+        let mut k = vec![0.0f32; s * d];
+        let mut v = vec![0.0f32; s * d];
+        let mut ctx = vec![0.0f32; s * d];
+        let mut ffn_h = vec![0.0f32; s * h];
+
+        for l in 0..p.layers {
+            // --- attention block: x += (attn(LN(x))) @ wo
+            layer_norm_rows(&x, &mut hbuf, s, d);
+            let wq = EncoderWeights::layer(&self.weights.wq, l, d, d);
+            let wk = EncoderWeights::layer(&self.weights.wk, l, d, d);
+            let wv = EncoderWeights::layer(&self.weights.wv, l, d, d);
+            let wo = EncoderWeights::layer(&self.weights.wo, l, d, d);
+            matmul(&hbuf, wq, &mut q, s, d, d);
+            matmul(&hbuf, wk, &mut k, s, d, d);
+            matmul(&hbuf, wv, &mut v, s, d, d);
+            attention(&q, &k, &v, &mask, &mut ctx, s, heads, dh);
+            matmul_add(&ctx, wo, &mut x, s, d, d);
+
+            // --- FFN block: x += gelu(LN(x) @ w1) @ w2
+            layer_norm_rows(&x, &mut hbuf, s, d);
+            let w1 = EncoderWeights::layer(&self.weights.w1, l, d, h);
+            let w2 = EncoderWeights::layer(&self.weights.w2, l, h, d);
+            matmul(&hbuf, w1, &mut ffn_h, s, d, h);
+            for e in ffn_h.iter_mut() {
+                *e = gelu(*e);
+            }
+            matmul_add(&ffn_h, w2, &mut x, s, h, d);
+        }
+
+        layer_norm_rows(&x.clone(), &mut x, s, d);
+
+        // Masked mean pool + L2 normalize (zero-safe).
+        let denom = mask.iter().sum::<f32>().max(1.0);
+        let mut pooled = vec![0.0f32; d];
+        for i in 0..s {
+            if mask[i] > 0.0 {
+                for j in 0..d {
+                    pooled[j] += x[i * d + j];
+                }
+            }
+        }
+        for e in pooled.iter_mut() {
+            *e /= denom;
+        }
+        let n = dot(&pooled, &pooled).sqrt().max(1e-12);
+        for e in pooled.iter_mut() {
+            *e /= n;
+        }
+        pooled
+    }
+}
+
+impl Encoder for NativeEncoder {
+    fn dim(&self) -> usize {
+        self.weights.params.dim
+    }
+
+    fn encode_batch(&self, texts: &[&str]) -> Vec<Vec<f32>> {
+        texts
+            .iter()
+            .map(|t| self.encode_ids(&self.tokenizer.encode(t)))
+            .collect()
+    }
+
+    fn params(&self) -> &ModelParams {
+        &self.weights.params
+    }
+}
+
+/// tanh-approximate GELU (matches `jax` model twin exactly in formula).
+#[inline]
+fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.7978845608028654; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// Row-wise parameter-free LayerNorm: out[i] = (x[i]-mu)/sqrt(var+eps).
+fn layer_norm_rows(x: &[f32], out: &mut [f32], rows: usize, cols: usize) {
+    for r in 0..rows {
+        let row = &x[r * cols..(r + 1) * cols];
+        let mu = row.iter().sum::<f32>() / cols as f32;
+        let var = row.iter().map(|e| (e - mu) * (e - mu)).sum::<f32>() / cols as f32;
+        let inv = 1.0 / (var + LN_EPS).sqrt();
+        for c in 0..cols {
+            out[r * cols + c] = (row[c] - mu) * inv;
+        }
+    }
+}
+
+/// out = a (rows×inner) @ b (inner×cols). b is row-major; we walk it
+/// column-by-row via a transposed scratch — at these sizes (≤768) a
+/// simple k-blocked loop with the vectorized `dot` on transposed tiles
+/// costs more than it saves, so use the classic ikj order which keeps
+/// `b` rows streaming and autovectorizes the inner j loop.
+fn matmul(a: &[f32], b: &[f32], out: &mut [f32], rows: usize, inner: usize, cols: usize) {
+    out.fill(0.0);
+    matmul_acc(a, b, out, rows, inner, cols);
+}
+
+/// out += a @ b (residual add fused into the accumulation).
+fn matmul_add(a: &[f32], b: &[f32], out: &mut [f32], rows: usize, inner: usize, cols: usize) {
+    matmul_acc(a, b, out, rows, inner, cols);
+}
+
+#[inline]
+fn matmul_acc(a: &[f32], b: &[f32], out: &mut [f32], rows: usize, inner: usize, cols: usize) {
+    debug_assert_eq!(a.len(), rows * inner);
+    debug_assert_eq!(b.len(), inner * cols);
+    debug_assert_eq!(out.len(), rows * cols);
+    for i in 0..rows {
+        let a_row = &a[i * inner..(i + 1) * inner];
+        let o_row = &mut out[i * cols..(i + 1) * cols];
+        for (kk, &aik) in a_row.iter().enumerate() {
+            let b_row = &b[kk * cols..(kk + 1) * cols];
+            for j in 0..cols {
+                o_row[j] += aik * b_row[j];
+            }
+        }
+    }
+}
+
+/// Multi-head masked attention over row-major (S, D) q/k/v.
+fn attention(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    mask: &[f32],
+    out: &mut [f32],
+    s: usize,
+    heads: usize,
+    dh: usize,
+) {
+    let d = heads * dh;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut scores = vec![0.0f32; s];
+    for hd in 0..heads {
+        let off = hd * dh;
+        for i in 0..s {
+            let qi = &q[i * d + off..i * d + off + dh];
+            let mut max = f32::MIN;
+            for j in 0..s {
+                let kj = &k[j * d + off..j * d + off + dh];
+                let mut sc = dot(qi, kj) * scale;
+                sc += (1.0 - mask[j]) * -1e9;
+                scores[j] = sc;
+                if sc > max {
+                    max = sc;
+                }
+            }
+            let mut sum = 0.0f32;
+            for sc in scores.iter_mut() {
+                *sc = (*sc - max).exp();
+                sum += *sc;
+            }
+            let inv = 1.0 / sum;
+            let o = &mut out[i * d + off..i * d + off + dh];
+            o.fill(0.0);
+            for j in 0..s {
+                let w = scores[j] * inv;
+                let vj = &v[j * d + off..j * d + off + dh];
+                for c in 0..dh {
+                    o[c] += w * vj[c];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_matches_naive() {
+        let a = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]; // 2x3
+        let b = [7.0f32, 8.0, 9.0, 10.0, 11.0, 12.0]; // 3x2
+        let mut out = [0.0f32; 4];
+        matmul(&a, &b, &mut out, 2, 3, 2);
+        assert_eq!(out, [58.0, 64.0, 139.0, 154.0]);
+        // matmul_add accumulates.
+        matmul_add(&a, &b, &mut out, 2, 3, 2);
+        assert_eq!(out, [116.0, 128.0, 278.0, 308.0]);
+    }
+
+    #[test]
+    fn layernorm_rows_zero_mean_unit_var() {
+        let x = [1.0f32, 2.0, 3.0, 4.0, -1.0, 0.0, 1.0, 2.0];
+        let mut out = [0.0f32; 8];
+        layer_norm_rows(&x, &mut out, 2, 4);
+        for r in 0..2 {
+            let row = &out[r * 4..(r + 1) * 4];
+            let mu: f32 = row.iter().sum::<f32>() / 4.0;
+            let var: f32 = row.iter().map(|e| (e - mu) * (e - mu)).sum::<f32>() / 4.0;
+            assert!(mu.abs() < 1e-5);
+            assert!((var - 1.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn gelu_reference_points() {
+        assert!(gelu(0.0).abs() < 1e-7);
+        assert!((gelu(1.0) - 0.841192).abs() < 1e-4);
+        assert!((gelu(-1.0) + 0.158808).abs() < 1e-4);
+        assert!((gelu(10.0) - 10.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn attention_uniform_when_keys_equal() {
+        // All keys identical -> probs uniform over unmasked -> out = mean(v).
+        let s = 4;
+        let (heads, dh) = (1, 2);
+        let q = vec![1.0f32; s * 2];
+        let k = vec![1.0f32; s * 2];
+        let v: Vec<f32> = (0..s * 2).map(|i| i as f32).collect();
+        let mask = vec![1.0f32, 1.0, 1.0, 0.0]; // last is pad
+        let mut out = vec![0.0f32; s * 2];
+        attention(&q, &k, &v, &mask, &mut out, s, heads, dh);
+        // mean of rows 0..3 of v = [(0+2+4)/3, (1+3+5)/3] = [2, 3]
+        assert!((out[0] - 2.0).abs() < 1e-5);
+        assert!((out[1] - 3.0).abs() < 1e-5);
+    }
+}

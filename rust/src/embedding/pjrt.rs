@@ -1,0 +1,124 @@
+//! PJRT-backed encoder: runs the AOT-compiled JAX/Pallas encoder.
+//!
+//! Weights are generated once (same splitmix64 streams as the compile
+//! path), uploaded to device buffers once, and reused for every call —
+//! per-request host→device traffic is just the (B, S) token tensor.
+//! Batches are padded up to the smallest compiled batch size; the
+//! coordinator's batcher picks sizes to minimize padding waste.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{ModelParams, Runtime};
+use crate::tokenizer::Tokenizer;
+
+use super::weights::EncoderWeights;
+
+/// Encoder over AOT artifacts (`encoder_b{N}` in the manifest).
+pub struct PjrtEncoder {
+    runtime: Arc<Runtime>,
+    params: ModelParams,
+    tokenizer: Tokenizer,
+    /// Ascending compiled batch sizes.
+    batch_sizes: Vec<usize>,
+    /// Weight device buffers, in executable-signature order.
+    weight_buffers: Vec<xla::PjRtBuffer>,
+}
+
+impl PjrtEncoder {
+    /// Build from a loaded runtime; generates + uploads weights.
+    pub fn new(runtime: Arc<Runtime>, params: ModelParams, batch_sizes: Vec<usize>) -> Result<Self> {
+        if batch_sizes.is_empty() {
+            bail!("no encoder_b* artifacts in manifest");
+        }
+        for &b in &batch_sizes {
+            let name = format!("encoder_b{b}");
+            if !runtime.has(&name) {
+                bail!("manifest missing {name}");
+            }
+        }
+        let weights = EncoderWeights::generate(&params);
+        let mut weight_buffers = Vec::new();
+        for (data, shape) in weights.flat_inputs() {
+            weight_buffers.push(
+                runtime
+                    .upload_f32(data, &shape)
+                    .context("uploading encoder weights to device")?,
+            );
+        }
+        let tokenizer = Tokenizer::new(params.vocab_size, params.seq_len);
+        Ok(Self { runtime, params, tokenizer, batch_sizes, weight_buffers })
+    }
+
+    /// Smallest compiled batch size >= n (or the largest available).
+    pub fn pick_batch(&self, n: usize) -> usize {
+        *self
+            .batch_sizes
+            .iter()
+            .find(|&&b| b >= n)
+            .unwrap_or(self.batch_sizes.last().expect("non-empty"))
+    }
+
+    pub fn max_batch(&self) -> usize {
+        *self.batch_sizes.last().expect("non-empty")
+    }
+
+    /// Encode one padded chunk (`texts.len() <= max_batch`).
+    fn encode_chunk(&self, texts: &[&str]) -> Result<Vec<Vec<f32>>> {
+        let b = self.pick_batch(texts.len());
+        let s = self.params.seq_len;
+        let d = self.params.dim;
+        let mut tokens = vec![0i64; b * s];
+        for (i, t) in texts.iter().enumerate() {
+            tokens[i * s..(i + 1) * s].copy_from_slice(&self.tokenizer.encode(t));
+        }
+        let exe = self.runtime.get(&format!("encoder_b{b}"))?;
+        let tok_buf = self.runtime.upload_i64(&tokens, &[b, s])?;
+        let mut args: Vec<&xla::PjRtBuffer> = vec![&tok_buf];
+        args.extend(self.weight_buffers.iter());
+        let outputs = exe.run_buffers(&args)?;
+        let flat = &outputs[0];
+        Ok(texts.iter().enumerate().map(|(i, _)| flat[i * d..(i + 1) * d].to_vec()).collect())
+    }
+}
+
+// NOTE: `PjrtEncoder` deliberately does NOT implement the `Encoder`
+// trait: `xla::PjRtClient` is `Rc`-based and therefore !Send, so the
+// PJRT path lives on a dedicated batcher thread (`EmbeddingService`)
+// whose handle implements `Encoder` for the rest of the system.
+impl PjrtEncoder {
+    pub fn dim(&self) -> usize {
+        self.params.dim
+    }
+
+    pub fn params(&self) -> &ModelParams {
+        &self.params
+    }
+
+    pub fn tokenizer(&self) -> &Tokenizer {
+        &self.tokenizer
+    }
+
+    /// Encode any number of texts, chunking by the largest compiled batch.
+    pub fn encode_batch(&self, texts: &[&str]) -> Result<Vec<Vec<f32>>> {
+        let mut out = Vec::with_capacity(texts.len());
+        for chunk in texts.chunks(self.max_batch()) {
+            out.extend(self.encode_chunk(chunk)?);
+        }
+        Ok(out)
+    }
+
+    pub fn encode_text(&self, text: &str) -> Result<Vec<f32>> {
+        Ok(self.encode_batch(&[text])?.pop().expect("one embedding"))
+    }
+
+    /// Load artifacts from the default directory and build the encoder.
+    pub fn from_artifacts_dir(dir: &std::path::Path) -> Result<Self> {
+        let manifest = crate::runtime::ArtifactManifest::load(&dir.join("manifest.json"))?;
+        let batch_sizes = manifest.encoder_batch_sizes();
+        let params = manifest.model.clone();
+        let runtime = Arc::new(Runtime::load(dir)?);
+        Self::new(runtime, params, batch_sizes)
+    }
+}

@@ -1,0 +1,121 @@
+//! Generated encoder weights — Rust twin of `python/compile/weights.py`.
+//!
+//! The `(label, shape, std)` table below must match `weight_table()` in
+//! Python exactly; every tensor is filled from
+//! `SplitMix64::derive(seed, label)` in row-major order.
+
+use crate::runtime::ModelParams;
+use crate::util::SplitMix64;
+
+/// All encoder parameter tensors, flattened row-major.
+#[derive(Debug, Clone)]
+pub struct EncoderWeights {
+    pub params: ModelParams,
+    /// (vocab, dim)
+    pub embed: Vec<f32>,
+    /// (seq_len, dim)
+    pub pos: Vec<f32>,
+    /// (layers, dim, dim) each
+    pub wq: Vec<f32>,
+    pub wk: Vec<f32>,
+    pub wv: Vec<f32>,
+    pub wo: Vec<f32>,
+    /// (layers, dim, hidden)
+    pub w1: Vec<f32>,
+    /// (layers, hidden, dim)
+    pub w2: Vec<f32>,
+}
+
+impl EncoderWeights {
+    /// Generate every tensor from the shared seed (≈6M normals, ~100 ms).
+    pub fn generate(params: &ModelParams) -> Self {
+        let p = params;
+        let d = p.dim;
+        let inv_sqrt_d = 1.0 / (d as f64).sqrt();
+        let inv_sqrt_h = 1.0 / (p.hidden as f64).sqrt();
+        let gen = |label: &str, n: usize, std: f64| -> Vec<f32> {
+            SplitMix64::derive(p.seed, label).normal_vec(n, std)
+        };
+        Self {
+            params: p.clone(),
+            embed: gen("embed", p.vocab_size * d, 1.0),
+            pos: gen("pos", p.seq_len * d, 0.1),
+            wq: gen("wq", p.layers * d * d, inv_sqrt_d),
+            wk: gen("wk", p.layers * d * d, inv_sqrt_d),
+            wv: gen("wv", p.layers * d * d, inv_sqrt_d),
+            wo: gen("wo", p.layers * d * d, 0.1 * inv_sqrt_d),
+            w1: gen("w1", p.layers * d * p.hidden, inv_sqrt_d),
+            w2: gen("w2", p.layers * p.hidden * d, 0.1 * inv_sqrt_h),
+        }
+    }
+
+    /// Tensors in the positional order of the AOT executable signature
+    /// (after the token input): `(data, shape)` pairs.
+    pub fn flat_inputs(&self) -> Vec<(&[f32], Vec<usize>)> {
+        let p = &self.params;
+        vec![
+            (self.embed.as_slice(), vec![p.vocab_size, p.dim]),
+            (self.pos.as_slice(), vec![p.seq_len, p.dim]),
+            (self.wq.as_slice(), vec![p.layers, p.dim, p.dim]),
+            (self.wk.as_slice(), vec![p.layers, p.dim, p.dim]),
+            (self.wv.as_slice(), vec![p.layers, p.dim, p.dim]),
+            (self.wo.as_slice(), vec![p.layers, p.dim, p.dim]),
+            (self.w1.as_slice(), vec![p.layers, p.dim, p.hidden]),
+            (self.w2.as_slice(), vec![p.layers, p.hidden, p.dim]),
+        ]
+    }
+
+    /// Layer-`l` slice of a stacked (layers, rows, cols) tensor.
+    pub fn layer<'a>(stacked: &'a [f32], l: usize, rows: usize, cols: usize) -> &'a [f32] {
+        &stacked[l * rows * cols..(l + 1) * rows * cols]
+    }
+
+    /// Embedding row for a token id.
+    pub fn embed_row(&self, token: i64) -> &[f32] {
+        let d = self.params.dim;
+        let t = token as usize;
+        &self.embed[t * d..(t + 1) * d]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_determinism() {
+        let mut p = ModelParams::default();
+        // Shrink for test speed; geometry constraints still hold.
+        p.vocab_size = 64;
+        p.layers = 2;
+        let w1 = EncoderWeights::generate(&p);
+        let w2 = EncoderWeights::generate(&p);
+        assert_eq!(w1.embed.len(), 64 * p.dim);
+        assert_eq!(w1.wq.len(), 2 * p.dim * p.dim);
+        assert_eq!(w1.embed, w2.embed);
+        assert_eq!(w1.w2, w2.w2);
+    }
+
+    #[test]
+    fn streams_are_independent() {
+        let mut p = ModelParams::default();
+        p.vocab_size = 8;
+        p.layers = 1;
+        let w = EncoderWeights::generate(&p);
+        assert_ne!(w.wq[..16], w.wk[..16]);
+        assert_ne!(w.wq[..16], w.wv[..16]);
+    }
+
+    #[test]
+    fn scale_ordering() {
+        // Output projections are down-scaled 10x vs inputs.
+        let mut p = ModelParams::default();
+        p.vocab_size = 8;
+        let w = EncoderWeights::generate(&p);
+        let rms = |v: &[f32]| {
+            (v.iter().map(|x| (*x as f64).powi(2)).sum::<f64>() / v.len() as f64).sqrt()
+        };
+        assert!(rms(&w.wo) < rms(&w.wq) / 5.0);
+        assert!(rms(&w.embed) > 0.9 && rms(&w.embed) < 1.1);
+    }
+}

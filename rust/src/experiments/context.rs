@@ -1,0 +1,102 @@
+//! Shared evaluation context: the dataset plus every embedding,
+//! precomputed in batches (the costly step), and a measured estimate of
+//! single-query embedding latency for the Figure 3 latency model.
+
+use std::time::Instant;
+
+use crate::embedding::Encoder;
+use crate::util::Summary;
+use crate::workload::{Dataset, DatasetConfig, WorkloadGenerator};
+
+pub struct EvalContext {
+    pub dataset: Dataset,
+    /// One embedding per `dataset.base` entry, in order.
+    pub base_embeddings: Vec<Vec<f32>>,
+    /// One embedding per `dataset.tests` entry, in order.
+    pub test_embeddings: Vec<Vec<f32>>,
+    /// Measured per-query (batch=1) embed latency, ms.
+    pub embed_latency: Summary,
+    pub dim: usize,
+}
+
+impl EvalContext {
+    /// Generate the dataset and embed everything. `encoder` is the
+    /// backend under test (PJRT in the shipped experiments, native as
+    /// the artifact-free fallback).
+    pub fn build(encoder: &dyn Encoder, cfg: &DatasetConfig, seed: u64) -> Self {
+        let dataset = WorkloadGenerator::new(seed).generate(cfg);
+        let base_embeddings = embed_all(
+            encoder,
+            dataset.base.iter().map(|p| p.question.as_str()),
+            dataset.base.len(),
+        );
+        let test_embeddings = embed_all(
+            encoder,
+            dataset.tests.iter().map(|q| q.text.as_str()),
+            dataset.tests.len(),
+        );
+
+        // Measure the single-query path on a sample (this is what a
+        // serving request actually pays; the batched path above is the
+        // population pipeline).
+        let sample: Vec<&str> = dataset
+            .tests
+            .iter()
+            .take(32)
+            .map(|q| q.text.as_str())
+            .collect();
+        let mut lat = Vec::with_capacity(sample.len());
+        for text in sample {
+            let t0 = Instant::now();
+            let _ = encoder.encode_text(text);
+            lat.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+
+        Self {
+            dim: encoder.dim(),
+            dataset,
+            base_embeddings,
+            test_embeddings,
+            embed_latency: Summary::of(&lat),
+        }
+    }
+}
+
+fn embed_all<'a>(
+    encoder: &dyn Encoder,
+    texts: impl Iterator<Item = &'a str>,
+    n: usize,
+) -> Vec<Vec<f32>> {
+    let texts: Vec<&str> = texts.collect();
+    let mut out = Vec::with_capacity(n);
+    for chunk in texts.chunks(64) {
+        out.extend(encoder.encode_batch(chunk));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embedding::NativeEncoder;
+    use crate::runtime::ModelParams;
+
+    #[test]
+    fn context_shapes_line_up() {
+        let mut p = ModelParams::default();
+        p.layers = 1;
+        p.vocab_size = 512;
+        p.dim = 64;
+        p.hidden = 128;
+        p.heads = 4;
+        let enc = NativeEncoder::new(p);
+        let ctx = EvalContext::build(&enc, &DatasetConfig::tiny(), 5);
+        assert_eq!(ctx.base_embeddings.len(), ctx.dataset.base.len());
+        assert_eq!(ctx.test_embeddings.len(), ctx.dataset.tests.len());
+        assert_eq!(ctx.dim, 64);
+        assert!(ctx.embed_latency.mean > 0.0);
+        for e in ctx.base_embeddings.iter().chain(&ctx.test_embeddings) {
+            assert_eq!(e.len(), 64);
+        }
+    }
+}

@@ -1,0 +1,286 @@
+//! The paper's §3 evaluation protocol over a prebuilt [`EvalContext`].
+
+use std::time::Instant;
+
+use crate::cache::{CacheConfig, CachedEntry, SemanticCache};
+use crate::json::{obj, Value};
+use crate::llm::{approx_tokens, Judge, JudgeConfig, SimLlm, SimLlmConfig};
+use crate::metrics::CostModel;
+use crate::workload::{Category, ALL_CATEGORIES};
+
+use super::context::EvalContext;
+
+#[derive(Debug, Clone, Default)]
+pub struct PaperEvalConfig {
+    pub cache: CacheConfig,
+    pub llm: SimLlmConfig,
+    pub judge: JudgeConfig,
+    pub cost: CostModel,
+}
+
+/// One Table-1 / Figure-2/3/4 row.
+#[derive(Debug, Clone)]
+pub struct CategoryRow {
+    pub category: Category,
+    pub queries: usize,
+    pub cache_hits: usize,
+    pub positive_hits: usize,
+    pub api_calls: usize,
+    /// Mean end-to-end ms with the cache in front.
+    pub avg_ms_with_cache: f64,
+    /// Mean end-to-end ms via the traditional always-LLM path.
+    pub avg_ms_without_cache: f64,
+    pub cost_with_usd: f64,
+    pub cost_without_usd: f64,
+}
+
+impl CategoryRow {
+    pub fn hit_rate(&self) -> f64 {
+        self.cache_hits as f64 / self.queries.max(1) as f64
+    }
+    pub fn positive_rate(&self) -> f64 {
+        self.positive_hits as f64 / self.cache_hits.max(1) as f64
+    }
+    pub fn api_rate(&self) -> f64 {
+        self.api_calls as f64 / self.queries.max(1) as f64
+    }
+}
+
+/// Full evaluation output.
+#[derive(Debug, Clone)]
+pub struct PaperEval {
+    pub rows: Vec<CategoryRow>,
+    /// Wall-clock of the lookup phase (all 2,000 queries), seconds.
+    pub lookup_wall_secs: f64,
+    /// Mean measured per-query embed latency used in the latency model, ms.
+    pub embed_ms: f64,
+    /// Mean measured ANN lookup latency, ms.
+    pub index_ms: f64,
+}
+
+pub fn run_paper_eval(ctx: &EvalContext, cfg: &PaperEvalConfig) -> PaperEval {
+    let cache = SemanticCache::new(cfg.cache.clone());
+    let llm = SimLlm::new(cfg.llm.clone());
+    let judge = Judge::new(cfg.judge.clone());
+
+    // §3.1: populate the cache with all 8,000 pairs. Entries carry the
+    // answer-group id — the judge's ground truth (see workload docs).
+    for (p, e) in ctx.dataset.base.iter().zip(&ctx.base_embeddings) {
+        cache.insert_entry(
+            e,
+            CachedEntry {
+                question: p.question.clone(),
+                response: p.answer.clone(),
+                cluster: p.answer_group,
+            },
+        );
+    }
+
+    struct Tally {
+        queries: usize,
+        hits: usize,
+        positives: usize,
+        api_calls: usize,
+        with_ms: f64,
+        without_ms: f64,
+        llm_in_tokens: u64,
+        llm_out_tokens: u64,
+        embed_tokens: u64,
+        baseline_in_tokens: u64,
+        baseline_out_tokens: u64,
+    }
+    let mut tallies: std::collections::HashMap<Category, Tally> = ALL_CATEGORIES
+        .into_iter()
+        .map(|c| {
+            (
+                c,
+                Tally {
+                    queries: 0,
+                    hits: 0,
+                    positives: 0,
+                    api_calls: 0,
+                    with_ms: 0.0,
+                    without_ms: 0.0,
+                    llm_in_tokens: 0,
+                    llm_out_tokens: 0,
+                    embed_tokens: 0,
+                    baseline_in_tokens: 0,
+                    baseline_out_tokens: 0,
+                },
+            )
+        })
+        .collect();
+
+    let embed_ms = ctx.embed_latency.mean;
+    let mut index_ms_total = 0.0;
+    let ground_truth: std::collections::HashMap<u64, &str> = ctx
+        .dataset
+        .base
+        .iter()
+        .map(|p| (p.answer_group, p.answer.as_str()))
+        .collect();
+    let t_wall = Instant::now();
+
+    // §3.2: run the 2,000 test queries (embedding precomputed; the
+    // per-query embed cost enters the latency model as the measured mean).
+    for (q, e) in ctx.dataset.tests.iter().zip(&ctx.test_embeddings) {
+        let t = tallies.get_mut(&q.category).unwrap();
+        t.queries += 1;
+        t.embed_tokens += approx_tokens(&q.text);
+
+        let t0 = Instant::now();
+        let hit = cache.lookup(e);
+        let index_ms = t0.elapsed().as_secs_f64() * 1e3;
+        index_ms_total += index_ms;
+
+        match hit {
+            Some(hit) => {
+                t.hits += 1;
+                if judge.validate(q.answer_group, hit.entry.cluster) {
+                    t.positives += 1;
+                }
+                t.with_ms += embed_ms + index_ms;
+            }
+            None => {
+                // Miss: LLM call + insert (paper §2.5 step 2).
+                let resp = llm.call(&q.text, ground_truth.get(&q.answer_group).copied());
+                t.api_calls += 1;
+                t.llm_in_tokens += resp.input_tokens;
+                t.llm_out_tokens += resp.output_tokens;
+                t.with_ms += embed_ms + index_ms + resp.latency_ms;
+                cache.insert_entry(
+                    e,
+                    CachedEntry {
+                        question: q.text.clone(),
+                        response: resp.text,
+                        cluster: q.answer_group,
+                    },
+                );
+            }
+        }
+
+        // Traditional baseline: every query goes to the LLM.
+        let base = llm.call(&q.text, None);
+        t.without_ms += base.latency_ms;
+        t.baseline_in_tokens += base.input_tokens;
+        t.baseline_out_tokens += base.output_tokens;
+    }
+    let lookup_wall_secs = t_wall.elapsed().as_secs_f64();
+
+    let rows = ALL_CATEGORIES
+        .into_iter()
+        .map(|c| {
+            let t = &tallies[&c];
+            let cost_with = (t.llm_in_tokens as f64 * cfg.cost.usd_per_1m_input_tokens
+                + t.llm_out_tokens as f64 * cfg.cost.usd_per_1m_output_tokens
+                + t.embed_tokens as f64 * cfg.cost.usd_per_1m_embedding_tokens)
+                / 1e6;
+            let cost_without = (t.baseline_in_tokens as f64 * cfg.cost.usd_per_1m_input_tokens
+                + t.baseline_out_tokens as f64 * cfg.cost.usd_per_1m_output_tokens)
+                / 1e6;
+            CategoryRow {
+                category: c,
+                queries: t.queries,
+                cache_hits: t.hits,
+                positive_hits: t.positives,
+                api_calls: t.api_calls,
+                avg_ms_with_cache: t.with_ms / t.queries.max(1) as f64,
+                avg_ms_without_cache: t.without_ms / t.queries.max(1) as f64,
+                cost_with_usd: cost_with,
+                cost_without_usd: cost_without,
+            }
+        })
+        .collect();
+
+    PaperEval {
+        rows,
+        lookup_wall_secs,
+        embed_ms,
+        index_ms: index_ms_total / ctx.dataset.tests.len().max(1) as f64,
+    }
+}
+
+impl PaperEval {
+    pub fn to_json(&self) -> Value {
+        let rows: Vec<Value> = self
+            .rows
+            .iter()
+            .map(|r| {
+                obj([
+                    ("category", r.category.key().into()),
+                    ("label", r.category.label().into()),
+                    ("queries", r.queries.into()),
+                    ("cache_hits", r.cache_hits.into()),
+                    ("positive_hits", r.positive_hits.into()),
+                    ("api_calls", r.api_calls.into()),
+                    ("hit_rate", r.hit_rate().into()),
+                    ("positive_rate", r.positive_rate().into()),
+                    ("api_rate", r.api_rate().into()),
+                    ("avg_ms_with_cache", r.avg_ms_with_cache.into()),
+                    ("avg_ms_without_cache", r.avg_ms_without_cache.into()),
+                    ("cost_with_usd", r.cost_with_usd.into()),
+                    ("cost_without_usd", r.cost_without_usd.into()),
+                ])
+            })
+            .collect();
+        obj([
+            ("rows", Value::Array(rows)),
+            ("lookup_wall_secs", self.lookup_wall_secs.into()),
+            ("embed_ms", self.embed_ms.into()),
+            ("index_ms", self.index_ms.into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embedding::NativeEncoder;
+    use crate::runtime::ModelParams;
+    use crate::workload::DatasetConfig;
+
+    fn small_ctx() -> EvalContext {
+        let mut p = ModelParams::default();
+        p.layers = 2;
+        p.vocab_size = 2048;
+        p.dim = 128;
+        p.hidden = 256;
+        p.heads = 4;
+        let enc = NativeEncoder::new(p);
+        EvalContext::build(&enc, &DatasetConfig::small(), 11)
+    }
+
+    #[test]
+    fn eval_reproduces_paper_shape_at_small_scale() {
+        let ctx = small_ctx();
+        let eval = run_paper_eval(&ctx, &PaperEvalConfig::default());
+        assert_eq!(eval.rows.len(), 4);
+        for r in &eval.rows {
+            assert_eq!(r.queries, 80);
+            assert_eq!(r.cache_hits + r.api_calls, r.queries, "{:?}", r.category);
+            // Shape claims (wide bands at this tiny scale): real hit
+            // rates, high accuracy, order-of-magnitude latency win.
+            assert!(r.hit_rate() > 0.35, "{:?} hit rate {}", r.category, r.hit_rate());
+            assert!(r.hit_rate() < 0.95, "{:?} hit rate {}", r.category, r.hit_rate());
+            assert!(
+                r.positive_rate() > 0.7,
+                "{:?} positive rate {}",
+                r.category,
+                r.positive_rate()
+            );
+            // The weak test-geometry encoder hits less often than the
+            // shipped 384-d model, so the latency win is smaller here;
+            // the paper-shape ratio is asserted by the bench harness.
+            assert!(
+                r.avg_ms_without_cache > 2.0 * r.avg_ms_with_cache,
+                "{:?}: cache {}ms vs llm {}ms",
+                r.category,
+                r.avg_ms_with_cache,
+                r.avg_ms_without_cache
+            );
+            assert!(r.cost_with_usd < r.cost_without_usd);
+        }
+        let j = eval.to_json();
+        assert_eq!(j.get("rows").as_array().unwrap().len(), 4);
+    }
+}

@@ -1,0 +1,25 @@
+//! Experiment harness — regenerates every table and figure of the paper
+//! (DESIGN.md §5 experiment index):
+//!
+//! * [`run_paper_eval`] — the §3 protocol: populate 8,000 QA pairs, run
+//!   2,000 test queries, tally per-category hits / positive hits / API
+//!   calls / latencies → **Table 1, Figure 2, Figure 3, Figure 4**;
+//! * [`threshold_sweep`] — §5.3: θ from 0.60 to 0.90 in 0.05 steps,
+//!   hit rate vs positive rate trade-off;
+//! * [`scaling_study`] — §2.4: HNSW vs exhaustive search latency and
+//!   recall as the index grows.
+//!
+//! The expensive part (embedding 10,000 texts) happens once in
+//! [`EvalContext::build`] and is shared by all experiments.
+
+mod context;
+mod eval;
+mod render;
+mod scaling;
+mod sweep;
+
+pub use context::EvalContext;
+pub use eval::{run_paper_eval, CategoryRow, PaperEval, PaperEvalConfig};
+pub use render::{render_fig2, render_fig3, render_fig4, render_scaling, render_sweep, render_table1};
+pub use scaling::{scaling_study, ScalingConfig, ScalingRow};
+pub use sweep::{paper_grid as sweep_grid, threshold_sweep, SweepRow};

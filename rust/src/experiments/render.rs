@@ -1,0 +1,189 @@
+//! Render experiment results as the paper's tables/figures (markdown,
+//! with ASCII bars standing in for the bar charts).
+
+use super::eval::PaperEval;
+use super::scaling::ScalingRow;
+use super::sweep::SweepRow;
+
+fn bar(frac: f64, width: usize) -> String {
+    let n = (frac.clamp(0.0, 1.0) * width as f64).round() as usize;
+    let mut s = "█".repeat(n);
+    s.push_str(&"░".repeat(width - n.min(width)));
+    s
+}
+
+/// Table 1: cache hits and positive hits per 500 queries per category.
+pub fn render_table1(eval: &PaperEval) -> String {
+    let mut out = String::from(
+        "## Table 1 — Cache hits per category and positive hits\n\n\
+         | Category | Queries | Cache hits | Positive hits | Hit rate | Positive rate |\n\
+         |---|---:|---:|---:|---:|---:|\n",
+    );
+    for r in &eval.rows {
+        out.push_str(&format!(
+            "| {} | {} | {} | {} | {:.1}% | {:.1}% |\n",
+            r.category.label(),
+            r.queries,
+            r.cache_hits,
+            r.positive_hits,
+            100.0 * r.hit_rate(),
+            100.0 * r.positive_rate(),
+        ));
+    }
+    out
+}
+
+/// Figure 2: API-call frequency, traditional vs semantic cache.
+pub fn render_fig2(eval: &PaperEval) -> String {
+    let mut out = String::from(
+        "## Figure 2 — API call frequency: traditional vs GPT Semantic Cache\n\n",
+    );
+    for r in &eval.rows {
+        out.push_str(&format!(
+            "{:<42} traditional {} 100.0%\n{:<42} cached      {} {:>5.1}%\n\n",
+            r.category.label(),
+            bar(1.0, 30),
+            "",
+            bar(r.api_rate(), 30),
+            100.0 * r.api_rate(),
+        ));
+    }
+    out
+}
+
+/// Figure 3: average response time with vs without cache.
+pub fn render_fig3(eval: &PaperEval) -> String {
+    let max_ms = eval
+        .rows
+        .iter()
+        .map(|r| r.avg_ms_without_cache)
+        .fold(1.0f64, f64::max);
+    let mut out = String::from(
+        "## Figure 3 — Average query response time (ms): with vs without cache\n\n",
+    );
+    for r in &eval.rows {
+        out.push_str(&format!(
+            "{:<42} no cache   {} {:>9.1} ms\n{:<42} with cache {} {:>9.1} ms  ({:.1}x faster)\n\n",
+            r.category.label(),
+            bar(r.avg_ms_without_cache / max_ms, 30),
+            r.avg_ms_without_cache,
+            "",
+            bar(r.avg_ms_with_cache / max_ms, 30),
+            r.avg_ms_with_cache,
+            r.avg_ms_without_cache / r.avg_ms_with_cache.max(1e-9),
+        ));
+    }
+    out.push_str(&format!(
+        "(measured components: embed {:.3} ms/query, ANN lookup {:.3} ms/query)\n",
+        eval.embed_ms, eval.index_ms
+    ));
+    out
+}
+
+/// Figure 4: hit rate + positive-match accuracy per category.
+pub fn render_fig4(eval: &PaperEval) -> String {
+    let mut out = String::from(
+        "## Figure 4 — Cache hit rates and positive match accuracy\n\n\
+         | Category | Hit rate | Positive accuracy |\n|---|---|---|\n",
+    );
+    for r in &eval.rows {
+        out.push_str(&format!(
+            "| {} | {} {:.1}% | {} {:.1}% |\n",
+            r.category.label(),
+            bar(r.hit_rate(), 20),
+            100.0 * r.hit_rate(),
+            bar(r.positive_rate(), 20),
+            100.0 * r.positive_rate(),
+        ));
+    }
+    out
+}
+
+/// §5.3 sweep table.
+pub fn render_sweep(rows: &[SweepRow]) -> String {
+    let mut out = String::from(
+        "## §5.3 — Similarity-threshold sweep\n\n\
+         | θ | Hit rate | Positive rate | Hits | Positives |\n|---:|---:|---:|---:|---:|\n",
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "| {:.2} | {:.1}% | {:.1}% | {} | {} |\n",
+            r.threshold,
+            100.0 * r.hit_rate(),
+            100.0 * r.positive_rate(),
+            r.hits,
+            r.positives,
+        ));
+    }
+    out
+}
+
+/// §2.4 scaling table.
+pub fn render_scaling(rows: &[ScalingRow]) -> String {
+    let mut out = String::from(
+        "## §2.4 — HNSW (O(log n)) vs exhaustive search (O(n))\n\n\
+         | n | flat µs/query | hnsw µs/query | speedup | recall@k | hnsw build ms |\n\
+         |---:|---:|---:|---:|---:|---:|\n",
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "| {} | {:.1} | {:.1} | {:.1}x | {:.3} | {:.0} |\n",
+            r.n,
+            r.flat_us_per_query,
+            r.hnsw_us_per_query,
+            r.speedup(),
+            r.hnsw_recall,
+            r.hnsw_build_ms,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::CategoryRow;
+    use crate::workload::Category;
+
+    fn fake_eval() -> PaperEval {
+        PaperEval {
+            rows: vec![CategoryRow {
+                category: Category::PythonBasics,
+                queries: 500,
+                cache_hits: 335,
+                positive_hits: 310,
+                api_calls: 165,
+                avg_ms_with_cache: 12.0,
+                avg_ms_without_cache: 1500.0,
+                cost_with_usd: 0.01,
+                cost_without_usd: 0.05,
+            }],
+            lookup_wall_secs: 1.0,
+            embed_ms: 5.0,
+            index_ms: 0.1,
+        }
+    }
+
+    #[test]
+    fn renders_contain_key_numbers() {
+        let e = fake_eval();
+        let t1 = render_table1(&e);
+        assert!(t1.contains("| 335 |"));
+        assert!(t1.contains("67.0%"));
+        assert!(t1.contains("92.5%"));
+        let f2 = render_fig2(&e);
+        assert!(f2.contains("33.0%"));
+        let f3 = render_fig3(&e);
+        assert!(f3.contains("125.0x faster"));
+        let f4 = render_fig4(&e);
+        assert!(f4.contains("67.0%"));
+    }
+
+    #[test]
+    fn bar_widths() {
+        assert_eq!(bar(0.0, 10).chars().filter(|&c| c == '█').count(), 0);
+        assert_eq!(bar(1.0, 10).chars().filter(|&c| c == '█').count(), 10);
+        assert_eq!(bar(0.5, 10).chars().filter(|&c| c == '█').count(), 5);
+        assert_eq!(bar(2.0, 10).chars().filter(|&c| c == '█').count(), 10);
+    }
+}

@@ -1,0 +1,149 @@
+//! Threshold sweep (paper §5.3): θ from 0.60 to 0.90 in 0.05 steps.
+//!
+//! The cache is populated once with the 8,000 base pairs; each θ then
+//! replays the 2,000 test lookups *read-only* (misses do not insert, so
+//! every θ sees the identical cache state — the controlled version of
+//! the paper's experiment). Reports hit rate and positive rate per θ.
+
+use crate::cache::{CacheConfig, CachedEntry, SemanticCache};
+use crate::json::{obj, Value};
+use crate::llm::{Judge, JudgeConfig};
+use crate::workload::ALL_CATEGORIES;
+
+use super::context::EvalContext;
+
+/// One sweep point.
+#[derive(Debug, Clone)]
+pub struct SweepRow {
+    pub threshold: f32,
+    pub queries: usize,
+    pub hits: usize,
+    pub positives: usize,
+    /// Per-category hit rates (paper discusses the shopping-qa outlier).
+    pub per_category_hit_rate: Vec<(String, f64)>,
+}
+
+impl SweepRow {
+    pub fn hit_rate(&self) -> f64 {
+        self.hits as f64 / self.queries.max(1) as f64
+    }
+    pub fn positive_rate(&self) -> f64 {
+        self.positives as f64 / self.hits.max(1) as f64
+    }
+    pub fn to_json(&self) -> Value {
+        obj([
+            ("threshold", (self.threshold as f64).into()),
+            ("queries", self.queries.into()),
+            ("hits", self.hits.into()),
+            ("positives", self.positives.into()),
+            ("hit_rate", self.hit_rate().into()),
+            ("positive_rate", self.positive_rate().into()),
+        ])
+    }
+}
+
+/// The paper's sweep grid: 0.60, 0.65, ..., 0.90.
+pub fn paper_grid() -> Vec<f32> {
+    (0..=6).map(|i| 0.60 + 0.05 * i as f32).collect()
+}
+
+pub fn threshold_sweep(
+    ctx: &EvalContext,
+    cache_cfg: &CacheConfig,
+    judge_cfg: &JudgeConfig,
+    thresholds: &[f32],
+) -> Vec<SweepRow> {
+    let cache = SemanticCache::new(cache_cfg.clone());
+    let judge = Judge::new(judge_cfg.clone());
+    for (p, e) in ctx.dataset.base.iter().zip(&ctx.base_embeddings) {
+        cache.insert_entry(
+            e,
+            CachedEntry {
+                question: p.question.clone(),
+                response: p.answer.clone(),
+                cluster: p.answer_group,
+            },
+        );
+    }
+
+    thresholds
+        .iter()
+        .map(|&threshold| {
+            let mut hits = 0;
+            let mut positives = 0;
+            let mut per_cat: std::collections::HashMap<&str, (usize, usize)> =
+                ALL_CATEGORIES.iter().map(|c| (c.key(), (0usize, 0usize))).collect();
+            for (q, e) in ctx.dataset.tests.iter().zip(&ctx.test_embeddings) {
+                let entry = per_cat.get_mut(q.category.key()).unwrap();
+                entry.1 += 1;
+                if let Some(hit) = cache.lookup_with_threshold(e, threshold) {
+                    hits += 1;
+                    entry.0 += 1;
+                    if judge.validate(q.answer_group, hit.entry.cluster) {
+                        positives += 1;
+                    }
+                }
+            }
+            SweepRow {
+                threshold,
+                queries: ctx.dataset.tests.len(),
+                hits,
+                positives,
+                per_category_hit_rate: ALL_CATEGORIES
+                    .iter()
+                    .map(|c| {
+                        let (h, n) = per_cat[c.key()];
+                        (c.key().to_string(), h as f64 / n.max(1) as f64)
+                    })
+                    .collect(),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embedding::NativeEncoder;
+    use crate::runtime::ModelParams;
+    use crate::workload::DatasetConfig;
+
+    #[test]
+    fn sweep_tradeoff_shape() {
+        let mut p = ModelParams::default();
+        p.layers = 2;
+        p.vocab_size = 2048;
+        p.dim = 128;
+        p.hidden = 256;
+        p.heads = 4;
+        let enc = NativeEncoder::new(p);
+        let ctx = EvalContext::build(&enc, &DatasetConfig::small(), 13);
+        let rows = threshold_sweep(
+            &ctx,
+            &CacheConfig::default(),
+            &JudgeConfig::default(),
+            &paper_grid(),
+        );
+        assert_eq!(rows.len(), 7);
+        // Hit rate must be monotonically non-increasing in θ.
+        for w in rows.windows(2) {
+            assert!(
+                w[0].hits >= w[1].hits,
+                "hit rate must fall as θ rises: {} -> {}",
+                w[0].threshold,
+                w[1].threshold
+            );
+        }
+        // The paper's trade-off: loosest θ has more hits but lower
+        // accuracy than the strictest θ.
+        let first = &rows[0];
+        let last = &rows[rows.len() - 1];
+        assert!(first.hit_rate() > last.hit_rate());
+        assert!(
+            first.positive_rate() <= last.positive_rate() + 1e-9,
+            "accuracy should improve (or tie) as θ rises: {} vs {}",
+            first.positive_rate(),
+            last.positive_rate()
+        );
+    }
+}

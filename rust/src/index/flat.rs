@@ -1,0 +1,213 @@
+//! Exhaustive-scan index — the paper's O(n) baseline (§2.4) and the
+//! ground-truth oracle for HNSW recall tests.
+
+use std::collections::BinaryHeap;
+use std::collections::HashMap;
+
+use super::{Neighbor, OrdF32, VectorIndex};
+use crate::util::{dot, l2_normalized};
+
+/// Flat (brute-force) cosine index. Vectors live in one contiguous
+/// row-major matrix for scan locality; removals tombstone the row and
+/// `compact()` reclaims it.
+pub struct FlatIndex {
+    dim: usize,
+    data: Vec<f32>,
+    ids: Vec<u64>,
+    live: Vec<bool>,
+    by_id: HashMap<u64, usize>,
+    n_live: usize,
+}
+
+impl FlatIndex {
+    pub fn new(dim: usize) -> Self {
+        assert!(dim > 0);
+        Self { dim, data: Vec::new(), ids: Vec::new(), live: Vec::new(), by_id: HashMap::new(), n_live: 0 }
+    }
+
+    /// Row slice for internal row index.
+    #[inline]
+    fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.dim..(r + 1) * self.dim]
+    }
+
+    /// Fraction of tombstoned rows.
+    pub fn garbage_ratio(&self) -> f64 {
+        if self.ids.is_empty() {
+            0.0
+        } else {
+            1.0 - self.n_live as f64 / self.ids.len() as f64
+        }
+    }
+
+    /// Rebuild the matrix without tombstones.
+    pub fn compact(&mut self) {
+        let mut data = Vec::with_capacity(self.n_live * self.dim);
+        let mut ids = Vec::with_capacity(self.n_live);
+        for r in 0..self.ids.len() {
+            if self.live[r] {
+                data.extend_from_slice(self.row(r));
+                ids.push(self.ids[r]);
+            }
+        }
+        self.by_id = ids.iter().enumerate().map(|(r, &id)| (id, r)).collect();
+        self.live = vec![true; ids.len()];
+        self.data = data;
+        self.ids = ids;
+    }
+
+    /// Score every live row against `query` (normalized internally) —
+    /// used by benches to compare against the PJRT scorer artifact.
+    pub fn score_all(&self, query: &[f32]) -> Vec<Neighbor> {
+        let q = l2_normalized(query);
+        (0..self.ids.len())
+            .filter(|&r| self.live[r])
+            .map(|r| Neighbor { id: self.ids[r], score: dot(&q, self.row(r)) })
+            .collect()
+    }
+}
+
+impl VectorIndex for FlatIndex {
+    fn insert(&mut self, id: u64, vec: &[f32]) {
+        assert_eq!(vec.len(), self.dim, "dimension mismatch");
+        if let Some(&r) = self.by_id.get(&id) {
+            // Overwrite in place.
+            let normalized = l2_normalized(vec);
+            self.data[r * self.dim..(r + 1) * self.dim].copy_from_slice(&normalized);
+            if !self.live[r] {
+                self.live[r] = true;
+                self.n_live += 1;
+            }
+            return;
+        }
+        let r = self.ids.len();
+        self.data.extend_from_slice(&l2_normalized(vec));
+        self.ids.push(id);
+        self.live.push(true);
+        self.by_id.insert(id, r);
+        self.n_live += 1;
+    }
+
+    fn remove(&mut self, id: u64) -> bool {
+        match self.by_id.get(&id) {
+            Some(&r) if self.live[r] => {
+                self.live[r] = false;
+                self.n_live -= 1;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    fn search(&self, query: &[f32], k: usize) -> Vec<Neighbor> {
+        assert_eq!(query.len(), self.dim, "dimension mismatch");
+        if k == 0 || self.n_live == 0 {
+            return Vec::new();
+        }
+        let q = l2_normalized(query);
+        // Min-heap of size k over (score, id): keep the k best.
+        let mut heap: BinaryHeap<std::cmp::Reverse<(OrdF32, u64)>> = BinaryHeap::with_capacity(k + 1);
+        for r in 0..self.ids.len() {
+            if !self.live[r] {
+                continue;
+            }
+            let s = dot(&q, self.row(r));
+            if heap.len() < k {
+                heap.push(std::cmp::Reverse((OrdF32(s), self.ids[r])));
+            } else if s > heap.peek().unwrap().0 .0 .0 {
+                heap.pop();
+                heap.push(std::cmp::Reverse((OrdF32(s), self.ids[r])));
+            }
+        }
+        let mut out: Vec<Neighbor> = heap
+            .into_iter()
+            .map(|std::cmp::Reverse((OrdF32(s), id))| Neighbor { id, score: s })
+            .collect();
+        out.sort_by(|a, b| b.score.total_cmp(&a.score));
+        out
+    }
+
+    fn len(&self) -> usize {
+        self.n_live
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn exact_topk_matches_full_sort() {
+        let mut idx = FlatIndex::new(16);
+        let mut rng = Rng::new(1);
+        let mut vecs = Vec::new();
+        for id in 0..300u64 {
+            let v: Vec<f32> = (0..16).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+            idx.insert(id, &v);
+            vecs.push(v);
+        }
+        let q: Vec<f32> = (0..16).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+        let mut all = idx.score_all(&q);
+        all.sort_by(|a, b| b.score.total_cmp(&a.score));
+        let top = idx.search(&q, 7);
+        for (a, b) in top.iter().zip(all.iter()) {
+            assert_eq!(a.id, b.id);
+            assert!((a.score - b.score).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn overwrite_same_id_keeps_len() {
+        let mut idx = FlatIndex::new(4);
+        idx.insert(7, &[1.0, 0.0, 0.0, 0.0]);
+        idx.insert(7, &[0.0, 1.0, 0.0, 0.0]);
+        assert_eq!(idx.len(), 1);
+        let res = idx.search(&[0.0, 1.0, 0.0, 0.0], 1);
+        assert!(res[0].score > 0.999);
+    }
+
+    #[test]
+    fn reinsert_after_remove_revives() {
+        let mut idx = FlatIndex::new(4);
+        idx.insert(1, &[1.0, 0.0, 0.0, 0.0]);
+        assert!(idx.remove(1));
+        assert_eq!(idx.len(), 0);
+        idx.insert(1, &[0.0, 0.0, 1.0, 0.0]);
+        assert_eq!(idx.len(), 1);
+        assert_eq!(idx.search(&[0.0, 0.0, 1.0, 0.0], 1)[0].id, 1);
+    }
+
+    #[test]
+    fn compact_reclaims_tombstones() {
+        let mut idx = FlatIndex::new(4);
+        for id in 0..100u64 {
+            idx.insert(id, &[id as f32 + 1.0, 1.0, 0.0, 0.0]);
+        }
+        for id in 0..50u64 {
+            idx.remove(id);
+        }
+        assert!(idx.garbage_ratio() > 0.49);
+        let before = idx.search(&[60.0, 1.0, 0.0, 0.0], 5);
+        idx.compact();
+        assert_eq!(idx.garbage_ratio(), 0.0);
+        let after = idx.search(&[60.0, 1.0, 0.0, 0.0], 5);
+        assert_eq!(
+            before.iter().map(|n| n.id).collect::<Vec<_>>(),
+            after.iter().map(|n| n.id).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn zero_k_and_empty() {
+        let idx = FlatIndex::new(4);
+        assert!(idx.search(&[1.0, 0.0, 0.0, 0.0], 3).is_empty());
+        let mut idx = FlatIndex::new(4);
+        idx.insert(1, &[1.0, 0.0, 0.0, 0.0]);
+        assert!(idx.search(&[1.0, 0.0, 0.0, 0.0], 0).is_empty());
+    }
+}

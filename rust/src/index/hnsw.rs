@@ -1,0 +1,540 @@
+//! Hierarchical Navigable Small World graphs, from scratch.
+//!
+//! Follows Malkov & Yashunin (2018) — the algorithm the paper's
+//! `hnswlib-node` dependency implements:
+//!
+//! * geometric level assignment `l = floor(-ln(U) * mL)`, `mL = 1/ln(M)`;
+//! * greedy descent through upper layers (ef=1), beam search with
+//!   `ef_construction` on insert layers (Alg. 2);
+//! * neighbor selection by the pruning heuristic (Alg. 4): a candidate is
+//!   kept only if it is closer to the base point than to any already-kept
+//!   neighbor — this is what keeps the graph navigable on clustered data;
+//! * bidirectional linking with degree cap `M` (`M0 = 2M` on layer 0);
+//! * soft deletes (tombstones filtered from results but still traversed),
+//!   plus [`HnswIndex::rebuild`] — the paper's periodic "rebalancing";
+//! * dynamic growth: no fixed capacity, matching the paper's
+//!   "starts with a minimal size and dynamically grows" behaviour.
+//!
+//! Vectors are stored L2-normalized in one contiguous matrix; similarity
+//! is the raw dot product (= cosine). Search scratch (visited epochs +
+//! candidate heaps) is pooled per thread so the hot path does not allocate
+//! after warm-up (§Perf).
+
+use std::cell::RefCell;
+use std::collections::BinaryHeap;
+use std::collections::HashMap;
+use std::cmp::Reverse;
+
+use super::{Neighbor, OrdF32, VectorIndex};
+use crate::util::{dot, l2_normalized, SplitMix64};
+
+/// Tunables; defaults follow hnswlib's.
+#[derive(Debug, Clone)]
+pub struct HnswConfig {
+    /// Max out-degree on layers >= 1 (layer 0 uses 2M).
+    pub m: usize,
+    /// Beam width during construction.
+    pub ef_construction: usize,
+    /// Beam width during search (clamped up to k).
+    pub ef_search: usize,
+    /// Level-sampling seed (deterministic builds for tests/benches).
+    pub seed: u64,
+}
+
+impl Default for HnswConfig {
+    fn default() -> Self {
+        Self { m: 16, ef_construction: 200, ef_search: 64, seed: 0x9e37_79b9 }
+    }
+}
+
+struct Node {
+    id: u64,
+    level: usize,
+    deleted: bool,
+    /// neighbors[l] = out-edges on layer l (l <= level).
+    neighbors: Vec<Vec<u32>>,
+}
+
+/// HNSW index over cosine similarity.
+pub struct HnswIndex {
+    dim: usize,
+    cfg: HnswConfig,
+    ml: f64,
+    data: Vec<f32>,
+    nodes: Vec<Node>,
+    by_id: HashMap<u64, u32>,
+    entry: Option<u32>,
+    max_level: usize,
+    n_live: usize,
+    rng: SplitMix64,
+}
+
+/// Per-thread search scratch: epoch-stamped visited marks, reused heaps.
+struct Scratch {
+    visited: Vec<u32>,
+    epoch: u32,
+}
+
+thread_local! {
+    static SCRATCH: RefCell<Scratch> = RefCell::new(Scratch { visited: Vec::new(), epoch: 0 });
+}
+
+impl HnswIndex {
+    pub fn new(dim: usize, cfg: HnswConfig) -> Self {
+        assert!(dim > 0 && cfg.m >= 2);
+        let ml = 1.0 / (cfg.m as f64).ln();
+        let rng = SplitMix64::new(cfg.seed);
+        Self {
+            dim,
+            cfg,
+            ml,
+            data: Vec::new(),
+            nodes: Vec::new(),
+            by_id: HashMap::new(),
+            entry: None,
+            max_level: 0,
+            n_live: 0,
+            rng,
+        }
+    }
+
+    #[inline]
+    fn vec_of(&self, n: u32) -> &[f32] {
+        let r = n as usize;
+        &self.data[r * self.dim..(r + 1) * self.dim]
+    }
+
+    #[inline]
+    fn sim(&self, n: u32, q: &[f32]) -> f32 {
+        dot(self.vec_of(n), q)
+    }
+
+    fn sample_level(&mut self) -> usize {
+        let u = 1.0 - self.rng.next_f64(); // (0, 1]
+        ((-u.ln()) * self.ml).floor() as usize
+    }
+
+    /// Greedy 1-best descent on one layer (upper-layer routing).
+    fn greedy_step(&self, q: &[f32], mut cur: u32, layer: usize) -> u32 {
+        let mut cur_sim = self.sim(cur, q);
+        loop {
+            let mut improved = false;
+            for &nb in &self.nodes[cur as usize].neighbors[layer] {
+                let s = self.sim(nb, q);
+                if s > cur_sim {
+                    cur_sim = s;
+                    cur = nb;
+                    improved = true;
+                }
+            }
+            if !improved {
+                return cur;
+            }
+        }
+    }
+
+    /// Beam search on one layer (Alg. 2). Returns candidates best-first.
+    fn search_layer(&self, q: &[f32], entry: u32, ef: usize, layer: usize) -> Vec<(f32, u32)> {
+        SCRATCH.with(|s| {
+            let mut s = s.borrow_mut();
+            if s.visited.len() < self.nodes.len() {
+                s.visited.resize(self.nodes.len(), 0);
+            }
+            s.epoch = s.epoch.wrapping_add(1);
+            if s.epoch == 0 {
+                s.visited.iter_mut().for_each(|v| *v = 0);
+                s.epoch = 1;
+            }
+            let epoch = s.epoch;
+
+            // candidates: max-heap by sim; results: min-heap of size ef.
+            let mut candidates: BinaryHeap<(OrdF32, u32)> = BinaryHeap::new();
+            let mut results: BinaryHeap<Reverse<(OrdF32, u32)>> = BinaryHeap::new();
+            let e_sim = self.sim(entry, q);
+            s.visited[entry as usize] = epoch;
+            candidates.push((OrdF32(e_sim), entry));
+            results.push(Reverse((OrdF32(e_sim), entry)));
+
+            while let Some((OrdF32(c_sim), c)) = candidates.pop() {
+                let worst = results.peek().map(|Reverse((OrdF32(s), _))| *s).unwrap_or(f32::MIN);
+                if c_sim < worst && results.len() >= ef {
+                    break;
+                }
+                for &nb in &self.nodes[c as usize].neighbors[layer] {
+                    if s.visited[nb as usize] == epoch {
+                        continue;
+                    }
+                    s.visited[nb as usize] = epoch;
+                    let nb_sim = self.sim(nb, q);
+                    let worst = results.peek().map(|Reverse((OrdF32(s), _))| *s).unwrap_or(f32::MIN);
+                    if results.len() < ef || nb_sim > worst {
+                        candidates.push((OrdF32(nb_sim), nb));
+                        results.push(Reverse((OrdF32(nb_sim), nb)));
+                        if results.len() > ef {
+                            results.pop();
+                        }
+                    }
+                }
+            }
+            let mut out: Vec<(f32, u32)> =
+                results.into_iter().map(|Reverse((OrdF32(s), n))| (s, n)).collect();
+            out.sort_by(|a, b| b.0.total_cmp(&a.0));
+            out
+        })
+    }
+
+    /// Neighbor-selection heuristic (Alg. 4): keep a candidate only if it
+    /// is more similar to the base than to every already-selected
+    /// neighbor; this avoids redundant clustered edges.
+    fn select_neighbors(&self, candidates: &[(f32, u32)], m: usize) -> Vec<u32> {
+        let mut selected: Vec<u32> = Vec::with_capacity(m);
+        for &(base_sim, cand) in candidates {
+            if selected.len() >= m {
+                break;
+            }
+            let cand_vec = self.vec_of(cand);
+            let dominated = selected
+                .iter()
+                .any(|&s| dot(self.vec_of(s), cand_vec) > base_sim);
+            if !dominated {
+                selected.push(cand);
+            }
+        }
+        // Back-fill with closest skipped candidates if the heuristic was
+        // too aggressive (hnswlib's keepPrunedConnections behaviour).
+        if selected.len() < m {
+            for &(_, cand) in candidates {
+                if selected.len() >= m {
+                    break;
+                }
+                if !selected.contains(&cand) {
+                    selected.push(cand);
+                }
+            }
+        }
+        selected
+    }
+
+    /// Cap `node`'s layer-`layer` adjacency to `m` using the heuristic.
+    fn shrink_links(&mut self, node: u32, layer: usize, m: usize) {
+        let links = self.nodes[node as usize].neighbors[layer].clone();
+        if links.len() <= m {
+            return;
+        }
+        let nv = self.vec_of(node).to_vec();
+        let mut scored: Vec<(f32, u32)> =
+            links.iter().map(|&nb| (dot(self.vec_of(nb), &nv), nb)).collect();
+        scored.sort_by(|a, b| b.0.total_cmp(&a.0));
+        let kept = self.select_neighbors(&scored, m);
+        self.nodes[node as usize].neighbors[layer] = kept;
+    }
+
+    /// The paper's "periodic rebalancing": rebuild the graph from live
+    /// entries only, reclaiming tombstones and restoring link quality.
+    pub fn rebuild(&mut self) {
+        let mut pairs: Vec<(u64, Vec<f32>)> = Vec::with_capacity(self.n_live);
+        for n in &self.nodes {
+            if !n.deleted {
+                pairs.push((n.id, self.vec_of(self.by_id[&n.id]).to_vec()));
+            }
+        }
+        let mut fresh = HnswIndex::new(self.dim, self.cfg.clone());
+        for (id, v) in pairs {
+            fresh.insert_normalized(id, v);
+        }
+        *self = fresh;
+    }
+
+    /// Fraction of tombstoned nodes (rebuild trigger input).
+    pub fn garbage_ratio(&self) -> f64 {
+        if self.nodes.is_empty() {
+            0.0
+        } else {
+            1.0 - self.n_live as f64 / self.nodes.len() as f64
+        }
+    }
+
+    /// Total node slots including tombstones.
+    pub fn slots(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn config(&self) -> &HnswConfig {
+        &self.cfg
+    }
+
+    /// Search with an explicit beam width (the `ef` knob exposed for the
+    /// recall/latency trade-off bench).
+    pub fn search_ef(&self, query: &[f32], k: usize, ef: usize) -> Vec<Neighbor> {
+        assert_eq!(query.len(), self.dim, "dimension mismatch");
+        let Some(mut cur) = self.entry else { return Vec::new() };
+        if k == 0 {
+            return Vec::new();
+        }
+        let q = l2_normalized(query);
+        for layer in (1..=self.max_level).rev() {
+            cur = self.greedy_step(&q, cur, layer);
+        }
+        let ef = ef.max(k);
+        let found = self.search_layer(&q, cur, ef.max(1), 0);
+        let mut out = Vec::with_capacity(k);
+        for (s, n) in found {
+            if !self.nodes[n as usize].deleted {
+                out.push(Neighbor { id: self.nodes[n as usize].id, score: s });
+                if out.len() == k {
+                    break;
+                }
+            }
+        }
+        out
+    }
+
+    fn insert_normalized(&mut self, id: u64, v: Vec<f32>) {
+        if let Some(&slot) = self.by_id.get(&id) {
+            // Overwrite: update vector in place, revive if tombstoned.
+            self.data[slot as usize * self.dim..(slot as usize + 1) * self.dim]
+                .copy_from_slice(&v);
+            if self.nodes[slot as usize].deleted {
+                self.nodes[slot as usize].deleted = false;
+                self.n_live += 1;
+            }
+            return;
+        }
+        let level = self.sample_level();
+        let slot = self.nodes.len() as u32;
+        self.data.extend_from_slice(&v);
+        self.nodes.push(Node {
+            id,
+            level,
+            deleted: false,
+            neighbors: (0..=level).map(|_| Vec::new()).collect(),
+        });
+        self.by_id.insert(id, slot);
+        self.n_live += 1;
+
+        let Some(mut cur) = self.entry else {
+            self.entry = Some(slot);
+            self.max_level = level;
+            return;
+        };
+
+        // Route down from the top to level+1 greedily.
+        for layer in ((level + 1)..=self.max_level).rev() {
+            cur = self.greedy_step(&v, cur, layer);
+        }
+
+        // Connect on layers min(level, max_level)..0.
+        let m = self.cfg.m;
+        for layer in (0..=level.min(self.max_level)).rev() {
+            let found = self.search_layer(&v, cur, self.cfg.ef_construction, layer);
+            cur = found.first().map(|&(_, n)| n).unwrap_or(cur);
+            let m_layer = if layer == 0 { 2 * m } else { m };
+            let selected = self.select_neighbors(&found, m);
+            self.nodes[slot as usize].neighbors[layer] = selected.clone();
+            for nb in selected {
+                self.nodes[nb as usize].neighbors[layer].push(slot);
+                if self.nodes[nb as usize].neighbors[layer].len() > m_layer {
+                    self.shrink_links(nb, layer, m_layer);
+                }
+            }
+        }
+
+        if level > self.max_level {
+            self.max_level = level;
+            self.entry = Some(slot);
+        }
+    }
+}
+
+impl VectorIndex for HnswIndex {
+    fn insert(&mut self, id: u64, vec: &[f32]) {
+        assert_eq!(vec.len(), self.dim, "dimension mismatch");
+        self.insert_normalized(id, l2_normalized(vec));
+    }
+
+    fn remove(&mut self, id: u64) -> bool {
+        match self.by_id.get(&id) {
+            Some(&slot) if !self.nodes[slot as usize].deleted => {
+                self.nodes[slot as usize].deleted = true;
+                self.n_live -= 1;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    fn search(&self, query: &[f32], k: usize) -> Vec<Neighbor> {
+        // Widen the beam when many tombstones may hide results.
+        let ef = self.cfg.ef_search + 2 * (self.nodes.len() - self.n_live).min(64);
+        self.search_ef(query, k, ef)
+    }
+
+    fn len(&self) -> usize {
+        self.n_live
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn is_hnsw(&self) -> bool {
+        true
+    }
+
+    fn hnsw_config(&self) -> Option<&HnswConfig> {
+        Some(&self.cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::index::FlatIndex;
+    use crate::util::Rng;
+
+    fn random_vec(rng: &mut Rng, dim: usize) -> Vec<f32> {
+        (0..dim).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect()
+    }
+
+    /// Recall@10 vs the flat oracle must be high on random data.
+    #[test]
+    fn recall_against_flat() {
+        let dim = 24;
+        let n = 2_000;
+        let mut rng = Rng::new(7);
+        let mut hnsw = HnswIndex::new(dim, HnswConfig::default());
+        let mut flat = FlatIndex::new(dim);
+        for id in 0..n as u64 {
+            let v = random_vec(&mut rng, dim);
+            hnsw.insert(id, &v);
+            flat.insert(id, &v);
+        }
+        let mut hits = 0usize;
+        let queries = 50;
+        for _ in 0..queries {
+            let q = random_vec(&mut rng, dim);
+            let truth: Vec<u64> = flat.search(&q, 10).iter().map(|n| n.id).collect();
+            let got: Vec<u64> = hnsw.search(&q, 10).iter().map(|n| n.id).collect();
+            hits += got.iter().filter(|id| truth.contains(id)).count();
+        }
+        let recall = hits as f64 / (10 * queries) as f64;
+        assert!(recall > 0.9, "recall@10 = {recall}");
+    }
+
+    #[test]
+    fn clustered_data_finds_cluster_center() {
+        let dim = 16;
+        let mut rng = Rng::new(3);
+        let mut hnsw = HnswIndex::new(dim, HnswConfig::default());
+        // 20 clusters of 100 points.
+        let centers: Vec<Vec<f32>> = (0..20).map(|_| random_vec(&mut rng, dim)).collect();
+        for id in 0..2_000u64 {
+            let c = &centers[(id / 100) as usize];
+            let v: Vec<f32> =
+                c.iter().map(|x| x + rng.range_f64(-0.05, 0.05) as f32).collect();
+            hnsw.insert(id, &v);
+        }
+        for (ci, c) in centers.iter().enumerate() {
+            let res = hnsw.search(c, 5);
+            for n in res {
+                assert_eq!(
+                    (n.id / 100) as usize,
+                    ci,
+                    "neighbor from wrong cluster (id {})",
+                    n.id
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let build = || {
+            let mut idx = HnswIndex::new(8, HnswConfig::default());
+            let mut rng = Rng::new(5);
+            for id in 0..500u64 {
+                idx.insert(id, &random_vec(&mut rng, 8));
+            }
+            let q = random_vec(&mut rng, 8);
+            idx.search(&q, 5).iter().map(|n| n.id).collect::<Vec<_>>()
+        };
+        assert_eq!(build(), build());
+    }
+
+    #[test]
+    fn rebuild_reclaims_tombstones_and_preserves_results() {
+        let mut rng = Rng::new(11);
+        let mut idx = HnswIndex::new(12, HnswConfig::default());
+        let mut vecs = Vec::new();
+        for id in 0..600u64 {
+            let v = random_vec(&mut rng, 12);
+            idx.insert(id, &v);
+            vecs.push(v);
+        }
+        for id in 300..600u64 {
+            idx.remove(id);
+        }
+        assert!(idx.garbage_ratio() > 0.49);
+        let q = &vecs[17];
+        let before: Vec<u64> = idx.search(q, 5).iter().map(|n| n.id).collect();
+        idx.rebuild();
+        assert_eq!(idx.garbage_ratio(), 0.0);
+        assert_eq!(idx.len(), 300);
+        assert_eq!(idx.slots(), 300);
+        let after: Vec<u64> = idx.search(q, 5).iter().map(|n| n.id).collect();
+        assert_eq!(before[0], after[0], "nearest neighbor preserved across rebuild");
+        assert!(after.iter().all(|&id| id < 300));
+    }
+
+    #[test]
+    fn deleted_entries_never_returned_even_all_deleted() {
+        let mut idx = HnswIndex::new(8, HnswConfig::default());
+        let mut rng = Rng::new(2);
+        for id in 0..50u64 {
+            idx.insert(id, &random_vec(&mut rng, 8));
+        }
+        for id in 0..50u64 {
+            idx.remove(id);
+        }
+        assert!(idx.search(&random_vec(&mut rng, 8), 5).is_empty());
+    }
+
+    #[test]
+    fn single_element_and_empty() {
+        let mut idx = HnswIndex::new(4, HnswConfig::default());
+        assert!(idx.search(&[1.0, 0.0, 0.0, 0.0], 3).is_empty());
+        idx.insert(9, &[1.0, 0.0, 0.0, 0.0]);
+        let r = idx.search(&[1.0, 0.0, 0.0, 0.0], 3);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r[0].id, 9);
+    }
+
+    #[test]
+    fn ef_search_trades_recall() {
+        // ef=4 must not beat ef=128 in recall on the same data.
+        let dim = 24;
+        let mut rng = Rng::new(13);
+        let mut hnsw = HnswIndex::new(dim, HnswConfig::default());
+        let mut flat = FlatIndex::new(dim);
+        for id in 0..3_000u64 {
+            let v = random_vec(&mut rng, dim);
+            hnsw.insert(id, &v);
+            flat.insert(id, &v);
+        }
+        let mut recall_at = |ef: usize| {
+            let mut rng = Rng::new(99);
+            let mut hits = 0;
+            for _ in 0..40 {
+                let q = random_vec(&mut rng, dim);
+                let truth: Vec<u64> = flat.search(&q, 10).iter().map(|n| n.id).collect();
+                let got = hnsw.search_ef(&q, 10, ef);
+                hits += got.iter().filter(|n| truth.contains(&n.id)).count();
+            }
+            hits as f64 / 400.0
+        };
+        let lo = recall_at(10);
+        let hi = recall_at(128);
+        assert!(hi >= lo, "recall(128)={hi} < recall(10)={lo}");
+        assert!(hi > 0.93, "recall(128)={hi}");
+    }
+}

@@ -1,0 +1,132 @@
+//! Vector indexes for similarity search (paper §2.4).
+//!
+//! Two implementations of [`VectorIndex`]:
+//!
+//! * [`FlatIndex`] — exhaustive O(n) scan, the paper's complexity baseline
+//!   and the ground truth for recall measurements;
+//! * [`HnswIndex`] — Hierarchical Navigable Small World graphs (Malkov &
+//!   Yashunin 2018), the paper's production index, built from scratch:
+//!   geometric level sampling, beam (`ef`) search, the neighbor-selection
+//!   heuristic, bidirectional link pruning, soft deletes, dynamic growth
+//!   and periodic rebuild ("rebalancing" in the paper).
+//!
+//! All indexes store L2-normalized vectors, so cosine similarity reduces
+//! to a dot product on the hot path ([`crate::util::dot`]).
+
+mod flat;
+mod hnsw;
+
+pub use flat::FlatIndex;
+pub use hnsw::{HnswConfig, HnswIndex};
+
+/// A search result: entry id and cosine similarity (descending order).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Neighbor {
+    pub id: u64,
+    pub score: f32,
+}
+
+/// Common interface over flat and HNSW indexes. Vectors are copied in and
+/// normalized on insert; ids are caller-assigned and must be unique.
+pub trait VectorIndex: Send {
+    /// Insert a vector under `id`. Panics if `vec.len() != dim`.
+    fn insert(&mut self, id: u64, vec: &[f32]);
+    /// Soft-remove an id; returns whether it was present.
+    fn remove(&mut self, id: u64) -> bool;
+    /// Top-k most cosine-similar live entries, best first.
+    fn search(&self, query: &[f32], k: usize) -> Vec<Neighbor>;
+    /// Number of live entries.
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Vector dimensionality.
+    fn dim(&self) -> usize;
+    /// True for HNSW-backed indexes (used by partition rebuilds to
+    /// recreate the same index kind).
+    fn is_hnsw(&self) -> bool {
+        false
+    }
+    /// HNSW tunables when applicable.
+    fn hnsw_config(&self) -> Option<&HnswConfig> {
+        None
+    }
+}
+
+/// Max-heap ordering helper for f32 scores (NaN-free by construction).
+#[derive(PartialEq)]
+pub(crate) struct OrdF32(pub f32);
+
+impl Eq for OrdF32 {}
+impl PartialOrd for OrdF32 {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for OrdF32 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Shared conformance suite run against both implementations.
+    fn conformance(mut idx: Box<dyn VectorIndex>) {
+        let dim = idx.dim();
+        let mut rng = Rng::new(42);
+        let mut vecs = Vec::new();
+        for id in 0..200u64 {
+            let v: Vec<f32> = (0..dim).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+            idx.insert(id, &v);
+            vecs.push(v);
+        }
+        assert_eq!(idx.len(), 200);
+
+        // Self-query returns self with similarity ~1.
+        for id in [0u64, 57, 199] {
+            let res = idx.search(&vecs[id as usize], 1);
+            assert_eq!(res[0].id, id, "self-query must return self");
+            assert!(res[0].score > 0.999);
+        }
+
+        // Results are sorted descending and k-bounded.
+        let res = idx.search(&vecs[3], 10);
+        assert_eq!(res.len(), 10);
+        for w in res.windows(2) {
+            assert!(w[0].score >= w[1].score);
+        }
+
+        // Remove hides an entry.
+        assert!(idx.remove(3));
+        assert!(!idx.remove(3));
+        let res = idx.search(&vecs[3], 5);
+        assert!(res.iter().all(|n| n.id != 3));
+        assert_eq!(idx.len(), 199);
+
+        // k > len clamps.
+        let res = idx.search(&vecs[5], 500);
+        assert_eq!(res.len(), 199);
+    }
+
+    #[test]
+    fn flat_conformance() {
+        conformance(Box::new(FlatIndex::new(32)));
+    }
+
+    #[test]
+    fn hnsw_conformance() {
+        conformance(Box::new(HnswIndex::new(32, HnswConfig::default())));
+    }
+
+    #[test]
+    fn ordf32_total_order() {
+        let mut v = vec![OrdF32(0.5), OrdF32(-1.0), OrdF32(2.0)];
+        v.sort();
+        assert_eq!(v[0].0, -1.0);
+        assert_eq!(v[2].0, 2.0);
+    }
+}

@@ -1,0 +1,194 @@
+//! Minimal JSON parser/serializer.
+//!
+//! The offline build has no `serde`, so the crate carries its own small
+//! JSON implementation. It is used for the artifact manifest, dataset
+//! files, experiment reports, and the wire format of the HTTP-ish demo
+//! server. Supports the full JSON grammar (objects, arrays, strings with
+//! escapes, numbers, booleans, null); numbers are kept as `f64` which is
+//! sufficient for every use in this crate.
+
+mod parse;
+mod write;
+
+pub use parse::{parse, ParseError};
+pub use write::to_string_pretty;
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A JSON value. Object keys are kept sorted (BTreeMap) so serialization
+/// is deterministic — important for artifact manifests diffed in CI.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Array(Vec<Value>),
+    Object(BTreeMap<String, Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().and_then(|f| {
+            if f >= 0.0 && f.fract() == 0.0 {
+                Some(f as usize)
+            } else {
+                None
+            }
+        })
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        self.as_f64().and_then(|f| if f.fract() == 0.0 { Some(f as i64) } else { None })
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_object(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Object(o) => Some(o),
+            _ => None,
+        }
+    }
+
+    /// `obj["key"]`-style access; returns `Value::Null` when absent.
+    pub fn get(&self, key: &str) -> &Value {
+        static NULL: Value = Value::Null;
+        match self {
+            Value::Object(o) => o.get(key).unwrap_or(&NULL),
+            _ => &NULL,
+        }
+    }
+
+    /// Index into an array; returns `Value::Null` when out of bounds.
+    pub fn at(&self, idx: usize) -> &Value {
+        static NULL: Value = Value::Null;
+        match self {
+            Value::Array(a) => a.get(idx).unwrap_or(&NULL),
+            _ => &NULL,
+        }
+    }
+
+    pub fn is_null(&self) -> bool {
+        matches!(self, Value::Null)
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&write::to_string(self))
+    }
+}
+
+impl From<&str> for Value {
+    fn from(s: &str) -> Self {
+        Value::Str(s.to_string())
+    }
+}
+impl From<String> for Value {
+    fn from(s: String) -> Self {
+        Value::Str(s)
+    }
+}
+impl From<f64> for Value {
+    fn from(n: f64) -> Self {
+        Value::Num(n)
+    }
+}
+impl From<usize> for Value {
+    fn from(n: usize) -> Self {
+        Value::Num(n as f64)
+    }
+}
+impl From<u64> for Value {
+    fn from(n: u64) -> Self {
+        Value::Num(n as f64)
+    }
+}
+impl From<i64> for Value {
+    fn from(n: i64) -> Self {
+        Value::Num(n as f64)
+    }
+}
+impl From<bool> for Value {
+    fn from(b: bool) -> Self {
+        Value::Bool(b)
+    }
+}
+impl<T: Into<Value>> From<Vec<T>> for Value {
+    fn from(v: Vec<T>) -> Self {
+        Value::Array(v.into_iter().map(Into::into).collect())
+    }
+}
+
+/// Build a `Value::Object` tersely: `obj([("k", v.into()), ...])`.
+pub fn obj<const N: usize>(pairs: [(&str, Value); N]) -> Value {
+    Value::Object(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_scalar() {
+        for src in ["null", "true", "false", "3.5", "-2", "\"hi\\n\""] {
+            let v = parse(src).unwrap();
+            let back = parse(&write::to_string(&v)).unwrap();
+            assert_eq!(v, back, "roundtrip {src}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_nested() {
+        let src = r#"{"a": [1, 2, {"b": "x", "c": null}], "d": true}"#;
+        let v = parse(src).unwrap();
+        assert_eq!(v.get("a").at(2).get("b").as_str(), Some("x"));
+        assert_eq!(v.get("d").as_bool(), Some(true));
+        let back = parse(&write::to_string(&v)).unwrap();
+        assert_eq!(v, back);
+    }
+
+    #[test]
+    fn accessors_on_wrong_types_are_none() {
+        let v = parse("[1]").unwrap();
+        assert!(v.get("missing").is_null());
+        assert!(v.at(5).is_null());
+        assert_eq!(v.at(0).as_usize(), Some(1));
+        assert_eq!(v.at(0).as_str(), None);
+    }
+
+    #[test]
+    fn negative_usize_rejected() {
+        let v = parse("-3").unwrap();
+        assert_eq!(v.as_usize(), None);
+        assert_eq!(v.as_i64(), Some(-3));
+    }
+}

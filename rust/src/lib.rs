@@ -1,0 +1,53 @@
+//! # GPT Semantic Cache
+//!
+//! A production-quality reproduction of *"GPT Semantic Cache: Reducing LLM
+//! Costs and Latency via Semantic Embedding Caching"* (Regmi & Pun, 2024),
+//! built as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1 (Pallas, build time)** — the embedding encoder's fused
+//!   attention kernel and the batched cosine-similarity scorer, written
+//!   as Pallas kernels in `python/compile/kernels/`.
+//! * **Layer 2 (JAX, build time)** — a MiniLM-style sentence encoder
+//!   (`python/compile/model.py`) that calls the Pallas kernels and is lowered
+//!   once to HLO text by `python/compile/aot.py`.
+//! * **Layer 3 (Rust, runtime)** — this crate: the semantic cache itself
+//!   (vector store, HNSW ANN index, TTL key-value store), the serving
+//!   coordinator (request router, embedding batcher, metrics), the simulated
+//!   LLM upstream, the synthetic workload generator, and the experiment
+//!   harness that regenerates every table and figure of the paper.
+//!
+//! Python never runs on the request path: `make artifacts` lowers the
+//! encoder + scorer to `artifacts/*.hlo.txt` once, and the Rust binary loads
+//! them through PJRT (the [`runtime`] module).
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use semcache::cache::{SemanticCache, CacheConfig};
+//! use semcache::embedding::{Encoder, NativeEncoder};
+//!
+//! let encoder = NativeEncoder::minilm_sim();
+//! let cache = SemanticCache::new(CacheConfig::default());
+//! let e = encoder.encode_text("how do I reset my password?");
+//! assert!(cache.lookup(&e).is_none());
+//! cache.insert("how do I reset my password?", &e, "Click 'forgot password'...");
+//! let e2 = encoder.encode_text("how can I reset my password");
+//! assert!(cache.lookup(&e2).is_some());
+//! ```
+
+pub mod cache;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod embedding;
+pub mod experiments;
+pub mod index;
+pub mod json;
+pub mod llm;
+pub mod metrics;
+pub mod runtime;
+pub mod store;
+pub mod testutil;
+pub mod tokenizer;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,75 @@
+//! Hit-validation judge — the GPT-4o-mini substitute (paper §3.3).
+//!
+//! The paper shows the LLM judge both the test query and the cached
+//! question and asks for a binary "is the cached response valid" verdict.
+//! Our workload carries ground-truth cluster ids, so the noise-free
+//! verdict is cluster equality; an optional symmetric error rate models
+//! judge disagreement (default 0: the reported positive rates then
+//! measure the *cache's* accuracy, not the judge's).
+
+use std::sync::Mutex;
+
+use crate::util::Rng;
+
+#[derive(Debug, Clone)]
+pub struct JudgeConfig {
+    /// Probability the judge flips the true verdict.
+    pub error_rate: f64,
+    pub seed: u64,
+}
+
+impl Default for JudgeConfig {
+    fn default() -> Self {
+        Self { error_rate: 0.0, seed: 0x0DD5EED }
+    }
+}
+
+/// Binary verdict provider for cache hits.
+pub struct Judge {
+    cfg: JudgeConfig,
+    rng: Mutex<Rng>,
+}
+
+impl Judge {
+    pub fn new(cfg: JudgeConfig) -> Self {
+        let seed = cfg.seed;
+        Self { cfg, rng: Mutex::new(Rng::new(seed)) }
+    }
+
+    /// Verdict for a hit: did the cache return a response that answers
+    /// the query? Ground truth is cluster equality.
+    pub fn validate(&self, query_cluster: u64, cached_cluster: u64) -> bool {
+        let truth = query_cluster == cached_cluster;
+        if self.cfg.error_rate > 0.0 && self.rng.lock().unwrap().chance(self.cfg.error_rate) {
+            !truth
+        } else {
+            truth
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_judge_is_cluster_equality() {
+        let j = Judge::new(JudgeConfig::default());
+        assert!(j.validate(5, 5));
+        assert!(!j.validate(5, 6));
+    }
+
+    #[test]
+    fn noisy_judge_flips_at_configured_rate() {
+        let j = Judge::new(JudgeConfig { error_rate: 0.25, seed: 7 });
+        let mut flips = 0;
+        let n = 20_000;
+        for i in 0..n {
+            if !j.validate(i, i) {
+                flips += 1;
+            }
+        }
+        let rate = flips as f64 / n as f64;
+        assert!((rate - 0.25).abs() < 0.02, "flip rate {rate}");
+    }
+}

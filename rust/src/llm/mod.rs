@@ -1,0 +1,40 @@
+//! Simulated LLM upstream + validation judge (DESIGN.md §3 substitutions).
+//!
+//! The paper calls the OpenAI GPT API for cache misses and uses GPT-4o
+//! Mini to validate cache hits. Offline we replace both:
+//!
+//! * [`SimLlm`] — deterministic upstream with a calibrated latency model
+//!   (network RTT + per-output-token decode time, log-normal-ish jitter)
+//!   and token-metered accounting. Latency is *virtual* by default (the
+//!   experiment clock sums it without sleeping) and can optionally pace
+//!   wall-clock for the live-serving demo.
+//! * [`Judge`] — labels a cache hit positive iff the cached entry's
+//!   ground-truth cluster matches the query's cluster (the noise-free
+//!   analogue of the paper's LLM judge; an optional error rate models
+//!   judge disagreement).
+
+mod judge;
+mod sim;
+
+pub use judge::{Judge, JudgeConfig};
+pub use sim::{LlmResponse, SimLlm, SimLlmConfig};
+
+/// Approximate token count of a text under a GPT-style BPE: the paper's
+/// cost accounting only needs ratios, so words × 4/3 is the standard
+/// serviceable estimate.
+pub fn approx_tokens(text: &str) -> u64 {
+    let words = text.split_whitespace().count() as u64;
+    (words * 4).div_ceil(3).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn token_estimate_scales_with_words() {
+        use super::approx_tokens;
+        assert_eq!(approx_tokens("one two three"), 4);
+        assert!(approx_tokens("") >= 1);
+        let long: String = std::iter::repeat("word").take(300).collect::<Vec<_>>().join(" ");
+        assert_eq!(approx_tokens(&long), 400);
+    }
+}

@@ -1,0 +1,172 @@
+//! The simulated GPT upstream.
+//!
+//! Latency model (calibrated against public GPT-4o-mini serving numbers,
+//! only the *ratio* to the cache path matters for Figure 3):
+//!
+//! ```text
+//! latency = rtt + out_tokens * ms_per_token   (+ lognormal-ish jitter
+//!           on both terms via exp(N(0, sigma)))
+//! ```
+//!
+//! Answers come from the workload's ground truth when provided (so cache
+//! misses populate the cache with the *right* response for their
+//! cluster), else a deterministic synthetic completion.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::Rng;
+
+use super::approx_tokens;
+
+/// Upstream configuration.
+#[derive(Debug, Clone)]
+pub struct SimLlmConfig {
+    /// Mean network + queueing round trip, ms.
+    pub rtt_ms: f64,
+    /// Decode time per output token, ms (≈ 80 tok/s → 12.5).
+    pub ms_per_token: f64,
+    /// Mean output length when synthesizing an answer, tokens.
+    pub mean_output_tokens: f64,
+    /// σ of the lognormal jitter on rtt and decode rate.
+    pub jitter_sigma: f64,
+    /// If true, `call` sleeps the sampled latency (live demo); if false
+    /// the latency is only reported (fast experiments).
+    pub real_sleep: bool,
+    pub seed: u64,
+}
+
+impl Default for SimLlmConfig {
+    fn default() -> Self {
+        Self {
+            rtt_ms: 150.0,
+            ms_per_token: 12.0,
+            mean_output_tokens: 120.0,
+            jitter_sigma: 0.25,
+            real_sleep: false,
+            seed: 0x11AA,
+        }
+    }
+}
+
+/// One upstream completion.
+#[derive(Debug, Clone)]
+pub struct LlmResponse {
+    pub text: String,
+    pub input_tokens: u64,
+    pub output_tokens: u64,
+    /// Sampled end-to-end latency of this call, ms.
+    pub latency_ms: f64,
+}
+
+/// Deterministic simulated LLM API.
+pub struct SimLlm {
+    cfg: SimLlmConfig,
+    rng: Mutex<Rng>,
+    calls: AtomicU64,
+}
+
+impl SimLlm {
+    pub fn new(cfg: SimLlmConfig) -> Self {
+        let seed = cfg.seed;
+        Self { cfg, rng: Mutex::new(Rng::new(seed)), calls: AtomicU64::new(0) }
+    }
+
+    pub fn config(&self) -> &SimLlmConfig {
+        &self.cfg
+    }
+
+    pub fn calls(&self) -> u64 {
+        self.calls.load(Ordering::Relaxed)
+    }
+
+    /// Complete a query. `ground_truth` supplies the workload's answer
+    /// text when known; otherwise a synthetic completion is generated.
+    pub fn call(&self, question: &str, ground_truth: Option<&str>) -> LlmResponse {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        let (answer, jr, jd, extra) = {
+            let mut rng = self.rng.lock().unwrap();
+            let answer = match ground_truth {
+                Some(a) => a.to_string(),
+                None => synth_completion(question, &mut rng),
+            };
+            // Jitter factors: exp(N(0, σ)) — multiplicative, mean ≈ 1.
+            let jr = (rng.normal(0.0, self.cfg.jitter_sigma)).exp();
+            let jd = (rng.normal(0.0, self.cfg.jitter_sigma)).exp();
+            // Occasional long-tail stall (p95-ish spikes seen in real APIs).
+            let extra = if rng.chance(0.02) { rng.range_f64(500.0, 2000.0) } else { 0.0 };
+            (answer, jr, jd, extra)
+        };
+        let input_tokens = approx_tokens(question);
+        let output_tokens = approx_tokens(&answer);
+        let latency_ms = self.cfg.rtt_ms * jr
+            + output_tokens as f64 * self.cfg.ms_per_token * jd
+            + extra;
+        if self.cfg.real_sleep {
+            std::thread::sleep(std::time::Duration::from_micros((latency_ms * 1e3) as u64));
+        }
+        LlmResponse { text: answer, input_tokens, output_tokens, latency_ms }
+    }
+}
+
+fn synth_completion(question: &str, rng: &mut Rng) -> String {
+    let n_words = (rng.exponential(90.0) as usize).clamp(20, 400);
+    let mut s = format!("Here is an answer to \"{question}\". ");
+    let lexicon = [
+        "the", "system", "will", "process", "your", "request", "and",
+        "return", "a", "result", "based", "on", "standard", "settings",
+        "please", "verify", "details", "before", "continuing", "carefully",
+    ];
+    for _ in 0..n_words {
+        s.push_str(lexicon[rng.below(lexicon.len())]);
+        s.push(' ');
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ground_truth_passthrough_and_accounting() {
+        let llm = SimLlm::new(SimLlmConfig::default());
+        let r = llm.call("where is my order", Some("It ships tomorrow."));
+        assert_eq!(r.text, "It ships tomorrow.");
+        assert_eq!(r.input_tokens, approx_tokens("where is my order"));
+        assert_eq!(r.output_tokens, approx_tokens("It ships tomorrow."));
+        assert_eq!(llm.calls(), 1);
+    }
+
+    #[test]
+    fn latency_positive_and_token_scaled() {
+        let llm = SimLlm::new(SimLlmConfig { jitter_sigma: 0.0, ..Default::default() });
+        let short = llm.call("q", Some("short answer here"));
+        let long_text: String =
+            std::iter::repeat("word").take(300).collect::<Vec<_>>().join(" ");
+        let long = llm.call("q", Some(&long_text));
+        assert!(short.latency_ms > 100.0, "rtt floor");
+        assert!(long.latency_ms > short.latency_ms + 1000.0, "decode dominates long outputs");
+    }
+
+    #[test]
+    fn mean_latency_in_expected_band() {
+        let llm = SimLlm::new(SimLlmConfig::default());
+        let mut total = 0.0;
+        let n = 500;
+        for i in 0..n {
+            total += llm.call(&format!("question {i}"), None).latency_ms;
+        }
+        let mean = total / n as f64;
+        // rtt 150 + ~mean tokens * 12 with jitter: order of 0.5–3.5 s.
+        assert!((500.0..3500.0).contains(&mean), "mean latency {mean}");
+        assert_eq!(llm.calls(), n);
+    }
+
+    #[test]
+    fn synthetic_answers_deterministic_per_instance() {
+        let a = SimLlm::new(SimLlmConfig::default()).call("q", None).text;
+        let b = SimLlm::new(SimLlmConfig::default()).call("q", None).text;
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,327 @@
+//! `semcache` — the GPT Semantic Cache leader binary.
+//!
+//! Subcommands map one-to-one onto DESIGN.md §5's experiment index; run
+//! `semcache help` for usage. Python is never invoked here: the encoder
+//! artifacts are AOT-compiled by `make artifacts` and loaded via PJRT.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use semcache::cache::CacheConfig;
+use semcache::cli::{Args, USAGE};
+use semcache::config::Config;
+use semcache::coordinator::{Server, ServerConfig, TraceConfig, TraceRunner};
+use semcache::embedding::{
+    BatcherConfig, EmbeddingService, Encoder, EncoderSpec, NativeEncoder,
+};
+use semcache::experiments::{self, EvalContext, PaperEvalConfig, ScalingConfig};
+use semcache::index::HnswConfig;
+use semcache::json;
+use semcache::llm::{JudgeConfig, SimLlmConfig};
+use semcache::runtime::{artifacts_available, artifacts_dir, ModelParams};
+use semcache::workload::{DatasetConfig, WorkloadGenerator};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.subcommand.as_str() {
+        "" | "help" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        "info" => cmd_info(),
+        "dataset" => cmd_dataset(&args),
+        "experiment" => cmd_experiment(&args),
+        "sweep" => cmd_sweep(&args),
+        "scaling" => cmd_scaling(&args),
+        "serve" => cmd_serve(&args),
+        other => bail!("unknown subcommand '{other}' (try `semcache help`)"),
+    }
+}
+
+/// Assemble the typed config from file + CLI overrides.
+fn load_config(args: &Args) -> Result<Config> {
+    let mut cfg = match args.opt("config") {
+        Some(path) => Config::from_file(Path::new(path))?,
+        None => Config::default(),
+    };
+    // Any --<config-key> overrides.
+    let reserved = ["config", "encoder", "scale", "seed", "out", "qps", "workers"];
+    for (k, v) in args.options() {
+        if reserved.contains(&k.as_str()) {
+            continue;
+        }
+        cfg.set(k, v).with_context(|| format!("CLI override --{k}"))?;
+    }
+    if let Some(e) = args.opt("encoder") {
+        cfg.encoder_kind = e.to_string();
+    } else if artifacts_available() {
+        cfg.encoder_kind = "pjrt".into();
+    } else {
+        cfg.encoder_kind = "native".into();
+    }
+    if let Some(seed) = args.opt("seed") {
+        cfg.workload_seed = seed.parse().context("--seed")?;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cache_config(cfg: &Config) -> CacheConfig {
+    CacheConfig {
+        threshold: cfg.similarity_threshold,
+        ttl_ms: cfg.ttl_secs * 1000,
+        capacity: cfg.cache_capacity,
+        top_k: cfg.top_k,
+        index: match cfg.index_kind.as_str() {
+            "flat" => semcache::cache::IndexKind::Flat,
+            _ => semcache::cache::IndexKind::Hnsw,
+        },
+        hnsw: HnswConfig {
+            m: cfg.hnsw_m,
+            ef_construction: cfg.hnsw_ef_construction,
+            ef_search: cfg.hnsw_ef_search,
+            ..HnswConfig::default()
+        },
+        rebuild_garbage_ratio: cfg.rebuild_garbage_ratio,
+        store_shards: cfg.store_shards,
+    }
+}
+
+fn llm_config(cfg: &Config) -> SimLlmConfig {
+    SimLlmConfig {
+        rtt_ms: cfg.llm_rtt_ms,
+        ms_per_token: cfg.llm_ms_per_token,
+        mean_output_tokens: cfg.llm_mean_output_tokens,
+        real_sleep: cfg.llm_real_sleep,
+        ..SimLlmConfig::default()
+    }
+}
+
+fn build_encoder(cfg: &Config) -> Result<Arc<dyn Encoder>> {
+    match cfg.encoder_kind.as_str() {
+        "pjrt" => {
+            let handle = EmbeddingService::spawn(
+                EncoderSpec::Pjrt(artifacts_dir()),
+                BatcherConfig {
+                    window: Duration::from_micros(cfg.batch_window_us),
+                    max_batch: cfg.max_batch,
+                },
+            )
+            .context("starting PJRT embedding service (run `make artifacts`?)")?;
+            Ok(Arc::new(handle))
+        }
+        _ => Ok(Arc::new(NativeEncoder::new(ModelParams::default()))),
+    }
+}
+
+fn dataset_config(args: &Args) -> Result<DatasetConfig> {
+    Ok(match args.opt("scale").unwrap_or("paper") {
+        "paper" => DatasetConfig::paper(),
+        "small" => DatasetConfig::small(),
+        "tiny" => DatasetConfig::tiny(),
+        other => bail!("unknown --scale '{other}' (paper|small|tiny)"),
+    })
+}
+
+fn out_dir(args: &Args) -> Result<PathBuf> {
+    let dir = PathBuf::from(args.opt("out").unwrap_or("results"));
+    std::fs::create_dir_all(&dir)?;
+    Ok(dir)
+}
+
+fn write_report(dir: &Path, name: &str, md: &str, json_val: &json::Value) -> Result<()> {
+    std::fs::write(dir.join(format!("{name}.md")), md)?;
+    std::fs::write(dir.join(format!("{name}.json")), json::to_string_pretty(json_val))?;
+    println!("{md}");
+    println!("[wrote {}/{name}.md and .json]", dir.display());
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("gpt-semantic-cache {}", env!("CARGO_PKG_VERSION"));
+    println!("artifacts dir: {}", artifacts_dir().display());
+    println!("artifacts built: {}", artifacts_available());
+    if artifacts_available() {
+        let rt = semcache::runtime::Runtime::load(&artifacts_dir())?;
+        println!("PJRT platform: {}", rt.platform_name());
+        println!("compiled executables: {:?}", rt.names());
+    }
+    let p = ModelParams::default();
+    println!(
+        "encoder: {} layers x {}d (vocab {}, seq {}, heads {})",
+        p.layers, p.dim, p.vocab_size, p.seq_len, p.heads
+    );
+    Ok(())
+}
+
+fn cmd_dataset(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let ds_cfg = dataset_config(args)?;
+    let ds = WorkloadGenerator::new(cfg.workload_seed).generate(&ds_cfg);
+    let dir = out_dir(args)?;
+    let path = dir.join("dataset.json");
+    std::fs::write(&path, json::to_string_pretty(&ds.to_json()))?;
+    println!(
+        "dataset: {} base QA pairs, {} test queries -> {}",
+        ds.base.len(),
+        ds.tests.len(),
+        path.display()
+    );
+    Ok(())
+}
+
+fn build_context(args: &Args, cfg: &Config) -> Result<EvalContext> {
+    let encoder = build_encoder(cfg)?;
+    let ds_cfg = dataset_config(args)?;
+    eprintln!(
+        "[embedding {} texts through the {} encoder...]",
+        (ds_cfg.base_per_category + ds_cfg.tests_per_category) * 4,
+        cfg.encoder_kind
+    );
+    Ok(EvalContext::build(encoder.as_ref(), &ds_cfg, cfg.workload_seed))
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let which = args.positional().first().map(|s| s.as_str()).unwrap_or("all");
+    let cfg = load_config(args)?;
+    let ctx = build_context(args, &cfg)?;
+    let eval_cfg = PaperEvalConfig {
+        cache: cache_config(&cfg),
+        llm: llm_config(&cfg),
+        judge: JudgeConfig::default(),
+        cost: Default::default(),
+    };
+    eprintln!("[running paper evaluation protocol...]");
+    let eval = experiments::run_paper_eval(&ctx, &eval_cfg);
+    let dir = out_dir(args)?;
+    let j = eval.to_json();
+    match which {
+        "table1" => write_report(&dir, "table1", &experiments::render_table1(&eval), &j)?,
+        "fig2" => write_report(&dir, "fig2", &experiments::render_fig2(&eval), &j)?,
+        "fig3" => write_report(&dir, "fig3", &experiments::render_fig3(&eval), &j)?,
+        "fig4" => write_report(&dir, "fig4", &experiments::render_fig4(&eval), &j)?,
+        "all" => {
+            let mut md = String::new();
+            md.push_str(&experiments::render_table1(&eval));
+            md.push('\n');
+            md.push_str(&experiments::render_fig2(&eval));
+            md.push('\n');
+            md.push_str(&experiments::render_fig3(&eval));
+            md.push('\n');
+            md.push_str(&experiments::render_fig4(&eval));
+            write_report(&dir, "paper_eval", &md, &j)?;
+        }
+        other => bail!("unknown experiment '{other}' (table1|fig2|fig3|fig4|all)"),
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let ctx = build_context(args, &cfg)?;
+    let rows = experiments::threshold_sweep(
+        &ctx,
+        &cache_config(&cfg),
+        &JudgeConfig::default(),
+        &experiments::sweep_grid(),
+    );
+    let dir = out_dir(args)?;
+    let j = json::Value::Array(rows.iter().map(|r| r.to_json()).collect());
+    write_report(&dir, "threshold_sweep", &experiments::render_sweep(&rows), &j)?;
+    Ok(())
+}
+
+fn cmd_scaling(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let mut sc = ScalingConfig::default();
+    if args.flag("fast") {
+        sc.sizes = vec![1_000, 4_000, 16_000];
+        sc.queries = 50;
+    }
+    sc.hnsw.m = cfg.hnsw_m;
+    sc.hnsw.ef_construction = cfg.hnsw_ef_construction;
+    sc.hnsw.ef_search = cfg.hnsw_ef_search;
+    let rows = experiments::scaling_study(&sc);
+    let dir = out_dir(args)?;
+    let j = json::Value::Array(rows.iter().map(|r| r.to_json()).collect());
+    write_report(&dir, "scaling", &experiments::render_scaling(&rows), &j)?;
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let encoder = build_encoder(&cfg)?;
+    let ds_cfg = dataset_config(args)?;
+    let ds = WorkloadGenerator::new(cfg.workload_seed).generate(&ds_cfg);
+    let server = Arc::new(Server::new(
+        encoder,
+        ServerConfig {
+            cache: cache_config(&cfg),
+            llm: llm_config(&cfg),
+            judge: JudgeConfig::default(),
+        },
+    ));
+    eprintln!("[populating cache with {} QA pairs...]", ds.base.len());
+    server.populate(&ds.base);
+    server.register_ground_truth(&ds);
+    let _hk = server.start_housekeeping(Duration::from_millis(cfg.housekeeping_ms));
+
+    let qps: f64 = args.opt_parse("qps", cfg.trace_qps)?;
+    let workers: usize = args.opt_parse("workers", cfg.workers)?;
+    eprintln!(
+        "[serving {} queries, {} workers, {} qps arrivals...]",
+        ds.tests.len(),
+        workers,
+        if qps > 0.0 { qps.to_string() } else { "max".into() }
+    );
+    let runner = TraceRunner::new(server.clone());
+    let report = runner.run(
+        &ds.tests,
+        &TraceConfig { workers, qps, use_cache: true, seed: cfg.workload_seed },
+    );
+    println!(
+        "served {} queries in {:.2}s  ({:.0} qps wall)",
+        report.replies.len(),
+        report.wall_secs,
+        report.throughput_qps
+    );
+    println!(
+        "hits {} ({:.1}%)  misses {}",
+        report.hits,
+        100.0 * report.hits as f64 / report.replies.len().max(1) as f64,
+        report.misses
+    );
+    println!(
+        "latency ms: mean {:.2}  p50 {:.2}  p95 {:.2}  p99 {:.2}",
+        report.latency.mean, report.latency.p50, report.latency.p95, report.latency.p99
+    );
+    let m = server.metrics().snapshot();
+    let uncached_cost = {
+        let per_call_in = m.llm_input_tokens as f64 / m.llm_calls.max(1) as f64;
+        let per_call_out = m.llm_output_tokens as f64 / m.llm_calls.max(1) as f64;
+        let c: semcache::metrics::CostModel = Default::default();
+        m.requests as f64
+            * (per_call_in * c.usd_per_1m_input_tokens + per_call_out * c.usd_per_1m_output_tokens)
+            / 1e6
+    };
+    println!(
+        "metrics: requests {}  llm_calls {}  positive rate {:.1}%  est. cost ${:.4} (vs ${:.4} uncached)",
+        m.requests,
+        m.llm_calls,
+        100.0 * m.positive_rate(),
+        m.cost_usd(&Default::default()),
+        uncached_cost
+    );
+    Ok(())
+}

@@ -1,0 +1,180 @@
+//! Log-bucketed latency histogram plus an exact reservoir for percentile
+//! reporting. Buckets cover 1µs .. ~70s with ~8% relative error; the
+//! reservoir keeps up to 4096 exact samples (uniform via index hashing)
+//! from which `summary()` derives interpolated percentiles.
+
+use crate::util::{Summary};
+
+const BUCKETS: usize = 256;
+/// log-spaced: bucket i covers [BASE^i, BASE^(i+1)) microseconds.
+const BASE: f64 = 1.08;
+const RESERVOIR: usize = 4096;
+
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum_ms: f64,
+    reservoir: Vec<f64>,
+    seen: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self {
+            counts: vec![0; BUCKETS],
+            total: 0,
+            sum_ms: 0.0,
+            reservoir: Vec::with_capacity(RESERVOIR),
+            seen: 0,
+        }
+    }
+
+    fn bucket(ms: f64) -> usize {
+        let us = (ms * 1000.0).max(1.0);
+        let b = us.ln() / BASE.ln();
+        (b as usize).min(BUCKETS - 1)
+    }
+
+    pub fn observe(&mut self, ms: f64) {
+        let ms = if ms.is_finite() && ms >= 0.0 { ms } else { 0.0 };
+        self.counts[Self::bucket(ms)] += 1;
+        self.total += 1;
+        self.sum_ms += ms;
+        // Reservoir sampling (Vitter's algorithm R with splitmix hash for
+        // determinism across runs of the same trace).
+        self.seen += 1;
+        if self.reservoir.len() < RESERVOIR {
+            self.reservoir.push(ms);
+        } else {
+            let mut x = self.seen.wrapping_mul(0x9E3779B97F4A7C15);
+            x ^= x >> 29;
+            let j = (x % self.seen) as usize;
+            if j < RESERVOIR {
+                self.reservoir[j] = ms;
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum_ms / self.total as f64
+        }
+    }
+
+    /// Percentile from the log buckets (upper bound of the bucket).
+    pub fn bucket_percentile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q / 100.0 * self.total as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target.max(1) {
+                return BASE.powi(i as i32 + 1) / 1000.0; // µs → ms
+            }
+        }
+        BASE.powi(BUCKETS as i32) / 1000.0
+    }
+
+    /// Exact-ish summary from the reservoir (mean from full stream).
+    pub fn summary(&self) -> Summary {
+        let mut s = Summary::of(&self.reservoir);
+        s.n = self.total as usize;
+        if self.total > 0 {
+            s.mean = self.mean_ms();
+        }
+        s
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum_ms += other.sum_ms;
+        for &v in &other.reservoir {
+            if self.reservoir.len() < RESERVOIR {
+                self.reservoir.push(v);
+            }
+        }
+        self.seen += other.seen;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_exact() {
+        let mut h = Histogram::new();
+        for i in 1..=100 {
+            h.observe(i as f64);
+        }
+        assert!((h.mean_ms() - 50.5).abs() < 1e-9);
+        assert_eq!(h.count(), 100);
+    }
+
+    #[test]
+    fn bucket_percentile_monotone_and_close() {
+        let mut h = Histogram::new();
+        for i in 1..=1000 {
+            h.observe(i as f64 * 0.1);
+        }
+        let p50 = h.bucket_percentile(50.0);
+        let p95 = h.bucket_percentile(95.0);
+        let p99 = h.bucket_percentile(99.0);
+        assert!(p50 <= p95 && p95 <= p99);
+        // ~8% bucket error + bucket upper bound.
+        assert!((p50 - 50.0).abs() / 50.0 < 0.15, "p50={p50}");
+        assert!((p95 - 95.0).abs() / 95.0 < 0.15, "p95={p95}");
+    }
+
+    #[test]
+    fn summary_uses_reservoir() {
+        let mut h = Histogram::new();
+        for i in 0..10_000 {
+            h.observe((i % 100) as f64);
+        }
+        let s = h.summary();
+        assert_eq!(s.n, 10_000);
+        assert!((s.mean - 49.5).abs() < 0.01);
+        assert!((s.p50 - 49.5).abs() < 5.0);
+    }
+
+    #[test]
+    fn pathological_values_do_not_panic() {
+        let mut h = Histogram::new();
+        h.observe(f64::NAN);
+        h.observe(-5.0);
+        h.observe(f64::INFINITY);
+        h.observe(1e12);
+        assert_eq!(h.count(), 4);
+        let _ = h.summary();
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        a.observe(1.0);
+        b.observe(3.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert!((a.mean_ms() - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,254 @@
+//! Serving metrics: counters, latency histograms, cost accounting.
+//!
+//! The coordinator exposes one [`Metrics`] registry; every component
+//! (cache, batcher, upstream) records into it lock-free (atomics) or via
+//! a short mutex on the histogram shards. The experiment harness reads a
+//! [`MetricsSnapshot`] at the end of a run and renders the paper's rows.
+
+mod histogram;
+
+pub use histogram::Histogram;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::json::{obj, Value};
+use crate::util::Summary;
+
+/// Token cost model (USD per 1M tokens), defaults roughly at GPT-4o-mini
+/// published pricing — only ratios matter for the reproduction.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    pub usd_per_1m_input_tokens: f64,
+    pub usd_per_1m_output_tokens: f64,
+    pub usd_per_1m_embedding_tokens: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        Self {
+            usd_per_1m_input_tokens: 0.15,
+            usd_per_1m_output_tokens: 0.60,
+            usd_per_1m_embedding_tokens: 0.02,
+        }
+    }
+}
+
+/// Central metrics registry.
+#[derive(Default)]
+pub struct Metrics {
+    // Request-path counters.
+    pub requests: AtomicU64,
+    pub cache_hits: AtomicU64,
+    pub cache_misses: AtomicU64,
+    pub llm_calls: AtomicU64,
+    pub positive_hits: AtomicU64,
+    pub negative_hits: AtomicU64,
+    // Token accounting for the cost model.
+    pub llm_input_tokens: AtomicU64,
+    pub llm_output_tokens: AtomicU64,
+    pub embedding_tokens: AtomicU64,
+    // Latency histograms (ms), mutex-guarded (record is a few ns anyway).
+    lat_total: Mutex<Histogram>,
+    lat_embed: Mutex<Histogram>,
+    lat_index: Mutex<Histogram>,
+    lat_llm: Mutex<Histogram>,
+}
+
+/// Immutable snapshot used by reports and experiments.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub llm_calls: u64,
+    pub positive_hits: u64,
+    pub negative_hits: u64,
+    pub llm_input_tokens: u64,
+    pub llm_output_tokens: u64,
+    pub embedding_tokens: u64,
+    pub lat_total: Summary,
+    pub lat_embed: Summary,
+    pub lat_index: Summary,
+    pub lat_llm: Summary,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_request(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_hit(&self) {
+        self.cache_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_miss(&self) {
+        self.cache_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_llm_call(&self, input_tokens: u64, output_tokens: u64) {
+        self.llm_calls.fetch_add(1, Ordering::Relaxed);
+        self.llm_input_tokens.fetch_add(input_tokens, Ordering::Relaxed);
+        self.llm_output_tokens.fetch_add(output_tokens, Ordering::Relaxed);
+    }
+
+    pub fn record_embedding(&self, tokens: u64) {
+        self.embedding_tokens.fetch_add(tokens, Ordering::Relaxed);
+    }
+
+    pub fn record_judgement(&self, positive: bool) {
+        if positive {
+            self.positive_hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.negative_hits.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn observe_total_ms(&self, ms: f64) {
+        self.lat_total.lock().unwrap().observe(ms);
+    }
+    pub fn observe_embed_ms(&self, ms: f64) {
+        self.lat_embed.lock().unwrap().observe(ms);
+    }
+    pub fn observe_index_ms(&self, ms: f64) {
+        self.lat_index.lock().unwrap().observe(ms);
+    }
+    pub fn observe_llm_ms(&self, ms: f64) {
+        self.lat_llm.lock().unwrap().observe(ms);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.cache_misses.load(Ordering::Relaxed),
+            llm_calls: self.llm_calls.load(Ordering::Relaxed),
+            positive_hits: self.positive_hits.load(Ordering::Relaxed),
+            negative_hits: self.negative_hits.load(Ordering::Relaxed),
+            llm_input_tokens: self.llm_input_tokens.load(Ordering::Relaxed),
+            llm_output_tokens: self.llm_output_tokens.load(Ordering::Relaxed),
+            embedding_tokens: self.embedding_tokens.load(Ordering::Relaxed),
+            lat_total: self.lat_total.lock().unwrap().summary(),
+            lat_embed: self.lat_embed.lock().unwrap().summary(),
+            lat_index: self.lat_index.lock().unwrap().summary(),
+            lat_llm: self.lat_llm.lock().unwrap().summary(),
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    /// Cache hit rate in [0, 1].
+    pub fn hit_rate(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / self.requests as f64
+        }
+    }
+
+    /// Positive-hit (accuracy) rate among judged hits.
+    pub fn positive_rate(&self) -> f64 {
+        let judged = self.positive_hits + self.negative_hits;
+        if judged == 0 {
+            0.0
+        } else {
+            self.positive_hits as f64 / judged as f64
+        }
+    }
+
+    /// Fraction of requests that reached the LLM API.
+    pub fn api_call_rate(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.llm_calls as f64 / self.requests as f64
+        }
+    }
+
+    /// USD cost under the given model.
+    pub fn cost_usd(&self, m: &CostModel) -> f64 {
+        (self.llm_input_tokens as f64 * m.usd_per_1m_input_tokens
+            + self.llm_output_tokens as f64 * m.usd_per_1m_output_tokens
+            + self.embedding_tokens as f64 * m.usd_per_1m_embedding_tokens)
+            / 1e6
+    }
+
+    pub fn to_json(&self) -> Value {
+        obj([
+            ("requests", self.requests.into()),
+            ("cache_hits", self.cache_hits.into()),
+            ("cache_misses", self.cache_misses.into()),
+            ("llm_calls", self.llm_calls.into()),
+            ("positive_hits", self.positive_hits.into()),
+            ("negative_hits", self.negative_hits.into()),
+            ("hit_rate", self.hit_rate().into()),
+            ("positive_rate", self.positive_rate().into()),
+            ("api_call_rate", self.api_call_rate().into()),
+            ("lat_total_mean_ms", self.lat_total.mean.into()),
+            ("lat_total_p50_ms", self.lat_total.p50.into()),
+            ("lat_total_p95_ms", self.lat_total.p95.into()),
+            ("lat_total_p99_ms", self.lat_total.p99.into()),
+            ("lat_llm_mean_ms", self.lat_llm.mean.into()),
+            ("lat_embed_mean_ms", self.lat_embed.mean.into()),
+            ("lat_index_mean_ms", self.lat_index.mean.into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rates() {
+        let m = Metrics::new();
+        for _ in 0..10 {
+            m.record_request();
+        }
+        for _ in 0..6 {
+            m.record_hit();
+            m.record_judgement(true);
+        }
+        for _ in 0..4 {
+            m.record_miss();
+            m.record_llm_call(100, 50);
+        }
+        m.record_judgement(false);
+        let s = m.snapshot();
+        assert!((s.hit_rate() - 0.6).abs() < 1e-12);
+        assert!((s.api_call_rate() - 0.4).abs() < 1e-12);
+        assert!((s.positive_rate() - 6.0 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cost_model() {
+        let m = Metrics::new();
+        m.record_llm_call(1_000_000, 1_000_000);
+        m.record_embedding(1_000_000);
+        let s = m.snapshot();
+        let c = s.cost_usd(&CostModel::default());
+        assert!((c - (0.15 + 0.60 + 0.02)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zeroes() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.hit_rate(), 0.0);
+        assert_eq!(s.positive_rate(), 0.0);
+        assert_eq!(s.lat_total.n, 0);
+    }
+
+    #[test]
+    fn json_has_key_fields() {
+        let m = Metrics::new();
+        m.record_request();
+        m.observe_total_ms(1.5);
+        let j = m.snapshot().to_json();
+        assert_eq!(j.get("requests").as_usize(), Some(1));
+        assert!(j.get("lat_total_mean_ms").as_f64().unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,155 @@
+//! Compiled-executable wrapper around the PJRT CPU client.
+//!
+//! One [`Runtime`] per process; one [`Executable`] per AOT artifact. The
+//! embedding batcher thread owns the encoder executables and services a
+//! channel, so PJRT is never shared across threads mid-call.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::ArtifactManifest;
+
+/// Process-wide PJRT client plus the compiled executables from the
+/// artifact manifest.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    executables: HashMap<String, Executable>,
+}
+
+/// A single compiled HLO module with its I/O metadata from the manifest.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Shapes of the expected inputs, e.g. `[[8, 64]]` for a batch-8 encoder.
+    pub input_shapes: Vec<Vec<usize>>,
+    /// Shapes of the tuple outputs.
+    pub output_shapes: Vec<Vec<usize>>,
+    /// Wall-clock spent compiling this module (startup cost accounting).
+    pub compile_time_ms: f64,
+}
+
+impl Runtime {
+    /// Create a PJRT CPU client and compile every artifact in `dir`'s
+    /// manifest. Fails if the manifest or any HLO file is missing.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = ArtifactManifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading artifact manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut executables = HashMap::new();
+        for spec in &manifest.artifacts {
+            let path = dir.join(&spec.file);
+            let t0 = Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", spec.name))?;
+            executables.insert(
+                spec.name.clone(),
+                Executable {
+                    exe,
+                    input_shapes: spec.input_shapes.clone(),
+                    output_shapes: spec.output_shapes.clone(),
+                    compile_time_ms: t0.elapsed().as_secs_f64() * 1e3,
+                },
+            );
+        }
+        Ok(Self { client, executables })
+    }
+
+    /// Look up a compiled executable by manifest name (e.g. `encoder_b8`).
+    pub fn get(&self, name: &str) -> Result<&Executable> {
+        self.executables
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.executables.contains_key(name)
+    }
+
+    /// Upload an f32 tensor to the device once; the returned buffer can be
+    /// passed to [`Executable::run_buffers`] any number of times. Used to
+    /// keep the encoder weights resident instead of copying ~16 MB per call.
+    pub fn upload_f32(&self, data: &[f32], shape: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, shape, None)?)
+    }
+
+    /// Upload an i64 tensor (token ids).
+    pub fn upload_i64(&self, data: &[i64], shape: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, shape, None)?)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.executables.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+impl Executable {
+    /// Execute with f32 inputs, returning the flattened f32 tuple outputs.
+    ///
+    /// Inputs are `(data, shape)` pairs; shapes must match the manifest.
+    /// The AOT path lowers with `return_tuple=True`, so outputs always come
+    /// back as a tuple which we destructure element-wise.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (data, shape)) in inputs.iter().enumerate() {
+            let n: usize = shape.iter().product();
+            if data.len() != n {
+                bail!("input {i}: got {} elems, shape {:?} wants {n}", data.len(), shape);
+            }
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            literals.push(xla::Literal::vec1(data).reshape(&dims)?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        self.unpack_tuple(result)
+    }
+
+    /// Execute with i64 (token-id) inputs followed by f32 inputs.
+    /// JAX int32 inputs are avoided: we lower the encoder with i64 token
+    /// ids to match `Literal::vec1(&[i64])` exactly.
+    pub fn run_mixed(
+        &self,
+        int_inputs: &[(&[i64], &[usize])],
+        f32_inputs: &[(&[f32], &[usize])],
+    ) -> Result<Vec<Vec<f32>>> {
+        let mut literals = Vec::new();
+        for (data, shape) in int_inputs {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            literals.push(xla::Literal::vec1(data).reshape(&dims)?);
+        }
+        for (data, shape) in f32_inputs {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            literals.push(xla::Literal::vec1(data).reshape(&dims)?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        self.unpack_tuple(result)
+    }
+
+    /// Execute with pre-uploaded device buffers (zero host→device copies
+    /// for the resident arguments). Order must match the HLO signature.
+    pub fn run_buffers(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<Vec<f32>>> {
+        let result = self.exe.execute_b(args)?[0][0].to_literal_sync()?;
+        self.unpack_tuple(result)
+    }
+
+    fn unpack_tuple(&self, result: xla::Literal) -> Result<Vec<Vec<f32>>> {
+        let elems = result.to_tuple()?;
+        let mut out = Vec::with_capacity(elems.len());
+        for lit in elems {
+            out.push(lit.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,149 @@
+//! Artifact manifest: `artifacts/manifest.json`, written by
+//! `python/compile/aot.py` and read here at startup. It names every
+//! lowered HLO module plus its I/O shapes and the model hyperparameters
+//! (so the Rust tokenizer/native encoder stay in lock-step with the AOT
+//! encoder without re-parsing HLO).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::json::{self, Value};
+
+/// One AOT-compiled module.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    /// Manifest key, e.g. `encoder_b8` (encoder at batch size 8).
+    pub name: String,
+    /// HLO text file, relative to the artifacts dir.
+    pub file: String,
+    pub input_shapes: Vec<Vec<usize>>,
+    pub output_shapes: Vec<Vec<usize>>,
+}
+
+/// The full manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    pub artifacts: Vec<ArtifactSpec>,
+    /// Model hyperparameters as emitted by aot.py (dim, layers, vocab, ...).
+    pub model: ModelParams,
+}
+
+/// Encoder hyperparameters shared between the Python AOT model and the
+/// Rust native reference implementation. Both sides derive weights from
+/// the same splitmix64 seed, so these numbers fully determine the model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelParams {
+    pub vocab_size: usize,
+    pub dim: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub seq_len: usize,
+    pub seed: u64,
+}
+
+impl Default for ModelParams {
+    fn default() -> Self {
+        // MiniLM-L6-v2-style geometry (384-d, 6 layers) scaled for the
+        // synthetic-semantics encoder; see DESIGN.md §Embedding-Substitution.
+        Self { vocab_size: 4096, dim: 384, hidden: 768, layers: 4, heads: 6, seq_len: 32, seed: 0x5eed_cafe }
+    }
+}
+
+impl ArtifactManifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = json::parse(&text).context("parsing manifest.json")?;
+        Self::from_value(&v)
+    }
+
+    pub fn from_value(v: &Value) -> Result<Self> {
+        let mut artifacts = Vec::new();
+        for a in v.get("artifacts").as_array().context("manifest: 'artifacts' array")? {
+            artifacts.push(ArtifactSpec {
+                name: a.get("name").as_str().context("artifact name")?.to_string(),
+                file: a.get("file").as_str().context("artifact file")?.to_string(),
+                input_shapes: parse_shapes(a.get("input_shapes"))?,
+                output_shapes: parse_shapes(a.get("output_shapes"))?,
+            });
+        }
+        let m = v.get("model");
+        let d = ModelParams::default();
+        let model = ModelParams {
+            vocab_size: m.get("vocab_size").as_usize().unwrap_or(d.vocab_size),
+            dim: m.get("dim").as_usize().unwrap_or(d.dim),
+            hidden: m.get("hidden").as_usize().unwrap_or(d.hidden),
+            layers: m.get("layers").as_usize().unwrap_or(d.layers),
+            heads: m.get("heads").as_usize().unwrap_or(d.heads),
+            seq_len: m.get("seq_len").as_usize().unwrap_or(d.seq_len),
+            seed: m.get("seed").as_i64().map(|s| s as u64).unwrap_or(d.seed),
+        };
+        Ok(Self { artifacts, model })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// All encoder batch sizes present in the manifest (`encoder_b{N}`),
+    /// ascending — the batcher picks the smallest one >= pending count.
+    pub fn encoder_batch_sizes(&self) -> Vec<usize> {
+        let mut sizes: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter_map(|a| a.name.strip_prefix("encoder_b").and_then(|s| s.parse().ok()))
+            .collect();
+        sizes.sort_unstable();
+        sizes
+    }
+}
+
+fn parse_shapes(v: &Value) -> Result<Vec<Vec<usize>>> {
+    let mut out = Vec::new();
+    for shape in v.as_array().context("shape list")? {
+        let dims = shape
+            .as_array()
+            .context("shape dims")?
+            .iter()
+            .map(|d| d.as_usize().context("dim"))
+            .collect::<Result<Vec<_>>>()?;
+        out.push(dims);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "artifacts": [
+            {"name": "encoder_b1", "file": "encoder_b1.hlo.txt",
+             "input_shapes": [[1, 32]], "output_shapes": [[1, 384]]},
+            {"name": "encoder_b8", "file": "encoder_b8.hlo.txt",
+             "input_shapes": [[8, 32]], "output_shapes": [[8, 384]]},
+            {"name": "scorer", "file": "scorer.hlo.txt",
+             "input_shapes": [[384], [1024, 384]], "output_shapes": [[16], [16]]}
+        ],
+        "model": {"vocab_size": 4096, "dim": 384, "hidden": 768,
+                  "layers": 4, "heads": 6, "seq_len": 32, "seed": 1589069518}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let v = crate::json::parse(SAMPLE).unwrap();
+        let m = ArtifactManifest::from_value(&v).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+        assert_eq!(m.find("scorer").unwrap().input_shapes[1], vec![1024, 384]);
+        assert_eq!(m.encoder_batch_sizes(), vec![1, 8]);
+        assert_eq!(m.model.dim, 384);
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        let v = crate::json::parse(r#"{"artifacts": [{"name": "x"}]}"#).unwrap();
+        assert!(ArtifactManifest::from_value(&v).is_err());
+    }
+}

@@ -1,0 +1,48 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them.
+//!
+//! This is the only place the crate touches the `xla` crate. The compile
+//! path (`python/compile/aot.py`) lowers the JAX/Pallas programs to **HLO
+//! text** (not serialized protos — jax >= 0.5 emits 64-bit instruction ids
+//! that xla_extension 0.5.1 rejects; the text parser reassigns ids). At
+//! startup the coordinator loads every artifact listed in the manifest,
+//! compiles it once on the PJRT CPU client, and keeps the loaded
+//! executables around for the life of the process. Python is never on the
+//! request path.
+
+mod executable;
+mod manifest;
+
+pub use executable::{Executable, Runtime};
+pub use manifest::{ArtifactManifest, ArtifactSpec, ModelParams};
+
+use std::path::{Path, PathBuf};
+
+/// Default artifacts directory, relative to the repo root.
+pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// Resolve the artifacts directory: `$SEMCACHE_ARTIFACTS` if set, else
+/// `artifacts/` under the current directory, else under the crate root
+/// (so `cargo test` / examples work from any cwd).
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("SEMCACHE_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    let cwd = PathBuf::from(ARTIFACTS_DIR);
+    if cwd.exists() {
+        return cwd;
+    }
+    // CARGO_MANIFEST_DIR is baked at compile time; fall back to it so tests
+    // invoked from subdirectories still find the artifacts.
+    let manifest_dir = Path::new(env!("CARGO_MANIFEST_DIR")).join(ARTIFACTS_DIR);
+    if manifest_dir.exists() {
+        return manifest_dir;
+    }
+    cwd
+}
+
+/// True when the AOT artifacts have been built (`make artifacts`).
+/// Tests that need PJRT skip themselves when this is false so `cargo test`
+/// stays green on a fresh checkout.
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}

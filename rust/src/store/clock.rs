@@ -1,0 +1,71 @@
+//! Clock abstraction: TTL logic is tested against a manual clock and runs
+//! against the monotonic system clock in production.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Millisecond clock.
+pub trait Clock: Send + Sync {
+    fn now_ms(&self) -> u64;
+}
+
+/// Monotonic system clock (ms since process start).
+pub struct SystemClock;
+
+impl Clock for SystemClock {
+    fn now_ms(&self) -> u64 {
+        // Lazily anchored per-process epoch; monotonic so TTLs never go
+        // backwards under NTP adjustments.
+        static EPOCH: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+        let epoch = EPOCH.get_or_init(Instant::now);
+        epoch.elapsed().as_millis() as u64
+    }
+}
+
+/// Hand-driven clock for deterministic TTL tests and simulations.
+pub struct ManualClock {
+    now: AtomicU64,
+}
+
+impl ManualClock {
+    pub fn new(start_ms: u64) -> Self {
+        Self { now: AtomicU64::new(start_ms) }
+    }
+
+    pub fn advance(&self, ms: u64) {
+        self.now.fetch_add(ms, Ordering::SeqCst);
+    }
+
+    pub fn set(&self, ms: u64) {
+        self.now.store(ms, Ordering::SeqCst);
+    }
+}
+
+impl Clock for ManualClock {
+    fn now_ms(&self) -> u64 {
+        self.now.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manual_clock_advances() {
+        let c = ManualClock::new(5);
+        assert_eq!(c.now_ms(), 5);
+        c.advance(10);
+        assert_eq!(c.now_ms(), 15);
+        c.set(3);
+        assert_eq!(c.now_ms(), 3);
+    }
+
+    #[test]
+    fn system_clock_monotonic() {
+        let c = SystemClock;
+        let a = c.now_ms();
+        let b = c.now_ms();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,329 @@
+//! In-memory key-value store — the Redis substitute (paper §2.3, §2.7).
+//!
+//! Implements the Redis semantics the paper relies on:
+//!
+//! * **in-memory hash storage** with O(1) get/set;
+//! * **per-entry TTL** with both lazy expiry (on access) and an active
+//!   sweeper (`sweep_expired`, driven by the coordinator's housekeeping
+//!   thread — Redis' `activeExpireCycle` analogue);
+//! * **bounded memory with LRU eviction** (Redis `allkeys-lru`);
+//! * **sharding** to keep lock contention off the request path;
+//! * hit/miss/expiry/eviction **stats** (Redis `INFO` analogue).
+//!
+//! The store is deliberately type-parameterized (`KvStore<V>`): the
+//! semantic cache stores full entries (question + response + embedding)
+//! while tests exercise it with small values.
+
+mod clock;
+mod shard;
+
+pub use clock::{Clock, ManualClock, SystemClock};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::sync::Mutex;
+
+use shard::Shard;
+
+/// Store-wide statistics (monotonic counters).
+#[derive(Debug, Default)]
+pub struct StoreStats {
+    pub hits: AtomicU64,
+    pub misses: AtomicU64,
+    pub expired: AtomicU64,
+    pub evicted: AtomicU64,
+    pub inserts: AtomicU64,
+}
+
+/// Point-in-time snapshot of [`StoreStats`].
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct StatsSnapshot {
+    pub hits: u64,
+    pub misses: u64,
+    pub expired: u64,
+    pub evicted: u64,
+    pub inserts: u64,
+    pub len: usize,
+}
+
+/// Configuration for a [`KvStore`].
+#[derive(Debug, Clone)]
+pub struct StoreConfig {
+    /// Number of shards (power of two recommended).
+    pub shards: usize,
+    /// Maximum number of live entries across all shards; 0 = unbounded.
+    pub capacity: usize,
+    /// Default TTL in milliseconds applied by [`KvStore::set`]; 0 = no expiry.
+    pub default_ttl_ms: u64,
+}
+
+impl Default for StoreConfig {
+    fn default() -> Self {
+        Self { shards: 16, capacity: 0, default_ttl_ms: 0 }
+    }
+}
+
+/// Sharded TTL+LRU key-value store.
+pub struct KvStore<V> {
+    shards: Vec<Mutex<Shard<V>>>,
+    stats: StoreStats,
+    clock: Arc<dyn Clock>,
+    per_shard_capacity: usize,
+    default_ttl_ms: u64,
+}
+
+impl<V> KvStore<V> {
+    pub fn new(cfg: StoreConfig) -> Self {
+        Self::with_clock(cfg, Arc::new(SystemClock))
+    }
+
+    /// Inject a clock — tests drive TTL expiry with [`ManualClock`].
+    pub fn with_clock(cfg: StoreConfig, clock: Arc<dyn Clock>) -> Self {
+        let shards = cfg.shards.max(1);
+        // Capacity is enforced per shard; round up so total >= requested.
+        let per_shard_capacity =
+            if cfg.capacity == 0 { 0 } else { cfg.capacity.div_ceil(shards) };
+        Self {
+            shards: (0..shards).map(|_| Mutex::new(Shard::new())).collect(),
+            stats: StoreStats::default(),
+            clock,
+            per_shard_capacity,
+            default_ttl_ms: cfg.default_ttl_ms,
+        }
+    }
+
+    fn shard_for(&self, key: &str) -> &Mutex<Shard<V>> {
+        let h = crate::tokenizer::fnv1a64(key.as_bytes());
+        &self.shards[(h % self.shards.len() as u64) as usize]
+    }
+
+    /// Insert with the default TTL.
+    pub fn set(&self, key: &str, value: V) {
+        self.set_ttl(key, value, self.default_ttl_ms);
+    }
+
+    /// Insert with an explicit TTL (ms); 0 = never expires.
+    pub fn set_ttl(&self, key: &str, value: V, ttl_ms: u64) {
+        let now = self.clock.now_ms();
+        let expires = if ttl_ms == 0 { u64::MAX } else { now + ttl_ms };
+        let mut shard = self.shard_for(key).lock().unwrap();
+        let evicted = shard.insert(key.to_string(), value, expires, self.per_shard_capacity);
+        self.stats.inserts.fetch_add(1, Ordering::Relaxed);
+        self.stats.evicted.fetch_add(evicted, Ordering::Relaxed);
+    }
+}
+
+impl<V: Clone> KvStore<V> {
+    /// Get a clone of the live value; lazily expires dead entries.
+    pub fn get(&self, key: &str) -> Option<V> {
+        let now = self.clock.now_ms();
+        let mut shard = self.shard_for(key).lock().unwrap();
+        match shard.get(key, now) {
+            shard::Lookup::Hit(v) => {
+                self.stats.hits.fetch_add(1, Ordering::Relaxed);
+                Some(v.clone())
+            }
+            shard::Lookup::Expired => {
+                self.stats.expired.fetch_add(1, Ordering::Relaxed);
+                self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+            shard::Lookup::Miss => {
+                self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+}
+
+impl<V> KvStore<V> {
+    /// Remove a key; true if it was present and live.
+    pub fn remove(&self, key: &str) -> bool {
+        let now = self.clock.now_ms();
+        self.shard_for(key).lock().unwrap().remove(key, now)
+    }
+
+    /// Remaining TTL in ms (None = missing/expired; u64::MAX = immortal).
+    pub fn ttl_ms(&self, key: &str) -> Option<u64> {
+        let now = self.clock.now_ms();
+        let shard = self.shard_for(key).lock().unwrap();
+        shard.ttl_remaining(key, now)
+    }
+
+    /// Active expiry cycle: drop every expired entry, returning the count.
+    /// The coordinator's housekeeping thread calls this periodically.
+    pub fn sweep_expired(&self) -> usize {
+        let now = self.clock.now_ms();
+        let mut total = 0;
+        for shard in &self.shards {
+            total += shard.lock().unwrap().sweep(now);
+        }
+        self.stats.expired.fetch_add(total as u64, Ordering::Relaxed);
+        total
+    }
+
+    /// Live entry count (does not count not-yet-swept expired entries).
+    pub fn len(&self) -> usize {
+        let now = self.clock.now_ms();
+        self.shards.iter().map(|s| s.lock().unwrap().live_len(now)).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Visit every live entry (used by snapshot/rebuild paths).
+    pub fn for_each<F: FnMut(&str, &V)>(&self, mut f: F) {
+        let now = self.clock.now_ms();
+        for shard in &self.shards {
+            shard.lock().unwrap().for_each_live(now, &mut f);
+        }
+    }
+
+    pub fn stats(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            hits: self.stats.hits.load(Ordering::Relaxed),
+            misses: self.stats.misses.load(Ordering::Relaxed),
+            expired: self.stats.expired.load(Ordering::Relaxed),
+            evicted: self.stats.evicted.load(Ordering::Relaxed),
+            inserts: self.stats.inserts.load(Ordering::Relaxed),
+            len: self.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manual_store(capacity: usize, ttl: u64) -> (KvStore<String>, Arc<ManualClock>) {
+        let clock = Arc::new(ManualClock::new(1_000));
+        let cfg = StoreConfig { shards: 4, capacity, default_ttl_ms: ttl };
+        (KvStore::with_clock(cfg, clock.clone()), clock)
+    }
+
+    #[test]
+    fn set_get_remove() {
+        let (s, _) = manual_store(0, 0);
+        assert_eq!(s.get("a"), None);
+        s.set("a", "1".into());
+        assert_eq!(s.get("a"), Some("1".into()));
+        assert!(s.remove("a"));
+        assert!(!s.remove("a"));
+        assert_eq!(s.get("a"), None);
+    }
+
+    #[test]
+    fn overwrite_updates_value_and_ttl() {
+        let (s, clock) = manual_store(0, 0);
+        s.set_ttl("k", "v1".into(), 100);
+        s.set_ttl("k", "v2".into(), 10_000);
+        clock.advance(5_000);
+        assert_eq!(s.get("k"), Some("v2".into()));
+    }
+
+    #[test]
+    fn ttl_lazy_expiry() {
+        let (s, clock) = manual_store(0, 500);
+        s.set("k", "v".into());
+        assert_eq!(s.get("k"), Some("v".into()));
+        clock.advance(499);
+        assert_eq!(s.get("k"), Some("v".into()));
+        clock.advance(2);
+        assert_eq!(s.get("k"), None);
+        let st = s.stats();
+        assert_eq!(st.expired, 1);
+        assert_eq!(st.hits, 2);
+        assert_eq!(st.misses, 1);
+    }
+
+    #[test]
+    fn ttl_zero_is_immortal() {
+        let (s, clock) = manual_store(0, 0);
+        s.set("k", "v".into());
+        clock.advance(u64::MAX / 4);
+        assert_eq!(s.get("k"), Some("v".into()));
+        assert_eq!(s.ttl_ms("k"), Some(u64::MAX));
+    }
+
+    #[test]
+    fn active_sweep_counts_and_removes() {
+        let (s, clock) = manual_store(0, 100);
+        for i in 0..50 {
+            s.set(&format!("k{i}"), "v".into());
+        }
+        s.set_ttl("keep", "v".into(), 0);
+        clock.advance(200);
+        let swept = s.sweep_expired();
+        assert_eq!(swept, 50);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.sweep_expired(), 0);
+    }
+
+    #[test]
+    fn lru_eviction_prefers_cold_keys() {
+        let clock = Arc::new(ManualClock::new(0));
+        // Single shard so capacity semantics are exact.
+        let cfg = StoreConfig { shards: 1, capacity: 3, default_ttl_ms: 0 };
+        let s: KvStore<String> = KvStore::with_clock(cfg, clock);
+        s.set("a", "1".into());
+        s.set("b", "2".into());
+        s.set("c", "3".into());
+        // Touch a and c so b is coldest.
+        assert!(s.get("a").is_some());
+        assert!(s.get("c").is_some());
+        s.set("d", "4".into());
+        assert_eq!(s.get("b"), None, "cold key evicted");
+        assert!(s.get("a").is_some());
+        assert!(s.get("c").is_some());
+        assert!(s.get("d").is_some());
+        assert_eq!(s.stats().evicted, 1);
+        assert_eq!(s.len(), 3);
+    }
+
+    #[test]
+    fn len_ignores_expired() {
+        let (s, clock) = manual_store(0, 100);
+        s.set("a", "x".into());
+        s.set_ttl("b", "y".into(), 0);
+        assert_eq!(s.len(), 2);
+        clock.advance(150);
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn for_each_visits_live_only() {
+        let (s, clock) = manual_store(0, 100);
+        s.set("dead", "x".into());
+        s.set_ttl("live", "y".into(), 1_000);
+        clock.advance(150);
+        let mut seen = Vec::new();
+        s.for_each(|k, _| seen.push(k.to_string()));
+        assert_eq!(seen, vec!["live"]);
+    }
+
+    #[test]
+    fn concurrent_smoke() {
+        use std::sync::Arc as A;
+        let s: A<KvStore<u64>> = A::new(KvStore::new(StoreConfig {
+            shards: 8,
+            capacity: 0,
+            default_ttl_ms: 0,
+        }));
+        let mut handles = Vec::new();
+        for t in 0..8u64 {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..1000u64 {
+                    let k = format!("k{}", (t * 1000 + i) % 256);
+                    s.set(&k, i);
+                    let _ = s.get(&k);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(s.len(), 256);
+    }
+}

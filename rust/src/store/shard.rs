@@ -1,0 +1,151 @@
+//! One lock's worth of the KV store: a hash map with TTL metadata and a
+//! lazy-LRU queue for eviction (the classic "stale pairs" trick: the queue
+//! may contain outdated (seq, key) pairs; eviction pops until it finds a
+//! pair whose seq still matches the entry).
+
+use std::collections::{HashMap, VecDeque};
+
+pub(super) struct Entry<V> {
+    value: V,
+    expires_at_ms: u64,
+    /// Last-access sequence number, compared against queue pairs.
+    access_seq: u64,
+}
+
+pub(super) enum Lookup<'a, V> {
+    Hit(&'a V),
+    Expired,
+    Miss,
+}
+
+pub(super) struct Shard<V> {
+    map: HashMap<String, Entry<V>>,
+    /// Lazy LRU queue of (access_seq, key); front = coldest candidate.
+    lru: VecDeque<(u64, String)>,
+    next_seq: u64,
+}
+
+impl<V> Shard<V> {
+    pub fn new() -> Self {
+        Self { map: HashMap::new(), lru: VecDeque::new(), next_seq: 0 }
+    }
+
+    fn bump(&mut self, key: &str) -> u64 {
+        // Bound queue growth from repeated touches: compact when it is far
+        // larger than the map (amortized O(1) per access). Runs *before*
+        // pushing the new pair — the caller is about to stamp the entry
+        // with `next_seq + 1`, so the fresh pair must survive compaction.
+        if self.lru.len() > 4 * self.map.len() + 15 {
+            let map = &self.map;
+            self.lru.retain(|(seq, k)| map.get(k).map(|e| e.access_seq == *seq).unwrap_or(false));
+        }
+        self.next_seq += 1;
+        self.lru.push_back((self.next_seq, key.to_string()));
+        self.next_seq
+    }
+
+    /// Insert, evicting LRU entries if `capacity > 0` would be exceeded.
+    /// Returns the number of evictions performed.
+    pub fn insert(&mut self, key: String, value: V, expires_at_ms: u64, capacity: usize) -> u64 {
+        let seq = self.bump(&key);
+        let is_new = !self.map.contains_key(&key);
+        self.map.insert(key, Entry { value, expires_at_ms, access_seq: seq });
+        let mut evicted = 0;
+        if capacity > 0 && is_new {
+            while self.map.len() > capacity {
+                if let Some((seq, k)) = self.lru.pop_front() {
+                    let stale = self.map.get(&k).map(|e| e.access_seq != seq).unwrap_or(true);
+                    if !stale {
+                        self.map.remove(&k);
+                        evicted += 1;
+                    }
+                } else {
+                    break; // queue exhausted (shouldn't happen)
+                }
+            }
+        }
+        evicted
+    }
+
+    pub fn get(&mut self, key: &str, now_ms: u64) -> Lookup<'_, V> {
+        let expired = match self.map.get(key) {
+            None => return Lookup::Miss,
+            Some(e) => e.expires_at_ms <= now_ms,
+        };
+        if expired {
+            self.map.remove(key);
+            return Lookup::Expired;
+        }
+        let seq = self.bump(key);
+        let e = self.map.get_mut(key).unwrap();
+        e.access_seq = seq;
+        Lookup::Hit(&self.map.get(key).unwrap().value)
+    }
+
+    pub fn remove(&mut self, key: &str, now_ms: u64) -> bool {
+        match self.map.remove(key) {
+            Some(e) => e.expires_at_ms > now_ms,
+            None => false,
+        }
+    }
+
+    pub fn ttl_remaining(&self, key: &str, now_ms: u64) -> Option<u64> {
+        let e = self.map.get(key)?;
+        if e.expires_at_ms <= now_ms {
+            None
+        } else if e.expires_at_ms == u64::MAX {
+            Some(u64::MAX)
+        } else {
+            Some(e.expires_at_ms - now_ms)
+        }
+    }
+
+    pub fn sweep(&mut self, now_ms: u64) -> usize {
+        let before = self.map.len();
+        self.map.retain(|_, e| e.expires_at_ms > now_ms);
+        before - self.map.len()
+    }
+
+    pub fn live_len(&self, now_ms: u64) -> usize {
+        self.map.values().filter(|e| e.expires_at_ms > now_ms).count()
+    }
+
+    pub fn for_each_live<F: FnMut(&str, &V)>(&self, now_ms: u64, f: &mut F) {
+        for (k, e) in &self.map {
+            if e.expires_at_ms > now_ms {
+                f(k, &e.value);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lazy_queue_compaction_keeps_correctness() {
+        let mut s: Shard<u32> = Shard::new();
+        // Hammer one key to bloat the queue, forcing compaction.
+        s.insert("a".into(), 0, u64::MAX, 2);
+        for i in 0..100 {
+            match s.get("a", 0) {
+                Lookup::Hit(_) => {}
+                _ => panic!("a must stay live (iter {i})"),
+            }
+        }
+        assert!(s.lru.len() <= 4 * s.map.len() + 16, "queue compacted");
+        // LRU still works after compaction.
+        s.insert("b".into(), 1, u64::MAX, 2);
+        s.insert("c".into(), 2, u64::MAX, 2); // evicts coldest
+        assert_eq!(s.map.len(), 2);
+    }
+
+    #[test]
+    fn overwrite_does_not_evict() {
+        let mut s: Shard<u32> = Shard::new();
+        assert_eq!(s.insert("a".into(), 0, u64::MAX, 1), 0);
+        assert_eq!(s.insert("a".into(), 1, u64::MAX, 1), 0);
+        assert_eq!(s.map.len(), 1);
+    }
+}

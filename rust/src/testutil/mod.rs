@@ -1,0 +1,12 @@
+//! In-tree property-testing harness (no `proptest` in the offline build).
+//!
+//! [`prop_check`] runs a property over many seeded random cases; on
+//! failure it *shrinks* by replaying the generator with progressively
+//! truncated/zeroed choice streams (the "internal shrinking" approach of
+//! Hypothesis): a test case is fully described by the `u64` choices it
+//! drew, so shrinking the stream shrinks the case without any per-type
+//! shrinker code.
+
+mod prop;
+
+pub use prop::{prop_check, Gen, PropConfig};

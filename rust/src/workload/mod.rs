@@ -1,0 +1,181 @@
+//! Synthetic workload — the substitute for the paper's test dataset
+//! (DESIGN.md §3). Reproduces the *statistical* structure of the
+//! evaluation in §3.1–§3.2 of the paper:
+//!
+//! * 4 query categories (python basics, network support, order &
+//!   shipping, shopping QA), 2,000 cached QA pairs each (8,000 total);
+//! * 500 test queries per category (2,000 total), a per-category mix of
+//!   **paraphrases** of cached questions (should hit) and **novel**
+//!   questions (should miss);
+//! * QA pairs come from template *families* with slot vocabularies; a
+//!   `(family, slots)` binding is a **cluster** — the ground-truth
+//!   identity used by the judge to label hits positive/negative. False
+//!   positives arise *naturally* from same-family clusters that differ
+//!   in one slot word (e.g. "reverse a list" vs "reverse a string"),
+//!   exactly the near-duplicate ambiguity the paper attributes its
+//!   <100% positive rates to.
+
+mod categories;
+mod generator;
+
+pub use categories::{category_spec, Category, ALL_CATEGORIES};
+pub use generator::{DatasetConfig, WorkloadGenerator};
+
+use crate::json::{obj, Value};
+
+/// One cached question-answer pair (a unique cluster).
+#[derive(Debug, Clone)]
+pub struct QaPair {
+    /// Ground-truth cluster id (stable hash of family + slots).
+    pub cluster: u64,
+    /// Answer-equivalence group (hash of family + answer-determining
+    /// slots); clusters in one group genuinely share their answer text.
+    pub answer_group: u64,
+    pub category: Category,
+    pub question: String,
+    pub answer: String,
+}
+
+/// One test query.
+#[derive(Debug, Clone)]
+pub struct TestQuery {
+    pub text: String,
+    /// Cluster this query *means* (for novel queries: its own new cluster).
+    pub cluster: u64,
+    /// Answer-equivalence group of the cluster (see [`QaPair`]).
+    pub answer_group: u64,
+    pub category: Category,
+    /// True when the cluster is not in the cached base set.
+    pub novel: bool,
+}
+
+/// The full evaluation workload.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub base: Vec<QaPair>,
+    pub tests: Vec<TestQuery>,
+}
+
+impl Dataset {
+    pub fn base_for(&self, c: Category) -> impl Iterator<Item = &QaPair> {
+        self.base.iter().filter(move |p| p.category == c)
+    }
+
+    pub fn tests_for(&self, c: Category) -> impl Iterator<Item = &TestQuery> {
+        self.tests.iter().filter(move |q| q.category == c)
+    }
+
+    pub fn to_json(&self) -> Value {
+        let base: Vec<Value> = self
+            .base
+            .iter()
+            .map(|p| {
+                obj([
+                    ("cluster", p.cluster.into()),
+                    ("category", p.category.key().into()),
+                    ("question", p.question.as_str().into()),
+                    ("answer", p.answer.as_str().into()),
+                ])
+            })
+            .collect();
+        let tests: Vec<Value> = self
+            .tests
+            .iter()
+            .map(|q| {
+                obj([
+                    ("cluster", q.cluster.into()),
+                    ("category", q.category.key().into()),
+                    ("text", q.text.as_str().into()),
+                    ("novel", q.novel.into()),
+                ])
+            })
+            .collect();
+        obj([("base", Value::Array(base)), ("tests", Value::Array(tests))])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_scale_dataset() {
+        let ds = WorkloadGenerator::new(42).generate(&DatasetConfig::paper());
+        assert_eq!(ds.base.len(), 8_000);
+        assert_eq!(ds.tests.len(), 2_000);
+        for c in ALL_CATEGORIES {
+            assert_eq!(ds.base_for(c).count(), 2_000, "{c:?} base");
+            assert_eq!(ds.tests_for(c).count(), 500, "{c:?} tests");
+        }
+    }
+
+    #[test]
+    fn base_clusters_unique() {
+        let ds = WorkloadGenerator::new(1).generate(&DatasetConfig::small());
+        let mut ids: Vec<u64> = ds.base.iter().map(|p| p.cluster).collect();
+        let n = ids.len();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), n, "cluster ids must be unique in the base set");
+    }
+
+    #[test]
+    fn paraphrase_queries_reference_cached_clusters() {
+        let ds = WorkloadGenerator::new(2).generate(&DatasetConfig::small());
+        let cached: std::collections::HashSet<u64> =
+            ds.base.iter().map(|p| p.cluster).collect();
+        for q in &ds.tests {
+            if q.novel {
+                assert!(!cached.contains(&q.cluster), "novel query in cache: {}", q.text);
+            } else {
+                assert!(cached.contains(&q.cluster), "paraphrase not in cache: {}", q.text);
+            }
+        }
+    }
+
+    #[test]
+    fn paraphrases_differ_from_cached_surface() {
+        let ds = WorkloadGenerator::new(3).generate(&DatasetConfig::small());
+        let by_cluster: std::collections::HashMap<u64, &str> =
+            ds.base.iter().map(|p| (p.cluster, p.question.as_str())).collect();
+        let mut same = 0;
+        let mut total = 0;
+        for q in ds.tests.iter().filter(|q| !q.novel) {
+            total += 1;
+            if by_cluster[&q.cluster] == q.text {
+                same += 1;
+            }
+        }
+        // Paraphrase engine may occasionally emit the cached surface; it
+        // must be rare (< 20%) so the hit metric measures semantics, not
+        // string equality.
+        assert!(
+            (same as f64) < (total as f64) * 0.2,
+            "{same}/{total} paraphrases identical to cached question"
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = WorkloadGenerator::new(7).generate(&DatasetConfig::small());
+        let b = WorkloadGenerator::new(7).generate(&DatasetConfig::small());
+        assert_eq!(a.base.len(), b.base.len());
+        for (x, y) in a.base.iter().zip(&b.base) {
+            assert_eq!(x.question, y.question);
+            assert_eq!(x.cluster, y.cluster);
+        }
+        for (x, y) in a.tests.iter().zip(&b.tests) {
+            assert_eq!(x.text, y.text);
+        }
+    }
+
+    #[test]
+    fn json_export_shape() {
+        let ds = WorkloadGenerator::new(4).generate(&DatasetConfig::tiny());
+        let j = ds.to_json();
+        assert_eq!(j.get("base").as_array().unwrap().len(), ds.base.len());
+        assert_eq!(j.get("tests").as_array().unwrap().len(), ds.tests.len());
+        let q = j.get("base").at(0);
+        assert!(q.get("question").as_str().is_some());
+    }
+}

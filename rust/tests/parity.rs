@@ -1,0 +1,141 @@
+//! Cross-language parity: the AOT-compiled JAX/Pallas encoder (executed
+//! through PJRT) must agree with the pure-Rust native encoder, because
+//! both derive their weights from the same splitmix64 streams and
+//! implement the same formulas. This is the load-bearing test for the
+//! whole three-layer architecture — if it passes, the Python compile path
+//! and the Rust request path are interchangeable.
+//!
+//! Skips (with a note) when `artifacts/` has not been built.
+
+use semcache::embedding::{Encoder, NativeEncoder, PjrtEncoder};
+use semcache::index::{FlatIndex, VectorIndex};
+use semcache::runtime::{artifacts_available, artifacts_dir, ArtifactManifest, Runtime};
+use semcache::util::{dot, norm, Rng};
+
+fn skip() -> bool {
+    if artifacts_available() {
+        false
+    } else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        true
+    }
+}
+
+const TEXTS: &[&str] = &[
+    "how do i reset my password",
+    "how can i reset my password",
+    "what are the interest rates for savings accounts",
+    "write a python function to reverse a string",
+    "python function to reverse text",
+    "where is my order it has not arrived yet",
+    "",
+    "a",
+    "this is a very long query that will definitely exceed the maximum \
+     sequence length of the encoder because it just keeps going and going \
+     and going with more and more words than fit in thirty two positions",
+];
+
+#[test]
+fn pjrt_encoder_matches_native() {
+    if skip() {
+        return;
+    }
+    let pjrt = PjrtEncoder::from_artifacts_dir(&artifacts_dir()).expect("load artifacts");
+    let native = NativeEncoder::new(pjrt.params().clone());
+
+    let got = pjrt.encode_batch(TEXTS).expect("pjrt encode");
+    let want = native.encode_batch(TEXTS);
+    assert_eq!(got.len(), want.len());
+    let mut max_diff = 0f32;
+    for (g, w) in got.iter().zip(&want) {
+        assert_eq!(g.len(), w.len());
+        assert!((norm(g) - 1.0).abs() < 1e-3, "pjrt embedding unit norm");
+        for (a, b) in g.iter().zip(w) {
+            max_diff = max_diff.max((a - b).abs());
+        }
+    }
+    assert!(max_diff < 1e-3, "pjrt vs native max abs diff = {max_diff}");
+}
+
+#[test]
+fn pjrt_batch_sizes_agree_with_each_other() {
+    if skip() {
+        return;
+    }
+    let pjrt = PjrtEncoder::from_artifacts_dir(&artifacts_dir()).expect("load artifacts");
+    // Encoding one text alone (b1) and inside a padded batch (b4/b8...)
+    // must give the same embedding: padding rows cannot leak.
+    let alone = pjrt.encode_batch(&["where is my order"]).unwrap();
+    let batch = pjrt
+        .encode_batch(&["where is my order", "x", "y z", "w", "v"])
+        .unwrap();
+    let diff: f32 = alone[0]
+        .iter()
+        .zip(&batch[0])
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f32::max);
+    assert!(diff < 1e-4, "batch padding leaked into embedding: {diff}");
+}
+
+#[test]
+fn scorer_artifact_matches_flat_scan() {
+    if skip() {
+        return;
+    }
+    let dir = artifacts_dir();
+    let manifest = ArtifactManifest::load(&dir.join("manifest.json")).unwrap();
+    let runtime = Runtime::load(&dir).unwrap();
+    let dim = manifest.model.dim;
+
+    let mut rng = Rng::new(0xABCDEF);
+    let n = 1024;
+    // Random normalized corpus + query.
+    let mut corpus = vec![0.0f32; n * dim];
+    for x in corpus.iter_mut() {
+        *x = rng.range_f64(-1.0, 1.0) as f32;
+    }
+    for row in corpus.chunks_mut(dim) {
+        semcache::util::l2_normalize(row);
+    }
+    let mut q: Vec<f32> = (0..dim).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+    semcache::util::l2_normalize(&mut q);
+
+    // PJRT scorer top-16.
+    let exe = runtime.get("scorer_n1024").unwrap();
+    let out = exe
+        .run_f32(&[(&q, &[dim]), (&corpus, &[n, dim])])
+        .expect("scorer execute");
+    let (values, indices) = (&out[0], &out[1]);
+    assert_eq!(values.len(), 16);
+
+    // Flat oracle.
+    let mut flat = FlatIndex::new(dim);
+    for (i, row) in corpus.chunks(dim).enumerate() {
+        flat.insert(i as u64, row);
+    }
+    let truth = flat.search(&q, 16);
+
+    for (i, t) in truth.iter().enumerate() {
+        assert_eq!(indices[i].round() as u64, t.id, "rank {i} index");
+        assert!((values[i] - t.score).abs() < 1e-4, "rank {i} score");
+    }
+}
+
+#[test]
+fn semantic_structure_preserved_through_pjrt() {
+    if skip() {
+        return;
+    }
+    let pjrt = PjrtEncoder::from_artifacts_dir(&artifacts_dir()).expect("load artifacts");
+    let e = pjrt
+        .encode_batch(&[
+            "how do i track my package",
+            "how can i track my package",
+            "explain the difference between tcp and udp",
+        ])
+        .unwrap();
+    let near = dot(&e[0], &e[1]);
+    let far = dot(&e[0], &e[2]);
+    assert!(near > 0.8, "paraphrase sim through pjrt = {near}");
+    assert!(far < 0.5, "unrelated sim through pjrt = {far}");
+}

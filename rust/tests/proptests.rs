@@ -1,0 +1,263 @@
+//! Property-based tests over the coordinator-side invariants, using the
+//! in-tree choice-stream harness (`semcache::testutil`): routing
+//! (lookup/threshold), batching (embedding service), and state (store
+//! TTL/LRU vs a model, HNSW vs flat oracle, partition consistency).
+
+use std::sync::Arc;
+
+use semcache::cache::{CacheConfig, SemanticCache};
+use semcache::index::{FlatIndex, HnswConfig, HnswIndex, VectorIndex};
+use semcache::store::{KvStore, ManualClock, StoreConfig};
+use semcache::testutil::{prop_check, PropConfig};
+use semcache::tokenizer::Tokenizer;
+use semcache::util::l2_normalized;
+
+fn cfg(cases: usize) -> PropConfig {
+    PropConfig { cases, ..Default::default() }
+}
+
+/// The KV store behaves like a reference HashMap + expiry model under a
+/// random interleaving of set/get/remove/advance/sweep.
+#[test]
+fn prop_store_matches_model() {
+    prop_check(cfg(64), "store-vs-model", |g| {
+        let clock = Arc::new(ManualClock::new(0));
+        let store: KvStore<u64> = KvStore::with_clock(
+            StoreConfig { shards: 4, capacity: 0, default_ttl_ms: 0 },
+            clock.clone(),
+        );
+        // model: key -> (value, expires_at)
+        let mut model: std::collections::HashMap<String, (u64, u64)> =
+            std::collections::HashMap::new();
+        let mut now = 0u64;
+        let keys = ["a", "b", "c", "d", "e", "f"];
+        let ops = g.usize_in(1, 60);
+        for i in 0..ops {
+            match g.usize_below(5) {
+                0 => {
+                    let k = *g.choose(&keys);
+                    let ttl = [0u64, 5, 50][g.usize_below(3)];
+                    let exp = if ttl == 0 { u64::MAX } else { now + ttl };
+                    store.set_ttl(k, i as u64, ttl);
+                    model.insert(k.to_string(), (i as u64, exp));
+                }
+                1 => {
+                    let k = *g.choose(&keys);
+                    let got = store.get(k);
+                    let want = model.get(k).and_then(|&(v, exp)| {
+                        if exp > now {
+                            Some(v)
+                        } else {
+                            None
+                        }
+                    });
+                    if got != want {
+                        return Err(format!("get({k}) = {got:?}, model says {want:?} (t={now})"));
+                    }
+                    if want.is_none() {
+                        model.remove(k);
+                    }
+                }
+                2 => {
+                    let k = *g.choose(&keys);
+                    let got = store.remove(k);
+                    let want = model
+                        .remove(k)
+                        .map(|(_, exp)| exp > now)
+                        .unwrap_or(false);
+                    if got != want {
+                        return Err(format!("remove({k}) = {got}, model says {want}"));
+                    }
+                }
+                3 => {
+                    let dt = g.usize_in(1, 30) as u64;
+                    now += dt;
+                    clock.advance(dt);
+                }
+                _ => {
+                    store.sweep_expired();
+                    model.retain(|_, &mut (_, exp)| exp > now);
+                }
+            }
+            let live_model = model.values().filter(|&&(_, exp)| exp > now).count();
+            if store.len() != live_model {
+                return Err(format!("len {} != model {live_model} (t={now})", store.len()));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Capacity is never exceeded and recently-touched keys survive eviction.
+#[test]
+fn prop_store_capacity_respected() {
+    prop_check(cfg(64), "store-capacity", |g| {
+        let cap = g.usize_in(2, 8);
+        let store: KvStore<usize> = KvStore::new(StoreConfig {
+            shards: 1,
+            capacity: cap,
+            default_ttl_ms: 0,
+        });
+        let n = g.usize_in(1, 40);
+        for i in 0..n {
+            store.set(&format!("k{i}"), i);
+            if store.len() > cap {
+                return Err(format!("len {} exceeds capacity {cap}", store.len()));
+            }
+            // The just-inserted key is always present.
+            if store.get(&format!("k{i}")).is_none() {
+                return Err(format!("just-inserted k{i} missing"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// HNSW top-1 matches the flat oracle for clearly-separated queries.
+#[test]
+fn prop_hnsw_top1_matches_flat() {
+    prop_check(cfg(24), "hnsw-top1-vs-flat", |g| {
+        let dim = g.usize_in(8, 24);
+        let n = g.usize_in(10, 300);
+        let mut hnsw = HnswIndex::new(dim, HnswConfig::default());
+        let mut flat = FlatIndex::new(dim);
+        let mut rows = Vec::new();
+        for id in 0..n as u64 {
+            let v = l2_normalized(&g.vec_f32(dim, -1.0, 1.0));
+            hnsw.insert(id, &v);
+            flat.insert(id, &v);
+            rows.push(v);
+        }
+        // Query very near a stored row: both must return that row first.
+        let target = g.usize_below(n);
+        let q: Vec<f32> = rows[target].iter().map(|x| x + 0.01).collect();
+        let f = flat.search(&q, 1)[0];
+        let h = hnsw.search(&q, 1)[0];
+        if f.id != h.id {
+            return Err(format!(
+                "flat top1 {} ({:.4}) vs hnsw top1 {} ({:.4}), n={n} dim={dim}",
+                f.id, f.score, h.id, h.score
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Removals never surface removed ids; re-inserts revive them.
+#[test]
+fn prop_index_removal_soundness() {
+    prop_check(cfg(32), "index-removal", |g| {
+        let dim = 8;
+        let mut idx = HnswIndex::new(dim, HnswConfig::default());
+        let n = g.usize_in(5, 60);
+        let mut vecs = Vec::new();
+        for id in 0..n as u64 {
+            let v = l2_normalized(&g.vec_f32(dim, -1.0, 1.0));
+            idx.insert(id, &v);
+            vecs.push(v);
+        }
+        let mut removed = std::collections::HashSet::new();
+        for _ in 0..g.usize_in(1, n) {
+            let id = g.usize_below(n) as u64;
+            idx.remove(id);
+            removed.insert(id);
+        }
+        for _ in 0..5 {
+            let q = l2_normalized(&g.vec_f32(dim, -1.0, 1.0));
+            for r in idx.search(&q, n) {
+                if removed.contains(&r.id) {
+                    return Err(format!("removed id {} returned", r.id));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Cache lookups respect the threshold exactly: any returned hit has
+/// score >= θ, and raising θ can only shrink the hit set.
+#[test]
+fn prop_cache_threshold_monotone() {
+    prop_check(cfg(24), "cache-threshold-monotone", |g| {
+        let dim = 16;
+        let cache = SemanticCache::new(CacheConfig::default());
+        let n = g.usize_in(3, 80);
+        for i in 0..n {
+            let v = g.vec_f32(dim, -1.0, 1.0);
+            cache.insert(&format!("q{i}"), &v, "r");
+        }
+        for _ in 0..10 {
+            let q = g.vec_f32(dim, -1.0, 1.0);
+            let lo = g.f32_in(0.0, 0.9);
+            let hi = (lo + g.f32_in(0.01, 0.1)).min(1.0);
+            let hit_lo = cache.lookup_with_threshold(&q, lo);
+            let hit_hi = cache.lookup_with_threshold(&q, hi);
+            if let Some(h) = &hit_lo {
+                if h.score < lo {
+                    return Err(format!("hit below threshold: {} < {lo}", h.score));
+                }
+            }
+            if hit_hi.is_some() && hit_lo.is_none() {
+                return Err(format!("hit at θ={hi} but not at θ={lo}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Tokenizer invariants under arbitrary input bytes.
+#[test]
+fn prop_tokenizer_total() {
+    prop_check(cfg(256), "tokenizer-total", |g| {
+        let tok = Tokenizer::new(4096, 32);
+        let len = g.usize_below(120);
+        let text: String = (0..len)
+            .map(|_| {
+                let c = g.usize_below(128) as u8;
+                c as char
+            })
+            .collect();
+        let ids = tok.encode(&text);
+        if ids.len() != 32 {
+            return Err(format!("len {}", ids.len()));
+        }
+        if ids[0] != 1 {
+            return Err("missing CLS".into());
+        }
+        if ids.iter().any(|&i| i < 0 || i >= 4096) {
+            return Err("id out of range".into());
+        }
+        // Deterministic.
+        if tok.encode(&text) != ids {
+            return Err("non-deterministic".into());
+        }
+        Ok(())
+    });
+}
+
+/// JSON roundtrip for arbitrary generated values.
+#[test]
+fn prop_json_roundtrip() {
+    use semcache::json::{parse, to_string_pretty, Value};
+    fn gen_value(g: &mut semcache::testutil::Gen, depth: usize) -> Value {
+        match if depth == 0 { g.usize_below(4) } else { g.usize_below(6) } {
+            0 => Value::Null,
+            1 => Value::Bool(g.bool()),
+            2 => Value::Num((g.usize_below(10_000) as f64) / 8.0 - 100.0),
+            3 => Value::Str(g.word()),
+            4 => Value::Array((0..g.usize_below(4)).map(|_| gen_value(g, depth - 1)).collect()),
+            _ => Value::Object(
+                (0..g.usize_below(4)).map(|_| (g.word(), gen_value(g, depth - 1))).collect(),
+            ),
+        }
+    }
+    prop_check(cfg(256), "json-roundtrip", |g| {
+        let v = gen_value(g, 3);
+        let text = to_string_pretty(&v);
+        let back = parse(&text).map_err(|e| e.to_string())?;
+        if back != v {
+            return Err(format!("roundtrip mismatch: {text}"));
+        }
+        Ok(())
+    });
+}
