@@ -1,0 +1,24 @@
+# GPT Semantic Cache — build/verify entry points.
+#
+#   make verify      tier-1: build + tests + doc tests + smoke bench
+#   make build       release build of the Rust crate
+#   make test        unit + integration tests
+#   make bench-batch batch serving throughput baseline (full mode)
+#   make artifacts   lower the JAX/Pallas encoder to HLO (needs python/jax)
+
+.PHONY: verify build test bench-batch artifacts
+
+verify:
+	./rust/verify.sh
+
+build:
+	cd rust && cargo build --release
+
+test:
+	cd rust && cargo test -q
+
+bench-batch:
+	cd rust && cargo bench --bench bench_batch_throughput
+
+artifacts:
+	cd python && python -m compile.aot

@@ -14,11 +14,11 @@ use semcache::cache::CacheConfig;
 use semcache::coordinator::{Server, ServerConfig, TraceConfig, TraceRunner};
 use semcache::embedding::{BatcherConfig, EmbeddingService, Encoder, EncoderSpec, NativeEncoder};
 use semcache::llm::SimLlmConfig;
-use semcache::runtime::{artifacts_available, artifacts_dir, ModelParams};
+use semcache::runtime::{artifacts_dir, pjrt_ready, ModelParams};
 use semcache::workload::{Category, DatasetConfig, WorkloadGenerator};
 
-fn main() -> anyhow::Result<()> {
-    let encoder: Arc<dyn Encoder> = if artifacts_available() {
+fn main() -> semcache::error::Result<()> {
+    let encoder: Arc<dyn Encoder> = if pjrt_ready() {
         Arc::new(EmbeddingService::spawn(
             EncoderSpec::Pjrt(artifacts_dir()),
             BatcherConfig::default(),
@@ -38,6 +38,9 @@ fn main() -> anyhow::Result<()> {
             },
             llm: SimLlmConfig::default(),
             judge: Default::default(),
+            // This demo serves through TraceRunner (per-query handle());
+            // the batch-pipeline pool width is TraceConfig::workers below.
+            ..ServerConfig::default()
         },
     ));
 

@@ -8,11 +8,11 @@ use std::sync::Arc;
 
 use semcache::coordinator::{ReplySource, Server, ServerConfig};
 use semcache::embedding::{BatcherConfig, EmbeddingService, Encoder, EncoderSpec, NativeEncoder};
-use semcache::runtime::{artifacts_available, artifacts_dir, ModelParams};
+use semcache::runtime::{artifacts_dir, pjrt_ready, ModelParams};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> semcache::error::Result<()> {
     // 1. Pick an embedding backend (paper §2.2: pluggable models).
-    let encoder: Arc<dyn Encoder> = if artifacts_available() {
+    let encoder: Arc<dyn Encoder> = if pjrt_ready() {
         println!("using AOT JAX/Pallas encoder via PJRT");
         Arc::new(EmbeddingService::spawn(
             EncoderSpec::Pjrt(artifacts_dir()),

@@ -14,7 +14,7 @@ use std::sync::Arc;
 use semcache::cache::{CacheConfig, SemanticCache};
 use semcache::embedding::{BatcherConfig, EmbeddingService, Encoder, EncoderSpec, NativeEncoder};
 use semcache::llm::{SimLlm, SimLlmConfig};
-use semcache::runtime::{artifacts_available, artifacts_dir, ModelParams};
+use semcache::runtime::{artifacts_dir, pjrt_ready, ModelParams};
 
 /// A (simulated) RAG pipeline: retrieval + long-context generation. The
 /// latency model is deliberately heavier than plain chat (two stages).
@@ -30,8 +30,8 @@ impl RagPipeline {
     }
 }
 
-fn main() -> anyhow::Result<()> {
-    let encoder: Arc<dyn Encoder> = if artifacts_available() {
+fn main() -> semcache::error::Result<()> {
+    let encoder: Arc<dyn Encoder> = if pjrt_ready() {
         Arc::new(EmbeddingService::spawn(
             EncoderSpec::Pjrt(artifacts_dir()),
             BatcherConfig::default(),

@@ -1,0 +1,155 @@
+//! Batch serving throughput baseline: the sequential `handle()` loop vs
+//! the pooled `handle_batch()` pipeline on the same workload.
+//!
+//! This is the number future PRs race against. The simulated LLM runs
+//! with `real_sleep` enabled (misses block the calling thread like a
+//! real API call), so the pooled pipeline wins from both overlapped
+//! upstream waits and parallel embedding/ANN compute.
+//!
+//! Run: `cargo bench --bench bench_batch_throughput`
+//! Quick mode (CI / verify.sh): `SEMCACHE_BENCH_SMOKE=1 cargo bench --bench bench_batch_throughput`
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use semcache::coordinator::{ReplySource, Server, ServerConfig};
+use semcache::embedding::NativeEncoder;
+use semcache::llm::SimLlmConfig;
+use semcache::runtime::ModelParams;
+use semcache::workload::{Category, DatasetConfig, QaPair, TestQuery, WorkloadGenerator};
+
+struct BenchSetup {
+    base: Vec<QaPair>,
+    trace: Vec<TestQuery>,
+    params: ModelParams,
+}
+
+fn smoke() -> bool {
+    std::env::var("SEMCACHE_BENCH_SMOKE").is_ok()
+}
+
+fn setup() -> BenchSetup {
+    // A mid-size encoder keeps one forward pass in the low milliseconds
+    // so the bench finishes quickly while embedding still dominates the
+    // hit path (the regime the serving pipeline is built for).
+    let mut params = ModelParams::default();
+    if smoke() {
+        params.layers = 1;
+        params.vocab_size = 1024;
+        params.dim = 96;
+        params.hidden = 192;
+        params.heads = 4;
+    } else {
+        params.layers = 2;
+        params.vocab_size = 2048;
+        params.dim = 192;
+        params.hidden = 384;
+        params.heads = 6;
+    }
+    let cfg = if smoke() { DatasetConfig::tiny() } else { DatasetConfig::small() };
+    let ds = WorkloadGenerator::new(0xBA7C4).generate(&cfg);
+    let base: Vec<QaPair> = ds
+        .base_for(Category::OrderShipping)
+        .take(if smoke() { 40 } else { 150 })
+        .cloned()
+        .collect();
+    // Replay the category's test queries a few times: the first pass
+    // seeds the novel clusters, repeats hit — a serving-shaped mix. The
+    // smoke trace repeats more so each arm has enough work for the
+    // timing to be meaningful.
+    let one_pass: Vec<TestQuery> = ds.tests_for(Category::OrderShipping).cloned().collect();
+    let passes = if smoke() { 12 } else { 3 };
+    let trace: Vec<TestQuery> =
+        std::iter::repeat(one_pass).take(passes).flatten().collect();
+    BenchSetup { base, trace, params }
+}
+
+/// Fresh identically-configured server (each arm replays the same
+/// workload from the same initial cache state).
+fn build_server(setup: &BenchSetup, workers: usize) -> Arc<Server> {
+    let server = Arc::new(Server::new(
+        Arc::new(NativeEncoder::new(setup.params.clone())),
+        ServerConfig {
+            llm: SimLlmConfig {
+                // Modest but real blocking upstream: ~5-20 ms per miss.
+                rtt_ms: 4.0,
+                ms_per_token: 0.05,
+                jitter_sigma: 0.2,
+                real_sleep: true,
+                ..SimLlmConfig::default()
+            },
+            workers,
+            ..ServerConfig::default()
+        },
+    ));
+    server.populate(&setup.base);
+    server
+}
+
+fn main() {
+    let setup = setup();
+    let n = setup.trace.len();
+    println!(
+        "[workload: {} cached pairs, {} queries ({} mode); simulated LLM sleeps on miss]",
+        setup.base.len(),
+        n,
+        if smoke() { "smoke" } else { "full" },
+    );
+    let texts: Vec<&str> = setup.trace.iter().map(|q| q.text.as_str()).collect();
+    let clusters: Vec<Option<u64>> = setup.trace.iter().map(|_| None).collect();
+
+    // --- arm 1: sequential handle() loop (the pre-batch serving path).
+    let server = build_server(&setup, 1);
+    let t0 = Instant::now();
+    let mut hits = 0usize;
+    for t in &texts {
+        if matches!(server.handle(t, None).source, ReplySource::Cache { .. }) {
+            hits += 1;
+        }
+    }
+    let seq_secs = t0.elapsed().as_secs_f64();
+    let seq_qps = n as f64 / seq_secs;
+    println!(
+        "{:<44} {:>10.0} queries/s  ({} queries in {:.2}s, {} hits)",
+        "sequential handle() loop", seq_qps, n, seq_secs, hits
+    );
+
+    // --- arm 2..: pooled handle_batch() at increasing widths.
+    let mut qps_at_4 = 0.0;
+    for workers in [1usize, 2, 4, 8] {
+        let server = build_server(&setup, workers);
+        let t0 = Instant::now();
+        let replies = server.handle_batch_clustered(&texts, &clusters);
+        let secs = t0.elapsed().as_secs_f64();
+        let qps = n as f64 / secs;
+        if workers == 4 {
+            qps_at_4 = qps;
+        }
+        let hits = replies
+            .iter()
+            .filter(|r| matches!(r.source, ReplySource::Cache { .. }))
+            .count();
+        let m = server.metrics().snapshot();
+        println!(
+            "{:<44} {:>10.0} queries/s  ({:.2}s, {} hits, {:.2}x vs sequential)",
+            format!("handle_batch, {workers} workers"),
+            qps,
+            secs,
+            hits,
+            qps / seq_qps,
+        );
+        println!(
+            "{:<44} embed {:.1} ms  merge {:.3} ms  total {:.1} ms",
+            "  per-batch stage latency:",
+            m.lat_batch_embed.mean,
+            m.lat_batch_merge.mean,
+            m.lat_batch_total.mean,
+        );
+    }
+
+    println!(
+        "\nbatch speedup (4 workers vs sequential): {:.2}x  (target: >= 2x)",
+        qps_at_4 / seq_qps
+    );
+    println!("(SEMCACHE_BENCH_SMOKE=1 for the quick CI variant)");
+}

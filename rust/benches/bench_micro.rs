@@ -8,7 +8,7 @@ mod common;
 use semcache::cache::{CacheConfig, SemanticCache};
 use semcache::embedding::{Encoder, NativeEncoder, PjrtEncoder};
 use semcache::index::{FlatIndex, HnswConfig, HnswIndex, VectorIndex};
-use semcache::runtime::{artifacts_available, artifacts_dir, ModelParams};
+use semcache::runtime::{artifacts_dir, pjrt_ready, ModelParams};
 use semcache::store::{KvStore, StoreConfig};
 use semcache::tokenizer::Tokenizer;
 use semcache::util::{dot, Rng};
@@ -98,7 +98,7 @@ fn main() {
     });
 
     // --- PJRT encoder (production path) ---
-    if artifacts_available() {
+    if pjrt_ready() {
         let pjrt = PjrtEncoder::from_artifacts_dir(&artifacts_dir()).expect("artifacts");
         bench("pjrt encoder b=1", 2, 20, || {
             std::hint::black_box(

@@ -84,12 +84,14 @@ pub struct CacheHit {
     pub id: u64,
 }
 
-/// Dimension-partitioned semantic cache. All methods take `&self`; each
-/// partition is internally locked, and lookups only hold the lock for the
-/// ANN search (sub-millisecond).
+/// Dimension-partitioned semantic cache. All methods take `&self`; the
+/// partition map and each partition's ANN index are behind read-mostly
+/// `RwLock`s, so concurrent lookups (the batch serving fan-out) share
+/// the locks and search in parallel; only inserts, tombstoning, and
+/// rebuilds serialize on the write side.
 pub struct SemanticCache {
     cfg: CacheConfig,
-    partitions: std::sync::Mutex<HashMap<usize, Arc<Partition>>>,
+    partitions: std::sync::RwLock<HashMap<usize, Arc<Partition>>>,
     clock: Arc<dyn Clock>,
 }
 
@@ -99,7 +101,7 @@ impl SemanticCache {
     }
 
     pub fn with_clock(cfg: CacheConfig, clock: Arc<dyn Clock>) -> Self {
-        Self { cfg, partitions: std::sync::Mutex::new(HashMap::new()), clock }
+        Self { cfg, partitions: std::sync::RwLock::new(HashMap::new()), clock }
     }
 
     pub fn config(&self) -> &CacheConfig {
@@ -107,13 +109,24 @@ impl SemanticCache {
     }
 
     /// The partition for a given embedding size, created on first use
-    /// (paper §2.3: "the cache is partitioned based on the embedding size").
+    /// (paper §2.3: "the cache is partitioned based on the embedding
+    /// size"). Double-checked read-then-write: the common case (the
+    /// partition exists) never takes the exclusive lock.
     pub fn partition(&self, dim: usize) -> Arc<Partition> {
-        let mut parts = self.partitions.lock().unwrap();
+        if let Some(p) = self.partitions.read().unwrap().get(&dim) {
+            return p.clone();
+        }
+        let mut parts = self.partitions.write().unwrap();
         parts
             .entry(dim)
             .or_insert_with(|| Arc::new(Partition::new(dim, &self.cfg, self.clock.clone())))
             .clone()
+    }
+
+    /// The partition for `dim` if one has been populated, without the
+    /// side effect of creating it.
+    pub fn partition_if_exists(&self, dim: usize) -> Option<Arc<Partition>> {
+        self.partitions.read().unwrap().get(&dim).cloned()
     }
 
     /// Lookup with the configured threshold.
@@ -122,8 +135,14 @@ impl SemanticCache {
     }
 
     /// Lookup with an explicit threshold (threshold-sweep experiments).
+    ///
+    /// Empty embeddings and unpopulated partitions miss cleanly (no
+    /// partition is allocated as a lookup side effect).
     pub fn lookup_with_threshold(&self, embedding: &[f32], threshold: f32) -> Option<CacheHit> {
-        self.partition(embedding.len()).lookup(embedding, threshold)
+        if embedding.is_empty() {
+            return None;
+        }
+        self.partition_if_exists(embedding.len())?.lookup(embedding, threshold)
     }
 
     /// Insert a question/response pair under its embedding.
@@ -138,13 +157,18 @@ impl SemanticCache {
         )
     }
 
+    /// Insert an entry; returns its id. Empty embeddings are rejected as
+    /// a no-op returning 0 (never a real id — ids start at 1).
     pub fn insert_entry(&self, embedding: &[f32], entry: CachedEntry) -> u64 {
+        if embedding.is_empty() {
+            return 0;
+        }
         self.partition(embedding.len()).insert(embedding, entry)
     }
 
     /// Total live entries across partitions.
     pub fn len(&self) -> usize {
-        let parts = self.partitions.lock().unwrap();
+        let parts = self.partitions.read().unwrap();
         parts.values().map(|p| p.len()).sum()
     }
 
@@ -157,7 +181,7 @@ impl SemanticCache {
     /// rebuilt-partition count). Driven by the coordinator's timer.
     pub fn housekeep(&self) -> (usize, usize) {
         let parts: Vec<Arc<Partition>> =
-            self.partitions.lock().unwrap().values().cloned().collect();
+            self.partitions.read().unwrap().values().cloned().collect();
         let mut expired = 0;
         let mut rebuilt = 0;
         for p in parts {
@@ -240,6 +264,23 @@ mod tests {
         // but len() must be 0 either way.
         let _ = expired;
         assert_eq!(cache.len(), 0);
+    }
+
+    #[test]
+    fn empty_embedding_and_unpopulated_partition_miss_cleanly() {
+        let cache = SemanticCache::new(CacheConfig::default());
+        // Empty embedding: lookup misses, insert is a rejected no-op.
+        assert!(cache.lookup(&[]).is_none());
+        assert_eq!(cache.insert("q", &[], "r"), 0);
+        assert_eq!(cache.len(), 0);
+        // Lookup against a dimension that was never populated must miss
+        // without allocating a partition as a side effect.
+        assert!(cache.lookup(&unit(24, 0)).is_none());
+        assert!(cache.partition_if_exists(24).is_none());
+        // A real insert then behaves normally.
+        cache.insert("q", &unit(24, 0), "r");
+        assert!(cache.partition_if_exists(24).is_some());
+        assert!(cache.lookup(&unit(24, 0)).is_some());
     }
 
     #[test]

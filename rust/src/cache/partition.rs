@@ -6,9 +6,13 @@
 //! — and the housekeeping rebuild reclaims the slots. This mirrors the
 //! paper's Redis-TTL + ANN-index split, where Redis expiry is the source
 //! of truth (§2.7).
+//!
+//! Concurrency: the ANN index sits behind a read-mostly `RwLock`, so any
+//! number of batch workers can search one partition in parallel; only
+//! inserts, tombstoning of dead ids, and rebuilds take the write lock.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 
 use crate::index::{FlatIndex, HnswIndex, VectorIndex};
 use crate::store::{Clock, KvStore, StoreConfig};
@@ -17,7 +21,9 @@ use super::{CacheConfig, CacheHit, CachedEntry, IndexKind};
 
 pub struct Partition {
     dim: usize,
-    index: Mutex<Box<dyn VectorIndex>>,
+    /// Read-mostly: `search` under the shared lock, mutation under the
+    /// exclusive lock.
+    index: RwLock<Box<dyn VectorIndex>>,
     store: KvStore<CachedEntry>,
     next_id: AtomicU64,
     /// Embeddings of live entries, kept for rebuilds (id -> embedding).
@@ -45,7 +51,7 @@ impl Partition {
         );
         Self {
             dim,
-            index: Mutex::new(index),
+            index: RwLock::new(index),
             store,
             next_id: AtomicU64::new(1),
             embeddings: Mutex::new(std::collections::HashMap::new()),
@@ -60,7 +66,8 @@ impl Partition {
     pub fn lookup(&self, embedding: &[f32], threshold: f32) -> Option<CacheHit> {
         assert_eq!(embedding.len(), self.dim, "embedding dim mismatch");
         let neighbors = {
-            let index = self.index.lock().unwrap();
+            // Shared lock: concurrent lookups search in parallel.
+            let index = self.index.read().unwrap();
             index.search(embedding, self.top_k)
         };
         for n in neighbors {
@@ -74,7 +81,7 @@ impl Partition {
                 None => {
                     // Expired/evicted in the store: tombstone the index id
                     // so future searches skip it; rebuild reclaims later.
-                    self.index.lock().unwrap().remove(n.id);
+                    self.index.write().unwrap().remove(n.id);
                     self.embeddings.lock().unwrap().remove(&n.id);
                 }
             }
@@ -87,7 +94,7 @@ impl Partition {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.store.set(&key(id), entry);
         self.embeddings.lock().unwrap().insert(id, embedding.to_vec());
-        self.index.lock().unwrap().insert(id, embedding);
+        self.index.write().unwrap().insert(id, embedding);
         id
     }
 
@@ -103,7 +110,7 @@ impl Partition {
 
     /// Tombstone fraction of the index (0 when empty).
     pub fn garbage_ratio(&self) -> f64 {
-        let index = self.index.lock().unwrap();
+        let index = self.index.read().unwrap();
         let live = self.store.len();
         let slots = index.len().max(live);
         // Index len() counts non-tombstoned nodes; entries expired in the
@@ -128,7 +135,7 @@ impl Partition {
                 }
             });
         }
-        let mut index = self.index.lock().unwrap();
+        let mut index = self.index.write().unwrap();
         if index.len() == 0 && live.is_empty() {
             return false;
         }

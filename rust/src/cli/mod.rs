@@ -5,7 +5,7 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{bail, Result};
+use crate::error::{anyhow, bail, Result};
 
 /// Parsed command line.
 #[derive(Debug, Clone, Default)]
@@ -55,7 +55,7 @@ impl Args {
             None => Ok(default),
             Some(raw) => raw
                 .parse()
-                .map_err(|_| anyhow::anyhow!("invalid value for --{key}: '{raw}'")),
+                .map_err(|_| anyhow!("invalid value for --{key}: '{raw}'")),
         }
     }
 

@@ -13,7 +13,7 @@ pub use toml::{parse_toml, TomlError};
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use crate::error::{bail, Context, Result};
 
 /// Full system configuration. Field groups mirror DESIGN.md §4 modules.
 #[derive(Debug, Clone, PartialEq)]

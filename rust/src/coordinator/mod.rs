@@ -8,6 +8,13 @@
 //!                                        miss ──► SimLlm ──► insert ──► reply
 //! ```
 //!
+//! Two front-ends share that workflow: [`Server::handle`] serves one
+//! query on the calling thread, and [`Server::handle_batch`] pipelines a
+//! whole batch — chunked `encode_batch` embedding, a scoped-thread
+//! worker pool fanning ANN lookups out over the cache's read-mostly
+//! `RwLock` shards, and a deterministic in-input-order merge, with
+//! per-stage latency recorded in [`crate::metrics::Metrics`].
+//!
 //! Latency accounting mixes *measured* wall-clock for everything the
 //! Rust process does (tokenize, encode, search, insert) with the
 //! *simulated* upstream latency for LLM calls, so Figure 3's
@@ -21,3 +28,7 @@ mod trace;
 
 pub use server::{Reply, ReplySource, Server, ServerConfig};
 pub use trace::{TraceConfig, TraceReport, TraceRunner};
+
+/// The serving coordinator — alias for [`Server`], matching the
+/// coordinator-centric naming used in the architecture docs.
+pub type Coordinator = Server;

@@ -1,7 +1,10 @@
-//! The `Server`: cache-fronted query handling.
+//! The `Server`: cache-fronted query handling — one query at a time via
+//! [`Server::handle`], or concurrently via the batch serving pipeline
+//! [`Server::handle_batch`] (chunked batch embedding, parallel ANN
+//! fan-out over a scoped worker pool, deterministic in-order merge).
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
@@ -16,6 +19,8 @@ pub struct ServerConfig {
     pub cache: CacheConfig,
     pub llm: SimLlmConfig,
     pub judge: JudgeConfig,
+    /// Worker threads used by [`Server::handle_batch`].
+    pub workers: usize,
 }
 
 impl Default for ServerConfig {
@@ -24,9 +29,17 @@ impl Default for ServerConfig {
             cache: CacheConfig::default(),
             llm: SimLlmConfig::default(),
             judge: JudgeConfig::default(),
+            workers: 4,
         }
     }
 }
+
+/// Upper bound on texts per unit of batch work: each worker encodes one
+/// chunk through `Encoder::encode_batch` (amortizing the embedding call
+/// exactly like [`Server::populate`] does) before fanning its lookups
+/// out. Small batches use smaller chunks so the pool still spreads the
+/// work across every worker.
+const BATCH_CHUNK: usize = 32;
 
 /// Where a reply came from.
 #[derive(Debug, Clone, PartialEq)]
@@ -61,6 +74,8 @@ pub struct Server {
     llm: SimLlm,
     judge: Judge,
     metrics: Arc<Metrics>,
+    /// Worker-pool width for the batch pipeline.
+    workers: usize,
     /// Ground-truth answers by cluster (populated from the workload) so
     /// simulated LLM calls return the *right* answer for their cluster.
     ground_truth: RwLock<HashMap<u64, String>>,
@@ -77,6 +92,7 @@ impl Server {
             llm: SimLlm::new(cfg.llm),
             judge: Judge::new(cfg.judge),
             metrics: Arc::new(Metrics::new()),
+            workers: cfg.workers.max(1),
             ground_truth: RwLock::new(HashMap::new()),
             threshold_override: Mutex::new(None),
             housekeeping_stop: Arc::new(AtomicBool::new(false)),
@@ -153,7 +169,6 @@ impl Server {
     /// callers pass `None`.
     pub fn handle(&self, text: &str, cluster: Option<u64>) -> Reply {
         self.metrics.record_request();
-        let threshold = self.effective_threshold();
 
         // 1. Embed (measured).
         let t0 = Instant::now();
@@ -161,6 +176,21 @@ impl Server {
         let embed_ms = t0.elapsed().as_secs_f64() * 1e3;
         self.metrics.record_embedding(crate::llm::approx_tokens(text));
         self.metrics.observe_embed_ms(embed_ms);
+
+        self.serve_embedded(text, cluster, &embedding, embed_ms)
+    }
+
+    /// Steps 2..3 of the workflow for a query whose embedding is already
+    /// computed (`embed_ms` is the — possibly amortized — cost attributed
+    /// to it). Shared by [`Server::handle`] and the batch workers.
+    fn serve_embedded(
+        &self,
+        text: &str,
+        cluster: Option<u64>,
+        embedding: &[f32],
+        embed_ms: f64,
+    ) -> Reply {
+        let threshold = self.effective_threshold();
 
         // 2. ANN lookup (measured).
         let t1 = Instant::now();
@@ -240,6 +270,112 @@ impl Server {
             judged_positive: None,
             matched_cluster: None,
         }
+    }
+
+    /// Serve a batch of queries concurrently; replies come back in input
+    /// order. Pipelined equivalent of a sequential
+    /// `texts.iter().map(|t| self.handle(t, None))` loop, with one
+    /// caveat: in-flight misses are not deduplicated, so if a batch
+    /// contains duplicate (or near-duplicate) *novel* queries, workers
+    /// racing on them may each call the LLM and insert their own entry
+    /// — where the sequential loop would miss once and then hit. See
+    /// [`Server::handle_batch_with_workers`] for the pipeline stages.
+    pub fn handle_batch(&self, texts: &[&str]) -> Vec<Reply> {
+        self.handle_batch_clustered(texts, &vec![None; texts.len()])
+    }
+
+    /// [`Server::handle_batch`] with per-query ground-truth clusters
+    /// (evaluation traces). `clusters` must be as long as `texts`.
+    pub fn handle_batch_clustered(&self, texts: &[&str], clusters: &[Option<u64>]) -> Vec<Reply> {
+        self.handle_batch_with_workers(texts, clusters, self.workers)
+    }
+
+    /// The batch serving pipeline with an explicit pool width:
+    ///
+    /// 1. **Chunked embedding** — the input is split into work units of
+    ///    up to `BATCH_CHUNK` queries (shrunk when the batch is small,
+    ///    so every worker still gets work); each worker encodes a whole
+    ///    unit through `Encoder::encode_batch`, amortizing the embedding
+    ///    call the same way [`Server::populate`] does.
+    /// 2. **Concurrent fan-out** — `workers` scoped threads claim units
+    ///    off an atomic cursor and run lookup → (miss: LLM + insert) per
+    ///    query; the cache's read-mostly `RwLock` sharding lets all
+    ///    workers search one partition's ANN index in parallel.
+    /// 3. **Deterministic merge** — replies are reassembled in input
+    ///    order regardless of which worker finished first.
+    ///
+    /// Per-stage latency lands in [`Metrics`]: per-query embed/index/llm
+    /// histograms as usual, plus per-batch `lat_batch_embed` (summed
+    /// chunk embedding wall), `lat_batch_merge`, and `lat_batch_total`.
+    pub fn handle_batch_with_workers(
+        &self,
+        texts: &[&str],
+        clusters: &[Option<u64>],
+        workers: usize,
+    ) -> Vec<Reply> {
+        assert_eq!(texts.len(), clusters.len(), "one cluster slot per query");
+        if texts.is_empty() {
+            return Vec::new();
+        }
+        let t_batch = Instant::now();
+        // Shrink the chunk so a small batch still spans the whole pool
+        // (32 queries at 8 workers -> 4-query chunks, not one chunk).
+        let workers = workers.max(1).min(texts.len());
+        let chunk_size = BATCH_CHUNK.min(texts.len().div_ceil(workers)).max(1);
+        let n_chunks = texts.len().div_ceil(chunk_size);
+        let next_chunk = AtomicUsize::new(0);
+        let slots: Mutex<Vec<(usize, Reply)>> = Mutex::new(Vec::with_capacity(texts.len()));
+        let embed_wall_ms = Mutex::new(0.0f64);
+
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                let next_chunk = &next_chunk;
+                let slots = &slots;
+                let embed_wall_ms = &embed_wall_ms;
+                scope.spawn(move || loop {
+                    let c = next_chunk.fetch_add(1, Ordering::Relaxed);
+                    if c >= n_chunks {
+                        break;
+                    }
+                    let start = c * chunk_size;
+                    let end = (start + chunk_size).min(texts.len());
+                    let chunk = &texts[start..end];
+
+                    // Stage 1: amortized embedding for the whole unit.
+                    let t0 = Instant::now();
+                    let embeddings = self.encoder.encode_batch(chunk);
+                    let chunk_ms = t0.elapsed().as_secs_f64() * 1e3;
+                    *embed_wall_ms.lock().unwrap() += chunk_ms;
+                    let per_query_ms = chunk_ms / chunk.len() as f64;
+
+                    // Stage 2: lookup / miss fan-out.
+                    let mut done = Vec::with_capacity(chunk.len());
+                    for (off, embedding) in embeddings.iter().enumerate() {
+                        let i = start + off;
+                        self.metrics.record_request();
+                        self.metrics.record_embedding(crate::llm::approx_tokens(texts[i]));
+                        self.metrics.observe_embed_ms(per_query_ms);
+                        let reply =
+                            self.serve_embedded(texts[i], clusters[i], embedding, per_query_ms);
+                        done.push((i, reply));
+                    }
+                    slots.lock().unwrap().extend(done);
+                });
+            }
+        });
+
+        // Stage 3: deterministic in-order merge.
+        let t_merge = Instant::now();
+        let mut slots = slots.into_inner().unwrap();
+        slots.sort_by_key(|(i, _)| *i);
+        debug_assert_eq!(slots.len(), texts.len());
+        let replies: Vec<Reply> = slots.into_iter().map(|(_, r)| r).collect();
+
+        self.metrics.record_batch(texts.len() as u64);
+        self.metrics.observe_batch_embed_ms(embed_wall_ms.into_inner().unwrap());
+        self.metrics.observe_batch_merge_ms(t_merge.elapsed().as_secs_f64() * 1e3);
+        self.metrics.observe_batch_total_ms(t_batch.elapsed().as_secs_f64() * 1e3);
+        replies
     }
 
     /// Spawn the housekeeping thread (TTL sweep + index rebuild check).
@@ -366,6 +502,161 @@ mod tests {
         let guard = s.start_housekeeping(Duration::from_millis(5));
         std::thread::sleep(Duration::from_millis(30));
         drop(guard); // must join cleanly
+    }
+
+    #[test]
+    fn handle_batch_empty_and_order() {
+        let s = server();
+        assert!(s.handle_batch(&[]).is_empty());
+        // Populate distinct QA pairs, then batch-query exact questions in
+        // a known order: reply i must carry answer i.
+        let pairs: Vec<QaPair> = (0..50)
+            .map(|i| QaPair {
+                cluster: i,
+                answer_group: i,
+                category: crate::workload::Category::PythonBasics,
+                question: format!("question about topic number {i} alpha beta"),
+                answer: format!("answer payload {i}"),
+            })
+            .collect();
+        s.populate(&pairs);
+        let texts: Vec<String> =
+            (0..50).rev().map(|i| format!("question about topic number {i} alpha beta")).collect();
+        let refs: Vec<&str> = texts.iter().map(|t| t.as_str()).collect();
+        let replies = s.handle_batch(&refs);
+        assert_eq!(replies.len(), 50);
+        for (k, r) in replies.iter().enumerate() {
+            let i = 49 - k; // texts were reversed
+            assert!(matches!(r.source, ReplySource::Cache { .. }), "query {k} missed");
+            assert_eq!(r.response, format!("answer payload {i}"), "reply out of order");
+        }
+        let m = s.metrics().snapshot();
+        assert_eq!(m.batches, 1);
+        assert_eq!(m.batch_queries, 50);
+        assert_eq!(m.requests, 50);
+        assert_eq!(m.cache_hits, 50);
+        assert!(m.lat_batch_total.n == 1 && m.lat_batch_embed.n == 1);
+    }
+
+    #[test]
+    fn handle_batch_agrees_with_sequential_handles() {
+        // Same trace served by two identically-seeded servers: the batch
+        // pipeline must agree with N sequential handle() calls on source
+        // and response for every index. Ground truth makes miss responses
+        // deterministic; fresh queries are pairwise-distinct so batch
+        // interleaving cannot turn a miss into a hit.
+        let build = || {
+            let s = server();
+            let cached: Vec<QaPair> = (0..20)
+                .map(|i| QaPair {
+                    cluster: i,
+                    answer_group: i,
+                    category: crate::workload::Category::PythonBasics,
+                    question: format!("how do i configure gadget model {i} firmware"),
+                    answer: format!("cached answer {i}"),
+                })
+                .collect();
+            // Ground truth for the novel clusters too, so misses insert a
+            // deterministic response; only `cached` is in the cache.
+            let novel: Vec<QaPair> = (0..20)
+                .map(|j| QaPair {
+                    cluster: 1000 + j,
+                    answer_group: 1000 + j,
+                    category: crate::workload::Category::PythonBasics,
+                    question: format!("unique{j} zebra{j} quasar{j} lantern{j}"),
+                    answer: format!("novel answer {j}"),
+                })
+                .collect();
+            s.populate(&cached);
+            let all = Dataset {
+                base: cached.iter().chain(&novel).cloned().collect(),
+                tests: Vec::new(),
+            };
+            s.register_ground_truth(&all);
+            s
+        };
+
+        // Trace: paraphrases of cached questions interleaved with novel ones.
+        let mut texts = Vec::new();
+        let mut clusters = Vec::new();
+        for k in 0..20u64 {
+            texts.push(format!("how can i configure gadget model {k} firmware"));
+            clusters.push(Some(k));
+            texts.push(format!("unique{k} zebra{k} quasar{k} lantern{k}"));
+            clusters.push(Some(1000 + k));
+        }
+        let refs: Vec<&str> = texts.iter().map(|t| t.as_str()).collect();
+
+        let sequential = build();
+        let seq: Vec<Reply> =
+            refs.iter().zip(&clusters).map(|(t, c)| sequential.handle(t, *c)).collect();
+        let batched = build();
+        let bat = batched.handle_batch_with_workers(&refs, &clusters, 4);
+
+        assert_eq!(seq.len(), bat.len());
+        for (i, (a, b)) in seq.iter().zip(&bat).enumerate() {
+            assert_eq!(
+                matches!(a.source, ReplySource::Cache { .. }),
+                matches!(b.source, ReplySource::Cache { .. }),
+                "source diverged at {i}: {:?} vs {:?}",
+                a.source,
+                b.source
+            );
+            assert_eq!(a.response, b.response, "response diverged at {i}");
+            assert_eq!(a.judged_positive, b.judged_positive, "verdict diverged at {i}");
+        }
+        assert_eq!(
+            sequential.metrics().snapshot().cache_hits,
+            batched.metrics().snapshot().cache_hits
+        );
+    }
+
+    #[test]
+    fn handle_batch_race_free_under_concurrent_populate() {
+        // Multi-writer populate racing concurrent batch lookups: no
+        // panics/deadlocks, and every entry is present afterwards.
+        let s = server();
+        let chunks: Vec<Vec<QaPair>> = (0..4)
+            .map(|w| {
+                (0..25)
+                    .map(|i| {
+                        let id = (w * 100 + i) as u64;
+                        QaPair {
+                            cluster: id,
+                            answer_group: id,
+                            category: crate::workload::Category::PythonBasics,
+                            question: format!("writer {w} item {i} gamma delta epsilon"),
+                            answer: format!("a{id}"),
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        std::thread::scope(|scope| {
+            for chunk in &chunks {
+                let s = s.clone();
+                scope.spawn(move || s.populate(chunk));
+            }
+            for t in 0..2 {
+                let s = s.clone();
+                scope.spawn(move || {
+                    let texts: Vec<String> =
+                        (0..40).map(|i| format!("reader {t} probe {i} omega")).collect();
+                    let refs: Vec<&str> = texts.iter().map(|x| x.as_str()).collect();
+                    let replies = s.handle_batch(&refs);
+                    assert_eq!(replies.len(), 40);
+                });
+            }
+        });
+        // All 100 populated entries must be retrievable exactly.
+        for chunk in &chunks {
+            for p in chunk {
+                let e = s.encoder().encode_text(&p.question);
+                let hit = s.cache().lookup(&e).expect("populated entry must hit");
+                assert_eq!(hit.entry.cluster, p.answer_group);
+            }
+        }
+        assert!(s.cache().len() >= 100, "populated entries lost");
     }
 
     #[test]

@@ -2,19 +2,29 @@
 //!
 //! The paper supports pluggable embedding backends (OpenAI API or local
 //! ONNX models); we mirror that with the [`Encoder`] trait and two
-//! implementations:
+//! backends:
 //!
-//! * [`PjrtEncoder`] — the production path: runs the AOT-compiled JAX/
-//!   Pallas encoder through PJRT, weights resident on device, one
-//!   executable per compiled batch size;
-//! * [`NativeEncoder`] — a pure-Rust forward pass of the *same* model
-//!   (same generated weights, same formulas), used when artifacts are not
-//!   built and as the parity oracle in `rust/tests/parity.rs`.
+//! * [`NativeEncoder`] — a pure-Rust forward pass, implements
+//!   [`Encoder`] directly; used when artifacts are not built and as the
+//!   parity oracle in `rust/tests/parity.rs`;
+//! * [`PjrtEncoder`] — the artifact path: runs the AOT-compiled JAX/
+//!   Pallas encoder (the *same* model: same generated weights, same
+//!   formulas) through PJRT, weights resident on device, one executable
+//!   per compiled batch size. PJRT objects are `Rc`-based (`!Send`), so
+//!   `PjrtEncoder` does **not** implement [`Encoder`] itself — it lives
+//!   on the [`EmbeddingService`] batcher thread, whose clone-cheap
+//!   [`EmbeddingHandle`] implements [`Encoder`] for the rest of the
+//!   system. Compiled in only with the `pjrt` cargo feature; the default
+//!   build ships a stub whose constructor returns an error.
 //!
-//! Both produce L2-normalized `dim`-dimensional vectors and agree to
-//! ~1e-4 max abs difference.
+//! Both backends produce L2-normalized `dim`-dimensional vectors and
+//! agree to ~1e-4 max abs difference.
 
 mod native;
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(not(feature = "pjrt"))]
+#[path = "pjrt_stub.rs"]
 mod pjrt;
 mod service;
 mod weights;

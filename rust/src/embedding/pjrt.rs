@@ -8,7 +8,7 @@
 
 use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use crate::error::{bail, Context, Result};
 
 use crate::runtime::{ModelParams, Runtime};
 use crate::tokenizer::Tokenizer;

@@ -1,0 +1,66 @@
+//! Stub `PjrtEncoder` compiled when the `pjrt` feature is off (the
+//! default in the offline build). [`PjrtEncoder::from_artifacts_dir`]
+//! returns a descriptive error, so callers that gate on
+//! [`crate::runtime::pjrt_enabled`] (or handle the error) fall back to
+//! the native encoder; the instance methods are statically unreachable.
+
+use std::path::Path;
+
+use crate::error::{bail, Result};
+use crate::runtime::ModelParams;
+use crate::tokenizer::Tokenizer;
+
+const UNAVAILABLE: &str = "semcache was built without the `pjrt` feature: \
+     the PJRT encoder is unavailable (rebuild with `--features pjrt` and a \
+     vendored `xla` crate, or use the native encoder)";
+
+/// Stub of the AOT-artifact encoder.
+pub struct PjrtEncoder {
+    never: std::convert::Infallible,
+}
+
+impl PjrtEncoder {
+    /// Always fails: the xla-backed encoder is not compiled in.
+    pub fn from_artifacts_dir(_dir: &Path) -> Result<Self> {
+        bail!("{}", UNAVAILABLE)
+    }
+
+    pub fn dim(&self) -> usize {
+        match self.never {}
+    }
+
+    pub fn params(&self) -> &ModelParams {
+        match self.never {}
+    }
+
+    pub fn tokenizer(&self) -> &Tokenizer {
+        match self.never {}
+    }
+
+    pub fn pick_batch(&self, _n: usize) -> usize {
+        match self.never {}
+    }
+
+    pub fn max_batch(&self) -> usize {
+        match self.never {}
+    }
+
+    pub fn encode_batch(&self, _texts: &[&str]) -> Result<Vec<Vec<f32>>> {
+        match self.never {}
+    }
+
+    pub fn encode_text(&self, _text: &str) -> Result<Vec<f32>> {
+        match self.never {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_reports_missing_feature() {
+        let err = PjrtEncoder::from_artifacts_dir(Path::new("artifacts")).unwrap_err();
+        assert!(format!("{err}").contains("pjrt"), "{err}");
+    }
+}

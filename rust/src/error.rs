@@ -1,0 +1,237 @@
+//! Minimal error type for the offline build (no `anyhow`).
+//!
+//! Mirrors the small slice of the `anyhow` API this crate uses: a
+//! string-chained [`Error`], the [`Result`] alias, the [`bail!`] /
+//! [`anyhow!`] macros, and the [`Context`] extension trait for `Result`
+//! and `Option`. Contexts stack outermost-first; `{e}` prints the
+//! outermost message and `{e:#}` prints the full chain separated by
+//! `": "` (the same convention `anyhow` uses).
+//!
+//! ```
+//! use semcache::error::{Context, Result};
+//!
+//! fn parse(raw: &str) -> Result<u32> {
+//!     raw.parse::<u32>().with_context(|| format!("parsing '{raw}'"))
+//! }
+//! let err = parse("abc").unwrap_err();
+//! assert!(format!("{err:#}").starts_with("parsing 'abc': "));
+//! ```
+
+use std::fmt;
+
+/// A chain of error messages, outermost context first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+/// Crate-wide result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from a single message.
+    pub fn msg(msg: impl fmt::Display) -> Self {
+        Self { chain: vec![msg.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context(mut self, msg: impl fmt::Display) -> Self {
+        self.chain.insert(0, msg.to_string());
+        self
+    }
+
+    /// The messages, outermost first.
+    pub fn chain(&self) -> &[String] {
+        &self.chain
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(self.chain.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))?;
+        for cause in self.chain.iter().skip(1) {
+            write!(f, "\n  caused by: {cause}")?;
+        }
+        Ok(())
+    }
+}
+
+impl From<String> for Error {
+    fn from(s: String) -> Self {
+        Error::msg(s)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Self {
+        Error::msg(s)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::msg(e)
+    }
+}
+
+impl From<crate::json::ParseError> for Error {
+    fn from(e: crate::json::ParseError) -> Self {
+        Error::msg(e)
+    }
+}
+
+impl From<crate::config::TomlError> for Error {
+    fn from(e: crate::config::TomlError) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// Attach context to fallible values (`Result` or `Option`).
+pub trait Context<T> {
+    /// Wrap the error with a fixed context message.
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    /// Wrap the error with a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+/// Convert any error into [`Error`], preserving the chain when it
+/// already *is* an [`Error`] (detected by `Any` downcast — the blanket
+/// impl below cannot specialize on the error type).
+fn into_error<E: fmt::Display + std::any::Any>(e: E) -> Error {
+    let mut holder = Some(e);
+    {
+        let any: &mut dyn std::any::Any = &mut holder;
+        if let Some(opt) = any.downcast_mut::<Option<Error>>() {
+            if let Some(err) = opt.take() {
+                return err;
+            }
+        }
+    }
+    Error::msg(holder.take().expect("error still present"))
+}
+
+impl<T, E: fmt::Display + std::any::Any> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| into_error(e).context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| into_error(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Return early with a formatted [`Error`] (the `anyhow::bail!` analogue).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::error::Error::msg(format!($($arg)*)))
+    };
+}
+
+/// Build a formatted [`Error`] value (the `anyhow::anyhow!` analogue).
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::error::Error::msg(format!($($arg)*))
+    };
+}
+
+// Make `use crate::error::{bail, anyhow}` work like the anyhow imports
+// the call sites were written against (`#[macro_export]` exports at the
+// crate root; these aliases put them back under `error::`).
+pub use crate::anyhow;
+pub use crate::bail;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fail() -> Result<()> {
+        bail!("root problem {}", 42)
+    }
+
+    #[test]
+    fn bail_and_display() {
+        let e = fail().unwrap_err();
+        assert_eq!(format!("{e}"), "root problem 42");
+        assert_eq!(format!("{e:#}"), "root problem 42");
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let e = fail().context("outer step").unwrap_err();
+        assert_eq!(format!("{e}"), "outer step");
+        assert_eq!(format!("{e:#}"), "outer step: root problem 42");
+        assert_eq!(e.root_cause(), "root problem 42");
+    }
+
+    #[test]
+    fn context_on_error_preserves_the_chain() {
+        // Stacking contexts on a Result<_, Error> must extend the chain,
+        // not flatten it into one string.
+        let e = fail().context("mid step").context("outer step").unwrap_err();
+        assert_eq!(e.chain().len(), 3);
+        assert_eq!(e.chain().join(" | "), "outer step | mid step | root problem 42");
+        assert_eq!(e.root_cause(), "root problem 42");
+        assert_eq!(format!("{e}"), "outer step");
+        assert_eq!(format!("{e:#}"), "outer step: mid step: root problem 42");
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u32> = None;
+        let e = none.context("missing value").unwrap_err();
+        assert_eq!(format!("{e:#}"), "missing value");
+        let some = Some(7u32).context("unused").unwrap();
+        assert_eq!(some, 7);
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let ok: std::result::Result<u32, String> = Ok(1);
+        let v = ok
+            .with_context(|| -> String { panic!("must not be called on Ok") })
+            .unwrap();
+        assert_eq!(v, 1);
+    }
+
+    #[test]
+    fn from_io_and_parse_errors() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
+        let e: Error = io.into();
+        assert!(format!("{e}").contains("nope"));
+        let p = crate::json::parse("{").unwrap_err();
+        let e: Error = p.into();
+        assert!(format!("{e}").contains("json parse error"));
+    }
+
+    #[test]
+    fn anyhow_macro_builds_error() {
+        let e = anyhow!("ad hoc {}", "msg");
+        assert_eq!(format!("{e}"), "ad hoc msg");
+    }
+}

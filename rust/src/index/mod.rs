@@ -28,7 +28,11 @@ pub struct Neighbor {
 
 /// Common interface over flat and HNSW indexes. Vectors are copied in and
 /// normalized on insert; ids are caller-assigned and must be unique.
-pub trait VectorIndex: Send {
+///
+/// `Send + Sync` so a partition can share one index behind a `RwLock`
+/// and serve concurrent `search` calls under the shared lock (HNSW's
+/// per-thread scratch keeps `&self` searches race-free).
+pub trait VectorIndex: Send + Sync {
     /// Insert a vector under `id`. Panics if `vec.len() != dim`.
     fn insert(&mut self, id: u64, vec: &[f32]);
     /// Soft-remove an id; returns whether it was present.

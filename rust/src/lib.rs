@@ -12,13 +12,17 @@
 //!   once to HLO text by `python/compile/aot.py`.
 //! * **Layer 3 (Rust, runtime)** — this crate: the semantic cache itself
 //!   (vector store, HNSW ANN index, TTL key-value store), the serving
-//!   coordinator (request router, embedding batcher, metrics), the simulated
-//!   LLM upstream, the synthetic workload generator, and the experiment
-//!   harness that regenerates every table and figure of the paper.
+//!   coordinator (single-query [`coordinator::Server::handle`] and the
+//!   concurrent batch pipeline [`coordinator::Server::handle_batch`]),
+//!   the simulated LLM upstream, the synthetic workload generator, and
+//!   the experiment harness that regenerates every table and figure of
+//!   the paper.
 //!
 //! Python never runs on the request path: `make artifacts` lowers the
 //! encoder + scorer to `artifacts/*.hlo.txt` once, and the Rust binary loads
-//! them through PJRT (the [`runtime`] module).
+//! them through PJRT (the [`runtime`] module; requires the `pjrt` cargo
+//! feature — the default offline build uses the [`embedding::NativeEncoder`]
+//! twin of the same model instead).
 //!
 //! ## Quick start
 //!
@@ -40,6 +44,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod embedding;
+pub mod error;
 pub mod experiments;
 pub mod index;
 pub mod json;

@@ -8,7 +8,7 @@ use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Duration;
 
-use anyhow::{bail, Context, Result};
+use semcache::error::{bail, Context, Result};
 
 use semcache::cache::CacheConfig;
 use semcache::cli::{Args, USAGE};
@@ -65,7 +65,7 @@ fn load_config(args: &Args) -> Result<Config> {
     }
     if let Some(e) = args.opt("encoder") {
         cfg.encoder_kind = e.to_string();
-    } else if artifacts_available() {
+    } else if semcache::runtime::pjrt_ready() {
         cfg.encoder_kind = "pjrt".into();
     } else {
         cfg.encoder_kind = "native".into();
@@ -152,7 +152,8 @@ fn cmd_info() -> Result<()> {
     println!("gpt-semantic-cache {}", env!("CARGO_PKG_VERSION"));
     println!("artifacts dir: {}", artifacts_dir().display());
     println!("artifacts built: {}", artifacts_available());
-    if artifacts_available() {
+    println!("pjrt runtime compiled in: {}", semcache::runtime::pjrt_enabled());
+    if semcache::runtime::pjrt_ready() {
         let rt = semcache::runtime::Runtime::load(&artifacts_dir())?;
         println!("PJRT platform: {}", rt.platform_name());
         println!("compiled executables: {:?}", rt.names());
@@ -270,6 +271,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             cache: cache_config(&cfg),
             llm: llm_config(&cfg),
             judge: JudgeConfig::default(),
+            workers: cfg.workers,
         },
     ));
     eprintln!("[populating cache with {} QA pairs...]", ds.base.len());

@@ -48,11 +48,19 @@ pub struct Metrics {
     pub llm_input_tokens: AtomicU64,
     pub llm_output_tokens: AtomicU64,
     pub embedding_tokens: AtomicU64,
+    // Batch serving pipeline counters.
+    pub batches: AtomicU64,
+    pub batch_queries: AtomicU64,
     // Latency histograms (ms), mutex-guarded (record is a few ns anyway).
     lat_total: Mutex<Histogram>,
     lat_embed: Mutex<Histogram>,
     lat_index: Mutex<Histogram>,
     lat_llm: Mutex<Histogram>,
+    // Per-stage batch pipeline histograms (one observation per batch):
+    // summed per-chunk embedding wall, final in-order merge, end-to-end.
+    lat_batch_embed: Mutex<Histogram>,
+    lat_batch_merge: Mutex<Histogram>,
+    lat_batch_total: Mutex<Histogram>,
 }
 
 /// Immutable snapshot used by reports and experiments.
@@ -67,10 +75,15 @@ pub struct MetricsSnapshot {
     pub llm_input_tokens: u64,
     pub llm_output_tokens: u64,
     pub embedding_tokens: u64,
+    pub batches: u64,
+    pub batch_queries: u64,
     pub lat_total: Summary,
     pub lat_embed: Summary,
     pub lat_index: Summary,
     pub lat_llm: Summary,
+    pub lat_batch_embed: Summary,
+    pub lat_batch_merge: Summary,
+    pub lat_batch_total: Summary,
 }
 
 impl Metrics {
@@ -108,6 +121,12 @@ impl Metrics {
         }
     }
 
+    /// One `handle_batch` call over `queries` queries.
+    pub fn record_batch(&self, queries: u64) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batch_queries.fetch_add(queries, Ordering::Relaxed);
+    }
+
     pub fn observe_total_ms(&self, ms: f64) {
         self.lat_total.lock().unwrap().observe(ms);
     }
@@ -119,6 +138,15 @@ impl Metrics {
     }
     pub fn observe_llm_ms(&self, ms: f64) {
         self.lat_llm.lock().unwrap().observe(ms);
+    }
+    pub fn observe_batch_embed_ms(&self, ms: f64) {
+        self.lat_batch_embed.lock().unwrap().observe(ms);
+    }
+    pub fn observe_batch_merge_ms(&self, ms: f64) {
+        self.lat_batch_merge.lock().unwrap().observe(ms);
+    }
+    pub fn observe_batch_total_ms(&self, ms: f64) {
+        self.lat_batch_total.lock().unwrap().observe(ms);
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -132,10 +160,15 @@ impl Metrics {
             llm_input_tokens: self.llm_input_tokens.load(Ordering::Relaxed),
             llm_output_tokens: self.llm_output_tokens.load(Ordering::Relaxed),
             embedding_tokens: self.embedding_tokens.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            batch_queries: self.batch_queries.load(Ordering::Relaxed),
             lat_total: self.lat_total.lock().unwrap().summary(),
             lat_embed: self.lat_embed.lock().unwrap().summary(),
             lat_index: self.lat_index.lock().unwrap().summary(),
             lat_llm: self.lat_llm.lock().unwrap().summary(),
+            lat_batch_embed: self.lat_batch_embed.lock().unwrap().summary(),
+            lat_batch_merge: self.lat_batch_merge.lock().unwrap().summary(),
+            lat_batch_total: self.lat_batch_total.lock().unwrap().summary(),
         }
     }
 }
@@ -195,6 +228,11 @@ impl MetricsSnapshot {
             ("lat_llm_mean_ms", self.lat_llm.mean.into()),
             ("lat_embed_mean_ms", self.lat_embed.mean.into()),
             ("lat_index_mean_ms", self.lat_index.mean.into()),
+            ("batches", self.batches.into()),
+            ("batch_queries", self.batch_queries.into()),
+            ("lat_batch_embed_mean_ms", self.lat_batch_embed.mean.into()),
+            ("lat_batch_merge_mean_ms", self.lat_batch_merge.mean.into()),
+            ("lat_batch_total_mean_ms", self.lat_batch_total.mean.into()),
         ])
     }
 }
@@ -240,6 +278,24 @@ mod tests {
         assert_eq!(s.hit_rate(), 0.0);
         assert_eq!(s.positive_rate(), 0.0);
         assert_eq!(s.lat_total.n, 0);
+    }
+
+    #[test]
+    fn batch_counters_and_stage_latencies() {
+        let m = Metrics::new();
+        m.record_batch(32);
+        m.record_batch(16);
+        m.observe_batch_embed_ms(5.0);
+        m.observe_batch_merge_ms(0.2);
+        m.observe_batch_total_ms(9.0);
+        let s = m.snapshot();
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.batch_queries, 48);
+        assert_eq!(s.lat_batch_embed.n, 1);
+        assert!((s.lat_batch_total.mean - 9.0).abs() < 1e-9);
+        let j = s.to_json();
+        assert_eq!(j.get("batches").as_usize(), Some(2));
+        assert_eq!(j.get("batch_queries").as_usize(), Some(48));
     }
 
     #[test]

@@ -8,7 +8,7 @@ use std::collections::HashMap;
 use std::path::Path;
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use crate::error::{bail, Context, Result};
 
 use super::manifest::ArtifactManifest;
 
@@ -77,12 +77,16 @@ impl Runtime {
     /// passed to [`Executable::run_buffers`] any number of times. Used to
     /// keep the encoder weights resident instead of copying ~16 MB per call.
     pub fn upload_f32(&self, data: &[f32], shape: &[usize]) -> Result<xla::PjRtBuffer> {
-        Ok(self.client.buffer_from_host_buffer(data, shape, None)?)
+        self.client
+            .buffer_from_host_buffer(data, shape, None)
+            .context("uploading f32 buffer to device")
     }
 
     /// Upload an i64 tensor (token ids).
     pub fn upload_i64(&self, data: &[i64], shape: &[usize]) -> Result<xla::PjRtBuffer> {
-        Ok(self.client.buffer_from_host_buffer(data, shape, None)?)
+        self.client
+            .buffer_from_host_buffer(data, shape, None)
+            .context("uploading i64 buffer to device")
     }
 
     pub fn names(&self) -> Vec<&str> {
@@ -110,9 +114,18 @@ impl Executable {
                 bail!("input {i}: got {} elems, shape {:?} wants {n}", data.len(), shape);
             }
             let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-            literals.push(xla::Literal::vec1(data).reshape(&dims)?);
+            literals.push(
+                xla::Literal::vec1(data)
+                    .reshape(&dims)
+                    .with_context(|| format!("reshaping input {i} to {dims:?}"))?,
+            );
         }
-        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .context("executing module")?[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
         self.unpack_tuple(result)
     }
 
@@ -127,28 +140,43 @@ impl Executable {
         let mut literals = Vec::new();
         for (data, shape) in int_inputs {
             let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-            literals.push(xla::Literal::vec1(data).reshape(&dims)?);
+            literals.push(
+                xla::Literal::vec1(data)
+                    .reshape(&dims)
+                    .with_context(|| format!("reshaping i64 input to {dims:?}"))?,
+            );
         }
         for (data, shape) in f32_inputs {
             let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-            literals.push(xla::Literal::vec1(data).reshape(&dims)?);
+            literals.push(
+                xla::Literal::vec1(data)
+                    .reshape(&dims)
+                    .with_context(|| format!("reshaping f32 input to {dims:?}"))?,
+            );
         }
-        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .context("executing module")?[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
         self.unpack_tuple(result)
     }
 
     /// Execute with pre-uploaded device buffers (zero host→device copies
     /// for the resident arguments). Order must match the HLO signature.
     pub fn run_buffers(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<Vec<f32>>> {
-        let result = self.exe.execute_b(args)?[0][0].to_literal_sync()?;
+        let result = self.exe.execute_b(args).context("executing module")?[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
         self.unpack_tuple(result)
     }
 
     fn unpack_tuple(&self, result: xla::Literal) -> Result<Vec<Vec<f32>>> {
-        let elems = result.to_tuple()?;
+        let elems = result.to_tuple().context("destructuring output tuple")?;
         let mut out = Vec::with_capacity(elems.len());
         for lit in elems {
-            out.push(lit.to_vec::<f32>()?);
+            out.push(lit.to_vec::<f32>().context("reading f32 output")?);
         }
         Ok(out)
     }

@@ -1,0 +1,71 @@
+//! Stub [`Runtime`]/[`Executable`] compiled when the `pjrt` feature is
+//! off (the default in the offline build, which cannot vendor the `xla`
+//! crate). Constructors return a descriptive error; the instance methods
+//! are statically unreachable because no value can ever be constructed
+//! (the types hold an uninhabited field).
+
+use std::path::Path;
+
+use crate::error::{bail, Result};
+
+const UNAVAILABLE: &str = "semcache was built without the `pjrt` feature: \
+     the PJRT runtime is unavailable (rebuild with `--features pjrt` and a \
+     vendored `xla` crate, or use the native encoder)";
+
+/// Stub of the PJRT client + compiled-executable registry.
+pub struct Runtime {
+    never: std::convert::Infallible,
+}
+
+/// Stub of a compiled HLO module.
+pub struct Executable {
+    never: std::convert::Infallible,
+}
+
+impl Runtime {
+    /// Always fails: the xla-backed runtime is not compiled in.
+    pub fn load(_dir: &Path) -> Result<Self> {
+        bail!("{}", UNAVAILABLE)
+    }
+
+    pub fn get(&self, _name: &str) -> Result<&Executable> {
+        match self.never {}
+    }
+
+    pub fn has(&self, _name: &str) -> bool {
+        match self.never {}
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        match self.never {}
+    }
+
+    pub fn platform_name(&self) -> String {
+        match self.never {}
+    }
+}
+
+impl Executable {
+    pub fn run_f32(&self, _inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        match self.never {}
+    }
+
+    pub fn run_mixed(
+        &self,
+        _int_inputs: &[(&[i64], &[usize])],
+        _f32_inputs: &[(&[f32], &[usize])],
+    ) -> Result<Vec<Vec<f32>>> {
+        match self.never {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_reports_missing_feature() {
+        let err = Runtime::load(Path::new("artifacts")).unwrap_err();
+        assert!(format!("{err}").contains("pjrt"), "{err}");
+    }
+}

@@ -9,11 +9,30 @@
 //! executables around for the life of the process. Python is never on the
 //! request path.
 
+#[cfg(feature = "pjrt")]
+mod executable;
+#[cfg(not(feature = "pjrt"))]
+#[path = "executable_stub.rs"]
 mod executable;
 mod manifest;
 
 pub use executable::{Executable, Runtime};
 pub use manifest::{ArtifactManifest, ArtifactSpec, ModelParams};
+
+/// True when the crate was built with the `pjrt` feature — i.e. the
+/// xla-backed execution path is compiled in. Without it, [`Runtime`] and
+/// `PjrtEncoder` are stubs whose constructors return a descriptive error
+/// and the native encoder is the only usable backend.
+pub const fn pjrt_enabled() -> bool {
+    cfg!(feature = "pjrt")
+}
+
+/// True when the PJRT path is actually usable: the runtime is compiled
+/// in *and* the AOT artifacts have been built. The single gate callers
+/// should use when choosing between the PJRT and native encoders.
+pub fn pjrt_ready() -> bool {
+    pjrt_enabled() && artifacts_available()
+}
 
 use std::path::{Path, PathBuf};
 

@@ -7,7 +7,11 @@
 //!   sweeper (`sweep_expired`, driven by the coordinator's housekeeping
 //!   thread — Redis' `activeExpireCycle` analogue);
 //! * **bounded memory with LRU eviction** (Redis `allkeys-lru`);
-//! * **sharding** to keep lock contention off the request path;
+//! * **read-mostly `RwLock` sharding** to keep lock contention off the
+//!   request path: when the store is unbounded (no LRU bookkeeping, the
+//!   serving default), concurrent `get`s on one shard take only the
+//!   shared lock and proceed in parallel; writers and LRU-tracked reads
+//!   take the exclusive lock;
 //! * hit/miss/expiry/eviction **stats** (Redis `INFO` analogue).
 //!
 //! The store is deliberately type-parameterized (`KvStore<V>`): the
@@ -21,7 +25,7 @@ pub use clock::{Clock, ManualClock, SystemClock};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
-use std::sync::Mutex;
+use std::sync::RwLock;
 
 use shard::Shard;
 
@@ -65,7 +69,7 @@ impl Default for StoreConfig {
 
 /// Sharded TTL+LRU key-value store.
 pub struct KvStore<V> {
-    shards: Vec<Mutex<Shard<V>>>,
+    shards: Vec<RwLock<Shard<V>>>,
     stats: StoreStats,
     clock: Arc<dyn Clock>,
     per_shard_capacity: usize,
@@ -84,7 +88,7 @@ impl<V> KvStore<V> {
         let per_shard_capacity =
             if cfg.capacity == 0 { 0 } else { cfg.capacity.div_ceil(shards) };
         Self {
-            shards: (0..shards).map(|_| Mutex::new(Shard::new())).collect(),
+            shards: (0..shards).map(|_| RwLock::new(Shard::new())).collect(),
             stats: StoreStats::default(),
             clock,
             per_shard_capacity,
@@ -92,7 +96,7 @@ impl<V> KvStore<V> {
         }
     }
 
-    fn shard_for(&self, key: &str) -> &Mutex<Shard<V>> {
+    fn shard_for(&self, key: &str) -> &RwLock<Shard<V>> {
         let h = crate::tokenizer::fnv1a64(key.as_bytes());
         &self.shards[(h % self.shards.len() as u64) as usize]
     }
@@ -106,7 +110,7 @@ impl<V> KvStore<V> {
     pub fn set_ttl(&self, key: &str, value: V, ttl_ms: u64) {
         let now = self.clock.now_ms();
         let expires = if ttl_ms == 0 { u64::MAX } else { now + ttl_ms };
-        let mut shard = self.shard_for(key).lock().unwrap();
+        let mut shard = self.shard_for(key).write().unwrap();
         let evicted = shard.insert(key.to_string(), value, expires, self.per_shard_capacity);
         self.stats.inserts.fetch_add(1, Ordering::Relaxed);
         self.stats.evicted.fetch_add(evicted, Ordering::Relaxed);
@@ -115,9 +119,40 @@ impl<V> KvStore<V> {
 
 impl<V: Clone> KvStore<V> {
     /// Get a clone of the live value; lazily expires dead entries.
+    ///
+    /// Read-mostly fast path: when the store is unbounded (capacity 0)
+    /// there is no LRU recency to maintain, so a hit only takes the
+    /// shard's *shared* lock — concurrent readers of one shard proceed in
+    /// parallel. The exclusive lock is taken only to reclaim an entry
+    /// that was observed expired (idempotent under races) or, in the
+    /// bounded configuration, to bump LRU recency.
     pub fn get(&self, key: &str) -> Option<V> {
         let now = self.clock.now_ms();
-        let mut shard = self.shard_for(key).lock().unwrap();
+        let lock = self.shard_for(key);
+        if self.per_shard_capacity == 0 {
+            let shard = lock.read().unwrap();
+            match shard.peek(key, now) {
+                shard::Lookup::Hit(v) => {
+                    let v = v.clone();
+                    self.stats.hits.fetch_add(1, Ordering::Relaxed);
+                    return Some(v);
+                }
+                shard::Lookup::Miss => {
+                    self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                    return None;
+                }
+                shard::Lookup::Expired => {}
+            }
+            drop(shard);
+            // Upgrade to reclaim the expired entry; another thread may have
+            // raced us (re-inserted or already reclaimed), so re-check.
+            if lock.write().unwrap().remove_expired(key, now) {
+                self.stats.expired.fetch_add(1, Ordering::Relaxed);
+            }
+            self.stats.misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        let mut shard = lock.write().unwrap();
         match shard.get(key, now) {
             shard::Lookup::Hit(v) => {
                 self.stats.hits.fetch_add(1, Ordering::Relaxed);
@@ -140,13 +175,13 @@ impl<V> KvStore<V> {
     /// Remove a key; true if it was present and live.
     pub fn remove(&self, key: &str) -> bool {
         let now = self.clock.now_ms();
-        self.shard_for(key).lock().unwrap().remove(key, now)
+        self.shard_for(key).write().unwrap().remove(key, now)
     }
 
     /// Remaining TTL in ms (None = missing/expired; u64::MAX = immortal).
     pub fn ttl_ms(&self, key: &str) -> Option<u64> {
         let now = self.clock.now_ms();
-        let shard = self.shard_for(key).lock().unwrap();
+        let shard = self.shard_for(key).read().unwrap();
         shard.ttl_remaining(key, now)
     }
 
@@ -156,7 +191,7 @@ impl<V> KvStore<V> {
         let now = self.clock.now_ms();
         let mut total = 0;
         for shard in &self.shards {
-            total += shard.lock().unwrap().sweep(now);
+            total += shard.write().unwrap().sweep(now);
         }
         self.stats.expired.fetch_add(total as u64, Ordering::Relaxed);
         total
@@ -165,7 +200,7 @@ impl<V> KvStore<V> {
     /// Live entry count (does not count not-yet-swept expired entries).
     pub fn len(&self) -> usize {
         let now = self.clock.now_ms();
-        self.shards.iter().map(|s| s.lock().unwrap().live_len(now)).sum()
+        self.shards.iter().map(|s| s.read().unwrap().live_len(now)).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -176,7 +211,7 @@ impl<V> KvStore<V> {
     pub fn for_each<F: FnMut(&str, &V)>(&self, mut f: F) {
         let now = self.clock.now_ms();
         for shard in &self.shards {
-            shard.lock().unwrap().for_each_live(now, &mut f);
+            shard.read().unwrap().for_each_live(now, &mut f);
         }
     }
 
@@ -300,6 +335,35 @@ mod tests {
         let mut seen = Vec::new();
         s.for_each(|k, _| seen.push(k.to_string()));
         assert_eq!(seen, vec!["live"]);
+    }
+
+    #[test]
+    fn concurrent_readers_share_the_fast_path() {
+        // Unbounded store: parallel gets take only the shared lock; all
+        // of them must see consistent values and stats.
+        let s: Arc<KvStore<String>> = Arc::new(KvStore::new(StoreConfig {
+            shards: 2,
+            capacity: 0,
+            default_ttl_ms: 0,
+        }));
+        for i in 0..64 {
+            s.set(&format!("k{i}"), format!("v{i}"));
+        }
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                for round in 0..200usize {
+                    let i = round % 64;
+                    assert_eq!(s.get(&format!("k{i}")), Some(format!("v{i}")));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(s.stats().hits, 4 * 200);
+        assert_eq!(s.stats().misses, 0);
     }
 
     #[test]

@@ -67,6 +67,30 @@ impl<V> Shard<V> {
         evicted
     }
 
+    /// Read-only lookup: no LRU bump, no lazy removal. Used by the
+    /// unbounded-store fast path, where a hit needs only a shared lock;
+    /// an `Expired` result tells the caller to upgrade to a write lock
+    /// and reclaim via [`Shard::remove_expired`].
+    pub fn peek(&self, key: &str, now_ms: u64) -> Lookup<'_, V> {
+        match self.map.get(key) {
+            None => Lookup::Miss,
+            Some(e) if e.expires_at_ms <= now_ms => Lookup::Expired,
+            Some(e) => Lookup::Hit(&e.value),
+        }
+    }
+
+    /// Drop `key` only if it is present *and* expired (idempotent: safe
+    /// under read-then-write upgrade races). Returns whether it removed.
+    pub fn remove_expired(&mut self, key: &str, now_ms: u64) -> bool {
+        match self.map.get(key) {
+            Some(e) if e.expires_at_ms <= now_ms => {
+                self.map.remove(key);
+                true
+            }
+            _ => false,
+        }
+    }
+
     pub fn get(&mut self, key: &str, now_ms: u64) -> Lookup<'_, V> {
         let expired = match self.map.get(key) {
             None => return Lookup::Miss,
@@ -139,6 +163,23 @@ mod tests {
         s.insert("b".into(), 1, u64::MAX, 2);
         s.insert("c".into(), 2, u64::MAX, 2); // evicts coldest
         assert_eq!(s.map.len(), 2);
+    }
+
+    #[test]
+    fn peek_is_read_only_and_remove_expired_is_idempotent() {
+        let mut s: Shard<u32> = Shard::new();
+        s.insert("a".into(), 1, 10, 0);
+        let lru_before = s.lru.len();
+        match s.peek("a", 5) {
+            Lookup::Hit(v) => assert_eq!(*v, 1),
+            _ => panic!("live entry must peek as hit"),
+        }
+        assert!(matches!(s.peek("a", 10), Lookup::Expired));
+        assert!(matches!(s.peek("b", 0), Lookup::Miss));
+        assert_eq!(s.lru.len(), lru_before, "peek must not touch the LRU queue");
+        assert!(!s.remove_expired("a", 5), "live entry must survive");
+        assert!(s.remove_expired("a", 10));
+        assert!(!s.remove_expired("a", 10), "second reclaim is a no-op");
     }
 
     #[test]

@@ -1,13 +1,13 @@
 //! Dense f32 vector kernels for the similarity hot path.
 //!
 //! `dot` is the inner loop of both the HNSW traversal and the flat-scan
-//! rerank. It is written as four independent accumulators so LLVM
+//! rerank. It is written as independent accumulators so LLVM
 //! auto-vectorizes it to SIMD without unsafe code or nightly features
-//! (verified in the §Perf pass — see EXPERIMENTS.md).
+//! (verified in the §Perf pass — see DESIGN.md §Perf / `bench_micro`).
 
 /// Dot product with an 8-lane accumulator array: LLVM maps the inner
 /// loop to one SIMD register of independent FMAs (verified ~9x faster
-/// than the scalar/2-way form in the §Perf pass — see EXPERIMENTS.md).
+/// than the scalar/2-way form — see DESIGN.md §Perf / `bench_micro`).
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());

@@ -62,6 +62,44 @@ fn end_to_end_populate_and_trace() {
 }
 
 #[test]
+fn batch_pipeline_end_to_end() {
+    let ds = WorkloadGenerator::new(77).generate(&DatasetConfig::small());
+    let s = server();
+    // Hits only ever come from same-category entries, so populating the
+    // queried category keeps the test fast without changing coverage.
+    let base: Vec<_> = ds.base_for(Category::OrderShipping).cloned().collect();
+    s.populate(&base);
+    s.register_ground_truth(&ds);
+
+    let queries: Vec<_> = ds.tests_for(Category::OrderShipping).cloned().collect();
+    let texts: Vec<&str> = queries.iter().map(|q| q.text.as_str()).collect();
+    let clusters: Vec<Option<u64>> = queries.iter().map(|q| Some(q.answer_group)).collect();
+    let replies = s.handle_batch_clustered(&texts, &clusters);
+
+    assert_eq!(replies.len(), queries.len(), "one reply per query, in order");
+    let hits = replies
+        .iter()
+        .filter(|r| matches!(r.source, ReplySource::Cache { .. }))
+        .count();
+    let hit_rate = hits as f64 / replies.len() as f64;
+    assert!(hit_rate > 0.4 && hit_rate < 0.95, "batch hit rate {hit_rate}");
+    // Every cache hit must return the exact answer of its answer group
+    // (in-order merge: reply i belongs to query i).
+    let answers: std::collections::HashMap<u64, &str> =
+        ds.base.iter().map(|p| (p.answer_group, p.answer.as_str())).collect();
+    for (q, r) in queries.iter().zip(&replies) {
+        if matches!(r.source, ReplySource::Cache { .. }) && r.judged_positive == Some(true) {
+            assert_eq!(Some(r.response.as_str()), answers.get(&q.answer_group).copied());
+        }
+    }
+    let m = s.metrics().snapshot();
+    assert_eq!(m.batches, 1);
+    assert_eq!(m.batch_queries as usize, queries.len());
+    assert_eq!(m.requests as usize, queries.len());
+    assert_eq!(m.cache_hits as usize, hits);
+}
+
+#[test]
 fn flat_and_hnsw_agree_on_served_responses() {
     let ds = WorkloadGenerator::new(5).generate(&DatasetConfig::tiny());
     let enc = NativeEncoder::new(small_params());
@@ -155,6 +193,7 @@ fn config_file_drives_server_behaviour() {
             cache: CacheConfig { threshold: cfg.similarity_threshold, ..Default::default() },
             llm: SimLlmConfig::default(),
             judge: Default::default(),
+            workers: 4,
         },
     ));
     s.handle("how do i reset my password", None);

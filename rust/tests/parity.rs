@@ -13,11 +13,14 @@ use semcache::runtime::{artifacts_available, artifacts_dir, ArtifactManifest, Ru
 use semcache::util::{dot, norm, Rng};
 
 fn skip() -> bool {
-    if artifacts_available() {
-        false
-    } else {
+    if !semcache::runtime::pjrt_enabled() {
+        eprintln!("SKIP: built without the `pjrt` feature");
+        true
+    } else if !artifacts_available() {
         eprintln!("SKIP: artifacts not built (run `make artifacts`)");
         true
+    } else {
+        false
     }
 }
 

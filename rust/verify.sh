@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# Tier-1 verification for the semcache crate, one command:
+#
+#   ./verify.sh            (or: make verify, from the repo root)
+#
+# Steps: release build, unit+integration tests, doc tests, and a smoke
+# run of the batch-throughput bench (SEMCACHE_BENCH_SMOKE=1 keeps it to
+# a few seconds). Fails fast on the first broken step.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "==> cargo build --release"
+cargo build --release
+
+echo "==> cargo test -q"
+cargo test -q
+
+echo "==> cargo test --doc -q"
+cargo test --doc -q
+
+echo "==> smoke bench: bench_batch_throughput (SEMCACHE_BENCH_SMOKE=1)"
+SEMCACHE_BENCH_SMOKE=1 cargo bench --bench bench_batch_throughput
+
+echo "==> verify OK"
