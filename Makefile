@@ -1,12 +1,14 @@
 # GPT Semantic Cache — build/verify entry points.
 #
-#   make verify      tier-1: build + tests + doc tests + smoke bench
+#   make verify      tier-1: fmt + build + tests + doc tests + loopback smoke + smoke benches
 #   make build       release build of the Rust crate
 #   make test        unit + integration tests
+#   make serve       run the semcached HTTP daemon on :8080
 #   make bench-batch batch serving throughput baseline (full mode)
+#   make bench-http  HTTP loopback throughput vs direct serve_batch (full mode)
 #   make artifacts   lower the JAX/Pallas encoder to HLO (needs python/jax)
 
-.PHONY: verify build test bench-batch artifacts
+.PHONY: verify build test serve bench-batch bench-http artifacts
 
 verify:
 	./rust/verify.sh
@@ -17,8 +19,14 @@ build:
 test:
 	cd rust && cargo test -q
 
+serve:
+	cd rust && cargo run --release --bin semcached -- serve --port 8080 --populate small
+
 bench-batch:
 	cd rust && cargo bench --bench bench_batch_throughput
+
+bench-http:
+	cd rust && cargo bench --bench bench_http_loopback
 
 artifacts:
 	cd python && python -m compile.aot

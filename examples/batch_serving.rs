@@ -1,5 +1,5 @@
-//! Batch serving pipeline demo: one `handle_batch` call serving a whole
-//! burst of queries through the concurrent coordinator.
+//! Batch serving pipeline demo: one `serve_batch` call serving a whole
+//! burst of typed requests through the concurrent coordinator.
 //!
 //! The burst is embedded in amortized chunks, fanned out across a scoped
 //! worker pool (concurrent ANN lookups under the cache's read-mostly
@@ -10,7 +10,8 @@
 
 use std::sync::Arc;
 
-use semcache::coordinator::{Coordinator, ReplySource, ServerConfig};
+use semcache::api::{Outcome, QueryRequest};
+use semcache::coordinator::{Coordinator, ServerConfig};
 use semcache::embedding::{BatcherConfig, EmbeddingService, Encoder, EncoderSpec, NativeEncoder};
 use semcache::runtime::{artifacts_dir, pjrt_ready, ModelParams};
 use semcache::workload::{Category, DatasetConfig, WorkloadGenerator};
@@ -26,7 +27,7 @@ fn main() -> semcache::error::Result<()> {
     };
     let server = Arc::new(Coordinator::new(
         encoder,
-        ServerConfig { workers: 4, ..ServerConfig::default() },
+        ServerConfig::builder().workers(4).build()?,
     ));
 
     // Knowledge base: the shopping-QA category of the synthetic workload.
@@ -36,19 +37,23 @@ fn main() -> semcache::error::Result<()> {
     server.populate(&kb);
     server.register_ground_truth(&ds);
 
-    // A burst of queries arrives at once: serve it as ONE batch.
+    // A burst of queries arrives at once: serve it as ONE batch of typed
+    // requests (ground-truth clusters attached for judge evaluation).
     let burst: Vec<_> = ds.tests_for(Category::ShoppingQa).cloned().collect();
-    let texts: Vec<&str> = burst.iter().map(|q| q.text.as_str()).collect();
-    let clusters: Vec<Option<u64>> = burst.iter().map(|q| Some(q.answer_group)).collect();
-    println!("serving a burst of {} queries via handle_batch (4 workers)...\n", texts.len());
-    let replies = server.handle_batch_clustered(&texts, &clusters);
+    let reqs: Vec<QueryRequest> = burst
+        .iter()
+        .map(|q| QueryRequest::new(q.text.as_str()).with_cluster(q.answer_group))
+        .collect();
+    println!("serving a burst of {} queries via serve_batch (4 workers)...\n", reqs.len());
+    let replies = server.serve_batch(&reqs);
 
-    for (q, r) in texts.iter().zip(&replies) {
-        let tag = match r.source {
-            ReplySource::Cache { score } => format!("HIT  {score:.3}"),
-            ReplySource::Llm => format!("MISS {:>5.0}ms", r.llm_ms),
+    for (q, r) in burst.iter().zip(&replies) {
+        let tag = match r.outcome {
+            Outcome::Hit { score, .. } => format!("HIT  {score:.3}"),
+            Outcome::Miss { .. } => format!("MISS {:>5.0}ms", r.latency.llm_ms),
+            Outcome::Rejected { .. } => "REJECTED".to_string(),
         };
-        println!("  [{tag}]  {q}");
+        println!("  [{tag}]  {}", q.text);
     }
 
     let m = server.metrics().snapshot();

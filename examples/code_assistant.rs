@@ -42,7 +42,7 @@ fn main() -> semcache::error::Result<()> {
             }
             None => {
                 let r = llm.call(prompt, None);
-                cache.insert(prompt, &e, &r.text);
+                cache.try_insert(prompt, &e, &r.text).expect("insert completion");
                 println!("MISS ({:>5.0} ms simulated LLM)  {prompt}", r.latency_ms);
                 (r.text, false)
             }

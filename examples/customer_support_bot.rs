@@ -27,21 +27,16 @@ fn main() -> semcache::error::Result<()> {
         Arc::new(NativeEncoder::new(ModelParams::default()))
     };
 
-    // TTL + bounded cache: the production-ish configuration (§2.7).
+    // TTL + bounded cache: the production-ish configuration (§2.7),
+    // assembled through the validating builders. (This demo serves
+    // through TraceRunner's per-query path; the batch-pipeline pool
+    // width is TraceConfig::workers below.)
     let server = Arc::new(Server::new(
         encoder,
-        ServerConfig {
-            cache: CacheConfig {
-                ttl_ms: 3_600_000,
-                capacity: 50_000,
-                ..CacheConfig::default()
-            },
-            llm: SimLlmConfig::default(),
-            judge: Default::default(),
-            // This demo serves through TraceRunner (per-query handle());
-            // the batch-pipeline pool width is TraceConfig::workers below.
-            ..ServerConfig::default()
-        },
+        ServerConfig::builder()
+            .cache(CacheConfig::builder().ttl_ms(3_600_000).capacity(50_000).build()?)
+            .llm(SimLlmConfig::default())
+            .build()?,
     ));
 
     // Knowledge base: shipping-category QA pairs only.

@@ -1,4 +1,4 @@
-//! Quickstart: the paper's §2.5 workflow in ~40 lines.
+//! Quickstart: the paper's §2.5 workflow over the typed v1 API.
 //!
 //! Run with `cargo run --release --example quickstart`.
 //! Uses the PJRT (AOT) encoder when `make artifacts` has been run,
@@ -6,7 +6,8 @@
 
 use std::sync::Arc;
 
-use semcache::coordinator::{ReplySource, Server, ServerConfig};
+use semcache::api::{Outcome, QueryRequest};
+use semcache::coordinator::{Server, ServerConfig};
 use semcache::embedding::{BatcherConfig, EmbeddingService, Encoder, EncoderSpec, NativeEncoder};
 use semcache::runtime::{artifacts_dir, pjrt_ready, ModelParams};
 
@@ -23,27 +24,28 @@ fn main() -> semcache::error::Result<()> {
         Arc::new(NativeEncoder::new(ModelParams::default()))
     };
 
-    // 2. Stand up the cache-fronted server (simulated GPT upstream).
-    let server = Server::new(encoder, ServerConfig::default());
+    // 2. Stand up the cache-fronted server (simulated GPT upstream) via
+    //    the validating config builder.
+    let server = Server::new(encoder, ServerConfig::builder().workers(4).build()?);
 
-    // 3. First query: cache miss -> LLM -> cached.
+    // 3. First query: cache miss -> LLM -> cached (typed outcome).
     let q1 = "How do I reset my online banking password?";
-    let r1 = server.handle(q1, None);
-    println!("\nQ1: {q1}\n  -> {:?}, {:.1} ms (llm {:.1} ms)", kind(&r1.source), r1.total_ms, r1.llm_ms);
+    let r1 = server.serve(&QueryRequest::new(q1));
+    println!("\nQ1: {q1}\n  -> {}, {:.1} ms (llm {:.1} ms)", kind(&r1.outcome), r1.latency.total_ms, r1.latency.llm_ms);
 
     // 4. Semantically similar query: served from the cache, no API call.
     let q2 = "How can I reset my password for online banking?";
-    let r2 = server.handle(q2, None);
-    println!("Q2: {q2}\n  -> {:?}, {:.2} ms", kind(&r2.source), r2.total_ms);
-    if let ReplySource::Cache { score } = r2.source {
-        println!("  cosine similarity of match: {score:.3}");
+    let r2 = server.serve(&QueryRequest::new(q2));
+    println!("Q2: {q2}\n  -> {}, {:.2} ms", kind(&r2.outcome), r2.latency.total_ms);
+    if let Outcome::Hit { score, entry_id } = r2.outcome {
+        println!("  cosine similarity of match: {score:.3} (entry #{entry_id})");
     }
     assert_eq!(r1.response, r2.response, "cached response reused");
 
     // 5. Unrelated query: correctly misses.
     let q3 = "What is the capital of France?";
-    let r3 = server.handle(q3, None);
-    println!("Q3: {q3}\n  -> {:?}", kind(&r3.source));
+    let r3 = server.serve(&QueryRequest::new(q3));
+    println!("Q3: {q3}\n  -> {}", kind(&r3.outcome));
 
     let m = server.metrics().snapshot();
     println!(
@@ -55,14 +57,15 @@ fn main() -> semcache::error::Result<()> {
     );
     println!(
         "speedup on the cached query: {:.0}x",
-        r1.total_ms / r2.total_ms.max(1e-9)
+        r1.latency.total_ms / r2.latency.total_ms.max(1e-9)
     );
     Ok(())
 }
 
-fn kind(s: &ReplySource) -> &'static str {
-    match s {
-        ReplySource::Cache { .. } => "CACHE HIT",
-        ReplySource::Llm => "LLM CALL",
+fn kind(o: &Outcome) -> &'static str {
+    match o {
+        Outcome::Hit { .. } => "CACHE HIT",
+        Outcome::Miss { .. } => "LLM CALL",
+        Outcome::Rejected { .. } => "REJECTED",
     }
 }

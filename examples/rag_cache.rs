@@ -67,7 +67,7 @@ fn main() -> semcache::error::Result<()> {
             None => {
                 rag_calls += 1;
                 let (answer, ms) = rag.answer(q);
-                cache.insert(q, &e, &answer);
+                cache.try_insert(q, &e, &answer).expect("insert RAG answer");
                 ("RAG", ms)
             }
         };

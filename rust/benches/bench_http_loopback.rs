@@ -1,0 +1,190 @@
+//! HTTP front-end throughput: queries/sec through the `semcached`
+//! loopback wire vs the direct in-process `serve_batch` pipeline on the
+//! same workload — i.e. what the network front-end costs on top of the
+//! PR 1 `bench_batch_throughput` baseline.
+//!
+//! The HTTP arm drives N concurrent keep-alive connections, each
+//! replaying its slice of the trace as `POST /v1/query` requests; the
+//! direct arm serves the identical trace as one `serve_batch` call.
+//!
+//! Run: `cargo bench --bench bench_http_loopback`
+//! Quick mode (CI / verify.sh): `SEMCACHE_BENCH_SMOKE=1 cargo bench --bench bench_http_loopback`
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Instant;
+
+use semcache::api::QueryRequest;
+use semcache::coordinator::{serve_http, HttpConfig, Server, ServerConfig};
+use semcache::embedding::NativeEncoder;
+use semcache::llm::SimLlmConfig;
+use semcache::runtime::ModelParams;
+use semcache::workload::{Category, DatasetConfig, QaPair, TestQuery, WorkloadGenerator};
+
+fn smoke() -> bool {
+    std::env::var("SEMCACHE_BENCH_SMOKE").is_ok()
+}
+
+struct BenchSetup {
+    base: Vec<QaPair>,
+    trace: Vec<TestQuery>,
+    params: ModelParams,
+}
+
+fn setup() -> BenchSetup {
+    let mut params = ModelParams::default();
+    if smoke() {
+        params.layers = 1;
+        params.vocab_size = 1024;
+        params.dim = 96;
+        params.hidden = 192;
+        params.heads = 4;
+    } else {
+        params.layers = 2;
+        params.vocab_size = 2048;
+        params.dim = 192;
+        params.hidden = 384;
+        params.heads = 6;
+    }
+    let cfg = if smoke() { DatasetConfig::tiny() } else { DatasetConfig::small() };
+    let ds = WorkloadGenerator::new(0xBA7C4).generate(&cfg);
+    let base: Vec<QaPair> = ds
+        .base_for(Category::OrderShipping)
+        .take(if smoke() { 40 } else { 150 })
+        .cloned()
+        .collect();
+    let one_pass: Vec<TestQuery> = ds.tests_for(Category::OrderShipping).cloned().collect();
+    let passes = if smoke() { 8 } else { 3 };
+    let trace: Vec<TestQuery> = std::iter::repeat(one_pass).take(passes).flatten().collect();
+    BenchSetup { base, trace, params }
+}
+
+/// Fresh identically-configured server (each arm replays the same
+/// workload from the same initial cache state).
+fn build_server(setup: &BenchSetup) -> Arc<Server> {
+    let server = Arc::new(Server::new(
+        Arc::new(NativeEncoder::new(setup.params.clone())),
+        ServerConfig::builder()
+            .llm(SimLlmConfig {
+                rtt_ms: 4.0,
+                ms_per_token: 0.05,
+                jitter_sigma: 0.2,
+                real_sleep: true,
+                ..SimLlmConfig::default()
+            })
+            .workers(4)
+            .build()
+            .expect("bench server config"),
+    ));
+    server.populate(&setup.base);
+    server
+}
+
+/// One keep-alive client: POST each query on a single connection and
+/// count `"type": "hit"` replies (compact JSON => exact match is safe).
+fn client_worker(addr: &str, queries: &[String]) -> usize {
+    let stream = TcpStream::connect(addr).expect("connect loopback");
+    stream.set_nodelay(true).ok();
+    let mut writer = stream.try_clone().expect("clone stream");
+    let mut reader = BufReader::new(stream);
+    let mut hits = 0usize;
+    for q in queries {
+        let body = QueryRequest::new(q.as_str()).to_json().to_string();
+        write!(
+            writer,
+            "POST /v1/query HTTP/1.1\r\nHost: bench\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(),
+            body
+        )
+        .expect("write request");
+        writer.flush().expect("flush request");
+
+        let mut line = String::new();
+        reader.read_line(&mut line).expect("status line");
+        assert!(line.starts_with("HTTP/1.1 200"), "unexpected status: {line}");
+        let mut content_length = 0usize;
+        loop {
+            let mut h = String::new();
+            reader.read_line(&mut h).expect("header line");
+            let h = h.trim_end();
+            if h.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = h.split_once(':') {
+                if k.trim().eq_ignore_ascii_case("content-length") {
+                    content_length = v.trim().parse().expect("content-length");
+                }
+            }
+        }
+        let mut body = vec![0u8; content_length];
+        reader.read_exact(&mut body).expect("response body");
+        if std::str::from_utf8(&body).expect("utf-8 body").contains("\"type\":\"hit\"") {
+            hits += 1;
+        }
+    }
+    hits
+}
+
+fn main() {
+    let setup = setup();
+    let n = setup.trace.len();
+    let clients = 4usize;
+    println!(
+        "[workload: {} cached pairs, {} queries ({} mode); {} keep-alive clients; simulated LLM sleeps on miss]",
+        setup.base.len(),
+        n,
+        if smoke() { "smoke" } else { "full" },
+        clients,
+    );
+
+    // --- arm 1: direct in-process serve_batch (the PR 1 baseline path).
+    let server = build_server(&setup);
+    let reqs: Vec<QueryRequest> =
+        setup.trace.iter().map(|q| QueryRequest::new(q.text.as_str())).collect();
+    let t0 = Instant::now();
+    let replies = server.serve_batch(&reqs);
+    let direct_secs = t0.elapsed().as_secs_f64();
+    let direct_qps = n as f64 / direct_secs;
+    let direct_hits = replies.iter().filter(|r| r.is_hit()).count();
+    println!(
+        "{:<44} {:>10.0} queries/s  ({:.2}s, {} hits)",
+        "direct serve_batch (4 workers)", direct_qps, direct_secs, direct_hits
+    );
+
+    // --- arm 2: the same trace through the HTTP loopback front-end.
+    let server = build_server(&setup);
+    let handle = serve_http(
+        server,
+        HttpConfig { addr: "127.0.0.1:0".into(), workers: clients, ..HttpConfig::default() },
+    )
+    .expect("bind loopback");
+    let addr = handle.local_addr().to_string();
+    let texts: Vec<String> = setup.trace.iter().map(|q| q.text.clone()).collect();
+    let slice_len = texts.len().div_ceil(clients);
+    let t0 = Instant::now();
+    let http_hits: usize = std::thread::scope(|scope| {
+        let mut joins = Vec::new();
+        for slice in texts.chunks(slice_len) {
+            let addr = addr.clone();
+            joins.push(scope.spawn(move || client_worker(&addr, slice)));
+        }
+        joins.into_iter().map(|j| j.join().expect("client thread")).sum()
+    });
+    let http_secs = t0.elapsed().as_secs_f64();
+    let http_qps = n as f64 / http_secs;
+    println!(
+        "{:<44} {:>10.0} queries/s  ({:.2}s, {} hits)",
+        format!("HTTP loopback, {clients} connections"),
+        http_qps,
+        http_secs,
+        http_hits
+    );
+    handle.shutdown();
+
+    println!(
+        "\nhttp-vs-direct throughput ratio: {:.2}x  (wire + parse overhead; compare both against bench_batch_throughput)",
+        http_qps / direct_qps
+    );
+    println!("(SEMCACHE_BENCH_SMOKE=1 for the quick CI variant)");
+}

@@ -89,7 +89,7 @@ fn main() {
     // --- end-to-end cache lookup (hot path without LLM) ---
     let cache = SemanticCache::new(CacheConfig::default());
     for (i, v) in data.iter().take(8_000).enumerate() {
-        cache.insert(&format!("q{i}"), v, "resp");
+        cache.try_insert(&format!("q{i}"), v, "resp").expect("insert");
     }
     let mut qi = 0;
     bench("cache lookup incl. threshold (n=8k)", 100, 2000, || {

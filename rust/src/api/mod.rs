@@ -1,0 +1,521 @@
+//! Transport-agnostic typed serving API (v1).
+//!
+//! The serving surface of the crate is a pair of message types —
+//! [`QueryRequest`] in, [`QueryResponse`] out — plus an [`AdminRequest`]
+//! side channel. The coordinator's [`crate::coordinator::Server::serve`]
+//! and `serve_batch` speak these types directly; every front-end (the
+//! in-process `handle`/`handle_batch` shims, the `semcached` HTTP
+//! daemon, future transports) is a thin codec around them.
+//!
+//! Design points, replacing the pre-v1 surface:
+//!
+//! * **No sentinel returns.** A lookup-or-insert resolves to a typed
+//!   [`Outcome`] (`Hit`/`Miss`/`Rejected`) instead of the old
+//!   "`insert` returned 0" convention.
+//! * **Per-request options.** Threshold, TTL, and top-k ride on the
+//!   request ([`QueryOptions`]), replacing the global
+//!   `Server::set_threshold` override; options are validated and an
+//!   invalid request is answered with `Outcome::Rejected`, never a
+//!   panic.
+//! * **Wire-format ready.** Every type round-trips through the in-tree
+//!   [`crate::json`] module (`to_json`/`from_json`); `from_json` is
+//!   strict (unknown fields and wrong types are errors) so malformed
+//!   network input fails loudly at the boundary.
+
+use std::collections::BTreeMap;
+
+use crate::error::{anyhow, bail, Context, Result};
+use crate::json::{obj, Value};
+
+/// Largest accepted per-request `top_k`. The ANN search pre-allocates
+/// `O(top_k)` scratch, so an unbounded remote-supplied value would let
+/// one request demand an arbitrary allocation.
+pub const MAX_TOP_K: usize = 1024;
+
+/// Per-request overrides for the cache workflow. `None` means "use the
+/// server's configured value".
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct QueryOptions {
+    /// Cosine-similarity gate for this request. Must be finite and in
+    /// `[-1, 1]` (the full cosine range, so experiments can run lenient
+    /// gates below the configured production threshold).
+    pub threshold: Option<f32>,
+    /// TTL for an entry inserted by this request, ms (`Some(0)` pins the
+    /// entry as immortal, overriding a configured default TTL).
+    pub ttl_ms: Option<u64>,
+    /// Neighbors fetched before thresholding; must be in
+    /// `1..=`[`MAX_TOP_K`].
+    pub top_k: Option<usize>,
+}
+
+impl QueryOptions {
+    pub fn validate(&self) -> Result<()> {
+        if let Some(t) = self.threshold {
+            if !t.is_finite() || !(-1.0..=1.0).contains(&t) {
+                bail!("threshold must be a finite value in [-1, 1], got {t}");
+            }
+        }
+        if let Some(k) = self.top_k {
+            if k == 0 {
+                bail!("top_k must be >= 1");
+            }
+            if k > MAX_TOP_K {
+                bail!("top_k must be <= {MAX_TOP_K}, got {k}");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One query, addressed to [`crate::coordinator::Server::serve`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct QueryRequest {
+    /// The user's query text (must be non-empty).
+    pub text: String,
+    /// Ground-truth answer-group id when known (evaluation traces);
+    /// production callers leave it `None`.
+    pub cluster: Option<u64>,
+    pub options: QueryOptions,
+    /// Opaque caller identifier, echoed back on the response.
+    pub client_tag: Option<String>,
+}
+
+impl QueryRequest {
+    pub fn new(text: impl Into<String>) -> Self {
+        Self { text: text.into(), ..Self::default() }
+    }
+
+    pub fn with_cluster(mut self, cluster: u64) -> Self {
+        self.cluster = Some(cluster);
+        self
+    }
+
+    pub fn with_threshold(mut self, threshold: f32) -> Self {
+        self.options.threshold = Some(threshold);
+        self
+    }
+
+    pub fn with_ttl_ms(mut self, ttl_ms: u64) -> Self {
+        self.options.ttl_ms = Some(ttl_ms);
+        self
+    }
+
+    pub fn with_top_k(mut self, top_k: usize) -> Self {
+        self.options.top_k = Some(top_k);
+        self
+    }
+
+    pub fn with_client_tag(mut self, tag: impl Into<String>) -> Self {
+        self.client_tag = Some(tag.into());
+        self
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.text.trim().is_empty() {
+            bail!("query text must be non-empty");
+        }
+        self.options.validate()
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut m = BTreeMap::new();
+        m.insert("text".to_string(), Value::Str(self.text.clone()));
+        if let Some(c) = self.cluster {
+            m.insert("cluster".to_string(), c.into());
+        }
+        if let Some(t) = self.options.threshold {
+            m.insert("threshold".to_string(), Value::Num(t as f64));
+        }
+        if let Some(ttl) = self.options.ttl_ms {
+            m.insert("ttl_ms".to_string(), ttl.into());
+        }
+        if let Some(k) = self.options.top_k {
+            m.insert("top_k".to_string(), k.into());
+        }
+        if let Some(tag) = &self.client_tag {
+            m.insert("client_tag".to_string(), Value::Str(tag.clone()));
+        }
+        Value::Object(m)
+    }
+
+    /// Strict wire decode: unknown fields, wrong types, and invalid
+    /// option values are all errors (the HTTP layer maps them to 400s).
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let fields = v.as_object().context("query request must be a JSON object")?;
+        for key in fields.keys() {
+            match key.as_str() {
+                "text" | "cluster" | "threshold" | "ttl_ms" | "top_k" | "client_tag" => {}
+                other => bail!("unknown field '{other}' in query request"),
+            }
+        }
+        let text = v
+            .get("text")
+            .as_str()
+            .context("missing or non-string field 'text'")?
+            .to_string();
+        let threshold = match v.get("threshold") {
+            Value::Null => None,
+            t => Some(t.as_f64().context("field 'threshold' must be a number")? as f32),
+        };
+        let top_k = match v.get("top_k") {
+            Value::Null => None,
+            t => Some(t.as_usize().context("field 'top_k' must be a non-negative integer")?),
+        };
+        let client_tag = match v.get("client_tag") {
+            Value::Null => None,
+            t => Some(t.as_str().context("field 'client_tag' must be a string")?.to_string()),
+        };
+        let req = QueryRequest {
+            text,
+            cluster: opt_u64(v.get("cluster"), "cluster")?,
+            options: QueryOptions { threshold, ttl_ms: opt_u64(v.get("ttl_ms"), "ttl_ms")?, top_k },
+            client_tag,
+        };
+        req.validate()?;
+        Ok(req)
+    }
+}
+
+/// How a query resolved against the cache.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Outcome {
+    /// Served from the semantic cache.
+    Hit { score: f32, entry_id: u64 },
+    /// Cache miss: the (simulated) LLM answered and the reply was
+    /// inserted under `inserted_id`.
+    Miss { inserted_id: u64 },
+    /// The request was not served by the normal workflow (invalid
+    /// options, rejected insert).
+    Rejected { reason: String },
+}
+
+impl Outcome {
+    pub fn is_hit(&self) -> bool {
+        matches!(self, Outcome::Hit { .. })
+    }
+
+    pub fn to_json(&self) -> Value {
+        match self {
+            Outcome::Hit { score, entry_id } => obj([
+                ("type", "hit".into()),
+                ("score", Value::Num(*score as f64)),
+                ("entry_id", (*entry_id).into()),
+            ]),
+            Outcome::Miss { inserted_id } => {
+                obj([("type", "miss".into()), ("inserted_id", (*inserted_id).into())])
+            }
+            Outcome::Rejected { reason } => {
+                obj([("type", "rejected".into()), ("reason", reason.as_str().into())])
+            }
+        }
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        match v.get("type").as_str() {
+            Some("hit") => Ok(Outcome::Hit {
+                score: v.get("score").as_f64().context("hit outcome missing number 'score'")?
+                    as f32,
+                entry_id: v
+                    .get("entry_id")
+                    .as_u64()
+                    .context("hit outcome missing integer 'entry_id'")?,
+            }),
+            Some("miss") => Ok(Outcome::Miss {
+                inserted_id: v
+                    .get("inserted_id")
+                    .as_u64()
+                    .context("miss outcome missing integer 'inserted_id'")?,
+            }),
+            Some("rejected") => Ok(Outcome::Rejected {
+                reason: v
+                    .get("reason")
+                    .as_str()
+                    .context("rejected outcome missing string 'reason'")?
+                    .to_string(),
+            }),
+            _ => Err(anyhow!("outcome 'type' must be hit|miss|rejected")),
+        }
+    }
+}
+
+/// Per-stage latency of one served query, ms. Measured wall-clock for
+/// everything the process does, simulated time for the LLM leg (see
+/// DESIGN.md §3).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LatencyBreakdown {
+    pub total_ms: f64,
+    pub embed_ms: f64,
+    pub index_ms: f64,
+    /// Simulated upstream latency (0 for cache hits).
+    pub llm_ms: f64,
+}
+
+impl LatencyBreakdown {
+    pub fn to_json(&self) -> Value {
+        obj([
+            ("total_ms", self.total_ms.into()),
+            ("embed_ms", self.embed_ms.into()),
+            ("index_ms", self.index_ms.into()),
+            ("llm_ms", self.llm_ms.into()),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let num = |k: &str| {
+            v.get(k).as_f64().with_context(|| format!("latency field '{k}' must be a number"))
+        };
+        Ok(Self {
+            total_ms: num("total_ms")?,
+            embed_ms: num("embed_ms")?,
+            index_ms: num("index_ms")?,
+            llm_ms: num("llm_ms")?,
+        })
+    }
+}
+
+/// The answer to a [`QueryRequest`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct QueryResponse {
+    /// The response text. Empty for requests rejected *before* serving
+    /// (invalid options); a request rejected at insert time — after the
+    /// upstream already answered — still carries the upstream's text, so
+    /// the answer is never silently dropped.
+    pub response: String,
+    pub outcome: Outcome,
+    pub latency: LatencyBreakdown,
+    /// Judge verdict for cache hits when ground truth was provided.
+    pub judged_positive: Option<bool>,
+    /// Cluster of the cached entry that served a hit.
+    pub matched_cluster: Option<u64>,
+    /// Echo of the request's `client_tag`.
+    pub client_tag: Option<String>,
+}
+
+impl QueryResponse {
+    /// The answer for a request that failed validation or insert.
+    pub fn rejected(req: &QueryRequest, reason: impl Into<String>) -> Self {
+        Self {
+            response: String::new(),
+            outcome: Outcome::Rejected { reason: reason.into() },
+            latency: LatencyBreakdown::default(),
+            judged_positive: None,
+            matched_cluster: None,
+            client_tag: req.client_tag.clone(),
+        }
+    }
+
+    pub fn is_hit(&self) -> bool {
+        self.outcome.is_hit()
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut m = BTreeMap::new();
+        m.insert("response".to_string(), Value::Str(self.response.clone()));
+        m.insert("outcome".to_string(), self.outcome.to_json());
+        m.insert("latency".to_string(), self.latency.to_json());
+        if let Some(b) = self.judged_positive {
+            m.insert("judged_positive".to_string(), Value::Bool(b));
+        }
+        if let Some(c) = self.matched_cluster {
+            m.insert("matched_cluster".to_string(), c.into());
+        }
+        if let Some(tag) = &self.client_tag {
+            m.insert("client_tag".to_string(), Value::Str(tag.clone()));
+        }
+        Value::Object(m)
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        v.as_object().context("query response must be a JSON object")?;
+        Ok(Self {
+            response: v.get("response").as_str().context("missing string 'response'")?.to_string(),
+            outcome: Outcome::from_json(v.get("outcome"))?,
+            latency: LatencyBreakdown::from_json(v.get("latency"))?,
+            judged_positive: match v.get("judged_positive") {
+                Value::Null => None,
+                b => Some(b.as_bool().context("'judged_positive' must be a boolean")?),
+            },
+            matched_cluster: opt_u64(v.get("matched_cluster"), "matched_cluster")?,
+            client_tag: match v.get("client_tag") {
+                Value::Null => None,
+                t => Some(t.as_str().context("'client_tag' must be a string")?.to_string()),
+            },
+        })
+    }
+}
+
+/// Administrative operations on a running server.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdminRequest {
+    /// Drop every cached entry (all partitions).
+    Flush,
+    /// Run one housekeeping pass (TTL sweep + rebuild check) now.
+    Housekeep,
+    /// Snapshot serving metrics and cache state.
+    Stats,
+}
+
+impl AdminRequest {
+    pub fn to_json(&self) -> Value {
+        let action = match self {
+            AdminRequest::Flush => "flush",
+            AdminRequest::Housekeep => "housekeep",
+            AdminRequest::Stats => "stats",
+        };
+        obj([("action", action.into())])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        match v.get("action").as_str() {
+            Some("flush") => Ok(AdminRequest::Flush),
+            Some("housekeep") => Ok(AdminRequest::Housekeep),
+            Some("stats") => Ok(AdminRequest::Stats),
+            Some(other) => Err(anyhow!("unknown admin action '{other}' (flush|housekeep|stats)")),
+            None => Err(anyhow!("admin request must carry a string field 'action'")),
+        }
+    }
+}
+
+/// The result of an [`AdminRequest`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum AdminResponse {
+    Flushed { removed: usize },
+    Housekept { expired: usize, rebuilt: usize },
+    Stats(Value),
+}
+
+impl AdminResponse {
+    pub fn to_json(&self) -> Value {
+        match self {
+            AdminResponse::Flushed { removed } => {
+                obj([("action", "flush".into()), ("removed", (*removed).into())])
+            }
+            AdminResponse::Housekept { expired, rebuilt } => obj([
+                ("action", "housekeep".into()),
+                ("expired", (*expired).into()),
+                ("rebuilt", (*rebuilt).into()),
+            ]),
+            AdminResponse::Stats(v) => v.clone(),
+        }
+    }
+}
+
+fn opt_u64(v: &Value, field: &str) -> Result<Option<u64>> {
+    match v {
+        Value::Null => Ok(None),
+        other => other
+            .as_u64()
+            .with_context(|| format!("field '{field}' must be a non-negative integer"))
+            .map(Some),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::parse;
+
+    #[test]
+    fn request_builder_and_roundtrip() {
+        let req = QueryRequest::new("how do i reset my password")
+            .with_cluster(42)
+            .with_threshold(0.75)
+            .with_ttl_ms(30_000)
+            .with_top_k(3)
+            .with_client_tag("bot-7");
+        req.validate().unwrap();
+        let wire = req.to_json().to_string();
+        let back = QueryRequest::from_json(&parse(&wire).unwrap()).unwrap();
+        assert_eq!(back, req);
+    }
+
+    #[test]
+    fn minimal_request_omits_optional_fields() {
+        let req = QueryRequest::new("hello");
+        let j = req.to_json();
+        assert!(j.get("cluster").is_null());
+        assert!(j.get("threshold").is_null());
+        let back = QueryRequest::from_json(&j).unwrap();
+        assert_eq!(back, req);
+    }
+
+    #[test]
+    fn strict_decode_rejects_malformed_requests() {
+        for (src, why) in [
+            (r#"[1]"#, "non-object"),
+            (r#"{}"#, "missing text"),
+            (r#"{"text": 3}"#, "non-string text"),
+            (r#"{"text": "  "}"#, "blank text"),
+            (r#"{"text": "q", "bogus": 1}"#, "unknown field"),
+            (r#"{"text": "q", "top_k": 0}"#, "top_k zero"),
+            (r#"{"text": "q", "top_k": -1}"#, "negative top_k"),
+            (r#"{"text": "q", "top_k": 1000000000000}"#, "top_k beyond MAX_TOP_K"),
+            (r#"{"text": "q", "threshold": 2.0}"#, "threshold out of range"),
+            (r#"{"text": "q", "threshold": "hi"}"#, "non-number threshold"),
+            (r#"{"text": "q", "ttl_ms": -5}"#, "negative ttl"),
+            (r#"{"text": "q", "cluster": 1.5}"#, "fractional cluster"),
+        ] {
+            let v = parse(src).unwrap();
+            assert!(QueryRequest::from_json(&v).is_err(), "should reject {why}: {src}");
+        }
+    }
+
+    #[test]
+    fn options_validate_nan_and_range() {
+        let mut o = QueryOptions::default();
+        o.threshold = Some(f32::NAN);
+        assert!(o.validate().is_err(), "NaN threshold");
+        o.threshold = Some(-1.5);
+        assert!(o.validate().is_err(), "below cosine range");
+        o.threshold = Some(-1.0);
+        assert!(o.validate().is_ok(), "lenient but legal");
+        o.threshold = None;
+        o.top_k = Some(MAX_TOP_K);
+        assert!(o.validate().is_ok(), "cap itself is legal");
+        o.top_k = Some(MAX_TOP_K + 1);
+        assert!(o.validate().is_err(), "beyond the allocation cap");
+    }
+
+    #[test]
+    fn outcome_roundtrip_and_bad_type() {
+        for o in [
+            Outcome::Hit { score: 0.8125, entry_id: 7 },
+            Outcome::Miss { inserted_id: 1 },
+            Outcome::Rejected { reason: "top_k must be >= 1".into() },
+        ] {
+            let wire = o.to_json().to_string();
+            assert_eq!(Outcome::from_json(&parse(&wire).unwrap()).unwrap(), o);
+        }
+        assert!(Outcome::from_json(&parse(r#"{"type": "meow"}"#).unwrap()).is_err());
+        assert!(Outcome::from_json(&parse(r#"{"type": "hit"}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let resp = QueryResponse {
+            response: "click 'forgot password'".into(),
+            outcome: Outcome::Hit { score: 0.9375, entry_id: 12 },
+            latency: LatencyBreakdown { total_ms: 1.5, embed_ms: 1.25, index_ms: 0.25, llm_ms: 0.0 },
+            judged_positive: Some(true),
+            matched_cluster: Some(42),
+            client_tag: Some("bot-7".into()),
+        };
+        let wire = resp.to_json().to_string();
+        assert_eq!(QueryResponse::from_json(&parse(&wire).unwrap()).unwrap(), resp);
+        // Optional fields absent stay None.
+        let bare = QueryResponse::rejected(&QueryRequest::new("q"), "nope");
+        let wire = bare.to_json().to_string();
+        assert_eq!(QueryResponse::from_json(&parse(&wire).unwrap()).unwrap(), bare);
+    }
+
+    #[test]
+    fn admin_roundtrip() {
+        for a in [AdminRequest::Flush, AdminRequest::Housekeep, AdminRequest::Stats] {
+            let wire = a.to_json().to_string();
+            assert_eq!(AdminRequest::from_json(&parse(&wire).unwrap()).unwrap(), a);
+        }
+        assert!(AdminRequest::from_json(&parse(r#"{"action": "reboot"}"#).unwrap()).is_err());
+        let r = AdminResponse::Housekept { expired: 3, rebuilt: 1 };
+        assert_eq!(r.to_json().get("expired").as_usize(), Some(3));
+    }
+}

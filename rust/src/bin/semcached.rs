@@ -1,0 +1,161 @@
+//! `semcached` — the semantic cache as a network service.
+//!
+//! `semcached serve` binds the zero-dependency HTTP/1.1 front-end
+//! ([`semcache::coordinator::http`]) over a cache-fronted
+//! [`semcache::coordinator::Server`]; the `query`/`metrics`/`admin`
+//! subcommands are a tiny client for it (no `curl` needed in CI).
+//! Run `semcached help` for usage.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use semcache::cli::{Args, SEMCACHED_USAGE};
+use semcache::config::Config;
+use semcache::coordinator::{
+    http_request, serve_http, HttpConfig, Server, ServerConfig,
+};
+use semcache::embedding::build_encoder;
+use semcache::error::{bail, Context, Result};
+use semcache::json::to_string_pretty;
+use semcache::workload::{DatasetConfig, WorkloadGenerator};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.subcommand.as_str() {
+        "" | "help" => {
+            print!("{SEMCACHED_USAGE}");
+            Ok(())
+        }
+        "serve" => cmd_serve(&args),
+        "query" => cmd_query(&args),
+        "metrics" => cmd_metrics(&args),
+        "admin" => cmd_admin(&args),
+        other => bail!("unknown subcommand '{other}' (try `semcached help`)"),
+    }
+}
+
+/// Assemble the typed config from file + CLI overrides (the daemon's
+/// own flags are reserved and skipped).
+fn load_config(args: &Args) -> Result<Config> {
+    let mut cfg = Config::from_args(
+        args,
+        &["port", "bind", "http-workers", "workers", "populate", "port-file"],
+    )?;
+    if let Some(w) = args.opt("workers") {
+        cfg.workers = w.parse().context("--workers")?;
+    }
+    Ok(cfg)
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    // The validating builders are the construction path for the daemon:
+    // a bad --similarity_threshold (NaN, out of range) fails here, at
+    // startup, not as a panic mid-request.
+    let server_cfg = ServerConfig::from_app_config(&cfg)?;
+    let encoder = build_encoder(&cfg)?;
+    let server = Arc::new(Server::new(encoder, server_cfg));
+
+    if let Some(scale) = args.opt("populate") {
+        let ds_cfg = match scale {
+            "paper" => DatasetConfig::paper(),
+            "small" => DatasetConfig::small(),
+            "tiny" => DatasetConfig::tiny(),
+            other => bail!("unknown --populate scale '{other}' (paper|small|tiny)"),
+        };
+        let ds = WorkloadGenerator::new(cfg.workload_seed).generate(&ds_cfg);
+        eprintln!("[populating cache with {} QA pairs...]", ds.base.len());
+        server.populate(&ds.base);
+        server.register_ground_truth(&ds);
+    }
+    let _hk = server.start_housekeeping(Duration::from_millis(cfg.housekeeping_ms));
+
+    let port: u16 = args.opt_parse("port", 8080)?;
+    let bind = args.opt("bind").unwrap_or("127.0.0.1");
+    let http_workers: usize = args.opt_parse("http-workers", 4)?;
+    let handle = serve_http(
+        server,
+        HttpConfig {
+            addr: format!("{bind}:{port}"),
+            workers: http_workers,
+            ..HttpConfig::default()
+        },
+    )?;
+    let addr = handle.local_addr();
+    if let Some(path) = args.opt("port-file") {
+        std::fs::write(path, addr.to_string())
+            .with_context(|| format!("writing --port-file {path}"))?;
+    }
+    println!("semcached listening on http://{addr}");
+    println!("endpoints: POST /v1/query /v1/query_batch /v1/admin | GET /v1/metrics /v1/health");
+    // Serve until killed; the accept/worker threads do all the work.
+    loop {
+        std::thread::sleep(Duration::from_secs(3600));
+    }
+}
+
+fn addr_of(args: &Args) -> String {
+    args.opt("addr").unwrap_or("127.0.0.1:8080").to_string()
+}
+
+/// Print a response and fail the process on non-2xx, so shell callers
+/// (verify.sh) can gate on the exit code.
+fn finish(status: u16, body: &semcache::json::Value) -> Result<()> {
+    print!("{}", to_string_pretty(body));
+    if status != 200 {
+        bail!("server returned HTTP {status}");
+    }
+    Ok(())
+}
+
+fn cmd_query(args: &Args) -> Result<()> {
+    let text = args.positional().join(" ");
+    if text.trim().is_empty() {
+        bail!("usage: semcached query [--addr host:port] <text>");
+    }
+    let mut req = semcache::api::QueryRequest::new(text);
+    if let Some(t) = args.opt("threshold") {
+        req = req.with_threshold(t.parse().context("--threshold")?);
+    }
+    if let Some(k) = args.opt("top-k") {
+        req = req.with_top_k(k.parse().context("--top-k")?);
+    }
+    if let Some(ttl) = args.opt("ttl-ms") {
+        req = req.with_ttl_ms(ttl.parse().context("--ttl-ms")?);
+    }
+    if let Some(tag) = args.opt("tag") {
+        req = req.with_client_tag(tag);
+    }
+    let (status, body) =
+        http_request(&addr_of(args), "POST", "/v1/query", Some(&req.to_json().to_string()))?;
+    finish(status, &body)
+}
+
+fn cmd_metrics(args: &Args) -> Result<()> {
+    let (status, body) = http_request(&addr_of(args), "GET", "/v1/metrics", None)?;
+    finish(status, &body)
+}
+
+fn cmd_admin(args: &Args) -> Result<()> {
+    let action = match args.positional().first().map(|s| s.as_str()) {
+        Some("flush") => semcache::api::AdminRequest::Flush,
+        Some("housekeep") => semcache::api::AdminRequest::Housekeep,
+        Some("stats") | None => semcache::api::AdminRequest::Stats,
+        Some(other) => bail!("unknown admin action '{other}' (flush|housekeep|stats)"),
+    };
+    let (status, body) = http_request(
+        &addr_of(args),
+        "POST",
+        "/v1/admin",
+        Some(&action.to_json().to_string()),
+    )?;
+    finish(status, &body)
+}

@@ -18,6 +18,7 @@ pub use partition::Partition;
 use std::collections::HashMap;
 use std::sync::Arc;
 
+use crate::error::{bail, Result};
 use crate::index::HnswConfig;
 use crate::store::Clock;
 
@@ -61,6 +62,114 @@ impl Default for CacheConfig {
             rebuild_garbage_ratio: 0.3,
             store_shards: 16,
         }
+    }
+}
+
+impl CacheConfig {
+    /// A validating builder over the paper defaults:
+    /// `CacheConfig::builder().threshold(0.85).build()?`.
+    pub fn builder() -> CacheConfigBuilder {
+        CacheConfigBuilder { cfg: CacheConfig::default() }
+    }
+
+    /// Assemble a validated cache config from the app-level
+    /// [`crate::config::Config`] (shared by both binaries).
+    pub fn from_app_config(cfg: &crate::config::Config) -> Result<CacheConfig> {
+        CacheConfig::builder()
+            .threshold(cfg.similarity_threshold)
+            .ttl_ms(cfg.ttl_secs * 1000)
+            .capacity(cfg.cache_capacity)
+            .top_k(cfg.top_k)
+            .index(match cfg.index_kind.as_str() {
+                "flat" => IndexKind::Flat,
+                _ => IndexKind::Hnsw,
+            })
+            .hnsw(HnswConfig {
+                m: cfg.hnsw_m,
+                ef_construction: cfg.hnsw_ef_construction,
+                ef_search: cfg.hnsw_ef_search,
+                ..HnswConfig::default()
+            })
+            .rebuild_garbage_ratio(cfg.rebuild_garbage_ratio)
+            .store_shards(cfg.store_shards)
+            .build()
+    }
+
+    /// Reject configurations the cache cannot serve correctly: NaN or
+    /// out-of-range `threshold`/`rebuild_garbage_ratio`, `top_k == 0`,
+    /// `store_shards == 0`.
+    pub fn validate(&self) -> Result<()> {
+        if !self.threshold.is_finite() || !(0.0..=1.0).contains(&self.threshold) {
+            bail!("cache threshold must be a finite value in [0, 1], got {}", self.threshold);
+        }
+        if self.top_k == 0 {
+            bail!("cache top_k must be >= 1");
+        }
+        if self.store_shards == 0 {
+            bail!("cache store_shards must be >= 1");
+        }
+        if !self.rebuild_garbage_ratio.is_finite()
+            || !(0.0..=1.0).contains(&self.rebuild_garbage_ratio)
+        {
+            bail!(
+                "cache rebuild_garbage_ratio must be a finite value in [0, 1], got {}",
+                self.rebuild_garbage_ratio
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Builder for [`CacheConfig`]; `build` validates the result.
+#[derive(Debug, Clone)]
+pub struct CacheConfigBuilder {
+    cfg: CacheConfig,
+}
+
+impl CacheConfigBuilder {
+    pub fn threshold(mut self, threshold: f32) -> Self {
+        self.cfg.threshold = threshold;
+        self
+    }
+
+    pub fn ttl_ms(mut self, ttl_ms: u64) -> Self {
+        self.cfg.ttl_ms = ttl_ms;
+        self
+    }
+
+    pub fn capacity(mut self, capacity: usize) -> Self {
+        self.cfg.capacity = capacity;
+        self
+    }
+
+    pub fn top_k(mut self, top_k: usize) -> Self {
+        self.cfg.top_k = top_k;
+        self
+    }
+
+    pub fn index(mut self, index: IndexKind) -> Self {
+        self.cfg.index = index;
+        self
+    }
+
+    pub fn hnsw(mut self, hnsw: HnswConfig) -> Self {
+        self.cfg.hnsw = hnsw;
+        self
+    }
+
+    pub fn rebuild_garbage_ratio(mut self, ratio: f64) -> Self {
+        self.cfg.rebuild_garbage_ratio = ratio;
+        self
+    }
+
+    pub fn store_shards(mut self, shards: usize) -> Self {
+        self.cfg.store_shards = shards;
+        self
+    }
+
+    pub fn build(self) -> Result<CacheConfig> {
+        self.cfg.validate()?;
+        Ok(self.cfg)
     }
 }
 
@@ -139,15 +248,27 @@ impl SemanticCache {
     /// Empty embeddings and unpopulated partitions miss cleanly (no
     /// partition is allocated as a lookup side effect).
     pub fn lookup_with_threshold(&self, embedding: &[f32], threshold: f32) -> Option<CacheHit> {
+        self.lookup_with_opts(embedding, threshold, None)
+    }
+
+    /// Lookup with per-request threshold and (optionally) top-k — the
+    /// entry point used by the typed serving API.
+    pub fn lookup_with_opts(
+        &self,
+        embedding: &[f32],
+        threshold: f32,
+        top_k: Option<usize>,
+    ) -> Option<CacheHit> {
         if embedding.is_empty() {
             return None;
         }
-        self.partition_if_exists(embedding.len())?.lookup(embedding, threshold)
+        self.partition_if_exists(embedding.len())?.lookup_k(embedding, threshold, top_k)
     }
 
-    /// Insert a question/response pair under its embedding.
-    pub fn insert(&self, question: &str, embedding: &[f32], response: &str) -> u64 {
-        self.insert_entry(
+    /// Insert a question/response pair under its embedding; returns the
+    /// new entry's id.
+    pub fn try_insert(&self, question: &str, embedding: &[f32], response: &str) -> Result<u64> {
+        self.try_insert_entry(
             embedding,
             CachedEntry {
                 question: question.to_string(),
@@ -157,13 +278,48 @@ impl SemanticCache {
         )
     }
 
-    /// Insert an entry; returns its id. Empty embeddings are rejected as
-    /// a no-op returning 0 (never a real id — ids start at 1).
-    pub fn insert_entry(&self, embedding: &[f32], entry: CachedEntry) -> u64 {
+    /// Insert an entry under the configured TTL; returns its id.
+    pub fn try_insert_entry(&self, embedding: &[f32], entry: CachedEntry) -> Result<u64> {
+        self.try_insert_entry_ttl(embedding, entry, None)
+    }
+
+    /// Insert an entry with a per-entry TTL override (`None` = the
+    /// configured default, `Some(0)` = immortal); returns its id.
+    pub fn try_insert_entry_ttl(
+        &self,
+        embedding: &[f32],
+        entry: CachedEntry,
+        ttl_ms: Option<u64>,
+    ) -> Result<u64> {
         if embedding.is_empty() {
-            return 0;
+            bail!("cannot insert an empty embedding");
         }
-        self.partition(embedding.len()).insert(embedding, entry)
+        Ok(self.partition(embedding.len()).insert_with_ttl(embedding, entry, ttl_ms))
+    }
+
+    /// Pre-v1 insert with the `0 = rejected` sentinel.
+    #[deprecated(since = "0.2.0", note = "use try_insert, which reports rejection as an error")]
+    pub fn insert(&self, question: &str, embedding: &[f32], response: &str) -> u64 {
+        self.try_insert(question, embedding, response).unwrap_or(0)
+    }
+
+    /// Pre-v1 entry insert with the `0 = rejected` sentinel (never a
+    /// real id — ids start at 1).
+    #[deprecated(
+        since = "0.2.0",
+        note = "use try_insert_entry, which reports rejection as an error"
+    )]
+    pub fn insert_entry(&self, embedding: &[f32], entry: CachedEntry) -> u64 {
+        self.try_insert_entry(embedding, entry).unwrap_or(0)
+    }
+
+    /// Drop every entry and partition. Returns the number of live
+    /// entries removed (the `/v1/admin` flush operation).
+    pub fn clear(&self) -> usize {
+        let mut parts = self.partitions.write().unwrap();
+        let removed = parts.values().map(|p| p.len()).sum();
+        parts.clear();
+        removed
     }
 
     /// Total live entries across partitions.
@@ -218,7 +374,7 @@ mod tests {
         let cache = SemanticCache::new(CacheConfig::default());
         let e = unit(16, 3);
         assert!(cache.lookup(&e).is_none());
-        cache.insert("q", &e, "r");
+        cache.try_insert("q", &e, "r").unwrap();
         let hit = cache.lookup(&e).expect("exact match hits");
         assert_eq!(hit.entry.response, "r");
         assert!(hit.score > 0.999);
@@ -227,7 +383,7 @@ mod tests {
     #[test]
     fn threshold_gates_hits() {
         let cache = SemanticCache::new(CacheConfig::default());
-        cache.insert("q", &unit(16, 0), "r");
+        cache.try_insert("q", &unit(16, 0), "r").unwrap();
         // cos 0.9 passes the 0.8 gate; cos 0.7 does not.
         assert!(cache.lookup(&near(16, 0, 0.9)).is_some());
         assert!(cache.lookup(&near(16, 0, 0.7)).is_none());
@@ -238,8 +394,8 @@ mod tests {
     #[test]
     fn partitions_by_dim_are_independent() {
         let cache = SemanticCache::new(CacheConfig::default());
-        cache.insert("a", &unit(16, 0), "r16");
-        cache.insert("b", &unit(32, 0), "r32");
+        cache.try_insert("a", &unit(16, 0), "r16").unwrap();
+        cache.try_insert("b", &unit(32, 0), "r32").unwrap();
         assert_eq!(cache.len(), 2);
         let hit = cache.lookup(&unit(32, 0)).unwrap();
         assert_eq!(hit.entry.response, "r32");
@@ -253,7 +409,7 @@ mod tests {
         let cfg = CacheConfig { ttl_ms: 1_000, ..Default::default() };
         let cache = SemanticCache::with_clock(cfg, clock.clone());
         let e = unit(8, 2);
-        cache.insert("q", &e, "r");
+        cache.try_insert("q", &e, "r").unwrap();
         assert!(cache.lookup(&e).is_some());
         clock.advance(1_500);
         assert!(cache.lookup(&e).is_none(), "expired entry must not hit");
@@ -269,16 +425,21 @@ mod tests {
     #[test]
     fn empty_embedding_and_unpopulated_partition_miss_cleanly() {
         let cache = SemanticCache::new(CacheConfig::default());
-        // Empty embedding: lookup misses, insert is a rejected no-op.
+        // Empty embedding: lookup misses, insert is a typed rejection —
+        // and the deprecated sentinel shim still reports it as 0.
         assert!(cache.lookup(&[]).is_none());
-        assert_eq!(cache.insert("q", &[], "r"), 0);
+        assert!(cache.try_insert("q", &[], "r").is_err());
+        #[allow(deprecated)]
+        {
+            assert_eq!(cache.insert("q", &[], "r"), 0);
+        }
         assert_eq!(cache.len(), 0);
         // Lookup against a dimension that was never populated must miss
         // without allocating a partition as a side effect.
         assert!(cache.lookup(&unit(24, 0)).is_none());
         assert!(cache.partition_if_exists(24).is_none());
         // A real insert then behaves normally.
-        cache.insert("q", &unit(24, 0), "r");
+        cache.try_insert("q", &unit(24, 0), "r").unwrap();
         assert!(cache.partition_if_exists(24).is_some());
         assert!(cache.lookup(&unit(24, 0)).is_some());
     }
@@ -286,8 +447,8 @@ mod tests {
     #[test]
     fn best_of_multiple_candidates_wins() {
         let cache = SemanticCache::new(CacheConfig::default());
-        cache.insert("far", &near(16, 0, 0.85), "far-r");
-        cache.insert("near", &unit(16, 0), "near-r");
+        cache.try_insert("far", &near(16, 0, 0.85), "far-r").unwrap();
+        cache.try_insert("near", &unit(16, 0), "near-r").unwrap();
         let hit = cache.lookup(&unit(16, 0)).unwrap();
         assert_eq!(hit.entry.response, "near-r");
     }
@@ -298,7 +459,7 @@ mod tests {
         let cfg = CacheConfig { ttl_ms: 100, rebuild_garbage_ratio: 0.2, ..Default::default() };
         let cache = SemanticCache::with_clock(cfg, clock.clone());
         for i in 0..50 {
-            cache.insert(&format!("q{i}"), &near(16, i % 16, 0.99), "r");
+            cache.try_insert(&format!("q{i}"), &near(16, i % 16, 0.99), "r").unwrap();
         }
         clock.advance(200);
         let (expired, rebuilt) = cache.housekeep();
@@ -306,8 +467,89 @@ mod tests {
         assert_eq!(rebuilt, 1, "all entries dead -> garbage ratio 1.0 -> rebuild");
         assert_eq!(cache.len(), 0);
         // Cache still works after rebuild.
-        cache.insert("fresh", &unit(16, 5), "fr");
+        cache.try_insert("fresh", &unit(16, 5), "fr").unwrap();
         clock.advance(50);
         assert!(cache.lookup(&unit(16, 5)).is_some());
+    }
+
+    #[test]
+    fn builder_accepts_valid_and_rejects_invalid() {
+        let cfg = CacheConfig::builder()
+            .threshold(0.85)
+            .ttl_ms(1_000)
+            .capacity(100)
+            .top_k(3)
+            .index(IndexKind::Flat)
+            .rebuild_garbage_ratio(0.5)
+            .store_shards(4)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.threshold, 0.85);
+        assert_eq!(cfg.top_k, 3);
+        assert_eq!(cfg.index, IndexKind::Flat);
+
+        assert!(CacheConfig::builder().threshold(f32::NAN).build().is_err(), "NaN threshold");
+        assert!(CacheConfig::builder().threshold(1.5).build().is_err(), "threshold > 1");
+        assert!(CacheConfig::builder().threshold(-0.1).build().is_err(), "threshold < 0");
+        assert!(CacheConfig::builder().top_k(0).build().is_err(), "top_k == 0");
+        assert!(CacheConfig::builder().store_shards(0).build().is_err(), "store_shards == 0");
+        assert!(
+            CacheConfig::builder().rebuild_garbage_ratio(f64::NAN).build().is_err(),
+            "NaN garbage ratio"
+        );
+        assert!(
+            CacheConfig::builder().rebuild_garbage_ratio(2.0).build().is_err(),
+            "garbage ratio > 1"
+        );
+    }
+
+    #[test]
+    fn clear_drops_all_partitions() {
+        let cache = SemanticCache::new(CacheConfig::default());
+        cache.try_insert("a", &unit(16, 0), "r16").unwrap();
+        cache.try_insert("b", &unit(32, 0), "r32").unwrap();
+        assert_eq!(cache.clear(), 2);
+        assert_eq!(cache.len(), 0);
+        assert!(cache.lookup(&unit(16, 0)).is_none());
+        // The cache keeps serving after a flush.
+        cache.try_insert("c", &unit(16, 1), "again").unwrap();
+        assert!(cache.lookup(&unit(16, 1)).is_some());
+    }
+
+    #[test]
+    fn per_entry_ttl_overrides_config_default() {
+        let clock = Arc::new(ManualClock::new(0));
+        let cfg = CacheConfig { ttl_ms: 10_000, ..Default::default() };
+        let cache = SemanticCache::with_clock(cfg, clock.clone());
+        let short = unit(8, 0);
+        let default = unit(8, 2);
+        let immortal = unit(8, 4);
+        let mk = |q: &str| CachedEntry { question: q.into(), response: q.into(), cluster: 0 };
+        cache.try_insert_entry_ttl(&short, mk("short"), Some(500)).unwrap();
+        cache.try_insert_entry_ttl(&default, mk("default"), None).unwrap();
+        cache.try_insert_entry_ttl(&immortal, mk("immortal"), Some(0)).unwrap();
+        clock.advance(1_000);
+        assert!(cache.lookup(&short).is_none(), "short-TTL entry must expire first");
+        assert!(cache.lookup(&default).is_some());
+        clock.advance(20_000);
+        assert!(cache.lookup(&default).is_none(), "config default TTL still applies");
+        assert!(cache.lookup(&immortal).is_some(), "ttl 0 pins the entry");
+    }
+
+    #[test]
+    fn per_request_top_k_overrides_config() {
+        // Config top_k = 1 and a per-request override of 5 must agree on
+        // the best-scoring hit (the override widens the candidate set,
+        // never changes the winner).
+        let cfg = CacheConfig { index: IndexKind::Flat, top_k: 1, ..Default::default() };
+        let cache = SemanticCache::new(cfg);
+        cache.try_insert("best", &unit(16, 0), "best-r").unwrap();
+        cache.try_insert("other", &near(16, 0, 0.9), "other-r").unwrap();
+        // Default (config) top_k = 1: best match wins.
+        let hit = cache.lookup_with_opts(&unit(16, 0), 0.8, None).unwrap();
+        assert_eq!(hit.entry.response, "best-r");
+        // Per-request top_k = 5 must behave identically for the best hit.
+        let hit = cache.lookup_with_opts(&unit(16, 0), 0.8, Some(5)).unwrap();
+        assert_eq!(hit.entry.response, "best-r");
     }
 }

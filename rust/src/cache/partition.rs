@@ -64,11 +64,23 @@ impl Partition {
     }
 
     pub fn lookup(&self, embedding: &[f32], threshold: f32) -> Option<CacheHit> {
+        self.lookup_k(embedding, threshold, None)
+    }
+
+    /// Lookup with a per-request candidate-set width (`None` = the
+    /// configured `top_k`).
+    pub fn lookup_k(
+        &self,
+        embedding: &[f32],
+        threshold: f32,
+        top_k: Option<usize>,
+    ) -> Option<CacheHit> {
         assert_eq!(embedding.len(), self.dim, "embedding dim mismatch");
+        let k = top_k.unwrap_or(self.top_k).max(1);
         let neighbors = {
             // Shared lock: concurrent lookups search in parallel.
             let index = self.index.read().unwrap();
-            index.search(embedding, self.top_k)
+            index.search(embedding, k)
         };
         for n in neighbors {
             if n.score < threshold {
@@ -90,9 +102,23 @@ impl Partition {
     }
 
     pub fn insert(&self, embedding: &[f32], entry: CachedEntry) -> u64 {
+        self.insert_with_ttl(embedding, entry, None)
+    }
+
+    /// Insert with a per-entry TTL override (`None` = store default,
+    /// `Some(0)` = immortal).
+    pub fn insert_with_ttl(
+        &self,
+        embedding: &[f32],
+        entry: CachedEntry,
+        ttl_ms: Option<u64>,
+    ) -> u64 {
         assert_eq!(embedding.len(), self.dim, "embedding dim mismatch");
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.store.set(&key(id), entry);
+        match ttl_ms {
+            Some(ttl) => self.store.set_ttl(&key(id), entry, ttl),
+            None => self.store.set(&key(id), entry),
+        }
         self.embeddings.lock().unwrap().insert(id, embedding.to_vec());
         self.index.write().unwrap().insert(id, embedding);
         id

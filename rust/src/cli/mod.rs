@@ -1,4 +1,6 @@
-//! Hand-rolled CLI argument parser (no `clap` in the offline build).
+//! Hand-rolled CLI argument parser (no `clap` in the offline build),
+//! shared by the `semcache` experiment binary and the `semcached`
+//! serving daemon.
 //!
 //! Grammar: `semcache <subcommand> [--key value]... [--flag]...`
 //! Unknown keys are an error; `--help` short-circuits.
@@ -100,6 +102,48 @@ EXAMPLES:
     semcache experiment all --scale small --encoder native
     semcache sweep --out results
     semcache serve --qps 200 --workers 8
+
+SEE ALSO:
+    semcached — the cache as a network service (HTTP/1.1 JSON API)
+";
+
+pub const SEMCACHED_USAGE: &str = "\
+semcached — GPT Semantic Cache as a network service
+
+USAGE:
+    semcached <SUBCOMMAND> [OPTIONS]
+
+SUBCOMMANDS:
+    serve        Run the HTTP/1.1 front-end (POST /v1/query, /v1/query_batch,
+                 /v1/admin; GET /v1/metrics, /v1/health)
+    query        Send one query to a running daemon and print the JSON reply
+    metrics      Fetch /v1/metrics from a running daemon
+    admin        Send an admin action (flush | housekeep | stats)
+    help         Show this message
+
+SERVE OPTIONS:
+    --port <u16>             Listen port (default 8080; 0 = ephemeral)
+    --bind <addr>            Bind address (default 127.0.0.1)
+    --http-workers <n>       Connection-handler threads (default 4)
+    --workers <n>            Batch-pipeline worker threads (default 4)
+    --populate <scale>       Pre-populate from the synthetic workload
+                             (paper | small | tiny)
+    --port-file <path>       Write the bound host:port to a file once ready
+    --config <path>          TOML config file (configs/*.toml)
+    --<config-key> <value>   Any config key (e.g. --similarity_threshold 0.75)
+
+CLIENT OPTIONS (query | metrics | admin):
+    --addr <host:port>       Daemon address (default 127.0.0.1:8080)
+    --threshold <f32>        Per-request similarity gate      (query)
+    --top-k <n>              Per-request candidate-set width  (query)
+    --ttl-ms <ms>            Per-request insert TTL           (query)
+    --tag <string>           client_tag echoed on the reply   (query)
+
+EXAMPLES:
+    semcached serve --port 8080 --populate small
+    semcached query \"how do i reset my password\"
+    curl -s localhost:8080/v1/query -d '{\"text\": \"how do i reset my password\"}'
+    semcached admin flush
 ";
 
 #[cfg(test)]

@@ -108,6 +108,39 @@ impl Config {
         Ok(cfg)
     }
 
+    /// Assemble the config a binary serves with: `--config <file>` over
+    /// defaults, then any `--<config-key> <value>` override. Flags named
+    /// in `reserved` (the binary's own, e.g. `--port`) are skipped, as
+    /// are the conventions handled here: `--encoder` (falling back to
+    /// pjrt-if-ready, else native) and `--seed`. Validates the result.
+    /// Shared by the `semcache` and `semcached` binaries.
+    pub fn from_args(args: &crate::cli::Args, reserved: &[&str]) -> Result<Self> {
+        let mut cfg = match args.opt("config") {
+            Some(path) => Config::from_file(Path::new(path))?,
+            None => Config::default(),
+        };
+        for (k, v) in args.options() {
+            if matches!(k.as_str(), "config" | "encoder" | "seed")
+                || reserved.contains(&k.as_str())
+            {
+                continue;
+            }
+            cfg.set(k, v).with_context(|| format!("CLI override --{k}"))?;
+        }
+        if let Some(e) = args.opt("encoder") {
+            cfg.encoder_kind = e.to_string();
+        } else if crate::runtime::pjrt_ready() {
+            cfg.encoder_kind = "pjrt".into();
+        } else {
+            cfg.encoder_kind = "native".into();
+        }
+        if let Some(seed) = args.opt("seed") {
+            cfg.workload_seed = seed.parse().context("--seed")?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
     /// Apply flat `section.key -> raw string` pairs.
     pub fn apply_table(&mut self, table: &BTreeMap<String, String>) -> Result<()> {
         for (k, v) in table {

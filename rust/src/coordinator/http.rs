@@ -1,0 +1,553 @@
+//! Zero-dependency HTTP/1.1 front-end for the typed serving API.
+//!
+//! A small `std::net::TcpListener` daemon in the spirit of the paper's
+//! "semantic cache as a web service in front of the LLM API": one accept
+//! thread feeds a fixed pool of connection workers (the same worker-pool
+//! pattern as the batch serving pipeline), each speaking just enough
+//! HTTP/1.1 for JSON request/response bodies with keep-alive. The wire
+//! format is the [`crate::api`] types via the in-tree [`crate::json`]
+//! codec — no external crates anywhere.
+//!
+//! Endpoints (all JSON):
+//!
+//! | Method | Path              | Body                      | Reply |
+//! |--------|-------------------|---------------------------|-------|
+//! | POST   | `/v1/query`       | [`QueryRequest`]          | [`crate::api::QueryResponse`] |
+//! | POST   | `/v1/query_batch` | `{"queries": [...]}`      | `{"replies": [...]}` |
+//! | GET    | `/v1/metrics`     | —                         | metrics + cache state |
+//! | POST   | `/v1/admin`       | [`AdminRequest`]          | [`crate::api::AdminResponse`] |
+//! | GET    | `/v1/health`      | —                         | `{"status": "ok"}` |
+//!
+//! Malformed input is answered with 4xx JSON errors (`{"error": ...}`),
+//! never a panic or dropped connection: bad JSON and bad fields are 400,
+//! unknown paths 404, wrong methods 405, oversized bodies 413. A panic
+//! escaping a handler is caught so the worker pool never shrinks.
+//!
+//! Scale limitation (tracked in ROADMAP): this is blocking
+//! thread-per-connection serving — an idle keep-alive connection pins
+//! its worker until `read_timeout`, and accepted connections beyond the
+//! pool wait in a bounded queue (accepting blocks when it fills). An
+//! async/epoll accept path is the planned next step for heavy fan-in.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::api::{AdminRequest, QueryRequest};
+use crate::error::{anyhow, bail, Context, Result};
+use crate::json::{self, obj, Value};
+
+use super::Server;
+
+/// Front-end configuration.
+#[derive(Debug, Clone)]
+pub struct HttpConfig {
+    /// Bind address; port 0 picks an ephemeral port (see
+    /// [`HttpHandle::local_addr`]).
+    pub addr: String,
+    /// Connection-handler threads.
+    pub workers: usize,
+    /// Request bodies beyond this answer 413.
+    pub max_body_bytes: usize,
+    /// Per-read socket timeout; an idle keep-alive connection is closed
+    /// after this long.
+    pub read_timeout: Duration,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:0".into(),
+            workers: 4,
+            max_body_bytes: 1 << 20,
+            read_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+/// Start the HTTP front-end over a running [`Server`]. Returns once the
+/// listener is bound; serving happens on background threads until the
+/// returned handle is shut down or dropped.
+pub fn serve_http(server: Arc<Server>, cfg: HttpConfig) -> Result<HttpHandle> {
+    let listener =
+        TcpListener::bind(&cfg.addr).with_context(|| format!("binding {}", cfg.addr))?;
+    let addr = listener.local_addr().context("reading bound address")?;
+    let stop = Arc::new(AtomicBool::new(false));
+    // Bounded hand-off queue: when every worker is busy and the queue is
+    // full, the accept thread blocks (backpressure) instead of buffering
+    // connections without limit.
+    let (tx, rx) = mpsc::sync_channel::<TcpStream>(128);
+    let rx = Arc::new(Mutex::new(rx));
+
+    let mut workers = Vec::with_capacity(cfg.workers.max(1));
+    for w in 0..cfg.workers.max(1) {
+        let rx = rx.clone();
+        let server = server.clone();
+        let max_body = cfg.max_body_bytes;
+        let read_timeout = cfg.read_timeout;
+        let stop = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("http-worker-{w}"))
+            .spawn(move || loop {
+                // Hold the receiver lock only while waiting for the next
+                // connection; channel disconnect (accept thread gone)
+                // ends the worker.
+                let conn = rx.lock().unwrap().recv();
+                let stream = match conn {
+                    Ok(s) => s,
+                    Err(_) => break,
+                };
+                let _ = stream.set_read_timeout(Some(read_timeout));
+                let _ = stream.set_nodelay(true);
+                // A panicking handler must not shrink the fixed pool:
+                // catch, drop the connection, keep serving.
+                let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    handle_connection(&server, stream, max_body, &stop);
+                }));
+                if outcome.is_err() {
+                    eprintln!("[semcached] connection handler panicked; worker recovered");
+                }
+            })
+            .expect("spawn http worker");
+        workers.push(handle);
+    }
+
+    let accept_stop = stop.clone();
+    let accept = std::thread::Builder::new()
+        .name("http-accept".into())
+        .spawn(move || {
+            for conn in listener.incoming() {
+                if accept_stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                match conn {
+                    Ok(stream) => {
+                        if tx.send(stream).is_err() {
+                            break;
+                        }
+                    }
+                    Err(_) => {
+                        if accept_stop.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        // Transient accept failure (e.g. fd exhaustion):
+                        // back off instead of spinning a core.
+                        std::thread::sleep(Duration::from_millis(50));
+                    }
+                }
+            }
+            // Dropping `tx` here disconnects the channel; idle workers
+            // wake from recv and exit.
+        })
+        .expect("spawn http accept");
+
+    Ok(HttpHandle { addr, stop, accept: Some(accept), workers })
+}
+
+/// Owns the front-end's threads; shuts them down on `shutdown` or drop.
+pub struct HttpHandle {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl HttpHandle {
+    /// The actually-bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, drain the workers, and join every thread.
+    pub fn shutdown(self) {
+        // Drop runs the real teardown; taking `self` by value makes the
+        // intent explicit at call sites.
+    }
+
+    fn stop_threads(&mut self) {
+        if self.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // Wake the accept loop with a throwaway connection. Workers
+        // observe the stop flag after their in-flight request, so the
+        // join below waits at most one request + read_timeout per
+        // still-open keep-alive connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for HttpHandle {
+    fn drop(&mut self) {
+        self.stop_threads();
+    }
+}
+
+/// One parsed request.
+struct HttpRequest {
+    method: String,
+    path: String,
+    body: Vec<u8>,
+    keep_alive: bool,
+}
+
+/// One response about to be written.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HttpResponse {
+    pub status: u16,
+    /// JSON body.
+    pub body: String,
+}
+
+impl HttpResponse {
+    fn json(status: u16, v: &Value) -> Self {
+        Self { status, body: v.to_string() }
+    }
+
+    fn error(status: u16, msg: &str) -> Self {
+        Self::json(status, &obj([("error", msg.into())]))
+    }
+}
+
+fn status_text(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        _ => "Unknown",
+    }
+}
+
+/// Serve one connection: parse → route → respond, looping while the
+/// client keeps the connection alive (and the front-end is not
+/// shutting down).
+fn handle_connection(
+    server: &Arc<Server>,
+    stream: TcpStream,
+    max_body: usize,
+    stop: &AtomicBool,
+) {
+    let reader_stream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(reader_stream);
+    let mut writer = stream;
+    loop {
+        match read_request(&mut reader, max_body) {
+            Ok(Some(req)) => {
+                let keep_alive = req.keep_alive;
+                let resp = route(server, &req);
+                if write_response(&mut writer, &resp, keep_alive).is_err()
+                    || !keep_alive
+                    || stop.load(Ordering::SeqCst)
+                {
+                    return;
+                }
+            }
+            Ok(None) => return, // clean close between requests
+            Err(resp) => {
+                // A malformed request still counts as one request, so
+                // http_errors never exceeds http_requests.
+                let metrics = server.metrics();
+                metrics.record_http_request();
+                metrics.record_http_error();
+                let _ = write_response(&mut writer, &resp, false);
+                return;
+            }
+        }
+    }
+}
+
+/// Longest accepted request/header line, bytes (8 KB, nginx's default).
+const MAX_LINE_BYTES: u64 = 8 * 1024;
+
+/// Read one `\n`-terminated line without letting a newline-less client
+/// grow the buffer past [`MAX_LINE_BYTES`]. Returns the byte count read
+/// (0 = EOF); an over-long line is `ErrorKind::InvalidData`.
+fn read_line_bounded(
+    reader: &mut BufReader<TcpStream>,
+    line: &mut String,
+) -> std::io::Result<usize> {
+    let n = reader.by_ref().take(MAX_LINE_BYTES).read_line(line)?;
+    if n as u64 == MAX_LINE_BYTES && !line.ends_with('\n') {
+        return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "line too long"));
+    }
+    Ok(n)
+}
+
+/// Read one request. `Ok(None)` = the client closed (or went idle past
+/// the read timeout) between requests; `Err` carries the 4xx to send
+/// before closing.
+fn read_request(
+    reader: &mut BufReader<TcpStream>,
+    max_body: usize,
+) -> std::result::Result<Option<HttpRequest>, HttpResponse> {
+    let mut line = String::new();
+    match read_line_bounded(reader, &mut line) {
+        Ok(0) => return Ok(None),
+        Ok(_) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::InvalidData => {
+            return Err(HttpResponse::error(431, "request line too long"));
+        }
+        Err(_) => return Ok(None), // timeout/reset before a request started
+    }
+    let line = line.trim_end();
+    if line.is_empty() {
+        return Ok(None);
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    let version = parts.next().unwrap_or("");
+    if method.is_empty() || path.is_empty() || !version.starts_with("HTTP/1.") {
+        return Err(HttpResponse::error(400, "malformed request line"));
+    }
+    let mut keep_alive = version != "HTTP/1.0";
+    let mut content_length: usize = 0;
+    let mut header_bytes = 0usize;
+    loop {
+        let mut h = String::new();
+        match read_line_bounded(reader, &mut h) {
+            Ok(0) => return Err(HttpResponse::error(400, "connection closed mid-headers")),
+            Ok(n) => header_bytes += n,
+            Err(e) if e.kind() == std::io::ErrorKind::InvalidData => {
+                return Err(HttpResponse::error(431, "header line too long"));
+            }
+            Err(_) => return Err(HttpResponse::error(408, "timed out reading headers")),
+        }
+        if header_bytes > 16 * 1024 {
+            return Err(HttpResponse::error(431, "headers too large"));
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            let v = v.trim();
+            match k.trim().to_ascii_lowercase().as_str() {
+                "content-length" => {
+                    content_length = v
+                        .parse()
+                        .map_err(|_| HttpResponse::error(400, "bad content-length"))?;
+                }
+                "connection" => {
+                    if v.eq_ignore_ascii_case("close") {
+                        keep_alive = false;
+                    } else if v.eq_ignore_ascii_case("keep-alive") {
+                        keep_alive = true;
+                    }
+                }
+                "transfer-encoding" => {
+                    return Err(HttpResponse::error(501, "chunked bodies not supported"));
+                }
+                _ => {}
+            }
+        }
+    }
+    if content_length > max_body {
+        // Drain a bounded amount of the body so the client can finish
+        // writing and read the 413 instead of seeing a reset connection.
+        let mut remaining = content_length.min(4 * max_body.max(1));
+        let mut sink = [0u8; 8192];
+        while remaining > 0 {
+            let n = sink.len().min(remaining);
+            if reader.read_exact(&mut sink[..n]).is_err() {
+                break;
+            }
+            remaining -= n;
+        }
+        return Err(HttpResponse::error(
+            413,
+            &format!("body of {content_length} bytes exceeds the {max_body}-byte limit"),
+        ));
+    }
+    let mut body = vec![0u8; content_length];
+    if content_length > 0 {
+        reader
+            .read_exact(&mut body)
+            .map_err(|_| HttpResponse::error(400, "truncated request body"))?;
+    }
+    Ok(Some(HttpRequest { method, path, body, keep_alive }))
+}
+
+fn write_response(w: &mut TcpStream, resp: &HttpResponse, keep_alive: bool) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        resp.status,
+        status_text(resp.status),
+        resp.body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    w.write_all(head.as_bytes())?;
+    w.write_all(resp.body.as_bytes())?;
+    w.flush()
+}
+
+/// Dispatch one parsed request to the typed API.
+fn route(server: &Arc<Server>, req: &HttpRequest) -> HttpResponse {
+    server.metrics().record_http_request();
+    let resp = match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/v1/query") => post_query(server, &req.body),
+        ("POST", "/v1/query_batch") => post_query_batch(server, &req.body),
+        ("POST", "/v1/admin") => post_admin(server, &req.body),
+        ("GET", "/v1/metrics") => HttpResponse::json(200, &server.stats_json()),
+        ("GET", "/v1/health") => HttpResponse::json(200, &obj([("status", "ok".into())])),
+        (_, "/v1/query" | "/v1/query_batch" | "/v1/admin" | "/v1/metrics" | "/v1/health") => {
+            HttpResponse::error(405, "method not allowed for this endpoint")
+        }
+        _ => HttpResponse::error(404, "unknown endpoint"),
+    };
+    if resp.status >= 400 {
+        server.metrics().record_http_error();
+    }
+    resp
+}
+
+fn parse_body(body: &[u8]) -> std::result::Result<Value, HttpResponse> {
+    let text = std::str::from_utf8(body)
+        .map_err(|_| HttpResponse::error(400, "body is not valid UTF-8"))?;
+    json::parse(text).map_err(|e| HttpResponse::error(400, &format!("invalid JSON: {e}")))
+}
+
+fn post_query(server: &Arc<Server>, body: &[u8]) -> HttpResponse {
+    let v = match parse_body(body) {
+        Ok(v) => v,
+        Err(resp) => return resp,
+    };
+    let req = match QueryRequest::from_json(&v) {
+        Ok(r) => r,
+        Err(e) => return HttpResponse::error(400, &format!("{e:#}")),
+    };
+    HttpResponse::json(200, &server.serve(&req).to_json())
+}
+
+fn post_query_batch(server: &Arc<Server>, body: &[u8]) -> HttpResponse {
+    let v = match parse_body(body) {
+        Ok(v) => v,
+        Err(resp) => return resp,
+    };
+    let arr = match v.get("queries").as_array() {
+        Some(a) => a,
+        None => return HttpResponse::error(400, "missing array field 'queries'"),
+    };
+    let mut reqs = Vec::with_capacity(arr.len());
+    for (i, item) in arr.iter().enumerate() {
+        match QueryRequest::from_json(item) {
+            Ok(r) => reqs.push(r),
+            Err(e) => return HttpResponse::error(400, &format!("queries[{i}]: {e:#}")),
+        }
+    }
+    let replies: Vec<Value> = server.serve_batch(&reqs).iter().map(|r| r.to_json()).collect();
+    HttpResponse::json(200, &obj([("replies", Value::Array(replies))]))
+}
+
+fn post_admin(server: &Arc<Server>, body: &[u8]) -> HttpResponse {
+    let v = match parse_body(body) {
+        Ok(v) => v,
+        Err(resp) => return resp,
+    };
+    match AdminRequest::from_json(&v) {
+        Ok(req) => HttpResponse::json(200, &server.admin(&req).to_json()),
+        Err(e) => HttpResponse::error(400, &format!("{e:#}")),
+    }
+}
+
+/// Minimal blocking HTTP/1.1 client (`Connection: close`), used by the
+/// `semcached` client subcommands, the loopback smoke test in
+/// `verify.sh`, and the integration tests. Returns the status code and
+/// the parsed JSON body (`Value::Null` for an empty body).
+pub fn http_request(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+) -> Result<(u16, Value)> {
+    let stream = TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+    let body = body.unwrap_or("");
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len(),
+    );
+    let mut writer = stream.try_clone().context("cloning stream")?;
+    writer.write_all(head.as_bytes()).context("writing request head")?;
+    writer.write_all(body.as_bytes()).context("writing request body")?;
+    writer.flush().context("flushing request")?;
+
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line).context("reading status line")?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .with_context(|| format!("malformed status line {status_line:?}"))?;
+    let mut content_length: Option<usize> = None;
+    loop {
+        let mut h = String::new();
+        let n = reader.read_line(&mut h).context("reading response headers")?;
+        if n == 0 {
+            bail!("connection closed mid-headers");
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().ok();
+            }
+        }
+    }
+    let mut bytes = Vec::new();
+    match content_length {
+        Some(n) => {
+            bytes = vec![0u8; n];
+            reader.read_exact(&mut bytes).context("reading response body")?;
+        }
+        None => {
+            reader.read_to_end(&mut bytes).context("reading response body")?;
+        }
+    }
+    let text =
+        String::from_utf8(bytes).map_err(|_| anyhow!("response body is not valid UTF-8"))?;
+    let value = if text.trim().is_empty() { Value::Null } else { json::parse(&text)? };
+    Ok((status, value))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn status_texts_cover_served_codes() {
+        for code in [200, 400, 404, 405, 408, 413, 431, 500, 501] {
+            assert_ne!(status_text(code), "Unknown", "code {code}");
+        }
+        assert_eq!(status_text(999), "Unknown");
+    }
+
+    #[test]
+    fn error_responses_are_json() {
+        let r = HttpResponse::error(400, "nope");
+        assert_eq!(r.status, 400);
+        let v = json::parse(&r.body).unwrap();
+        assert_eq!(v.get("error").as_str(), Some("nope"));
+    }
+}

@@ -8,12 +8,16 @@
 //!                                        miss ──► SimLlm ──► insert ──► reply
 //! ```
 //!
-//! Two front-ends share that workflow: [`Server::handle`] serves one
-//! query on the calling thread, and [`Server::handle_batch`] pipelines a
-//! whole batch — chunked `encode_batch` embedding, a scoped-thread
-//! worker pool fanning ANN lookups out over the cache's read-mostly
-//! `RwLock` shards, and a deterministic in-input-order merge, with
-//! per-stage latency recorded in [`crate::metrics::Metrics`].
+//! The workflow is exposed through the typed v1 API
+//! ([`crate::api::QueryRequest`] → [`crate::api::QueryResponse`]):
+//! [`Server::serve`] answers one request on the calling thread, and
+//! [`Server::serve_batch`] pipelines a whole batch — chunked
+//! `encode_batch` embedding, a scoped-thread worker pool fanning ANN
+//! lookups out over the cache's read-mostly `RwLock` shards, and a
+//! deterministic in-input-order merge, with per-stage latency recorded
+//! in [`crate::metrics::Metrics`]. The pre-v1 `handle`/`handle_batch`
+//! surface survives as thin shims over the same core, and the [`http`]
+//! module puts the API on the wire (the `semcached` daemon).
 //!
 //! Latency accounting mixes *measured* wall-clock for everything the
 //! Rust process does (tokenize, encode, search, insert) with the
@@ -23,10 +27,12 @@
 //! A housekeeping thread periodically sweeps TTLs and rebuilds
 //! garbage-heavy index partitions (§2.4 "rebalancing", §2.7 TTL).
 
+pub mod http;
 mod server;
 mod trace;
 
-pub use server::{Reply, ReplySource, Server, ServerConfig};
+pub use http::{http_request, serve_http, HttpConfig, HttpHandle};
+pub use server::{Reply, ReplySource, Server, ServerConfig, ServerConfigBuilder};
 pub use trace::{TraceConfig, TraceReport, TraceRunner};
 
 /// The serving coordinator — alias for [`Server`], matching the

@@ -1,25 +1,36 @@
-//! The `Server`: cache-fronted query handling — one query at a time via
-//! [`Server::handle`], or concurrently via the batch serving pipeline
-//! [`Server::handle_batch`] (chunked batch embedding, parallel ANN
-//! fan-out over a scoped worker pool, deterministic in-order merge).
+//! The `Server`: cache-fronted query handling over the typed v1 API.
+//!
+//! [`Server::serve`] answers one [`QueryRequest`] through the full
+//! workflow (embed → ANN lookup → hit | LLM + insert) and
+//! [`Server::serve_batch`] pipelines a whole batch (chunked batch
+//! embedding, parallel fan-out over a scoped worker pool, deterministic
+//! in-input-order merge). The pre-v1 `handle`/`handle_batch` surface is
+//! kept as thin shims that build a request and flatten the response
+//! back into a [`Reply`].
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
+use crate::api::{
+    AdminRequest, AdminResponse, LatencyBreakdown, Outcome, QueryRequest, QueryResponse,
+};
 use crate::cache::{CacheConfig, CachedEntry, SemanticCache};
 use crate::embedding::Encoder;
+use crate::error::{bail, Result};
+use crate::json::{obj, Value};
 use crate::llm::{Judge, JudgeConfig, SimLlm, SimLlmConfig};
 use crate::metrics::Metrics;
 use crate::workload::{Dataset, QaPair};
 
 /// Server construction knobs.
+#[derive(Clone)]
 pub struct ServerConfig {
     pub cache: CacheConfig,
     pub llm: SimLlmConfig,
     pub judge: JudgeConfig,
-    /// Worker threads used by [`Server::handle_batch`].
+    /// Worker threads used by [`Server::serve_batch`].
     pub workers: usize,
 }
 
@@ -34,6 +45,68 @@ impl Default for ServerConfig {
     }
 }
 
+impl ServerConfig {
+    /// A validating builder:
+    /// `ServerConfig::builder().workers(8).build()?`.
+    pub fn builder() -> ServerConfigBuilder {
+        ServerConfigBuilder { cfg: ServerConfig::default() }
+    }
+
+    /// Validate this config and every nested component config.
+    pub fn validate(&self) -> Result<()> {
+        self.cache.validate()?;
+        self.llm.validate()?;
+        if self.workers == 0 {
+            bail!("server workers must be >= 1");
+        }
+        Ok(())
+    }
+
+    /// Assemble a validated server config from the app-level
+    /// [`crate::config::Config`] (shared by both binaries).
+    pub fn from_app_config(cfg: &crate::config::Config) -> Result<ServerConfig> {
+        ServerConfig::builder()
+            .cache(CacheConfig::from_app_config(cfg)?)
+            .llm(SimLlmConfig::from_app_config(cfg))
+            .judge(JudgeConfig::default())
+            .workers(cfg.workers)
+            .build()
+    }
+}
+
+/// Builder for [`ServerConfig`]; `build` validates the result.
+#[derive(Clone)]
+pub struct ServerConfigBuilder {
+    cfg: ServerConfig,
+}
+
+impl ServerConfigBuilder {
+    pub fn cache(mut self, cache: CacheConfig) -> Self {
+        self.cfg.cache = cache;
+        self
+    }
+
+    pub fn llm(mut self, llm: SimLlmConfig) -> Self {
+        self.cfg.llm = llm;
+        self
+    }
+
+    pub fn judge(mut self, judge: JudgeConfig) -> Self {
+        self.cfg.judge = judge;
+        self
+    }
+
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.cfg.workers = workers;
+        self
+    }
+
+    pub fn build(self) -> Result<ServerConfig> {
+        self.cfg.validate()?;
+        Ok(self.cfg)
+    }
+}
+
 /// Upper bound on texts per unit of batch work: each worker encodes one
 /// chunk through `Encoder::encode_batch` (amortizing the embedding call
 /// exactly like [`Server::populate`] does) before fanning its lookups
@@ -41,7 +114,11 @@ impl Default for ServerConfig {
 /// work across every worker.
 const BATCH_CHUNK: usize = 32;
 
-/// Where a reply came from.
+/// Threshold-override encoding for the legacy global override: bit 32
+/// set means "override present, f32 bits in the low word".
+const OVERRIDE_SET: u64 = 1 << 32;
+
+/// Where a reply came from (pre-v1 surface; see [`Outcome`]).
 #[derive(Debug, Clone, PartialEq)]
 pub enum ReplySource {
     /// Served from the semantic cache (similarity score attached).
@@ -50,7 +127,8 @@ pub enum ReplySource {
     Llm,
 }
 
-/// One answered query with its latency breakdown.
+/// One answered query with its latency breakdown (pre-v1 surface; the
+/// typed API returns [`QueryResponse`] instead).
 #[derive(Debug, Clone)]
 pub struct Reply {
     pub response: String,
@@ -67,6 +145,27 @@ pub struct Reply {
     pub matched_cluster: Option<u64>,
 }
 
+impl Reply {
+    /// Flatten a typed [`QueryResponse`] into the pre-v1 reply shape
+    /// (`Rejected` outcomes map to the LLM source with an empty body).
+    pub fn from_response(resp: QueryResponse) -> Self {
+        let source = match resp.outcome {
+            Outcome::Hit { score, .. } => ReplySource::Cache { score },
+            Outcome::Miss { .. } | Outcome::Rejected { .. } => ReplySource::Llm,
+        };
+        Self {
+            response: resp.response,
+            source,
+            total_ms: resp.latency.total_ms,
+            embed_ms: resp.latency.embed_ms,
+            index_ms: resp.latency.index_ms,
+            llm_ms: resp.latency.llm_ms,
+            judged_positive: resp.judged_positive,
+            matched_cluster: resp.matched_cluster,
+        }
+    }
+}
+
 /// Thread-safe serving facade. Clone-cheap via `Arc<Server>`.
 pub struct Server {
     encoder: Arc<dyn Encoder>,
@@ -79,8 +178,10 @@ pub struct Server {
     /// Ground-truth answers by cluster (populated from the workload) so
     /// simulated LLM calls return the *right* answer for their cluster.
     ground_truth: RwLock<HashMap<u64, String>>,
-    /// Per-request threshold override (adaptive-threshold experiments).
-    threshold_override: Mutex<Option<f32>>,
+    /// Legacy global threshold override (see [`Server::set_threshold`]);
+    /// 0 = unset, else `OVERRIDE_SET | f32 bits`. Per-request options
+    /// are the v1 way to vary the gate.
+    threshold_override: AtomicU64,
     housekeeping_stop: Arc<AtomicBool>,
 }
 
@@ -94,7 +195,7 @@ impl Server {
             metrics: Arc::new(Metrics::new()),
             workers: cfg.workers.max(1),
             ground_truth: RwLock::new(HashMap::new()),
-            threshold_override: Mutex::new(None),
+            threshold_override: AtomicU64::new(0),
             housekeeping_stop: Arc::new(AtomicBool::new(false)),
         }
     }
@@ -115,17 +216,28 @@ impl Server {
         &self.llm
     }
 
-    /// Override the similarity threshold for subsequent requests
-    /// (sweep/adaptive experiments); `None` restores the config value.
+    /// Override the similarity threshold for every subsequent request;
+    /// `None` restores the config value.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use QueryRequest::with_threshold for per-request thresholds"
+    )]
     pub fn set_threshold(&self, t: Option<f32>) {
-        *self.threshold_override.lock().unwrap() = t;
+        let enc = match t {
+            Some(v) => OVERRIDE_SET | v.to_bits() as u64,
+            None => 0,
+        };
+        self.threshold_override.store(enc, Ordering::Relaxed);
     }
 
+    /// The threshold used when a request carries no per-request override.
     pub fn effective_threshold(&self) -> f32 {
-        self.threshold_override
-            .lock()
-            .unwrap()
-            .unwrap_or(self.cache.config().threshold)
+        let enc = self.threshold_override.load(Ordering::Relaxed);
+        if enc & OVERRIDE_SET != 0 {
+            f32::from_bits(enc as u32)
+        } else {
+            self.cache.config().threshold
+        }
     }
 
     /// Pre-populate the cache from the workload's base QA pairs,
@@ -143,14 +255,16 @@ impl Server {
             let texts: Vec<&str> = chunk.iter().map(|p| p.question.as_str()).collect();
             let embeddings = self.encoder.encode_batch(&texts);
             for (p, e) in chunk.iter().zip(embeddings) {
-                self.cache.insert_entry(
-                    &e,
-                    CachedEntry {
-                        question: p.question.clone(),
-                        response: p.answer.clone(),
-                        cluster: p.answer_group,
-                    },
-                );
+                self.cache
+                    .try_insert_entry(
+                        &e,
+                        CachedEntry {
+                            question: p.question.clone(),
+                            response: p.answer.clone(),
+                            cluster: p.answer_group,
+                        },
+                    )
+                    .expect("populate insert (encoder produced an embedding)");
             }
         }
     }
@@ -164,94 +278,111 @@ impl Server {
         }
     }
 
-    /// Handle one query through the full workflow. `cluster` is the
-    /// ground-truth identity when known (evaluation traces); production
-    /// callers pass `None`.
-    pub fn handle(&self, text: &str, cluster: Option<u64>) -> Reply {
+    /// Serve one typed request through the full workflow. This is the
+    /// transport-agnostic core every front-end routes through: the
+    /// in-process [`Server::handle`] shim, [`Server::serve_batch`], and
+    /// the `semcached` HTTP daemon ([`crate::coordinator::http`]).
+    pub fn serve(&self, req: &QueryRequest) -> QueryResponse {
         self.metrics.record_request();
+        if let Err(e) = req.validate() {
+            self.metrics.record_rejected();
+            return QueryResponse::rejected(req, format!("{e:#}"));
+        }
 
         // 1. Embed (measured).
         let t0 = Instant::now();
-        let embedding = self.encoder.encode_text(text);
+        let embedding = self.encoder.encode_text(&req.text);
         let embed_ms = t0.elapsed().as_secs_f64() * 1e3;
-        self.metrics.record_embedding(crate::llm::approx_tokens(text));
+        self.metrics.record_embedding(crate::llm::approx_tokens(&req.text));
         self.metrics.observe_embed_ms(embed_ms);
 
-        self.serve_embedded(text, cluster, &embedding, embed_ms)
+        self.serve_embedded(req, &embedding, embed_ms)
     }
 
-    /// Steps 2..3 of the workflow for a query whose embedding is already
-    /// computed (`embed_ms` is the — possibly amortized — cost attributed
-    /// to it). Shared by [`Server::handle`] and the batch workers.
+    /// Steps 2..3 of the workflow for a request whose embedding is
+    /// already computed (`embed_ms` is the — possibly amortized — cost
+    /// attributed to it). Shared by [`Server::serve`] and the batch
+    /// workers. The request is assumed validated.
     fn serve_embedded(
         &self,
-        text: &str,
-        cluster: Option<u64>,
+        req: &QueryRequest,
         embedding: &[f32],
         embed_ms: f64,
-    ) -> Reply {
-        let threshold = self.effective_threshold();
+    ) -> QueryResponse {
+        let threshold = req.options.threshold.unwrap_or_else(|| self.effective_threshold());
 
         // 2. ANN lookup (measured).
         let t1 = Instant::now();
-        let hit = self.cache.lookup_with_threshold(&embedding, threshold);
+        let hit = self.cache.lookup_with_opts(embedding, threshold, req.options.top_k);
         let index_ms = t1.elapsed().as_secs_f64() * 1e3;
         self.metrics.observe_index_ms(index_ms);
 
         if let Some(hit) = hit {
             // 3a. Cache hit: validate when ground truth is available.
             self.metrics.record_hit();
-            let judged = cluster.map(|c| {
+            let judged = req.cluster.map(|c| {
                 let ok = self.judge.validate(c, hit.entry.cluster);
                 self.metrics.record_judgement(ok);
                 ok
             });
             let total_ms = embed_ms + index_ms;
             self.metrics.observe_total_ms(total_ms);
-            return Reply {
+            return QueryResponse {
                 response: hit.entry.response.clone(),
-                source: ReplySource::Cache { score: hit.score },
-                total_ms,
-                embed_ms,
-                index_ms,
-                llm_ms: 0.0,
+                outcome: Outcome::Hit { score: hit.score, entry_id: hit.id },
+                latency: LatencyBreakdown { total_ms, embed_ms, index_ms, llm_ms: 0.0 },
                 judged_positive: judged,
                 matched_cluster: Some(hit.entry.cluster),
+                client_tag: req.client_tag.clone(),
             };
         }
 
         // 3b. Miss: call the (simulated) LLM, insert, reply.
         self.metrics.record_miss();
-        let ground_truth = cluster.and_then(|c| {
-            self.ground_truth.read().unwrap().get(&c).cloned()
-        });
-        let resp = self.llm.call(text, ground_truth.as_deref());
+        let ground_truth =
+            req.cluster.and_then(|c| self.ground_truth.read().unwrap().get(&c).cloned());
+        let resp = self.llm.call(&req.text, ground_truth.as_deref());
         self.metrics.record_llm_call(resp.input_tokens, resp.output_tokens);
         self.metrics.observe_llm_ms(resp.latency_ms);
 
         let t2 = Instant::now();
-        self.cache.insert_entry(
-            &embedding,
+        let inserted = self.cache.try_insert_entry_ttl(
+            embedding,
             CachedEntry {
-                question: text.to_string(),
+                question: req.text.clone(),
                 response: resp.text.clone(),
-                cluster: cluster.unwrap_or(0),
+                cluster: req.cluster.unwrap_or(0),
             },
+            req.options.ttl_ms,
         );
         let insert_ms = t2.elapsed().as_secs_f64() * 1e3;
 
+        let outcome = match inserted {
+            Ok(id) => Outcome::Miss { inserted_id: id },
+            Err(e) => {
+                self.metrics.record_rejected();
+                Outcome::Rejected { reason: format!("{e:#}") }
+            }
+        };
         let total_ms = embed_ms + index_ms + resp.latency_ms + insert_ms;
         self.metrics.observe_total_ms(total_ms);
-        Reply {
+        QueryResponse {
             response: resp.text,
-            source: ReplySource::Llm,
-            total_ms,
-            embed_ms,
-            index_ms,
-            llm_ms: resp.latency_ms,
+            outcome,
+            latency: LatencyBreakdown { total_ms, embed_ms, index_ms, llm_ms: resp.latency_ms },
             judged_positive: None,
             matched_cluster: None,
+            client_tag: req.client_tag.clone(),
         }
+    }
+
+    /// Handle one query through the full workflow (pre-v1 shim over
+    /// [`Server::serve`]). `cluster` is the ground-truth identity when
+    /// known (evaluation traces); production callers pass `None`.
+    pub fn handle(&self, text: &str, cluster: Option<u64>) -> Reply {
+        let mut req = QueryRequest::new(text);
+        req.cluster = cluster;
+        Reply::from_response(self.serve(&req))
     }
 
     /// The traditional (no-cache) path: always call the LLM. Used for the
@@ -272,22 +403,16 @@ impl Server {
         }
     }
 
-    /// Serve a batch of queries concurrently; replies come back in input
-    /// order. Pipelined equivalent of a sequential
-    /// `texts.iter().map(|t| self.handle(t, None))` loop, with one
-    /// caveat: in-flight misses are not deduplicated, so if a batch
-    /// contains duplicate (or near-duplicate) *novel* queries, workers
-    /// racing on them may each call the LLM and insert their own entry
-    /// — where the sequential loop would miss once and then hit. See
-    /// [`Server::handle_batch_with_workers`] for the pipeline stages.
-    pub fn handle_batch(&self, texts: &[&str]) -> Vec<Reply> {
-        self.handle_batch_clustered(texts, &vec![None; texts.len()])
-    }
-
-    /// [`Server::handle_batch`] with per-query ground-truth clusters
-    /// (evaluation traces). `clusters` must be as long as `texts`.
-    pub fn handle_batch_clustered(&self, texts: &[&str], clusters: &[Option<u64>]) -> Vec<Reply> {
-        self.handle_batch_with_workers(texts, clusters, self.workers)
+    /// Serve a batch of typed requests concurrently; responses come back
+    /// in input order. Pipelined equivalent of a sequential
+    /// `reqs.iter().map(|r| self.serve(r))` loop, with one caveat:
+    /// in-flight misses are not deduplicated, so if a batch contains
+    /// duplicate (or near-duplicate) *novel* queries, workers racing on
+    /// them may each call the LLM and insert their own entry — where the
+    /// sequential loop would miss once and then hit. See
+    /// [`Server::serve_batch_with_workers`] for the pipeline stages.
+    pub fn serve_batch(&self, reqs: &[QueryRequest]) -> Vec<QueryResponse> {
+        self.serve_batch_with_workers(reqs, self.workers)
     }
 
     /// The batch serving pipeline with an explicit pool width:
@@ -296,35 +421,35 @@ impl Server {
     ///    up to `BATCH_CHUNK` queries (shrunk when the batch is small,
     ///    so every worker still gets work); each worker encodes a whole
     ///    unit through `Encoder::encode_batch`, amortizing the embedding
-    ///    call the same way [`Server::populate`] does.
+    ///    call the same way [`Server::populate`] does. Requests that
+    ///    fail validation are answered `Rejected` without being encoded.
     /// 2. **Concurrent fan-out** — `workers` scoped threads claim units
     ///    off an atomic cursor and run lookup → (miss: LLM + insert) per
     ///    query; the cache's read-mostly `RwLock` sharding lets all
     ///    workers search one partition's ANN index in parallel.
-    /// 3. **Deterministic merge** — replies are reassembled in input
+    /// 3. **Deterministic merge** — responses are reassembled in input
     ///    order regardless of which worker finished first.
     ///
     /// Per-stage latency lands in [`Metrics`]: per-query embed/index/llm
     /// histograms as usual, plus per-batch `lat_batch_embed` (summed
     /// chunk embedding wall), `lat_batch_merge`, and `lat_batch_total`.
-    pub fn handle_batch_with_workers(
+    pub fn serve_batch_with_workers(
         &self,
-        texts: &[&str],
-        clusters: &[Option<u64>],
+        reqs: &[QueryRequest],
         workers: usize,
-    ) -> Vec<Reply> {
-        assert_eq!(texts.len(), clusters.len(), "one cluster slot per query");
-        if texts.is_empty() {
+    ) -> Vec<QueryResponse> {
+        if reqs.is_empty() {
             return Vec::new();
         }
         let t_batch = Instant::now();
         // Shrink the chunk so a small batch still spans the whole pool
         // (32 queries at 8 workers -> 4-query chunks, not one chunk).
-        let workers = workers.max(1).min(texts.len());
-        let chunk_size = BATCH_CHUNK.min(texts.len().div_ceil(workers)).max(1);
-        let n_chunks = texts.len().div_ceil(chunk_size);
+        let workers = workers.max(1).min(reqs.len());
+        let chunk_size = BATCH_CHUNK.min(reqs.len().div_ceil(workers)).max(1);
+        let n_chunks = reqs.len().div_ceil(chunk_size);
         let next_chunk = AtomicUsize::new(0);
-        let slots: Mutex<Vec<(usize, Reply)>> = Mutex::new(Vec::with_capacity(texts.len()));
+        let slots: Mutex<Vec<(usize, QueryResponse)>> =
+            Mutex::new(Vec::with_capacity(reqs.len()));
         let embed_wall_ms = Mutex::new(0.0f64);
 
         std::thread::scope(|scope| {
@@ -338,26 +463,49 @@ impl Server {
                         break;
                     }
                     let start = c * chunk_size;
-                    let end = (start + chunk_size).min(texts.len());
-                    let chunk = &texts[start..end];
+                    let end = (start + chunk_size).min(reqs.len());
+                    let chunk = &reqs[start..end];
 
-                    // Stage 1: amortized embedding for the whole unit.
+                    // Stage 1: amortized embedding for the unit's valid
+                    // requests; invalid ones carry their rejection
+                    // reason (validated once) and are not encoded.
+                    let mut rejections: Vec<Option<String>> = chunk
+                        .iter()
+                        .map(|r| r.validate().err().map(|e| format!("{e:#}")))
+                        .collect();
+                    let texts: Vec<&str> = chunk
+                        .iter()
+                        .zip(&rejections)
+                        .filter(|(_, rejected)| rejected.is_none())
+                        .map(|(r, _)| r.text.as_str())
+                        .collect();
                     let t0 = Instant::now();
-                    let embeddings = self.encoder.encode_batch(chunk);
+                    let embeddings = if texts.is_empty() {
+                        Vec::new()
+                    } else {
+                        self.encoder.encode_batch(&texts)
+                    };
                     let chunk_ms = t0.elapsed().as_secs_f64() * 1e3;
                     *embed_wall_ms.lock().unwrap() += chunk_ms;
-                    let per_query_ms = chunk_ms / chunk.len() as f64;
+                    let per_query_ms =
+                        if texts.is_empty() { 0.0 } else { chunk_ms / texts.len() as f64 };
 
                     // Stage 2: lookup / miss fan-out.
                     let mut done = Vec::with_capacity(chunk.len());
-                    for (off, embedding) in embeddings.iter().enumerate() {
+                    let mut next_embedding = 0;
+                    for (off, req) in chunk.iter().enumerate() {
                         let i = start + off;
                         self.metrics.record_request();
-                        self.metrics.record_embedding(crate::llm::approx_tokens(texts[i]));
+                        if let Some(reason) = rejections[off].take() {
+                            self.metrics.record_rejected();
+                            done.push((i, QueryResponse::rejected(req, reason)));
+                            continue;
+                        }
+                        let embedding = &embeddings[next_embedding];
+                        next_embedding += 1;
+                        self.metrics.record_embedding(crate::llm::approx_tokens(&req.text));
                         self.metrics.observe_embed_ms(per_query_ms);
-                        let reply =
-                            self.serve_embedded(texts[i], clusters[i], embedding, per_query_ms);
-                        done.push((i, reply));
+                        done.push((i, self.serve_embedded(req, embedding, per_query_ms)));
                     }
                     slots.lock().unwrap().extend(done);
                 });
@@ -368,14 +516,73 @@ impl Server {
         let t_merge = Instant::now();
         let mut slots = slots.into_inner().unwrap();
         slots.sort_by_key(|(i, _)| *i);
-        debug_assert_eq!(slots.len(), texts.len());
-        let replies: Vec<Reply> = slots.into_iter().map(|(_, r)| r).collect();
+        debug_assert_eq!(slots.len(), reqs.len());
+        let responses: Vec<QueryResponse> = slots.into_iter().map(|(_, r)| r).collect();
 
-        self.metrics.record_batch(texts.len() as u64);
+        self.metrics.record_batch(reqs.len() as u64);
         self.metrics.observe_batch_embed_ms(embed_wall_ms.into_inner().unwrap());
         self.metrics.observe_batch_merge_ms(t_merge.elapsed().as_secs_f64() * 1e3);
         self.metrics.observe_batch_total_ms(t_batch.elapsed().as_secs_f64() * 1e3);
-        replies
+        responses
+    }
+
+    /// Serve a batch of plain texts (pre-v1 shim over
+    /// [`Server::serve_batch`]); replies come back in input order.
+    pub fn handle_batch(&self, texts: &[&str]) -> Vec<Reply> {
+        self.handle_batch_clustered(texts, &vec![None; texts.len()])
+    }
+
+    /// [`Server::handle_batch`] with per-query ground-truth clusters
+    /// (evaluation traces). `clusters` must be as long as `texts`.
+    pub fn handle_batch_clustered(&self, texts: &[&str], clusters: &[Option<u64>]) -> Vec<Reply> {
+        self.handle_batch_with_workers(texts, clusters, self.workers)
+    }
+
+    /// [`Server::handle_batch_clustered`] with an explicit pool width
+    /// (pre-v1 shim over [`Server::serve_batch_with_workers`]).
+    pub fn handle_batch_with_workers(
+        &self,
+        texts: &[&str],
+        clusters: &[Option<u64>],
+        workers: usize,
+    ) -> Vec<Reply> {
+        assert_eq!(texts.len(), clusters.len(), "one cluster slot per query");
+        let reqs: Vec<QueryRequest> = texts
+            .iter()
+            .zip(clusters)
+            .map(|(t, c)| {
+                let mut r = QueryRequest::new(*t);
+                r.cluster = *c;
+                r
+            })
+            .collect();
+        self.serve_batch_with_workers(&reqs, workers)
+            .into_iter()
+            .map(Reply::from_response)
+            .collect()
+    }
+
+    /// Execute an administrative operation (the `/v1/admin` endpoint).
+    pub fn admin(&self, req: &AdminRequest) -> AdminResponse {
+        match req {
+            AdminRequest::Flush => AdminResponse::Flushed { removed: self.cache.clear() },
+            AdminRequest::Housekeep => {
+                let (expired, rebuilt) = self.cache.housekeep();
+                AdminResponse::Housekept { expired, rebuilt }
+            }
+            AdminRequest::Stats => AdminResponse::Stats(self.stats_json()),
+        }
+    }
+
+    /// Metrics snapshot plus serving state, as one JSON document (the
+    /// `/v1/metrics` endpoint).
+    pub fn stats_json(&self) -> Value {
+        obj([
+            ("metrics", self.metrics.snapshot().to_json()),
+            ("cache_entries", self.cache.len().into()),
+            ("threshold", (self.effective_threshold() as f64).into()),
+            ("workers", self.workers.into()),
+        ])
     }
 
     /// Spawn the housekeeping thread (TTL sweep + index rebuild check).
@@ -449,6 +656,47 @@ mod tests {
     }
 
     #[test]
+    fn serve_returns_typed_outcomes() {
+        let s = server();
+        let req = QueryRequest::new("how do i reset my password").with_client_tag("t-1");
+        let r1 = s.serve(&req);
+        let inserted = match r1.outcome {
+            Outcome::Miss { inserted_id } => inserted_id,
+            ref other => panic!("first serve must miss, got {other:?}"),
+        };
+        assert!(inserted >= 1, "ids start at 1");
+        assert_eq!(r1.client_tag.as_deref(), Some("t-1"));
+        let r2 = s.serve(&QueryRequest::new("how can i reset my password"));
+        match r2.outcome {
+            Outcome::Hit { score, entry_id } => {
+                assert!(score >= s.effective_threshold());
+                assert_eq!(entry_id, inserted, "hit resolves to the inserted entry");
+            }
+            ref other => panic!("second serve must hit, got {other:?}"),
+        }
+        assert_eq!(r2.response, r1.response);
+        assert_eq!(r2.latency.llm_ms, 0.0, "hits never pay the LLM");
+    }
+
+    #[test]
+    fn serve_rejects_invalid_requests_without_panicking() {
+        let s = server();
+        let blank = QueryRequest::new("   ");
+        let r = s.serve(&blank);
+        assert!(matches!(r.outcome, Outcome::Rejected { .. }), "blank text rejected");
+        let bad = QueryRequest::new("ok question").with_top_k(0);
+        let r = s.serve(&bad);
+        match r.outcome {
+            Outcome::Rejected { ref reason } => assert!(reason.contains("top_k")),
+            ref other => panic!("expected rejection, got {other:?}"),
+        }
+        let m = s.metrics().snapshot();
+        assert_eq!(m.requests, 2);
+        assert_eq!(m.rejected, 2);
+        assert_eq!(m.llm_calls, 0, "rejected requests never reach the LLM");
+    }
+
+    #[test]
     fn paraphrase_hits_and_is_judged_positive() {
         let s = server();
         let r1 = s.handle("how do i reset my password", Some(42));
@@ -484,16 +732,54 @@ mod tests {
     }
 
     #[test]
-    fn threshold_override_changes_gating() {
+    fn per_request_threshold_changes_gating() {
         let s = server();
         s.handle("tell me about the acme laptop", Some(1));
-        // An unrelated query under an absurdly lenient threshold hits.
+        // An unrelated query under an absurdly lenient per-request
+        // threshold hits; the server-wide gate is untouched.
+        let lenient = QueryRequest::new("completely different topic entirely")
+            .with_cluster(2)
+            .with_threshold(-1.0);
+        let r = s.serve(&lenient);
+        assert!(r.is_hit());
+        assert_eq!(r.judged_positive, Some(false), "wrong-cluster hit judged negative");
+        assert_eq!(s.effective_threshold(), 0.8, "per-request option leaves the gate alone");
+    }
+
+    #[test]
+    fn legacy_global_threshold_override_still_works() {
+        let s = server();
+        s.handle("tell me about the acme laptop", Some(1));
+        #[allow(deprecated)]
         s.set_threshold(Some(-1.0));
+        assert_eq!(s.effective_threshold(), -1.0);
         let r = s.handle("completely different topic entirely", Some(2));
         assert!(matches!(r.source, ReplySource::Cache { .. }));
-        assert_eq!(r.judged_positive, Some(false), "wrong-cluster hit judged negative");
+        #[allow(deprecated)]
         s.set_threshold(None);
         assert_eq!(s.effective_threshold(), 0.8);
+    }
+
+    #[test]
+    fn server_config_builder_validates() {
+        let cfg = ServerConfig::builder()
+            .cache(CacheConfig::builder().threshold(0.7).build().unwrap())
+            .workers(8)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.workers, 8);
+        assert_eq!(cfg.cache.threshold, 0.7);
+        assert!(ServerConfig::builder().workers(0).build().is_err(), "workers == 0");
+        let bad_cache = CacheConfig { threshold: f32::NAN, ..Default::default() };
+        assert!(
+            ServerConfig::builder().cache(bad_cache).build().is_err(),
+            "nested cache config validated"
+        );
+        let bad_llm = SimLlmConfig { rtt_ms: f64::NAN, ..Default::default() };
+        assert!(
+            ServerConfig::builder().llm(bad_llm).build().is_err(),
+            "nested llm config validated"
+        );
     }
 
     #[test]
@@ -536,6 +822,28 @@ mod tests {
         assert_eq!(m.requests, 50);
         assert_eq!(m.cache_hits, 50);
         assert!(m.lat_batch_total.n == 1 && m.lat_batch_embed.n == 1);
+    }
+
+    #[test]
+    fn serve_batch_mixes_valid_and_rejected_in_order() {
+        let s = server();
+        let reqs = vec![
+            QueryRequest::new("a perfectly fine question"),
+            QueryRequest::new("   "),
+            QueryRequest::new("another fine question").with_top_k(0),
+            QueryRequest::new("a perfectly fine question"),
+        ];
+        // One worker => one chunk processed in order, so the repeat of
+        // request 0 deterministically hits its freshly inserted entry.
+        let out = s.serve_batch_with_workers(&reqs, 1);
+        assert_eq!(out.len(), 4);
+        assert!(matches!(out[0].outcome, Outcome::Miss { .. }));
+        assert!(matches!(out[1].outcome, Outcome::Rejected { .. }));
+        assert!(matches!(out[2].outcome, Outcome::Rejected { .. }));
+        assert!(matches!(out[3].outcome, Outcome::Hit { .. }), "repeat of request 0 hits");
+        let m = s.metrics().snapshot();
+        assert_eq!(m.requests, 4);
+        assert_eq!(m.rejected, 2);
     }
 
     #[test]

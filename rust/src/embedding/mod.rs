@@ -34,7 +34,11 @@ pub use pjrt::PjrtEncoder;
 pub use service::{BatcherConfig, EmbeddingHandle, EmbeddingService, EncoderSpec};
 pub use weights::EncoderWeights;
 
-use crate::runtime::ModelParams;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::error::{Context, Result};
+use crate::runtime::{artifacts_dir, ModelParams};
 
 /// A sentence-embedding backend. Embeddings are unit-norm f32 vectors.
 pub trait Encoder: Send + Sync {
@@ -48,6 +52,27 @@ pub trait Encoder: Send + Sync {
     }
     /// Hyperparameters of the underlying model.
     fn params(&self) -> &ModelParams;
+}
+
+/// Build the encoder selected by the app-level [`crate::config::Config`]
+/// (`encoder_kind`): the PJRT embedding service when requested, the
+/// native encoder otherwise. Shared by the `semcache` and `semcached`
+/// binaries so the two stay in sync.
+pub fn build_encoder(cfg: &crate::config::Config) -> Result<Arc<dyn Encoder>> {
+    match cfg.encoder_kind.as_str() {
+        "pjrt" => {
+            let handle = EmbeddingService::spawn(
+                EncoderSpec::Pjrt(artifacts_dir()),
+                BatcherConfig {
+                    window: Duration::from_micros(cfg.batch_window_us),
+                    max_batch: cfg.max_batch,
+                },
+            )
+            .context("starting PJRT embedding service (run `make artifacts`?)")?;
+            Ok(Arc::new(handle))
+        }
+        _ => Ok(Arc::new(NativeEncoder::new(ModelParams::default()))),
+    }
 }
 
 #[cfg(test)]

@@ -66,14 +66,16 @@ pub fn run_paper_eval(ctx: &EvalContext, cfg: &PaperEvalConfig) -> PaperEval {
     // §3.1: populate the cache with all 8,000 pairs. Entries carry the
     // answer-group id — the judge's ground truth (see workload docs).
     for (p, e) in ctx.dataset.base.iter().zip(&ctx.base_embeddings) {
-        cache.insert_entry(
-            e,
-            CachedEntry {
-                question: p.question.clone(),
-                response: p.answer.clone(),
-                cluster: p.answer_group,
-            },
-        );
+        cache
+            .try_insert_entry(
+                e,
+                CachedEntry {
+                    question: p.question.clone(),
+                    response: p.answer.clone(),
+                    cluster: p.answer_group,
+                },
+            )
+            .expect("populate insert");
     }
 
     struct Tally {
@@ -148,14 +150,16 @@ pub fn run_paper_eval(ctx: &EvalContext, cfg: &PaperEvalConfig) -> PaperEval {
                 t.llm_in_tokens += resp.input_tokens;
                 t.llm_out_tokens += resp.output_tokens;
                 t.with_ms += embed_ms + index_ms + resp.latency_ms;
-                cache.insert_entry(
-                    e,
-                    CachedEntry {
-                        question: q.text.clone(),
-                        response: resp.text,
-                        cluster: q.answer_group,
-                    },
-                );
+                cache
+                    .try_insert_entry(
+                        e,
+                        CachedEntry {
+                            question: q.text.clone(),
+                            response: resp.text,
+                            cluster: q.answer_group,
+                        },
+                    )
+                    .expect("miss insert");
             }
         }
 

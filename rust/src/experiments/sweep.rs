@@ -56,14 +56,16 @@ pub fn threshold_sweep(
     let cache = SemanticCache::new(cache_cfg.clone());
     let judge = Judge::new(judge_cfg.clone());
     for (p, e) in ctx.dataset.base.iter().zip(&ctx.base_embeddings) {
-        cache.insert_entry(
-            e,
-            CachedEntry {
-                question: p.question.clone(),
-                response: p.answer.clone(),
-                cluster: p.answer_group,
-            },
-        );
+        cache
+            .try_insert_entry(
+                e,
+                CachedEntry {
+                    question: p.question.clone(),
+                    response: p.answer.clone(),
+                    cluster: p.answer_group,
+                },
+            )
+            .expect("populate insert");
     }
 
     thresholds

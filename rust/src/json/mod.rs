@@ -57,6 +57,16 @@ impl Value {
         self.as_f64().and_then(|f| if f.fract() == 0.0 { Some(f as i64) } else { None })
     }
 
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64().and_then(|f| {
+            if f >= 0.0 && f.fract() == 0.0 {
+                Some(f as u64)
+            } else {
+                None
+            }
+        })
+    }
+
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),

@@ -11,12 +11,15 @@
 //!   (`python/compile/model.py`) that calls the Pallas kernels and is lowered
 //!   once to HLO text by `python/compile/aot.py`.
 //! * **Layer 3 (Rust, runtime)** — this crate: the semantic cache itself
-//!   (vector store, HNSW ANN index, TTL key-value store), the serving
-//!   coordinator (single-query [`coordinator::Server::handle`] and the
-//!   concurrent batch pipeline [`coordinator::Server::handle_batch`]),
-//!   the simulated LLM upstream, the synthetic workload generator, and
-//!   the experiment harness that regenerates every table and figure of
-//!   the paper.
+//!   (vector store, HNSW ANN index, TTL key-value store), the typed v1
+//!   serving API ([`api::QueryRequest`] → [`api::QueryResponse`]), the
+//!   serving coordinator (single-query [`coordinator::Server::serve`]
+//!   and the concurrent batch pipeline
+//!   [`coordinator::Server::serve_batch`]), the zero-dependency HTTP
+//!   front-end ([`coordinator::http`], the `semcached` binary), the
+//!   simulated LLM upstream, the synthetic workload generator, and the
+//!   experiment harness that regenerates every table and figure of the
+//!   paper.
 //!
 //! Python never runs on the request path: `make artifacts` lowers the
 //! encoder + scorer to `artifacts/*.hlo.txt` once, and the Rust binary loads
@@ -34,11 +37,18 @@
 //! let cache = SemanticCache::new(CacheConfig::default());
 //! let e = encoder.encode_text("how do I reset my password?");
 //! assert!(cache.lookup(&e).is_none());
-//! cache.insert("how do I reset my password?", &e, "Click 'forgot password'...");
+//! cache.try_insert("how do I reset my password?", &e, "Click 'forgot password'...").unwrap();
 //! let e2 = encoder.encode_text("how can I reset my password");
 //! assert!(cache.lookup(&e2).is_some());
 //! ```
+//!
+//! Or served over the wire (`cargo run --release --bin semcached -- serve`):
+//!
+//! ```text
+//! curl -s localhost:8080/v1/query -d '{"text": "how do I reset my password?"}'
+//! ```
 
+pub mod api;
 pub mod cache;
 pub mod cli;
 pub mod config;

@@ -15,6 +15,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use crate::error::{bail, Result};
 use crate::util::Rng;
 
 use super::approx_tokens;
@@ -46,6 +47,38 @@ impl Default for SimLlmConfig {
             real_sleep: false,
             seed: 0x11AA,
         }
+    }
+}
+
+impl SimLlmConfig {
+    /// Latency-model parameters from the app-level
+    /// [`crate::config::Config`] (shared by both binaries).
+    pub fn from_app_config(cfg: &crate::config::Config) -> SimLlmConfig {
+        SimLlmConfig {
+            rtt_ms: cfg.llm_rtt_ms,
+            ms_per_token: cfg.llm_ms_per_token,
+            mean_output_tokens: cfg.llm_mean_output_tokens,
+            real_sleep: cfg.llm_real_sleep,
+            ..SimLlmConfig::default()
+        }
+    }
+
+    /// Reject latency-model parameters that would make sampled latencies
+    /// NaN, negative, or degenerate (used by `ServerConfig::builder`).
+    pub fn validate(&self) -> Result<()> {
+        if !self.rtt_ms.is_finite() || self.rtt_ms < 0.0 {
+            bail!("llm rtt_ms must be finite and >= 0, got {}", self.rtt_ms);
+        }
+        if !self.ms_per_token.is_finite() || self.ms_per_token < 0.0 {
+            bail!("llm ms_per_token must be finite and >= 0, got {}", self.ms_per_token);
+        }
+        if !self.mean_output_tokens.is_finite() || self.mean_output_tokens <= 0.0 {
+            bail!("llm mean_output_tokens must be finite and > 0, got {}", self.mean_output_tokens);
+        }
+        if !self.jitter_sigma.is_finite() || self.jitter_sigma < 0.0 {
+            bail!("llm jitter_sigma must be finite and >= 0, got {}", self.jitter_sigma);
+        }
+        Ok(())
     }
 }
 

@@ -8,17 +8,14 @@ use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Duration;
 
-use semcache::error::{bail, Context, Result};
+use semcache::error::{bail, Result};
 
 use semcache::cache::CacheConfig;
 use semcache::cli::{Args, USAGE};
 use semcache::config::Config;
 use semcache::coordinator::{Server, ServerConfig, TraceConfig, TraceRunner};
-use semcache::embedding::{
-    BatcherConfig, EmbeddingService, Encoder, EncoderSpec, NativeEncoder,
-};
+use semcache::embedding::build_encoder;
 use semcache::experiments::{self, EvalContext, PaperEvalConfig, ScalingConfig};
-use semcache::index::HnswConfig;
 use semcache::json;
 use semcache::llm::{JudgeConfig, SimLlmConfig};
 use semcache::runtime::{artifacts_available, artifacts_dir, ModelParams};
@@ -49,80 +46,10 @@ fn run(argv: &[String]) -> Result<()> {
     }
 }
 
-/// Assemble the typed config from file + CLI overrides.
+/// Assemble the typed config from file + CLI overrides (experiment-CLI
+/// flags reserved).
 fn load_config(args: &Args) -> Result<Config> {
-    let mut cfg = match args.opt("config") {
-        Some(path) => Config::from_file(Path::new(path))?,
-        None => Config::default(),
-    };
-    // Any --<config-key> overrides.
-    let reserved = ["config", "encoder", "scale", "seed", "out", "qps", "workers"];
-    for (k, v) in args.options() {
-        if reserved.contains(&k.as_str()) {
-            continue;
-        }
-        cfg.set(k, v).with_context(|| format!("CLI override --{k}"))?;
-    }
-    if let Some(e) = args.opt("encoder") {
-        cfg.encoder_kind = e.to_string();
-    } else if semcache::runtime::pjrt_ready() {
-        cfg.encoder_kind = "pjrt".into();
-    } else {
-        cfg.encoder_kind = "native".into();
-    }
-    if let Some(seed) = args.opt("seed") {
-        cfg.workload_seed = seed.parse().context("--seed")?;
-    }
-    cfg.validate()?;
-    Ok(cfg)
-}
-
-fn cache_config(cfg: &Config) -> CacheConfig {
-    CacheConfig {
-        threshold: cfg.similarity_threshold,
-        ttl_ms: cfg.ttl_secs * 1000,
-        capacity: cfg.cache_capacity,
-        top_k: cfg.top_k,
-        index: match cfg.index_kind.as_str() {
-            "flat" => semcache::cache::IndexKind::Flat,
-            _ => semcache::cache::IndexKind::Hnsw,
-        },
-        hnsw: HnswConfig {
-            m: cfg.hnsw_m,
-            ef_construction: cfg.hnsw_ef_construction,
-            ef_search: cfg.hnsw_ef_search,
-            ..HnswConfig::default()
-        },
-        rebuild_garbage_ratio: cfg.rebuild_garbage_ratio,
-        store_shards: cfg.store_shards,
-    }
-}
-
-fn llm_config(cfg: &Config) -> SimLlmConfig {
-    SimLlmConfig {
-        rtt_ms: cfg.llm_rtt_ms,
-        ms_per_token: cfg.llm_ms_per_token,
-        mean_output_tokens: cfg.llm_mean_output_tokens,
-        real_sleep: cfg.llm_real_sleep,
-        ..SimLlmConfig::default()
-    }
-}
-
-fn build_encoder(cfg: &Config) -> Result<Arc<dyn Encoder>> {
-    match cfg.encoder_kind.as_str() {
-        "pjrt" => {
-            let handle = EmbeddingService::spawn(
-                EncoderSpec::Pjrt(artifacts_dir()),
-                BatcherConfig {
-                    window: Duration::from_micros(cfg.batch_window_us),
-                    max_batch: cfg.max_batch,
-                },
-            )
-            .context("starting PJRT embedding service (run `make artifacts`?)")?;
-            Ok(Arc::new(handle))
-        }
-        _ => Ok(Arc::new(NativeEncoder::new(ModelParams::default()))),
-    }
+    Config::from_args(args, &["scale", "out", "qps", "workers"])
 }
 
 fn dataset_config(args: &Args) -> Result<DatasetConfig> {
@@ -198,8 +125,8 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let ctx = build_context(args, &cfg)?;
     let eval_cfg = PaperEvalConfig {
-        cache: cache_config(&cfg),
-        llm: llm_config(&cfg),
+        cache: CacheConfig::from_app_config(&cfg)?,
+        llm: SimLlmConfig::from_app_config(&cfg),
         judge: JudgeConfig::default(),
         cost: Default::default(),
     };
@@ -233,7 +160,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let ctx = build_context(args, &cfg)?;
     let rows = experiments::threshold_sweep(
         &ctx,
-        &cache_config(&cfg),
+        &CacheConfig::from_app_config(&cfg)?,
         &JudgeConfig::default(),
         &experiments::sweep_grid(),
     );
@@ -265,15 +192,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let encoder = build_encoder(&cfg)?;
     let ds_cfg = dataset_config(args)?;
     let ds = WorkloadGenerator::new(cfg.workload_seed).generate(&ds_cfg);
-    let server = Arc::new(Server::new(
-        encoder,
-        ServerConfig {
-            cache: cache_config(&cfg),
-            llm: llm_config(&cfg),
-            judge: JudgeConfig::default(),
-            workers: cfg.workers,
-        },
-    ));
+    let server = Arc::new(Server::new(encoder, ServerConfig::from_app_config(&cfg)?));
     eprintln!("[populating cache with {} QA pairs...]", ds.base.len());
     server.populate(&ds.base);
     server.register_ground_truth(&ds);

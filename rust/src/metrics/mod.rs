@@ -44,6 +44,12 @@ pub struct Metrics {
     pub llm_calls: AtomicU64,
     pub positive_hits: AtomicU64,
     pub negative_hits: AtomicU64,
+    /// Requests answered with `Outcome::Rejected` (invalid options,
+    /// rejected inserts) instead of the normal workflow.
+    pub rejected: AtomicU64,
+    // HTTP front-end counters.
+    pub http_requests: AtomicU64,
+    pub http_errors: AtomicU64,
     // Token accounting for the cost model.
     pub llm_input_tokens: AtomicU64,
     pub llm_output_tokens: AtomicU64,
@@ -72,6 +78,9 @@ pub struct MetricsSnapshot {
     pub llm_calls: u64,
     pub positive_hits: u64,
     pub negative_hits: u64,
+    pub rejected: u64,
+    pub http_requests: u64,
+    pub http_errors: u64,
     pub llm_input_tokens: u64,
     pub llm_output_tokens: u64,
     pub embedding_tokens: u64,
@@ -111,6 +120,18 @@ impl Metrics {
 
     pub fn record_embedding(&self, tokens: u64) {
         self.embedding_tokens.fetch_add(tokens, Ordering::Relaxed);
+    }
+
+    pub fn record_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_http_request(&self) {
+        self.http_requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_http_error(&self) {
+        self.http_errors.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn record_judgement(&self, positive: bool) {
@@ -157,6 +178,9 @@ impl Metrics {
             llm_calls: self.llm_calls.load(Ordering::Relaxed),
             positive_hits: self.positive_hits.load(Ordering::Relaxed),
             negative_hits: self.negative_hits.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            http_requests: self.http_requests.load(Ordering::Relaxed),
+            http_errors: self.http_errors.load(Ordering::Relaxed),
             llm_input_tokens: self.llm_input_tokens.load(Ordering::Relaxed),
             llm_output_tokens: self.llm_output_tokens.load(Ordering::Relaxed),
             embedding_tokens: self.embedding_tokens.load(Ordering::Relaxed),
@@ -218,6 +242,9 @@ impl MetricsSnapshot {
             ("llm_calls", self.llm_calls.into()),
             ("positive_hits", self.positive_hits.into()),
             ("negative_hits", self.negative_hits.into()),
+            ("rejected", self.rejected.into()),
+            ("http_requests", self.http_requests.into()),
+            ("http_errors", self.http_errors.into()),
             ("hit_rate", self.hit_rate().into()),
             ("positive_rate", self.positive_rate().into()),
             ("api_call_rate", self.api_call_rate().into()),

@@ -1,0 +1,346 @@
+//! Wire-format and HTTP front-end tests for the v1 serving API:
+//! JSON round-trip property tests over the `api` types (via the in-tree
+//! choice-stream harness), malformed-request handling (4xx JSON errors,
+//! never panics), and an end-to-end miss→hit flow over a real loopback
+//! socket.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use semcache::api::{LatencyBreakdown, Outcome, QueryRequest, QueryResponse};
+use semcache::coordinator::{
+    http_request, serve_http, HttpConfig, HttpHandle, Server, ServerConfig,
+};
+use semcache::embedding::NativeEncoder;
+use semcache::json;
+use semcache::runtime::ModelParams;
+use semcache::testutil::{prop_check, Gen, PropConfig};
+
+// ---------- wire-format property tests ----------
+
+fn gen_text(g: &mut Gen) -> String {
+    let words = g.usize_in(1, 6);
+    (0..words).map(|_| g.word()).collect::<Vec<_>>().join(" ")
+}
+
+fn gen_request(g: &mut Gen) -> QueryRequest {
+    let mut req = QueryRequest::new(gen_text(g));
+    if g.bool() {
+        req = req.with_cluster(g.u64() % (1 << 32));
+    }
+    if g.bool() {
+        req = req.with_threshold(g.f32_in(-1.0, 1.0));
+    }
+    if g.bool() {
+        req = req.with_ttl_ms(g.u64() % 1_000_000);
+    }
+    if g.bool() {
+        req = req.with_top_k(g.usize_in(1, 64));
+    }
+    if g.bool() {
+        req = req.with_client_tag(g.word());
+    }
+    req
+}
+
+fn gen_outcome(g: &mut Gen) -> Outcome {
+    match g.usize_below(3) {
+        0 => Outcome::Hit { score: g.f32_in(-1.0, 1.0), entry_id: 1 + g.u64() % (1 << 48) },
+        1 => Outcome::Miss { inserted_id: 1 + g.u64() % (1 << 48) },
+        _ => Outcome::Rejected { reason: gen_text(g) },
+    }
+}
+
+fn gen_response(g: &mut Gen) -> QueryResponse {
+    QueryResponse {
+        response: if g.bool() { gen_text(g) } else { String::new() },
+        outcome: gen_outcome(g),
+        latency: LatencyBreakdown {
+            total_ms: g.f32_in(0.0, 5_000.0) as f64,
+            embed_ms: g.f32_in(0.0, 100.0) as f64,
+            index_ms: g.f32_in(0.0, 10.0) as f64,
+            llm_ms: g.f32_in(0.0, 5_000.0) as f64,
+        },
+        judged_positive: if g.bool() { Some(g.bool()) } else { None },
+        matched_cluster: if g.bool() { Some(g.u64() % (1 << 32)) } else { None },
+        client_tag: if g.bool() { Some(g.word()) } else { None },
+    }
+}
+
+#[test]
+fn prop_query_request_json_roundtrip() {
+    prop_check(PropConfig { cases: 128, ..Default::default() }, "request-json-roundtrip", |g| {
+        let req = gen_request(g);
+        let wire = req.to_json().to_string();
+        let v = json::parse(&wire).map_err(|e| format!("reparse: {e}"))?;
+        let back = QueryRequest::from_json(&v).map_err(|e| format!("decode: {e:#}"))?;
+        if back != req {
+            return Err(format!("roundtrip diverged: {req:?} -> {wire} -> {back:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_outcome_json_roundtrip() {
+    prop_check(PropConfig { cases: 128, ..Default::default() }, "outcome-json-roundtrip", |g| {
+        let o = gen_outcome(g);
+        let wire = o.to_json().to_string();
+        let v = json::parse(&wire).map_err(|e| format!("reparse: {e}"))?;
+        let back = Outcome::from_json(&v).map_err(|e| format!("decode: {e:#}"))?;
+        if back != o {
+            return Err(format!("roundtrip diverged: {o:?} -> {wire} -> {back:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_query_response_json_roundtrip() {
+    prop_check(PropConfig { cases: 128, ..Default::default() }, "response-json-roundtrip", |g| {
+        let resp = gen_response(g);
+        let wire = resp.to_json().to_string();
+        let v = json::parse(&wire).map_err(|e| format!("reparse: {e}"))?;
+        let back = QueryResponse::from_json(&v).map_err(|e| format!("decode: {e:#}"))?;
+        if back != resp {
+            return Err(format!("roundtrip diverged: {resp:?} -> {wire} -> {back:?}"));
+        }
+        Ok(())
+    });
+}
+
+// ---------- HTTP front-end over a real loopback socket ----------
+
+fn tiny_server() -> Arc<Server> {
+    let mut p = ModelParams::default();
+    p.layers = 1;
+    p.vocab_size = 1024;
+    p.dim = 96;
+    p.hidden = 192;
+    p.heads = 4;
+    Arc::new(Server::new(Arc::new(NativeEncoder::new(p)), ServerConfig::default()))
+}
+
+fn start_front_end() -> (HttpHandle, String) {
+    let handle = serve_http(
+        tiny_server(),
+        HttpConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 2,
+            max_body_bytes: 64 * 1024,
+            read_timeout: Duration::from_secs(2),
+        },
+    )
+    .expect("bind ephemeral port");
+    let addr = handle.local_addr().to_string();
+    (handle, addr)
+}
+
+#[test]
+fn http_miss_then_hit_with_metrics() {
+    let (handle, addr) = start_front_end();
+
+    let body = QueryRequest::new("how do i reset my password").to_json().to_string();
+    let (status, v1) = http_request(&addr, "POST", "/v1/query", Some(&body)).unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(v1.get("outcome").get("type").as_str(), Some("miss"), "first query: {v1}");
+    let first_response = v1.get("response").as_str().expect("response text").to_string();
+
+    // A semantically similar paraphrase is answered from cache, without
+    // a simulated-LLM call.
+    let body = QueryRequest::new("how can i reset my password").to_json().to_string();
+    let (status, v2) = http_request(&addr, "POST", "/v1/query", Some(&body)).unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(v2.get("outcome").get("type").as_str(), Some("hit"), "paraphrase: {v2}");
+    assert!(
+        v2.get("outcome").get("score").as_f64().expect("score") >= 0.8,
+        "hit score clears the configured threshold: {v2}"
+    );
+    assert_eq!(v2.get("response").as_str(), Some(first_response.as_str()));
+    assert_eq!(v2.get("latency").get("llm_ms").as_f64(), Some(0.0), "hits skip the LLM");
+
+    // GET /v1/metrics reflects the hit.
+    let (status, m) = http_request(&addr, "GET", "/v1/metrics", None).unwrap();
+    assert_eq!(status, 200);
+    let mm = m.get("metrics");
+    assert_eq!(mm.get("requests").as_usize(), Some(2));
+    assert_eq!(mm.get("cache_hits").as_usize(), Some(1));
+    assert_eq!(mm.get("llm_calls").as_usize(), Some(1));
+    assert!(mm.get("http_requests").as_usize().expect("http_requests") >= 3);
+    assert_eq!(m.get("cache_entries").as_usize(), Some(1));
+
+    handle.shutdown();
+}
+
+#[test]
+fn http_batch_endpoint_preserves_order() {
+    let (handle, addr) = start_front_end();
+    let queries: Vec<json::Value> = (0..6)
+        .map(|i| QueryRequest::new(format!("batch probe number {i} zulu")).to_json())
+        .collect();
+    let body = json::obj([("queries", json::Value::Array(queries))]).to_string();
+    let (status, v) = http_request(&addr, "POST", "/v1/query_batch", Some(&body)).unwrap();
+    assert_eq!(status, 200);
+    let replies = v.get("replies").as_array().expect("replies array");
+    assert_eq!(replies.len(), 6);
+    for r in replies {
+        assert_eq!(r.get("outcome").get("type").as_str(), Some("miss"), "{r}");
+    }
+    // Same batch again: every distinct probe now hits.
+    let queries: Vec<json::Value> = (0..6)
+        .map(|i| QueryRequest::new(format!("batch probe number {i} zulu")).to_json())
+        .collect();
+    let body = json::obj([("queries", json::Value::Array(queries))]).to_string();
+    let (_, v) = http_request(&addr, "POST", "/v1/query_batch", Some(&body)).unwrap();
+    for r in v.get("replies").as_array().unwrap() {
+        assert_eq!(r.get("outcome").get("type").as_str(), Some("hit"), "{r}");
+    }
+    handle.shutdown();
+}
+
+#[test]
+fn http_per_request_threshold_rides_the_wire() {
+    let (handle, addr) = start_front_end();
+    let body = QueryRequest::new("tell me about the acme laptop").to_json().to_string();
+    http_request(&addr, "POST", "/v1/query", Some(&body)).unwrap();
+    // Unrelated query under a lenient per-request threshold: hit.
+    let body = QueryRequest::new("completely different topic entirely")
+        .with_threshold(-1.0)
+        .to_json()
+        .to_string();
+    let (status, v) = http_request(&addr, "POST", "/v1/query", Some(&body)).unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(v.get("outcome").get("type").as_str(), Some("hit"), "{v}");
+    handle.shutdown();
+}
+
+#[test]
+fn http_admin_flush_empties_the_cache() {
+    let (handle, addr) = start_front_end();
+    let body = QueryRequest::new("a question worth caching").to_json().to_string();
+    http_request(&addr, "POST", "/v1/query", Some(&body)).unwrap();
+    let (_, m) = http_request(&addr, "GET", "/v1/metrics", None).unwrap();
+    assert_eq!(m.get("cache_entries").as_usize(), Some(1));
+
+    let (status, v) =
+        http_request(&addr, "POST", "/v1/admin", Some(r#"{"action": "flush"}"#)).unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(v.get("removed").as_usize(), Some(1), "{v}");
+    let (_, m) = http_request(&addr, "GET", "/v1/metrics", None).unwrap();
+    assert_eq!(m.get("cache_entries").as_usize(), Some(0));
+
+    // Housekeep and stats also answer 200 with typed bodies.
+    let (status, v) =
+        http_request(&addr, "POST", "/v1/admin", Some(r#"{"action": "housekeep"}"#)).unwrap();
+    assert_eq!(status, 200);
+    assert!(v.get("expired").as_usize().is_some(), "{v}");
+    let (status, v) =
+        http_request(&addr, "POST", "/v1/admin", Some(r#"{"action": "stats"}"#)).unwrap();
+    assert_eq!(status, 200);
+    assert!(v.get("metrics").get("requests").as_usize().is_some(), "{v}");
+    handle.shutdown();
+}
+
+#[test]
+fn http_malformed_requests_get_4xx_json_not_panics() {
+    let (handle, addr) = start_front_end();
+
+    // Bad JSON body.
+    let (status, v) = http_request(&addr, "POST", "/v1/query", Some("{not json")).unwrap();
+    assert_eq!(status, 400);
+    assert!(v.get("error").as_str().unwrap().contains("invalid JSON"), "{v}");
+
+    // Missing required field.
+    let (status, v) = http_request(&addr, "POST", "/v1/query", Some(r#"{"cluster": 3}"#)).unwrap();
+    assert_eq!(status, 400);
+    assert!(v.get("error").as_str().unwrap().contains("text"), "{v}");
+
+    // Invalid option values.
+    let (status, v) =
+        http_request(&addr, "POST", "/v1/query", Some(r#"{"text": "q", "top_k": 0}"#)).unwrap();
+    assert_eq!(status, 400);
+    assert!(v.get("error").as_str().unwrap().contains("top_k"), "{v}");
+
+    // Batch body without the queries array / with a bad element.
+    let (status, _) = http_request(&addr, "POST", "/v1/query_batch", Some(r#"{}"#)).unwrap();
+    assert_eq!(status, 400);
+    let (status, v) = http_request(
+        &addr,
+        "POST",
+        "/v1/query_batch",
+        Some(r#"{"queries": [{"text": "ok"}, {"nope": 1}]}"#),
+    )
+    .unwrap();
+    assert_eq!(status, 400);
+    assert!(v.get("error").as_str().unwrap().contains("queries[1]"), "{v}");
+
+    // Unknown admin action.
+    let (status, _) =
+        http_request(&addr, "POST", "/v1/admin", Some(r#"{"action": "reboot"}"#)).unwrap();
+    assert_eq!(status, 400);
+
+    // Unknown path / wrong method.
+    let (status, _) = http_request(&addr, "GET", "/v2/query", None).unwrap();
+    assert_eq!(status, 404);
+    let (status, _) = http_request(&addr, "GET", "/v1/query", None).unwrap();
+    assert_eq!(status, 405);
+
+    // Oversized body: 100 KB against a 64 KB limit.
+    let huge = format!(r#"{{"text": "{}"}}"#, "a".repeat(100_000));
+    let (status, v) = http_request(&addr, "POST", "/v1/query", Some(&huge)).unwrap();
+    assert_eq!(status, 413, "{v}");
+
+    // The server is still healthy after all of that.
+    let (status, v) = http_request(&addr, "GET", "/v1/health", None).unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(v.get("status").as_str(), Some("ok"));
+    let (_, m) = http_request(&addr, "GET", "/v1/metrics", None).unwrap();
+    assert!(m.get("metrics").get("http_errors").as_usize().unwrap() >= 8);
+
+    handle.shutdown();
+}
+
+#[test]
+fn http_keep_alive_serves_sequential_requests_on_one_connection() {
+    use std::io::{BufRead, BufReader, Read, Write};
+    use std::net::TcpStream;
+
+    let (handle, addr) = start_front_end();
+    let stream = TcpStream::connect(&addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    for i in 0..3 {
+        let body = format!(r#"{{"text": "keep alive probe {i} tango"}}"#);
+        write!(
+            writer,
+            "POST /v1/query HTTP/1.1\r\nHost: loopback\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(),
+            body
+        )
+        .unwrap();
+        writer.flush().unwrap();
+
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("HTTP/1.1 200"), "request {i}: {line}");
+        let mut content_length = 0usize;
+        loop {
+            let mut h = String::new();
+            reader.read_line(&mut h).unwrap();
+            let h = h.trim_end();
+            if h.is_empty() {
+                break;
+            }
+            if let Some((k, val)) = h.split_once(':') {
+                if k.trim().eq_ignore_ascii_case("content-length") {
+                    content_length = val.trim().parse().unwrap();
+                }
+            }
+        }
+        let mut body = vec![0u8; content_length];
+        reader.read_exact(&mut body).unwrap();
+        let v = json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(v.get("outcome").get("type").as_str(), Some("miss"), "probe {i}");
+    }
+    handle.shutdown();
+}

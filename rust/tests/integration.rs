@@ -4,6 +4,7 @@
 use std::sync::Arc;
 use std::time::Duration;
 
+use semcache::api::QueryRequest;
 use semcache::cache::{CacheConfig, IndexKind, SemanticCache};
 use semcache::config::Config;
 use semcache::coordinator::{ReplySource, Server, ServerConfig, TraceConfig, TraceRunner};
@@ -107,7 +108,7 @@ fn flat_and_hnsw_agree_on_served_responses() {
         let cache = SemanticCache::new(CacheConfig { index: kind, ..Default::default() });
         for p in &ds.base {
             let e = enc.encode_text(&p.question);
-            cache.insert(&p.question, &e, &p.answer);
+            cache.try_insert(&p.question, &e, &p.answer).unwrap();
         }
         cache
     };
@@ -140,7 +141,7 @@ fn ttl_and_rebuild_under_serving() {
     let texts: Vec<String> =
         (0..40).map(|i| format!("question number {i} about topic {i}")).collect();
     for t in &texts {
-        cache.insert(t, &enc.encode_text(t), "answer");
+        cache.try_insert(t, &enc.encode_text(t), "answer").unwrap();
     }
     assert_eq!(cache.len(), 40);
     clock.advance(1_500);
@@ -150,7 +151,7 @@ fn ttl_and_rebuild_under_serving() {
     assert!(rebuilt >= 1, "garbage-heavy partition must rebuild");
     assert_eq!(cache.len(), 0);
     // Cache continues to serve fresh inserts.
-    cache.insert(&texts[0], &enc.encode_text(&texts[0]), "fresh");
+    cache.try_insert(&texts[0], &enc.encode_text(&texts[0]), "fresh").unwrap();
     assert!(cache.lookup(&enc.encode_text(&texts[0])).is_some());
 }
 
@@ -166,8 +167,12 @@ fn adaptive_threshold_reacts_to_negative_feedback() {
     let mut ctl = AdaptiveThreshold::with_band(0.60, 0.55, 0.95);
     let mut raised = false;
     for q in &ds.tests {
-        s.set_threshold(Some(ctl.get()));
-        let r = s.handle(&q.text, Some(q.answer_group));
+        // The controller's gate rides on each request (v1 API) instead
+        // of mutating server-wide state between queries.
+        let req = QueryRequest::new(q.text.as_str())
+            .with_cluster(q.answer_group)
+            .with_threshold(ctl.get());
+        let r = s.serve(&req);
         if let Some(ok) = r.judged_positive {
             ctl.observe(ok);
         }

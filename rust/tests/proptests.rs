@@ -184,7 +184,7 @@ fn prop_cache_threshold_monotone() {
         let n = g.usize_in(3, 80);
         for i in 0..n {
             let v = g.vec_f32(dim, -1.0, 1.0);
-            cache.insert(&format!("q{i}"), &v, "r");
+            cache.try_insert(&format!("q{i}"), &v, "r").map_err(|e| format!("insert: {e:#}"))?;
         }
         for _ in 0..10 {
             let q = g.vec_f32(dim, -1.0, 1.0);

@@ -3,11 +3,23 @@
 #
 #   ./verify.sh            (or: make verify, from the repo root)
 #
-# Steps: release build, unit+integration tests, doc tests, and a smoke
-# run of the batch-throughput bench (SEMCACHE_BENCH_SMOKE=1 keeps it to
-# a few seconds). Fails fast on the first broken step.
+# Steps: format check, release build, unit+integration tests, doc tests,
+# an HTTP loopback smoke test of the `semcached` daemon (same query
+# twice over the wire -> the repeat must be a cache hit), and a smoke
+# run of the serving benches (SEMCACHE_BENCH_SMOKE=1 keeps each to a few
+# seconds). Fails fast on the first broken step.
 set -euo pipefail
 cd "$(dirname "$0")"
+
+# Format check: reported, but non-fatal — rustfmt output differs across
+# toolchain versions, and tier-1 must not flake on whitespace. Run
+# `cargo fmt` locally to fix anything reported here.
+if cargo fmt --version >/dev/null 2>&1; then
+    echo "==> cargo fmt --check (advisory)"
+    cargo fmt -- --check || echo "WARNING: formatting drift detected (run 'cargo fmt'); continuing"
+else
+    echo "==> cargo fmt unavailable in this toolchain; skipping format check"
+fi
 
 echo "==> cargo build --release"
 cargo build --release
@@ -18,7 +30,33 @@ cargo test -q
 echo "==> cargo test --doc -q"
 cargo test --doc -q
 
+echo "==> HTTP loopback smoke: semcached serve"
+PORT_FILE="$(mktemp)"
+./target/release/semcached serve --port 0 --port-file "$PORT_FILE" &
+SRV_PID=$!
+trap 'kill "$SRV_PID" 2>/dev/null || true' EXIT
+for _ in $(seq 1 100); do
+    [ -s "$PORT_FILE" ] && break
+    sleep 0.1
+done
+[ -s "$PORT_FILE" ] || { echo "semcached did not come up"; exit 1; }
+ADDR="$(cat "$PORT_FILE")"
+echo "    daemon at $ADDR"
+./target/release/semcached query --addr "$ADDR" "how do i reset my password" >/dev/null
+OUT="$(./target/release/semcached query --addr "$ADDR" "how can i reset my password")"
+echo "$OUT" | grep -q '"type": "hit"' \
+    || { echo "loopback smoke FAILED: repeated query was not a cache hit"; echo "$OUT"; exit 1; }
+./target/release/semcached metrics --addr "$ADDR" | grep -q '"cache_hits": 1' \
+    || { echo "loopback smoke FAILED: /v1/metrics does not reflect the hit"; exit 1; }
+kill "$SRV_PID" 2>/dev/null || true
+wait "$SRV_PID" 2>/dev/null || true
+trap - EXIT
+echo "    loopback smoke OK (miss -> hit over the wire, metrics agree)"
+
 echo "==> smoke bench: bench_batch_throughput (SEMCACHE_BENCH_SMOKE=1)"
 SEMCACHE_BENCH_SMOKE=1 cargo bench --bench bench_batch_throughput
+
+echo "==> smoke bench: bench_http_loopback (SEMCACHE_BENCH_SMOKE=1)"
+SEMCACHE_BENCH_SMOKE=1 cargo bench --bench bench_http_loopback
 
 echo "==> verify OK"
