@@ -1,11 +1,16 @@
 # GPT Semantic Cache — build/verify entry points.
 #
-#   make verify      tier-1: fmt + build + tests + doc tests + loopback smoke + smoke benches
+#   make verify      tier-1: fmt + build + tests + doc tests + batched
+#                    loopback smoke (paraphrase hit + metrics consistency)
+#                    + smoke benches
 #   make build       release build of the Rust crate
-#   make test        unit + integration tests
+#   make test        unit + integration tests (incl. tests/batching.rs:
+#                    trace-replay parity, 16-thread stress, window-policy
+#                    property tests, TTL-under-batching)
 #   make serve       run the semcached HTTP daemon on :8080
 #   make bench-batch batch serving throughput baseline (full mode)
-#   make bench-http  HTTP loopback throughput vs direct serve_batch (full mode)
+#   make bench-http  batched vs unbatched HTTP loopback throughput vs
+#                    direct serve_batch, 8 connections (full mode)
 #   make artifacts   lower the JAX/Pallas encoder to HLO (needs python/jax)
 
 .PHONY: verify build test serve bench-batch bench-http artifacts

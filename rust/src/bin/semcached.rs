@@ -47,7 +47,18 @@ fn run(argv: &[String]) -> Result<()> {
 fn load_config(args: &Args) -> Result<Config> {
     let mut cfg = Config::from_args(
         args,
-        &["port", "bind", "http-workers", "workers", "populate", "port-file"],
+        &[
+            "port",
+            "bind",
+            "http-workers",
+            "workers",
+            "populate",
+            "port-file",
+            "batch-max-size",
+            "batch-wait-us",
+            "batch-queue",
+            "no-batch",
+        ],
     )?;
     if let Some(w) = args.opt("workers") {
         cfg.workers = w.parse().context("--workers")?;
@@ -59,8 +70,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     // The validating builders are the construction path for the daemon:
     // a bad --similarity_threshold (NaN, out of range) fails here, at
-    // startup, not as a panic mid-request.
-    let server_cfg = ServerConfig::from_app_config(&cfg)?;
+    // startup, not as a panic mid-request — and so do bad batcher knobs
+    // (--batch-max-size 0, --batch-wait-us beyond 1s).
+    let mut server_cfg = ServerConfig::from_app_config(&cfg)?;
+    let mut batch = server_cfg.batch.clone();
+    if let Some(v) = args.opt("batch-max-size") {
+        batch.max_batch_size = v.parse().context("--batch-max-size")?;
+    }
+    if let Some(v) = args.opt("batch-wait-us") {
+        batch.max_wait_us = v.parse().context("--batch-wait-us")?;
+    }
+    if let Some(v) = args.opt("batch-queue") {
+        batch.queue_capacity = v.parse().context("--batch-queue")?;
+    }
+    batch.validate()?;
+    server_cfg.batch = batch;
     let encoder = build_encoder(&cfg)?;
     let server = Arc::new(Server::new(encoder, server_cfg));
 
@@ -81,18 +105,33 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let port: u16 = args.opt_parse("port", 8080)?;
     let bind = args.opt("bind").unwrap_or("127.0.0.1");
     let http_workers: usize = args.opt_parse("http-workers", 4)?;
+    // `--no-batch value` / `--no-batch=value` parse as an *option*, not
+    // a flag; refuse loudly rather than silently serving batched when
+    // the operator asked for the escape hatch.
+    if args.opt("no-batch").is_some() {
+        bail!("--no-batch is a bare flag and takes no value");
+    }
+    let batching = !args.flag("no-batch");
     let handle = serve_http(
         server,
         HttpConfig {
             addr: format!("{bind}:{port}"),
             workers: http_workers,
+            batching,
             ..HttpConfig::default()
         },
     )?;
     let addr = handle.local_addr();
     if let Some(path) = args.opt("port-file") {
-        std::fs::write(path, addr.to_string())
+        // Written atomically (tmp + rename) once the listener is
+        // accepting: readers polling the file never observe a partial
+        // address, making this the ready-signal handshake for scripts
+        // (verify.sh) instead of a fixed sleep.
+        let tmp = format!("{path}.tmp");
+        std::fs::write(&tmp, addr.to_string())
             .with_context(|| format!("writing --port-file {path}"))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("publishing --port-file {path}"))?;
     }
     println!("semcached listening on http://{addr}");
     println!("endpoints: POST /v1/query /v1/query_batch /v1/admin | GET /v1/metrics /v1/health");

@@ -126,6 +126,13 @@ SERVE OPTIONS:
     --bind <addr>            Bind address (default 127.0.0.1)
     --http-workers <n>       Connection-handler threads (default 4)
     --workers <n>            Batch-pipeline worker threads (default 4)
+    --no-batch               Serve each query in isolation instead of
+                             coalescing concurrent in-flight queries
+    --batch-max-size <n>     Micro-batch size cap (default 8; >= 1)
+    --batch-wait-us <us>     Dispatch window: max extra wait for
+                             stragglers, microseconds (default 200; <= 1s)
+    --batch-queue <n>        Bounded submit queue; a full queue answers
+                             503 Service Unavailable (default 1024)
     --populate <scale>       Pre-populate from the synthetic workload
                              (paper | small | tiny)
     --port-file <path>       Write the bound host:port to a file once ready

@@ -1,0 +1,643 @@
+//! Cross-request micro-batching: coalescing concurrent in-flight
+//! queries into single `serve_batch` calls.
+//!
+//! The PR 1 batch pipeline ([`super::Server::serve_batch`]) only pays
+//! off when callers *have* a batch in hand; the HTTP front-end serves
+//! each connection's request as an isolated `serve()` call, so the
+//! pipeline sat unused on the wire path. The [`Batcher`] closes that
+//! gap:
+//!
+//! ```text
+//!   conn worker ──submit──► bounded MPSC queue ──► dispatcher thread
+//!   conn worker ──submit──►        │                    │ drain up to
+//!   conn worker ──submit──►        │                    │ max_batch_size
+//!                                  ▼                    │ within
+//!                           (503 when full)             │ max_wait_us
+//!                                                       ▼
+//!                                            dedup identical in-flight
+//!                                                       │
+//!                                                serve_batch(uniques)
+//!                                                       │
+//!                              one-shot reply channel per submitter
+//! ```
+//!
+//! **Window policy.** A dispatch starts with the oldest queued request;
+//! the dispatcher first drains everything already queued, then waits for
+//! stragglers until either the batch holds `max_batch_size` requests or
+//! `max_wait_us` has passed since the *first* request of the window was
+//! enqueued (so a request never waits more than one window on top of
+//! its queue time). While a dispatch is being served the queue refills,
+//! which is what makes batches form under load without any extra delay.
+//!
+//! **Coalescing.** Identical in-flight requests — same text and same
+//! outcome-affecting options (threshold, ttl_ms, top_k, cluster) — are
+//! served once per dispatch; every duplicate is answered from the
+//! representative's result via [`BatchExecutor::coalesce`] without its
+//! own embedding, lookup, or LLM call. This also *fixes* the documented
+//! `serve_batch` caveat: racing duplicate novel queries no longer each
+//! call the upstream LLM, because the single dispatcher totally orders
+//! dispatches and dedups within them. `client_tag` is not part of the
+//! identity and is echoed per-request.
+//!
+//! **Backpressure.** The submit queue is bounded; when it is full,
+//! [`Batcher::submit`] fails fast with [`SubmitError::QueueFull`]
+//! (mapped to HTTP 503 + `Outcome::Rejected` by the front-end) instead
+//! of buffering without limit.
+//!
+//! **Shutdown.** [`Batcher::shutdown`] closes the queue, lets the
+//! dispatcher drain every already-accepted request (each submitter still
+//! gets its reply), and joins the dispatcher thread. Submitting after
+//! shutdown fails with [`SubmitError::Shutdown`].
+
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TryRecvError, TrySendError};
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::api::{QueryRequest, QueryResponse};
+use crate::error::{bail, Result};
+use crate::metrics::Metrics;
+
+/// Hard cap on [`BatchConfig::max_batch_size`].
+pub const MAX_BATCH_SIZE_LIMIT: usize = 4096;
+/// Hard cap on [`BatchConfig::max_wait_us`] (1 s — a coalescing window,
+/// not a request timeout).
+pub const MAX_WAIT_US_LIMIT: u64 = 1_000_000;
+
+/// Micro-batching window policy and queue bound.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BatchConfig {
+    /// Most requests coalesced into one dispatch (`1..=`
+    /// [`MAX_BATCH_SIZE_LIMIT`]; 1 disables coalescing but keeps the
+    /// queue/backpressure semantics).
+    pub max_batch_size: usize,
+    /// Longest a dispatch window stays open after its first request was
+    /// enqueued, microseconds (`0..=`[`MAX_WAIT_US_LIMIT`]; 0 = dispatch
+    /// whatever is already queued without waiting for stragglers).
+    pub max_wait_us: u64,
+    /// Bound on queued-but-undispatched requests; a full queue answers
+    /// [`SubmitError::QueueFull`] (HTTP 503).
+    pub queue_capacity: usize,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        Self { max_batch_size: 32, max_wait_us: 1_000, queue_capacity: 1024 }
+    }
+}
+
+impl BatchConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.max_batch_size == 0 {
+            bail!("batch max_batch_size must be >= 1");
+        }
+        if self.max_batch_size > MAX_BATCH_SIZE_LIMIT {
+            bail!(
+                "batch max_batch_size must be <= {MAX_BATCH_SIZE_LIMIT}, got {}",
+                self.max_batch_size
+            );
+        }
+        if self.max_wait_us > MAX_WAIT_US_LIMIT {
+            bail!(
+                "batch max_wait_us must be <= {MAX_WAIT_US_LIMIT} (1s), got {}",
+                self.max_wait_us
+            );
+        }
+        if self.queue_capacity == 0 {
+            bail!("batch queue_capacity must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+/// Why a [`Batcher::submit`] was not served.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The bounded submit queue is full (backpressure; retry later).
+    QueueFull,
+    /// The batcher has shut down (or its dispatcher died).
+    Shutdown,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull => write!(f, "batch queue full (server overloaded)"),
+            SubmitError::Shutdown => write!(f, "batcher is shut down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// What the batcher dispatches to. [`super::Server`] is the production
+/// executor (`serve_batch`); tests plug in recording/misbehaving mocks.
+pub trait BatchExecutor: Send + Sync + 'static {
+    /// Serve one dispatched micro-batch; must return exactly one
+    /// response per request, in input order.
+    fn execute(&self, reqs: &[QueryRequest]) -> Vec<QueryResponse>;
+
+    /// Answer `dup` — an identical in-flight twin of `rep` within one
+    /// dispatch — from the representative's response. The default keeps
+    /// the result and re-tags it with the duplicate's `client_tag`;
+    /// [`super::Server`] overrides this to record metrics and resolve
+    /// the duplicate as a cache hit on the representative's entry.
+    fn coalesce(
+        &self,
+        dup: &QueryRequest,
+        rep: &QueryRequest,
+        rep_resp: &QueryResponse,
+    ) -> QueryResponse {
+        let _ = rep;
+        let mut resp = rep_resp.clone();
+        resp.client_tag = dup.client_tag.clone();
+        resp
+    }
+}
+
+/// One queued request with its reply channel.
+struct Submission {
+    req: QueryRequest,
+    enqueued: Instant,
+    reply: SyncSender<QueryResponse>,
+}
+
+/// In-flight identity for coalescing: the text plus every option that
+/// can change the outcome. `client_tag` is deliberately excluded.
+#[derive(Hash, PartialEq, Eq)]
+struct CoalesceKey {
+    text: String,
+    threshold_bits: Option<u32>,
+    ttl_ms: Option<u64>,
+    top_k: Option<usize>,
+    cluster: Option<u64>,
+}
+
+impl CoalesceKey {
+    fn of(req: &QueryRequest) -> Self {
+        Self {
+            text: req.text.clone(),
+            threshold_bits: req.options.threshold.map(f32::to_bits),
+            ttl_ms: req.options.ttl_ms,
+            top_k: req.options.top_k,
+            cluster: req.cluster,
+        }
+    }
+}
+
+/// The cross-request micro-batching engine. Cheap to share via `Arc`;
+/// every HTTP connection worker calls [`Batcher::submit`] concurrently.
+pub struct Batcher {
+    /// `None` once shut down; dropping the sender disconnects the queue.
+    tx: RwLock<Option<SyncSender<Submission>>>,
+    dispatcher: Mutex<Option<JoinHandle<()>>>,
+    metrics: Arc<Metrics>,
+    /// Queued-but-not-yet-dequeued submissions (a gauge: incremented
+    /// after a successful enqueue, decremented as the dispatcher pops;
+    /// signed because a pop can transiently beat its enqueuer's
+    /// increment).
+    depth: Arc<AtomicI64>,
+}
+
+impl Batcher {
+    /// Validate `cfg`, then spawn the dispatcher thread over `executor`.
+    pub fn start(
+        executor: Arc<dyn BatchExecutor>,
+        metrics: Arc<Metrics>,
+        cfg: BatchConfig,
+    ) -> Result<Arc<Batcher>> {
+        cfg.validate()?;
+        let (tx, rx) = mpsc::sync_channel::<Submission>(cfg.queue_capacity);
+        let depth = Arc::new(AtomicI64::new(0));
+        let dispatcher_metrics = metrics.clone();
+        let dispatcher_depth = depth.clone();
+        let handle = std::thread::Builder::new()
+            .name("batch-dispatcher".into())
+            .spawn(move || dispatch_loop(rx, executor, dispatcher_metrics, dispatcher_depth, cfg))
+            .expect("spawn batch dispatcher");
+        Ok(Arc::new(Batcher {
+            tx: RwLock::new(Some(tx)),
+            dispatcher: Mutex::new(Some(handle)),
+            metrics,
+            depth,
+        }))
+    }
+
+    /// Submissions accepted but not yet pulled into a dispatch. An
+    /// observability gauge (and a deterministic synchronization point
+    /// for tests): a depth of `n` proves at least `n` enqueues have
+    /// fully completed and not been dequeued. It can transiently
+    /// under-count mid-handoff, never over-count.
+    pub fn queue_depth(&self) -> usize {
+        self.depth.load(Ordering::SeqCst).max(0) as usize
+    }
+
+    /// Enqueue one request and block until its response is ready.
+    ///
+    /// Fails fast (without blocking) when the queue is full or the
+    /// batcher is shut down; both failures are recorded as a rejected
+    /// request so `cache_hits + cache_misses + rejected == requests`
+    /// stays an invariant of the metrics under backpressure.
+    pub fn submit(&self, req: &QueryRequest) -> std::result::Result<QueryResponse, SubmitError> {
+        let (reply_tx, reply_rx) = mpsc::sync_channel::<QueryResponse>(1);
+        {
+            let guard = self.tx.read().unwrap();
+            let tx = match guard.as_ref() {
+                Some(tx) => tx,
+                None => return Err(self.reject(SubmitError::Shutdown)),
+            };
+            let sub =
+                Submission { req: req.clone(), enqueued: Instant::now(), reply: reply_tx };
+            match tx.try_send(sub) {
+                // Gauge up only after the slot is truly occupied, so an
+                // observed depth of n proves n completed enqueues (the
+                // dispatcher's decrement may transiently beat this
+                // increment; the signed gauge absorbs that).
+                Ok(()) => {
+                    self.depth.fetch_add(1, Ordering::SeqCst);
+                }
+                Err(TrySendError::Full(_)) => return Err(self.reject(SubmitError::QueueFull)),
+                Err(TrySendError::Disconnected(_)) => {
+                    return Err(self.reject(SubmitError::Shutdown));
+                }
+            }
+        }
+        // Accepted requests are always answered: the dispatcher drains
+        // the queue before exiting, and if it ever dies the queue (and
+        // with it this reply sender's peer) is dropped, waking us here.
+        reply_rx.recv().map_err(|_| SubmitError::Shutdown)
+    }
+
+    fn reject(&self, e: SubmitError) -> SubmitError {
+        self.metrics.record_request();
+        self.metrics.record_rejected();
+        e
+    }
+
+    /// Stop accepting, serve everything already queued, join the
+    /// dispatcher. Idempotent; also runs on drop.
+    pub fn shutdown(&self) {
+        let tx = self.tx.write().unwrap().take();
+        drop(tx); // disconnects the queue once in-queue items drain
+        if let Some(h) = self.dispatcher.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn dispatch_loop(
+    rx: Receiver<Submission>,
+    executor: Arc<dyn BatchExecutor>,
+    metrics: Arc<Metrics>,
+    depth: Arc<AtomicI64>,
+    cfg: BatchConfig,
+) {
+    let window = Duration::from_micros(cfg.max_wait_us);
+    loop {
+        // Block for the window's first request; a disconnected, empty
+        // queue means shutdown.
+        let first = match rx.recv() {
+            Ok(s) => s,
+            Err(_) => break,
+        };
+        depth.fetch_sub(1, Ordering::SeqCst);
+        let deadline = first.enqueued + window;
+        let mut batch = vec![first];
+        loop {
+            if batch.len() >= cfg.max_batch_size {
+                break;
+            }
+            // Drain whatever is already queued without waiting...
+            match rx.try_recv() {
+                Ok(s) => {
+                    depth.fetch_sub(1, Ordering::SeqCst);
+                    batch.push(s);
+                    continue;
+                }
+                Err(TryRecvError::Disconnected) => break,
+                Err(TryRecvError::Empty) => {}
+            }
+            // ...then wait for stragglers until the window closes.
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline.saturating_duration_since(now)) {
+                Ok(s) => {
+                    depth.fetch_sub(1, Ordering::SeqCst);
+                    batch.push(s);
+                }
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        dispatch(executor.as_ref(), &metrics, batch);
+    }
+}
+
+/// Serve one dispatched micro-batch: dedup identical in-flight requests,
+/// run the executor over the unique ones, fan every reply out to its
+/// submitter (exactly one reply per submission, even if the executor
+/// misbehaves).
+fn dispatch(executor: &dyn BatchExecutor, metrics: &Metrics, batch: Vec<Submission>) {
+    let t0 = Instant::now();
+    metrics.record_batcher_dispatch(batch.len() as u64);
+    for s in &batch {
+        metrics.observe_queue_wait_ms(s.enqueued.elapsed().as_secs_f64() * 1e3);
+    }
+
+    // Group by in-flight identity: `rep_slot[i]` is the unique-slot of
+    // submission i, `reps[slot]` the submission index of that slot's
+    // representative (its first occurrence, preserving arrival order).
+    let mut rep_slot: Vec<usize> = Vec::with_capacity(batch.len());
+    let mut reps: Vec<usize> = Vec::new();
+    let mut seen: HashMap<CoalesceKey, usize> = HashMap::new();
+    for (i, s) in batch.iter().enumerate() {
+        match seen.entry(CoalesceKey::of(&s.req)) {
+            Entry::Occupied(e) => rep_slot.push(*e.get()),
+            Entry::Vacant(v) => {
+                v.insert(reps.len());
+                rep_slot.push(reps.len());
+                reps.push(i);
+            }
+        }
+    }
+    let unique: Vec<QueryRequest> = reps.iter().map(|&i| batch[i].req.clone()).collect();
+
+    // A panicking executor must not leave submitters blocked forever or
+    // kill the dispatcher: catch, reject the whole dispatch, keep going.
+    let served = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        executor.execute(&unique)
+    }));
+    let responses = match served {
+        Ok(r) if r.len() == unique.len() => r,
+        Ok(r) => {
+            eprintln!(
+                "[batcher] executor returned {} responses for {} requests; rejecting dispatch",
+                r.len(),
+                unique.len()
+            );
+            reject_all(metrics, batch);
+            return;
+        }
+        Err(_) => {
+            eprintln!("[batcher] executor panicked; rejecting dispatch, dispatcher recovered");
+            reject_all(metrics, batch);
+            return;
+        }
+    };
+
+    for (i, s) in batch.iter().enumerate() {
+        let slot = rep_slot[i];
+        let resp = if reps[slot] == i {
+            responses[slot].clone()
+        } else {
+            metrics.record_coalesced();
+            executor.coalesce(&s.req, &batch[reps[slot]].req, &responses[slot])
+        };
+        // A submitter that vanished (impossible today: submit blocks on
+        // the reply) must not wedge the dispatcher.
+        let _ = s.reply.send(resp);
+    }
+    metrics.observe_dispatch_ms(t0.elapsed().as_secs_f64() * 1e3);
+}
+
+/// Answer a failed dispatch: every submission still gets exactly one
+/// reply, recorded as `request` + `rejected`. Like any other
+/// serving-time rejection, the reply rides a normal 200 on the wire
+/// with a typed `Rejected` outcome. Note the accounting here is
+/// best-effort: an executor that recorded some per-query metrics before
+/// panicking mid-batch leaves those queries counted twice — the loud
+/// stderr line above, not the counters, is the signal for this
+/// (exceptional, bug-indicating) path.
+fn reject_all(metrics: &Metrics, batch: Vec<Submission>) {
+    for s in batch {
+        metrics.record_request();
+        metrics.record_rejected();
+        let resp = QueryResponse::rejected(&s.req, "internal error: batch executor failed");
+        let _ = s.reply.send(resp);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{LatencyBreakdown, Outcome};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Condvar;
+
+    /// Echo executor: answers `Miss` with the request text as response;
+    /// optionally blocks inside `execute` until released (to pin the
+    /// dispatcher while the test fills the queue deterministically).
+    struct EchoExec {
+        calls: Mutex<Vec<Vec<String>>>,
+        entered: AtomicUsize,
+        gate: Mutex<bool>,
+        gate_cv: Condvar,
+    }
+
+    impl EchoExec {
+        fn new(gated: bool) -> Arc<Self> {
+            Arc::new(Self {
+                calls: Mutex::new(Vec::new()),
+                entered: AtomicUsize::new(0),
+                gate: Mutex::new(!gated),
+                gate_cv: Condvar::new(),
+            })
+        }
+
+        fn open_gate(&self) {
+            *self.gate.lock().unwrap() = true;
+            self.gate_cv.notify_all();
+        }
+    }
+
+    /// Deterministic wait-with-deadline (no fixed sleeps in assertions).
+    fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+        for _ in 0..5_000 {
+            if cond() {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        panic!("timed out waiting for {what}");
+    }
+
+    impl BatchExecutor for EchoExec {
+        fn execute(&self, reqs: &[QueryRequest]) -> Vec<QueryResponse> {
+            self.entered.fetch_add(1, Ordering::SeqCst);
+            let mut open = self.gate.lock().unwrap();
+            while !*open {
+                open = self.gate_cv.wait(open).unwrap();
+            }
+            drop(open);
+            self.calls
+                .lock()
+                .unwrap()
+                .push(reqs.iter().map(|r| r.text.clone()).collect());
+            reqs.iter()
+                .map(|r| QueryResponse {
+                    response: r.text.clone(),
+                    outcome: Outcome::Miss { inserted_id: 1 },
+                    latency: LatencyBreakdown::default(),
+                    judged_positive: None,
+                    matched_cluster: None,
+                    client_tag: r.client_tag.clone(),
+                })
+                .collect()
+        }
+    }
+
+    #[test]
+    fn config_validation_rejects_bad_knobs() {
+        assert!(BatchConfig::default().validate().is_ok());
+        let zero = BatchConfig { max_batch_size: 0, ..Default::default() };
+        assert!(zero.validate().is_err(), "max_batch_size == 0");
+        let huge = BatchConfig { max_batch_size: MAX_BATCH_SIZE_LIMIT + 1, ..Default::default() };
+        assert!(huge.validate().is_err(), "max_batch_size beyond cap");
+        let wait = BatchConfig { max_wait_us: MAX_WAIT_US_LIMIT + 1, ..Default::default() };
+        assert!(wait.validate().is_err(), "max_wait_us out of range");
+        let q = BatchConfig { queue_capacity: 0, ..Default::default() };
+        assert!(q.validate().is_err(), "queue_capacity == 0");
+        assert!(Batcher::start(
+            EchoExec::new(false),
+            Arc::new(Metrics::new()),
+            BatchConfig { max_batch_size: 0, ..Default::default() },
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn submit_roundtrips_and_shutdown_rejects_later_submits() {
+        let exec = EchoExec::new(false);
+        let metrics = Arc::new(Metrics::new());
+        let b = Batcher::start(exec.clone(), metrics.clone(), BatchConfig::default()).unwrap();
+        let resp = b.submit(&QueryRequest::new("hello batcher")).unwrap();
+        assert_eq!(resp.response, "hello batcher");
+        b.shutdown();
+        let err = b.submit(&QueryRequest::new("too late")).unwrap_err();
+        assert_eq!(err, SubmitError::Shutdown);
+        let m = metrics.snapshot();
+        assert_eq!(m.batcher_dispatches, 1);
+        assert_eq!(m.batcher_queries, 1);
+        assert_eq!(m.rejected, 1, "post-shutdown submit recorded as rejected");
+    }
+
+    #[test]
+    fn full_queue_fails_fast_with_backpressure() {
+        // Gate the executor so the dispatcher is pinned serving the
+        // first submission while the queue (capacity 1) fills.
+        let exec = EchoExec::new(true);
+        let metrics = Arc::new(Metrics::new());
+        let cfg =
+            BatchConfig { max_batch_size: 1, max_wait_us: 0, queue_capacity: 1 };
+        let b = Batcher::start(exec.clone(), metrics.clone(), cfg).unwrap();
+
+        std::thread::scope(|scope| {
+            let b1 = b.clone();
+            let t1 = scope.spawn(move || b1.submit(&QueryRequest::new("first")).unwrap());
+            // Wait until the dispatcher is inside execute() on "first"
+            // (so "first" is out of the queue and pinned behind the gate).
+            wait_until("dispatcher entered execute", || {
+                exec.entered.load(Ordering::SeqCst) == 1
+            });
+            let b2 = b.clone();
+            let t2 = scope.spawn(move || b2.submit(&QueryRequest::new("second")).unwrap());
+            // Wait until "second" occupies the one queue slot.
+            wait_until("second submission queued", || b.queue_depth() == 1);
+            // Queue full (capacity 1 holds "second"): fail fast, no block.
+            let err = b.submit(&QueryRequest::new("third")).unwrap_err();
+            assert_eq!(err, SubmitError::QueueFull);
+            exec.open_gate();
+            assert_eq!(t1.join().unwrap().response, "first");
+            assert_eq!(t2.join().unwrap().response, "second");
+        });
+        let m = metrics.snapshot();
+        assert_eq!(m.rejected, 1);
+        assert_eq!(m.batcher_queries, 2, "accepted submissions both dispatched");
+    }
+
+    #[test]
+    fn identical_inflight_requests_coalesce_within_a_dispatch() {
+        // Pin the dispatcher on a warm-up request, queue 4 identical
+        // requests plus one distinct, then release: the next dispatch
+        // must dedup the four into one executed request.
+        let exec = EchoExec::new(true);
+        let metrics = Arc::new(Metrics::new());
+        let cfg = BatchConfig { max_batch_size: 8, max_wait_us: 0, queue_capacity: 16 };
+        let b = Batcher::start(exec.clone(), metrics.clone(), cfg).unwrap();
+        std::thread::scope(|scope| {
+            let warm = b.clone();
+            scope.spawn(move || warm.submit(&QueryRequest::new("warm up")).unwrap());
+            wait_until("dispatcher entered execute", || {
+                exec.entered.load(Ordering::SeqCst) == 1
+            });
+            for i in 0..5 {
+                let b = b.clone();
+                let text = if i < 4 { "dup question" } else { "distinct question" };
+                scope.spawn(move || {
+                    let tag = format!("tag-{i}");
+                    let resp =
+                        b.submit(&QueryRequest::new(text).with_client_tag(tag.clone())).unwrap();
+                    assert_eq!(resp.response, text, "coalesced reply carries rep's answer");
+                    assert_eq!(resp.client_tag.as_deref(), Some(tag.as_str()), "own tag echoed");
+                });
+            }
+            // All 5 must be in the queue before the gate opens, so they
+            // land in one dispatch.
+            wait_until("all 5 submissions queued", || b.queue_depth() == 5);
+            exec.open_gate();
+        });
+        b.shutdown();
+        let calls = exec.calls.lock().unwrap();
+        assert_eq!(calls.len(), 2, "warm-up dispatch + coalesced dispatch");
+        let second: &Vec<String> = &calls[1];
+        assert_eq!(second.len(), 2, "4 dups + 1 distinct dedup to 2 uniques: {second:?}");
+        assert_eq!(metrics.snapshot().coalesced, 3);
+    }
+
+    #[test]
+    fn shutdown_drains_accepted_requests() {
+        let exec = EchoExec::new(true);
+        let b = Batcher::start(exec.clone(), Arc::new(Metrics::new()), BatchConfig::default())
+            .unwrap();
+        std::thread::scope(|scope| {
+            // First submission alone, so the gated dispatch holds
+            // exactly it; the other two then demonstrably queue behind.
+            let b0 = b.clone();
+            scope.spawn(move || {
+                let resp = b0.submit(&QueryRequest::new("drain 0")).unwrap();
+                assert!(resp.response.starts_with("drain"));
+            });
+            wait_until("dispatcher entered execute", || {
+                exec.entered.load(Ordering::SeqCst) >= 1
+            });
+            for i in 1..3 {
+                let b = b.clone();
+                scope.spawn(move || {
+                    let resp = b.submit(&QueryRequest::new(format!("drain {i}"))).unwrap();
+                    assert!(resp.response.starts_with("drain"));
+                });
+            }
+            wait_until("remaining submissions queued", || b.queue_depth() == 2);
+            // Shut down from another thread while requests are queued
+            // behind the gated dispatch; all must still be answered.
+            let closer = b.clone();
+            scope.spawn(move || closer.shutdown());
+            // Pin the intended interleaving: only open the gate once
+            // shutdown has demonstrably closed the queue (tests live in
+            // the batcher module, so the private `tx` is observable).
+            wait_until("shutdown closed the queue", || b.tx.read().unwrap().is_none());
+            exec.open_gate();
+        });
+    }
+}

@@ -23,6 +23,15 @@
 //! unknown paths 404, wrong methods 405, oversized bodies 413. A panic
 //! escaping a handler is caught so the worker pool never shrinks.
 //!
+//! By default (`HttpConfig::batching`) `POST /v1/query` routes through
+//! the cross-request micro-batching engine ([`super::batcher`]):
+//! concurrent in-flight queries from different connections are coalesced
+//! into single `serve_batch` calls, identical in-flight queries are
+//! answered once, and a full submit queue is answered `503 Service
+//! Unavailable` with an `Outcome::Rejected` body (backpressure).
+//! `/v1/query_batch` already carries a batch and keeps calling
+//! `serve_batch` directly.
+//!
 //! Scale limitation (tracked in ROADMAP): this is blocking
 //! thread-per-connection serving — an idle keep-alive connection pins
 //! its worker until `read_timeout`, and accepted connections beyond the
@@ -37,10 +46,11 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::api::{AdminRequest, QueryRequest};
+use crate::api::{AdminRequest, QueryRequest, QueryResponse};
 use crate::error::{anyhow, bail, Context, Result};
 use crate::json::{self, obj, Value};
 
+use super::batcher::Batcher;
 use super::Server;
 
 /// Front-end configuration.
@@ -56,6 +66,13 @@ pub struct HttpConfig {
     /// Per-read socket timeout; an idle keep-alive connection is closed
     /// after this long.
     pub read_timeout: Duration,
+    /// Route `POST /v1/query` through the cross-request micro-batching
+    /// engine ([`super::batcher`], window policy from
+    /// [`super::ServerConfig::batch`]). When the batcher's bounded
+    /// queue is full the request is answered `503` with an
+    /// `Outcome::Rejected` body instead of waiting. `false` serves every
+    /// request as an isolated `serve()` call (the pre-batching path).
+    pub batching: bool,
 }
 
 impl Default for HttpConfig {
@@ -65,6 +82,7 @@ impl Default for HttpConfig {
             workers: 4,
             max_body_bytes: 1 << 20,
             read_timeout: Duration::from_secs(10),
+            batching: true,
         }
     }
 }
@@ -82,11 +100,15 @@ pub fn serve_http(server: Arc<Server>, cfg: HttpConfig) -> Result<HttpHandle> {
     // connections without limit.
     let (tx, rx) = mpsc::sync_channel::<TcpStream>(128);
     let rx = Arc::new(Mutex::new(rx));
+    // The batcher (when enabled) is shared by every connection worker;
+    // it is shut down by the handle after the workers have drained.
+    let batcher = if cfg.batching { Some(server.start_batcher()?) } else { None };
 
     let mut workers = Vec::with_capacity(cfg.workers.max(1));
     for w in 0..cfg.workers.max(1) {
         let rx = rx.clone();
         let server = server.clone();
+        let batcher = batcher.clone();
         let max_body = cfg.max_body_bytes;
         let read_timeout = cfg.read_timeout;
         let stop = stop.clone();
@@ -106,7 +128,7 @@ pub fn serve_http(server: Arc<Server>, cfg: HttpConfig) -> Result<HttpHandle> {
                 // A panicking handler must not shrink the fixed pool:
                 // catch, drop the connection, keep serving.
                 let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    handle_connection(&server, stream, max_body, &stop);
+                    handle_connection(&server, batcher.as_deref(), stream, max_body, &stop);
                 }));
                 if outcome.is_err() {
                     eprintln!("[semcached] connection handler panicked; worker recovered");
@@ -145,7 +167,7 @@ pub fn serve_http(server: Arc<Server>, cfg: HttpConfig) -> Result<HttpHandle> {
         })
         .expect("spawn http accept");
 
-    Ok(HttpHandle { addr, stop, accept: Some(accept), workers })
+    Ok(HttpHandle { addr, stop, accept: Some(accept), workers, batcher })
 }
 
 /// Owns the front-end's threads; shuts them down on `shutdown` or drop.
@@ -154,6 +176,7 @@ pub struct HttpHandle {
     stop: Arc<AtomicBool>,
     accept: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
+    batcher: Option<Arc<Batcher>>,
 }
 
 impl HttpHandle {
@@ -182,6 +205,11 @@ impl HttpHandle {
         }
         for h in self.workers.drain(..) {
             let _ = h.join();
+        }
+        // Only after every connection worker has drained (no more
+        // submitters) is it safe to stop the dispatcher.
+        if let Some(b) = self.batcher.take() {
+            b.shutdown();
         }
     }
 }
@@ -229,6 +257,7 @@ fn status_text(status: u16) -> &'static str {
         431 => "Request Header Fields Too Large",
         500 => "Internal Server Error",
         501 => "Not Implemented",
+        503 => "Service Unavailable",
         _ => "Unknown",
     }
 }
@@ -238,6 +267,7 @@ fn status_text(status: u16) -> &'static str {
 /// shutting down).
 fn handle_connection(
     server: &Arc<Server>,
+    batcher: Option<&Batcher>,
     stream: TcpStream,
     max_body: usize,
     stop: &AtomicBool,
@@ -252,7 +282,7 @@ fn handle_connection(
         match read_request(&mut reader, max_body) {
             Ok(Some(req)) => {
                 let keep_alive = req.keep_alive;
-                let resp = route(server, &req);
+                let resp = route(server, batcher, &req);
                 if write_response(&mut writer, &resp, keep_alive).is_err()
                     || !keep_alive
                     || stop.load(Ordering::SeqCst)
@@ -400,10 +430,10 @@ fn write_response(w: &mut TcpStream, resp: &HttpResponse, keep_alive: bool) -> s
 }
 
 /// Dispatch one parsed request to the typed API.
-fn route(server: &Arc<Server>, req: &HttpRequest) -> HttpResponse {
+fn route(server: &Arc<Server>, batcher: Option<&Batcher>, req: &HttpRequest) -> HttpResponse {
     server.metrics().record_http_request();
     let resp = match (req.method.as_str(), req.path.as_str()) {
-        ("POST", "/v1/query") => post_query(server, &req.body),
+        ("POST", "/v1/query") => post_query(server, batcher, &req.body),
         ("POST", "/v1/query_batch") => post_query_batch(server, &req.body),
         ("POST", "/v1/admin") => post_admin(server, &req.body),
         ("GET", "/v1/metrics") => HttpResponse::json(200, &server.stats_json()),
@@ -425,7 +455,7 @@ fn parse_body(body: &[u8]) -> std::result::Result<Value, HttpResponse> {
     json::parse(text).map_err(|e| HttpResponse::error(400, &format!("invalid JSON: {e}")))
 }
 
-fn post_query(server: &Arc<Server>, body: &[u8]) -> HttpResponse {
+fn post_query(server: &Arc<Server>, batcher: Option<&Batcher>, body: &[u8]) -> HttpResponse {
     let v = match parse_body(body) {
         Ok(v) => v,
         Err(resp) => return resp,
@@ -434,7 +464,19 @@ fn post_query(server: &Arc<Server>, body: &[u8]) -> HttpResponse {
         Ok(r) => r,
         Err(e) => return HttpResponse::error(400, &format!("{e:#}")),
     };
-    HttpResponse::json(200, &server.serve(&req).to_json())
+    match batcher {
+        // The batched hot path: coalesce with whatever else is in
+        // flight. A full queue is backpressure, not an error in the
+        // request — answer 503 with a typed `Rejected` body so clients
+        // can tell "overloaded, retry" from a 4xx.
+        Some(b) => match b.submit(&req) {
+            Ok(resp) => HttpResponse::json(200, &resp.to_json()),
+            Err(e) => {
+                HttpResponse::json(503, &QueryResponse::rejected(&req, e.to_string()).to_json())
+            }
+        },
+        None => HttpResponse::json(200, &server.serve(&req).to_json()),
+    }
 }
 
 fn post_query_batch(server: &Arc<Server>, body: &[u8]) -> HttpResponse {
@@ -537,7 +579,7 @@ mod tests {
 
     #[test]
     fn status_texts_cover_served_codes() {
-        for code in [200, 400, 404, 405, 408, 413, 431, 500, 501] {
+        for code in [200, 400, 404, 405, 408, 413, 431, 500, 501, 503] {
             assert_ne!(status_text(code), "Unknown", "code {code}");
         }
         assert_eq!(status_text(999), "Unknown");

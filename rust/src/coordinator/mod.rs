@@ -19,6 +19,13 @@
 //! surface survives as thin shims over the same core, and the [`http`]
 //! module puts the API on the wire (the `semcached` daemon).
 //!
+//! On the wire path the [`batcher`] module sits between the two:
+//! concurrent in-flight `POST /v1/query` requests from many connections
+//! are coalesced by a [`Batcher`] into single [`Server::serve_batch`]
+//! calls under a (max_batch_size, max_wait_us) window, with identical
+//! in-flight queries deduplicated so repetitive traffic pays for one
+//! embed/lookup/LLM call instead of N.
+//!
 //! Latency accounting mixes *measured* wall-clock for everything the
 //! Rust process does (tokenize, encode, search, insert) with the
 //! *simulated* upstream latency for LLM calls, so Figure 3's
@@ -27,10 +34,12 @@
 //! A housekeeping thread periodically sweeps TTLs and rebuilds
 //! garbage-heavy index partitions (§2.4 "rebalancing", §2.7 TTL).
 
+pub mod batcher;
 pub mod http;
 mod server;
 mod trace;
 
+pub use batcher::{BatchConfig, BatchExecutor, Batcher, SubmitError};
 pub use http::{http_request, serve_http, HttpConfig, HttpHandle};
 pub use server::{Reply, ReplySource, Server, ServerConfig, ServerConfigBuilder};
 pub use trace::{TraceConfig, TraceReport, TraceRunner};

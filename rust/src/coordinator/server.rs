@@ -17,6 +17,9 @@ use crate::api::{
     AdminRequest, AdminResponse, LatencyBreakdown, Outcome, QueryRequest, QueryResponse,
 };
 use crate::cache::{CacheConfig, CachedEntry, SemanticCache};
+use crate::coordinator::batcher::{
+    BatchConfig, Batcher, BatchExecutor, MAX_BATCH_SIZE_LIMIT, MAX_WAIT_US_LIMIT,
+};
 use crate::embedding::Encoder;
 use crate::error::{bail, Result};
 use crate::json::{obj, Value};
@@ -32,6 +35,10 @@ pub struct ServerConfig {
     pub judge: JudgeConfig,
     /// Worker threads used by [`Server::serve_batch`].
     pub workers: usize,
+    /// Cross-request micro-batching window policy, used by the batcher
+    /// spawned via [`Server::start_batcher`] (the HTTP front-end's
+    /// default query path).
+    pub batch: BatchConfig,
 }
 
 impl Default for ServerConfig {
@@ -41,6 +48,7 @@ impl Default for ServerConfig {
             llm: SimLlmConfig::default(),
             judge: JudgeConfig::default(),
             workers: 4,
+            batch: BatchConfig::default(),
         }
     }
 }
@@ -59,6 +67,7 @@ impl ServerConfig {
         if self.workers == 0 {
             bail!("server workers must be >= 1");
         }
+        self.batch.validate()?;
         Ok(())
     }
 
@@ -70,6 +79,17 @@ impl ServerConfig {
             .llm(SimLlmConfig::from_app_config(cfg))
             .judge(JudgeConfig::default())
             .workers(cfg.workers)
+            // The app-level `max_batch`/`batch_window_us` keys predate
+            // the request batcher (they also tune the embedding
+            // micro-batcher), so out-of-range values are clamped here
+            // rather than rejected — a config that started a pre-batcher
+            // daemon must keep starting one. The dedicated
+            // `semcached serve --batch-*` flags validate strictly.
+            .batch(BatchConfig {
+                max_batch_size: cfg.max_batch.clamp(1, MAX_BATCH_SIZE_LIMIT),
+                max_wait_us: cfg.batch_window_us.min(MAX_WAIT_US_LIMIT),
+                ..BatchConfig::default()
+            })
             .build()
     }
 }
@@ -98,6 +118,11 @@ impl ServerConfigBuilder {
 
     pub fn workers(mut self, workers: usize) -> Self {
         self.cfg.workers = workers;
+        self
+    }
+
+    pub fn batch(mut self, batch: BatchConfig) -> Self {
+        self.cfg.batch = batch;
         self
     }
 
@@ -175,6 +200,8 @@ pub struct Server {
     metrics: Arc<Metrics>,
     /// Worker-pool width for the batch pipeline.
     workers: usize,
+    /// Window policy handed to batchers spawned off this server.
+    batch_cfg: BatchConfig,
     /// Ground-truth answers by cluster (populated from the workload) so
     /// simulated LLM calls return the *right* answer for their cluster.
     ground_truth: RwLock<HashMap<u64, String>>,
@@ -194,6 +221,7 @@ impl Server {
             judge: Judge::new(cfg.judge),
             metrics: Arc::new(Metrics::new()),
             workers: cfg.workers.max(1),
+            batch_cfg: cfg.batch,
             ground_truth: RwLock::new(HashMap::new()),
             threshold_override: AtomicU64::new(0),
             housekeeping_stop: Arc::new(AtomicBool::new(false)),
@@ -214,6 +242,21 @@ impl Server {
 
     pub fn llm(&self) -> &SimLlm {
         &self.llm
+    }
+
+    /// The micro-batching window policy this server was built with.
+    pub fn batch_config(&self) -> &BatchConfig {
+        &self.batch_cfg
+    }
+
+    /// Spawn a cross-request micro-batching engine over this server
+    /// (see [`crate::coordinator::batcher`]): concurrent callers
+    /// `submit` single requests, the batcher coalesces them into
+    /// [`Server::serve_batch`] calls under the configured
+    /// (max_batch_size, max_wait_us) window. This is the HTTP
+    /// front-end's default query path.
+    pub fn start_batcher(self: &Arc<Self>) -> Result<Arc<Batcher>> {
+        Batcher::start(self.clone(), self.metrics(), self.batch_cfg.clone())
     }
 
     /// Override the similarity threshold for every subsequent request;
@@ -604,6 +647,72 @@ impl Server {
     }
 }
 
+impl BatchExecutor for Server {
+    fn execute(&self, reqs: &[QueryRequest]) -> Vec<QueryResponse> {
+        self.serve_batch(reqs)
+    }
+
+    /// Answer an identical in-flight twin from its representative's
+    /// result, mirroring what a sequential `serve()` of the duplicate
+    /// right after the representative would have produced:
+    ///
+    /// * rep hit  → dup hits the same entry with the same score (equal
+    ///   text ⇒ equal embedding ⇒ equal cosine);
+    /// * rep miss → dup hits the entry the representative just inserted
+    ///   (equal text ⇒ cosine 1.0 against it);
+    /// * rep rejected → dup rejected for the same reason.
+    ///
+    /// Metrics mirror the sequential path (request + hit + judgement);
+    /// embedding tokens and LLM calls are *not* recorded — the whole
+    /// point of coalescing is that the duplicate never pays them.
+    fn coalesce(
+        &self,
+        dup: &QueryRequest,
+        rep: &QueryRequest,
+        rep_resp: &QueryResponse,
+    ) -> QueryResponse {
+        self.metrics.record_request();
+        let (outcome, entry_cluster) = match &rep_resp.outcome {
+            Outcome::Hit { score, entry_id } => {
+                (Outcome::Hit { score: *score, entry_id: *entry_id }, rep_resp.matched_cluster)
+            }
+            Outcome::Miss { inserted_id } => (
+                Outcome::Hit { score: 1.0, entry_id: *inserted_id },
+                Some(rep.cluster.unwrap_or(0)),
+            ),
+            Outcome::Rejected { reason } => (Outcome::Rejected { reason: reason.clone() }, None),
+        };
+        if matches!(outcome, Outcome::Rejected { .. }) {
+            self.metrics.record_rejected();
+            return QueryResponse {
+                response: rep_resp.response.clone(),
+                outcome,
+                latency: LatencyBreakdown::default(),
+                judged_positive: None,
+                matched_cluster: None,
+                client_tag: dup.client_tag.clone(),
+            };
+        }
+        self.metrics.record_hit();
+        let judged = dup.cluster.map(|c| {
+            let ok = self.judge.validate(c, entry_cluster.unwrap_or(0));
+            self.metrics.record_judgement(ok);
+            ok
+        });
+        // Truthful accounting: the duplicate's marginal serving cost is
+        // ~zero (no embed, no lookup, no LLM).
+        self.metrics.observe_total_ms(0.0);
+        QueryResponse {
+            response: rep_resp.response.clone(),
+            outcome,
+            latency: LatencyBreakdown::default(),
+            judged_positive: judged,
+            matched_cluster: entry_cluster,
+            client_tag: dup.client_tag.clone(),
+        }
+    }
+}
+
 /// Stops the housekeeping thread on drop.
 pub struct HousekeepingGuard {
     stop: Arc<AtomicBool>,
@@ -780,6 +889,76 @@ mod tests {
             ServerConfig::builder().llm(bad_llm).build().is_err(),
             "nested llm config validated"
         );
+        let bad_batch = BatchConfig { max_batch_size: 0, ..Default::default() };
+        assert!(
+            ServerConfig::builder().batch(bad_batch).build().is_err(),
+            "batch max_batch_size == 0 rejected"
+        );
+        let bad_wait = BatchConfig { max_wait_us: u64::MAX, ..Default::default() };
+        assert!(
+            ServerConfig::builder().batch(bad_wait).build().is_err(),
+            "batch max_wait_us out of range rejected"
+        );
+    }
+
+    #[test]
+    fn from_app_config_clamps_legacy_batch_keys() {
+        // `max_batch`/`batch_window_us` predate the request batcher and
+        // were unbounded; a config that started a pre-batcher daemon
+        // must keep starting one (values clamp, not error).
+        let mut cfg = crate::config::Config::default();
+        cfg.max_batch = 100_000;
+        cfg.batch_window_us = 10_000_000;
+        let sc = ServerConfig::from_app_config(&cfg).unwrap();
+        assert_eq!(sc.batch.max_batch_size, MAX_BATCH_SIZE_LIMIT);
+        assert_eq!(sc.batch.max_wait_us, MAX_WAIT_US_LIMIT);
+    }
+
+    #[test]
+    fn batcher_over_server_misses_then_hits() {
+        let s = server();
+        let b = s.start_batcher().unwrap();
+        let r1 = b.submit(&QueryRequest::new("how do i reset my password")).unwrap();
+        assert!(matches!(r1.outcome, Outcome::Miss { .. }), "{:?}", r1.outcome);
+        let r2 = b.submit(&QueryRequest::new("how can i reset my password")).unwrap();
+        assert!(r2.is_hit(), "{:?}", r2.outcome);
+        assert_eq!(r2.response, r1.response);
+        b.shutdown();
+        let m = s.metrics().snapshot();
+        assert_eq!(m.requests, 2);
+        assert_eq!(m.cache_hits, 1);
+        assert_eq!(m.batcher_dispatches, 2, "sequential submits dispatch one by one");
+    }
+
+    #[test]
+    fn coalesced_duplicate_resolves_as_hit_on_reps_entry() {
+        let s = server();
+        let rep = QueryRequest::new("novel coalesce probe").with_cluster(7);
+        let rep_resp = s.serve(&rep);
+        let inserted = match rep_resp.outcome {
+            Outcome::Miss { inserted_id } => inserted_id,
+            ref o => panic!("expected miss, got {o:?}"),
+        };
+        let dup = QueryRequest::new("novel coalesce probe")
+            .with_cluster(7)
+            .with_client_tag("dup-tag");
+        let dup_resp = BatchExecutor::coalesce(s.as_ref(), &dup, &rep, &rep_resp);
+        match dup_resp.outcome {
+            Outcome::Hit { score, entry_id } => {
+                assert_eq!(entry_id, inserted);
+                assert!((score - 1.0).abs() < 1e-6);
+            }
+            ref o => panic!("expected hit, got {o:?}"),
+        }
+        assert_eq!(dup_resp.response, rep_resp.response);
+        assert_eq!(dup_resp.judged_positive, Some(true));
+        assert_eq!(dup_resp.matched_cluster, Some(7));
+        assert_eq!(dup_resp.client_tag.as_deref(), Some("dup-tag"));
+        let m = s.metrics().snapshot();
+        assert_eq!(m.requests, 2);
+        assert_eq!(m.cache_hits, 1);
+        assert_eq!(m.cache_misses, 1);
+        assert_eq!(m.llm_calls, 1, "the duplicate never reached the LLM");
     }
 
     #[test]

@@ -13,10 +13,13 @@
 //! * **Layer 3 (Rust, runtime)** — this crate: the semantic cache itself
 //!   (vector store, HNSW ANN index, TTL key-value store), the typed v1
 //!   serving API ([`api::QueryRequest`] → [`api::QueryResponse`]), the
-//!   serving coordinator (single-query [`coordinator::Server::serve`]
-//!   and the concurrent batch pipeline
-//!   [`coordinator::Server::serve_batch`]), the zero-dependency HTTP
-//!   front-end ([`coordinator::http`], the `semcached` binary), the
+//!   serving coordinator (single-query [`coordinator::Server::serve`],
+//!   the concurrent batch pipeline
+//!   [`coordinator::Server::serve_batch`], and the cross-request
+//!   micro-batching engine [`coordinator::batcher`] that coalesces
+//!   concurrent in-flight queries on the wire path), the
+//!   zero-dependency HTTP front-end ([`coordinator::http`], the
+//!   `semcached` binary), the
 //!   simulated LLM upstream, the synthetic workload generator, and the
 //!   experiment harness that regenerates every table and figure of the
 //!   paper.

@@ -57,6 +57,14 @@ pub struct Metrics {
     // Batch serving pipeline counters.
     pub batches: AtomicU64,
     pub batch_queries: AtomicU64,
+    // Cross-request micro-batching engine (coordinator::batcher).
+    /// Dispatches (one `serve_batch` call per dispatched micro-batch).
+    pub batcher_dispatches: AtomicU64,
+    /// Requests that went through the batcher's dispatch path.
+    pub batcher_queries: AtomicU64,
+    /// Requests answered from an identical in-flight twin in the same
+    /// dispatch window (no embed, no lookup, no LLM call of their own).
+    pub coalesced: AtomicU64,
     // Latency histograms (ms), mutex-guarded (record is a few ns anyway).
     lat_total: Mutex<Histogram>,
     lat_embed: Mutex<Histogram>,
@@ -67,6 +75,13 @@ pub struct Metrics {
     lat_batch_embed: Mutex<Histogram>,
     lat_batch_merge: Mutex<Histogram>,
     lat_batch_total: Mutex<Histogram>,
+    // Batcher histograms: time a request sat queued before its dispatch
+    // started, wall time of one dispatch (serve + reply fan-out), and the
+    // dispatched micro-batch size (a count, recorded through the same
+    // histogram type — only `summary()` statistics are read from it).
+    lat_queue_wait: Mutex<Histogram>,
+    lat_dispatch: Mutex<Histogram>,
+    batcher_batch_size: Mutex<Histogram>,
 }
 
 /// Immutable snapshot used by reports and experiments.
@@ -86,6 +101,9 @@ pub struct MetricsSnapshot {
     pub embedding_tokens: u64,
     pub batches: u64,
     pub batch_queries: u64,
+    pub batcher_dispatches: u64,
+    pub batcher_queries: u64,
+    pub coalesced: u64,
     pub lat_total: Summary,
     pub lat_embed: Summary,
     pub lat_index: Summary,
@@ -93,6 +111,11 @@ pub struct MetricsSnapshot {
     pub lat_batch_embed: Summary,
     pub lat_batch_merge: Summary,
     pub lat_batch_total: Summary,
+    pub lat_queue_wait: Summary,
+    pub lat_dispatch: Summary,
+    /// Statistics over dispatched micro-batch sizes (mean/percentiles of
+    /// a count, not a latency).
+    pub batcher_batch_size: Summary,
 }
 
 impl Metrics {
@@ -148,6 +171,18 @@ impl Metrics {
         self.batch_queries.fetch_add(queries, Ordering::Relaxed);
     }
 
+    /// One batcher dispatch coalescing `queries` in-flight requests.
+    pub fn record_batcher_dispatch(&self, queries: u64) {
+        self.batcher_dispatches.fetch_add(1, Ordering::Relaxed);
+        self.batcher_queries.fetch_add(queries, Ordering::Relaxed);
+        self.batcher_batch_size.lock().unwrap().observe(queries as f64);
+    }
+
+    /// One request answered from an identical in-flight twin.
+    pub fn record_coalesced(&self) {
+        self.coalesced.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn observe_total_ms(&self, ms: f64) {
         self.lat_total.lock().unwrap().observe(ms);
     }
@@ -169,6 +204,12 @@ impl Metrics {
     pub fn observe_batch_total_ms(&self, ms: f64) {
         self.lat_batch_total.lock().unwrap().observe(ms);
     }
+    pub fn observe_queue_wait_ms(&self, ms: f64) {
+        self.lat_queue_wait.lock().unwrap().observe(ms);
+    }
+    pub fn observe_dispatch_ms(&self, ms: f64) {
+        self.lat_dispatch.lock().unwrap().observe(ms);
+    }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
@@ -186,6 +227,9 @@ impl Metrics {
             embedding_tokens: self.embedding_tokens.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             batch_queries: self.batch_queries.load(Ordering::Relaxed),
+            batcher_dispatches: self.batcher_dispatches.load(Ordering::Relaxed),
+            batcher_queries: self.batcher_queries.load(Ordering::Relaxed),
+            coalesced: self.coalesced.load(Ordering::Relaxed),
             lat_total: self.lat_total.lock().unwrap().summary(),
             lat_embed: self.lat_embed.lock().unwrap().summary(),
             lat_index: self.lat_index.lock().unwrap().summary(),
@@ -193,6 +237,9 @@ impl Metrics {
             lat_batch_embed: self.lat_batch_embed.lock().unwrap().summary(),
             lat_batch_merge: self.lat_batch_merge.lock().unwrap().summary(),
             lat_batch_total: self.lat_batch_total.lock().unwrap().summary(),
+            lat_queue_wait: self.lat_queue_wait.lock().unwrap().summary(),
+            lat_dispatch: self.lat_dispatch.lock().unwrap().summary(),
+            batcher_batch_size: self.batcher_batch_size.lock().unwrap().summary(),
         }
     }
 }
@@ -260,6 +307,14 @@ impl MetricsSnapshot {
             ("lat_batch_embed_mean_ms", self.lat_batch_embed.mean.into()),
             ("lat_batch_merge_mean_ms", self.lat_batch_merge.mean.into()),
             ("lat_batch_total_mean_ms", self.lat_batch_total.mean.into()),
+            ("batcher_dispatches", self.batcher_dispatches.into()),
+            ("batcher_queries", self.batcher_queries.into()),
+            ("coalesced", self.coalesced.into()),
+            ("batcher_batch_mean", self.batcher_batch_size.mean.into()),
+            ("batcher_batch_p95", self.batcher_batch_size.p95.into()),
+            ("lat_queue_wait_mean_ms", self.lat_queue_wait.mean.into()),
+            ("lat_queue_wait_p95_ms", self.lat_queue_wait.p95.into()),
+            ("lat_dispatch_mean_ms", self.lat_dispatch.mean.into()),
         ])
     }
 }
@@ -323,6 +378,28 @@ mod tests {
         let j = s.to_json();
         assert_eq!(j.get("batches").as_usize(), Some(2));
         assert_eq!(j.get("batch_queries").as_usize(), Some(48));
+    }
+
+    #[test]
+    fn batcher_counters_and_histograms() {
+        let m = Metrics::new();
+        m.record_batcher_dispatch(8);
+        m.record_batcher_dispatch(2);
+        m.record_coalesced();
+        m.record_coalesced();
+        m.observe_queue_wait_ms(0.5);
+        m.observe_dispatch_ms(3.0);
+        let s = m.snapshot();
+        assert_eq!(s.batcher_dispatches, 2);
+        assert_eq!(s.batcher_queries, 10);
+        assert_eq!(s.coalesced, 2);
+        assert!((s.batcher_batch_size.mean - 5.0).abs() < 1e-9);
+        assert_eq!(s.lat_queue_wait.n, 1);
+        assert_eq!(s.lat_dispatch.n, 1);
+        let j = s.to_json();
+        assert_eq!(j.get("batcher_dispatches").as_usize(), Some(2));
+        assert_eq!(j.get("coalesced").as_usize(), Some(2));
+        assert!(j.get("batcher_batch_mean").as_f64().unwrap() > 0.0);
     }
 
     #[test]

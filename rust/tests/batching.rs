@@ -1,0 +1,660 @@
+//! Adversarial serving tests for the cross-request micro-batching
+//! engine (`coordinator::batcher`):
+//!
+//! * seeded trace-replay parity — the same trace served through the
+//!   batched HTTP front-end by many concurrent connections must produce
+//!   the same per-query hit/miss outcomes and the same serving counters
+//!   as a sequential `serve()` loop on one thread;
+//! * a 16-thread stress run hammering `POST /v1/query` against periodic
+//!   `/v1/admin` flushes (exactly one response per request, and
+//!   `cache_hits + cache_misses + rejected == requests` holds);
+//! * property tests for the (max_batch_size, max_wait_us) window policy
+//!   over random arrival patterns (exactly-once answering, batch-size
+//!   bound, per-request override preservation through coalescing);
+//! * per-entry TTL expiry under batching;
+//! * the in-flight duplicate caveat fix (concurrent identical novel
+//!   queries cost exactly one LLM call);
+//! * deterministic 503 backpressure through the HTTP front-end.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use semcache::api::{LatencyBreakdown, Outcome, QueryRequest, QueryResponse};
+use semcache::coordinator::{
+    http_request, serve_http, BatchConfig, BatchExecutor, Batcher, HttpConfig, Server,
+    ServerConfig,
+};
+use semcache::embedding::NativeEncoder;
+use semcache::llm::SimLlmConfig;
+use semcache::metrics::Metrics;
+use semcache::runtime::ModelParams;
+use semcache::testutil::{prop_check, Gen, PropConfig};
+use semcache::util::SplitMix64;
+use semcache::workload::{Category, Dataset, QaPair};
+
+fn small_encoder() -> Arc<NativeEncoder> {
+    let mut p = ModelParams::default();
+    p.layers = 1;
+    p.vocab_size = 1024;
+    p.dim = 96;
+    p.hidden = 192;
+    p.heads = 4;
+    Arc::new(NativeEncoder::new(p))
+}
+
+fn server_with_batch(batch: BatchConfig) -> Arc<Server> {
+    let cfg = ServerConfig::builder().batch(batch).build().expect("test server config");
+    Arc::new(Server::new(small_encoder(), cfg))
+}
+
+fn qa(cluster: u64, question: &str, answer: &str) -> QaPair {
+    QaPair {
+        cluster,
+        answer_group: cluster,
+        category: Category::PythonBasics,
+        question: question.to_string(),
+        answer: answer.to_string(),
+    }
+}
+
+// ---------- trace-replay parity ----------
+
+/// The seeded trace: paraphrases of populated entries (always hits) and
+/// pairwise-distinct novel queries, each appearing exactly twice (one
+/// miss + one hit per text, in *any* serving order — which is what makes
+/// the comparison insensitive to thread interleaving while still
+/// pinning every outcome).
+fn parity_trace() -> (Vec<QaPair>, Vec<QaPair>, Vec<(String, u64)>) {
+    let cached: Vec<QaPair> = (0..16)
+        .map(|i| {
+            qa(
+                i,
+                &format!("how do i configure gadget model {i} firmware"),
+                &format!("cached answer {i}"),
+            )
+        })
+        .collect();
+    let novel: Vec<QaPair> = (0..10)
+        .map(|j| {
+            qa(
+                1000 + j,
+                &format!("unique{j} zebra{j} quasar{j} lantern{j}"),
+                &format!("novel answer {j}"),
+            )
+        })
+        .collect();
+    let mut trace: Vec<(String, u64)> = Vec::new();
+    for _ in 0..2 {
+        for i in 0..16u64 {
+            trace.push((format!("how can i configure gadget model {i} firmware"), i));
+        }
+        for (j, p) in novel.iter().enumerate() {
+            trace.push((p.question.clone(), 1000 + j as u64));
+        }
+    }
+    // Deterministic seeded shuffle (Fisher-Yates).
+    let mut rng = SplitMix64::new(0x7AC3_5EED);
+    for i in (1..trace.len()).rev() {
+        let j = (rng.next_u64() % (i as u64 + 1)) as usize;
+        trace.swap(i, j);
+    }
+    (cached, novel, trace)
+}
+
+fn parity_server(cached: &[QaPair], novel: &[QaPair]) -> Arc<Server> {
+    let s = server_with_batch(BatchConfig {
+        max_batch_size: 8,
+        max_wait_us: 2_000,
+        queue_capacity: 256,
+    });
+    s.populate(cached);
+    let all = Dataset { base: cached.iter().chain(novel).cloned().collect(), tests: Vec::new() };
+    s.register_ground_truth(&all);
+    s
+}
+
+/// text -> sorted multiset of (outcome kind, response text).
+type OutcomeMap = BTreeMap<String, Vec<(String, String)>>;
+
+fn sort_outcomes(mut m: OutcomeMap) -> OutcomeMap {
+    for v in m.values_mut() {
+        v.sort();
+    }
+    m
+}
+
+#[test]
+fn trace_replay_parity_batched_http_vs_sequential() {
+    let (cached, novel, trace) = parity_trace();
+
+    // Arm 1: sequential serve() on one thread.
+    let seq = parity_server(&cached, &novel);
+    let mut seq_outcomes: OutcomeMap = BTreeMap::new();
+    for (text, cluster) in &trace {
+        let resp = seq.serve(&QueryRequest::new(text.as_str()).with_cluster(*cluster));
+        let kind = match resp.outcome {
+            Outcome::Hit { .. } => "hit",
+            Outcome::Miss { .. } => "miss",
+            Outcome::Rejected { .. } => "rejected",
+        };
+        seq_outcomes
+            .entry(text.clone())
+            .or_default()
+            .push((kind.to_string(), resp.response.clone()));
+    }
+
+    // Arm 2: the same trace through the batched HTTP front-end, split
+    // round-robin over 8 concurrent client threads.
+    let batched = parity_server(&cached, &novel);
+    let handle = serve_http(
+        batched.clone(),
+        HttpConfig { workers: 8, batching: true, ..HttpConfig::default() },
+    )
+    .expect("bind ephemeral port");
+    let addr = handle.local_addr().to_string();
+    let collected: Mutex<OutcomeMap> = Mutex::new(BTreeMap::new());
+    std::thread::scope(|scope| {
+        for t in 0..8usize {
+            let addr = addr.clone();
+            let trace = &trace;
+            let collected = &collected;
+            scope.spawn(move || {
+                for (i, (text, cluster)) in trace.iter().enumerate() {
+                    if i % 8 != t {
+                        continue;
+                    }
+                    let body = QueryRequest::new(text.as_str())
+                        .with_cluster(*cluster)
+                        .to_json()
+                        .to_string();
+                    let (status, v) =
+                        http_request(&addr, "POST", "/v1/query", Some(&body)).expect("query");
+                    assert_eq!(status, 200, "parity trace must not be rejected: {v}");
+                    let kind = v
+                        .get("outcome")
+                        .get("type")
+                        .as_str()
+                        .expect("outcome type")
+                        .to_string();
+                    let resp = v.get("response").as_str().expect("response text").to_string();
+                    collected
+                        .lock()
+                        .unwrap()
+                        .entry(text.clone())
+                        .or_default()
+                        .push((kind, resp));
+                }
+            });
+        }
+    });
+    handle.shutdown();
+
+    let seq_outcomes = sort_outcomes(seq_outcomes);
+    let bat_outcomes = sort_outcomes(collected.into_inner().unwrap());
+    assert_eq!(
+        seq_outcomes, bat_outcomes,
+        "batched HTTP serving must be outcome-identical to sequential serving"
+    );
+
+    // Final serving counters agree exactly.
+    let sm = seq.metrics().snapshot();
+    let bm = batched.metrics().snapshot();
+    assert_eq!(sm.requests, trace.len() as u64);
+    assert_eq!(bm.requests, sm.requests, "requests");
+    assert_eq!(bm.cache_hits, sm.cache_hits, "cache_hits");
+    assert_eq!(bm.cache_misses, sm.cache_misses, "cache_misses");
+    assert_eq!(bm.llm_calls, sm.llm_calls, "llm_calls");
+    assert_eq!(bm.rejected, sm.rejected, "rejected");
+    assert_eq!(bm.positive_hits, sm.positive_hits, "positive_hits");
+    assert_eq!(bm.negative_hits, sm.negative_hits, "negative_hits");
+    // Coalescing can only save embedding work, never add it.
+    assert!(
+        bm.embedding_tokens <= sm.embedding_tokens,
+        "batched path embedded more tokens ({}) than sequential ({})",
+        bm.embedding_tokens,
+        sm.embedding_tokens
+    );
+    assert!(bm.batcher_dispatches >= 1, "the trace must have gone through the batcher");
+    assert_eq!(bm.batcher_queries, bm.requests, "every request went through the batcher");
+}
+
+// ---------- concurrency stress ----------
+
+#[test]
+fn stress_16_threads_with_admin_flushes() {
+    const THREADS: usize = 16;
+    const PER_THREAD: usize = 25;
+    let server = server_with_batch(BatchConfig {
+        max_batch_size: 16,
+        max_wait_us: 500,
+        queue_capacity: 64,
+    });
+    let handle = serve_http(
+        server.clone(),
+        HttpConfig { workers: 8, batching: true, ..HttpConfig::default() },
+    )
+    .expect("bind ephemeral port");
+    let addr = handle.local_addr().to_string();
+
+    let served = Mutex::new((0usize, 0usize)); // (ok_200, backpressure_503)
+    std::thread::scope(|scope| {
+        for t in 0..THREADS {
+            let addr = addr.clone();
+            let served = &served;
+            scope.spawn(move || {
+                for i in 0..PER_THREAD {
+                    // A small hot set (heavy duplication across threads)
+                    // plus an occasional per-thread unique query.
+                    let text = if i % 5 == 4 {
+                        format!("stress unique thread {t} item {i}")
+                    } else {
+                        format!("stress hot question number {}", (t + i) % 7)
+                    };
+                    let body = QueryRequest::new(text).to_json().to_string();
+                    let (status, v) =
+                        http_request(&addr, "POST", "/v1/query", Some(&body)).expect("query");
+                    let kind = v.get("outcome").get("type").as_str().expect("typed outcome");
+                    match status {
+                        200 => {
+                            assert!(kind == "hit" || kind == "miss", "200 carries hit|miss: {v}");
+                            served.lock().unwrap().0 += 1;
+                        }
+                        503 => {
+                            assert_eq!(kind, "rejected", "503 carries a rejected outcome: {v}");
+                            served.lock().unwrap().1 += 1;
+                        }
+                        other => panic!("unexpected status {other}: {v}"),
+                    }
+                }
+            });
+        }
+        // Periodic admin flushes racing the query traffic.
+        let addr2 = addr.clone();
+        scope.spawn(move || {
+            for _ in 0..12 {
+                let (status, _) =
+                    http_request(&addr2, "POST", "/v1/admin", Some(r#"{"action": "flush"}"#))
+                        .expect("flush");
+                assert_eq!(status, 200);
+                std::thread::sleep(Duration::from_millis(3));
+            }
+        });
+    });
+
+    let (ok, rejected_503) = *served.lock().unwrap();
+    assert_eq!(ok + rejected_503, THREADS * PER_THREAD, "exactly one response per request");
+
+    // The server is alive and the counters are consistent.
+    let (status, v) = http_request(&addr, "GET", "/v1/health", None).unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(v.get("status").as_str(), Some("ok"));
+    let m = server.metrics().snapshot();
+    assert_eq!(m.requests, (THREADS * PER_THREAD) as u64);
+    assert_eq!(
+        m.cache_hits + m.cache_misses + m.rejected,
+        m.requests,
+        "hits {} + misses {} + rejected {} != requests {}",
+        m.cache_hits,
+        m.cache_misses,
+        m.rejected,
+        m.requests
+    );
+    assert_eq!(m.rejected as usize, rejected_503, "rejects are exactly the 503s");
+    handle.shutdown();
+}
+
+// ---------- window-policy property tests ----------
+
+/// The dedup identity of a request, printable (used both as the mock
+/// executor's echoed payload and as the counting key).
+fn identity(r: &QueryRequest) -> String {
+    format!(
+        "{}|{:?}|{:?}|{:?}|{:?}",
+        r.text,
+        r.options.threshold.map(f32::to_bits),
+        r.options.ttl_ms,
+        r.options.top_k,
+        r.cluster
+    )
+}
+
+/// Mock executor: echoes each request's identity (so submitters can
+/// verify their overrides survived coalescing) and records every
+/// executed batch for post-hoc invariant checks.
+struct RecordingExec {
+    max_allowed: usize,
+    batches: Mutex<Vec<Vec<String>>>,
+    violations: Mutex<Vec<String>>,
+}
+
+impl RecordingExec {
+    fn new(max_allowed: usize) -> Arc<Self> {
+        Arc::new(Self {
+            max_allowed,
+            batches: Mutex::new(Vec::new()),
+            violations: Mutex::new(Vec::new()),
+        })
+    }
+}
+
+impl BatchExecutor for RecordingExec {
+    fn execute(&self, reqs: &[QueryRequest]) -> Vec<QueryResponse> {
+        if reqs.is_empty() {
+            self.violations.lock().unwrap().push("empty batch dispatched".into());
+        }
+        if reqs.len() > self.max_allowed {
+            self.violations
+                .lock()
+                .unwrap()
+                .push(format!("batch of {} exceeds max_batch_size {}", reqs.len(), self.max_allowed));
+        }
+        self.batches.lock().unwrap().push(reqs.iter().map(identity).collect());
+        reqs.iter()
+            .map(|r| QueryResponse {
+                response: identity(r),
+                outcome: Outcome::Miss { inserted_id: 1 },
+                latency: LatencyBreakdown::default(),
+                judged_positive: None,
+                matched_cluster: None,
+                client_tag: r.client_tag.clone(),
+            })
+            .collect()
+    }
+}
+
+fn gen_case_requests(g: &mut Gen, threads: usize, per_thread: usize) -> Vec<Vec<QueryRequest>> {
+    (0..threads)
+        .map(|t| {
+            (0..per_thread)
+                .map(|i| {
+                    // ~25% duplicates drawn from a tiny shared pool with
+                    // fixed (absent) options, so they share an identity
+                    // across threads; the rest are unique with random
+                    // per-request overrides.
+                    let dup = g.bool() && g.bool();
+                    let mut req = if dup {
+                        QueryRequest::new(format!("dup-{}", g.usize_below(2)))
+                    } else {
+                        let mut r = QueryRequest::new(format!("q-{t}-{i}"));
+                        if g.bool() {
+                            r = r.with_threshold(g.f32_in(-1.0, 1.0));
+                        }
+                        if g.bool() {
+                            r = r.with_ttl_ms(g.u64() % 100_000);
+                        }
+                        if g.bool() {
+                            r = r.with_top_k(g.usize_in(1, 16));
+                        }
+                        if g.bool() {
+                            r = r.with_cluster(g.u64() % 4);
+                        }
+                        r
+                    };
+                    req = req.with_client_tag(format!("tag-{t}-{i}"));
+                    req
+                })
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn prop_window_policy_exactly_once_bounded_and_override_preserving() {
+    // Each case spins up a real batcher + submitter threads, so keep
+    // the shrink budget small (a failing case is already tiny).
+    prop_check(
+        PropConfig { cases: 24, max_shrink_rounds: 60, ..Default::default() },
+        "batcher-window-policy",
+        |g| {
+            let max_batch = g.usize_in(1, 6);
+            let wait_us = *g.choose(&[0u64, 0, 200, 1_000, 3_000]);
+            let threads = g.usize_in(1, 4);
+            let per_thread = g.usize_in(1, 6);
+            let requests = gen_case_requests(g, threads, per_thread);
+            let submitted: Vec<QueryRequest> =
+                requests.iter().flatten().cloned().collect();
+
+            let exec = RecordingExec::new(max_batch);
+            let metrics = Arc::new(Metrics::new());
+            let batcher = Batcher::start(
+                exec.clone(),
+                metrics.clone(),
+                BatchConfig {
+                    max_batch_size: max_batch,
+                    max_wait_us: wait_us,
+                    queue_capacity: 64,
+                },
+            )
+            .map_err(|e| format!("start: {e:#}"))?;
+
+            let results: Vec<(QueryRequest, Result<QueryResponse, _>)> =
+                std::thread::scope(|scope| {
+                    let handles: Vec<_> = requests
+                        .into_iter()
+                        .map(|reqs| {
+                            let b = batcher.clone();
+                            scope.spawn(move || {
+                                reqs.into_iter()
+                                    .map(|r| {
+                                        let resp = b.submit(&r);
+                                        (r, resp)
+                                    })
+                                    .collect::<Vec<_>>()
+                            })
+                        })
+                        .collect();
+                    handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+                });
+            batcher.shutdown();
+
+            // Every submission answered exactly once, with its own
+            // identity echoed back (overrides preserved through
+            // coalescing) under its own client_tag.
+            if results.len() != submitted.len() {
+                return Err(format!(
+                    "{} submissions, {} results",
+                    submitted.len(),
+                    results.len()
+                ));
+            }
+            for (req, resp) in &results {
+                let resp = resp
+                    .as_ref()
+                    .map_err(|e| format!("submit of {:?} failed: {e}", req.text))?;
+                if resp.response != identity(req) {
+                    return Err(format!(
+                        "override lost in coalescing: {:?} answered with {:?}",
+                        identity(req),
+                        resp.response
+                    ));
+                }
+                if resp.client_tag != req.client_tag {
+                    return Err(format!(
+                        "client_tag not preserved: {:?} vs {:?}",
+                        req.client_tag, resp.client_tag
+                    ));
+                }
+            }
+
+            let violations = exec.violations.lock().unwrap().clone();
+            if !violations.is_empty() {
+                return Err(violations.join("; "));
+            }
+
+            // Per identity: executed at least once (someone did the
+            // work) and at most as often as it was submitted
+            // (exactly-once for unique identities).
+            let mut submitted_count: BTreeMap<String, usize> = BTreeMap::new();
+            for r in &submitted {
+                *submitted_count.entry(identity(r)).or_default() += 1;
+            }
+            let mut executed_count: BTreeMap<String, usize> = BTreeMap::new();
+            for batch in exec.batches.lock().unwrap().iter() {
+                for id in batch {
+                    *executed_count.entry(id.clone()).or_default() += 1;
+                }
+            }
+            for (id, &n) in &submitted_count {
+                let e = executed_count.get(id).copied().unwrap_or(0);
+                if e == 0 {
+                    return Err(format!("identity {id:?} submitted {n}x, never executed"));
+                }
+                if e > n {
+                    return Err(format!("identity {id:?} submitted {n}x, executed {e}x"));
+                }
+            }
+            if executed_count.keys().any(|id| !submitted_count.contains_key(id)) {
+                return Err("executor saw an identity nobody submitted".into());
+            }
+
+            let m = metrics.snapshot();
+            let executed_total: usize = executed_count.values().sum();
+            if m.batcher_queries as usize != submitted.len() {
+                return Err(format!(
+                    "batcher_queries {} != submissions {}",
+                    m.batcher_queries,
+                    submitted.len()
+                ));
+            }
+            if m.coalesced as usize != submitted.len() - executed_total {
+                return Err(format!(
+                    "coalesced {} != submitted {} - executed {}",
+                    m.coalesced,
+                    submitted.len(),
+                    executed_total
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------- TTL expiry under batching ----------
+
+#[test]
+fn per_entry_ttl_expires_under_batching() {
+    let server = server_with_batch(BatchConfig {
+        max_batch_size: 8,
+        max_wait_us: 0,
+        queue_capacity: 16,
+    });
+    let batcher = server.start_batcher().unwrap();
+    let probe = || QueryRequest::new("ephemeral ttl probe request").with_ttl_ms(150);
+
+    let r1 = batcher.submit(&probe()).unwrap();
+    assert!(matches!(r1.outcome, Outcome::Miss { .. }), "fresh insert: {:?}", r1.outcome);
+    let r2 = batcher.submit(&probe()).unwrap();
+    assert!(r2.is_hit(), "within TTL the entry serves hits: {:?}", r2.outcome);
+
+    std::thread::sleep(Duration::from_millis(400));
+    let r3 = batcher.submit(&probe()).unwrap();
+    assert!(
+        matches!(r3.outcome, Outcome::Miss { .. }),
+        "expired entry must not serve a hit in a later batch: {:?}",
+        r3.outcome
+    );
+    batcher.shutdown();
+    let m = server.metrics().snapshot();
+    assert_eq!(m.cache_misses, 2);
+    assert_eq!(m.cache_hits, 1);
+}
+
+// ---------- in-flight duplicate caveat fix ----------
+
+#[test]
+fn concurrent_identical_novel_queries_cost_one_llm_call() {
+    let server = server_with_batch(BatchConfig {
+        max_batch_size: 16,
+        max_wait_us: 3_000,
+        queue_capacity: 64,
+    });
+    let batcher = server.start_batcher().unwrap();
+    let responses: Vec<QueryResponse> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let b = batcher.clone();
+                scope.spawn(move || {
+                    b.submit(&QueryRequest::new("concurrent duplicate novel query")).unwrap()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    batcher.shutdown();
+
+    let misses = responses.iter().filter(|r| matches!(r.outcome, Outcome::Miss { .. })).count();
+    let hits = responses.iter().filter(|r| r.is_hit()).count();
+    assert_eq!(misses, 1, "exactly one thread pays the miss");
+    assert_eq!(hits, 7, "everyone else is served the same answer");
+    for r in &responses {
+        assert_eq!(r.response, responses[0].response, "all replies share the one answer");
+    }
+    let m = server.metrics().snapshot();
+    assert_eq!(m.requests, 8);
+    assert_eq!(m.llm_calls, 1, "the duplicate in-flight caveat is fixed by coalescing");
+}
+
+// ---------- HTTP backpressure ----------
+
+#[test]
+fn http_backpressure_answers_503_with_rejected_outcome() {
+    // A slow (really-sleeping) upstream pins the dispatcher on the first
+    // miss; with a 1-deep queue and 1-deep batches, later concurrent
+    // requests must be bounced with 503 + Outcome::Rejected.
+    let cfg = ServerConfig::builder()
+        .llm(SimLlmConfig {
+            rtt_ms: 300.0,
+            ms_per_token: 0.0,
+            jitter_sigma: 0.0,
+            real_sleep: true,
+            ..SimLlmConfig::default()
+        })
+        .batch(BatchConfig { max_batch_size: 1, max_wait_us: 0, queue_capacity: 1 })
+        .build()
+        .expect("config");
+    let server = Arc::new(Server::new(small_encoder(), cfg));
+    let handle = serve_http(
+        server.clone(),
+        HttpConfig { workers: 6, batching: true, ..HttpConfig::default() },
+    )
+    .expect("bind ephemeral port");
+    let addr = handle.local_addr().to_string();
+
+    let statuses: Vec<(u16, String)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..6)
+            .map(|i| {
+                let addr = addr.clone();
+                scope.spawn(move || {
+                    let body = QueryRequest::new(format!("backpressure probe number {i}"))
+                        .to_json()
+                        .to_string();
+                    let (status, v) =
+                        http_request(&addr, "POST", "/v1/query", Some(&body)).expect("query");
+                    let kind =
+                        v.get("outcome").get("type").as_str().expect("outcome type").to_string();
+                    (status, kind)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    handle.shutdown();
+
+    let ok = statuses.iter().filter(|(s, _)| *s == 200).count();
+    let bounced = statuses.iter().filter(|(s, _)| *s == 503).count();
+    assert_eq!(ok + bounced, 6);
+    assert!(ok >= 1, "the dispatched request (and any queued one) is served: {statuses:?}");
+    assert!(bounced >= 3, "most concurrent requests bounce off the full queue: {statuses:?}");
+    for (status, kind) in &statuses {
+        match status {
+            200 => assert!(kind == "hit" || kind == "miss"),
+            503 => assert_eq!(kind, "rejected"),
+            other => panic!("unexpected status {other}"),
+        }
+    }
+    let m = server.metrics().snapshot();
+    assert_eq!(m.requests, 6);
+    assert_eq!(m.cache_hits + m.cache_misses + m.rejected, m.requests);
+    assert_eq!(m.rejected as usize, bounced);
+}

@@ -122,6 +122,10 @@ fn tiny_server() -> Arc<Server> {
 }
 
 fn start_front_end() -> (HttpHandle, String) {
+    start_front_end_with(true)
+}
+
+fn start_front_end_with(batching: bool) -> (HttpHandle, String) {
     let handle = serve_http(
         tiny_server(),
         HttpConfig {
@@ -129,11 +133,22 @@ fn start_front_end() -> (HttpHandle, String) {
             workers: 2,
             max_body_bytes: 64 * 1024,
             read_timeout: Duration::from_secs(2),
+            batching,
         },
     )
     .expect("bind ephemeral port");
     let addr = handle.local_addr().to_string();
-    (handle, addr)
+    // Readiness handshake instead of a sleep: `serve_http` returns with
+    // the listener bound, but on a loaded machine we still confirm the
+    // accept/worker pipeline answers before the test starts hammering it
+    // (mirrors the --port-file + health-poll handshake verify.sh uses).
+    for _ in 0..50 {
+        if let Ok((200, _)) = http_request(&addr, "GET", "/v1/health", None) {
+            return (handle, addr);
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    panic!("front-end at {addr} did not become healthy");
 }
 
 #[test]
@@ -195,6 +210,46 @@ fn http_batch_endpoint_preserves_order() {
     for r in v.get("replies").as_array().unwrap() {
         assert_eq!(r.get("outcome").get("type").as_str(), Some("hit"), "{r}");
     }
+    handle.shutdown();
+}
+
+#[test]
+fn http_unbatched_path_still_serves_miss_then_hit() {
+    // `batching: false` is the PR 2 isolated-serve() path; it must stay
+    // fully functional (it is the bench baseline and an operator escape
+    // hatch via `semcached serve --no-batch`).
+    let (handle, addr) = start_front_end_with(false);
+    let body = QueryRequest::new("how do i reset my password").to_json().to_string();
+    let (status, v1) = http_request(&addr, "POST", "/v1/query", Some(&body)).unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(v1.get("outcome").get("type").as_str(), Some("miss"), "{v1}");
+    let body = QueryRequest::new("how can i reset my password").to_json().to_string();
+    let (status, v2) = http_request(&addr, "POST", "/v1/query", Some(&body)).unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(v2.get("outcome").get("type").as_str(), Some("hit"), "{v2}");
+    let (_, m) = http_request(&addr, "GET", "/v1/metrics", None).unwrap();
+    let mm = m.get("metrics");
+    assert_eq!(mm.get("batcher_dispatches").as_usize(), Some(0), "no batcher on this path");
+    assert_eq!(mm.get("cache_hits").as_usize(), Some(1));
+    handle.shutdown();
+}
+
+#[test]
+fn http_batched_path_reports_batcher_metrics() {
+    let (handle, addr) = start_front_end();
+    for i in 0..3 {
+        let body = QueryRequest::new(format!("batcher metrics probe {i} lima"))
+            .to_json()
+            .to_string();
+        let (status, _) = http_request(&addr, "POST", "/v1/query", Some(&body)).unwrap();
+        assert_eq!(status, 200);
+    }
+    let (_, m) = http_request(&addr, "GET", "/v1/metrics", None).unwrap();
+    let mm = m.get("metrics");
+    let dispatches = mm.get("batcher_dispatches").as_usize().expect("batcher_dispatches");
+    assert!((1..=3).contains(&dispatches), "3 sequential queries -> 1..=3 dispatches");
+    assert_eq!(mm.get("batcher_queries").as_usize(), Some(3));
+    assert_eq!(mm.get("requests").as_usize(), Some(3));
     handle.shutdown();
 }
 

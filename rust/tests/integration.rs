@@ -199,6 +199,7 @@ fn config_file_drives_server_behaviour() {
             llm: SimLlmConfig::default(),
             judge: Default::default(),
             workers: 4,
+            batch: Default::default(),
         },
     ));
     s.handle("how do i reset my password", None);

@@ -30,28 +30,54 @@ cargo test -q
 echo "==> cargo test --doc -q"
 cargo test --doc -q
 
-echo "==> HTTP loopback smoke: semcached serve"
+echo "==> HTTP loopback smoke: semcached serve (batched query path)"
 PORT_FILE="$(mktemp)"
 ./target/release/semcached serve --port 0 --port-file "$PORT_FILE" &
 SRV_PID=$!
 trap 'kill "$SRV_PID" 2>/dev/null || true' EXIT
+# Ready-signal handshake, not a fixed sleep: wait for the atomically
+# written port file, then poll the daemon until it answers metrics.
 for _ in $(seq 1 100); do
     [ -s "$PORT_FILE" ] && break
     sleep 0.1
 done
-[ -s "$PORT_FILE" ] || { echo "semcached did not come up"; exit 1; }
+[ -s "$PORT_FILE" ] || { echo "semcached did not come up (no port file)"; exit 1; }
 ADDR="$(cat "$PORT_FILE")"
+READY=0
+for _ in $(seq 1 100); do
+    if ./target/release/semcached metrics --addr "$ADDR" >/dev/null 2>&1; then
+        READY=1
+        break
+    fi
+    sleep 0.1
+done
+[ "$READY" = 1 ] || { echo "semcached did not become healthy at $ADDR"; exit 1; }
 echo "    daemon at $ADDR"
+# Paraphrased-query hit check through the micro-batching engine (the
+# default /v1/query path): miss, then the paraphrase must hit.
 ./target/release/semcached query --addr "$ADDR" "how do i reset my password" >/dev/null
 OUT="$(./target/release/semcached query --addr "$ADDR" "how can i reset my password")"
 echo "$OUT" | grep -q '"type": "hit"' \
     || { echo "loopback smoke FAILED: repeated query was not a cache hit"; echo "$OUT"; exit 1; }
-./target/release/semcached metrics --addr "$ADDR" | grep -q '"cache_hits": 1' \
+METRICS="$(./target/release/semcached metrics --addr "$ADDR")"
+echo "$METRICS" | grep -q '"cache_hits": 1' \
     || { echo "loopback smoke FAILED: /v1/metrics does not reflect the hit"; exit 1; }
+# Batcher smoke: both queries must have flowed through the dispatcher,
+# and the serving counters must be consistent:
+#   cache_hits + cache_misses + rejected == requests
+num() { echo "$METRICS" | sed -n "s/.*\"$1\": \([0-9][0-9]*\).*/\1/p" | head -1; }
+REQS="$(num requests)"; HITS="$(num cache_hits)"; MISSES="$(num cache_misses)"; REJ="$(num rejected)"
+DISPATCHES="$(num batcher_dispatches)"
+[ -n "$REQS" ] && [ -n "$HITS" ] && [ -n "$MISSES" ] && [ -n "$REJ" ] \
+    || { echo "batcher smoke FAILED: could not parse metrics"; echo "$METRICS"; exit 1; }
+[ "$((HITS + MISSES + REJ))" -eq "$REQS" ] \
+    || { echo "batcher smoke FAILED: hits($HITS)+misses($MISSES)+rejected($REJ) != requests($REQS)"; exit 1; }
+[ "${DISPATCHES:-0}" -ge 1 ] \
+    || { echo "batcher smoke FAILED: /v1/query did not go through the batcher"; echo "$METRICS"; exit 1; }
 kill "$SRV_PID" 2>/dev/null || true
 wait "$SRV_PID" 2>/dev/null || true
 trap - EXIT
-echo "    loopback smoke OK (miss -> hit over the wire, metrics agree)"
+echo "    loopback smoke OK (miss -> paraphrase hit via the batcher; metrics consistent: $HITS+$MISSES+$REJ == $REQS, $DISPATCHES dispatches)"
 
 echo "==> smoke bench: bench_batch_throughput (SEMCACHE_BENCH_SMOKE=1)"
 SEMCACHE_BENCH_SMOKE=1 cargo bench --bench bench_batch_throughput
