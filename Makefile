@@ -11,9 +11,12 @@
 #   make bench-batch batch serving throughput baseline (full mode)
 #   make bench-http  batched vs unbatched HTTP loopback throughput vs
 #                    direct serve_batch, 8 connections (full mode)
+#   make bench-embed embedding hot path: arena + parallel encode_batch +
+#                    exact-match memo tier, with acceptance floors
+#                    (full mode; SEMCACHE_BENCH_ENFORCE=1 gates on them)
 #   make artifacts   lower the JAX/Pallas encoder to HLO (needs python/jax)
 
-.PHONY: verify build test serve bench-batch bench-http artifacts
+.PHONY: verify build test serve bench-batch bench-http bench-embed artifacts
 
 verify:
 	./rust/verify.sh
@@ -32,6 +35,9 @@ bench-batch:
 
 bench-http:
 	cd rust && cargo bench --bench bench_http_loopback
+
+bench-embed:
+	cd rust && cargo bench --bench bench_embed_throughput
 
 artifacts:
 	cd python && python -m compile.aot

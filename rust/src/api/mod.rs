@@ -46,6 +46,12 @@ pub struct QueryOptions {
     /// Neighbors fetched before thresholding; must be in
     /// `1..=`[`MAX_TOP_K`].
     pub top_k: Option<usize>,
+    /// Skip the exact-match embedding memo tier's *read* for this
+    /// request (the forward pass runs even for verbatim repeats; the
+    /// fresh embedding is still admitted to the tier). A benchmark /
+    /// debugging escape hatch — it never changes results, the encoder
+    /// is deterministic.
+    pub embed_bypass: bool,
 }
 
 impl QueryOptions {
@@ -110,6 +116,11 @@ impl QueryRequest {
         self
     }
 
+    pub fn with_embed_bypass(mut self) -> Self {
+        self.options.embed_bypass = true;
+        self
+    }
+
     pub fn validate(&self) -> Result<()> {
         if self.text.trim().is_empty() {
             bail!("query text must be non-empty");
@@ -132,6 +143,9 @@ impl QueryRequest {
         if let Some(k) = self.options.top_k {
             m.insert("top_k".to_string(), k.into());
         }
+        if self.options.embed_bypass {
+            m.insert("embed_bypass".to_string(), Value::Bool(true));
+        }
         if let Some(tag) = &self.client_tag {
             m.insert("client_tag".to_string(), Value::Str(tag.clone()));
         }
@@ -144,7 +158,8 @@ impl QueryRequest {
         let fields = v.as_object().context("query request must be a JSON object")?;
         for key in fields.keys() {
             match key.as_str() {
-                "text" | "cluster" | "threshold" | "ttl_ms" | "top_k" | "client_tag" => {}
+                "text" | "cluster" | "threshold" | "ttl_ms" | "top_k" | "client_tag"
+                | "embed_bypass" => {}
                 other => bail!("unknown field '{other}' in query request"),
             }
         }
@@ -165,10 +180,19 @@ impl QueryRequest {
             Value::Null => None,
             t => Some(t.as_str().context("field 'client_tag' must be a string")?.to_string()),
         };
+        let embed_bypass = match v.get("embed_bypass") {
+            Value::Null => false,
+            b => b.as_bool().context("field 'embed_bypass' must be a boolean")?,
+        };
         let req = QueryRequest {
             text,
             cluster: opt_u64(v.get("cluster"), "cluster")?,
-            options: QueryOptions { threshold, ttl_ms: opt_u64(v.get("ttl_ms"), "ttl_ms")?, top_k },
+            options: QueryOptions {
+                threshold,
+                ttl_ms: opt_u64(v.get("ttl_ms"), "ttl_ms")?,
+                top_k,
+                embed_bypass,
+            },
             client_tag,
         };
         req.validate()?;
@@ -248,6 +272,9 @@ pub struct LatencyBreakdown {
     pub index_ms: f64,
     /// Simulated upstream latency (0 for cache hits).
     pub llm_ms: f64,
+    /// True when `embed_ms` was an exact-match memo-tier hit (no
+    /// encoder forward pass ran for this request).
+    pub embed_cached: bool,
 }
 
 impl LatencyBreakdown {
@@ -257,6 +284,7 @@ impl LatencyBreakdown {
             ("embed_ms", self.embed_ms.into()),
             ("index_ms", self.index_ms.into()),
             ("llm_ms", self.llm_ms.into()),
+            ("embed_cached", Value::Bool(self.embed_cached)),
         ])
     }
 
@@ -269,6 +297,11 @@ impl LatencyBreakdown {
             embed_ms: num("embed_ms")?,
             index_ms: num("index_ms")?,
             llm_ms: num("llm_ms")?,
+            // Absent in pre-memo payloads: default cold.
+            embed_cached: match v.get("embed_cached") {
+                Value::Null => false,
+                b => b.as_bool().context("latency field 'embed_cached' must be a boolean")?,
+            },
         })
     }
 }
@@ -422,7 +455,8 @@ mod tests {
             .with_threshold(0.75)
             .with_ttl_ms(30_000)
             .with_top_k(3)
-            .with_client_tag("bot-7");
+            .with_client_tag("bot-7")
+            .with_embed_bypass();
         req.validate().unwrap();
         let wire = req.to_json().to_string();
         let back = QueryRequest::from_json(&parse(&wire).unwrap()).unwrap();
@@ -454,6 +488,7 @@ mod tests {
             (r#"{"text": "q", "threshold": "hi"}"#, "non-number threshold"),
             (r#"{"text": "q", "ttl_ms": -5}"#, "negative ttl"),
             (r#"{"text": "q", "cluster": 1.5}"#, "fractional cluster"),
+            (r#"{"text": "q", "embed_bypass": 1}"#, "non-boolean embed_bypass"),
         ] {
             let v = parse(src).unwrap();
             assert!(QueryRequest::from_json(&v).is_err(), "should reject {why}: {src}");
@@ -495,7 +530,13 @@ mod tests {
         let resp = QueryResponse {
             response: "click 'forgot password'".into(),
             outcome: Outcome::Hit { score: 0.9375, entry_id: 12 },
-            latency: LatencyBreakdown { total_ms: 1.5, embed_ms: 1.25, index_ms: 0.25, llm_ms: 0.0 },
+            latency: LatencyBreakdown {
+                total_ms: 1.5,
+                embed_ms: 1.25,
+                index_ms: 0.25,
+                llm_ms: 0.0,
+                embed_cached: true,
+            },
             judged_positive: Some(true),
             matched_cluster: Some(42),
             client_tag: Some("bot-7".into()),
@@ -506,6 +547,16 @@ mod tests {
         let bare = QueryResponse::rejected(&QueryRequest::new("q"), "nope");
         let wire = bare.to_json().to_string();
         assert_eq!(QueryResponse::from_json(&parse(&wire).unwrap()).unwrap(), bare);
+    }
+
+    #[test]
+    fn pre_memo_latency_payload_decodes_as_cold() {
+        // Wire payloads from before the memo tier carry no
+        // `embed_cached`; they must decode (as a cold embed), not 400.
+        let v = parse(r#"{"total_ms": 1.0, "embed_ms": 0.5, "index_ms": 0.25, "llm_ms": 0.0}"#)
+            .unwrap();
+        let lat = LatencyBreakdown::from_json(&v).unwrap();
+        assert!(!lat.embed_cached);
     }
 
     #[test]

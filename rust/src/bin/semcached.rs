@@ -173,6 +173,16 @@ fn cmd_query(args: &Args) -> Result<()> {
     if let Some(tag) = args.opt("tag") {
         req = req.with_client_tag(tag);
     }
+    // `--embed-bypass <word>` would silently swallow the first query
+    // word as the option's value (the CLI grammar pairs `--key` with the
+    // next non-`--` token); refuse loudly, like `serve` does for
+    // `--no-batch`, and require the flag after the text.
+    if args.opt("embed-bypass").is_some() {
+        bail!("--embed-bypass is a bare flag and takes no value; put it after the query text");
+    }
+    if args.flag("embed-bypass") {
+        req = req.with_embed_bypass();
+    }
     let (status, body) =
         http_request(&addr_of(args), "POST", "/v1/query", Some(&req.to_json().to_string()))?;
     finish(status, &body)

@@ -137,7 +137,9 @@ SERVE OPTIONS:
                              (paper | small | tiny)
     --port-file <path>       Write the bound host:port to a file once ready
     --config <path>          TOML config file (configs/*.toml)
-    --<config-key> <value>   Any config key (e.g. --similarity_threshold 0.75)
+    --<config-key> <value>   Any config key (e.g. --similarity_threshold 0.75,
+                             --embed_memo_capacity 4096 [0 = no memo tier],
+                             --embed_memo_shards 8, --embed_workers 0 [auto])
 
 CLIENT OPTIONS (query | metrics | admin):
     --addr <host:port>       Daemon address (default 127.0.0.1:8080)
@@ -145,6 +147,8 @@ CLIENT OPTIONS (query | metrics | admin):
     --top-k <n>              Per-request candidate-set width  (query)
     --ttl-ms <ms>            Per-request insert TTL           (query)
     --tag <string>           client_tag echoed on the reply   (query)
+    --embed-bypass           Skip the embedding memo read; bare flag,
+                             place it AFTER the query text    (query)
 
 EXAMPLES:
     semcached serve --port 8080 --populate small

@@ -44,6 +44,13 @@ pub struct Config {
     pub batch_window_us: u64,
     /// Max batch size (must be one of the AOT-compiled sizes for pjrt).
     pub max_batch: usize,
+    /// Exact-match embedding memo tier capacity, entries (0 disables
+    /// the tier).
+    pub embed_memo_capacity: usize,
+    /// Lock shards of the embedding memo tier.
+    pub embed_memo_shards: usize,
+    /// Worker-pool width for native `encode_batch` (0 = one per core).
+    pub embed_workers: usize,
 
     // Store
     pub store_shards: usize,
@@ -85,6 +92,9 @@ impl Default for Config {
             encoder_kind: "native".into(),
             batch_window_us: 200,
             max_batch: 8,
+            embed_memo_capacity: 4096,
+            embed_memo_shards: 8,
+            embed_workers: 0,
             store_shards: 16,
             llm_rtt_ms: 150.0,
             llm_ms_per_token: 12.0,
@@ -171,6 +181,9 @@ impl Config {
             "encoder_kind" => self.encoder_kind = raw.to_string(),
             "batch_window_us" => self.batch_window_us = num!(),
             "max_batch" => self.max_batch = num!(),
+            "embed_memo_capacity" => self.embed_memo_capacity = num!(),
+            "embed_memo_shards" => self.embed_memo_shards = num!(),
+            "embed_workers" => self.embed_workers = num!(),
             "store_shards" => self.store_shards = num!(),
             "llm_rtt_ms" => self.llm_rtt_ms = num!(),
             "llm_ms_per_token" => self.llm_ms_per_token = num!(),
@@ -207,6 +220,9 @@ impl Config {
         if self.max_batch == 0 {
             bail!("max_batch must be >= 1");
         }
+        if self.embed_memo_capacity > 0 && self.embed_memo_shards == 0 {
+            bail!("embed_memo_shards must be >= 1 when the memo tier is enabled");
+        }
         Ok(())
     }
 }
@@ -232,6 +248,21 @@ mod tests {
         assert_eq!(c.similarity_threshold, 0.75);
         assert_eq!(c.hnsw_m, 8);
         assert_eq!(c.index_kind, "flat");
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn embed_hotpath_keys_roundtrip_and_validate() {
+        let mut c = Config::default();
+        assert_eq!(c.embed_memo_capacity, 4096);
+        c.set("embedding.embed_memo_capacity", "128").unwrap();
+        c.set("embed_memo_shards", "2").unwrap();
+        c.set("embed_workers", "4").unwrap();
+        assert_eq!((c.embed_memo_capacity, c.embed_memo_shards, c.embed_workers), (128, 2, 4));
+        c.validate().unwrap();
+        c.embed_memo_shards = 0;
+        assert!(c.validate().is_err(), "enabled tier needs >= 1 shard");
+        c.embed_memo_capacity = 0; // disabled tier: shards irrelevant
         c.validate().unwrap();
     }
 

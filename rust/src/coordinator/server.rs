@@ -332,14 +332,23 @@ impl Server {
             return QueryResponse::rejected(req, format!("{e:#}"));
         }
 
-        // 1. Embed (measured).
+        // 1. Embed (measured): memo tier first (unless the request opts
+        // out), cold forward pass otherwise.
         let t0 = Instant::now();
-        let embedding = self.encoder.encode_text(&req.text);
+        let outcome = self
+            .encoder
+            .encode_batch_tracked(&[req.text.as_str()], req.options.embed_bypass)
+            .pop()
+            .expect("one embedding");
         let embed_ms = t0.elapsed().as_secs_f64() * 1e3;
         self.metrics.record_embedding(crate::llm::approx_tokens(&req.text));
         self.metrics.observe_embed_ms(embed_ms);
+        self.metrics.record_embed_cache(outcome.memo_hit);
+        if outcome.memo_hit {
+            self.metrics.observe_embed_memo_ms(embed_ms);
+        }
 
-        self.serve_embedded(req, &embedding, embed_ms)
+        self.serve_embedded(req, &outcome.embedding, embed_ms, outcome.memo_hit)
     }
 
     /// Steps 2..3 of the workflow for a request whose embedding is
@@ -351,6 +360,7 @@ impl Server {
         req: &QueryRequest,
         embedding: &[f32],
         embed_ms: f64,
+        embed_cached: bool,
     ) -> QueryResponse {
         let threshold = req.options.threshold.unwrap_or_else(|| self.effective_threshold());
 
@@ -373,7 +383,13 @@ impl Server {
             return QueryResponse {
                 response: hit.entry.response.clone(),
                 outcome: Outcome::Hit { score: hit.score, entry_id: hit.id },
-                latency: LatencyBreakdown { total_ms, embed_ms, index_ms, llm_ms: 0.0 },
+                latency: LatencyBreakdown {
+                    total_ms,
+                    embed_ms,
+                    index_ms,
+                    llm_ms: 0.0,
+                    embed_cached,
+                },
                 judged_positive: judged,
                 matched_cluster: Some(hit.entry.cluster),
                 client_tag: req.client_tag.clone(),
@@ -412,7 +428,13 @@ impl Server {
         QueryResponse {
             response: resp.text,
             outcome,
-            latency: LatencyBreakdown { total_ms, embed_ms, index_ms, llm_ms: resp.latency_ms },
+            latency: LatencyBreakdown {
+                total_ms,
+                embed_ms,
+                index_ms,
+                llm_ms: resp.latency_ms,
+                embed_cached,
+            },
             judged_positive: None,
             matched_cluster: None,
             client_tag: req.client_tag.clone(),
@@ -522,16 +544,45 @@ impl Server {
                         .filter(|(_, rejected)| rejected.is_none())
                         .map(|(r, _)| r.text.as_str())
                         .collect();
+                    // `embed_bypass` is a per-request flag but encoding
+                    // is per-chunk; bypass requests are rare (a
+                    // benchmark escape hatch), so a mixed chunk falls
+                    // back to per-request tracked encodes instead of
+                    // complicating the amortized path.
+                    let any_bypass = chunk
+                        .iter()
+                        .zip(&rejections)
+                        .any(|(r, rej)| rej.is_none() && r.options.embed_bypass);
                     let t0 = Instant::now();
-                    let embeddings = if texts.is_empty() {
+                    let encoded: Vec<crate::embedding::EncodeOutcome> = if texts.is_empty() {
                         Vec::new()
+                    } else if !any_bypass {
+                        self.encoder.encode_batch_tracked(&texts, false)
                     } else {
-                        self.encoder.encode_batch(&texts)
+                        chunk
+                            .iter()
+                            .zip(&rejections)
+                            .filter(|(_, rejected)| rejected.is_none())
+                            .flat_map(|(r, _)| {
+                                self.encoder.encode_batch_tracked(
+                                    &[r.text.as_str()],
+                                    r.options.embed_bypass,
+                                )
+                            })
+                            .collect()
                     };
                     let chunk_ms = t0.elapsed().as_secs_f64() * 1e3;
                     *embed_wall_ms.lock().unwrap() += chunk_ms;
                     let per_query_ms =
                         if texts.is_empty() { 0.0 } else { chunk_ms / texts.len() as f64 };
+                    // `lat_embed_memo` must hold memo-hit latency *only*:
+                    // in a mixed chunk the amortized per-query time is
+                    // dominated by co-chunked cold forward passes, so
+                    // record it for hits only when the whole chunk was
+                    // served from the memo (single-query chunks — the
+                    // serve() path's shape — always qualify).
+                    let chunk_all_memo_hits =
+                        !encoded.is_empty() && encoded.iter().all(|o| o.memo_hit);
 
                     // Stage 2: lookup / miss fan-out.
                     let mut done = Vec::with_capacity(chunk.len());
@@ -544,11 +595,23 @@ impl Server {
                             done.push((i, QueryResponse::rejected(req, reason)));
                             continue;
                         }
-                        let embedding = &embeddings[next_embedding];
+                        let outcome = &encoded[next_embedding];
                         next_embedding += 1;
                         self.metrics.record_embedding(crate::llm::approx_tokens(&req.text));
                         self.metrics.observe_embed_ms(per_query_ms);
-                        done.push((i, self.serve_embedded(req, embedding, per_query_ms)));
+                        self.metrics.record_embed_cache(outcome.memo_hit);
+                        if outcome.memo_hit && chunk_all_memo_hits {
+                            self.metrics.observe_embed_memo_ms(per_query_ms);
+                        }
+                        done.push((
+                            i,
+                            self.serve_embedded(
+                                req,
+                                &outcome.embedding,
+                                per_query_ms,
+                                outcome.memo_hit,
+                            ),
+                        ));
                     }
                     slots.lock().unwrap().extend(done);
                 });
@@ -608,7 +671,13 @@ impl Server {
     /// Execute an administrative operation (the `/v1/admin` endpoint).
     pub fn admin(&self, req: &AdminRequest) -> AdminResponse {
         match req {
-            AdminRequest::Flush => AdminResponse::Flushed { removed: self.cache.clear() },
+            AdminRequest::Flush => {
+                // Flush empties the embedding memo tier too (benchmark /
+                // privacy hygiene); `removed` counts semantic-cache
+                // entries, as before the tier existed.
+                self.encoder.memo_flush();
+                AdminResponse::Flushed { removed: self.cache.clear() }
+            }
             AdminRequest::Housekeep => {
                 let (expired, rebuilt) = self.cache.housekeep();
                 AdminResponse::Housekept { expired, rebuilt }
@@ -620,9 +689,20 @@ impl Server {
     /// Metrics snapshot plus serving state, as one JSON document (the
     /// `/v1/metrics` endpoint).
     pub fn stats_json(&self) -> Value {
+        let memo = match self.encoder.memo_counters() {
+            Some(c) => obj([
+                ("hits", c.hits.into()),
+                ("misses", c.misses.into()),
+                ("insertions", c.insertions.into()),
+                ("evictions", c.evictions.into()),
+                ("entries", c.entries.into()),
+            ]),
+            None => Value::Null,
+        };
         obj([
             ("metrics", self.metrics.snapshot().to_json()),
             ("cache_entries", self.cache.len().into()),
+            ("embed_memo", memo),
             ("threshold", (self.effective_threshold() as f64).into()),
             ("workers", self.workers.into()),
         ])

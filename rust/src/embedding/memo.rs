@@ -1,0 +1,503 @@
+//! Exact-match embedding memo tier: a sharded, capacity-bounded LRU in
+//! front of the encoder forward pass.
+//!
+//! The source paper's target workload — repetitive customer-service
+//! traffic with 61.6–68.8% hit rates — re-embeds a lot of text the
+//! system has already embedded *verbatim*. The semantic cache still pays
+//! a full transformer forward pass to discover that; this tier answers
+//! repeated identical queries in a hash lookup instead (MeanCache makes
+//! the same observation for client-side reuse: the embedding work is
+//! where a semantic cache claws back its own overhead).
+//!
+//! Design:
+//!
+//! * **Keyed on the tokenized text**, not the raw string: queries that
+//!   tokenize identically ("Reset my password?" / "reset my password")
+//!   share one entry, mirroring exactly what the encoder would see. The
+//!   key is the FNV-1a hash of the id sequence ([`memo_key`]); the ids
+//!   themselves are stored and compared on lookup, so a 64-bit hash
+//!   collision degrades to a miss-free *correct* answer, never a wrong
+//!   embedding.
+//! * **Sharded** — the key hash picks a shard, each shard is an
+//!   independently locked LRU, so concurrent serving workers don't
+//!   serialize on one mutex (the same pattern as the KV store shards).
+//! * **Capacity-bounded, LRU** — each shard holds an intrusive
+//!   doubly-linked recency list over a slab, giving O(1) lookup, insert,
+//!   touch, and eviction (no scans), and a hard entry bound.
+//! * **Observable** — lock-free hit/miss/insertion/eviction counters
+//!   ([`EmbeddingMemo::counters`]); the serving layer mirrors hits and
+//!   misses into `/v1/metrics` as `embed_cache_hits`/`embed_cache_misses`.
+//! * **Flushable** — [`EmbeddingMemo::flush`] empties every shard
+//!   (wired to `POST /v1/admin {"action": "flush"}` alongside the
+//!   semantic cache flush).
+//!
+//! Correctness note: the encoder is deterministic, so a memoized
+//! embedding is bit-identical to re-running the forward pass — the tier
+//! changes latency, never results (property-tested in
+//! `tests/embed_hotpath.rs`).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::error::{bail, Result};
+use crate::tokenizer::fnv1a64;
+
+/// Memo-tier sizing knobs (config keys `embed_memo_capacity` /
+/// `embed_memo_shards`; capacity 0 at the config layer disables the
+/// tier entirely — a constructed memo always holds at least one entry).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MemoConfig {
+    /// Total entry bound across all shards.
+    pub capacity: usize,
+    /// Independently locked LRU shards.
+    pub shards: usize,
+}
+
+impl Default for MemoConfig {
+    fn default() -> Self {
+        // 4096 entries ≈ a few MB of 384-d f32 embeddings — enough to
+        // hold the hot set of the paper's repetitive workloads.
+        Self { capacity: 4096, shards: 8 }
+    }
+}
+
+impl MemoConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.capacity == 0 {
+            bail!("embed memo capacity must be >= 1 (disable the tier instead of sizing it 0)");
+        }
+        if self.shards == 0 {
+            bail!("embed memo shards must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+/// Monotonic counters of the memo tier (plus its current size).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MemoCounters {
+    /// Lookups answered from the tier.
+    pub hits: u64,
+    /// Lookups that fell through to the encoder.
+    pub misses: u64,
+    /// Entries admitted.
+    pub insertions: u64,
+    /// Entries displaced by the capacity bound (flushes not included).
+    pub evictions: u64,
+    /// Entries currently resident.
+    pub entries: usize,
+}
+
+/// Stable key for a tokenized sequence: FNV-1a over the id bytes (the
+/// same hash family the tokenizer itself uses).
+pub fn memo_key(ids: &[i64]) -> u64 {
+    // i64 ids are hashed via their little-endian bytes; sequences are
+    // fixed-length (seq_len), so no length prefix is needed.
+    let mut h = 0xcbf29ce484222325u64;
+    for &id in ids {
+        for b in id.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    // Defensive: keep parity with the crate hash if someone re-derives
+    // it from bytes directly.
+    debug_assert_eq!(h, {
+        let bytes: Vec<u8> = ids.iter().flat_map(|i| i.to_le_bytes()).collect();
+        fnv1a64(&bytes)
+    });
+    h
+}
+
+const NIL: usize = usize::MAX;
+
+/// One resident entry in a shard's slab.
+struct Slot {
+    key: u64,
+    ids: Box<[i64]>,
+    embedding: Box<[f32]>,
+    /// Recency list links (`prev` is toward most-recent).
+    prev: usize,
+    next: usize,
+}
+
+/// One independently locked LRU: hash→slab-slot chains plus an
+/// intrusive recency list. All operations are O(1) (chains are length 1
+/// except under 64-bit hash collisions).
+#[derive(Default)]
+struct Shard {
+    /// key hash → slot indices with that hash (collision chain).
+    map: HashMap<u64, Vec<usize>>,
+    slots: Vec<Slot>,
+    free: Vec<usize>,
+    /// Most-recently used slot (NIL when empty).
+    head: usize,
+    /// Least-recently used slot (the eviction victim).
+    tail: usize,
+    len: usize,
+}
+
+impl Shard {
+    fn new() -> Self {
+        Self { head: NIL, tail: NIL, ..Self::default() }
+    }
+
+    /// Unlink `i` from the recency list.
+    fn unlink(&mut self, i: usize) {
+        let (prev, next) = (self.slots[i].prev, self.slots[i].next);
+        if prev == NIL {
+            self.head = next;
+        } else {
+            self.slots[prev].next = next;
+        }
+        if next == NIL {
+            self.tail = prev;
+        } else {
+            self.slots[next].prev = prev;
+        }
+    }
+
+    /// Push `i` at the most-recent end.
+    fn push_front(&mut self, i: usize) {
+        self.slots[i].prev = NIL;
+        self.slots[i].next = self.head;
+        if self.head != NIL {
+            self.slots[self.head].prev = i;
+        }
+        self.head = i;
+        if self.tail == NIL {
+            self.tail = i;
+        }
+    }
+
+    fn touch(&mut self, i: usize) {
+        if self.head != i {
+            self.unlink(i);
+            self.push_front(i);
+        }
+    }
+
+    fn find(&self, key: u64, ids: &[i64]) -> Option<usize> {
+        self.map
+            .get(&key)?
+            .iter()
+            .copied()
+            .find(|&i| *self.slots[i].ids == *ids)
+    }
+
+    fn lookup(&mut self, key: u64, ids: &[i64]) -> Option<Vec<f32>> {
+        let i = self.find(key, ids)?;
+        self.touch(i);
+        Some(self.slots[i].embedding.to_vec())
+    }
+
+    /// Admit (or refresh) an entry, reporting what happened so the
+    /// tier-level counters stay exact.
+    fn insert(&mut self, key: u64, ids: &[i64], embedding: &[f32], cap: usize) -> InsertOutcome {
+        if let Some(i) = self.find(key, ids) {
+            // Deterministic encoder ⇒ the value cannot have changed;
+            // just refresh recency.
+            self.touch(i);
+            return InsertOutcome::Refreshed;
+        }
+        let mut evicted = false;
+        if self.len >= cap {
+            let victim = self.tail;
+            debug_assert_ne!(victim, NIL, "cap >= 1 and len >= cap implies a tail");
+            self.unlink(victim);
+            let vkey = self.slots[victim].key;
+            if let Some(chain) = self.map.get_mut(&vkey) {
+                chain.retain(|&i| i != victim);
+                if chain.is_empty() {
+                    self.map.remove(&vkey);
+                }
+            }
+            self.free.push(victim);
+            self.len -= 1;
+            evicted = true;
+        }
+        let slot = Slot {
+            key,
+            ids: ids.into(),
+            embedding: embedding.into(),
+            prev: NIL,
+            next: NIL,
+        };
+        let i = match self.free.pop() {
+            Some(i) => {
+                self.slots[i] = slot;
+                i
+            }
+            None => {
+                self.slots.push(slot);
+                self.slots.len() - 1
+            }
+        };
+        self.map.entry(key).or_default().push(i);
+        self.push_front(i);
+        self.len += 1;
+        if evicted {
+            InsertOutcome::InsertedEvicting
+        } else {
+            InsertOutcome::Inserted
+        }
+    }
+
+    fn flush(&mut self) -> usize {
+        let n = self.len;
+        self.map.clear();
+        self.slots.clear();
+        self.free.clear();
+        self.head = NIL;
+        self.tail = NIL;
+        self.len = 0;
+        n
+    }
+}
+
+enum InsertOutcome {
+    Inserted,
+    InsertedEvicting,
+    Refreshed,
+}
+
+/// The sharded exact-match memo tier. Cheap to share (`Arc`); every
+/// method takes `&self`.
+pub struct EmbeddingMemo {
+    shards: Box<[Mutex<Shard>]>,
+    /// Per-shard entry bound (total capacity split across shards,
+    /// rounded up — the tier may hold up to `shards - 1` extra entries).
+    per_shard_cap: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    insertions: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl EmbeddingMemo {
+    pub fn new(cfg: MemoConfig) -> Result<Self> {
+        cfg.validate()?;
+        // Never let the per-shard bound hit 0 (a shard must hold >= 1).
+        let shards = cfg.shards.min(cfg.capacity);
+        Ok(Self {
+            shards: (0..shards).map(|_| Mutex::new(Shard::new())).collect(),
+            per_shard_cap: cfg.capacity.div_ceil(shards),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            insertions: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        })
+    }
+
+    fn shard(&self, key: u64) -> &Mutex<Shard> {
+        // High bits: the low bits already picked map buckets inside the
+        // shard; using different bits decorrelates the two.
+        &self.shards[(key >> 48) as usize % self.shards.len()]
+    }
+
+    /// Probe the tier for a tokenized sequence; a hit refreshes recency
+    /// and returns a copy of the embedding. Records hit/miss counters.
+    pub fn lookup(&self, ids: &[i64]) -> Option<Vec<f32>> {
+        let key = memo_key(ids);
+        let got = self.shard(key).lock().unwrap().lookup(key, ids);
+        if got.is_some() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        }
+        got
+    }
+
+    /// Admit a freshly computed embedding (refreshes recency if the
+    /// sequence raced in since the lookup).
+    pub fn insert(&self, ids: &[i64], embedding: &[f32]) {
+        let key = memo_key(ids);
+        let outcome =
+            self.shard(key).lock().unwrap().insert(key, ids, embedding, self.per_shard_cap);
+        match outcome {
+            InsertOutcome::Inserted => {
+                self.insertions.fetch_add(1, Ordering::Relaxed);
+            }
+            InsertOutcome::InsertedEvicting => {
+                self.insertions.fetch_add(1, Ordering::Relaxed);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+            InsertOutcome::Refreshed => {}
+        }
+    }
+
+    /// Drop every entry; returns how many were resident. Counters are
+    /// monotonic and survive the flush (flushes are not evictions).
+    pub fn flush(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().flush()).sum()
+    }
+
+    /// Entries currently resident across all shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total entry bound (per-shard bound × shards; may exceed the
+    /// configured capacity by rounding, never undershoots it).
+    pub fn capacity(&self) -> usize {
+        self.per_shard_cap * self.shards.len()
+    }
+
+    /// Snapshot of the tier's counters and size.
+    pub fn counters(&self) -> MemoCounters {
+        MemoCounters {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            insertions: self.insertions.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            entries: self.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ids(tag: i64) -> Vec<i64> {
+        // Distinct fixed-length sequences, like the tokenizer produces.
+        vec![1, tag, tag + 1, 0, 0, 0, 0, 0]
+    }
+
+    fn emb(tag: i64) -> Vec<f32> {
+        vec![tag as f32; 4]
+    }
+
+    fn single_shard(cap: usize) -> EmbeddingMemo {
+        EmbeddingMemo::new(MemoConfig { capacity: cap, shards: 1 }).unwrap()
+    }
+
+    #[test]
+    fn config_validation() {
+        assert!(MemoConfig::default().validate().is_ok());
+        assert!(MemoConfig { capacity: 0, shards: 1 }.validate().is_err());
+        assert!(MemoConfig { capacity: 8, shards: 0 }.validate().is_err());
+        // More shards than capacity collapses to capacity-many shards,
+        // each holding one entry — still a valid bounded tier.
+        let m = EmbeddingMemo::new(MemoConfig { capacity: 2, shards: 16 }).unwrap();
+        assert_eq!(m.capacity(), 2);
+    }
+
+    #[test]
+    fn miss_then_hit_roundtrip() {
+        let m = single_shard(8);
+        assert!(m.lookup(&ids(1)).is_none());
+        m.insert(&ids(1), &emb(1));
+        assert_eq!(m.lookup(&ids(1)).unwrap(), emb(1));
+        let c = m.counters();
+        assert_eq!((c.hits, c.misses, c.insertions, c.evictions, c.entries), (1, 1, 1, 0, 1));
+    }
+
+    #[test]
+    fn lru_eviction_order_respects_touches() {
+        let m = single_shard(3);
+        for t in [1, 2, 3] {
+            m.insert(&ids(t), &emb(t));
+        }
+        // Touch 1 so 2 becomes the LRU victim.
+        assert!(m.lookup(&ids(1)).is_some());
+        m.insert(&ids(4), &emb(4));
+        assert_eq!(m.len(), 3, "capacity bound holds");
+        assert!(m.lookup(&ids(2)).is_none(), "LRU entry evicted");
+        for t in [1, 3, 4] {
+            assert!(m.lookup(&ids(t)).is_some(), "entry {t} survived");
+        }
+        assert_eq!(m.counters().evictions, 1);
+    }
+
+    #[test]
+    fn reinserting_refreshes_instead_of_duplicating() {
+        let m = single_shard(2);
+        m.insert(&ids(1), &emb(1));
+        m.insert(&ids(2), &emb(2));
+        // Re-insert 1 (refresh, no insertion/eviction), then admit 3:
+        // the victim must be 2, not the refreshed 1.
+        m.insert(&ids(1), &emb(1));
+        m.insert(&ids(3), &emb(3));
+        assert!(m.lookup(&ids(1)).is_some());
+        assert!(m.lookup(&ids(2)).is_none());
+        let c = m.counters();
+        assert_eq!(c.insertions, 3, "refresh is not an insertion");
+        assert_eq!(c.evictions, 1);
+        assert_eq!(c.entries, 2);
+    }
+
+    #[test]
+    fn flush_empties_and_preserves_monotonic_counters() {
+        let m = single_shard(8);
+        for t in 0..5 {
+            m.insert(&ids(t), &emb(t));
+        }
+        let before = m.counters();
+        assert_eq!(m.flush(), 5);
+        assert!(m.is_empty());
+        assert!(m.lookup(&ids(0)).is_none(), "flushed entries are gone");
+        let after = m.counters();
+        assert_eq!(after.insertions, before.insertions);
+        assert_eq!(after.evictions, before.evictions, "flush is not an eviction");
+        assert_eq!(after.entries, 0);
+        // The tier keeps working after a flush.
+        m.insert(&ids(9), &emb(9));
+        assert!(m.lookup(&ids(9)).is_some());
+    }
+
+    #[test]
+    fn counter_consistency_under_concurrent_traffic() {
+        let m = EmbeddingMemo::new(MemoConfig { capacity: 64, shards: 4 }).unwrap();
+        std::thread::scope(|scope| {
+            for t in 0..4i64 {
+                let m = &m;
+                scope.spawn(move || {
+                    for round in 0..200i64 {
+                        let tag = t * 50 + round % 100;
+                        if m.lookup(&ids(tag)).is_none() {
+                            m.insert(&ids(tag), &emb(tag));
+                        }
+                    }
+                });
+            }
+        });
+        let c = m.counters();
+        assert_eq!(c.hits + c.misses, 800, "every lookup is a hit or a miss");
+        assert!(c.entries <= m.capacity(), "capacity bound holds under races");
+        assert!(
+            c.insertions >= c.evictions + c.entries as u64,
+            "insertions account for residents + evictions (refreshes excluded): {c:?}"
+        );
+        assert!(c.hits > 0, "repeated tags must hit");
+    }
+
+    #[test]
+    fn hash_collisions_compare_full_ids() {
+        // Force both sequences into one shard and assert the chain
+        // disambiguates by ids even when we can't easily fabricate a
+        // 64-bit collision: distinct ids must never alias.
+        let m = single_shard(8);
+        m.insert(&ids(1), &emb(1));
+        m.insert(&ids(2), &emb(2));
+        assert_eq!(m.lookup(&ids(1)).unwrap(), emb(1));
+        assert_eq!(m.lookup(&ids(2)).unwrap(), emb(2));
+        // Different length sequences with shared prefix stay distinct.
+        let short = vec![1i64, 7];
+        let long = vec![1i64, 7, 0];
+        m.insert(&short, &emb(3));
+        assert!(m.lookup(&long).is_none());
+    }
+
+    #[test]
+    fn memo_key_matches_fnv_over_le_bytes() {
+        let seq = vec![1i64, -42, 1 << 40];
+        let bytes: Vec<u8> = seq.iter().flat_map(|i| i.to_le_bytes()).collect();
+        assert_eq!(memo_key(&seq), fnv1a64(&bytes));
+    }
+}

@@ -20,6 +20,7 @@
 //! Both backends produce L2-normalized `dim`-dimensional vectors and
 //! agree to ~1e-4 max abs difference.
 
+mod memo;
 mod native;
 #[cfg(feature = "pjrt")]
 mod pjrt;
@@ -29,7 +30,8 @@ mod pjrt;
 mod service;
 mod weights;
 
-pub use native::NativeEncoder;
+pub use memo::{memo_key, EmbeddingMemo, MemoConfig, MemoCounters};
+pub use native::{EncodeScratch, NativeEncoder};
 pub use pjrt::PjrtEncoder;
 pub use service::{BatcherConfig, EmbeddingHandle, EmbeddingService, EncoderSpec};
 pub use weights::EncoderWeights;
@@ -39,6 +41,16 @@ use std::time::Duration;
 
 use crate::error::{Context, Result};
 use crate::runtime::{artifacts_dir, ModelParams};
+
+/// One encoded text plus where the embedding came from (the serving
+/// layer mirrors `memo_hit` into `embed_cache_hits`/`embed_cache_misses`
+/// and the response's `LatencyBreakdown::embed_cached`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EncodeOutcome {
+    pub embedding: Vec<f32>,
+    /// True when the exact-match memo tier answered (no forward pass).
+    pub memo_hit: bool,
+}
 
 /// A sentence-embedding backend. Embeddings are unit-norm f32 vectors.
 pub trait Encoder: Send + Sync {
@@ -50,14 +62,40 @@ pub trait Encoder: Send + Sync {
     fn encode_text(&self, text: &str) -> Vec<f32> {
         self.encode_batch(&[text]).pop().expect("one embedding")
     }
+    /// [`Encoder::encode_batch`] with provenance: backends with an
+    /// exact-match memo tier ([`EmbeddingMemo`]) report which texts were
+    /// answered from it; `bypass_memo` skips the tier's *read* for this
+    /// call (per-request benchmark escape hatch — fresh embeddings are
+    /// still admitted). Backends without a memo tier fall through to
+    /// `encode_batch` with every outcome marked cold.
+    fn encode_batch_tracked(&self, texts: &[&str], bypass_memo: bool) -> Vec<EncodeOutcome> {
+        let _ = bypass_memo;
+        self.encode_batch(texts)
+            .into_iter()
+            .map(|embedding| EncodeOutcome { embedding, memo_hit: false })
+            .collect()
+    }
+    /// Counters of the memo tier, if this backend has one.
+    fn memo_counters(&self) -> Option<MemoCounters> {
+        None
+    }
+    /// Flush the memo tier (admin `flush` rides through here); returns
+    /// entries removed. Backends without a tier remove nothing.
+    fn memo_flush(&self) -> usize {
+        0
+    }
     /// Hyperparameters of the underlying model.
     fn params(&self) -> &ModelParams;
 }
 
 /// Build the encoder selected by the app-level [`crate::config::Config`]
 /// (`encoder_kind`): the PJRT embedding service when requested, the
-/// native encoder otherwise. Shared by the `semcache` and `semcached`
-/// binaries so the two stay in sync.
+/// native encoder otherwise. The native path honors the embedding
+/// hot-path knobs: `embed_memo_capacity`/`embed_memo_shards` put the
+/// exact-match [`EmbeddingMemo`] tier in front of the forward pass
+/// (capacity 0 disables it) and `embed_workers` pins the
+/// `encode_batch` pool width (0 = one per core). Shared by the
+/// `semcache` and `semcached` binaries so the two stay in sync.
 pub fn build_encoder(cfg: &crate::config::Config) -> Result<Arc<dyn Encoder>> {
     match cfg.encoder_kind.as_str() {
         "pjrt" => {
@@ -71,7 +109,19 @@ pub fn build_encoder(cfg: &crate::config::Config) -> Result<Arc<dyn Encoder>> {
             .context("starting PJRT embedding service (run `make artifacts`?)")?;
             Ok(Arc::new(handle))
         }
-        _ => Ok(Arc::new(NativeEncoder::new(ModelParams::default()))),
+        _ => {
+            let mut enc =
+                NativeEncoder::new(ModelParams::default()).with_workers(cfg.embed_workers);
+            if cfg.embed_memo_capacity > 0 {
+                enc = enc
+                    .with_memo(MemoConfig {
+                        capacity: cfg.embed_memo_capacity,
+                        shards: cfg.embed_memo_shards,
+                    })
+                    .context("building the embedding memo tier")?;
+            }
+            Ok(Arc::new(enc))
+        }
     }
 }
 

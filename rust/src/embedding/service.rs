@@ -8,17 +8,20 @@
 //! batched inference on the serving path (DESIGN.md §4 `embedding/`).
 //!
 //! The cheap-to-clone [`EmbeddingHandle`] implements [`Encoder`] and can
-//! be shared across coordinator workers.
+//! be shared across coordinator workers. Submission is lock-free: every
+//! handle owns its own clone of the queue sender (`mpsc::Sender` is
+//! `Clone`), so concurrent coordinator workers never serialize on a
+//! shared mutex just to enqueue (the seed wrapped one sender in
+//! `Arc<Mutex<..>>`, making every submit a lock acquisition).
 
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::error::Result;
 
 use crate::runtime::ModelParams;
 
-use super::{Encoder, NativeEncoder, PjrtEncoder};
+use super::{EncodeOutcome, Encoder, NativeEncoder, PjrtEncoder};
 
 /// Which backend the worker thread should build.
 #[derive(Debug, Clone)]
@@ -31,13 +34,16 @@ pub enum EncoderSpec {
 
 struct EncodeRequest {
     texts: Vec<String>,
-    reply: mpsc::SyncSender<Vec<Vec<f32>>>,
+    /// Skip the memo-tier read for this request (benchmark escape hatch).
+    bypass_memo: bool,
+    reply: mpsc::SyncSender<Vec<EncodeOutcome>>,
 }
 
-/// Shareable, Send+Sync handle to the batcher thread.
+/// Shareable, Send+Sync handle to the batcher thread. Cloning clones the
+/// queue sender — submission never takes a lock.
 #[derive(Clone)]
 pub struct EmbeddingHandle {
-    tx: Arc<Mutex<mpsc::Sender<EncodeRequest>>>,
+    tx: mpsc::Sender<EncodeRequest>,
     dim: usize,
     params: ModelParams,
 }
@@ -76,11 +82,7 @@ impl EmbeddingService {
             .spawn(move || worker(spec, cfg, rx, ready_tx))
             .expect("spawn embed-batcher");
         let params = ready_rx.recv().expect("batcher init reply")?;
-        Ok(EmbeddingHandle {
-            tx: Arc::new(Mutex::new(tx)),
-            dim: params.dim,
-            params,
-        })
+        Ok(EmbeddingHandle { tx, dim: params.dim, params })
     }
 }
 
@@ -114,10 +116,15 @@ fn worker(
         }
     };
 
-    let encode = |texts: &[&str]| -> Vec<Vec<f32>> {
+    let encode = |texts: &[&str], bypass: bool| -> Vec<EncodeOutcome> {
         match &backend {
-            Backend::Native(n) => n.encode_batch(texts),
-            Backend::Pjrt(p) => p.encode_batch(texts).expect("PJRT encode"),
+            Backend::Native(n) => n.encode_batch_tracked(texts, bypass),
+            Backend::Pjrt(p) => p
+                .encode_batch(texts)
+                .expect("PJRT encode")
+                .into_iter()
+                .map(|embedding| EncodeOutcome { embedding, memo_hit: false })
+                .collect(),
         }
     };
 
@@ -140,14 +147,41 @@ fn worker(
                 Err(_) => break,
             }
         }
-        // Encode the union, split replies per request.
-        let texts: Vec<&str> =
-            batch.iter().flat_map(|r| r.texts.iter().map(|s| s.as_str())).collect();
-        let mut embeddings = encode(&texts).into_iter();
-        for req in batch {
-            let out: Vec<Vec<f32>> = (&mut embeddings).take(req.texts.len()).collect();
-            let _ = req.reply.send(out); // receiver may have given up; fine
+        // Encode the union (bypass requests split into their own union
+        // so one caller's benchmark flag never disables the memo read
+        // for everyone coalesced with it), split replies per request.
+        for wanted_bypass in [false, true] {
+            let texts: Vec<&str> = batch
+                .iter()
+                .filter(|r| r.bypass_memo == wanted_bypass)
+                .flat_map(|r| r.texts.iter().map(|s| s.as_str()))
+                .collect();
+            if texts.is_empty() {
+                continue;
+            }
+            let mut outcomes = encode(&texts, wanted_bypass).into_iter();
+            for req in batch.iter().filter(|r| r.bypass_memo == wanted_bypass) {
+                let out: Vec<EncodeOutcome> =
+                    (&mut outcomes).take(req.texts.len()).collect();
+                let _ = req.reply.send(out); // receiver may have given up; fine
+            }
         }
+    }
+}
+
+impl EmbeddingHandle {
+    fn submit(&self, texts: &[&str], bypass_memo: bool) -> Vec<EncodeOutcome> {
+        if texts.is_empty() {
+            return Vec::new();
+        }
+        let (reply_tx, reply_rx) = mpsc::sync_channel(1);
+        let req = EncodeRequest {
+            texts: texts.iter().map(|s| s.to_string()).collect(),
+            bypass_memo,
+            reply: reply_tx,
+        };
+        self.tx.send(req).expect("embedding worker alive");
+        reply_rx.recv().expect("embedding reply")
     }
 }
 
@@ -157,16 +191,11 @@ impl Encoder for EmbeddingHandle {
     }
 
     fn encode_batch(&self, texts: &[&str]) -> Vec<Vec<f32>> {
-        if texts.is_empty() {
-            return Vec::new();
-        }
-        let (reply_tx, reply_rx) = mpsc::sync_channel(1);
-        let req = EncodeRequest {
-            texts: texts.iter().map(|s| s.to_string()).collect(),
-            reply: reply_tx,
-        };
-        self.tx.lock().unwrap().send(req).expect("embedding worker alive");
-        reply_rx.recv().expect("embedding reply")
+        self.submit(texts, false).into_iter().map(|o| o.embedding).collect()
+    }
+
+    fn encode_batch_tracked(&self, texts: &[&str], bypass_memo: bool) -> Vec<EncodeOutcome> {
+        self.submit(texts, bypass_memo)
     }
 
     fn params(&self) -> &ModelParams {
@@ -243,5 +272,23 @@ mod tests {
         let a = h.encode_text("the quick brown fox");
         let b = direct.encode_text("the quick brown fox");
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn tracked_and_bypass_flow_through_the_worker() {
+        let h = EmbeddingService::spawn(
+            EncoderSpec::Native(small_params()),
+            BatcherConfig::default(),
+        )
+        .unwrap();
+        // The service's native backend has no memo tier attached, so
+        // everything reports cold — the point is the plumbing round-trips
+        // per-request flags without mixing unions.
+        let a = h.encode_batch_tracked(&["one", "two"], false);
+        let b = h.encode_batch_tracked(&["one"], true);
+        assert_eq!(a.len(), 2);
+        assert_eq!(b.len(), 1);
+        assert!(a.iter().chain(&b).all(|o| !o.memo_hit));
+        assert_eq!(a[0].embedding, b[0].embedding, "bypass never changes values");
     }
 }

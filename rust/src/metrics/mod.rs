@@ -50,6 +50,12 @@ pub struct Metrics {
     // HTTP front-end counters.
     pub http_requests: AtomicU64,
     pub http_errors: AtomicU64,
+    // Embedding memo tier (exact-match LRU in front of the encoder):
+    // serving-path encodes answered from / missing the tier. Requests
+    // served by an encoder without a memo tier count as misses (every
+    // embed is a hit or a miss, mirroring the cache-hit invariant).
+    pub embed_cache_hits: AtomicU64,
+    pub embed_cache_misses: AtomicU64,
     // Token accounting for the cost model.
     pub llm_input_tokens: AtomicU64,
     pub llm_output_tokens: AtomicU64,
@@ -68,6 +74,10 @@ pub struct Metrics {
     // Latency histograms (ms), mutex-guarded (record is a few ns anyway).
     lat_total: Mutex<Histogram>,
     lat_embed: Mutex<Histogram>,
+    /// Embed latency of memo-tier hits only (the paper's dominant
+    /// repeat-query shape; contrast with `lat_embed`, which mixes hits
+    /// and cold forward passes).
+    lat_embed_memo: Mutex<Histogram>,
     lat_index: Mutex<Histogram>,
     lat_llm: Mutex<Histogram>,
     // Per-stage batch pipeline histograms (one observation per batch):
@@ -96,6 +106,8 @@ pub struct MetricsSnapshot {
     pub rejected: u64,
     pub http_requests: u64,
     pub http_errors: u64,
+    pub embed_cache_hits: u64,
+    pub embed_cache_misses: u64,
     pub llm_input_tokens: u64,
     pub llm_output_tokens: u64,
     pub embedding_tokens: u64,
@@ -106,6 +118,8 @@ pub struct MetricsSnapshot {
     pub coalesced: u64,
     pub lat_total: Summary,
     pub lat_embed: Summary,
+    /// Embed latency over memo-tier hits only.
+    pub lat_embed_memo: Summary,
     pub lat_index: Summary,
     pub lat_llm: Summary,
     pub lat_batch_embed: Summary,
@@ -143,6 +157,16 @@ impl Metrics {
 
     pub fn record_embedding(&self, tokens: u64) {
         self.embedding_tokens.fetch_add(tokens, Ordering::Relaxed);
+    }
+
+    /// One serving-path embed, resolved by the memo tier (`hit`) or a
+    /// cold forward pass.
+    pub fn record_embed_cache(&self, hit: bool) {
+        if hit {
+            self.embed_cache_hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.embed_cache_misses.fetch_add(1, Ordering::Relaxed);
+        }
     }
 
     pub fn record_rejected(&self) {
@@ -189,6 +213,9 @@ impl Metrics {
     pub fn observe_embed_ms(&self, ms: f64) {
         self.lat_embed.lock().unwrap().observe(ms);
     }
+    pub fn observe_embed_memo_ms(&self, ms: f64) {
+        self.lat_embed_memo.lock().unwrap().observe(ms);
+    }
     pub fn observe_index_ms(&self, ms: f64) {
         self.lat_index.lock().unwrap().observe(ms);
     }
@@ -222,6 +249,8 @@ impl Metrics {
             rejected: self.rejected.load(Ordering::Relaxed),
             http_requests: self.http_requests.load(Ordering::Relaxed),
             http_errors: self.http_errors.load(Ordering::Relaxed),
+            embed_cache_hits: self.embed_cache_hits.load(Ordering::Relaxed),
+            embed_cache_misses: self.embed_cache_misses.load(Ordering::Relaxed),
             llm_input_tokens: self.llm_input_tokens.load(Ordering::Relaxed),
             llm_output_tokens: self.llm_output_tokens.load(Ordering::Relaxed),
             embedding_tokens: self.embedding_tokens.load(Ordering::Relaxed),
@@ -232,6 +261,7 @@ impl Metrics {
             coalesced: self.coalesced.load(Ordering::Relaxed),
             lat_total: self.lat_total.lock().unwrap().summary(),
             lat_embed: self.lat_embed.lock().unwrap().summary(),
+            lat_embed_memo: self.lat_embed_memo.lock().unwrap().summary(),
             lat_index: self.lat_index.lock().unwrap().summary(),
             lat_llm: self.lat_llm.lock().unwrap().summary(),
             lat_batch_embed: self.lat_batch_embed.lock().unwrap().summary(),
@@ -301,6 +331,11 @@ impl MetricsSnapshot {
             ("lat_total_p99_ms", self.lat_total.p99.into()),
             ("lat_llm_mean_ms", self.lat_llm.mean.into()),
             ("lat_embed_mean_ms", self.lat_embed.mean.into()),
+            ("embed_cache_hits", self.embed_cache_hits.into()),
+            ("embed_cache_misses", self.embed_cache_misses.into()),
+            ("lat_embed_memo_mean_ms", self.lat_embed_memo.mean.into()),
+            ("lat_embed_memo_p50_ms", self.lat_embed_memo.p50.into()),
+            ("lat_embed_memo_p95_ms", self.lat_embed_memo.p95.into()),
             ("lat_index_mean_ms", self.lat_index.mean.into()),
             ("batches", self.batches.into()),
             ("batch_queries", self.batch_queries.into()),
@@ -400,6 +435,24 @@ mod tests {
         assert_eq!(j.get("batcher_dispatches").as_usize(), Some(2));
         assert_eq!(j.get("coalesced").as_usize(), Some(2));
         assert!(j.get("batcher_batch_mean").as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn embed_cache_counters_and_memo_histogram() {
+        let m = Metrics::new();
+        m.record_embed_cache(true);
+        m.record_embed_cache(true);
+        m.record_embed_cache(false);
+        m.observe_embed_memo_ms(0.01);
+        m.observe_embed_memo_ms(0.03);
+        let s = m.snapshot();
+        assert_eq!(s.embed_cache_hits, 2);
+        assert_eq!(s.embed_cache_misses, 1);
+        assert_eq!(s.lat_embed_memo.n, 2);
+        let j = s.to_json();
+        assert_eq!(j.get("embed_cache_hits").as_usize(), Some(2));
+        assert_eq!(j.get("embed_cache_misses").as_usize(), Some(1));
+        assert!(j.get("lat_embed_memo_p50_ms").as_f64().unwrap() > 0.0);
     }
 
     #[test]

@@ -1,0 +1,368 @@
+//! Embedding hot-path parity + memo-tier serving tests (ISSUE 4).
+//!
+//! The encoder overhaul (scratch arena, parallel `encode_batch`, memo
+//! tier) claims **bit-identical** output to the seed forward pass. The
+//! oracle here is `seed_encode_ids`: a line-for-line re-implementation
+//! of the seed `NativeEncoder::encode_ids` — naive per-call allocations,
+//! full `x.clone()` before the final LayerNorm, identical formulas in
+//! identical floating-point operation order. The property test drives
+//! random texts, batch sizes, worker counts, memoization, and bypass
+//! flags through the production paths and requires exact equality
+//! against the oracle.
+
+use std::sync::Arc;
+
+use semcache::api::{AdminRequest, Outcome, QueryRequest};
+use semcache::coordinator::{Server, ServerConfig};
+use semcache::embedding::{Encoder, MemoConfig, NativeEncoder};
+use semcache::runtime::ModelParams;
+use semcache::testutil::{prop_check, Gen, PropConfig};
+use semcache::tokenizer::PAD_ID;
+use semcache::util::dot;
+
+// ---------- the seed forward pass, reproduced naively ----------
+
+const LN_EPS: f32 = 1e-6;
+
+fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.7978845608028654; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+fn layer_norm_rows(x: &[f32], out: &mut [f32], rows: usize, cols: usize) {
+    for r in 0..rows {
+        let row = &x[r * cols..(r + 1) * cols];
+        let mu = row.iter().sum::<f32>() / cols as f32;
+        let var = row.iter().map(|e| (e - mu) * (e - mu)).sum::<f32>() / cols as f32;
+        let inv = 1.0 / (var + LN_EPS).sqrt();
+        for c in 0..cols {
+            out[r * cols + c] = (row[c] - mu) * inv;
+        }
+    }
+}
+
+fn matmul_acc(a: &[f32], b: &[f32], out: &mut [f32], rows: usize, inner: usize, cols: usize) {
+    for i in 0..rows {
+        let a_row = &a[i * inner..(i + 1) * inner];
+        let o_row = &mut out[i * cols..(i + 1) * cols];
+        for (kk, &aik) in a_row.iter().enumerate() {
+            let b_row = &b[kk * cols..(kk + 1) * cols];
+            for j in 0..cols {
+                o_row[j] += aik * b_row[j];
+            }
+        }
+    }
+}
+
+fn matmul(a: &[f32], b: &[f32], out: &mut [f32], rows: usize, inner: usize, cols: usize) {
+    out.fill(0.0);
+    matmul_acc(a, b, out, rows, inner, cols);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn attention(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    mask: &[f32],
+    out: &mut [f32],
+    s: usize,
+    heads: usize,
+    dh: usize,
+) {
+    let d = heads * dh;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut scores = vec![0.0f32; s];
+    for hd in 0..heads {
+        let off = hd * dh;
+        for i in 0..s {
+            let qi = &q[i * d + off..i * d + off + dh];
+            let mut max = f32::MIN;
+            for j in 0..s {
+                let kj = &k[j * d + off..j * d + off + dh];
+                let mut sc = dot(qi, kj) * scale;
+                sc += (1.0 - mask[j]) * -1e9;
+                scores[j] = sc;
+                if sc > max {
+                    max = sc;
+                }
+            }
+            let mut sum = 0.0f32;
+            for sc in scores.iter_mut() {
+                *sc = (*sc - max).exp();
+                sum += *sc;
+            }
+            let inv = 1.0 / sum;
+            let o = &mut out[i * d + off..i * d + off + dh];
+            o.fill(0.0);
+            for j in 0..s {
+                let w = scores[j] * inv;
+                let vj = &v[j * d + off..j * d + off + dh];
+                for c in 0..dh {
+                    o[c] += w * vj[c];
+                }
+            }
+        }
+    }
+}
+
+/// The seed `NativeEncoder::encode_ids`, allocations and all.
+fn seed_encode_ids(enc: &NativeEncoder, ids: &[i64]) -> Vec<f32> {
+    use semcache::embedding::EncoderWeights;
+    let w = enc.weights();
+    let p = &w.params;
+    assert_eq!(ids.len(), p.seq_len);
+    let (s, d, h) = (p.seq_len, p.dim, p.hidden);
+    let heads = p.heads;
+    let dh = d / heads;
+
+    let mut x = vec![0.0f32; s * d];
+    for (i, &t) in ids.iter().enumerate() {
+        let row = w.embed_row(t);
+        let pos = &w.pos[i * d..(i + 1) * d];
+        for j in 0..d {
+            x[i * d + j] = row[j] + pos[j];
+        }
+    }
+    let mask: Vec<f32> = ids.iter().map(|&t| if t == PAD_ID { 0.0 } else { 1.0 }).collect();
+
+    let mut hbuf = vec![0.0f32; s * d];
+    let mut q = vec![0.0f32; s * d];
+    let mut k = vec![0.0f32; s * d];
+    let mut v = vec![0.0f32; s * d];
+    let mut ctx = vec![0.0f32; s * d];
+    let mut ffn_h = vec![0.0f32; s * h];
+
+    for l in 0..p.layers {
+        layer_norm_rows(&x, &mut hbuf, s, d);
+        let wq = EncoderWeights::layer(&w.wq, l, d, d);
+        let wk = EncoderWeights::layer(&w.wk, l, d, d);
+        let wv = EncoderWeights::layer(&w.wv, l, d, d);
+        let wo = EncoderWeights::layer(&w.wo, l, d, d);
+        matmul(&hbuf, wq, &mut q, s, d, d);
+        matmul(&hbuf, wk, &mut k, s, d, d);
+        matmul(&hbuf, wv, &mut v, s, d, d);
+        attention(&q, &k, &v, &mask, &mut ctx, s, heads, dh);
+        matmul_acc(&ctx, wo, &mut x, s, d, d);
+
+        layer_norm_rows(&x, &mut hbuf, s, d);
+        let w1 = EncoderWeights::layer(&w.w1, l, d, h);
+        let w2 = EncoderWeights::layer(&w.w2, l, h, d);
+        matmul(&hbuf, w1, &mut ffn_h, s, d, h);
+        for e in ffn_h.iter_mut() {
+            *e = gelu(*e);
+        }
+        matmul_acc(&ffn_h, w2, &mut x, s, h, d);
+    }
+
+    layer_norm_rows(&x.clone(), &mut x, s, d);
+
+    let denom = mask.iter().sum::<f32>().max(1.0);
+    let mut pooled = vec![0.0f32; d];
+    for i in 0..s {
+        if mask[i] > 0.0 {
+            for j in 0..d {
+                pooled[j] += x[i * d + j];
+            }
+        }
+    }
+    for e in pooled.iter_mut() {
+        *e /= denom;
+    }
+    let n = dot(&pooled, &pooled).sqrt().max(1e-12);
+    for e in pooled.iter_mut() {
+        *e /= n;
+    }
+    pooled
+}
+
+// ---------- parity property test ----------
+
+fn small_params() -> ModelParams {
+    let mut p = ModelParams::default();
+    p.layers = 2;
+    p.vocab_size = 512;
+    p.dim = 96;
+    p.hidden = 192;
+    p.heads = 4;
+    p
+}
+
+fn gen_text(g: &mut Gen) -> String {
+    // 0 words = empty text (CLS-only sequence) is a legal encoder input
+    // and must stay covered.
+    let words = g.usize_in(0, 12);
+    (0..words).map(|_| g.word()).collect::<Vec<_>>().join(" ")
+}
+
+#[test]
+fn prop_hotpath_bit_identical_to_seed_forward_pass() {
+    let p = small_params();
+    let plain = NativeEncoder::new(p.clone());
+    let memoized = NativeEncoder::new(p)
+        .with_memo(MemoConfig { capacity: 64, shards: 2 })
+        .unwrap();
+    prop_check(
+        PropConfig { cases: 24, ..Default::default() },
+        "embed-hotpath-parity",
+        |g| {
+            let n = g.usize_in(1, 10);
+            let texts: Vec<String> = (0..n).map(|_| gen_text(g)).collect();
+            let refs: Vec<&str> = texts.iter().map(|s| s.as_str()).collect();
+            let want: Vec<Vec<f32>> = refs
+                .iter()
+                .map(|t| seed_encode_ids(&plain, &plain.tokenizer().encode(t)))
+                .collect();
+
+            // Arena path (thread-local scratch).
+            let ids0 = plain.tokenizer().encode(refs[0]);
+            if plain.encode_ids(&ids0) != want[0] {
+                return Err("encode_ids (arena) diverged from the seed".into());
+            }
+            // Parallel batch at a random pool width.
+            let workers = g.usize_in(1, 4);
+            if plain.encode_batch_with_workers(&refs, workers) != want {
+                return Err(format!("encode_batch at {workers} workers diverged from the seed"));
+            }
+            // Memoized path (random bypass): texts repeat across cases,
+            // so this round-trips cold inserts and warm hits alike.
+            let bypass = g.bool();
+            let tracked = memoized.encode_batch_tracked(&refs, bypass);
+            for (i, (o, w)) in tracked.iter().zip(&want).enumerate() {
+                if &o.embedding != w {
+                    return Err(format!(
+                        "memoized encode (bypass={bypass}, memo_hit={}) diverged at {i}",
+                        o.memo_hit
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn repeated_words_and_truncation_keep_parity() {
+    // Directed edge cases the random generator rarely builds: heavy
+    // repetition (memo-key stress) and >seq_len inputs (truncation).
+    let p = small_params();
+    let enc = NativeEncoder::new(p)
+        .with_memo(MemoConfig { capacity: 8, shards: 1 })
+        .unwrap();
+    let long: String = (0..100).map(|i| format!("w{i} ")).collect();
+    let texts = vec![
+        "".to_string(),
+        "same same same same".to_string(),
+        long.clone(),
+        long, // duplicate of the truncated text
+        "same same same same".to_string(),
+    ];
+    let refs: Vec<&str> = texts.iter().map(|s| s.as_str()).collect();
+    let want: Vec<Vec<f32>> = refs
+        .iter()
+        .map(|t| seed_encode_ids(&enc, &enc.tokenizer().encode(t)))
+        .collect();
+    // Twice: cold pass, then fully memoized pass — both must be exact.
+    for round in 0..2 {
+        let got = enc.encode_batch_tracked(&refs, false);
+        for (i, (o, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(&o.embedding, w, "round {round} text {i}");
+        }
+    }
+}
+
+// ---------- memo tier through the serving stack ----------
+
+fn memo_server() -> Arc<Server> {
+    let enc = NativeEncoder::new(small_params())
+        .with_memo(MemoConfig { capacity: 256, shards: 4 })
+        .unwrap();
+    Arc::new(Server::new(Arc::new(enc), ServerConfig::default()))
+}
+
+#[test]
+fn serve_repeat_query_rides_the_memo_and_admin_flush_clears_it() {
+    let s = memo_server();
+    let q = QueryRequest::new("how do i reset my password");
+    let r1 = s.serve(&q);
+    assert!(matches!(r1.outcome, Outcome::Miss { .. }));
+    assert!(!r1.latency.embed_cached, "first sight pays the forward pass");
+
+    let r2 = s.serve(&q);
+    assert!(r2.is_hit(), "verbatim repeat hits the semantic cache");
+    assert!(r2.latency.embed_cached, "…and its embedding came from the memo");
+
+    // Per-request bypass: same answer, cold embed path.
+    let r3 = s.serve(&QueryRequest::new("how do i reset my password").with_embed_bypass());
+    assert!(r3.is_hit());
+    assert!(!r3.latency.embed_cached, "bypass skips the memo read");
+    assert_eq!(r3.response, r2.response);
+
+    let m = s.metrics().snapshot();
+    assert_eq!(m.embed_cache_hits, 1);
+    assert_eq!(m.embed_cache_misses, 2);
+    assert_eq!(m.lat_embed_memo.n, 1, "memo-hit latency histogram observed once");
+
+    // The memo tier is visible in stats and emptied by admin flush.
+    let stats = s.stats_json();
+    assert_eq!(stats.get("embed_memo").get("entries").as_usize(), Some(1));
+    s.admin(&AdminRequest::Flush);
+    let c = s.encoder().memo_counters().expect("memoized encoder");
+    assert_eq!(c.entries, 0, "admin flush empties the memo tier");
+
+    // Post-flush repeat re-encodes (a fresh embed-cache miss)…
+    let r4 = s.serve(&q);
+    assert!(!r4.latency.embed_cached);
+    // …and the semantic cache was flushed too, so it misses and re-inserts.
+    assert!(matches!(r4.outcome, Outcome::Miss { .. }));
+}
+
+#[test]
+fn batch_pipeline_reports_memo_hits_per_query() {
+    let s = memo_server();
+    let texts = ["alpha question one", "beta question two", "gamma question three"];
+    let reqs: Vec<QueryRequest> = texts.iter().map(|t| QueryRequest::new(*t)).collect();
+    let first = s.serve_batch(&reqs);
+    assert!(first.iter().all(|r| !r.latency.embed_cached), "cold batch");
+
+    let second = s.serve_batch(&reqs);
+    assert!(second.iter().all(|r| r.latency.embed_cached), "warm batch all memo hits");
+    assert!(second.iter().all(|r| r.is_hit()));
+
+    // A mixed batch: one request opts out of the memo read; the chunk
+    // falls back to per-request encodes and flags stay per-request.
+    let mixed = vec![
+        QueryRequest::new("alpha question one"),
+        QueryRequest::new("beta question two").with_embed_bypass(),
+        QueryRequest::new("gamma question three"),
+    ];
+    let out = s.serve_batch_with_workers(&mixed, 1);
+    assert!(out[0].latency.embed_cached);
+    assert!(!out[1].latency.embed_cached, "bypassed request is cold");
+    assert!(out[2].latency.embed_cached);
+
+    let m = s.metrics().snapshot();
+    // 3 cold + 3 warm + (2 warm + 1 bypass) = 5 hits, 4 misses.
+    assert_eq!(m.embed_cache_hits, 5);
+    assert_eq!(m.embed_cache_misses, 4);
+    assert_eq!(m.embed_cache_hits + m.embed_cache_misses, m.requests);
+}
+
+#[test]
+fn memoless_server_counts_every_embed_as_miss() {
+    // Servers without a memo tier keep the invariant
+    // embed_cache_hits + embed_cache_misses == served (non-rejected)
+    // requests, with zero hits.
+    let s = Arc::new(Server::new(
+        Arc::new(NativeEncoder::new(small_params())),
+        ServerConfig::default(),
+    ));
+    let q = QueryRequest::new("no memo here");
+    s.serve(&q);
+    s.serve(&q);
+    let m = s.metrics().snapshot();
+    assert_eq!(m.embed_cache_hits, 0);
+    assert_eq!(m.embed_cache_misses, 2);
+    assert!(s.encoder().memo_counters().is_none());
+    assert!(s.stats_json().get("embed_memo").is_null());
+}

@@ -40,6 +40,9 @@ fn gen_request(g: &mut Gen) -> QueryRequest {
     if g.bool() {
         req = req.with_client_tag(g.word());
     }
+    if g.bool() {
+        req = req.with_embed_bypass();
+    }
     req
 }
 
@@ -60,6 +63,7 @@ fn gen_response(g: &mut Gen) -> QueryResponse {
             embed_ms: g.f32_in(0.0, 100.0) as f64,
             index_ms: g.f32_in(0.0, 10.0) as f64,
             llm_ms: g.f32_in(0.0, 5_000.0) as f64,
+            embed_cached: g.bool(),
         },
         judged_positive: if g.bool() { Some(g.bool()) } else { None },
         matched_cluster: if g.bool() { Some(g.u64() % (1 << 32)) } else { None },

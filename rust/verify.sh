@@ -85,4 +85,7 @@ SEMCACHE_BENCH_SMOKE=1 cargo bench --bench bench_batch_throughput
 echo "==> smoke bench: bench_http_loopback (SEMCACHE_BENCH_SMOKE=1)"
 SEMCACHE_BENCH_SMOKE=1 cargo bench --bench bench_http_loopback
 
+echo "==> smoke bench: bench_embed_throughput (SEMCACHE_BENCH_SMOKE=1)"
+SEMCACHE_BENCH_SMOKE=1 cargo bench --bench bench_embed_throughput
+
 echo "==> verify OK"
