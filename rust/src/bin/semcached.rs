@@ -2,10 +2,14 @@
 //!
 //! `semcached serve` binds the zero-dependency HTTP/1.1 front-end
 //! ([`semcache::coordinator::http`]) over a cache-fronted
-//! [`semcache::coordinator::Server`]; the `query`/`metrics`/`admin`
-//! subcommands are a tiny client for it (no `curl` needed in CI).
-//! Run `semcached help` for usage.
+//! [`semcache::coordinator::Server`] — by default on the epoll/poll
+//! event loop (`--threaded-accept` selects the legacy blocking pool);
+//! the `query`/`metrics`/`admin` subcommands are a tiny client for it
+//! (no `curl` needed in CI), and `stress-idle` holds many idle
+//! keep-alive connections open so scripts can probe idle-fan-in
+//! behavior (used by `verify.sh`). Run `semcached help` for usage.
 
+use std::net::TcpStream;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -38,6 +42,7 @@ fn run(argv: &[String]) -> Result<()> {
         "query" => cmd_query(&args),
         "metrics" => cmd_metrics(&args),
         "admin" => cmd_admin(&args),
+        "stress-idle" => cmd_stress_idle(&args),
         other => bail!("unknown subcommand '{other}' (try `semcached help`)"),
     }
 }
@@ -58,6 +63,9 @@ fn load_config(args: &Args) -> Result<Config> {
             "batch-wait-us",
             "batch-queue",
             "no-batch",
+            "event-loop",
+            "threaded-accept",
+            "max-conns",
         ],
     )?;
     if let Some(w) = args.opt("workers") {
@@ -112,12 +120,35 @@ fn cmd_serve(args: &Args) -> Result<()> {
         bail!("--no-batch is a bare flag and takes no value");
     }
     let batching = !args.flag("no-batch");
+    // Serving-mode flags (same bare-flag discipline): the event loop is
+    // the default; `--threaded-accept` is the escape hatch back to the
+    // blocking pool, `--event-loop` forces the default explicitly (e.g.
+    // over a config file that set `http_event_loop = false`).
+    for mode_flag in ["event-loop", "threaded-accept"] {
+        if args.opt(mode_flag).is_some() {
+            bail!("--{mode_flag} is a bare flag and takes no value");
+        }
+    }
+    if args.flag("event-loop") && args.flag("threaded-accept") {
+        bail!("--event-loop and --threaded-accept are mutually exclusive");
+    }
+    let event_loop = if args.flag("threaded-accept") {
+        false
+    } else {
+        args.flag("event-loop") || cfg.http_event_loop
+    };
+    let max_conns: usize = args.opt_parse("max-conns", cfg.http_max_conns)?;
+    if max_conns == 0 {
+        bail!("--max-conns must be >= 1");
+    }
     let handle = serve_http(
         server,
         HttpConfig {
             addr: format!("{bind}:{port}"),
             workers: http_workers,
             batching,
+            event_loop,
+            max_conns,
             ..HttpConfig::default()
         },
     )?;
@@ -133,7 +164,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         std::fs::rename(&tmp, path)
             .with_context(|| format!("publishing --port-file {path}"))?;
     }
-    println!("semcached listening on http://{addr}");
+    println!(
+        "semcached listening on http://{addr} ({} mode, max {max_conns} conns)",
+        if event_loop { "event-loop" } else { "threaded-accept" },
+    );
     println!("endpoints: POST /v1/query /v1/query_batch /v1/admin | GET /v1/metrics /v1/health");
     // Serve until killed; the accept/worker threads do all the work.
     loop {
@@ -186,6 +220,28 @@ fn cmd_query(args: &Args) -> Result<()> {
     let (status, body) =
         http_request(&addr_of(args), "POST", "/v1/query", Some(&req.to_json().to_string()))?;
     finish(status, &body)
+}
+
+/// Hold N idle keep-alive connections open against a daemon for a
+/// while. This is the exact failure shape of thread-per-connection
+/// serving (every idle socket pins a worker); `verify.sh` runs it in
+/// the background and asserts a fresh query still answers promptly on
+/// the event-loop path.
+fn cmd_stress_idle(args: &Args) -> Result<()> {
+    let addr = addr_of(args);
+    let conns: usize = args.opt_parse("conns", 64)?;
+    let hold_ms: u64 = args.opt_parse("hold-ms", 5_000)?;
+    let mut held = Vec::with_capacity(conns);
+    for i in 0..conns {
+        let stream = TcpStream::connect(&addr)
+            .with_context(|| format!("opening idle connection {i} to {addr}"))?;
+        held.push(stream);
+    }
+    println!("holding {} idle connections to {addr} for {hold_ms} ms", held.len());
+    std::thread::sleep(Duration::from_millis(hold_ms));
+    drop(held);
+    println!("released");
+    Ok(())
 }
 
 fn cmd_metrics(args: &Args) -> Result<()> {

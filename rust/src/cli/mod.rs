@@ -119,13 +119,21 @@ SUBCOMMANDS:
     query        Send one query to a running daemon and print the JSON reply
     metrics      Fetch /v1/metrics from a running daemon
     admin        Send an admin action (flush | housekeep | stats)
+    stress-idle  Hold idle keep-alive connections open against a daemon
+                 (--conns N, --hold-ms MS; probes idle-fan-in behavior)
     help         Show this message
 
 SERVE OPTIONS:
     --port <u16>             Listen port (default 8080; 0 = ephemeral)
     --bind <addr>            Bind address (default 127.0.0.1)
-    --http-workers <n>       Connection-handler threads (default 4)
+    --http-workers <n>       Request-handler threads (default 4)
     --workers <n>            Batch-pipeline worker threads (default 4)
+    --threaded-accept        Legacy blocking thread-per-connection serving
+                             (idle keep-alive connections pin workers)
+    --event-loop             Force the default epoll/poll readiness loop
+                             (e.g. over a config with http_event_loop=false)
+    --max-conns <n>          Event-loop connection cap; beyond it new
+                             connections get 503 at accept (default 1024)
     --no-batch               Serve each query in isolation instead of
                              coalescing concurrent in-flight queries
     --batch-max-size <n>     Micro-batch size cap (default 8; >= 1)

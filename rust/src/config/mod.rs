@@ -75,6 +75,15 @@ pub struct Config {
     pub workers: usize,
     /// Housekeeping cadence (TTL sweep + rebuild check), ms.
     pub housekeeping_ms: u64,
+
+    // HTTP front-end (semcached)
+    /// Serve with the epoll/poll readiness loop (default); false selects
+    /// the legacy blocking thread-per-connection path
+    /// (`--threaded-accept`).
+    pub http_event_loop: bool,
+    /// Event-loop connection cap; connections beyond it are answered
+    /// 503 at accept time.
+    pub http_max_conns: usize,
 }
 
 impl Default for Config {
@@ -104,6 +113,8 @@ impl Default for Config {
             trace_qps: 200.0,
             workers: 4,
             housekeeping_ms: 1000,
+            http_event_loop: true,
+            http_max_conns: 1024,
         }
     }
 }
@@ -193,6 +204,8 @@ impl Config {
             "trace_qps" => self.trace_qps = num!(),
             "workers" => self.workers = num!(),
             "housekeeping_ms" => self.housekeeping_ms = num!(),
+            "http_event_loop" => self.http_event_loop = num!(),
+            "http_max_conns" => self.http_max_conns = num!(),
             other => bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -222,6 +235,9 @@ impl Config {
         }
         if self.embed_memo_capacity > 0 && self.embed_memo_shards == 0 {
             bail!("embed_memo_shards must be >= 1 when the memo tier is enabled");
+        }
+        if self.http_max_conns == 0 {
+            bail!("http_max_conns must be >= 1");
         }
         Ok(())
     }
@@ -264,6 +280,20 @@ mod tests {
         assert!(c.validate().is_err(), "enabled tier needs >= 1 shard");
         c.embed_memo_capacity = 0; // disabled tier: shards irrelevant
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn http_front_end_keys_roundtrip_and_validate() {
+        let mut c = Config::default();
+        assert!(c.http_event_loop, "event loop is the default");
+        assert_eq!(c.http_max_conns, 1024);
+        c.set("http.http_event_loop", "false").unwrap();
+        c.set("http_max_conns", "64").unwrap();
+        assert!(!c.http_event_loop);
+        assert_eq!(c.http_max_conns, 64);
+        c.validate().unwrap();
+        c.http_max_conns = 0;
+        assert!(c.validate().is_err(), "a zero connection budget serves nothing");
     }
 
     #[test]

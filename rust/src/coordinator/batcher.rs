@@ -48,6 +48,14 @@
 //! dispatcher drain every already-accepted request (each submitter still
 //! gets its reply), and joins the dispatcher thread. Submitting after
 //! shutdown fails with [`SubmitError::Shutdown`].
+//!
+//! **Fan-back.** Each accepted submission carries a completion callback
+//! the dispatcher invokes exactly once with the response. Blocking
+//! callers use [`Batcher::submit`] (a one-shot channel over the
+//! callback); the event-driven HTTP front-end uses
+//! [`Batcher::submit_with`] directly, so its request workers hand the
+//! response back to the reactor as a wakeup instead of pinning a thread
+//! on a blocking `recv` for the whole dispatch.
 
 use std::collections::hash_map::Entry;
 use std::collections::HashMap;
@@ -158,11 +166,17 @@ pub trait BatchExecutor: Send + Sync + 'static {
     }
 }
 
-/// One queued request with its reply channel.
+/// How a submission's response travels back to its submitter: invoked
+/// exactly once per accepted submission (blocking `submit` wraps a
+/// one-shot channel in one; the event-loop front-end passes a reactor
+/// wakeup).
+type ReplyFn = Box<dyn FnOnce(QueryResponse) + Send>;
+
+/// One queued request with its completion callback.
 struct Submission {
     req: QueryRequest,
     enqueued: Instant,
-    reply: SyncSender<QueryResponse>,
+    reply: ReplyFn,
 }
 
 /// In-flight identity for coalescing: the text plus every option that
@@ -243,32 +257,51 @@ impl Batcher {
     /// stays an invariant of the metrics under backpressure.
     pub fn submit(&self, req: &QueryRequest) -> std::result::Result<QueryResponse, SubmitError> {
         let (reply_tx, reply_rx) = mpsc::sync_channel::<QueryResponse>(1);
-        {
-            let guard = self.tx.read().unwrap();
-            let tx = match guard.as_ref() {
-                Some(tx) => tx,
-                None => return Err(self.reject(SubmitError::Shutdown)),
-            };
-            let sub =
-                Submission { req: req.clone(), enqueued: Instant::now(), reply: reply_tx };
-            match tx.try_send(sub) {
-                // Gauge up only after the slot is truly occupied, so an
-                // observed depth of n proves n completed enqueues (the
-                // dispatcher's decrement may transiently beat this
-                // increment; the signed gauge absorbs that).
-                Ok(()) => {
-                    self.depth.fetch_add(1, Ordering::SeqCst);
-                }
-                Err(TrySendError::Full(_)) => return Err(self.reject(SubmitError::QueueFull)),
-                Err(TrySendError::Disconnected(_)) => {
-                    return Err(self.reject(SubmitError::Shutdown));
-                }
-            }
-        }
+        self.submit_with(req, move |resp| {
+            let _ = reply_tx.send(resp);
+        })?;
         // Accepted requests are always answered: the dispatcher drains
         // the queue before exiting, and if it ever dies the queue (and
-        // with it this reply sender's peer) is dropped, waking us here.
+        // with it this reply callback) is dropped, waking us here.
         reply_rx.recv().map_err(|_| SubmitError::Shutdown)
+    }
+
+    /// Enqueue one request without blocking for the response: `complete`
+    /// is invoked with the response exactly once, on the dispatcher
+    /// thread, when the dispatch that served (or coalesced) this request
+    /// finishes. On `Err` the callback is dropped un-invoked and the
+    /// rejection has already been recorded (as in [`Batcher::submit`]);
+    /// the caller answers the client itself.
+    pub fn submit_with<F>(
+        &self,
+        req: &QueryRequest,
+        complete: F,
+    ) -> std::result::Result<(), SubmitError>
+    where
+        F: FnOnce(QueryResponse) + Send + 'static,
+    {
+        let guard = self.tx.read().unwrap();
+        let tx = match guard.as_ref() {
+            Some(tx) => tx,
+            None => return Err(self.reject(SubmitError::Shutdown)),
+        };
+        let sub = Submission {
+            req: req.clone(),
+            enqueued: Instant::now(),
+            reply: Box::new(complete),
+        };
+        match tx.try_send(sub) {
+            // Gauge up only after the slot is truly occupied, so an
+            // observed depth of n proves n completed enqueues (the
+            // dispatcher's decrement may transiently beat this
+            // increment; the signed gauge absorbs that).
+            Ok(()) => {
+                self.depth.fetch_add(1, Ordering::SeqCst);
+                Ok(())
+            }
+            Err(TrySendError::Full(_)) => Err(self.reject(SubmitError::QueueFull)),
+            Err(TrySendError::Disconnected(_)) => Err(self.reject(SubmitError::Shutdown)),
+        }
     }
 
     fn reject(&self, e: SubmitError) -> SubmitError {
@@ -396,17 +429,20 @@ fn dispatch(executor: &dyn BatchExecutor, metrics: &Metrics, batch: Vec<Submissi
         }
     };
 
-    for (i, s) in batch.iter().enumerate() {
+    for (i, s) in batch.into_iter().enumerate() {
         let slot = rep_slot[i];
         let resp = if reps[slot] == i {
             responses[slot].clone()
         } else {
             metrics.record_coalesced();
-            executor.coalesce(&s.req, &batch[reps[slot]].req, &responses[slot])
+            // `unique[slot]` is the clone of this slot's representative
+            // request, so coalescing sees the same identity it grouped by.
+            executor.coalesce(&s.req, &unique[slot], &responses[slot])
         };
-        // A submitter that vanished (impossible today: submit blocks on
-        // the reply) must not wedge the dispatcher.
-        let _ = s.reply.send(resp);
+        // A panicking completion callback must not kill the dispatcher
+        // (and with it every later submitter).
+        let reply = s.reply;
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || reply(resp)));
     }
     metrics.observe_dispatch_ms(t0.elapsed().as_secs_f64() * 1e3);
 }
@@ -424,7 +460,8 @@ fn reject_all(metrics: &Metrics, batch: Vec<Submission>) {
         metrics.record_request();
         metrics.record_rejected();
         let resp = QueryResponse::rejected(&s.req, "internal error: batch executor failed");
-        let _ = s.reply.send(resp);
+        let reply = s.reply;
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || reply(resp)));
     }
 }
 
@@ -530,6 +567,28 @@ mod tests {
         assert_eq!(m.batcher_dispatches, 1);
         assert_eq!(m.batcher_queries, 1);
         assert_eq!(m.rejected, 1, "post-shutdown submit recorded as rejected");
+    }
+
+    #[test]
+    fn submit_with_invokes_callback_and_never_after_shutdown() {
+        let exec = EchoExec::new(false);
+        let b = Batcher::start(exec, Arc::new(Metrics::new()), BatchConfig::default()).unwrap();
+        let (tx, rx) = mpsc::channel::<String>();
+        b.submit_with(&QueryRequest::new("callback probe"), move |resp| {
+            let _ = tx.send(resp.response);
+        })
+        .unwrap();
+        // submit_with returns before the response exists; the callback
+        // delivers it from the dispatcher thread.
+        let got = rx.recv_timeout(Duration::from_secs(5)).expect("callback fired");
+        assert_eq!(got, "callback probe");
+        b.shutdown();
+        let err = b
+            .submit_with(&QueryRequest::new("too late"), |_| {
+                panic!("callback must not run for a rejected submit")
+            })
+            .unwrap_err();
+        assert_eq!(err, SubmitError::Shutdown);
     }
 
     #[test]

@@ -1,12 +1,23 @@
 //! Zero-dependency HTTP/1.1 front-end for the typed serving API.
 //!
-//! A small `std::net::TcpListener` daemon in the spirit of the paper's
-//! "semantic cache as a web service in front of the LLM API": one accept
-//! thread feeds a fixed pool of connection workers (the same worker-pool
-//! pattern as the batch serving pipeline), each speaking just enough
-//! HTTP/1.1 for JSON request/response bodies with keep-alive. The wire
-//! format is the [`crate::api`] types via the in-tree [`crate::json`]
-//! codec — no external crates anywhere.
+//! The wire format is the [`crate::api`] types via the in-tree
+//! [`crate::json`] codec — no external crates anywhere. Two serving
+//! modes share one protocol implementation (the incremental
+//! [`RequestParser`] state machine below):
+//!
+//! * **Event loop (default).** A single reactor thread watches every
+//!   connection with `epoll` (portable `poll(2)` fallback) via
+//!   [`crate::util::poll`]; sockets are nonblocking, requests are parsed
+//!   incrementally as bytes arrive, responses resume across partial
+//!   writes, and a small worker pool receives only *complete* parsed
+//!   requests. Thousands of idle keep-alive connections cost one fd
+//!   each — no pinned threads (see [`super::reactor`]).
+//! * **Threaded accept** (`HttpConfig::event_loop = false`, the
+//!   `--threaded-accept` escape hatch). The pre-ISSUE-5 design: one
+//!   accept thread feeds a fixed pool of blocking connection workers.
+//!   Simple and debuggable, but an idle keep-alive connection pins its
+//!   worker until `read_timeout` — it starves under idle fan-in
+//!   (demonstrated by `tests/http_protocol.rs`).
 //!
 //! Endpoints (all JSON):
 //!
@@ -20,23 +31,20 @@
 //!
 //! Malformed input is answered with 4xx JSON errors (`{"error": ...}`),
 //! never a panic or dropped connection: bad JSON and bad fields are 400,
-//! unknown paths 404, wrong methods 405, oversized bodies 413. A panic
-//! escaping a handler is caught so the worker pool never shrinks.
+//! unknown paths 404, wrong methods 405, oversized bodies 413, oversized
+//! request/header lines 431. Pipelined requests on one connection are
+//! served in order in both modes. A panic escaping a handler is caught
+//! so the worker pool never shrinks.
 //!
 //! By default (`HttpConfig::batching`) `POST /v1/query` routes through
 //! the cross-request micro-batching engine ([`super::batcher`]):
 //! concurrent in-flight queries from different connections are coalesced
 //! into single `serve_batch` calls, identical in-flight queries are
 //! answered once, and a full submit queue is answered `503 Service
-//! Unavailable` with an `Outcome::Rejected` body (backpressure).
-//! `/v1/query_batch` already carries a batch and keeps calling
-//! `serve_batch` directly.
-//!
-//! Scale limitation (tracked in ROADMAP): this is blocking
-//! thread-per-connection serving — an idle keep-alive connection pins
-//! its worker until `read_timeout`, and accepted connections beyond the
-//! pool wait in a bounded queue (accepting blocks when it fills). An
-//! async/epoll accept path is the planned next step for heavy fan-in.
+//! Unavailable` with an `Outcome::Rejected` body (backpressure). In
+//! event-loop mode the batcher's response comes back as a reactor wakeup
+//! ([`super::batcher::Batcher::submit_with`]), so a request waiting on a
+//! dispatch occupies no thread at all.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -59,12 +67,14 @@ pub struct HttpConfig {
     /// Bind address; port 0 picks an ephemeral port (see
     /// [`HttpHandle::local_addr`]).
     pub addr: String,
-    /// Connection-handler threads.
+    /// Request-handler threads. In event-loop mode these receive only
+    /// complete parsed requests; in threaded-accept mode each owns one
+    /// connection at a time.
     pub workers: usize,
     /// Request bodies beyond this answer 413.
     pub max_body_bytes: usize,
-    /// Per-read socket timeout; an idle keep-alive connection is closed
-    /// after this long.
+    /// Idle-connection timeout: a keep-alive connection with no complete
+    /// request for this long is closed (mid-request stalls answer 408).
     pub read_timeout: Duration,
     /// Route `POST /v1/query` through the cross-request micro-batching
     /// engine ([`super::batcher`], window policy from
@@ -73,6 +83,19 @@ pub struct HttpConfig {
     /// `Outcome::Rejected` body instead of waiting. `false` serves every
     /// request as an isolated `serve()` call (the pre-batching path).
     pub batching: bool,
+    /// Serve with the epoll/poll readiness loop (default). `false`
+    /// selects the legacy blocking thread-per-connection design
+    /// (`semcached serve --threaded-accept`). On non-unix targets the
+    /// threaded path is always used.
+    pub event_loop: bool,
+    /// Event-loop mode only: connections beyond this are answered `503`
+    /// and closed at accept time instead of growing the fd table
+    /// without bound.
+    pub max_conns: usize,
+    /// Event-loop mode only: force the portable `poll(2)` backend even
+    /// where epoll is available (the macOS/CI code path; also lets Linux
+    /// CI exercise the fallback).
+    pub poll_fallback: bool,
 }
 
 impl Default for HttpConfig {
@@ -83,6 +106,9 @@ impl Default for HttpConfig {
             max_body_bytes: 1 << 20,
             read_timeout: Duration::from_secs(10),
             batching: true,
+            event_loop: true,
+            max_conns: 1024,
+            poll_fallback: false,
         }
     }
 }
@@ -94,15 +120,47 @@ pub fn serve_http(server: Arc<Server>, cfg: HttpConfig) -> Result<HttpHandle> {
     let listener =
         TcpListener::bind(&cfg.addr).with_context(|| format!("binding {}", cfg.addr))?;
     let addr = listener.local_addr().context("reading bound address")?;
+    // The batcher (when enabled) is shared by every request worker; it
+    // is shut down by the handle after the workers have drained.
+    let batcher = if cfg.batching { Some(server.start_batcher()?) } else { None };
+
+    #[cfg(unix)]
+    {
+        if cfg.event_loop {
+            let handle = super::reactor::serve_event_loop(
+                server,
+                batcher.clone(),
+                listener,
+                super::reactor::ReactorConfig {
+                    workers: cfg.workers.max(1),
+                    max_body: cfg.max_body_bytes,
+                    max_conns: cfg.max_conns.max(1),
+                    read_timeout: cfg.read_timeout,
+                    poll_fallback: cfg.poll_fallback,
+                },
+            )?;
+            return Ok(HttpHandle { addr, batcher, inner: HandleInner::Event(Some(handle)) });
+        }
+    }
+
+    serve_threaded(server, cfg, listener, addr, batcher)
+}
+
+/// The legacy blocking accept-thread + connection-worker-pool front-end
+/// (and the only mode on non-unix targets).
+fn serve_threaded(
+    server: Arc<Server>,
+    cfg: HttpConfig,
+    listener: TcpListener,
+    addr: SocketAddr,
+    batcher: Option<Arc<Batcher>>,
+) -> Result<HttpHandle> {
     let stop = Arc::new(AtomicBool::new(false));
     // Bounded hand-off queue: when every worker is busy and the queue is
     // full, the accept thread blocks (backpressure) instead of buffering
     // connections without limit.
     let (tx, rx) = mpsc::sync_channel::<TcpStream>(128);
     let rx = Arc::new(Mutex::new(rx));
-    // The batcher (when enabled) is shared by every connection worker;
-    // it is shut down by the handle after the workers have drained.
-    let batcher = if cfg.batching { Some(server.start_batcher()?) } else { None };
 
     let mut workers = Vec::with_capacity(cfg.workers.max(1));
     for w in 0..cfg.workers.max(1) {
@@ -125,11 +183,14 @@ pub fn serve_http(server: Arc<Server>, cfg: HttpConfig) -> Result<HttpHandle> {
                 };
                 let _ = stream.set_read_timeout(Some(read_timeout));
                 let _ = stream.set_nodelay(true);
+                let metrics = server.metrics();
+                metrics.record_conn_open();
                 // A panicking handler must not shrink the fixed pool:
                 // catch, drop the connection, keep serving.
                 let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                     handle_connection(&server, batcher.as_deref(), stream, max_body, &stop);
                 }));
+                metrics.record_conn_closed();
                 if outcome.is_err() {
                     eprintln!("[semcached] connection handler panicked; worker recovered");
                 }
@@ -167,16 +228,28 @@ pub fn serve_http(server: Arc<Server>, cfg: HttpConfig) -> Result<HttpHandle> {
         })
         .expect("spawn http accept");
 
-    Ok(HttpHandle { addr, stop, accept: Some(accept), workers, batcher })
+    Ok(HttpHandle {
+        addr,
+        batcher,
+        inner: HandleInner::Threaded { stop, accept: Some(accept), workers },
+    })
 }
 
 /// Owns the front-end's threads; shuts them down on `shutdown` or drop.
 pub struct HttpHandle {
     addr: SocketAddr,
-    stop: Arc<AtomicBool>,
-    accept: Option<JoinHandle<()>>,
-    workers: Vec<JoinHandle<()>>,
     batcher: Option<Arc<Batcher>>,
+    inner: HandleInner,
+}
+
+enum HandleInner {
+    Threaded {
+        stop: Arc<AtomicBool>,
+        accept: Option<JoinHandle<()>>,
+        workers: Vec<JoinHandle<()>>,
+    },
+    #[cfg(unix)]
+    Event(Option<super::reactor::EventLoopHandle>),
 }
 
 impl HttpHandle {
@@ -192,21 +265,32 @@ impl HttpHandle {
     }
 
     fn stop_threads(&mut self) {
-        if self.stop.swap(true, Ordering::SeqCst) {
-            return;
+        let addr = self.addr;
+        match &mut self.inner {
+            HandleInner::Threaded { stop, accept, workers } => {
+                if !stop.swap(true, Ordering::SeqCst) {
+                    // Wake the accept loop with a throwaway connection.
+                    // Workers observe the stop flag after their in-flight
+                    // request, so the join below waits at most one
+                    // request + read_timeout per still-open keep-alive
+                    // connection.
+                    let _ = TcpStream::connect(addr);
+                    if let Some(h) = accept.take() {
+                        let _ = h.join();
+                    }
+                    for h in workers.drain(..) {
+                        let _ = h.join();
+                    }
+                }
+            }
+            #[cfg(unix)]
+            HandleInner::Event(handle) => {
+                if let Some(mut h) = handle.take() {
+                    h.shutdown();
+                }
+            }
         }
-        // Wake the accept loop with a throwaway connection. Workers
-        // observe the stop flag after their in-flight request, so the
-        // join below waits at most one request + read_timeout per
-        // still-open keep-alive connection.
-        let _ = TcpStream::connect(self.addr);
-        if let Some(h) = self.accept.take() {
-            let _ = h.join();
-        }
-        for h in self.workers.drain(..) {
-            let _ = h.join();
-        }
-        // Only after every connection worker has drained (no more
+        // Only after every request worker has drained (no more
         // submitters) is it safe to stop the dispatcher.
         if let Some(b) = self.batcher.take() {
             b.shutdown();
@@ -221,11 +305,11 @@ impl Drop for HttpHandle {
 }
 
 /// One parsed request.
-struct HttpRequest {
-    method: String,
-    path: String,
-    body: Vec<u8>,
-    keep_alive: bool,
+pub(super) struct HttpRequest {
+    pub(super) method: String,
+    pub(super) path: String,
+    pub(super) body: Vec<u8>,
+    pub(super) keep_alive: bool,
 }
 
 /// One response about to be written.
@@ -237,11 +321,11 @@ pub struct HttpResponse {
 }
 
 impl HttpResponse {
-    fn json(status: u16, v: &Value) -> Self {
+    pub(super) fn json(status: u16, v: &Value) -> Self {
         Self { status, body: v.to_string() }
     }
 
-    fn error(status: u16, msg: &str) -> Self {
+    pub(super) fn error(status: u16, msg: &str) -> Self {
         Self::json(status, &obj([("error", msg.into())]))
     }
 }
@@ -262,6 +346,329 @@ fn status_text(status: u16) -> &'static str {
     }
 }
 
+// ---------------------------------------------------------------------
+// Incremental request parsing (shared by both serving modes).
+// ---------------------------------------------------------------------
+
+/// Longest accepted request/header line, bytes (8 KB, nginx's default).
+const MAX_LINE_BYTES: u64 = 8 * 1024;
+/// Cap on the total size of one request's header section.
+const MAX_HEADER_BYTES: usize = 16 * 1024;
+
+/// What [`RequestParser::next_step`] produced.
+pub(super) enum ParseStep {
+    /// The buffered bytes don't complete a request yet; feed more via
+    /// [`RequestParser::push`].
+    NeedMore,
+    /// One complete request (leftover pipelined bytes stay buffered).
+    Request(HttpRequest),
+    /// Protocol violation: write this 4xx/5xx and close the connection.
+    Error(HttpResponse),
+    /// Clean close (EOF or a bare newline at a request boundary).
+    Close,
+}
+
+/// Where the parser currently is, for driver-side timeout/EOF mapping.
+pub(super) enum ParsePhase {
+    /// At a request boundary with nothing buffered (an idle keep-alive
+    /// connection).
+    Idle,
+    /// A partial request line is buffered.
+    RequestLine,
+    Headers,
+    Body,
+}
+
+enum ParseState {
+    RequestLine,
+    Headers,
+    Body,
+    /// The declared body exceeds `max_body`: consume (a bounded amount
+    /// of) it so the client can finish writing and read the 413 instead
+    /// of a reset connection, then fail.
+    Drain { remaining: usize },
+}
+
+enum LineResult {
+    Line(String, usize),
+    NeedMore,
+    TooLong,
+}
+
+/// Incremental HTTP/1.1 request parser: a per-connection state machine
+/// fed arbitrary byte chunks. Both the event loop (nonblocking reads)
+/// and the threaded path (blocking chunked reads) drive the same
+/// machine, so framing/limit semantics cannot diverge between modes.
+pub(super) struct RequestParser {
+    max_body: usize,
+    buf: Vec<u8>,
+    /// Consumed offset into `buf` (compacted opportunistically).
+    pos: usize,
+    state: ParseState,
+    method: String,
+    path: String,
+    keep_alive: bool,
+    content_length: usize,
+    header_bytes: usize,
+}
+
+impl RequestParser {
+    pub(super) fn new(max_body: usize) -> Self {
+        Self {
+            max_body,
+            buf: Vec::new(),
+            pos: 0,
+            state: ParseState::RequestLine,
+            method: String::new(),
+            path: String::new(),
+            keep_alive: true,
+            content_length: 0,
+            header_bytes: 0,
+        }
+    }
+
+    /// Feed bytes read off the socket.
+    pub(super) fn push(&mut self, bytes: &[u8]) {
+        self.compact();
+        self.buf.extend_from_slice(bytes);
+    }
+
+    fn compact(&mut self) {
+        if self.pos == 0 {
+            return;
+        }
+        if self.pos >= self.buf.len() {
+            self.buf.clear();
+            self.pos = 0;
+        } else if self.pos > 4096 {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+    }
+
+    pub(super) fn phase(&self) -> ParsePhase {
+        match self.state {
+            ParseState::RequestLine => {
+                if self.pos >= self.buf.len() {
+                    ParsePhase::Idle
+                } else {
+                    ParsePhase::RequestLine
+                }
+            }
+            ParseState::Headers => ParsePhase::Headers,
+            ParseState::Body | ParseState::Drain { .. } => ParsePhase::Body,
+        }
+    }
+
+    /// True when un-consumed bytes are buffered (pipelined input the
+    /// driver should parse without waiting for another read).
+    pub(super) fn has_buffered(&self) -> bool {
+        self.pos < self.buf.len()
+    }
+
+    /// The response owed to a peer that stalled mid-request past the
+    /// driver's timeout. `None` = at (or before) a request boundary:
+    /// close silently, like an idle keep-alive connection. Shared by
+    /// the blocking driver's read-timeout path and the reactor's idle
+    /// sweep so the two modes cannot diverge. A stall while draining an
+    /// over-limit body still reports 413 — the request's real problem —
+    /// not a truncation it never had.
+    pub(super) fn stall_response(&self) -> Option<HttpResponse> {
+        match self.state {
+            ParseState::RequestLine => None,
+            ParseState::Headers => Some(HttpResponse::error(408, "timed out reading headers")),
+            ParseState::Body => Some(HttpResponse::error(400, "truncated request body")),
+            ParseState::Drain { .. } => Some(self.oversized()),
+        }
+    }
+
+    fn take_line(&mut self) -> LineResult {
+        let avail = &self.buf[self.pos..];
+        match avail.iter().position(|&b| b == b'\n') {
+            Some(i) if (i as u64) < MAX_LINE_BYTES => {
+                let line = String::from_utf8_lossy(&avail[..i]).trim_end().to_string();
+                self.pos += i + 1;
+                LineResult::Line(line, i + 1)
+            }
+            Some(_) => LineResult::TooLong,
+            None if avail.len() as u64 >= MAX_LINE_BYTES => LineResult::TooLong,
+            None => LineResult::NeedMore,
+        }
+    }
+
+    fn oversized(&self) -> HttpResponse {
+        HttpResponse::error(
+            413,
+            &format!(
+                "body of {} bytes exceeds the {}-byte limit",
+                self.content_length, self.max_body
+            ),
+        )
+    }
+
+    /// Parse one request line. `Ok(false)` = empty line at a request
+    /// boundary (clean close, mirroring the blocking reader).
+    fn begin_request(&mut self, line: &str) -> std::result::Result<bool, HttpResponse> {
+        if line.is_empty() {
+            return Ok(false);
+        }
+        let mut parts = line.split_whitespace();
+        let method = parts.next().unwrap_or("").to_string();
+        let path = parts.next().unwrap_or("").to_string();
+        let version = parts.next().unwrap_or("");
+        if method.is_empty() || path.is_empty() || !version.starts_with("HTTP/1.") {
+            return Err(HttpResponse::error(400, "malformed request line"));
+        }
+        self.keep_alive = version != "HTTP/1.0";
+        self.method = method;
+        self.path = path;
+        self.content_length = 0;
+        self.header_bytes = 0;
+        self.state = ParseState::Headers;
+        Ok(true)
+    }
+
+    fn header_line(&mut self, line: &str) -> std::result::Result<(), HttpResponse> {
+        if let Some((k, v)) = line.split_once(':') {
+            let v = v.trim();
+            match k.trim().to_ascii_lowercase().as_str() {
+                "content-length" => {
+                    self.content_length = v
+                        .parse()
+                        .map_err(|_| HttpResponse::error(400, "bad content-length"))?;
+                }
+                "connection" => {
+                    if v.eq_ignore_ascii_case("close") {
+                        self.keep_alive = false;
+                    } else if v.eq_ignore_ascii_case("keep-alive") {
+                        self.keep_alive = true;
+                    }
+                }
+                "transfer-encoding" => {
+                    return Err(HttpResponse::error(501, "chunked bodies not supported"));
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// Advance the state machine as far as the buffered bytes allow.
+    pub(super) fn next_step(&mut self) -> ParseStep {
+        loop {
+            match self.state {
+                ParseState::RequestLine => {
+                    let line = match self.take_line() {
+                        LineResult::NeedMore => return ParseStep::NeedMore,
+                        LineResult::TooLong => {
+                            return ParseStep::Error(HttpResponse::error(
+                                431,
+                                "request line too long",
+                            ));
+                        }
+                        LineResult::Line(l, _) => l,
+                    };
+                    match self.begin_request(&line) {
+                        Ok(true) => {}
+                        Ok(false) => return ParseStep::Close,
+                        Err(resp) => return ParseStep::Error(resp),
+                    }
+                }
+                ParseState::Headers => {
+                    let (line, n) = match self.take_line() {
+                        LineResult::NeedMore => return ParseStep::NeedMore,
+                        LineResult::TooLong => {
+                            return ParseStep::Error(HttpResponse::error(
+                                431,
+                                "header line too long",
+                            ));
+                        }
+                        LineResult::Line(l, n) => (l, n),
+                    };
+                    self.header_bytes += n;
+                    if self.header_bytes > MAX_HEADER_BYTES {
+                        return ParseStep::Error(HttpResponse::error(431, "headers too large"));
+                    }
+                    if line.is_empty() {
+                        if self.content_length > self.max_body {
+                            self.state = ParseState::Drain {
+                                remaining: self.content_length.min(4 * self.max_body.max(1)),
+                            };
+                        } else {
+                            self.state = ParseState::Body;
+                        }
+                        continue;
+                    }
+                    if let Err(resp) = self.header_line(&line) {
+                        return ParseStep::Error(resp);
+                    }
+                }
+                ParseState::Body => {
+                    if self.buf.len() - self.pos < self.content_length {
+                        return ParseStep::NeedMore;
+                    }
+                    let body = self.buf[self.pos..self.pos + self.content_length].to_vec();
+                    self.pos += self.content_length;
+                    let req = HttpRequest {
+                        method: std::mem::take(&mut self.method),
+                        path: std::mem::take(&mut self.path),
+                        body,
+                        keep_alive: self.keep_alive,
+                    };
+                    self.state = ParseState::RequestLine;
+                    self.compact();
+                    return ParseStep::Request(req);
+                }
+                ParseState::Drain { remaining } => {
+                    let take = (self.buf.len() - self.pos).min(remaining);
+                    self.pos += take;
+                    self.compact();
+                    if remaining - take == 0 {
+                        return ParseStep::Error(self.oversized());
+                    }
+                    self.state = ParseState::Drain { remaining: remaining - take };
+                    return ParseStep::NeedMore;
+                }
+            }
+        }
+    }
+
+    /// The peer closed its write side: resolve whatever is buffered.
+    /// Mirrors the blocking reader's EOF handling (partial request line
+    /// parsed as-is, mid-headers/mid-body answered 400, an oversized
+    /// body cut short still answered 413).
+    pub(super) fn finish_eof(&mut self) -> ParseStep {
+        match self.state {
+            ParseState::RequestLine => {
+                if self.pos >= self.buf.len() {
+                    return ParseStep::Close;
+                }
+                let line =
+                    String::from_utf8_lossy(&self.buf[self.pos..]).trim_end().to_string();
+                self.pos = self.buf.len();
+                match self.begin_request(&line) {
+                    Ok(false) => ParseStep::Close,
+                    Ok(true) => {
+                        ParseStep::Error(HttpResponse::error(400, "connection closed mid-headers"))
+                    }
+                    Err(resp) => ParseStep::Error(resp),
+                }
+            }
+            ParseState::Headers => {
+                ParseStep::Error(HttpResponse::error(400, "connection closed mid-headers"))
+            }
+            ParseState::Body => {
+                ParseStep::Error(HttpResponse::error(400, "truncated request body"))
+            }
+            ParseState::Drain { .. } => ParseStep::Error(self.oversized()),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Blocking (threaded-accept) connection driver.
+// ---------------------------------------------------------------------
+
 /// Serve one connection: parse → route → respond, looping while the
 /// client keeps the connection alive (and the front-end is not
 /// shutting down).
@@ -272,18 +679,14 @@ fn handle_connection(
     max_body: usize,
     stop: &AtomicBool,
 ) {
-    let reader_stream = match stream.try_clone() {
-        Ok(s) => s,
-        Err(_) => return,
-    };
-    let mut reader = BufReader::new(reader_stream);
-    let mut writer = stream;
+    let mut stream = stream;
+    let mut parser = RequestParser::new(max_body);
     loop {
-        match read_request(&mut reader, max_body) {
+        match next_request(&mut stream, &mut parser) {
             Ok(Some(req)) => {
                 let keep_alive = req.keep_alive;
                 let resp = route(server, batcher, &req);
-                if write_response(&mut writer, &resp, keep_alive).is_err()
+                if write_response(&mut stream, &resp, keep_alive).is_err()
                     || !keep_alive
                     || stop.load(Ordering::SeqCst)
                 {
@@ -297,126 +700,66 @@ fn handle_connection(
                 let metrics = server.metrics();
                 metrics.record_http_request();
                 metrics.record_http_error();
-                let _ = write_response(&mut writer, &resp, false);
+                let _ = write_response(&mut stream, &resp, false);
                 return;
             }
         }
     }
 }
 
-/// Longest accepted request/header line, bytes (8 KB, nginx's default).
-const MAX_LINE_BYTES: u64 = 8 * 1024;
-
-/// Read one `\n`-terminated line without letting a newline-less client
-/// grow the buffer past [`MAX_LINE_BYTES`]. Returns the byte count read
-/// (0 = EOF); an over-long line is `ErrorKind::InvalidData`.
-fn read_line_bounded(
-    reader: &mut BufReader<TcpStream>,
-    line: &mut String,
-) -> std::io::Result<usize> {
-    let n = reader.by_ref().take(MAX_LINE_BYTES).read_line(line)?;
-    if n as u64 == MAX_LINE_BYTES && !line.ends_with('\n') {
-        return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "line too long"));
-    }
-    Ok(n)
-}
-
-/// Read one request. `Ok(None)` = the client closed (or went idle past
+/// Read one request with blocking chunked reads through the shared
+/// incremental parser. `Ok(None)` = the client closed (or went idle past
 /// the read timeout) between requests; `Err` carries the 4xx to send
 /// before closing.
-fn read_request(
-    reader: &mut BufReader<TcpStream>,
-    max_body: usize,
+fn next_request(
+    stream: &mut TcpStream,
+    parser: &mut RequestParser,
 ) -> std::result::Result<Option<HttpRequest>, HttpResponse> {
-    let mut line = String::new();
-    match read_line_bounded(reader, &mut line) {
-        Ok(0) => return Ok(None),
-        Ok(_) => {}
-        Err(e) if e.kind() == std::io::ErrorKind::InvalidData => {
-            return Err(HttpResponse::error(431, "request line too long"));
-        }
-        Err(_) => return Ok(None), // timeout/reset before a request started
-    }
-    let line = line.trim_end();
-    if line.is_empty() {
-        return Ok(None);
-    }
-    let mut parts = line.split_whitespace();
-    let method = parts.next().unwrap_or("").to_string();
-    let path = parts.next().unwrap_or("").to_string();
-    let version = parts.next().unwrap_or("");
-    if method.is_empty() || path.is_empty() || !version.starts_with("HTTP/1.") {
-        return Err(HttpResponse::error(400, "malformed request line"));
-    }
-    let mut keep_alive = version != "HTTP/1.0";
-    let mut content_length: usize = 0;
-    let mut header_bytes = 0usize;
     loop {
-        let mut h = String::new();
-        match read_line_bounded(reader, &mut h) {
-            Ok(0) => return Err(HttpResponse::error(400, "connection closed mid-headers")),
-            Ok(n) => header_bytes += n,
-            Err(e) if e.kind() == std::io::ErrorKind::InvalidData => {
-                return Err(HttpResponse::error(431, "header line too long"));
+        match parser.next_step() {
+            ParseStep::Request(r) => return Ok(Some(r)),
+            ParseStep::Close => return Ok(None),
+            ParseStep::Error(resp) => return Err(resp),
+            ParseStep::NeedMore => {}
+        }
+        let mut chunk = [0u8; 8192];
+        match stream.read(&mut chunk) {
+            Ok(0) => {
+                return match parser.finish_eof() {
+                    ParseStep::Request(r) => Ok(Some(r)),
+                    ParseStep::Error(resp) => Err(resp),
+                    ParseStep::Close | ParseStep::NeedMore => Ok(None),
+                };
             }
-            Err(_) => return Err(HttpResponse::error(408, "timed out reading headers")),
-        }
-        if header_bytes > 16 * 1024 {
-            return Err(HttpResponse::error(431, "headers too large"));
-        }
-        let h = h.trim_end();
-        if h.is_empty() {
-            break;
-        }
-        if let Some((k, v)) = h.split_once(':') {
-            let v = v.trim();
-            match k.trim().to_ascii_lowercase().as_str() {
-                "content-length" => {
-                    content_length = v
-                        .parse()
-                        .map_err(|_| HttpResponse::error(400, "bad content-length"))?;
-                }
-                "connection" => {
-                    if v.eq_ignore_ascii_case("close") {
-                        keep_alive = false;
-                    } else if v.eq_ignore_ascii_case("keep-alive") {
-                        keep_alive = true;
-                    }
-                }
-                "transfer-encoding" => {
-                    return Err(HttpResponse::error(501, "chunked bodies not supported"));
-                }
-                _ => {}
+            Ok(n) => parser.push(&chunk[..n]),
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                // Read timeout: an idle keep-alive connection (or one
+                // that never finished its request line) closes quietly;
+                // a stall mid-request is answered.
+                return match parser.stall_response() {
+                    None => Ok(None),
+                    Some(resp) => Err(resp),
+                };
             }
+            Err(_) => return Ok(None), // reset mid-request
         }
     }
-    if content_length > max_body {
-        // Drain a bounded amount of the body so the client can finish
-        // writing and read the 413 instead of seeing a reset connection.
-        let mut remaining = content_length.min(4 * max_body.max(1));
-        let mut sink = [0u8; 8192];
-        while remaining > 0 {
-            let n = sink.len().min(remaining);
-            if reader.read_exact(&mut sink[..n]).is_err() {
-                break;
-            }
-            remaining -= n;
-        }
-        return Err(HttpResponse::error(
-            413,
-            &format!("body of {content_length} bytes exceeds the {max_body}-byte limit"),
-        ));
-    }
-    let mut body = vec![0u8; content_length];
-    if content_length > 0 {
-        reader
-            .read_exact(&mut body)
-            .map_err(|_| HttpResponse::error(400, "truncated request body"))?;
-    }
-    Ok(Some(HttpRequest { method, path, body, keep_alive }))
 }
 
-fn write_response(w: &mut TcpStream, resp: &HttpResponse, keep_alive: bool) -> std::io::Result<()> {
+// ---------------------------------------------------------------------
+// Response writing.
+// ---------------------------------------------------------------------
+
+/// Serialize head + body into one buffer (a single write syscall in the
+/// common case; the event loop resumes from any offset on partial
+/// writes).
+pub(super) fn serialize_response(resp: &HttpResponse, keep_alive: bool) -> Vec<u8> {
     let head = format!(
         "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
         resp.status,
@@ -424,16 +767,87 @@ fn write_response(w: &mut TcpStream, resp: &HttpResponse, keep_alive: bool) -> s
         resp.body.len(),
         if keep_alive { "keep-alive" } else { "close" },
     );
-    w.write_all(head.as_bytes())?;
-    w.write_all(resp.body.as_bytes())?;
+    let mut out = Vec::with_capacity(head.len() + resp.body.len());
+    out.extend_from_slice(head.as_bytes());
+    out.extend_from_slice(resp.body.as_bytes());
+    out
+}
+
+/// Write a whole response, resuming across short writes, `EINTR`, and
+/// `EWOULDBLOCK` (a socket with a tiny send buffer, a write timeout, or
+/// nonblocking mode must not lose the response tail — regression-tested
+/// with a tiny-`SO_SNDBUF` socket in `tests/http_protocol.rs`).
+pub fn write_response(
+    w: &mut TcpStream,
+    resp: &HttpResponse,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let bytes = serialize_response(resp, keep_alive);
+    write_all_resumable(w, &bytes)?;
     w.flush()
 }
 
-/// Dispatch one parsed request to the typed API.
-fn route(server: &Arc<Server>, batcher: Option<&Batcher>, req: &HttpRequest) -> HttpResponse {
+fn write_all_resumable(w: &mut TcpStream, mut buf: &[u8]) -> std::io::Result<()> {
+    // Bound the total time spent retrying a never-draining socket so a
+    // dead peer cannot pin a connection worker forever.
+    let mut stalled_ms = 0u64;
+    while !buf.is_empty() {
+        match w.write(buf) {
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::WriteZero,
+                    "socket accepted 0 bytes",
+                ));
+            }
+            Ok(n) => {
+                buf = &buf[n..];
+                stalled_ms = 0;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                stalled_ms += 1;
+                if stalled_ms > 20_000 {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::TimedOut,
+                        "peer stopped draining the response",
+                    ));
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Routing (shared by both serving modes).
+// ---------------------------------------------------------------------
+
+/// First routing stage: everything except a batched `/v1/query` resolves
+/// to a ready response on the calling thread; a batched query is handed
+/// back so the driver chooses blocking submit (threaded mode) or a
+/// completion callback (event loop).
+pub(super) enum Routed {
+    Ready(HttpResponse),
+    BatchedQuery(QueryRequest),
+}
+
+/// Dispatch one parsed request to the typed API. Records
+/// `http_requests` (and `http_errors` for every ready response ≥ 400).
+pub(super) fn route_begin(server: &Arc<Server>, batched: bool, req: &HttpRequest) -> Routed {
     server.metrics().record_http_request();
     let resp = match (req.method.as_str(), req.path.as_str()) {
-        ("POST", "/v1/query") => post_query(server, batcher, &req.body),
+        ("POST", "/v1/query") => match parse_query_request(&req.body) {
+            Ok(q) if batched => return Routed::BatchedQuery(q),
+            Ok(q) => HttpResponse::json(200, &server.serve(&q).to_json()),
+            Err(resp) => resp,
+        },
         ("POST", "/v1/query_batch") => post_query_batch(server, &req.body),
         ("POST", "/v1/admin") => post_admin(server, &req.body),
         ("GET", "/v1/metrics") => HttpResponse::json(200, &server.stats_json()),
@@ -446,7 +860,33 @@ fn route(server: &Arc<Server>, batcher: Option<&Batcher>, req: &HttpRequest) -> 
     if resp.status >= 400 {
         server.metrics().record_http_error();
     }
-    resp
+    Routed::Ready(resp)
+}
+
+/// A rejected batcher submit (full queue / shutdown): backpressure, not
+/// an error in the request — answer 503 with a typed `Rejected` body so
+/// clients can tell "overloaded, retry" from a 4xx.
+pub(super) fn rejected_submit_response(
+    server: &Arc<Server>,
+    q: &QueryRequest,
+    err: &super::batcher::SubmitError,
+) -> HttpResponse {
+    server.metrics().record_http_error();
+    HttpResponse::json(503, &QueryResponse::rejected(q, err.to_string()).to_json())
+}
+
+/// Threaded-mode completion of a batched query: block on the dispatch.
+fn route(server: &Arc<Server>, batcher: Option<&Batcher>, req: &HttpRequest) -> HttpResponse {
+    match route_begin(server, batcher.is_some(), req) {
+        Routed::Ready(resp) => resp,
+        Routed::BatchedQuery(q) => {
+            let b = batcher.expect("batched route without a batcher");
+            match b.submit(&q) {
+                Ok(resp) => HttpResponse::json(200, &resp.to_json()),
+                Err(e) => rejected_submit_response(server, &q, &e),
+            }
+        }
+    }
 }
 
 fn parse_body(body: &[u8]) -> std::result::Result<Value, HttpResponse> {
@@ -455,28 +895,9 @@ fn parse_body(body: &[u8]) -> std::result::Result<Value, HttpResponse> {
     json::parse(text).map_err(|e| HttpResponse::error(400, &format!("invalid JSON: {e}")))
 }
 
-fn post_query(server: &Arc<Server>, batcher: Option<&Batcher>, body: &[u8]) -> HttpResponse {
-    let v = match parse_body(body) {
-        Ok(v) => v,
-        Err(resp) => return resp,
-    };
-    let req = match QueryRequest::from_json(&v) {
-        Ok(r) => r,
-        Err(e) => return HttpResponse::error(400, &format!("{e:#}")),
-    };
-    match batcher {
-        // The batched hot path: coalesce with whatever else is in
-        // flight. A full queue is backpressure, not an error in the
-        // request — answer 503 with a typed `Rejected` body so clients
-        // can tell "overloaded, retry" from a 4xx.
-        Some(b) => match b.submit(&req) {
-            Ok(resp) => HttpResponse::json(200, &resp.to_json()),
-            Err(e) => {
-                HttpResponse::json(503, &QueryResponse::rejected(&req, e.to_string()).to_json())
-            }
-        },
-        None => HttpResponse::json(200, &server.serve(&req).to_json()),
-    }
+fn parse_query_request(body: &[u8]) -> std::result::Result<QueryRequest, HttpResponse> {
+    let v = parse_body(body)?;
+    QueryRequest::from_json(&v).map_err(|e| HttpResponse::error(400, &format!("{e:#}")))
 }
 
 fn post_query_batch(server: &Arc<Server>, body: &[u8]) -> HttpResponse {
@@ -591,5 +1012,183 @@ mod tests {
         assert_eq!(r.status, 400);
         let v = json::parse(&r.body).unwrap();
         assert_eq!(v.get("error").as_str(), Some("nope"));
+    }
+
+    // ---------- incremental parser ----------
+
+    fn step_err(p: &mut RequestParser) -> HttpResponse {
+        match p.next_step() {
+            ParseStep::Error(resp) => resp,
+            _ => panic!("expected a parse error"),
+        }
+    }
+
+    #[test]
+    fn parser_handles_byte_at_a_time_delivery() {
+        let raw = b"POST /v1/query HTTP/1.1\r\nContent-Length: 4\r\n\r\nbody";
+        let mut p = RequestParser::new(1024);
+        for (i, b) in raw.iter().enumerate() {
+            match p.next_step() {
+                ParseStep::NeedMore => {}
+                _ => panic!("complete result before byte {i}"),
+            }
+            p.push(&[*b]);
+        }
+        match p.next_step() {
+            ParseStep::Request(req) => {
+                assert_eq!(req.method, "POST");
+                assert_eq!(req.path, "/v1/query");
+                assert_eq!(req.body, b"body");
+                assert!(req.keep_alive);
+            }
+            _ => panic!("expected a complete request"),
+        }
+        assert!(!p.has_buffered());
+        assert!(matches!(p.phase(), ParsePhase::Idle));
+    }
+
+    #[test]
+    fn parser_yields_pipelined_requests_in_order() {
+        let raw = b"POST /a HTTP/1.1\r\nContent-Length: 1\r\n\r\nXPOST /b HTTP/1.1\r\nContent-Length: 1\r\n\r\nY";
+        let mut p = RequestParser::new(1024);
+        p.push(raw);
+        let first = match p.next_step() {
+            ParseStep::Request(r) => r,
+            _ => panic!("first request"),
+        };
+        assert_eq!((first.path.as_str(), first.body.as_slice()), ("/a", b"X".as_slice()));
+        assert!(p.has_buffered(), "second request stays buffered");
+        let second = match p.next_step() {
+            ParseStep::Request(r) => r,
+            _ => panic!("second request"),
+        };
+        assert_eq!((second.path.as_str(), second.body.as_slice()), ("/b", b"Y".as_slice()));
+        assert!(matches!(p.next_step(), ParseStep::NeedMore));
+    }
+
+    #[test]
+    fn parser_keep_alive_semantics_by_version_and_header() {
+        let cases: [(&[u8], bool); 4] = [
+            (b"GET /v1/health HTTP/1.1\r\n\r\n".as_slice(), true),
+            (b"GET /v1/health HTTP/1.0\r\n\r\n".as_slice(), false),
+            (b"GET /v1/health HTTP/1.0\r\nConnection: keep-alive\r\n\r\n".as_slice(), true),
+            (b"GET /v1/health HTTP/1.1\r\nConnection: close\r\n\r\n".as_slice(), false),
+        ];
+        for (raw, expect) in cases {
+            let mut p = RequestParser::new(64);
+            p.push(raw);
+            match p.next_step() {
+                ParseStep::Request(r) => {
+                    assert_eq!(r.keep_alive, expect, "{:?}", String::from_utf8_lossy(raw))
+                }
+                _ => panic!("expected request for {:?}", String::from_utf8_lossy(raw)),
+            }
+        }
+    }
+
+    #[test]
+    fn parser_rejects_garbage_and_oversize() {
+        // Garbage prefix: not an HTTP/1.x request line.
+        let mut p = RequestParser::new(64);
+        p.push(b"!!garbage frame??\r\n");
+        assert_eq!(step_err(&mut p).status, 400);
+
+        // Newline-less flood beyond the line limit.
+        let mut p = RequestParser::new(64);
+        p.push(&vec![b'a'; (MAX_LINE_BYTES as usize) + 1]);
+        assert_eq!(step_err(&mut p).status, 431);
+
+        // One huge header line.
+        let mut p = RequestParser::new(64);
+        p.push(b"GET /v1/health HTTP/1.1\r\n");
+        p.push(b"X-Big: ");
+        p.push(&vec![b'b'; MAX_LINE_BYTES as usize]);
+        assert_eq!(step_err(&mut p).status, 431);
+
+        // Headers legal individually but too large in total.
+        let mut p = RequestParser::new(64);
+        p.push(b"GET /v1/health HTTP/1.1\r\n");
+        for i in 0..20 {
+            let mut line = format!("X-Pad-{i}: ").into_bytes();
+            line.extend(std::iter::repeat(b'p').take(1000));
+            line.extend_from_slice(b"\r\n");
+            p.push(&line);
+        }
+        assert_eq!(step_err(&mut p).status, 431);
+
+        // Declared body beyond the limit: drains (bounded), then 413.
+        let mut p = RequestParser::new(16);
+        p.push(b"POST /v1/query HTTP/1.1\r\nContent-Length: 100\r\n\r\n");
+        assert!(matches!(p.next_step(), ParseStep::NeedMore));
+        p.push(&[b'x'; 100]);
+        assert_eq!(step_err(&mut p).status, 413);
+
+        // Chunked transfer encoding is explicitly unimplemented.
+        let mut p = RequestParser::new(64);
+        p.push(b"POST /v1/query HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n");
+        assert_eq!(step_err(&mut p).status, 501);
+    }
+
+    #[test]
+    fn stall_responses_match_parse_state() {
+        // At (or before) a request boundary: close silently.
+        let mut p = RequestParser::new(64);
+        assert!(p.stall_response().is_none(), "idle boundary closes silently");
+        p.push(b"GET /half");
+        assert!(matches!(p.next_step(), ParseStep::NeedMore));
+        assert!(p.stall_response().is_none(), "partial request line closes silently");
+
+        // Mid-headers: 408.
+        let mut p = RequestParser::new(64);
+        p.push(b"GET /v1/health HTTP/1.1\r\nHost: x\r\n");
+        assert!(matches!(p.next_step(), ParseStep::NeedMore));
+        assert_eq!(p.stall_response().expect("mid-header stall").status, 408);
+
+        // Mid-body: 400.
+        let mut p = RequestParser::new(64);
+        p.push(b"POST /v1/query HTTP/1.1\r\nContent-Length: 10\r\n\r\nha");
+        assert!(matches!(p.next_step(), ParseStep::NeedMore));
+        assert_eq!(p.stall_response().expect("mid-body stall").status, 400);
+
+        // Stalling while draining an over-limit body is still 413 (the
+        // request's real problem), not a bogus truncation diagnosis.
+        let mut p = RequestParser::new(16);
+        p.push(b"POST /v1/query HTTP/1.1\r\nContent-Length: 100000\r\n\r\npartial");
+        assert!(matches!(p.next_step(), ParseStep::NeedMore));
+        assert_eq!(p.stall_response().expect("drain stall").status, 413);
+    }
+
+    #[test]
+    fn parser_eof_resolution() {
+        // Clean EOF at a boundary.
+        let mut p = RequestParser::new(64);
+        assert!(matches!(p.finish_eof(), ParseStep::Close));
+
+        // EOF mid-headers.
+        let mut p = RequestParser::new(64);
+        p.push(b"GET /v1/health HTTP/1.1\r\nHost: x\r\n");
+        assert!(matches!(p.next_step(), ParseStep::NeedMore));
+        match p.finish_eof() {
+            ParseStep::Error(resp) => assert_eq!(resp.status, 400),
+            _ => panic!("mid-header EOF must error"),
+        }
+
+        // EOF mid-body.
+        let mut p = RequestParser::new(64);
+        p.push(b"POST /v1/query HTTP/1.1\r\nContent-Length: 10\r\n\r\nhal");
+        assert!(matches!(p.next_step(), ParseStep::NeedMore));
+        match p.finish_eof() {
+            ParseStep::Error(resp) => assert_eq!(resp.status, 400),
+            _ => panic!("mid-body EOF must error"),
+        }
+
+        // EOF with a partial request line: parsed as-is (malformed).
+        let mut p = RequestParser::new(64);
+        p.push(b"GET /half");
+        assert!(matches!(p.next_step(), ParseStep::NeedMore));
+        match p.finish_eof() {
+            ParseStep::Error(resp) => assert_eq!(resp.status, 400),
+            _ => panic!("partial request line at EOF must error"),
+        }
     }
 }

@@ -26,6 +26,14 @@
 //! in-flight queries deduplicated so repetitive traffic pays for one
 //! embed/lookup/LLM call instead of N.
 //!
+//! The wire itself is event-driven by default: an epoll/poll readiness
+//! loop (the `reactor` module, via [`crate::util::poll`]) holds every
+//! connection on one thread and hands only complete parsed requests to
+//! a small worker pool, so idle keep-alive connections cost a file
+//! descriptor instead of a pinned thread. The pre-reactor blocking
+//! design survives behind [`HttpConfig::event_loop`]` = false`
+//! (`semcached serve --threaded-accept`).
+//!
 //! Latency accounting mixes *measured* wall-clock for everything the
 //! Rust process does (tokenize, encode, search, insert) with the
 //! *simulated* upstream latency for LLM calls, so Figure 3's
@@ -36,6 +44,8 @@
 
 pub mod batcher;
 pub mod http;
+#[cfg(unix)]
+mod reactor;
 mod server;
 mod trace;
 

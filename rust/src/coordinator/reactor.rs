@@ -1,0 +1,713 @@
+//! Event-driven HTTP serving: one reactor thread, epoll/poll readiness,
+//! nonblocking sockets, resumable per-connection state machines.
+//!
+//! The threaded-accept front-end pins one pool worker per open
+//! connection, so a few hundred idle keep-alive chatbot sessions starve
+//! fresh queries — exactly the long-lived-session traffic shape the
+//! paper's cache fronts. This module replaces the wire path with a
+//! readiness loop:
+//!
+//! ```text
+//!             ┌──────────────────── reactor thread ───────────────────┐
+//!  accept ───►│ nonblocking listener                                  │
+//!  sockets ──►│ per-conn state machine: Reading ─► InFlight ─► Writing│
+//!             │   (incremental RequestParser)        ▲        (partial│
+//!             │                                      │         writes │
+//!             └───── complete parsed requests ───────┼────── resume) ─┘
+//!                          │                         │ wakeup (pipe)
+//!                          ▼                         │
+//!                   request worker pool ── responses ┘
+//!                     │ (route_begin)
+//!                     ├─ batched /v1/query ─► Batcher::submit_with
+//!                     │     (callback fan-back; no thread waits)
+//!                     └─ everything else  ─► served on the worker
+//! ```
+//!
+//! Connection lifecycle:
+//!
+//! * **Reading** — bytes are pulled until `EWOULDBLOCK` and fed to the
+//!   shared incremental [`RequestParser`]; a slow-drip client costs a
+//!   few buffered bytes, not a thread (each incomplete round bumps the
+//!   `parse_stalls` counter). A complete request moves the connection
+//!   to *InFlight* and clears its readiness interest (pipelined bytes
+//!   stay buffered; TCP backpressure throttles the rest).
+//! * **InFlight** — exactly one request per connection is out with the
+//!   worker pool; the response comes back over the completion queue
+//!   plus a wake byte on the self-pipe.
+//! * **Writing** — the serialized response is written as far as the
+//!   socket allows; `EWOULDBLOCK` parks the connection on write
+//!   readiness and resumes later (partial-write resumption). When the
+//!   write finishes, buffered pipelined requests are served before the
+//!   connection goes back to waiting on readable.
+//!
+//! Limits: `max_conns` bounds the fd table (beyond it, accepted
+//! connections are answered `503` and closed); `read_timeout` sweeps
+//! idle connections (silent close at a request boundary, `408`/`400`
+//! mid-request — same contract as the threaded mode). Shutdown wakes
+//! the reactor, closes every connection, then joins the worker pool.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::error::{Context, Result};
+use crate::metrics::Metrics;
+use crate::util::poll::{Interest, PollEvent, Poller};
+
+use super::batcher::Batcher;
+use super::http::{
+    rejected_submit_response, route_begin, serialize_response, HttpRequest, HttpResponse,
+    ParsePhase, ParseStep, RequestParser, Routed,
+};
+use super::Server;
+
+const LISTENER_TOKEN: u64 = 0;
+const WAKE_TOKEN: u64 = 1;
+const FIRST_CONN_TOKEN: u64 = 2;
+
+/// Event-loop knobs (derived from [`super::http::HttpConfig`]).
+pub(super) struct ReactorConfig {
+    pub(super) workers: usize,
+    pub(super) max_body: usize,
+    pub(super) max_conns: usize,
+    pub(super) read_timeout: Duration,
+    pub(super) poll_fallback: bool,
+}
+
+/// One complete parsed request on its way to the worker pool.
+struct Work {
+    token: u64,
+    req: HttpRequest,
+}
+
+/// One finished response on its way back to the reactor.
+struct Completion {
+    token: u64,
+    resp: HttpResponse,
+    keep_alive: bool,
+}
+
+type CompletionQueue = Arc<Mutex<Vec<Completion>>>;
+
+/// Wakes the reactor out of `poll`/`epoll_wait` by writing one byte to
+/// the self-pipe. Nonblocking: a full pipe means a wake is already
+/// pending, which is all we need.
+#[derive(Clone)]
+struct Waker {
+    pipe: Arc<UnixStream>,
+}
+
+impl Waker {
+    fn wake(&self) {
+        let mut side: &UnixStream = &self.pipe;
+        let _ = side.write(&[1u8]);
+    }
+}
+
+/// Everything a request worker needs to serve and fan back.
+struct WorkerCtx {
+    server: Arc<Server>,
+    batcher: Option<Arc<Batcher>>,
+    completions: CompletionQueue,
+    waker: Waker,
+}
+
+/// Owns the reactor + worker threads; joined on [`EventLoopHandle::shutdown`].
+pub(super) struct EventLoopHandle {
+    stop: Arc<AtomicBool>,
+    waker: Waker,
+    reactor: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl EventLoopHandle {
+    /// Idempotent: stop the reactor, close every connection, join the
+    /// workers. (The batcher is shut down afterwards by the owning
+    /// [`super::http::HttpHandle`], once no worker can submit anymore.)
+    pub(super) fn shutdown(&mut self) {
+        if self.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        self.waker.wake();
+        if let Some(h) = self.reactor.take() {
+            let _ = h.join();
+        }
+        // The reactor thread owned the work sender; with it gone the
+        // workers drain the queue and exit.
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for EventLoopHandle {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Start the event loop over an already-bound listener. Returns once
+/// the reactor and worker threads are running.
+pub(super) fn serve_event_loop(
+    server: Arc<Server>,
+    batcher: Option<Arc<Batcher>>,
+    listener: TcpListener,
+    cfg: ReactorConfig,
+) -> Result<EventLoopHandle> {
+    listener.set_nonblocking(true).context("setting the listener nonblocking")?;
+    let mut poller = Poller::new(cfg.poll_fallback).context("building the readiness poller")?;
+    let (wake_rx, wake_tx) = UnixStream::pair().context("creating the reactor wake pipe")?;
+    wake_rx.set_nonblocking(true).context("wake pipe nonblocking")?;
+    wake_tx.set_nonblocking(true).context("wake pipe nonblocking")?;
+    poller
+        .register(listener.as_raw_fd(), LISTENER_TOKEN, Interest::Read)
+        .context("registering the listener")?;
+    poller
+        .register(wake_rx.as_raw_fd(), WAKE_TOKEN, Interest::Read)
+        .context("registering the wake pipe")?;
+
+    let waker = Waker { pipe: Arc::new(wake_tx) };
+    let completions: CompletionQueue = Arc::new(Mutex::new(Vec::new()));
+    let stop = Arc::new(AtomicBool::new(false));
+    let (work_tx, work_rx) = mpsc::channel::<Work>();
+    let work_rx = Arc::new(Mutex::new(work_rx));
+
+    let ctx = Arc::new(WorkerCtx {
+        server: server.clone(),
+        batcher,
+        completions: completions.clone(),
+        waker: waker.clone(),
+    });
+    let mut workers = Vec::with_capacity(cfg.workers);
+    for w in 0..cfg.workers {
+        let rx = work_rx.clone();
+        let ctx = ctx.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("http-request-{w}"))
+            .spawn(move || worker_loop(rx, ctx))
+            .expect("spawn http request worker");
+        workers.push(handle);
+    }
+
+    let reactor = Reactor {
+        cfg,
+        poller,
+        listener,
+        conns: HashMap::new(),
+        next_token: FIRST_CONN_TOKEN,
+        work_tx,
+        completions,
+        wake_rx,
+        stop: stop.clone(),
+        metrics: server.metrics(),
+    };
+    let reactor_thread = std::thread::Builder::new()
+        .name("http-reactor".into())
+        .spawn(move || reactor.run())
+        .expect("spawn http reactor");
+
+    Ok(EventLoopHandle { stop, waker, reactor: Some(reactor_thread), workers })
+}
+
+// ---------------------------------------------------------------------
+// Worker pool: complete requests in, completions + a wake byte out.
+// ---------------------------------------------------------------------
+
+fn worker_loop(rx: Arc<Mutex<Receiver<Work>>>, ctx: Arc<WorkerCtx>) {
+    loop {
+        // Hold the receiver lock only while waiting for the next item;
+        // a disconnected channel (reactor gone) ends the worker.
+        let work = rx.lock().unwrap().recv();
+        let work = match work {
+            Ok(w) => w,
+            Err(_) => break,
+        };
+        let token = work.token;
+        let ctx2 = ctx.clone();
+        // A panicking handler must not shrink the pool or strand the
+        // connection: catch, answer 500, keep serving.
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+            handle_work(ctx2, work)
+        }));
+        if outcome.is_err() {
+            eprintln!("[semcached] request handler panicked; worker recovered");
+            ctx.server.metrics().record_http_error();
+            complete(&ctx, token, HttpResponse::error(500, "internal handler error"), false);
+        }
+    }
+}
+
+fn handle_work(ctx: Arc<WorkerCtx>, work: Work) {
+    let keep_alive = work.req.keep_alive;
+    match route_begin(&ctx.server, ctx.batcher.is_some(), &work.req) {
+        Routed::Ready(resp) => complete(&ctx, work.token, resp, keep_alive),
+        Routed::BatchedQuery(q) => {
+            let batcher = ctx.batcher.as_ref().expect("batched route without a batcher").clone();
+            let cb_ctx = ctx.clone();
+            let token = work.token;
+            // The worker is free as soon as the submit lands: the
+            // dispatcher invokes this callback with the response, which
+            // re-enters the reactor as a completion + wakeup.
+            let submitted = batcher.submit_with(&q, move |qr| {
+                let resp = HttpResponse::json(200, &qr.to_json());
+                complete(&cb_ctx, token, resp, keep_alive);
+            });
+            if let Err(e) = submitted {
+                let resp = rejected_submit_response(&ctx.server, &q, &e);
+                complete(&ctx, work.token, resp, keep_alive);
+            }
+        }
+    }
+}
+
+fn complete(ctx: &WorkerCtx, token: u64, resp: HttpResponse, keep_alive: bool) {
+    {
+        // `unwrap_or_else(into_inner)`: a poisoned queue (reactor thread
+        // panicked mid-push) must not cascade panics into the batcher's
+        // dispatcher via this callback.
+        let mut q = ctx.completions.lock().unwrap_or_else(|e| e.into_inner());
+        q.push(Completion { token, resp, keep_alive });
+    }
+    ctx.waker.wake();
+}
+
+// ---------------------------------------------------------------------
+// The reactor proper.
+// ---------------------------------------------------------------------
+
+enum ConnState {
+    /// Waiting for (more of) a request.
+    Reading,
+    /// A complete request is with the worker pool; readiness interest is
+    /// cleared until its completion arrives.
+    InFlight,
+    /// A response is (partially) written; waiting for write readiness.
+    Writing,
+}
+
+struct Conn {
+    stream: TcpStream,
+    parser: RequestParser,
+    state: ConnState,
+    write_buf: Vec<u8>,
+    write_pos: usize,
+    /// Whether the connection survives the current response.
+    keep_alive_after: bool,
+    /// Peer closed its write side (half-close): serve what is buffered,
+    /// then close after the response.
+    saw_eof: bool,
+    last_activity: Instant,
+    interest: Interest,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, max_body: usize) -> Self {
+        Self {
+            stream,
+            parser: RequestParser::new(max_body),
+            state: ConnState::Reading,
+            write_buf: Vec::new(),
+            write_pos: 0,
+            keep_alive_after: true,
+            saw_eof: false,
+            last_activity: Instant::now(),
+            interest: Interest::Read,
+        }
+    }
+}
+
+enum Verdict {
+    Keep,
+    Close,
+}
+
+struct Reactor {
+    cfg: ReactorConfig,
+    poller: Poller,
+    listener: TcpListener,
+    conns: HashMap<u64, Conn>,
+    next_token: u64,
+    work_tx: Sender<Work>,
+    completions: CompletionQueue,
+    wake_rx: UnixStream,
+    stop: Arc<AtomicBool>,
+    metrics: Arc<Metrics>,
+}
+
+impl Reactor {
+    fn run(mut self) {
+        let mut events: Vec<PollEvent> = Vec::new();
+        let mut last_sweep = Instant::now();
+        loop {
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            if self.poller.wait(&mut events, Some(Duration::from_millis(100))).is_err() {
+                // A broken poller cannot serve anything; bail out rather
+                // than spin. (Never observed outside fd exhaustion.)
+                eprintln!("[semcached] reactor poller failed; event loop exiting");
+                break;
+            }
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            for ev in events.drain(..) {
+                match ev.token {
+                    LISTENER_TOKEN => {
+                        if ev.readable || ev.closed {
+                            self.accept_ready();
+                        }
+                    }
+                    WAKE_TOKEN => self.drain_wake(),
+                    token => self.conn_event(token, ev),
+                }
+            }
+            self.pump_completions();
+            if last_sweep.elapsed() >= Duration::from_millis(200) {
+                self.sweep_idle();
+                last_sweep = Instant::now();
+            }
+        }
+        // Teardown: close every connection so the open-connections gauge
+        // returns to zero.
+        let tokens: Vec<u64> = self.conns.keys().copied().collect();
+        for t in tokens {
+            if let Some(conn) = self.conns.remove(&t) {
+                self.teardown(conn);
+            }
+        }
+    }
+
+    fn accept_ready(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    if self.conns.len() >= self.cfg.max_conns {
+                        // Over the connection budget: answer 503 (one
+                        // best-effort write) and close, instead of
+                        // growing the fd table without bound.
+                        self.metrics.record_conn_rejected();
+                        let resp = HttpResponse::error(503, "connection limit reached");
+                        let bytes = serialize_response(&resp, false);
+                        let mut s = stream;
+                        let _ = s.set_nonblocking(true);
+                        let _ = s.write(&bytes);
+                        continue;
+                    }
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    let token = self.next_token;
+                    self.next_token += 1;
+                    if self.poller.register(stream.as_raw_fd(), token, Interest::Read).is_err() {
+                        continue;
+                    }
+                    self.metrics.record_conn_open();
+                    self.conns.insert(token, Conn::new(stream, self.cfg.max_body));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                // Transient accept failure (e.g. fd exhaustion): retry on
+                // the next readiness report instead of spinning.
+                Err(_) => break,
+            }
+        }
+    }
+
+    fn drain_wake(&mut self) {
+        let mut buf = [0u8; 256];
+        loop {
+            let mut side: &UnixStream = &self.wake_rx;
+            match side.read(&mut buf) {
+                Ok(0) => break,
+                Ok(_) => {}
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(_) => break, // WouldBlock: drained
+            }
+        }
+    }
+
+    fn conn_event(&mut self, token: u64, ev: PollEvent) {
+        let mut conn = match self.conns.remove(&token) {
+            Some(c) => c,
+            None => return,
+        };
+        let verdict = if ev.closed {
+            // Hard error/hangup: any pending write would fail.
+            Verdict::Close
+        } else {
+            let mut v = Verdict::Keep;
+            if ev.readable && matches!(conn.state, ConnState::Reading) {
+                v = self.drive_read(token, &mut conn);
+            }
+            if matches!(v, Verdict::Keep)
+                && ev.writable
+                && matches!(conn.state, ConnState::Writing)
+            {
+                v = self.drive_write(token, &mut conn);
+            }
+            v
+        };
+        match verdict {
+            Verdict::Keep => {
+                self.conns.insert(token, conn);
+            }
+            Verdict::Close => self.teardown(conn),
+        }
+    }
+
+    /// Pull bytes from the socket (bounded per readiness round), feed
+    /// the parser, and act on the outcome. Only meaningful in `Reading`
+    /// state.
+    fn drive_read(&mut self, token: u64, conn: &mut Conn) -> Verdict {
+        // Per-round read budget: one firehose client must not pin the
+        // reactor in this loop (or grow the parser buffer unboundedly)
+        // while every other connection waits. Level-triggered readiness
+        // re-reports the fd, so leftover bytes are picked up on the
+        // next round — after the fleet got its turn.
+        let mut budget: usize = 64 * 1024;
+        let mut got_bytes = false;
+        while budget > 0 {
+            let mut chunk = [0u8; 16384];
+            match conn.stream.read(&mut chunk) {
+                Ok(0) => {
+                    conn.saw_eof = true;
+                    break;
+                }
+                Ok(n) => {
+                    got_bytes = true;
+                    budget = budget.saturating_sub(n);
+                    conn.parser.push(&chunk[..n]);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(_) => return Verdict::Close,
+            }
+        }
+        if got_bytes {
+            conn.last_activity = Instant::now();
+        }
+        match self.advance_parser(token, conn) {
+            Verdict::Close => return Verdict::Close,
+            Verdict::Keep => {}
+        }
+        if got_bytes
+            && matches!(conn.state, ConnState::Reading)
+            && !matches!(conn.parser.phase(), ParsePhase::Idle)
+        {
+            // Bytes arrived and the request is still incomplete: a
+            // slow-drip (or just slow) client.
+            self.metrics.record_parse_stall();
+        }
+        if conn.saw_eof && matches!(conn.state, ConnState::Reading) {
+            return self.resolve_eof(token, conn);
+        }
+        Verdict::Keep
+    }
+
+    /// The peer finished sending and no request is in flight: resolve
+    /// the parser at EOF (same contract as the blocking driver).
+    fn resolve_eof(&mut self, token: u64, conn: &mut Conn) -> Verdict {
+        match conn.parser.finish_eof() {
+            ParseStep::Close | ParseStep::NeedMore => Verdict::Close,
+            ParseStep::Request(req) => self.dispatch(token, conn, req),
+            ParseStep::Error(resp) => {
+                self.metrics.record_http_request();
+                self.metrics.record_http_error();
+                self.start_write(token, conn, resp, false)
+            }
+        }
+    }
+
+    /// Advance the parser as far as the buffered bytes allow; dispatch
+    /// at most one request (per-connection ordering).
+    fn advance_parser(&mut self, token: u64, conn: &mut Conn) -> Verdict {
+        if !matches!(conn.state, ConnState::Reading) {
+            return Verdict::Keep;
+        }
+        match conn.parser.next_step() {
+            ParseStep::NeedMore => {
+                self.want_interest(token, conn, Interest::Read);
+                Verdict::Keep
+            }
+            ParseStep::Request(req) => self.dispatch(token, conn, req),
+            ParseStep::Close => Verdict::Close,
+            ParseStep::Error(resp) => {
+                // A malformed request still counts as one request, so
+                // http_errors never exceeds http_requests (same
+                // accounting as the threaded driver).
+                self.metrics.record_http_request();
+                self.metrics.record_http_error();
+                self.start_write(token, conn, resp, false)
+            }
+        }
+    }
+
+    /// Hand one complete request to the worker pool and park the
+    /// connection (no readiness interest until the completion arrives).
+    fn dispatch(&mut self, token: u64, conn: &mut Conn, req: HttpRequest) -> Verdict {
+        conn.state = ConnState::InFlight;
+        conn.last_activity = Instant::now();
+        self.want_interest(token, conn, Interest::None);
+        if self.work_tx.send(Work { token, req }).is_err() {
+            // Only possible when the pool is gone (shutdown mid-flight).
+            return Verdict::Close;
+        }
+        Verdict::Keep
+    }
+
+    /// Begin (or restart) writing a response on this connection.
+    fn start_write(
+        &mut self,
+        token: u64,
+        conn: &mut Conn,
+        resp: HttpResponse,
+        keep_alive: bool,
+    ) -> Verdict {
+        // A half-closed peer (saw_eof) gets no *new* requests in, but
+        // pipelined input already buffered must still be served — the
+        // blocking driver answers every buffered request before closing,
+        // and the modes must not diverge. Only the final response (no
+        // buffered input left) advertises and performs the close.
+        let staying_open = keep_alive && (!conn.saw_eof || conn.parser.has_buffered());
+        conn.write_buf = serialize_response(&resp, staying_open);
+        conn.write_pos = 0;
+        conn.keep_alive_after = staying_open;
+        conn.state = ConnState::Writing;
+        conn.last_activity = Instant::now();
+        self.drive_write(token, conn)
+    }
+
+    /// Push response bytes until done or the socket pushes back; resume
+    /// from the same offset on the next writable event.
+    fn drive_write(&mut self, token: u64, conn: &mut Conn) -> Verdict {
+        while conn.write_pos < conn.write_buf.len() {
+            match conn.stream.write(&conn.write_buf[conn.write_pos..]) {
+                Ok(0) => return Verdict::Close,
+                Ok(n) => {
+                    conn.write_pos += n;
+                    conn.last_activity = Instant::now();
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    self.want_interest(token, conn, Interest::Write);
+                    return Verdict::Keep;
+                }
+                Err(_) => return Verdict::Close,
+            }
+        }
+        let _ = conn.stream.flush();
+        conn.write_buf.clear();
+        conn.write_pos = 0;
+        if !conn.keep_alive_after || self.stop.load(Ordering::SeqCst) {
+            return Verdict::Close;
+        }
+        conn.state = ConnState::Reading;
+        // Serve pipelined requests already buffered before going back to
+        // waiting on readable.
+        if let Verdict::Close = self.advance_parser(token, conn) {
+            return Verdict::Close;
+        }
+        if matches!(conn.state, ConnState::Reading) {
+            if conn.saw_eof {
+                // No more bytes will come: resolve leftover buffered
+                // input at EOF (a truncated pipelined request is still
+                // answered 400, exactly like the blocking driver).
+                return self.resolve_eof(token, conn);
+            }
+            self.want_interest(token, conn, Interest::Read);
+        }
+        Verdict::Keep
+    }
+
+    /// Apply finished responses from the worker pool / batcher callbacks.
+    fn pump_completions(&mut self) {
+        let pending: Vec<Completion> = {
+            let mut q = self.completions.lock().unwrap_or_else(|e| e.into_inner());
+            std::mem::take(&mut *q)
+        };
+        for c in pending {
+            let mut conn = match self.conns.remove(&c.token) {
+                Some(conn) => conn,
+                None => continue, // connection died while in flight
+            };
+            if !matches!(conn.state, ConnState::InFlight) {
+                // Defensive: a completion for a connection that is not
+                // waiting on one is dropped rather than corrupting the
+                // write stream.
+                self.conns.insert(c.token, conn);
+                continue;
+            }
+            match self.start_write(c.token, &mut conn, c.resp, c.keep_alive) {
+                Verdict::Keep => {
+                    self.conns.insert(c.token, conn);
+                }
+                Verdict::Close => self.teardown(conn),
+            }
+        }
+    }
+
+    /// Close connections idle past `read_timeout`. Waiting at a request
+    /// boundary closes silently (like the threaded driver's read
+    /// timeout); a stall mid-request is answered 408/400 best-effort.
+    fn sweep_idle(&mut self) {
+        let now = Instant::now();
+        let timeout = self.cfg.read_timeout;
+        let expired: Vec<u64> = self
+            .conns
+            .iter()
+            .filter(|(_, c)| {
+                !matches!(c.state, ConnState::InFlight)
+                    && now.duration_since(c.last_activity) >= timeout
+            })
+            .map(|(t, _)| *t)
+            .collect();
+        for token in expired {
+            let mut conn = match self.conns.remove(&token) {
+                Some(c) => c,
+                None => continue,
+            };
+            let verdict = match conn.state {
+                ConnState::Reading => match conn.parser.stall_response() {
+                    None => Verdict::Close, // idle boundary: silent, like the threaded driver
+                    Some(resp) => {
+                        self.metrics.record_http_request();
+                        self.metrics.record_http_error();
+                        self.start_write(token, &mut conn, resp, false)
+                    }
+                },
+                // A peer that stopped draining its response.
+                ConnState::Writing => Verdict::Close,
+                ConnState::InFlight => Verdict::Keep, // filtered out above
+            };
+            match verdict {
+                Verdict::Keep => {
+                    self.conns.insert(token, conn);
+                }
+                Verdict::Close => self.teardown(conn),
+            }
+        }
+    }
+
+    fn want_interest(&mut self, token: u64, conn: &mut Conn, want: Interest) {
+        if conn.interest != want
+            && self.poller.modify(conn.stream.as_raw_fd(), token, want).is_ok()
+        {
+            conn.interest = want;
+        }
+    }
+
+    fn teardown(&mut self, conn: Conn) {
+        let _ = self.poller.deregister(conn.stream.as_raw_fd());
+        self.metrics.record_conn_closed();
+        // Dropping `conn` closes the socket.
+    }
+}

@@ -50,6 +50,17 @@ pub struct Metrics {
     // HTTP front-end counters.
     pub http_requests: AtomicU64,
     pub http_errors: AtomicU64,
+    /// Connections taken on by the front-end (event loop: at accept;
+    /// threaded: when a worker picks the connection up).
+    pub http_conns_accepted: AtomicU64,
+    /// Connections refused at accept time because `max_conns` was
+    /// reached (answered 503 and closed; event-loop mode only).
+    pub http_conns_rejected: AtomicU64,
+    /// Gauge: connections currently open (accepted minus closed).
+    pub http_conns_open: AtomicU64,
+    /// Readable events that delivered bytes without completing a request
+    /// (slow-drip / fragmented delivery; event-loop mode).
+    pub http_parse_stalls: AtomicU64,
     // Embedding memo tier (exact-match LRU in front of the encoder):
     // serving-path encodes answered from / missing the tier. Requests
     // served by an encoder without a memo tier count as misses (every
@@ -106,6 +117,11 @@ pub struct MetricsSnapshot {
     pub rejected: u64,
     pub http_requests: u64,
     pub http_errors: u64,
+    pub http_conns_accepted: u64,
+    pub http_conns_rejected: u64,
+    /// Gauge at snapshot time: currently-open connections.
+    pub http_conns_open: u64,
+    pub http_parse_stalls: u64,
     pub embed_cache_hits: u64,
     pub embed_cache_misses: u64,
     pub llm_input_tokens: u64,
@@ -181,6 +197,33 @@ impl Metrics {
         self.http_errors.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// One connection taken on (bumps the accepted counter and the
+    /// open-connections gauge). Paired with [`Metrics::record_conn_closed`].
+    pub fn record_conn_open(&self) {
+        self.http_conns_accepted.fetch_add(1, Ordering::Relaxed);
+        self.http_conns_open.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One connection closed (decrements the gauge; saturates at zero so
+    /// a stray unpaired call can never wrap the gauge).
+    pub fn record_conn_closed(&self) {
+        let _ = self.http_conns_open.fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |v| if v > 0 { Some(v - 1) } else { None },
+        );
+    }
+
+    /// One connection refused at accept time (`max_conns` reached).
+    pub fn record_conn_rejected(&self) {
+        self.http_conns_rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One readable round that left a request incomplete.
+    pub fn record_parse_stall(&self) {
+        self.http_parse_stalls.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn record_judgement(&self, positive: bool) {
         if positive {
             self.positive_hits.fetch_add(1, Ordering::Relaxed);
@@ -249,6 +292,10 @@ impl Metrics {
             rejected: self.rejected.load(Ordering::Relaxed),
             http_requests: self.http_requests.load(Ordering::Relaxed),
             http_errors: self.http_errors.load(Ordering::Relaxed),
+            http_conns_accepted: self.http_conns_accepted.load(Ordering::Relaxed),
+            http_conns_rejected: self.http_conns_rejected.load(Ordering::Relaxed),
+            http_conns_open: self.http_conns_open.load(Ordering::Relaxed),
+            http_parse_stalls: self.http_parse_stalls.load(Ordering::Relaxed),
             embed_cache_hits: self.embed_cache_hits.load(Ordering::Relaxed),
             embed_cache_misses: self.embed_cache_misses.load(Ordering::Relaxed),
             llm_input_tokens: self.llm_input_tokens.load(Ordering::Relaxed),
@@ -322,6 +369,10 @@ impl MetricsSnapshot {
             ("rejected", self.rejected.into()),
             ("http_requests", self.http_requests.into()),
             ("http_errors", self.http_errors.into()),
+            ("conns_accepted", self.http_conns_accepted.into()),
+            ("conns_rejected", self.http_conns_rejected.into()),
+            ("open_connections", self.http_conns_open.into()),
+            ("parse_stalls", self.http_parse_stalls.into()),
             ("hit_rate", self.hit_rate().into()),
             ("positive_rate", self.positive_rate().into()),
             ("api_call_rate", self.api_call_rate().into()),
@@ -453,6 +504,33 @@ mod tests {
         assert_eq!(j.get("embed_cache_hits").as_usize(), Some(2));
         assert_eq!(j.get("embed_cache_misses").as_usize(), Some(1));
         assert!(j.get("lat_embed_memo_p50_ms").as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn conn_counters_and_open_gauge() {
+        let m = Metrics::new();
+        m.record_conn_open();
+        m.record_conn_open();
+        m.record_conn_open();
+        m.record_conn_closed();
+        m.record_conn_rejected();
+        m.record_parse_stall();
+        m.record_parse_stall();
+        let s = m.snapshot();
+        assert_eq!(s.http_conns_accepted, 3);
+        assert_eq!(s.http_conns_open, 2, "gauge = accepted - closed");
+        assert_eq!(s.http_conns_rejected, 1);
+        assert_eq!(s.http_parse_stalls, 2);
+        let j = s.to_json();
+        assert_eq!(j.get("conns_accepted").as_usize(), Some(3));
+        assert_eq!(j.get("open_connections").as_usize(), Some(2));
+        assert_eq!(j.get("conns_rejected").as_usize(), Some(1));
+        assert_eq!(j.get("parse_stalls").as_usize(), Some(2));
+        // The gauge saturates instead of wrapping on unpaired closes.
+        m.record_conn_closed();
+        m.record_conn_closed();
+        m.record_conn_closed();
+        assert_eq!(m.snapshot().http_conns_open, 0);
     }
 
     #[test]

@@ -1,7 +1,11 @@
 //! Shared low-level utilities: the deterministic PRNG (bit-exact with the
 //! Python compile path), dense vector math for the similarity hot path,
-//! and small statistics helpers used by metrics and the benches.
+//! small statistics helpers used by metrics and the benches, and the
+//! zero-dependency readiness-polling shim (`poll`) behind the
+//! event-driven HTTP front-end.
 
+#[cfg(unix)]
+pub mod poll;
 mod rng;
 mod stats;
 mod vecmath;

@@ -138,6 +138,7 @@ fn start_front_end_with(batching: bool) -> (HttpHandle, String) {
             max_body_bytes: 64 * 1024,
             read_timeout: Duration::from_secs(2),
             batching,
+            ..HttpConfig::default()
         },
     )
     .expect("bind ephemeral port");

@@ -1,0 +1,651 @@
+//! Adversarial HTTP protocol and concurrency tests for the wire
+//! front-end (ISSUE 5), run against live loopback servers in **both**
+//! serving modes (event loop and threaded accept), plus the event
+//! loop's portable `poll(2)` fallback backend:
+//!
+//! * slow-drip byte-at-a-time request delivery;
+//! * pipelined requests on one connection (served in order);
+//! * HTTP/1.0 vs HTTP/1.1 keep-alive semantics (`Connection` header
+//!   included);
+//! * garbage-prefix framing and newline-less floods (400/431);
+//! * oversized header lines (431) and oversized bodies (413);
+//! * the idle-connection starvation regression: 4× more idle keep-alive
+//!   connections than workers must NOT delay a fresh query on the event
+//!   loop, and must starve it on the threaded-accept path (the exact
+//!   limitation the reactor fixes);
+//! * the `max_conns` accept-time 503 budget;
+//! * a seeded property test replaying random request traces through
+//!   event-loop HTTP vs direct `serve()` (outcome- and
+//!   counter-identical — the PR 3 parity convention on the new wire);
+//! * a directed short-write regression for `write_response` over a
+//!   tiny-`SO_SNDBUF` nonblocking socket.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use semcache::api::{Outcome, QueryRequest};
+use semcache::coordinator::{
+    http_request, serve_http, HttpConfig, HttpHandle, Server, ServerConfig,
+};
+use semcache::embedding::NativeEncoder;
+use semcache::json;
+use semcache::runtime::ModelParams;
+use semcache::testutil::{prop_check, Gen, PropConfig};
+
+fn tiny_server() -> Arc<Server> {
+    let mut p = ModelParams::default();
+    p.layers = 1;
+    p.vocab_size = 1024;
+    p.dim = 96;
+    p.hidden = 192;
+    p.heads = 4;
+    Arc::new(Server::new(Arc::new(NativeEncoder::new(p)), ServerConfig::default()))
+}
+
+/// Start a front-end with test-suite defaults, tweaked by `adjust`, and
+/// wait for it to answer health checks.
+fn start_with(adjust: impl FnOnce(&mut HttpConfig)) -> (HttpHandle, String) {
+    let mut cfg = HttpConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 2,
+        max_body_bytes: 64 * 1024,
+        read_timeout: Duration::from_secs(5),
+        ..HttpConfig::default()
+    };
+    adjust(&mut cfg);
+    let handle = serve_http(tiny_server(), cfg).expect("bind ephemeral port");
+    let addr = handle.local_addr().to_string();
+    for _ in 0..100 {
+        if let Ok((200, _)) = http_request(&addr, "GET", "/v1/health", None) {
+            return (handle, addr);
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    panic!("front-end at {addr} did not become healthy");
+}
+
+// ---------------------------------------------------------------------
+// A raw HTTP client that controls framing byte-for-byte.
+// ---------------------------------------------------------------------
+
+struct RawResponse {
+    status: u16,
+    /// Lower-cased `Connection` header value ("" if absent).
+    connection: String,
+    body: String,
+}
+
+struct RawClient {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+fn find(hay: &[u8], needle: &[u8]) -> Option<usize> {
+    hay.windows(needle.len()).position(|w| w == needle)
+}
+
+impl RawClient {
+    fn connect(addr: &str) -> Self {
+        let stream = TcpStream::connect(addr).expect("connect loopback");
+        stream.set_read_timeout(Some(Duration::from_secs(10))).expect("read timeout");
+        let _ = stream.set_nodelay(true);
+        Self { stream, buf: Vec::new() }
+    }
+
+    fn send(&mut self, bytes: &[u8]) {
+        self.stream.write_all(bytes).expect("write to server");
+        self.stream.flush().expect("flush to server");
+    }
+
+    fn fill(&mut self) -> usize {
+        let mut chunk = [0u8; 4096];
+        let n = self.stream.read(&mut chunk).expect("read from server");
+        self.buf.extend_from_slice(&chunk[..n]);
+        n
+    }
+
+    /// Read exactly one response off the connection (leaving any
+    /// pipelined follow-up bytes buffered).
+    fn read_response(&mut self) -> RawResponse {
+        let header_end = loop {
+            if let Some(i) = find(&self.buf, b"\r\n\r\n") {
+                break i + 4;
+            }
+            assert!(
+                self.fill() > 0,
+                "connection closed before response headers completed: {:?}",
+                String::from_utf8_lossy(&self.buf)
+            );
+        };
+        let head = String::from_utf8_lossy(&self.buf[..header_end]).to_string();
+        let mut lines = head.split("\r\n");
+        let status_line = lines.next().expect("status line");
+        assert!(status_line.starts_with("HTTP/1.1 "), "status line: {status_line:?}");
+        let status: u16 = status_line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or_else(|| panic!("malformed status line {status_line:?}"));
+        let mut content_length = 0usize;
+        let mut connection = String::new();
+        for l in lines {
+            if let Some((k, v)) = l.split_once(':') {
+                let k = k.trim().to_ascii_lowercase();
+                if k == "content-length" {
+                    content_length = v.trim().parse().expect("content-length value");
+                } else if k == "connection" {
+                    connection = v.trim().to_ascii_lowercase();
+                }
+            }
+        }
+        while self.buf.len() < header_end + content_length {
+            assert!(self.fill() > 0, "connection closed mid-response-body");
+        }
+        let body =
+            String::from_utf8_lossy(&self.buf[header_end..header_end + content_length]).to_string();
+        self.buf.drain(..header_end + content_length);
+        RawResponse { status, connection, body }
+    }
+
+    /// Assert the server closes the connection (no further bytes).
+    fn assert_closed(&mut self) {
+        assert!(self.buf.is_empty(), "unexpected buffered bytes before close");
+        let mut chunk = [0u8; 64];
+        match self.stream.read(&mut chunk) {
+            Ok(0) => {}
+            Ok(n) => panic!(
+                "expected the server to close, got {n} more bytes: {:?}",
+                String::from_utf8_lossy(&chunk[..n])
+            ),
+            Err(e) => panic!("expected a clean close, got {e}"),
+        }
+    }
+}
+
+fn post_query_raw(text: &str, tag: &str) -> Vec<u8> {
+    let body = QueryRequest::new(text).with_client_tag(tag).to_json().to_string();
+    format!(
+        "POST /v1/query HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{}",
+        body.len(),
+        body
+    )
+    .into_bytes()
+}
+
+fn health_raw(version: &str, extra_headers: &str) -> Vec<u8> {
+    format!("GET /v1/health {version}\r\nHost: t\r\n{extra_headers}\r\n").into_bytes()
+}
+
+// ---------------------------------------------------------------------
+// The protocol suite, shared by every mode/backend combination.
+// ---------------------------------------------------------------------
+
+fn run_protocol_suite(event_loop: bool, poll_fallback: bool) {
+    let (handle, addr) = start_with(|c| {
+        c.event_loop = event_loop;
+        c.poll_fallback = poll_fallback;
+    });
+
+    // --- slow-drip: the request arrives one byte at a time.
+    {
+        let mut c = RawClient::connect(&addr);
+        let raw = post_query_raw("slow drip probe query", "drip");
+        for b in &raw {
+            c.send(&[*b]);
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let resp = c.read_response();
+        assert_eq!(resp.status, 200, "slow-drip body: {}", resp.body);
+        let v = json::parse(&resp.body).expect("json body");
+        assert_eq!(v.get("outcome").get("type").as_str(), Some("miss"), "{v}");
+        assert_eq!(v.get("client_tag").as_str(), Some("drip"));
+    }
+
+    // --- pipelining: three requests in one write, three responses in order.
+    {
+        let mut c = RawClient::connect(&addr);
+        let mut blob = Vec::new();
+        for i in 0..3 {
+            blob.extend_from_slice(&post_query_raw(
+                &format!("pipeline probe number {i} quebec"),
+                &format!("p{i}"),
+            ));
+        }
+        c.send(&blob);
+        for i in 0..3 {
+            let resp = c.read_response();
+            assert_eq!(resp.status, 200, "pipelined response {i}: {}", resp.body);
+            let v = json::parse(&resp.body).expect("json body");
+            assert_eq!(
+                v.get("client_tag").as_str(),
+                Some(format!("p{i}").as_str()),
+                "pipelined responses must come back in request order: {v}"
+            );
+        }
+    }
+
+    // --- pipelining + half-close: a client that sends two requests and
+    //     shuts down its write side still gets both answers, then EOF.
+    {
+        let mut c = RawClient::connect(&addr);
+        let mut blob = Vec::new();
+        blob.extend_from_slice(&post_query_raw("half close probe one x-ray", "hc0"));
+        blob.extend_from_slice(&post_query_raw("half close probe two yankee", "hc1"));
+        c.send(&blob);
+        c.stream.shutdown(std::net::Shutdown::Write).expect("half-close");
+        for i in 0..2 {
+            let resp = c.read_response();
+            assert_eq!(resp.status, 200, "half-close response {i}: {}", resp.body);
+            let v = json::parse(&resp.body).expect("json body");
+            assert_eq!(
+                v.get("client_tag").as_str(),
+                Some(format!("hc{i}").as_str()),
+                "buffered pipelined requests must all be served after a half-close: {v}"
+            );
+        }
+        c.assert_closed();
+    }
+
+    // --- keep-alive semantics: version default + Connection overrides.
+    {
+        // HTTP/1.1 default: stays open for a second request.
+        let mut c = RawClient::connect(&addr);
+        c.send(&health_raw("HTTP/1.1", ""));
+        let r = c.read_response();
+        assert_eq!((r.status, r.connection.as_str()), (200, "keep-alive"));
+        c.send(&health_raw("HTTP/1.1", ""));
+        assert_eq!(c.read_response().status, 200);
+
+        // HTTP/1.0 default: closes after the response.
+        let mut c = RawClient::connect(&addr);
+        c.send(&health_raw("HTTP/1.0", ""));
+        let r = c.read_response();
+        assert_eq!((r.status, r.connection.as_str()), (200, "close"));
+        c.assert_closed();
+
+        // HTTP/1.0 + `Connection: keep-alive`: stays open.
+        let mut c = RawClient::connect(&addr);
+        c.send(&health_raw("HTTP/1.0", "Connection: keep-alive\r\n"));
+        let r = c.read_response();
+        assert_eq!((r.status, r.connection.as_str()), (200, "keep-alive"));
+        c.send(&health_raw("HTTP/1.0", "Connection: keep-alive\r\n"));
+        assert_eq!(c.read_response().status, 200);
+
+        // HTTP/1.1 + `Connection: close`: closes.
+        let mut c = RawClient::connect(&addr);
+        c.send(&health_raw("HTTP/1.1", "Connection: close\r\n"));
+        let r = c.read_response();
+        assert_eq!((r.status, r.connection.as_str()), (200, "close"));
+        c.assert_closed();
+    }
+
+    // --- garbage-prefix framing: not HTTP -> 400, then close.
+    {
+        let mut c = RawClient::connect(&addr);
+        c.send(b"totally not http\r\n");
+        let r = c.read_response();
+        assert_eq!(r.status, 400, "{}", r.body);
+        c.assert_closed();
+    }
+
+    // --- newline-less flood past the line limit -> 431, then close.
+    {
+        let mut c = RawClient::connect(&addr);
+        c.send(&vec![b'z'; 9 * 1024]);
+        let r = c.read_response();
+        assert_eq!(r.status, 431, "{}", r.body);
+        c.assert_closed();
+    }
+
+    // --- one oversized header line -> 431, then close.
+    {
+        let mut c = RawClient::connect(&addr);
+        let mut raw = b"GET /v1/health HTTP/1.1\r\nX-Big: ".to_vec();
+        raw.extend(std::iter::repeat(b'h').take(9 * 1024));
+        raw.extend_from_slice(b"\r\n\r\n");
+        c.send(&raw);
+        let r = c.read_response();
+        assert_eq!(r.status, 431, "{}", r.body);
+        c.assert_closed();
+    }
+
+    // --- oversized body (declared 100 KB vs the 64 KB limit) -> 413.
+    {
+        let huge = format!(r#"{{"text": "{}"}}"#, "a".repeat(100_000));
+        let (status, v) = http_request(&addr, "POST", "/v1/query", Some(&huge)).unwrap();
+        assert_eq!(status, 413, "{v}");
+    }
+
+    // --- the server is healthy after all of that, and the abuse shows
+    //     up in the front-end counters.
+    let (status, _) = http_request(&addr, "GET", "/v1/health", None).unwrap();
+    assert_eq!(status, 200);
+    let (_, m) = http_request(&addr, "GET", "/v1/metrics", None).unwrap();
+    let mm = m.get("metrics");
+    assert!(
+        mm.get("conns_accepted").as_usize().expect("conns_accepted") >= 10,
+        "{m}"
+    );
+    assert!(mm.get("http_errors").as_usize().expect("http_errors") >= 4, "{m}");
+    if event_loop {
+        assert!(
+            mm.get("parse_stalls").as_usize().expect("parse_stalls") >= 1,
+            "byte-at-a-time delivery must register parse stalls: {m}"
+        );
+    }
+    handle.shutdown();
+}
+
+// The event-loop-dependent tests are unix-only (elsewhere `serve_http`
+// silently degrades to threaded accept, which these tests exist to
+// contrast against).
+#[cfg(unix)]
+#[test]
+fn protocol_suite_event_loop() {
+    run_protocol_suite(true, false);
+}
+
+#[cfg(unix)]
+#[test]
+fn protocol_suite_event_loop_poll_fallback() {
+    run_protocol_suite(true, true);
+}
+
+#[test]
+fn protocol_suite_threaded_accept() {
+    run_protocol_suite(false, false);
+}
+
+// ---------------------------------------------------------------------
+// Idle-connection starvation regression.
+// ---------------------------------------------------------------------
+
+/// 4× more idle keep-alive connections than workers. The event loop
+/// must serve a fresh query promptly anyway; the threaded-accept path
+/// must starve it (each idle socket pins a pool worker until the read
+/// timeout) — proving the reactor fixes a real, demonstrated failure.
+#[cfg(unix)]
+#[test]
+fn idle_keepalive_connections_starve_threaded_accept_but_not_event_loop() {
+    const WORKERS: usize = 2;
+    const IDLE: usize = 8;
+
+    // Event loop: idle connections cost an fd, not a worker.
+    {
+        let (handle, addr) = start_with(|c| {
+            c.event_loop = true;
+            c.workers = WORKERS;
+            c.read_timeout = Duration::from_secs(10);
+        });
+        let held: Vec<TcpStream> =
+            (0..IDLE).map(|_| TcpStream::connect(&addr).expect("idle conn")).collect();
+        std::thread::sleep(Duration::from_millis(300)); // reactor registers them
+
+        let t0 = Instant::now();
+        let body = QueryRequest::new("starvation probe event loop").to_json().to_string();
+        let (status, v) = http_request(&addr, "POST", "/v1/query", Some(&body)).expect("query");
+        let elapsed = t0.elapsed();
+        assert_eq!(status, 200, "{v}");
+        assert!(
+            elapsed < Duration::from_secs(5),
+            "event loop took {elapsed:?} with {IDLE} idle connections"
+        );
+
+        // The open-connections gauge sees the idle fleet.
+        let (_, m) = http_request(&addr, "GET", "/v1/metrics", None).unwrap();
+        assert!(
+            m.get("metrics").get("open_connections").as_usize().expect("gauge") >= IDLE,
+            "{m}"
+        );
+        drop(held);
+        handle.shutdown();
+    }
+
+    // Threaded accept: the same fan-in pins both workers; a fresh query
+    // queued behind the idle connections gets no answer within its
+    // deadline.
+    {
+        let (handle, addr) = start_with(|c| {
+            c.event_loop = false;
+            c.workers = WORKERS;
+            c.read_timeout = Duration::from_secs(4);
+        });
+        let held: Vec<TcpStream> =
+            (0..IDLE).map(|_| TcpStream::connect(&addr).expect("idle conn")).collect();
+        std::thread::sleep(Duration::from_millis(300)); // accepted + queued ahead
+
+        let mut probe = RawClient::connect(&addr);
+        probe.stream.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+        let body = QueryRequest::new("starvation probe threaded").to_json().to_string();
+        probe.send(
+            format!(
+                "POST /v1/query HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{}",
+                body.len(),
+                body
+            )
+            .as_bytes(),
+        );
+        let mut chunk = [0u8; 1024];
+        match probe.stream.read(&mut chunk) {
+            Ok(n) => panic!(
+                "threaded-accept served a query ({n} bytes) behind {IDLE} idle connections \
+                 on {WORKERS} workers — idle sockets no longer pin workers?"
+            ),
+            Err(e) => assert!(
+                matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ),
+                "expected a starvation timeout, got {e}"
+            ),
+        }
+        drop(held);
+        handle.shutdown();
+    }
+}
+
+// ---------------------------------------------------------------------
+// max_conns accept-time budget (event loop).
+// ---------------------------------------------------------------------
+
+#[cfg(unix)]
+#[test]
+fn event_loop_max_conns_answers_503_at_accept() {
+    let (handle, addr) = start_with(|c| {
+        c.max_conns = 4;
+    });
+    let held: Vec<TcpStream> =
+        (0..4).map(|_| TcpStream::connect(&addr).expect("budget conn")).collect();
+    std::thread::sleep(Duration::from_millis(300)); // reactor registers them
+
+    // Over budget: the server answers 503 unprompted and closes.
+    let mut c = RawClient::connect(&addr);
+    let r = c.read_response();
+    assert_eq!(r.status, 503, "{}", r.body);
+    c.assert_closed();
+
+    // Dropping the fleet frees the budget again.
+    drop(held);
+    let mut recovered = false;
+    for _ in 0..50 {
+        if let Ok((200, m)) = http_request(&addr, "GET", "/v1/metrics", None) {
+            assert!(
+                m.get("metrics").get("conns_rejected").as_usize().expect("conns_rejected") >= 1,
+                "{m}"
+            );
+            recovered = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    assert!(recovered, "server did not recover after the idle fleet closed");
+    handle.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// Seeded trace-replay property: event-loop HTTP == direct serve().
+// ---------------------------------------------------------------------
+
+fn outcome_kind(o: &Outcome) -> &'static str {
+    match o {
+        Outcome::Hit { .. } => "hit",
+        Outcome::Miss { .. } => "miss",
+        Outcome::Rejected { .. } => "rejected",
+    }
+}
+
+fn gen_trace(g: &mut Gen) -> Vec<QueryRequest> {
+    let texts = [
+        "how do i reset my password",
+        "how can i reset my password",
+        "where is my order right now",
+        "cancel my subscription today",
+        "what is the return policy",
+    ];
+    let n = g.usize_in(1, 10);
+    (0..n)
+        .map(|_| {
+            let mut req = QueryRequest::new(*g.choose(&texts));
+            if g.bool() {
+                req = req.with_threshold(g.f32_in(-1.0, 1.0));
+            }
+            if g.bool() {
+                req = req.with_ttl_ms(1 + g.u64() % 100_000);
+            }
+            if g.bool() {
+                req = req.with_top_k(g.usize_in(1, 8));
+            }
+            req
+        })
+        .collect()
+}
+
+/// The PR 3 parity convention extended to the new wire path: a random
+/// request trace replayed sequentially through the event-loop front-end
+/// must produce outcome-identical responses and identical serving
+/// counters to a direct `serve()` loop on a fresh, identically
+/// configured server.
+#[test]
+fn prop_event_loop_http_replay_matches_direct_serve() {
+    prop_check(
+        PropConfig { cases: 8, max_shrink_rounds: 24, ..Default::default() },
+        "event-http-trace-parity",
+        |g| {
+            let trace = gen_trace(g);
+
+            // Arm 1: direct serve() on the calling thread.
+            let direct = tiny_server();
+            let direct_outcomes: Vec<(String, String)> = trace
+                .iter()
+                .map(|r| {
+                    let resp = direct.serve(r);
+                    (outcome_kind(&resp.outcome).to_string(), resp.response)
+                })
+                .collect();
+
+            // Arm 2: the same trace over event-loop HTTP (batching on,
+            // the default), sequentially so the order is pinned.
+            let wire = tiny_server();
+            let handle =
+                serve_http(wire.clone(), HttpConfig { workers: 2, ..HttpConfig::default() })
+                    .map_err(|e| format!("bind: {e:#}"))?;
+            let addr = handle.local_addr().to_string();
+            let mut wire_outcomes: Vec<(String, String)> = Vec::with_capacity(trace.len());
+            for req in &trace {
+                let body = req.to_json().to_string();
+                let (status, v) = http_request(&addr, "POST", "/v1/query", Some(&body))
+                    .map_err(|e| format!("query: {e:#}"))?;
+                if status != 200 {
+                    return Err(format!("unexpected status {status}: {v}"));
+                }
+                wire_outcomes.push((
+                    v.get("outcome").get("type").as_str().unwrap_or("?").to_string(),
+                    v.get("response").as_str().unwrap_or("").to_string(),
+                ));
+            }
+            handle.shutdown();
+
+            if direct_outcomes != wire_outcomes {
+                return Err(format!(
+                    "outcomes diverged\n direct: {direct_outcomes:?}\n   wire: {wire_outcomes:?}"
+                ));
+            }
+            let dm = direct.metrics().snapshot();
+            let wm = wire.metrics().snapshot();
+            for (name, a, b) in [
+                ("requests", dm.requests, wm.requests),
+                ("cache_hits", dm.cache_hits, wm.cache_hits),
+                ("cache_misses", dm.cache_misses, wm.cache_misses),
+                ("llm_calls", dm.llm_calls, wm.llm_calls),
+                ("rejected", dm.rejected, wm.rejected),
+                ("positive_hits", dm.positive_hits, wm.positive_hits),
+                ("negative_hits", dm.negative_hits, wm.negative_hits),
+            ] {
+                if a != b {
+                    return Err(format!("counter {name} diverged: direct {a} vs wire {b}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// Short-write resumption (tiny SO_SNDBUF).
+// ---------------------------------------------------------------------
+
+/// `write_response` must deliver the whole response across short writes
+/// and `EWOULDBLOCK`: a nonblocking server-side socket with a tiny
+/// kernel send buffer against a deliberately slow reader loses no bytes.
+#[cfg(unix)]
+#[test]
+fn write_response_resumes_across_tiny_sndbuf_short_writes() {
+    use std::os::unix::io::AsRawFd;
+
+    use semcache::coordinator::http::{write_response, HttpResponse};
+    use semcache::util::poll::set_send_buffer;
+
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let reader = std::thread::spawn(move || {
+        let mut client = TcpStream::connect(addr).expect("connect");
+        client.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let mut collected = Vec::new();
+        let mut chunk = [0u8; 2048];
+        loop {
+            match client.read(&mut chunk) {
+                Ok(0) => break,
+                Ok(n) => {
+                    collected.extend_from_slice(&chunk[..n]);
+                    // Drain slowly so the tiny server-side send buffer
+                    // keeps backing up.
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Err(e) => panic!("reader failed: {e}"),
+            }
+        }
+        collected
+    });
+
+    let (mut srv, _) = listener.accept().expect("accept");
+    set_send_buffer(srv.as_raw_fd(), 4096).expect("shrink SO_SNDBUF");
+    srv.set_nonblocking(true).expect("nonblocking");
+
+    let payload = "x".repeat(512 * 1024);
+    let resp = HttpResponse { status: 200, body: format!(r#"{{"payload": "{payload}"}}"#) };
+    write_response(&mut srv, &resp, false).expect("resumable write completes");
+    drop(srv); // EOF for the reader
+
+    let got = reader.join().expect("reader thread");
+    let text = String::from_utf8(got).expect("utf-8 response");
+    let (head, body) = text.split_once("\r\n\r\n").expect("header/body split");
+    assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+    assert!(
+        head.contains(&format!("Content-Length: {}", resp.body.len())),
+        "content-length advertises the full body: {head}"
+    );
+    assert_eq!(body.len(), resp.body.len(), "bytes lost across short writes");
+    assert_eq!(body, resp.body);
+}

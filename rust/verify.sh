@@ -5,9 +5,11 @@
 #
 # Steps: format check, release build, unit+integration tests, doc tests,
 # an HTTP loopback smoke test of the `semcached` daemon (same query
-# twice over the wire -> the repeat must be a cache hit), and a smoke
-# run of the serving benches (SEMCACHE_BENCH_SMOKE=1 keeps each to a few
-# seconds). Fails fast on the first broken step.
+# twice over the wire -> the repeat must be a cache hit), an idle-fan-in
+# smoke (32 idle keep-alive connections must not starve a fresh query on
+# the default event loop), and a smoke run of the serving benches
+# (SEMCACHE_BENCH_SMOKE=1 keeps each to a few seconds). Fails fast on
+# the first broken step.
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -74,10 +76,33 @@ DISPATCHES="$(num batcher_dispatches)"
     || { echo "batcher smoke FAILED: hits($HITS)+misses($MISSES)+rejected($REJ) != requests($REQS)"; exit 1; }
 [ "${DISPATCHES:-0}" -ge 1 ] \
     || { echo "batcher smoke FAILED: /v1/query did not go through the batcher"; echo "$METRICS"; exit 1; }
+echo "    loopback smoke OK (miss -> paraphrase hit via the batcher; metrics consistent: $HITS+$MISSES+$REJ == $REQS, $DISPATCHES dispatches)"
+
+# Idle-fan-in smoke (ISSUE 5): hold 8x more idle keep-alive connections
+# than the daemon has request workers (4), then a fresh query must still
+# answer promptly — the thread-per-connection design fails exactly this
+# shape; the default event loop must not.
+echo "==> HTTP loopback smoke: 32 idle keep-alive connections vs a fresh query (event loop)"
+./target/release/semcached stress-idle --addr "$ADDR" --conns 32 --hold-ms 15000 &
+IDLE_PID=$!
+sleep 0.5
+T0=$(date +%s)
+./target/release/semcached query --addr "$ADDR" "does idle fan-in starve the event loop" >/dev/null \
+    || { echo "idle-fan-in smoke FAILED: query errored under idle fan-in"; kill "$IDLE_PID" 2>/dev/null || true; exit 1; }
+T1=$(date +%s)
+[ $((T1 - T0)) -le 3 ] \
+    || { echo "idle-fan-in smoke FAILED: query took $((T1 - T0))s behind 32 idle connections"; kill "$IDLE_PID" 2>/dev/null || true; exit 1; }
+METRICS="$(./target/release/semcached metrics --addr "$ADDR")"
+OPEN="$(num open_connections)"
+[ "${OPEN:-0}" -ge 32 ] \
+    || { echo "idle-fan-in smoke FAILED: open_connections gauge shows ${OPEN:-0} < 32"; echo "$METRICS"; kill "$IDLE_PID" 2>/dev/null || true; exit 1; }
+kill "$IDLE_PID" 2>/dev/null || true
+wait "$IDLE_PID" 2>/dev/null || true
+echo "    idle-fan-in smoke OK (query answered in $((T1 - T0))s behind $OPEN open connections)"
+
 kill "$SRV_PID" 2>/dev/null || true
 wait "$SRV_PID" 2>/dev/null || true
 trap - EXIT
-echo "    loopback smoke OK (miss -> paraphrase hit via the batcher; metrics consistent: $HITS+$MISSES+$REJ == $REQS, $DISPATCHES dispatches)"
 
 echo "==> smoke bench: bench_batch_throughput (SEMCACHE_BENCH_SMOKE=1)"
 SEMCACHE_BENCH_SMOKE=1 cargo bench --bench bench_batch_throughput
