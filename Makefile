@@ -14,9 +14,12 @@
 #   make bench-embed embedding hot path: arena + parallel encode_batch +
 #                    exact-match memo tier, with acceptance floors
 #                    (full mode; SEMCACHE_BENCH_ENFORCE=1 gates on them)
+#   make bench-persist warm restart (snapshot + WAL recovery) vs cold
+#                    re-encode rebuild at 10k entries; floor: warm >= 5x,
+#                    replayed-trace hit parity (full mode)
 #   make artifacts   lower the JAX/Pallas encoder to HLO (needs python/jax)
 
-.PHONY: verify build test serve bench-batch bench-http bench-embed artifacts
+.PHONY: verify build test serve bench-batch bench-http bench-embed bench-persist artifacts
 
 verify:
 	./rust/verify.sh
@@ -38,6 +41,9 @@ bench-http:
 
 bench-embed:
 	cd rust && cargo bench --bench bench_embed_throughput
+
+bench-persist:
+	cd rust && cargo bench --bench bench_persist_restart
 
 artifacts:
 	cd python && python -m compile.aot

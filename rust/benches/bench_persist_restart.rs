@@ -1,0 +1,175 @@
+//! Warm restart vs cold rebuild (ISSUE 6): what durability buys at
+//! startup.
+//!
+//! Arms, on the same corpus:
+//!
+//! 1. **Cold rebuild** — what a restart costs *without* durability: re-
+//!    encode every cached question through the transformer and re-insert
+//!    it into a fresh HNSW-backed cache (the "re-pay the miss storm"
+//!    lower bound; real cold starts also re-pay the LLM calls).
+//! 2. **Warm restart** — `Persistence::open` on a data dir holding a
+//!    snapshot (entries + serialized graph): decode, install, serve.
+//!
+//! Acceptance floor: **warm restart ≥ 5× faster than cold rebuild** at
+//! 10k entries (full mode), and a replayed lookup trace must report a
+//! **bit-identical hit/miss pattern and responses pre- vs post-restart**
+//! (that part is a hard assert in both modes — it is correctness, not
+//! machine-dependent performance).
+//!
+//! Run: `cargo bench --bench bench_persist_restart`
+//! Quick mode (CI / verify.sh): `SEMCACHE_BENCH_SMOKE=1 cargo bench --bench bench_persist_restart`
+//! Gate on the floor: `SEMCACHE_BENCH_ENFORCE=1`
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use semcache::cache::{CacheConfig, IndexKind, SemanticCache};
+use semcache::embedding::NativeEncoder;
+use semcache::metrics::Metrics;
+use semcache::persist::{PersistConfig, Persistence, WalSync};
+use semcache::runtime::ModelParams;
+use semcache::store::SystemClock;
+
+fn smoke() -> bool {
+    std::env::var("SEMCACHE_BENCH_SMOKE").is_ok()
+}
+
+fn params() -> ModelParams {
+    let mut p = ModelParams::default();
+    if smoke() {
+        p.layers = 1;
+        p.vocab_size = 1024;
+        p.dim = 96;
+        p.hidden = 192;
+        p.heads = 4;
+    }
+    p
+}
+
+fn cache_cfg() -> CacheConfig {
+    CacheConfig::builder().index(IndexKind::Hnsw).ttl_ms(0).build().unwrap()
+}
+
+/// Outcome fingerprint of one lookup: None = miss, Some(response).
+fn replay_trace(cache: &SemanticCache, trace: &[Vec<f32>]) -> Vec<Option<String>> {
+    trace.iter().map(|q| cache.lookup(q).map(|h| h.entry.response)).collect()
+}
+
+fn main() {
+    let p = params();
+    let n: usize = if smoke() { 2_000 } else { 10_000 };
+    let workers = 4;
+    let dir = std::env::temp_dir().join(format!("semcache-bench-persist-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let texts: Vec<String> = (0..n)
+        .map(|i| format!("customer question {i} about billing plan {} and device {}", i % 23, i % 7))
+        .collect();
+    let refs: Vec<&str> = texts.iter().map(|s| s.as_str()).collect();
+    println!(
+        "[workload: {n} cached entries, {} mode ({}d x {} layers), {workers} encode workers]",
+        if smoke() { "smoke" } else { "full" },
+        p.dim,
+        p.layers,
+    );
+
+    let enc = NativeEncoder::new(p);
+    let _ = enc.encode_batch_with_workers(&refs[..workers.min(refs.len())], 1); // warm-up
+
+    // --- arm 1: cold rebuild = re-encode everything + re-index.
+    let t0 = Instant::now();
+    let embeddings = enc.encode_batch_with_workers(&refs, workers);
+    let cold_cache = SemanticCache::new(cache_cfg());
+    for (i, e) in embeddings.iter().enumerate() {
+        cold_cache.try_insert(&texts[i], e, &format!("answer {i}")).unwrap();
+    }
+    let cold_secs = t0.elapsed().as_secs_f64();
+    println!(
+        "{:<44} {:>9.3} s   ({:.0} entries/s)",
+        "cold rebuild (re-encode + re-index)",
+        cold_secs,
+        n as f64 / cold_secs
+    );
+
+    // --- populate a durable data dir and snapshot it (setup, untimed).
+    let pcfg = PersistConfig {
+        data_dir: dir.clone(),
+        snapshot_interval_secs: 3_600,
+        wal_sync: WalSync::Os,
+    };
+    let (cache, persist, _) = Persistence::open(
+        &pcfg,
+        cache_cfg(),
+        Arc::new(SystemClock),
+        Arc::new(Metrics::new()),
+    )
+    .expect("opening data dir");
+    for (i, e) in embeddings.iter().enumerate() {
+        cache.try_insert(&texts[i], e, &format!("answer {i}")).unwrap();
+    }
+    let stats = persist.snapshot(&cache).expect("snapshot");
+    println!(
+        "{:<44} {:>9} entries, {:.1} MiB on disk",
+        "snapshot written",
+        stats.entries,
+        stats.bytes as f64 / (1024.0 * 1024.0)
+    );
+
+    // --- lookup trace: half exact repeats (hits), half novel (misses).
+    let n_trace = if smoke() { 200 } else { 500 };
+    let novel_texts: Vec<String> =
+        (0..n_trace / 2).map(|i| format!("totally new unseen question number {i}")).collect();
+    let novel_refs: Vec<&str> = novel_texts.iter().map(|s| s.as_str()).collect();
+    let mut trace: Vec<Vec<f32>> = Vec::with_capacity(n_trace);
+    for i in 0..n_trace / 2 {
+        trace.push(embeddings[(i * 37) % n].clone());
+    }
+    trace.extend(enc.encode_batch_with_workers(&novel_refs, workers));
+    let pre = replay_trace(&cache, &trace);
+    let pre_hits = pre.iter().filter(|o| o.is_some()).count();
+    drop(cache);
+    drop(persist);
+
+    // --- arm 2: warm restart from snapshot + WAL.
+    let metrics = Arc::new(Metrics::new());
+    let t0 = Instant::now();
+    let (warm_cache, _p2, rep) =
+        Persistence::open(&pcfg, cache_cfg(), Arc::new(SystemClock), metrics)
+            .expect("warm restart");
+    let warm_secs = t0.elapsed().as_secs_f64();
+    assert_eq!(rep.entries, n, "warm restart must recover every entry");
+    assert_eq!(rep.reindexed_partitions, 0, "persisted graph must load, not re-index");
+    println!(
+        "{:<44} {:>9.3} s   ({:.0} entries/s)",
+        "warm restart (snapshot + WAL recovery)",
+        warm_secs,
+        n as f64 / warm_secs
+    );
+
+    // --- hit-rate parity: hard assert, both modes.
+    let post = replay_trace(&warm_cache, &trace);
+    let post_hits = post.iter().filter(|o| o.is_some()).count();
+    assert_eq!(
+        pre, post,
+        "replayed trace must be outcome-identical pre- vs post-restart"
+    );
+    println!(
+        "{:<44} {:>6}/{} hits pre == {}/{} hits post",
+        "trace parity", pre_hits, n_trace, post_hits, n_trace
+    );
+
+    // --- acceptance floor.
+    let ratio = cold_secs / warm_secs.max(1e-9);
+    println!("\nwarm-restart speedup over cold rebuild: {ratio:.1}x  (acceptance floor: >= 5.0x)");
+    let ok = ratio >= 5.0;
+    println!(
+        "[acceptance] warm >= 5x cold: {}   trace hit parity: PASS",
+        if ok { "PASS" } else { "FAIL" },
+    );
+    println!("(SEMCACHE_BENCH_SMOKE=1 for the quick CI variant; SEMCACHE_BENCH_ENFORCE=1 to exit non-zero on FAIL)");
+    let _ = std::fs::remove_dir_all(&dir);
+    if !ok && std::env::var("SEMCACHE_BENCH_ENFORCE").is_ok() {
+        eprintln!("SEMCACHE_BENCH_ENFORCE is set and an acceptance floor was missed; exiting 1");
+        std::process::exit(1);
+    }
+}

@@ -384,6 +384,9 @@ pub enum AdminRequest {
     Flush,
     /// Run one housekeeping pass (TTL sweep + rebuild check) now.
     Housekeep,
+    /// Write a durability snapshot now and truncate the WAL it covers
+    /// (requires the daemon to be serving with `--data-dir`).
+    Snapshot,
     /// Snapshot serving metrics and cache state.
     Stats,
 }
@@ -393,6 +396,7 @@ impl AdminRequest {
         let action = match self {
             AdminRequest::Flush => "flush",
             AdminRequest::Housekeep => "housekeep",
+            AdminRequest::Snapshot => "snapshot",
             AdminRequest::Stats => "stats",
         };
         obj([("action", action.into())])
@@ -402,8 +406,11 @@ impl AdminRequest {
         match v.get("action").as_str() {
             Some("flush") => Ok(AdminRequest::Flush),
             Some("housekeep") => Ok(AdminRequest::Housekeep),
+            Some("snapshot") => Ok(AdminRequest::Snapshot),
             Some("stats") => Ok(AdminRequest::Stats),
-            Some(other) => Err(anyhow!("unknown admin action '{other}' (flush|housekeep|stats)")),
+            Some(other) => {
+                Err(anyhow!("unknown admin action '{other}' (flush|housekeep|snapshot|stats)"))
+            }
             None => Err(anyhow!("admin request must carry a string field 'action'")),
         }
     }
@@ -414,6 +421,12 @@ impl AdminRequest {
 pub enum AdminResponse {
     Flushed { removed: usize },
     Housekept { expired: usize, rebuilt: usize },
+    /// A durability snapshot was written: live entries captured and the
+    /// snapshot file size.
+    Snapshotted { entries: usize, bytes: usize },
+    /// The request named a valid action the server cannot perform in its
+    /// current configuration (e.g. `snapshot` without `--data-dir`).
+    Unsupported { reason: String },
     Stats(Value),
 }
 
@@ -428,6 +441,14 @@ impl AdminResponse {
                 ("expired", (*expired).into()),
                 ("rebuilt", (*rebuilt).into()),
             ]),
+            AdminResponse::Snapshotted { entries, bytes } => obj([
+                ("action", "snapshot".into()),
+                ("entries", (*entries).into()),
+                ("bytes", (*bytes).into()),
+            ]),
+            AdminResponse::Unsupported { reason } => {
+                obj([("error", reason.as_str().into())])
+            }
             AdminResponse::Stats(v) => v.clone(),
         }
     }
@@ -561,12 +582,24 @@ mod tests {
 
     #[test]
     fn admin_roundtrip() {
-        for a in [AdminRequest::Flush, AdminRequest::Housekeep, AdminRequest::Stats] {
+        for a in [
+            AdminRequest::Flush,
+            AdminRequest::Housekeep,
+            AdminRequest::Snapshot,
+            AdminRequest::Stats,
+        ] {
             let wire = a.to_json().to_string();
             assert_eq!(AdminRequest::from_json(&parse(&wire).unwrap()).unwrap(), a);
         }
         assert!(AdminRequest::from_json(&parse(r#"{"action": "reboot"}"#).unwrap()).is_err());
         let r = AdminResponse::Housekept { expired: 3, rebuilt: 1 };
         assert_eq!(r.to_json().get("expired").as_usize(), Some(3));
+        let r = AdminResponse::Snapshotted { entries: 12, bytes: 4096 };
+        let j = r.to_json();
+        assert_eq!(j.get("action").as_str(), Some("snapshot"));
+        assert_eq!(j.get("entries").as_usize(), Some(12));
+        assert_eq!(j.get("bytes").as_usize(), Some(4096));
+        let r = AdminResponse::Unsupported { reason: "no data dir".into() };
+        assert_eq!(r.to_json().get("error").as_str(), Some("no data dir"));
     }
 }

@@ -59,6 +59,7 @@ fn load_config(args: &Args) -> Result<Config> {
             "workers",
             "populate",
             "port-file",
+            "data-dir",
             "batch-max-size",
             "batch-wait-us",
             "batch-queue",
@@ -75,7 +76,11 @@ fn load_config(args: &Args) -> Result<Config> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let cfg = load_config(args)?;
+    let mut cfg = load_config(args)?;
+    if let Some(dir) = args.opt("data-dir") {
+        cfg.data_dir = dir.to_string();
+        cfg.validate()?;
+    }
     // The validating builders are the construction path for the daemon:
     // a bad --similarity_threshold (NaN, out of range) fails here, at
     // startup, not as a panic mid-request — and so do bad batcher knobs
@@ -94,7 +99,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
     batch.validate()?;
     server_cfg.batch = batch;
     let encoder = build_encoder(&cfg)?;
-    let server = Arc::new(Server::new(encoder, server_cfg));
+    // `try_new` recovers persisted state (snapshot + WAL replay) when a
+    // data dir is configured; without one it is identical to `new`.
+    let server = Arc::new(Server::try_new(encoder, server_cfg)?);
+    if server.persistence().is_some() {
+        let rec = server.recovery();
+        eprintln!(
+            "[durability: {} entries recovered ({} WAL records replayed{}{}) from {}]",
+            rec.entries,
+            rec.replayed,
+            if rec.torn_tail { ", torn tail trimmed" } else { "" },
+            if rec.expired_during_downtime > 0 {
+                format!(", {} expired during downtime", rec.expired_during_downtime)
+            } else {
+                String::new()
+            },
+            cfg.data_dir,
+        );
+    }
 
     if let Some(scale) = args.opt("populate") {
         let ds_cfg = match scale {
@@ -109,6 +131,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         server.register_ground_truth(&ds);
     }
     let _hk = server.start_housekeeping(Duration::from_millis(cfg.housekeeping_ms));
+    // Periodic snapshots (and WAL truncation) while serving with a data
+    // dir; `None` keeps the guard optional without a second code path.
+    let _snap = server
+        .persistence()
+        .is_some()
+        .then(|| server.start_snapshotter(Duration::from_secs(cfg.snapshot_interval_secs)));
 
     let port: u16 = args.opt_parse("port", 8080)?;
     let bind = args.opt("bind").unwrap_or("127.0.0.1");
@@ -253,8 +281,9 @@ fn cmd_admin(args: &Args) -> Result<()> {
     let action = match args.positional().first().map(|s| s.as_str()) {
         Some("flush") => semcache::api::AdminRequest::Flush,
         Some("housekeep") => semcache::api::AdminRequest::Housekeep,
+        Some("snapshot") => semcache::api::AdminRequest::Snapshot,
         Some("stats") | None => semcache::api::AdminRequest::Stats,
-        Some(other) => bail!("unknown admin action '{other}' (flush|housekeep|stats)"),
+        Some(other) => bail!("unknown admin action '{other}' (flush|housekeep|snapshot|stats)"),
     };
     let (status, body) = http_request(
         &addr_of(args),

@@ -13,7 +13,7 @@ mod adaptive;
 mod partition;
 
 pub use adaptive::AdaptiveThreshold;
-pub use partition::Partition;
+pub use partition::{EntryDump, Partition, PartitionDump};
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -183,6 +183,31 @@ pub struct CachedEntry {
     pub cluster: u64,
 }
 
+/// Observer of cache mutations, implemented by the persistence layer's
+/// WAL ([`crate::persist::Persistence`]). Hooks fire *after* the mutation
+/// is applied in memory — that ordering is what makes snapshot WAL
+/// rotation race-free (any mutation applied after the snapshot's memory
+/// capture necessarily lands in the post-rotation segment). The journal
+/// is attached only after recovery replay, so replayed mutations are
+/// never re-logged.
+pub trait CacheJournal: Send + Sync {
+    /// A new entry: its partition dim, assigned id, raw (unnormalized)
+    /// embedding, payload, and absolute wall-clock expiry
+    /// (`u64::MAX` = immortal).
+    fn log_insert(
+        &self,
+        dim: usize,
+        id: u64,
+        embedding: &[f32],
+        entry: &CachedEntry,
+        expires_wall_ms: u64,
+    );
+    /// An explicit removal of entry `id` in partition `dim`.
+    fn log_remove(&self, dim: usize, id: u64);
+    /// A full flush (`/v1/admin` flush).
+    fn log_clear(&self);
+}
+
 /// A successful lookup.
 #[derive(Debug, Clone)]
 pub struct CacheHit {
@@ -202,6 +227,8 @@ pub struct SemanticCache {
     cfg: CacheConfig,
     partitions: std::sync::RwLock<HashMap<usize, Arc<Partition>>>,
     clock: Arc<dyn Clock>,
+    /// Mutation observer (WAL); `None` until durability is enabled.
+    journal: std::sync::RwLock<Option<Arc<dyn CacheJournal>>>,
 }
 
 impl SemanticCache {
@@ -210,11 +237,40 @@ impl SemanticCache {
     }
 
     pub fn with_clock(cfg: CacheConfig, clock: Arc<dyn Clock>) -> Self {
-        Self { cfg, partitions: std::sync::RwLock::new(HashMap::new()), clock }
+        Self {
+            cfg,
+            partitions: std::sync::RwLock::new(HashMap::new()),
+            clock,
+            journal: std::sync::RwLock::new(None),
+        }
     }
 
     pub fn config(&self) -> &CacheConfig {
         &self.cfg
+    }
+
+    /// The clock this cache (and its partitions' stores) runs on.
+    pub fn clock(&self) -> Arc<dyn Clock> {
+        self.clock.clone()
+    }
+
+    /// Attach a mutation journal. Called after recovery replay so that
+    /// replayed mutations are not logged a second time.
+    pub fn set_journal(&self, journal: Arc<dyn CacheJournal>) {
+        *self.journal.write().unwrap() = Some(journal);
+    }
+
+    fn journal(&self) -> Option<Arc<dyn CacheJournal>> {
+        self.journal.read().unwrap().clone()
+    }
+
+    /// All populated partitions (snapshot/recovery iteration order is
+    /// made deterministic by sorting on dim).
+    pub fn partitions(&self) -> Vec<Arc<Partition>> {
+        let mut parts: Vec<Arc<Partition>> =
+            self.partitions.read().unwrap().values().cloned().collect();
+        parts.sort_by_key(|p| p.dim());
+        parts
     }
 
     /// The partition for a given embedding size, created on first use
@@ -294,7 +350,34 @@ impl SemanticCache {
         if embedding.is_empty() {
             bail!("cannot insert an empty embedding");
         }
-        Ok(self.partition(embedding.len()).insert_with_ttl(embedding, entry, ttl_ms))
+        let p = self.partition(embedding.len());
+        match self.journal() {
+            None => Ok(p.insert_with_ttl(embedding, entry, ttl_ms)),
+            Some(journal) => {
+                // Apply first, then log (see [`CacheJournal`] ordering).
+                let id = p.insert_with_ttl(embedding, entry.clone(), ttl_ms);
+                let ttl = ttl_ms.unwrap_or(self.cfg.ttl_ms);
+                let expires_wall_ms =
+                    if ttl == 0 { u64::MAX } else { self.clock.wall_ms() + ttl };
+                journal.log_insert(embedding.len(), id, embedding, &entry, expires_wall_ms);
+                Ok(id)
+            }
+        }
+    }
+
+    /// Remove one entry by partition dim and id (store, index, and
+    /// embedding map together). Returns whether a live entry was removed.
+    pub fn remove_entry(&self, dim: usize, id: u64) -> bool {
+        let Some(p) = self.partition_if_exists(dim) else {
+            return false;
+        };
+        let removed = p.remove_id(id);
+        if removed {
+            if let Some(journal) = self.journal() {
+                journal.log_remove(dim, id);
+            }
+        }
+        removed
     }
 
     /// Pre-v1 insert with the `0 = rejected` sentinel.
@@ -316,9 +399,15 @@ impl SemanticCache {
     /// Drop every entry and partition. Returns the number of live
     /// entries removed (the `/v1/admin` flush operation).
     pub fn clear(&self) -> usize {
-        let mut parts = self.partitions.write().unwrap();
-        let removed = parts.values().map(|p| p.len()).sum();
-        parts.clear();
+        let removed = {
+            let mut parts = self.partitions.write().unwrap();
+            let removed = parts.values().map(|p| p.len()).sum();
+            parts.clear();
+            removed
+        };
+        if let Some(journal) = self.journal() {
+            journal.log_clear();
+        }
         removed
     }
 

@@ -29,10 +29,33 @@ pub struct Partition {
     /// Embeddings of live entries, kept for rebuilds (id -> embedding).
     embeddings: Mutex<std::collections::HashMap<u64, Vec<f32>>>,
     top_k: usize,
+    clock: Arc<dyn Clock>,
 }
 
 fn key(id: u64) -> String {
     format!("e{id:016x}")
+}
+
+/// One entry as captured by [`Partition::dump`]: everything needed to
+/// reconstruct it in a fresh process. Expiry is wall-clock absolute
+/// (`u64::MAX` = immortal) so it survives the restart of the process'
+/// monotonic epoch.
+#[derive(Debug, Clone)]
+pub struct EntryDump {
+    pub id: u64,
+    pub expires_wall_ms: u64,
+    pub entry: CachedEntry,
+    pub embedding: Vec<f32>,
+}
+
+/// Point-in-time capture of one partition (snapshot payload).
+pub struct PartitionDump {
+    pub dim: usize,
+    pub next_id: u64,
+    /// Live entries, sorted by id (deterministic bytes for a given state).
+    pub entries: Vec<EntryDump>,
+    /// Serialized ANN graph, when the index kind supports it (HNSW).
+    pub graph: Option<Vec<u8>>,
 }
 
 impl Partition {
@@ -47,7 +70,7 @@ impl Partition {
                 capacity: cfg.capacity,
                 default_ttl_ms: cfg.ttl_ms,
             },
-            clock,
+            clock.clone(),
         );
         Self {
             dim,
@@ -56,6 +79,7 @@ impl Partition {
             next_id: AtomicU64::new(1),
             embeddings: Mutex::new(std::collections::HashMap::new()),
             top_k: cfg.top_k.max(1),
+            clock,
         }
     }
 
@@ -129,18 +153,48 @@ impl Partition {
         self.store.len()
     }
 
-    /// Drop expired store entries; returns the count.
-    pub fn sweep_expired(&self) -> usize {
-        self.store.sweep_expired()
+    /// Next id this partition would assign (persisted so recovered
+    /// processes never reuse an id).
+    pub fn next_id(&self) -> u64 {
+        self.next_id.load(Ordering::Relaxed)
     }
 
-    /// Tombstone fraction of the index (0 when empty).
+    /// Ensure future ids start at `floor` or later.
+    pub fn bump_next_id(&self, floor: u64) {
+        self.next_id.fetch_max(floor, Ordering::Relaxed);
+    }
+
+    /// Drop expired entries from the store *and* tombstone their index
+    /// nodes + embeddings in the same pass; returns the count.
+    ///
+    /// This is the one sweep path: sweeping only the store (the old
+    /// behaviour) left the partition's index nodes live, so expired
+    /// entries kept steering searches and `garbage_ratio()` under-counted
+    /// until a lookup happened to trip over each dead id.
+    pub fn sweep_expired(&self) -> usize {
+        let keys = self.store.sweep_expired_keys();
+        if keys.is_empty() {
+            return 0;
+        }
+        let mut index = self.index.write().unwrap();
+        let mut embeddings = self.embeddings.lock().unwrap();
+        for k in &keys {
+            if let Ok(id) = u64::from_str_radix(&k[1..], 16) {
+                index.remove(id);
+                embeddings.remove(&id);
+            }
+        }
+        keys.len()
+    }
+
+    /// Garbage fraction of the index: tombstoned slots plus entries dead
+    /// in the store but still live in the index (0 when empty).
     pub fn garbage_ratio(&self) -> f64 {
         let index = self.index.read().unwrap();
         let live = self.store.len();
-        let slots = index.len().max(live);
-        // Index len() counts non-tombstoned nodes; entries expired in the
-        // store but still live in the index also count as garbage.
+        // slots() counts tombstoned HNSW nodes too, so graph garbage is
+        // visible even after the store and index agree on live entries.
+        let slots = index.slots().max(live);
         if slots == 0 {
             return 0.0;
         }
@@ -179,6 +233,102 @@ impl Partition {
         let live_ids: std::collections::HashSet<u64> = live.iter().map(|(id, _)| *id).collect();
         self.embeddings.lock().unwrap().retain(|id, _| live_ids.contains(id));
         true
+    }
+
+    /// Capture this partition for a snapshot: live entries (wall-clock
+    /// expiry), their embeddings, the id allocator, and the serialized
+    /// ANN graph where the index kind supports it.
+    pub fn dump(&self) -> PartitionDump {
+        let now_mono = self.clock.now_ms();
+        let wall_now = self.clock.wall_ms();
+        let mut entries = Vec::new();
+        {
+            let embeddings = self.embeddings.lock().unwrap();
+            self.store.for_each_with_expiry(|k, v, exp| {
+                if let Ok(id) = u64::from_str_radix(&k[1..], 16) {
+                    if let Some(e) = embeddings.get(&id) {
+                        let expires_wall_ms = if exp == u64::MAX {
+                            u64::MAX
+                        } else {
+                            wall_now + exp.saturating_sub(now_mono)
+                        };
+                        entries.push(EntryDump {
+                            id,
+                            expires_wall_ms,
+                            entry: v.clone(),
+                            embedding: e.clone(),
+                        });
+                    }
+                }
+            });
+        }
+        entries.sort_by_key(|e| e.id);
+        let graph = self.index.read().unwrap().dump_graph();
+        PartitionDump {
+            dim: self.dim,
+            next_id: self.next_id(),
+            entries,
+            graph,
+        }
+    }
+
+    /// Re-apply one persisted entry during recovery. Entries whose wall
+    /// expiry already passed (they died during downtime) are not
+    /// restored; any matching node in an installed graph is tombstoned
+    /// instead, to be reclaimed by the next snapshot's compaction.
+    /// Returns whether the entry was restored live.
+    pub fn restore_entry(
+        &self,
+        id: u64,
+        embedding: &[f32],
+        entry: CachedEntry,
+        expires_wall_ms: u64,
+    ) -> bool {
+        if embedding.len() != self.dim {
+            return false; // malformed record: never panic on recovery
+        }
+        self.bump_next_id(id + 1);
+        let wall_now = self.clock.wall_ms();
+        if expires_wall_ms != u64::MAX && expires_wall_ms <= wall_now {
+            self.index.write().unwrap().remove(id);
+            self.embeddings.lock().unwrap().remove(&id);
+            return false;
+        }
+        let ttl = if expires_wall_ms == u64::MAX { 0 } else { expires_wall_ms - wall_now };
+        self.store.set_ttl(&key(id), entry, ttl);
+        self.embeddings.lock().unwrap().insert(id, embedding.to_vec());
+        // For graph-loaded ids this is an in-place vector overwrite (the
+        // normalization is deterministic, so the stored bits are
+        // unchanged); for WAL-suffix ids it is a real graph insert,
+        // replayed in original insert order against the snapshotted
+        // level-sampler state — the rebuilt graph matches the live one.
+        self.index.write().unwrap().insert(id, embedding);
+        true
+    }
+
+    /// Remove an entry by id across store, index, and embedding map.
+    /// Returns whether the store held it live.
+    pub fn remove_id(&self, id: u64) -> bool {
+        let was_live = self.store.remove(&key(id));
+        self.index.write().unwrap().remove(id);
+        self.embeddings.lock().unwrap().remove(&id);
+        was_live
+    }
+
+    /// Replace the ANN index with a recovered one (must match this
+    /// partition's dimensionality). Returns whether it was installed.
+    pub fn install_index(&self, idx: Box<dyn VectorIndex>) -> bool {
+        if idx.dim() != self.dim {
+            return false;
+        }
+        *self.index.write().unwrap() = idx;
+        true
+    }
+
+    /// Whether the partition's index is HNSW-backed (recovery decides
+    /// whether a persisted graph is applicable to the current config).
+    pub fn index_is_hnsw(&self) -> bool {
+        self.index.read().unwrap().is_hnsw()
     }
 }
 
@@ -229,6 +379,44 @@ mod tests {
         assert!(p.lookup(&axis(0), 0.8).is_none(), "evicted entry returned");
         assert!(p.lookup(&axis(1), 0.8).is_some());
         assert!(p.lookup(&axis(2), 0.8).is_some());
+    }
+
+    #[test]
+    fn sweep_tombstones_index_nodes_and_garbage_ratio_reflects_it() {
+        // Regression (ISSUE 6 satellite): the pre-durability sweep only
+        // emptied the KV store, leaving the partition's index nodes live
+        // — expired entries kept steering searches and garbage_ratio()
+        // under-counted until a lookup happened to trip over each dead
+        // id. The unified sweep must tombstone store, index, and the
+        // embedding map in one pass.
+        let (p, clock) = part(100, 0);
+        for i in 0..4 {
+            p.insert(&axis(i), entry(&format!("dead{i}")));
+        }
+        clock.advance(200); // the first four expire at t=100
+        for i in 4..8 {
+            p.insert(&axis(i), entry(&format!("live{i}")));
+        }
+        assert_eq!(p.sweep_expired(), 4);
+        assert_eq!(p.len(), 4);
+        // 8 index slots (4 tombstoned), 4 live: the garbage is visible
+        // immediately, without any lookup having touched the dead ids.
+        assert!(
+            (p.garbage_ratio() - 0.5).abs() < 1e-9,
+            "garbage_ratio must count swept index nodes, got {}",
+            p.garbage_ratio()
+        );
+        for i in 0..4 {
+            assert!(p.lookup(&axis(i), 0.9).is_none(), "swept direction {i} must miss");
+        }
+        for i in 4..8 {
+            assert!(p.lookup(&axis(i), 0.9).is_some(), "live direction {i} must hit");
+        }
+        // Rebuild reclaims the tombstones entirely.
+        assert!(p.rebuild());
+        assert_eq!(p.garbage_ratio(), 0.0);
+        // A second sweep finds nothing (idempotent).
+        assert_eq!(p.sweep_expired(), 0);
     }
 
     #[test]

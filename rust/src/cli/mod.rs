@@ -118,7 +118,7 @@ SUBCOMMANDS:
                  /v1/admin; GET /v1/metrics, /v1/health)
     query        Send one query to a running daemon and print the JSON reply
     metrics      Fetch /v1/metrics from a running daemon
-    admin        Send an admin action (flush | housekeep | stats)
+    admin        Send an admin action (flush | housekeep | snapshot | stats)
     stress-idle  Hold idle keep-alive connections open against a daemon
                  (--conns N, --hold-ms MS; probes idle-fan-in behavior)
     help         Show this message
@@ -144,10 +144,16 @@ SERVE OPTIONS:
     --populate <scale>       Pre-populate from the synthetic workload
                              (paper | small | tiny)
     --port-file <path>       Write the bound host:port to a file once ready
+    --data-dir <path>        Durability: recover cache state from this
+                             directory at startup, journal every mutation
+                             (WAL) and snapshot periodically; omit for
+                             pure in-memory serving
     --config <path>          TOML config file (configs/*.toml)
     --<config-key> <value>   Any config key (e.g. --similarity_threshold 0.75,
                              --embed_memo_capacity 4096 [0 = no memo tier],
-                             --embed_memo_shards 8, --embed_workers 0 [auto])
+                             --snapshot_interval_secs 60,
+                             --wal_sync os|always [os survives SIGKILL,
+                             always also survives power loss])
 
 CLIENT OPTIONS (query | metrics | admin):
     --addr <host:port>       Daemon address (default 127.0.0.1:8080)

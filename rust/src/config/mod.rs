@@ -84,6 +84,16 @@ pub struct Config {
     /// Event-loop connection cap; connections beyond it are answered
     /// 503 at accept time.
     pub http_max_conns: usize,
+
+    // Durability (crate::persist)
+    /// Directory for WAL segments + snapshots; empty disables
+    /// persistence (pure in-memory serving, the pre-durability default).
+    pub data_dir: String,
+    /// Seconds between automatic snapshots (WAL truncation points).
+    pub snapshot_interval_secs: u64,
+    /// WAL fsync policy: "os" (write only; survives SIGKILL) or
+    /// "always" (fsync per record; survives power loss).
+    pub wal_sync: String,
 }
 
 impl Default for Config {
@@ -115,6 +125,9 @@ impl Default for Config {
             housekeeping_ms: 1000,
             http_event_loop: true,
             http_max_conns: 1024,
+            data_dir: String::new(),
+            snapshot_interval_secs: 60,
+            wal_sync: "os".into(),
         }
     }
 }
@@ -206,6 +219,9 @@ impl Config {
             "housekeeping_ms" => self.housekeeping_ms = num!(),
             "http_event_loop" => self.http_event_loop = num!(),
             "http_max_conns" => self.http_max_conns = num!(),
+            "data_dir" => self.data_dir = raw.to_string(),
+            "snapshot_interval_secs" => self.snapshot_interval_secs = num!(),
+            "wal_sync" => self.wal_sync = raw.to_string(),
             other => bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -238,6 +254,13 @@ impl Config {
         }
         if self.http_max_conns == 0 {
             bail!("http_max_conns must be >= 1");
+        }
+        match self.wal_sync.as_str() {
+            "os" | "always" => {}
+            other => bail!("wal_sync must be os|always, got '{other}'"),
+        }
+        if !self.data_dir.is_empty() && self.snapshot_interval_secs == 0 {
+            bail!("snapshot_interval_secs must be >= 1 when persistence is enabled");
         }
         Ok(())
     }
@@ -294,6 +317,28 @@ mod tests {
         c.validate().unwrap();
         c.http_max_conns = 0;
         assert!(c.validate().is_err(), "a zero connection budget serves nothing");
+    }
+
+    #[test]
+    fn persistence_keys_roundtrip_and_validate() {
+        let mut c = Config::default();
+        assert_eq!(c.data_dir, "", "persistence is off by default");
+        assert_eq!(c.snapshot_interval_secs, 60);
+        assert_eq!(c.wal_sync, "os");
+        c.set("persist.data_dir", "/tmp/semcache-data").unwrap();
+        c.set("snapshot_interval_secs", "5").unwrap();
+        c.set("wal_sync", "always").unwrap();
+        assert_eq!(c.data_dir, "/tmp/semcache-data");
+        assert_eq!(c.snapshot_interval_secs, 5);
+        assert_eq!(c.wal_sync, "always");
+        c.validate().unwrap();
+        c.wal_sync = "maybe".into();
+        assert!(c.validate().is_err(), "unknown fsync policy must be rejected");
+        c.wal_sync = "os".into();
+        c.snapshot_interval_secs = 0;
+        assert!(c.validate().is_err(), "zero interval with a data dir is a footgun");
+        c.data_dir.clear(); // persistence off: interval irrelevant
+        c.validate().unwrap();
     }
 
     #[test]

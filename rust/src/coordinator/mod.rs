@@ -51,7 +51,10 @@ mod trace;
 
 pub use batcher::{BatchConfig, BatchExecutor, Batcher, SubmitError};
 pub use http::{http_request, serve_http, HttpConfig, HttpHandle};
-pub use server::{Reply, ReplySource, Server, ServerConfig, ServerConfigBuilder};
+pub use server::{
+    HousekeepingGuard, Reply, ReplySource, Server, ServerConfig, ServerConfigBuilder,
+    SnapshotGuard,
+};
 pub use trace::{TraceConfig, TraceReport, TraceRunner};
 
 /// The serving coordinator — alias for [`Server`], matching the

@@ -25,6 +25,7 @@ use crate::error::{bail, Result};
 use crate::json::{obj, Value};
 use crate::llm::{Judge, JudgeConfig, SimLlm, SimLlmConfig};
 use crate::metrics::Metrics;
+use crate::persist::{PersistConfig, Persistence, RecoveryReport, SnapshotStats};
 use crate::workload::{Dataset, QaPair};
 
 /// Server construction knobs.
@@ -39,6 +40,10 @@ pub struct ServerConfig {
     /// spawned via [`Server::start_batcher`] (the HTTP front-end's
     /// default query path).
     pub batch: BatchConfig,
+    /// Durability settings; `None` serves purely in memory (the default).
+    /// With `Some`, [`Server::try_new`] recovers state from the data dir
+    /// at startup and journals every cache mutation.
+    pub persist: Option<PersistConfig>,
 }
 
 impl Default for ServerConfig {
@@ -49,6 +54,7 @@ impl Default for ServerConfig {
             judge: JudgeConfig::default(),
             workers: 4,
             batch: BatchConfig::default(),
+            persist: None,
         }
     }
 }
@@ -68,6 +74,11 @@ impl ServerConfig {
             bail!("server workers must be >= 1");
         }
         self.batch.validate()?;
+        if let Some(p) = &self.persist {
+            if p.snapshot_interval_secs == 0 {
+                bail!("snapshot_interval_secs must be >= 1");
+            }
+        }
         Ok(())
     }
 
@@ -90,6 +101,7 @@ impl ServerConfig {
                 max_wait_us: cfg.batch_window_us.min(MAX_WAIT_US_LIMIT),
                 ..BatchConfig::default()
             })
+            .persist(PersistConfig::from_app_config(cfg))
             .build()
     }
 }
@@ -123,6 +135,11 @@ impl ServerConfigBuilder {
 
     pub fn batch(mut self, batch: BatchConfig) -> Self {
         self.cfg.batch = batch;
+        self
+    }
+
+    pub fn persist(mut self, persist: Option<PersistConfig>) -> Self {
+        self.cfg.persist = persist;
         self
     }
 
@@ -210,22 +227,102 @@ pub struct Server {
     /// are the v1 way to vary the gate.
     threshold_override: AtomicU64,
     housekeeping_stop: Arc<AtomicBool>,
+    snapshot_stop: Arc<AtomicBool>,
+    /// Durability engine when serving with a data dir.
+    persist: Option<Arc<Persistence>>,
+    /// What startup recovery restored (all-zero without persistence).
+    recovery: RecoveryReport,
 }
 
 impl Server {
+    /// Build an in-memory server. Panics only if `cfg.persist` is set
+    /// and its data dir is unusable — construction with persistence
+    /// should go through [`Server::try_new`] instead.
     pub fn new(encoder: Arc<dyn Encoder>, cfg: ServerConfig) -> Self {
-        Self {
+        Self::try_new(encoder, cfg).expect("in-memory server construction cannot fail")
+    }
+
+    /// Build a server, recovering persisted state first when
+    /// `cfg.persist` is set (snapshot load + WAL replay; see
+    /// [`crate::persist`]). Fails only on unusable data dirs — corrupt
+    /// WAL/snapshot *contents* degrade to partial recovery, not errors.
+    pub fn try_new(encoder: Arc<dyn Encoder>, cfg: ServerConfig) -> Result<Self> {
+        let metrics = Arc::new(Metrics::new());
+        let (cache, persist, recovery) = match &cfg.persist {
+            Some(pcfg) => {
+                let (cache, p, report) = Persistence::open(
+                    pcfg,
+                    cfg.cache.clone(),
+                    Arc::new(crate::store::SystemClock),
+                    metrics.clone(),
+                )?;
+                (cache, Some(p), report)
+            }
+            None => (SemanticCache::new(cfg.cache.clone()), None, RecoveryReport::default()),
+        };
+        Ok(Self {
             encoder,
-            cache: SemanticCache::new(cfg.cache),
+            cache,
             llm: SimLlm::new(cfg.llm),
             judge: Judge::new(cfg.judge),
-            metrics: Arc::new(Metrics::new()),
+            metrics,
             workers: cfg.workers.max(1),
             batch_cfg: cfg.batch,
             ground_truth: RwLock::new(HashMap::new()),
             threshold_override: AtomicU64::new(0),
             housekeeping_stop: Arc::new(AtomicBool::new(false)),
+            snapshot_stop: Arc::new(AtomicBool::new(false)),
+            persist,
+            recovery,
+        })
+    }
+
+    /// The durability engine, when serving with a data dir.
+    pub fn persistence(&self) -> Option<Arc<Persistence>> {
+        self.persist.clone()
+    }
+
+    /// What startup recovery restored (all-zero without persistence).
+    pub fn recovery(&self) -> &RecoveryReport {
+        &self.recovery
+    }
+
+    /// Write a durability snapshot now (admin `snapshot` verb and the
+    /// periodic snapshotter both route through here).
+    pub fn snapshot_now(&self) -> Result<SnapshotStats> {
+        match &self.persist {
+            Some(p) => p.snapshot(&self.cache),
+            None => bail!("snapshot requires the daemon to serve with --data-dir"),
         }
+    }
+
+    /// Spawn the periodic snapshot thread (no-op without persistence).
+    /// Returns a guard; dropping it stops the thread promptly (the wait
+    /// is sliced so a long interval never delays shutdown).
+    pub fn start_snapshotter(self: &Arc<Self>, interval: Duration) -> SnapshotGuard {
+        let stop = self.snapshot_stop.clone();
+        stop.store(false, Ordering::SeqCst);
+        let server = self.clone();
+        let handle = std::thread::Builder::new()
+            .name("snapshotter".into())
+            .spawn(move || {
+                let tick = Duration::from_millis(50).min(interval);
+                let mut elapsed = Duration::ZERO;
+                while !server.snapshot_stop.load(Ordering::SeqCst) {
+                    std::thread::sleep(tick);
+                    elapsed += tick;
+                    if elapsed >= interval {
+                        elapsed = Duration::ZERO;
+                        if server.persist.is_some() {
+                            if let Err(e) = server.snapshot_now() {
+                                eprintln!("semcache: periodic snapshot failed: {e:#}");
+                            }
+                        }
+                    }
+                }
+            })
+            .expect("spawn snapshotter");
+        SnapshotGuard { stop: self.snapshot_stop.clone(), handle: Some(handle) }
     }
 
     pub fn metrics(&self) -> Arc<Metrics> {
@@ -682,6 +779,10 @@ impl Server {
                 let (expired, rebuilt) = self.cache.housekeep();
                 AdminResponse::Housekept { expired, rebuilt }
             }
+            AdminRequest::Snapshot => match self.snapshot_now() {
+                Ok(s) => AdminResponse::Snapshotted { entries: s.entries, bytes: s.bytes },
+                Err(e) => AdminResponse::Unsupported { reason: format!("{e:#}") },
+            },
             AdminRequest::Stats => AdminResponse::Stats(self.stats_json()),
         }
     }
@@ -800,6 +901,21 @@ pub struct HousekeepingGuard {
 }
 
 impl Drop for HousekeepingGuard {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Stops the periodic snapshot thread on drop.
+pub struct SnapshotGuard {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Drop for SnapshotGuard {
     fn drop(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
         if let Some(h) = self.handle.take() {
@@ -1047,6 +1163,73 @@ mod tests {
         let guard = s.start_housekeeping(Duration::from_millis(5));
         std::thread::sleep(Duration::from_millis(30));
         drop(guard); // must join cleanly
+    }
+
+    #[test]
+    fn snapshotter_thread_runs_and_stops() {
+        let s = server();
+        // Without persistence the ticks are no-ops; the guard must still
+        // stop a long-interval thread promptly (sliced wait).
+        let guard = s.start_snapshotter(Duration::from_secs(3600));
+        std::thread::sleep(Duration::from_millis(20));
+        let t0 = Instant::now();
+        drop(guard);
+        assert!(t0.elapsed() < Duration::from_secs(5), "guard must not wait out the interval");
+    }
+
+    #[test]
+    fn snapshot_admin_without_data_dir_is_unsupported() {
+        let s = server();
+        match s.admin(&AdminRequest::Snapshot) {
+            AdminResponse::Unsupported { reason } => {
+                assert!(reason.contains("--data-dir"), "unhelpful reason: {reason}")
+            }
+            other => panic!("expected Unsupported, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn persistence_roundtrip_across_server_instances() {
+        let dir = std::env::temp_dir()
+            .join(format!("semcache-server-persist-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let pcfg = || {
+            Some(crate::persist::PersistConfig {
+                data_dir: dir.clone(),
+                snapshot_interval_secs: 60,
+                wal_sync: crate::persist::WalSync::Os,
+            })
+        };
+        let cfg = ServerConfig::builder().persist(pcfg()).build().unwrap();
+        let s = Arc::new(Server::try_new(small_encoder(), cfg).unwrap());
+        assert_eq!(s.recovery().entries, 0, "cold start");
+        let r1 = s.handle("how do i reset my password", None);
+        assert_eq!(r1.source, ReplySource::Llm);
+        // Admin snapshot covers the first entry; the second rides the WAL.
+        match s.admin(&AdminRequest::Snapshot) {
+            AdminResponse::Snapshotted { entries, bytes } => {
+                assert_eq!(entries, 1);
+                assert!(bytes > 0);
+            }
+            other => panic!("expected Snapshotted, got {other:?}"),
+        }
+        let r2 = s.handle("a completely different question about gadgets", None);
+        drop(s);
+
+        let cfg = ServerConfig::builder().persist(pcfg()).build().unwrap();
+        let s2 = Arc::new(Server::try_new(small_encoder(), cfg).unwrap());
+        assert!(s2.recovery().snapshot_loaded);
+        assert_eq!(s2.recovery().entries, 2, "snapshot entry + WAL entry");
+        assert_eq!(s2.metrics().snapshot().recovered_entries, 2);
+        // Paraphrase of the snapshotted entry hits with its original response.
+        let h = s2.handle("how can i reset my password", None);
+        assert!(matches!(h.source, ReplySource::Cache { .. }), "recovered entry must hit");
+        assert_eq!(h.response, r1.response);
+        // Exact repeat of the WAL-replayed entry hits too.
+        let h2 = s2.handle("a completely different question about gadgets", None);
+        assert!(matches!(h2.source, ReplySource::Cache { .. }));
+        assert_eq!(h2.response, r2.response);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -134,6 +134,10 @@ impl VectorIndex for FlatIndex {
     fn dim(&self) -> usize {
         self.dim
     }
+
+    fn slots(&self) -> usize {
+        self.ids.len()
+    }
 }
 
 #[cfg(test)]

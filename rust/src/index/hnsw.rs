@@ -47,6 +47,11 @@ impl Default for HnswConfig {
     }
 }
 
+/// Version tag of [`HnswIndex::dump`]'s byte format. Bump on any layout
+/// change; recovery treats a mismatched version as "re-index from stored
+/// embeddings", not an error.
+pub const HNSW_DUMP_VERSION: u32 = 1;
+
 struct Node {
     id: u64,
     level: usize,
@@ -289,6 +294,158 @@ impl HnswIndex {
         out
     }
 
+    /// Serialize the full graph (vectors, adjacency, tombstones, entry
+    /// point, level-sampler state) into `buf`. A graph loaded from this
+    /// dump is bit-identical to the original for every `search_ef` call:
+    /// stored vectors keep their exact bit patterns and the adjacency
+    /// arrays are preserved verbatim, so traversal order cannot differ.
+    pub fn dump(&self, buf: &mut Vec<u8>) {
+        use crate::persist::codec::*;
+        put_u32(buf, HNSW_DUMP_VERSION);
+        put_u64(buf, self.dim as u64);
+        put_u64(buf, self.cfg.m as u64);
+        put_u64(buf, self.cfg.ef_construction as u64);
+        put_u64(buf, self.cfg.ef_search as u64);
+        put_u64(buf, self.cfg.seed);
+        put_u64(buf, self.rng.state());
+        put_u32(buf, self.max_level as u32);
+        match self.entry {
+            Some(e) => {
+                put_u8(buf, 1);
+                put_u32(buf, e);
+            }
+            None => {
+                put_u8(buf, 0);
+                put_u32(buf, 0);
+            }
+        }
+        put_u32(buf, self.nodes.len() as u32);
+        for n in &self.nodes {
+            put_u64(buf, n.id);
+            put_u32(buf, n.level as u32);
+            put_u8(buf, n.deleted as u8);
+            for layer in &n.neighbors {
+                put_u32(buf, layer.len() as u32);
+                for &nb in layer {
+                    put_u32(buf, nb);
+                }
+            }
+        }
+        put_f32s(buf, &self.data);
+    }
+
+    /// Deserialize a graph produced by [`HnswIndex::dump`].
+    ///
+    /// Every structural invariant the search path relies on is validated
+    /// here (neighbor slots in range, adjacency only between layers both
+    /// endpoints reach, entry node owns the top level, vector matrix
+    /// sized `nodes * dim`) — a corrupt or version-skewed dump returns
+    /// `Err` and the recovery path falls back to re-indexing from stored
+    /// embeddings; it never loads a graph that could panic a search.
+    pub fn load(bytes: &[u8]) -> Result<HnswIndex, crate::persist::codec::DecodeError> {
+        use crate::persist::codec::{DecodeError, Reader};
+        let fail = |m: &str| DecodeError(format!("hnsw dump: {m}"));
+        let mut r = Reader::new(bytes);
+        let version = r.u32()?;
+        if version != HNSW_DUMP_VERSION {
+            return Err(fail(&format!(
+                "graph version {version} != supported {HNSW_DUMP_VERSION}"
+            )));
+        }
+        let dim = r.u64()? as usize;
+        let cfg = HnswConfig {
+            m: r.u64()? as usize,
+            ef_construction: r.u64()? as usize,
+            ef_search: r.u64()? as usize,
+            seed: r.u64()?,
+        };
+        let rng_state = r.u64()?;
+        let max_level = r.u32()? as usize;
+        let has_entry = r.u8()? != 0;
+        let entry_slot = r.u32()?;
+        if dim == 0 || cfg.m < 2 {
+            return Err(fail("invalid dim/M"));
+        }
+        if max_level > 64 {
+            return Err(fail("implausible max_level"));
+        }
+        let n_nodes = r.list_len(13)?; // id(8) + level(4) + deleted(1)
+        let mut nodes = Vec::with_capacity(n_nodes);
+        let mut by_id = HashMap::with_capacity(n_nodes);
+        let mut n_live = 0usize;
+        for slot in 0..n_nodes {
+            let id = r.u64()?;
+            let level = r.u32()? as usize;
+            if level > max_level {
+                return Err(fail("node level above max_level"));
+            }
+            let deleted = r.u8()? != 0;
+            let mut neighbors = Vec::with_capacity(level + 1);
+            for _ in 0..=level {
+                let cnt = r.list_len(4)?;
+                let mut layer = Vec::with_capacity(cnt);
+                for _ in 0..cnt {
+                    let nb = r.u32()?;
+                    if nb as usize >= n_nodes {
+                        return Err(fail("neighbor slot out of range"));
+                    }
+                    layer.push(nb);
+                }
+                neighbors.push(layer);
+            }
+            if by_id.insert(id, slot as u32).is_some() {
+                return Err(fail("duplicate node id"));
+            }
+            if !deleted {
+                n_live += 1;
+            }
+            nodes.push(Node { id, level, deleted, neighbors });
+        }
+        // Cross-node invariant: an edge to `nb` on layer l is only legal
+        // if `nb` itself reaches layer l (greedy descent dereferences
+        // nb.neighbors[l]).
+        for n in &nodes {
+            for (l, layer) in n.neighbors.iter().enumerate() {
+                for &nb in layer {
+                    if nodes[nb as usize].level < l {
+                        return Err(fail("edge to node below its layer"));
+                    }
+                }
+            }
+        }
+        let entry = if has_entry {
+            if entry_slot as usize >= n_nodes {
+                return Err(fail("entry slot out of range"));
+            }
+            if nodes[entry_slot as usize].level != max_level {
+                return Err(fail("entry node does not own max_level"));
+            }
+            Some(entry_slot)
+        } else {
+            if n_nodes > 0 {
+                return Err(fail("non-empty graph without an entry point"));
+            }
+            None
+        };
+        let data = r.f32s()?;
+        if data.len() != n_nodes * dim {
+            return Err(fail("vector matrix size mismatch"));
+        }
+        let ml = 1.0 / (cfg.m as f64).ln();
+        Ok(HnswIndex {
+            dim,
+            cfg,
+            ml,
+            data,
+            nodes,
+            by_id,
+            entry,
+            max_level,
+            n_live,
+            rng: SplitMix64::from_state(rng_state),
+        })
+    }
+
     fn insert_normalized(&mut self, id: u64, v: Vec<f32>) {
         if let Some(&slot) = self.by_id.get(&id) {
             // Overwrite: update vector in place, revive if tombstoned.
@@ -377,12 +534,22 @@ impl VectorIndex for HnswIndex {
         self.dim
     }
 
+    fn slots(&self) -> usize {
+        self.nodes.len()
+    }
+
     fn is_hnsw(&self) -> bool {
         true
     }
 
     fn hnsw_config(&self) -> Option<&HnswConfig> {
         Some(&self.cfg)
+    }
+
+    fn dump_graph(&self) -> Option<Vec<u8>> {
+        let mut buf = Vec::new();
+        self.dump(&mut buf);
+        Some(buf)
     }
 }
 
@@ -507,6 +674,99 @@ mod tests {
         let r = idx.search(&[1.0, 0.0, 0.0, 0.0], 3);
         assert_eq!(r.len(), 1);
         assert_eq!(r[0].id, 9);
+    }
+
+    #[test]
+    fn dump_load_search_parity_with_tombstones() {
+        // A loaded graph must return bit-identical search_ef results —
+        // same ids, same score bit patterns — including on graphs that
+        // carry tombstones (deleted nodes are serialized, not elided).
+        let dim = 16;
+        let mut rng = Rng::new(21);
+        let mut idx = HnswIndex::new(dim, HnswConfig::default());
+        for id in 0..800u64 {
+            idx.insert(id, &random_vec(&mut rng, dim));
+        }
+        for id in (0..800u64).step_by(3) {
+            idx.remove(id);
+        }
+        let mut buf = Vec::new();
+        idx.dump(&mut buf);
+        let loaded = HnswIndex::load(&buf).expect("dump must load");
+        assert_eq!(loaded.len(), idx.len());
+        assert_eq!(loaded.slots(), idx.slots());
+        assert_eq!(loaded.garbage_ratio(), idx.garbage_ratio());
+        for _ in 0..40 {
+            let q = random_vec(&mut rng, dim);
+            for &(k, ef) in &[(1usize, 8usize), (5, 32), (10, 128)] {
+                let a = idx.search_ef(&q, k, ef);
+                let b = loaded.search_ef(&q, k, ef);
+                assert_eq!(a.len(), b.len());
+                for (x, y) in a.iter().zip(&b) {
+                    assert_eq!(x.id, y.id, "neighbor ids diverge after load");
+                    assert_eq!(
+                        x.score.to_bits(),
+                        y.score.to_bits(),
+                        "scores must be bit-identical after load"
+                    );
+                }
+            }
+        }
+        // The level sampler resumes where it left off: identical inserts
+        // into both graphs keep them in lock-step.
+        let mut idx = idx;
+        let mut loaded = loaded;
+        let v = random_vec(&mut rng, dim);
+        idx.insert(9_000, &v);
+        loaded.insert(9_000, &v);
+        let q = random_vec(&mut rng, dim);
+        let a: Vec<u64> = idx.search_ef(&q, 10, 64).iter().map(|n| n.id).collect();
+        let b: Vec<u64> = loaded.search_ef(&q, 10, 64).iter().map(|n| n.id).collect();
+        assert_eq!(a, b, "post-load inserts diverged");
+    }
+
+    #[test]
+    fn rebuild_after_load_reclaims_tombstones() {
+        let mut rng = Rng::new(33);
+        let mut idx = HnswIndex::new(12, HnswConfig::default());
+        for id in 0..400u64 {
+            idx.insert(id, &random_vec(&mut rng, 12));
+        }
+        for id in 200..400u64 {
+            idx.remove(id);
+        }
+        let mut buf = Vec::new();
+        idx.dump(&mut buf);
+        let mut loaded = HnswIndex::load(&buf).unwrap();
+        assert!(loaded.garbage_ratio() > 0.49, "tombstones survive the dump");
+        loaded.rebuild();
+        assert_eq!(loaded.garbage_ratio(), 0.0);
+        assert_eq!(loaded.len(), 200);
+        assert_eq!(loaded.slots(), 200, "rebuild after load reclaims tombstones");
+        let q = random_vec(&mut rng, 12);
+        assert!(loaded.search(&q, 5).iter().all(|n| n.id < 200));
+    }
+
+    #[test]
+    fn load_rejects_corrupt_dumps() {
+        let mut rng = Rng::new(44);
+        let mut idx = HnswIndex::new(8, HnswConfig::default());
+        for id in 0..60u64 {
+            idx.insert(id, &random_vec(&mut rng, 8));
+        }
+        let mut buf = Vec::new();
+        idx.dump(&mut buf);
+        // Version skew -> Err (the re-index fallback trigger).
+        let mut skew = buf.clone();
+        skew[0] ^= 0xFF;
+        assert!(HnswIndex::load(&skew).is_err());
+        // Truncations at every prefix length must error, never panic.
+        for cut in 0..buf.len().min(200) {
+            assert!(HnswIndex::load(&buf[..cut]).is_err());
+        }
+        assert!(HnswIndex::load(&buf[..buf.len() - 3]).is_err());
+        // A loaded-then-validated graph must round-trip.
+        assert!(HnswIndex::load(&buf).is_ok());
     }
 
     #[test]

@@ -17,7 +17,7 @@ mod flat;
 mod hnsw;
 
 pub use flat::FlatIndex;
-pub use hnsw::{HnswConfig, HnswIndex};
+pub use hnsw::{HnswConfig, HnswIndex, HNSW_DUMP_VERSION};
 
 /// A search result: entry id and cosine similarity (descending order).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -46,6 +46,11 @@ pub trait VectorIndex: Send + Sync {
     }
     /// Vector dimensionality.
     fn dim(&self) -> usize;
+    /// Total slots including tombstones (>= `len`). Feeds the garbage
+    /// ratio that triggers the periodic rebuild.
+    fn slots(&self) -> usize {
+        self.len()
+    }
     /// True for HNSW-backed indexes (used by partition rebuilds to
     /// recreate the same index kind).
     fn is_hnsw(&self) -> bool {
@@ -53,6 +58,12 @@ pub trait VectorIndex: Send + Sync {
     }
     /// HNSW tunables when applicable.
     fn hnsw_config(&self) -> Option<&HnswConfig> {
+        None
+    }
+    /// Serialized graph bytes for snapshotting ([`HnswIndex::dump`]);
+    /// `None` for indexes that are cheap to rebuild from raw vectors
+    /// (flat scan), which snapshots restore by re-inserting embeddings.
+    fn dump_graph(&self) -> Option<Vec<u8>> {
         None
     }
 }

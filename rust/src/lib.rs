@@ -63,6 +63,7 @@ pub mod index;
 pub mod json;
 pub mod llm;
 pub mod metrics;
+pub mod persist;
 pub mod runtime;
 pub mod store;
 pub mod testutil;

@@ -82,6 +82,18 @@ pub struct Metrics {
     /// Requests answered from an identical in-flight twin in the same
     /// dispatch window (no embed, no lookup, no LLM call of their own).
     pub coalesced: AtomicU64,
+    // Durability (crate::persist): WAL appends, snapshots, recovery.
+    /// Records appended to the write-ahead log since startup.
+    pub wal_records: AtomicU64,
+    /// Framed bytes appended to the write-ahead log since startup.
+    pub wal_bytes: AtomicU64,
+    /// Snapshots successfully written (temp + atomic rename completed).
+    pub snapshots_written: AtomicU64,
+    /// Wall time of the startup recovery pass (snapshot load + WAL
+    /// replay), in ms. Zero when the server started without a data dir.
+    pub recovery_ms: AtomicU64,
+    /// Entries restored live by the startup recovery pass.
+    pub recovered_entries: AtomicU64,
     // Latency histograms (ms), mutex-guarded (record is a few ns anyway).
     lat_total: Mutex<Histogram>,
     lat_embed: Mutex<Histogram>,
@@ -132,6 +144,11 @@ pub struct MetricsSnapshot {
     pub batcher_dispatches: u64,
     pub batcher_queries: u64,
     pub coalesced: u64,
+    pub wal_records: u64,
+    pub wal_bytes: u64,
+    pub snapshots_written: u64,
+    pub recovery_ms: u64,
+    pub recovered_entries: u64,
     pub lat_total: Summary,
     pub lat_embed: Summary,
     /// Embed latency over memo-tier hits only.
@@ -250,6 +267,23 @@ impl Metrics {
         self.coalesced.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// One WAL record appended (`bytes` = framed length on disk).
+    pub fn record_wal_append(&self, bytes: u64) {
+        self.wal_records.fetch_add(1, Ordering::Relaxed);
+        self.wal_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// One snapshot made durable.
+    pub fn record_snapshot_written(&self) {
+        self.snapshots_written.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Result of the startup recovery pass.
+    pub fn record_recovery(&self, ms: u64, entries: u64) {
+        self.recovery_ms.store(ms, Ordering::Relaxed);
+        self.recovered_entries.store(entries, Ordering::Relaxed);
+    }
+
     pub fn observe_total_ms(&self, ms: f64) {
         self.lat_total.lock().unwrap().observe(ms);
     }
@@ -306,6 +340,11 @@ impl Metrics {
             batcher_dispatches: self.batcher_dispatches.load(Ordering::Relaxed),
             batcher_queries: self.batcher_queries.load(Ordering::Relaxed),
             coalesced: self.coalesced.load(Ordering::Relaxed),
+            wal_records: self.wal_records.load(Ordering::Relaxed),
+            wal_bytes: self.wal_bytes.load(Ordering::Relaxed),
+            snapshots_written: self.snapshots_written.load(Ordering::Relaxed),
+            recovery_ms: self.recovery_ms.load(Ordering::Relaxed),
+            recovered_entries: self.recovered_entries.load(Ordering::Relaxed),
             lat_total: self.lat_total.lock().unwrap().summary(),
             lat_embed: self.lat_embed.lock().unwrap().summary(),
             lat_embed_memo: self.lat_embed_memo.lock().unwrap().summary(),
@@ -401,6 +440,11 @@ impl MetricsSnapshot {
             ("lat_queue_wait_mean_ms", self.lat_queue_wait.mean.into()),
             ("lat_queue_wait_p95_ms", self.lat_queue_wait.p95.into()),
             ("lat_dispatch_mean_ms", self.lat_dispatch.mean.into()),
+            ("wal_records", self.wal_records.into()),
+            ("wal_bytes", self.wal_bytes.into()),
+            ("snapshots_written", self.snapshots_written.into()),
+            ("recovery_ms", self.recovery_ms.into()),
+            ("recovered_entries", self.recovered_entries.into()),
         ])
     }
 }
@@ -531,6 +575,26 @@ mod tests {
         m.record_conn_closed();
         m.record_conn_closed();
         assert_eq!(m.snapshot().http_conns_open, 0);
+    }
+
+    #[test]
+    fn durability_counters() {
+        let m = Metrics::new();
+        m.record_wal_append(120);
+        m.record_wal_append(80);
+        m.record_snapshot_written();
+        m.record_recovery(42, 17);
+        let s = m.snapshot();
+        assert_eq!(s.wal_records, 2);
+        assert_eq!(s.wal_bytes, 200);
+        assert_eq!(s.snapshots_written, 1);
+        assert_eq!(s.recovery_ms, 42);
+        assert_eq!(s.recovered_entries, 17);
+        let j = s.to_json();
+        assert_eq!(j.get("wal_records").as_usize(), Some(2));
+        assert_eq!(j.get("wal_bytes").as_usize(), Some(200));
+        assert_eq!(j.get("snapshots_written").as_usize(), Some(1));
+        assert_eq!(j.get("recovered_entries").as_usize(), Some(17));
     }
 
     #[test]

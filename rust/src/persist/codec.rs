@@ -1,0 +1,224 @@
+//! Binary codec shared by the WAL and snapshot formats: little-endian
+//! primitives, length-prefixed strings/vectors, and an IEEE CRC-32 (the
+//! zlib/gzip polynomial, table-driven).
+//!
+//! Everything on the read side is bounds- and checksum-checked and
+//! returns `Err` on malformed input — the corruption fuzzer feeds these
+//! readers arbitrary bytes, so no code path here may panic.
+
+/// Decode failure. Carries a human-readable reason; recovery treats any
+/// decode failure as "stop here" (torn tail) or "discard this file"
+/// (corrupt snapshot), never as a crash.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DecodeError(pub String);
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "decode error: {}", self.0)
+    }
+}
+
+pub type DecodeResult<T> = Result<T, DecodeError>;
+
+fn err<T>(msg: impl Into<String>) -> DecodeResult<T> {
+    Err(DecodeError(msg.into()))
+}
+
+// --- CRC-32 (IEEE 802.3, reflected, poly 0xEDB88320) ---------------------
+
+fn crc_table() -> &'static [u32; 256] {
+    static TABLE: std::sync::OnceLock<[u32; 256]> = std::sync::OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, slot) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *slot = c;
+        }
+        t
+    })
+}
+
+/// CRC-32 of `bytes` (same as zlib's `crc32(0, ...)`).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let table = crc_table();
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// --- encoding ------------------------------------------------------------
+
+pub fn put_u8(buf: &mut Vec<u8>, v: u8) {
+    buf.push(v);
+}
+
+pub fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Length-prefixed (u32) UTF-8 string.
+pub fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+/// Length-prefixed (u32 count) f32 vector, element-wise LE bit patterns —
+/// round-trips NaNs and signed zeros exactly, so loaded embeddings are
+/// bit-identical to what was stored.
+pub fn put_f32s(buf: &mut Vec<u8>, v: &[f32]) {
+    put_u32(buf, v.len() as u32);
+    for &x in v {
+        buf.extend_from_slice(&x.to_bits().to_le_bytes());
+    }
+}
+
+// --- decoding ------------------------------------------------------------
+
+/// Cursor over an immutable byte slice. Every read is bounds-checked.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    fn take(&mut self, n: usize) -> DecodeResult<&'a [u8]> {
+        if self.remaining() < n {
+            return err(format!("truncated: wanted {n} bytes, have {}", self.remaining()));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Raw byte slice of exactly `n` bytes.
+    pub fn bytes(&mut self, n: usize) -> DecodeResult<&'a [u8]> {
+        self.take(n)
+    }
+
+    pub fn u8(&mut self) -> DecodeResult<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> DecodeResult<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self) -> DecodeResult<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    pub fn str(&mut self) -> DecodeResult<String> {
+        let len = self.u32()? as usize;
+        // Guard absurd lengths before allocating (a flipped length byte
+        // must not trigger a multi-GB allocation).
+        if len > self.remaining() {
+            return err(format!("string length {len} exceeds remaining {}", self.remaining()));
+        }
+        match std::str::from_utf8(self.take(len)?) {
+            Ok(s) => Ok(s.to_string()),
+            Err(_) => err("invalid utf-8 in string"),
+        }
+    }
+
+    pub fn f32s(&mut self) -> DecodeResult<Vec<f32>> {
+        let n = self.u32()? as usize;
+        if n.saturating_mul(4) > self.remaining() {
+            return err(format!("f32 vector of {n} exceeds remaining {}", self.remaining()));
+        }
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(f32::from_bits(self.u32()?));
+        }
+        Ok(v)
+    }
+
+    /// Read a list length, guarding against lengths that cannot possibly
+    /// fit in the remaining bytes (each element needs >= `min_elem_bytes`).
+    pub fn list_len(&mut self, min_elem_bytes: usize) -> DecodeResult<usize> {
+        let n = self.u32()? as usize;
+        if n.saturating_mul(min_elem_bytes.max(1)) > self.remaining() {
+            return err(format!("list of {n} exceeds remaining {}", self.remaining()));
+        }
+        Ok(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vectors() {
+        // Standard check value for the IEEE polynomial.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_ne!(crc32(b"abc"), crc32(b"abd"));
+    }
+
+    #[test]
+    fn roundtrip_primitives() {
+        let mut buf = Vec::new();
+        put_u8(&mut buf, 7);
+        put_u32(&mut buf, 0xDEAD_BEEF);
+        put_u64(&mut buf, u64::MAX);
+        put_str(&mut buf, "héllo wörld");
+        put_f32s(&mut buf, &[0.0, -0.0, 1.5, f32::NAN, f32::MIN_POSITIVE]);
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX);
+        assert_eq!(r.str().unwrap(), "héllo wörld");
+        let v = r.f32s().unwrap();
+        assert_eq!(v[0].to_bits(), 0.0f32.to_bits());
+        assert_eq!(v[1].to_bits(), (-0.0f32).to_bits());
+        assert_eq!(v[2], 1.5);
+        assert!(v[3].is_nan());
+        assert_eq!(v[4], f32::MIN_POSITIVE);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn truncated_reads_error_not_panic() {
+        let mut buf = Vec::new();
+        put_str(&mut buf, "hello");
+        for cut in 0..buf.len() {
+            let mut r = Reader::new(&buf[..cut]);
+            assert!(r.str().is_err(), "cut at {cut} must fail cleanly");
+        }
+    }
+
+    #[test]
+    fn absurd_lengths_rejected_before_allocating() {
+        // A string claiming u32::MAX bytes with a 4-byte body.
+        let mut buf = Vec::new();
+        put_u32(&mut buf, u32::MAX);
+        buf.extend_from_slice(b"abcd");
+        assert!(Reader::new(&buf).str().is_err());
+        let mut buf2 = Vec::new();
+        put_u32(&mut buf2, u32::MAX);
+        assert!(Reader::new(&buf2).f32s().is_err());
+    }
+}

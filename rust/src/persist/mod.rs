@@ -1,0 +1,498 @@
+//! Crash-safe durability: write-ahead log + periodic snapshots.
+//!
+//! The cache itself is an in-memory structure; this module makes it
+//! survive restarts. Every mutation is appended to a checksummed WAL
+//! ([`wal`]) *after* it is applied in memory; a periodic snapshot
+//! ([`snapshot`]) captures the full state — entries, embeddings, the id
+//! allocator, and the serialized HNSW graph — then truncates the log.
+//!
+//! Recovery ([`Persistence::open`]) loads the newest decodable snapshot,
+//! re-installs the persisted graph (falling back to re-indexing from raw
+//! embeddings when the graph blob is corrupt or from a different format
+//! version), replays the WAL suffix, and re-anchors wall-clock expiries
+//! onto the process's monotonic clock. A torn WAL tail — the normal
+//! aftermath of SIGKILL mid-write — recovers the valid prefix; corrupt
+//! bytes anywhere are skipped or rejected, never panicked on.
+//!
+//! Crash-safety contract:
+//! * an acknowledged mutation is in the WAL before the ack (under
+//!   `wal_sync = "always"` it is also fsynced, surviving power loss);
+//! * snapshots become visible only via atomic rename — a crash mid-
+//!   snapshot leaves the previous snapshot + full WAL intact;
+//! * recovery never serves a record that fails its checksum.
+
+pub mod codec;
+pub mod snapshot;
+pub mod wal;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::cache::{CacheConfig, CacheJournal, CachedEntry, SemanticCache};
+use crate::error::Result;
+use crate::index::{HnswIndex, VectorIndex};
+use crate::metrics::Metrics;
+use crate::store::Clock;
+
+pub use snapshot::{list_snapshots, Snapshot};
+pub use wal::{WalOp, WalSync, WalWriter};
+
+/// Durability settings (see `data_dir`, `snapshot_interval_secs`,
+/// `wal_sync` in [`crate::config::Config`]).
+#[derive(Debug, Clone)]
+pub struct PersistConfig {
+    /// Directory holding WAL segments and snapshots. Created on open.
+    pub data_dir: PathBuf,
+    /// Seconds between automatic snapshots.
+    pub snapshot_interval_secs: u64,
+    /// WAL fsync policy.
+    pub wal_sync: WalSync,
+}
+
+impl PersistConfig {
+    /// Build from the flat app config; `None` when no `data_dir` is set
+    /// (durability off — the seed's in-memory behavior).
+    pub fn from_app_config(cfg: &crate::config::Config) -> Option<PersistConfig> {
+        if cfg.data_dir.is_empty() {
+            return None;
+        }
+        Some(PersistConfig {
+            data_dir: PathBuf::from(&cfg.data_dir),
+            snapshot_interval_secs: cfg.snapshot_interval_secs,
+            // Validated in Config::validate; default to Os defensively.
+            wal_sync: WalSync::parse(&cfg.wal_sync).unwrap_or(WalSync::Os),
+        })
+    }
+}
+
+/// What the startup recovery pass found and did.
+#[derive(Debug, Default, Clone)]
+pub struct RecoveryReport {
+    /// Entries restored live (snapshot + WAL replay, minus expiries).
+    pub entries: usize,
+    /// WAL records replayed after the snapshot.
+    pub replayed: usize,
+    /// Whether the WAL ended in a torn/corrupt tail that was discarded.
+    pub torn_tail: bool,
+    /// Whether a snapshot was loaded (vs. WAL-only or cold start).
+    pub snapshot_loaded: bool,
+    /// Partitions whose persisted graph was unusable (corrupt bytes or a
+    /// different dump version) and were re-indexed from raw embeddings.
+    pub reindexed_partitions: usize,
+    /// Persisted entries whose TTL elapsed while the process was down.
+    pub expired_during_downtime: usize,
+}
+
+/// Result of one snapshot pass.
+#[derive(Debug, Clone, Copy)]
+pub struct SnapshotStats {
+    /// Live entries captured.
+    pub entries: usize,
+    /// Snapshot file size in bytes.
+    pub bytes: usize,
+}
+
+/// The durability engine: owns the WAL writer and the snapshot
+/// procedure, and observes cache mutations via [`CacheJournal`].
+pub struct Persistence {
+    dir: PathBuf,
+    sync: WalSync,
+    wal: Mutex<WalWriter>,
+    /// Serializes snapshot passes (the WAL mutex is only held for the
+    /// rotation instant, not the whole pass).
+    snap_lock: Mutex<()>,
+    metrics: Arc<Metrics>,
+}
+
+impl Persistence {
+    /// Recover cache state from `cfg.data_dir` (creating it if absent)
+    /// and return the recovered cache with journaling attached, so every
+    /// subsequent mutation is logged.
+    pub fn open(
+        cfg: &PersistConfig,
+        cache_cfg: CacheConfig,
+        clock: Arc<dyn Clock>,
+        metrics: Arc<Metrics>,
+    ) -> Result<(SemanticCache, Arc<Persistence>, RecoveryReport)> {
+        let started = Instant::now();
+        fs::create_dir_all(&cfg.data_dir)?;
+        remove_stale_tmp(&cfg.data_dir);
+
+        let cache = SemanticCache::with_clock(cache_cfg, clock);
+        let mut report = RecoveryReport::default();
+
+        // Newest decodable snapshot wins; corrupt ones are skipped (an
+        // older snapshot plus a longer WAL replay is still correct,
+        // because snapshots never outrun the log they truncate).
+        let mut snap: Option<Snapshot> = None;
+        for (_, path) in snapshot::list_snapshots(&cfg.data_dir)?.into_iter().rev() {
+            if let Ok(bytes) = fs::read(&path) {
+                if let Ok(s) = Snapshot::decode(&bytes) {
+                    snap = Some(s);
+                    break;
+                }
+            }
+        }
+        let mut replay_from = 0u64;
+        if let Some(s) = snap {
+            replay_from = s.wal_seq;
+            report.snapshot_loaded = true;
+            for dump in s.partitions {
+                let p = cache.partition(dump.dim);
+                let mut graph_installed = false;
+                if let Some(bytes) = &dump.graph {
+                    if p.index_is_hnsw() {
+                        match HnswIndex::load(bytes) {
+                            Ok(idx) if idx.dim() == dump.dim => {
+                                graph_installed = p.install_index(Box::new(idx));
+                            }
+                            _ => {}
+                        }
+                    }
+                    if !graph_installed {
+                        // Corrupt blob, version mismatch, or the server
+                        // now runs a flat index: fall back to re-indexing
+                        // from the raw embeddings below.
+                        report.reindexed_partitions += 1;
+                    }
+                }
+                for e in dump.entries {
+                    if restore_counted(&cache, dump.dim, e.id, &e.embedding, e.entry, e.expires_wall_ms, &mut report) {
+                        report.entries += 1;
+                    }
+                }
+                p.bump_next_id(dump.next_id);
+            }
+        }
+
+        // Replay the WAL suffix. Segments are strictly ordered; a torn
+        // segment ends the replay (anything after it postdates the tear
+        // and cannot be trusted to be a contiguous history).
+        let segments = wal::list_segments(&cfg.data_dir)?;
+        let mut last_seq = replay_from.saturating_sub(1).max(segments.last().map(|(s, _)| *s).unwrap_or(0));
+        let mut stop = false;
+        for (seq, path) in &segments {
+            if *seq < replay_from || stop {
+                continue;
+            }
+            let scan = wal::read_segment(path)?;
+            for op in scan.ops {
+                apply_op(&cache, op, &mut report);
+                report.replayed += 1;
+            }
+            if scan.torn {
+                report.torn_tail = true;
+                stop = true;
+                // Discard segments past the tear so a future recovery
+                // cannot replay post-tear history after this prefix.
+                for (s2, p2) in &segments {
+                    if s2 > seq {
+                        let _ = fs::remove_file(p2);
+                    }
+                }
+            }
+        }
+
+        // Fresh segment strictly after everything on disk.
+        last_seq = last_seq.max(replay_from);
+        let next_seq = if segments.is_empty() && !report.snapshot_loaded {
+            0
+        } else {
+            last_seq + 1
+        };
+        let writer = WalWriter::create(&cfg.data_dir, next_seq, cfg.wal_sync)?;
+
+        let persistence = Arc::new(Persistence {
+            dir: cfg.data_dir.clone(),
+            sync: cfg.wal_sync,
+            wal: Mutex::new(writer),
+            snap_lock: Mutex::new(()),
+            metrics: metrics.clone(),
+        });
+        cache.set_journal(persistence.clone());
+
+        let ms = started.elapsed().as_millis() as u64;
+        metrics.record_recovery(ms, report.entries as u64);
+        Ok((cache, persistence, report))
+    }
+
+    /// Take a snapshot of `cache` and truncate the WAL it covers.
+    ///
+    /// Sequence: rotate the WAL (instantaneous, under the WAL mutex) so
+    /// every later mutation lands in the new segment; sweep expired
+    /// entries and compact tombstoned graphs (snapshots double as the
+    /// durability tier's garbage collection); capture per-partition
+    /// dumps; write the snapshot atomically; delete the segments and
+    /// snapshots it supersedes. Mutations applied after the memory
+    /// capture are in the new segment and replay idempotently.
+    pub fn snapshot(&self, cache: &SemanticCache) -> Result<SnapshotStats> {
+        let _guard = self.snap_lock.lock().unwrap();
+        let new_seq = {
+            let mut w = self.wal.lock().unwrap();
+            let next = w.seq() + 1;
+            *w = WalWriter::create(&self.dir, next, self.sync)?;
+            next
+        };
+        for p in cache.partitions() {
+            p.sweep_expired();
+            if p.garbage_ratio() > 0.0 {
+                p.rebuild();
+            }
+        }
+        let snap = Snapshot {
+            wal_seq: new_seq,
+            wall_ms: cache.clock().wall_ms(),
+            partitions: cache.partitions().iter().map(|p| p.dump()).collect(),
+        };
+        let entries = snap.entry_count();
+        let bytes = snap.encode();
+        snapshot::write_atomic(&self.dir, new_seq, &bytes)?;
+        for (seq, path) in snapshot::list_snapshots(&self.dir)? {
+            if seq < new_seq {
+                let _ = fs::remove_file(path);
+            }
+        }
+        for (seq, path) in wal::list_segments(&self.dir)? {
+            if seq < new_seq {
+                let _ = fs::remove_file(path);
+            }
+        }
+        self.metrics.record_snapshot_written();
+        Ok(SnapshotStats { entries, bytes: bytes.len() })
+    }
+
+    /// Data directory this engine persists into.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn append(&self, op: &WalOp) {
+        let mut w = self.wal.lock().unwrap();
+        match w.append(op) {
+            Ok(bytes) => self.metrics.record_wal_append(bytes),
+            // An appender that cannot write (disk full, dir deleted)
+            // must not take the serving path down; the loss is bounded
+            // by the next successful snapshot.
+            Err(e) => eprintln!("semcache: wal append failed: {e}"),
+        }
+    }
+}
+
+impl CacheJournal for Persistence {
+    fn log_insert(
+        &self,
+        dim: usize,
+        id: u64,
+        embedding: &[f32],
+        entry: &CachedEntry,
+        expires_wall_ms: u64,
+    ) {
+        self.append(&WalOp::insert(dim, id, embedding, entry, expires_wall_ms));
+    }
+
+    fn log_remove(&self, dim: usize, id: u64) {
+        self.append(&WalOp::Remove { dim: dim as u32, id });
+    }
+
+    fn log_clear(&self) {
+        self.append(&WalOp::Clear);
+    }
+}
+
+/// Apply one replayed WAL record to the cache.
+fn apply_op(cache: &SemanticCache, op: WalOp, report: &mut RecoveryReport) {
+    match op {
+        WalOp::Insert { dim, id, expires_wall_ms, cluster, question, response, embedding } => {
+            let entry = CachedEntry { question, response, cluster };
+            if restore_counted(cache, dim as usize, id, &embedding, entry, expires_wall_ms, report) {
+                report.entries += 1;
+            }
+        }
+        WalOp::Remove { dim, id } => {
+            if let Some(p) = cache.partition_if_exists(dim as usize) {
+                if p.remove_id(id) {
+                    report.entries = report.entries.saturating_sub(1);
+                }
+            }
+        }
+        WalOp::Clear => {
+            cache.clear();
+            report.entries = 0;
+        }
+    }
+}
+
+/// Restore one entry, distinguishing "expired during downtime" from
+/// malformed records when the restore is refused.
+fn restore_counted(
+    cache: &SemanticCache,
+    dim: usize,
+    id: u64,
+    embedding: &[f32],
+    entry: CachedEntry,
+    expires_wall_ms: u64,
+    report: &mut RecoveryReport,
+) -> bool {
+    if dim == 0 || embedding.len() != dim {
+        return false; // malformed record: drop, never panic
+    }
+    let p = cache.partition(dim);
+    let restored = p.restore_entry(id, embedding, entry, expires_wall_ms);
+    if !restored
+        && embedding.len() == dim
+        && expires_wall_ms != u64::MAX
+        && expires_wall_ms <= cache.clock().wall_ms()
+    {
+        report.expired_during_downtime += 1;
+    }
+    restored
+}
+
+fn remove_stale_tmp(dir: &Path) {
+    if let Ok(rd) = fs::read_dir(dir) {
+        for entry in rd.flatten() {
+            if entry.file_name().to_string_lossy().ends_with(".tmp") {
+                let _ = fs::remove_file(entry.path());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::IndexKind;
+    use crate::store::ManualClock;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("semcache-persist-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    fn pcfg(dir: &Path) -> PersistConfig {
+        PersistConfig {
+            data_dir: dir.to_path_buf(),
+            snapshot_interval_secs: 60,
+            wal_sync: WalSync::Os,
+        }
+    }
+
+    fn ccfg() -> CacheConfig {
+        CacheConfig::builder()
+            .index(IndexKind::Hnsw)
+            .ttl_ms(0)
+            .build()
+            .unwrap()
+    }
+
+    fn vec_for(i: u64, dim: usize) -> Vec<f32> {
+        (0..dim).map(|d| ((i * 31 + d as u64 * 7) % 13) as f32 - 6.0).collect()
+    }
+
+    #[test]
+    fn wal_only_restart_restores_entries() {
+        let dir = tmpdir("walonly");
+        let clock = Arc::new(ManualClock::new(1_000));
+        let m = Arc::new(Metrics::new());
+        let (cache, _p, rep) =
+            Persistence::open(&pcfg(&dir), ccfg(), clock.clone(), m.clone()).unwrap();
+        assert_eq!(rep.entries, 0);
+        for i in 0..20u64 {
+            cache
+                .try_insert(&format!("question {i}"), &vec_for(i, 8), &format!("answer {i}"))
+                .unwrap();
+        }
+        assert_eq!(cache.len(), 20);
+        drop(cache);
+
+        let (cache2, _p2, rep2) =
+            Persistence::open(&pcfg(&dir), ccfg(), clock, Arc::new(Metrics::new())).unwrap();
+        assert!(!rep2.snapshot_loaded);
+        assert_eq!(rep2.entries, 20);
+        assert_eq!(cache2.len(), 20);
+        let hit = cache2.lookup(&vec_for(7, 8)).expect("recovered entry must hit");
+        assert_eq!(hit.entry.response, "answer 7");
+        assert_eq!(m.wal_records.load(std::sync::atomic::Ordering::Relaxed), 20);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn snapshot_truncates_wal_and_restores() {
+        let dir = tmpdir("snap");
+        let clock = Arc::new(ManualClock::new(1_000));
+        let (cache, p, _) =
+            Persistence::open(&pcfg(&dir), ccfg(), clock.clone(), Arc::new(Metrics::new()))
+                .unwrap();
+        for i in 0..30u64 {
+            cache.try_insert(&format!("q{i}"), &vec_for(i, 8), &format!("a{i}")).unwrap();
+        }
+        let stats = p.snapshot(&cache).unwrap();
+        assert_eq!(stats.entries, 30);
+        assert!(stats.bytes > 0);
+        // Post-snapshot mutations land in the fresh segment.
+        for i in 30..35u64 {
+            cache.try_insert(&format!("q{i}"), &vec_for(i, 8), &format!("a{i}")).unwrap();
+        }
+        assert!(cache.remove_entry(8, 0));
+        drop(cache);
+
+        // Only the covered-by-snapshot segment was deleted.
+        assert_eq!(snapshot::list_snapshots(&dir).unwrap().len(), 1);
+
+        let (cache2, _p2, rep) =
+            Persistence::open(&pcfg(&dir), ccfg(), clock, Arc::new(Metrics::new())).unwrap();
+        assert!(rep.snapshot_loaded);
+        assert_eq!(rep.replayed, 6, "5 inserts + 1 remove after the snapshot");
+        assert_eq!(cache2.len(), 34);
+        assert!(cache2.lookup(&vec_for(33, 8)).is_some());
+        // Removed entry stays gone.
+        let hit = cache2.lookup(&vec_for(0, 8));
+        assert!(hit.is_none() || hit.unwrap().entry.response != "a0");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn clear_is_durable() {
+        let dir = tmpdir("clear");
+        let clock = Arc::new(ManualClock::new(1_000));
+        let (cache, _p, _) =
+            Persistence::open(&pcfg(&dir), ccfg(), clock.clone(), Arc::new(Metrics::new()))
+                .unwrap();
+        for i in 0..5u64 {
+            cache.try_insert(&format!("q{i}"), &vec_for(i, 4), "a").unwrap();
+        }
+        cache.clear();
+        cache.try_insert("survivor", &vec_for(99, 4), "alive").unwrap();
+        drop(cache);
+        let (cache2, _p2, rep) =
+            Persistence::open(&pcfg(&dir), ccfg(), clock, Arc::new(Metrics::new())).unwrap();
+        assert_eq!(rep.entries, 1);
+        assert_eq!(cache2.lookup(&vec_for(99, 4)).unwrap().entry.response, "alive");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn reopen_after_snapshot_only_no_wal_records() {
+        // Snapshot then immediate restart: nothing to replay, graph loads.
+        let dir = tmpdir("snaponly");
+        let clock = Arc::new(ManualClock::new(1_000));
+        let (cache, p, _) =
+            Persistence::open(&pcfg(&dir), ccfg(), clock.clone(), Arc::new(Metrics::new()))
+                .unwrap();
+        for i in 0..10u64 {
+            cache.try_insert(&format!("q{i}"), &vec_for(i, 6), &format!("a{i}")).unwrap();
+        }
+        p.snapshot(&cache).unwrap();
+        drop(cache);
+        let (cache2, _p2, rep) =
+            Persistence::open(&pcfg(&dir), ccfg(), clock, Arc::new(Metrics::new())).unwrap();
+        assert!(rep.snapshot_loaded);
+        assert_eq!(rep.replayed, 0);
+        assert_eq!(rep.reindexed_partitions, 0, "persisted graph must load");
+        assert_eq!(cache2.len(), 10);
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -7,6 +7,19 @@ use std::time::Instant;
 /// Millisecond clock.
 pub trait Clock: Send + Sync {
     fn now_ms(&self) -> u64;
+
+    /// Wall-clock milliseconds since the Unix epoch. Unlike [`now_ms`],
+    /// this survives process restarts, so it is the timebase persisted in
+    /// snapshots and WAL records: on recovery, a stored absolute expiry is
+    /// re-anchored onto the new process' monotonic clock. [`ManualClock`]
+    /// drives both from the same atomic, which lets tests simulate
+    /// downtime (construct the recovery clock at a later wall time)
+    /// without sleeping.
+    ///
+    /// [`now_ms`]: Clock::now_ms
+    fn wall_ms(&self) -> u64 {
+        self.now_ms()
+    }
 }
 
 /// Monotonic system clock (ms since process start).
@@ -19,6 +32,13 @@ impl Clock for SystemClock {
         static EPOCH: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
         let epoch = EPOCH.get_or_init(Instant::now);
         epoch.elapsed().as_millis() as u64
+    }
+
+    fn wall_ms(&self) -> u64 {
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_millis() as u64)
+            .unwrap_or(0)
     }
 }
 
@@ -67,5 +87,22 @@ mod tests {
         let a = c.now_ms();
         let b = c.now_ms();
         assert!(b >= a);
+    }
+
+    #[test]
+    fn wall_clock_tracks_manual_clock() {
+        // ManualClock shares one atomic between both timebases, so a
+        // "later" clock models post-restart downtime.
+        let c = ManualClock::new(1_000);
+        assert_eq!(c.wall_ms(), 1_000);
+        c.advance(250);
+        assert_eq!(c.wall_ms(), c.now_ms());
+    }
+
+    #[test]
+    fn system_wall_clock_is_epoch_scale() {
+        // Sanity: wall_ms is Unix-epoch scale (> 2020-01-01), not
+        // process-start scale.
+        assert!(SystemClock.wall_ms() > 1_577_836_800_000);
     }
 }

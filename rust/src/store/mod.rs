@@ -197,6 +197,19 @@ impl<V> KvStore<V> {
         total
     }
 
+    /// Active expiry cycle that returns the swept keys, so callers keeping
+    /// secondary structures keyed on the same entries (the cache
+    /// partition's vector index + embedding map) can reclaim in lockstep.
+    pub fn sweep_expired_keys(&self) -> Vec<String> {
+        let now = self.clock.now_ms();
+        let mut keys = Vec::new();
+        for shard in &self.shards {
+            shard.write().unwrap().sweep_keys(now, &mut keys);
+        }
+        self.stats.expired.fetch_add(keys.len() as u64, Ordering::Relaxed);
+        keys
+    }
+
     /// Live entry count (does not count not-yet-swept expired entries).
     pub fn len(&self) -> usize {
         let now = self.clock.now_ms();
@@ -212,6 +225,16 @@ impl<V> KvStore<V> {
         let now = self.clock.now_ms();
         for shard in &self.shards {
             shard.read().unwrap().for_each_live(now, &mut f);
+        }
+    }
+
+    /// Visit every live entry with its absolute expiry on this store's
+    /// clock (u64::MAX = immortal). Snapshot dumps use this to convert
+    /// monotonic expiries into wall-clock expiries that survive restarts.
+    pub fn for_each_with_expiry<F: FnMut(&str, &V, u64)>(&self, mut f: F) {
+        let now = self.clock.now_ms();
+        for shard in &self.shards {
+            shard.read().unwrap().for_each_live_expiry(now, &mut f);
         }
     }
 
@@ -293,6 +316,33 @@ mod tests {
         assert_eq!(swept, 50);
         assert_eq!(s.len(), 1);
         assert_eq!(s.sweep_expired(), 0);
+    }
+
+    #[test]
+    fn sweep_expired_keys_reports_what_it_removed() {
+        let (s, clock) = manual_store(0, 100);
+        s.set("gone1", "x".into());
+        s.set("gone2", "x".into());
+        s.set_ttl("keep", "y".into(), 0);
+        clock.advance(200);
+        let mut keys = s.sweep_expired_keys();
+        keys.sort();
+        assert_eq!(keys, vec!["gone1".to_string(), "gone2".to_string()]);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.stats().expired, 2);
+        assert!(s.sweep_expired_keys().is_empty());
+    }
+
+    #[test]
+    fn for_each_with_expiry_exposes_absolute_expiry() {
+        let (s, _clock) = manual_store(0, 0);
+        s.set_ttl("immortal", "a".into(), 0);
+        s.set_ttl("mortal", "b".into(), 500);
+        let mut seen = Vec::new();
+        s.for_each_with_expiry(|k, _, exp| seen.push((k.to_string(), exp)));
+        seen.sort();
+        assert_eq!(seen[0], ("immortal".to_string(), u64::MAX));
+        assert_eq!(seen[1], ("mortal".to_string(), 1_500)); // clock starts at 1_000
     }
 
     #[test]

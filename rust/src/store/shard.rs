@@ -130,6 +130,21 @@ impl<V> Shard<V> {
         before - self.map.len()
     }
 
+    /// Like [`Shard::sweep`], but collects the removed keys so the caller
+    /// can propagate the expiry to secondary structures (e.g. tombstone
+    /// the matching vector-index nodes).
+    pub fn sweep_keys(&mut self, now_ms: u64, out: &mut Vec<String>) {
+        let start = out.len();
+        for (k, e) in &self.map {
+            if e.expires_at_ms <= now_ms {
+                out.push(k.clone());
+            }
+        }
+        for k in &out[start..] {
+            self.map.remove(k);
+        }
+    }
+
     pub fn live_len(&self, now_ms: u64) -> usize {
         self.map.values().filter(|e| e.expires_at_ms > now_ms).count()
     }
@@ -138,6 +153,16 @@ impl<V> Shard<V> {
         for (k, e) in &self.map {
             if e.expires_at_ms > now_ms {
                 f(k, &e.value);
+            }
+        }
+    }
+
+    /// Live entries with their absolute expiry (u64::MAX = immortal);
+    /// the snapshot writer converts this to wall-clock expiry.
+    pub fn for_each_live_expiry<F: FnMut(&str, &V, u64)>(&self, now_ms: u64, f: &mut F) {
+        for (k, e) in &self.map {
+            if e.expires_at_ms > now_ms {
+                f(k, &e.value, e.expires_at_ms);
             }
         }
     }

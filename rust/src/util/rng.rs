@@ -29,6 +29,17 @@ impl SplitMix64 {
         Self::new(seed ^ h)
     }
 
+    /// Current internal state (for checkpoint/restore; pairs with
+    /// [`SplitMix64::from_state`]).
+    pub fn state(&self) -> u64 {
+        self.state
+    }
+
+    /// Resume a stream from a saved [`SplitMix64::state`] value.
+    pub fn from_state(state: u64) -> Self {
+        Self { state }
+    }
+
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);

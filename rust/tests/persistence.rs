@@ -1,0 +1,524 @@
+//! Durability proof suite (ISSUE 6): crash injection against the real
+//! `semcached` binary, a seeded corruption fuzzer over WAL/snapshot
+//! bytes, a state-parity property test over random op traces, and a
+//! directed TTL-across-downtime test.
+//!
+//! The crash-safety contract under test (see `persist/mod.rs`):
+//! * every acknowledged mutation survives SIGKILL (WAL-before-ack);
+//! * recovery treats torn tails as normal — valid prefix, never a panic;
+//! * a record that fails its checksum is never served;
+//! * entries that expired while the process was down are not served, and
+//!   their graph nodes are tombstoned then compacted at the next
+//!   snapshot.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use semcache::cache::{CacheConfig, CachedEntry, IndexKind, SemanticCache};
+use semcache::metrics::Metrics;
+use semcache::persist::{PersistConfig, Persistence, WalSync};
+use semcache::store::{Clock, ManualClock};
+use semcache::testutil::{prop_check, PropConfig};
+use semcache::util::SplitMix64;
+
+// ---------- shared helpers ----------
+
+/// Fresh (pre-cleaned) scratch directory under the system temp dir.
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("semcache-durab-{tag}-{}", std::process::id()));
+    let _ = fs::remove_dir_all(&d);
+    d
+}
+
+fn pcfg(dir: &Path) -> PersistConfig {
+    PersistConfig {
+        data_dir: dir.to_path_buf(),
+        snapshot_interval_secs: 3_600,
+        wal_sync: WalSync::Os,
+    }
+}
+
+fn ccfg() -> CacheConfig {
+    CacheConfig::builder().index(IndexKind::Hnsw).ttl_ms(0).build().unwrap()
+}
+
+/// Deterministic non-degenerate embedding for entry `i`.
+fn vec_for(i: u64, dim: usize) -> Vec<f32> {
+    (0..dim).map(|d| ((i * 31 + d as u64 * 7) % 13) as f32 - 6.0).collect()
+}
+
+/// One-hot vector (orthogonal directions; lookups discriminate exactly).
+fn axis(i: usize, dim: usize) -> Vec<f32> {
+    let mut v = vec![0.0; dim];
+    v[i % dim] = 1.0;
+    v
+}
+
+fn entry(q: &str, r: &str) -> CachedEntry {
+    CachedEntry { question: q.to_string(), response: r.to_string(), cluster: 0 }
+}
+
+/// Canonical comparable image of the cache's live state: per partition
+/// (sorted by dim) the id allocator and every live entry with exact
+/// embedding bits and absolute expiry.
+type StateImage = Vec<(usize, u64, Vec<(u64, u64, String, String, u64, Vec<u32>)>)>;
+
+fn state_image(cache: &SemanticCache) -> StateImage {
+    cache
+        .partitions()
+        .iter()
+        .map(|p| {
+            let d = p.dump();
+            let entries = d
+                .entries
+                .iter()
+                .map(|e| {
+                    (
+                        e.id,
+                        e.expires_wall_ms,
+                        e.entry.question.clone(),
+                        e.entry.response.clone(),
+                        e.entry.cluster,
+                        e.embedding.iter().map(|f| f.to_bits()).collect(),
+                    )
+                })
+                .collect();
+            (d.dim, d.next_id, entries)
+        })
+        .collect()
+}
+
+// ---------- crash injection against the real daemon ----------
+
+#[cfg(unix)]
+mod crash {
+    use super::*;
+    use std::process::{Child, Command, Stdio};
+    use std::time::{Duration, Instant};
+
+    use semcache::api::QueryRequest;
+    use semcache::coordinator::http_request;
+    use semcache::json::Value;
+
+    /// Kills the daemon (SIGKILL) when dropped, so a failing assertion
+    /// never leaks a background `semcached` into the test runner.
+    struct Daemon(Child);
+
+    impl Drop for Daemon {
+        fn drop(&mut self) {
+            let _ = self.0.kill();
+            let _ = self.0.wait();
+        }
+    }
+
+    fn spawn_daemon(data_dir: &Path, port_file: &Path) -> Daemon {
+        let child = Command::new(env!("CARGO_BIN_EXE_semcached"))
+            .args([
+                "serve",
+                "--port",
+                "0",
+                "--port-file",
+                port_file.to_str().unwrap(),
+                "--data-dir",
+                data_dir.to_str().unwrap(),
+            ])
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawning semcached");
+        Daemon(child)
+    }
+
+    /// Ready-signal handshake: wait for the atomically-written port file,
+    /// then poll /v1/metrics until the daemon answers.
+    fn wait_ready(port_file: &Path, daemon: &mut Daemon) -> String {
+        let deadline = Instant::now() + Duration::from_secs(120);
+        let addr = loop {
+            if let Ok(s) = fs::read_to_string(port_file) {
+                if !s.is_empty() {
+                    break s;
+                }
+            }
+            if let Ok(Some(status)) = daemon.0.try_wait() {
+                panic!("semcached exited before becoming ready: {status}");
+            }
+            assert!(Instant::now() < deadline, "semcached never wrote its port file");
+            std::thread::sleep(Duration::from_millis(50));
+        };
+        loop {
+            if http_request(&addr, "GET", "/v1/metrics", None).is_ok() {
+                break;
+            }
+            assert!(Instant::now() < deadline, "semcached never became healthy at {addr}");
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        addr
+    }
+
+    fn post_query(addr: &str, text: &str) -> (u16, Value) {
+        let req = QueryRequest::new(text).to_json().to_string();
+        http_request(addr, "POST", "/v1/query", Some(&req)).expect("query round-trip")
+    }
+
+    #[test]
+    fn sigkill_mid_write_recovers_every_acked_entry() {
+        let root = tmpdir("crash");
+        fs::create_dir_all(&root).unwrap();
+        let data = root.join("data");
+        let port_file = root.join("port");
+
+        let mut daemon = spawn_daemon(&data, &port_file);
+        let addr = wait_ready(&port_file, &mut daemon);
+
+        // Acked inserts: once /v1/query returns, the record is in the
+        // WAL (write-before-ack), so it MUST survive SIGKILL.
+        let mut acked: Vec<(String, String)> = Vec::new();
+        let texts = [
+            "how do i reset my password",
+            "what is the refund policy for the pro plan",
+            "my invoice shows a duplicate charge",
+            "how can i export all of my account data",
+        ];
+        for text in texts {
+            let (status, body) = post_query(&addr, text);
+            assert_eq!(status, 200, "pre-crash insert failed: {body}");
+            let resp = body.get("response").as_str().expect("miss carries a response").to_string();
+            acked.push((text.to_string(), resp));
+        }
+
+        // Seeded mid-write kill: hammer inserts from a side thread and
+        // SIGKILL the daemon at a seeded point inside the burst, so the
+        // WAL tail is torn mid-record with high probability.
+        let burst_addr = addr.clone();
+        let burst = std::thread::spawn(move || {
+            for i in 0..256u64 {
+                let text = format!("in flight write number {i} about topic {}", i * 7 % 31);
+                let req = QueryRequest::new(text).to_json().to_string();
+                if http_request(&burst_addr, "POST", "/v1/query", Some(&req)).is_err() {
+                    break; // daemon died mid-burst — the point of the test
+                }
+            }
+        });
+        let mut rng = SplitMix64::new(0xC4A5_4001);
+        std::thread::sleep(Duration::from_millis(30 + rng.next_u64() % 400));
+        daemon.0.kill().expect("SIGKILL"); // std kill = SIGKILL on unix
+        let _ = daemon.0.wait();
+        let _ = burst.join();
+        drop(daemon);
+
+        // Restart on the same data dir: recovery must come up clean.
+        let _ = fs::remove_file(&port_file);
+        let mut daemon2 = spawn_daemon(&data, &port_file);
+        let addr2 = wait_ready(&port_file, &mut daemon2);
+
+        // /v1/metrics must report the recovery.
+        let (status, metrics) = http_request(&addr2, "GET", "/v1/metrics", None).unwrap();
+        assert_eq!(status, 200);
+        let recovered = metrics.get("recovered_entries").as_u64().unwrap_or(0);
+        assert!(
+            recovered >= acked.len() as u64,
+            "recovered_entries = {recovered}, expected at least the {} acked inserts",
+            acked.len()
+        );
+
+        // Every acked entry serves a hit with its original response.
+        for (text, resp) in &acked {
+            let (status, body) = post_query(&addr2, text);
+            assert_eq!(status, 200);
+            assert_eq!(
+                body.get("outcome").get("type").as_str(),
+                Some("hit"),
+                "pre-crash entry '{text}' must hit after recovery, got {body}"
+            );
+            assert_eq!(
+                body.get("response").as_str(),
+                Some(resp.as_str()),
+                "recovered entry must serve its original response"
+            );
+        }
+
+        // Semantic (paraphrase) hit survives too — the graph recovered,
+        // not just exact bytes (same pair verify.sh uses).
+        let (_, body) = post_query(&addr2, "how can i reset my password");
+        assert_eq!(
+            body.get("outcome").get("type").as_str(),
+            Some("hit"),
+            "paraphrase of a recovered entry must hit, got {body}"
+        );
+        assert_eq!(body.get("response").as_str(), Some(acked[0].1.as_str()));
+
+        drop(daemon2);
+        let _ = fs::remove_dir_all(&root);
+    }
+}
+
+// ---------- seeded corruption fuzzer ----------
+
+fn copy_dir(src: &Path, dst: &Path) {
+    fs::create_dir_all(dst).unwrap();
+    for e in fs::read_dir(src).unwrap().flatten() {
+        if e.path().is_file() {
+            fs::copy(e.path(), dst.join(e.file_name())).unwrap();
+        }
+    }
+}
+
+/// Apply one seeded mutation to a random persistence file: a truncation,
+/// a burst of bit-flips, or both.
+fn mutate_dir(dir: &Path, rng: &mut SplitMix64) {
+    let mut files: Vec<PathBuf> =
+        fs::read_dir(dir).unwrap().flatten().map(|e| e.path()).filter(|p| p.is_file()).collect();
+    files.sort(); // deterministic order for a given seed
+    if files.is_empty() {
+        return;
+    }
+    let target = &files[(rng.next_u64() % files.len() as u64) as usize];
+    let mut bytes = fs::read(target).unwrap();
+    let mode = rng.next_u64() % 3;
+    if (mode == 0 || mode == 2) && !bytes.is_empty() {
+        // Torn tail / torn file: cut at a random length (possibly 0).
+        bytes.truncate((rng.next_u64() % (bytes.len() as u64 + 1)) as usize);
+    }
+    if (mode == 1 || mode == 2) && !bytes.is_empty() {
+        let flips = 1 + rng.next_u64() % 8;
+        for _ in 0..flips {
+            let at = (rng.next_u64() % bytes.len() as u64) as usize;
+            bytes[at] ^= 1 << (rng.next_u64() % 8);
+        }
+    }
+    fs::write(target, bytes).unwrap();
+}
+
+#[test]
+fn corruption_fuzzer_never_panics_never_serves_corrupt_records() {
+    // Pristine history: 40 inserts with a snapshot in the middle (so both
+    // snapshot bytes and WAL-suffix bytes exist to corrupt), one remove.
+    let base = tmpdir("fuzz-base");
+    let dim = 12;
+    let mut truth: BTreeMap<String, (String, Vec<u32>)> = BTreeMap::new();
+    {
+        let clock = Arc::new(ManualClock::new(10_000));
+        let (cache, p, _) =
+            Persistence::open(&pcfg(&base), ccfg(), clock, Arc::new(Metrics::new())).unwrap();
+        for i in 0..40u64 {
+            let emb = vec_for(i, dim);
+            let q = format!("question {i}");
+            let r = format!("answer {i}");
+            cache.try_insert(&q, &emb, &r).unwrap();
+            truth.insert(q, (r, emb.iter().map(|f| f.to_bits()).collect()));
+            if i == 24 {
+                p.snapshot(&cache).unwrap();
+            }
+        }
+        // A remove record in the WAL suffix. `truth` deliberately keeps
+        // the removed entry's content: a truncation landing before the
+        // remove record legitimately recovers the pre-remove prefix, and
+        // the subset check below is about content fidelity, not about
+        // which prefix of history survived.
+        assert!(cache.remove_entry(dim, 3));
+    }
+
+    // >= 64 seeded mutations (ISSUE 6 floor), each over a fresh copy.
+    let mut survived = 0usize;
+    for seed in 0..72u64 {
+        let work = tmpdir(&format!("fuzz-{seed}"));
+        copy_dir(&base, &work);
+        let mut rng = SplitMix64::new(0xF0_22ED ^ (seed.wrapping_mul(0x9E37_79B9_7F4A_7C15)));
+        mutate_dir(&work, &mut rng);
+
+        // Recovery must not panic and must not error on corrupt bytes —
+        // corruption degrades to recovering less, never to failure.
+        let clock = Arc::new(ManualClock::new(10_000));
+        let (cache, _p, rep) =
+            Persistence::open(&pcfg(&work), ccfg(), clock, Arc::new(Metrics::new()))
+                .unwrap_or_else(|e| panic!("seed {seed}: recovery errored on corrupt dir: {e:#}"));
+
+        // Whatever was recovered must be a content-identical subset of
+        // what was written: a checksum-failing record is dropped whole,
+        // never served with altered bytes.
+        let mut n = 0usize;
+        for part in cache.partitions() {
+            let d = part.dump();
+            assert_eq!(d.dim, dim);
+            for e in d.entries {
+                let (resp, emb_bits) = truth
+                    .get(&e.entry.question)
+                    .unwrap_or_else(|| panic!("seed {seed}: recovered a never-written entry {:?}", e.entry.question));
+                assert_eq!(&e.entry.response, resp, "seed {seed}: response bytes altered");
+                let got: Vec<u32> = e.embedding.iter().map(|f| f.to_bits()).collect();
+                assert_eq!(&got, emb_bits, "seed {seed}: embedding bits altered");
+                n += 1;
+            }
+        }
+        assert_eq!(n, rep.entries, "seed {seed}: report disagrees with state");
+        assert!(n <= truth.len(), "seed {seed}: recovered more than was ever written");
+        // The recovered subset still serves.
+        if n > 0 {
+            let served = (0..40u64)
+                .filter(|i| cache.lookup(&vec_for(*i, dim)).is_some())
+                .count();
+            assert!(served > 0, "seed {seed}: recovered entries do not serve");
+        }
+        survived += 1;
+        let _ = fs::remove_dir_all(&work);
+    }
+    assert_eq!(survived, 72);
+    let _ = fs::remove_dir_all(&base);
+}
+
+// ---------- property: recovered state is entry-for-entry identical ----------
+
+#[test]
+fn prop_recovered_state_matches_live_state() {
+    // Random op trace (inserts across two dims, per-entry TTLs, removes,
+    // clock advances, rare flushes) with a snapshot forced at a random
+    // cut point; recovery under the same wall clock must reproduce the
+    // live state exactly: ids, payloads, embedding bits, absolute
+    // expiries, and the id allocator.
+    prop_check(
+        PropConfig { cases: 24, seed: 0xD0_57ED, ..Default::default() },
+        "durability-state-parity",
+        |g| {
+            let dir = tmpdir("prop");
+            let clock = Arc::new(ManualClock::new(50_000));
+            let (cache, p, _) =
+                Persistence::open(&pcfg(&dir), ccfg(), clock.clone(), Arc::new(Metrics::new()))
+                    .map_err(|e| format!("open: {e:#}"))?;
+
+            let n_ops = g.usize_in(5, 50);
+            let snap_at = g.usize_below(n_ops);
+            let mut live_ids: Vec<(usize, u64)> = Vec::new();
+            for op in 0..n_ops {
+                if op == snap_at {
+                    p.snapshot(&cache).map_err(|e| format!("snapshot: {e:#}"))?;
+                }
+                match g.usize_below(10) {
+                    0..=5 => {
+                        let dim = *g.choose(&[6usize, 10]);
+                        let emb = g.vec_f32(dim, -1.0, 1.0);
+                        let ttl = match g.usize_below(3) {
+                            0 => None,    // config default (immortal here)
+                            1 => Some(0), // explicit immortal
+                            _ => Some(g.usize_in(100, 5_000) as u64),
+                        };
+                        let e = entry(&g.word(), &g.word());
+                        let id = cache
+                            .try_insert_entry_ttl(&emb, e, ttl)
+                            .map_err(|e| format!("insert: {e:#}"))?;
+                        live_ids.push((dim, id));
+                    }
+                    6 | 7 => {
+                        if !live_ids.is_empty() {
+                            let (dim, id) = live_ids[g.usize_below(live_ids.len())];
+                            cache.remove_entry(dim, id);
+                        }
+                    }
+                    8 => clock.advance(g.usize_in(0, 2_000) as u64),
+                    _ => {
+                        if g.usize_below(4) == 0 {
+                            cache.clear();
+                            live_ids.clear();
+                        }
+                    }
+                }
+            }
+
+            let before = state_image(&cache);
+            drop(cache);
+            drop(p);
+
+            // Reopen at the same wall time (no downtime in this property;
+            // downtime is the directed test below).
+            let clock2 = Arc::new(ManualClock::new(clock.now_ms()));
+            let (cache2, _p2, _rep) =
+                Persistence::open(&pcfg(&dir), ccfg(), clock2, Arc::new(Metrics::new()))
+                    .map_err(|e| format!("reopen: {e:#}"))?;
+            let after = state_image(&cache2);
+            if before != after {
+                return Err(format!(
+                    "recovered state diverged\n live: {} partitions, {} entries\n recovered: {} partitions, {} entries",
+                    before.len(),
+                    before.iter().map(|p| p.2.len()).sum::<usize>(),
+                    after.len(),
+                    after.iter().map(|p| p.2.len()).sum::<usize>(),
+                ));
+            }
+            let _ = fs::remove_dir_all(&dir);
+            Ok(())
+        },
+    );
+}
+
+// ---------- directed: TTL across downtime ----------
+
+#[test]
+fn ttl_expiry_during_downtime_is_honored_and_compacted() {
+    let dir = tmpdir("downtime");
+    let dim = 8;
+
+    // t = 100s: six entries with a 1s TTL, two immortal; snapshot so the
+    // persisted graph carries all eight nodes.
+    {
+        let clock = Arc::new(ManualClock::new(100_000));
+        let (cache, p, _) =
+            Persistence::open(&pcfg(&dir), ccfg(), clock, Arc::new(Metrics::new())).unwrap();
+        for i in 0..6 {
+            cache
+                .try_insert_entry_ttl(&axis(i, dim), entry(&format!("m{i}"), "mortal"), Some(1_000))
+                .unwrap();
+        }
+        for i in 6..8 {
+            cache
+                .try_insert_entry_ttl(&axis(i, dim), entry(&format!("im{i}"), "forever"), Some(0))
+                .unwrap();
+        }
+        p.snapshot(&cache).unwrap();
+    }
+
+    // 5 s of downtime (simulated: reopen under a later wall clock — no
+    // sleeping). The six mortal entries died while the process was down.
+    let clock = Arc::new(ManualClock::new(105_000));
+    let (cache, p, rep) =
+        Persistence::open(&pcfg(&dir), ccfg(), clock, Arc::new(Metrics::new())).unwrap();
+    assert!(rep.snapshot_loaded);
+    assert_eq!(rep.expired_during_downtime, 6);
+    assert_eq!(rep.entries, 2);
+    assert_eq!(cache.len(), 2);
+    for i in 0..6 {
+        assert!(
+            cache.lookup(&axis(i, dim)).is_none(),
+            "entry {i} expired during downtime and must not be served"
+        );
+    }
+    for i in 6..8 {
+        assert_eq!(cache.lookup(&axis(i, dim)).unwrap().entry.response, "forever");
+    }
+
+    // The loaded graph carried 8 nodes; the 6 dead ones are tombstones,
+    // and garbage_ratio sees them without any lookup having tripped.
+    let part = cache.partition_if_exists(dim).expect("partition recovered");
+    assert!(
+        part.garbage_ratio() > 0.70,
+        "dead-during-downtime nodes must be tombstoned, ratio = {}",
+        part.garbage_ratio()
+    );
+
+    // The next snapshot folds in compaction: tombstones reclaimed.
+    p.snapshot(&cache).unwrap();
+    assert_eq!(part.garbage_ratio(), 0.0, "snapshot must compact tombstoned nodes");
+
+    // And the compacted snapshot round-trips clean: no re-index fallback,
+    // no dead entries, survivors still served.
+    drop(cache);
+    drop(p);
+    let clock2 = Arc::new(ManualClock::new(106_000));
+    let (cache2, _p2, rep2) =
+        Persistence::open(&pcfg(&dir), ccfg(), clock2, Arc::new(Metrics::new())).unwrap();
+    assert_eq!(rep2.entries, 2);
+    assert_eq!(rep2.reindexed_partitions, 0);
+    assert_eq!(rep2.expired_during_downtime, 0);
+    assert_eq!(cache2.lookup(&axis(7, dim)).unwrap().entry.response, "forever");
+    let _ = fs::remove_dir_all(&dir);
+}

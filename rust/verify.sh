@@ -7,7 +7,9 @@
 # an HTTP loopback smoke test of the `semcached` daemon (same query
 # twice over the wire -> the repeat must be a cache hit), an idle-fan-in
 # smoke (32 idle keep-alive connections must not starve a fresh query on
-# the default event loop), and a smoke run of the serving benches
+# the default event loop), a kill-9 durability smoke (populate a
+# --data-dir daemon, SIGKILL, restart <= 3s, paraphrase must still hit
+# with recovered_entries > 0), and a smoke run of the serving benches
 # (SEMCACHE_BENCH_SMOKE=1 keeps each to a few seconds). Fails fast on
 # the first broken step.
 set -euo pipefail
@@ -104,6 +106,66 @@ kill "$SRV_PID" 2>/dev/null || true
 wait "$SRV_PID" 2>/dev/null || true
 trap - EXIT
 
+# Kill-9 durability smoke (ISSUE 6): populate a daemon serving with a
+# data dir, SIGKILL it (no graceful shutdown of any kind), restart on
+# the same dir, and the pre-crash entry must still answer — including
+# via a paraphrase (the recovered ANN graph, not just exact bytes) —
+# with /v1/metrics reporting the recovery. The restart-to-ready window
+# is bounded at 3 s: warm restarts must be fast enough to roll through.
+echo "==> kill-9 durability smoke: populate -> SIGKILL -> warm restart -> paraphrase hit"
+DATA_DIR="$(mktemp -d)"
+PORT_FILE="$(mktemp)"
+./target/release/semcached serve --port 0 --port-file "$PORT_FILE" --data-dir "$DATA_DIR" &
+SRV_PID=$!
+trap 'kill -9 "$SRV_PID" 2>/dev/null || true; rm -rf "$DATA_DIR"' EXIT
+for _ in $(seq 1 100); do
+    [ -s "$PORT_FILE" ] && break
+    sleep 0.1
+done
+[ -s "$PORT_FILE" ] || { echo "durable semcached did not come up (no port file)"; exit 1; }
+ADDR="$(cat "$PORT_FILE")"
+for _ in $(seq 1 100); do
+    ./target/release/semcached metrics --addr "$ADDR" >/dev/null 2>&1 && break
+    sleep 0.1
+done
+./target/release/semcached query --addr "$ADDR" "how do i reset my password" >/dev/null
+ORIG="$(./target/release/semcached query --addr "$ADDR" "how do i reset my password")"
+kill -9 "$SRV_PID" 2>/dev/null || true
+wait "$SRV_PID" 2>/dev/null || true
+: > "$PORT_FILE"
+T0=$(date +%s)
+./target/release/semcached serve --port 0 --port-file "$PORT_FILE" --data-dir "$DATA_DIR" &
+SRV_PID=$!
+trap 'kill -9 "$SRV_PID" 2>/dev/null || true; rm -rf "$DATA_DIR"' EXIT
+READY=0
+for _ in $(seq 1 100); do
+    if [ -s "$PORT_FILE" ] \
+        && ./target/release/semcached metrics --addr "$(cat "$PORT_FILE")" >/dev/null 2>&1; then
+        READY=1
+        break
+    fi
+    sleep 0.1
+done
+T1=$(date +%s)
+[ "$READY" = 1 ] || { echo "durability smoke FAILED: daemon did not restart"; exit 1; }
+[ $((T1 - T0)) -le 3 ] \
+    || { echo "durability smoke FAILED: warm restart took $((T1 - T0))s (> 3s)"; exit 1; }
+ADDR="$(cat "$PORT_FILE")"
+OUT="$(./target/release/semcached query --addr "$ADDR" "how can i reset my password")"
+echo "$OUT" | grep -q '"type": "hit"' \
+    || { echo "durability smoke FAILED: paraphrase did not hit after SIGKILL restart"; echo "$OUT"; exit 1; }
+echo "$ORIG" | grep -qF "$(echo "$OUT" | sed -n 's/.*"response": "\([^"]*\)".*/\1/p')" \
+    || { echo "durability smoke FAILED: recovered response differs from the pre-crash one"; exit 1; }
+METRICS="$(./target/release/semcached metrics --addr "$ADDR")"
+RECOVERED="$(num recovered_entries)"
+[ "${RECOVERED:-0}" -ge 1 ] \
+    || { echo "durability smoke FAILED: recovered_entries shows ${RECOVERED:-0}"; echo "$METRICS"; exit 1; }
+kill -9 "$SRV_PID" 2>/dev/null || true
+wait "$SRV_PID" 2>/dev/null || true
+rm -rf "$DATA_DIR"
+trap - EXIT
+echo "    durability smoke OK (SIGKILL -> restart in $((T1 - T0))s, $RECOVERED entries recovered, paraphrase hit)"
+
 echo "==> smoke bench: bench_batch_throughput (SEMCACHE_BENCH_SMOKE=1)"
 SEMCACHE_BENCH_SMOKE=1 cargo bench --bench bench_batch_throughput
 
@@ -112,5 +174,8 @@ SEMCACHE_BENCH_SMOKE=1 cargo bench --bench bench_http_loopback
 
 echo "==> smoke bench: bench_embed_throughput (SEMCACHE_BENCH_SMOKE=1)"
 SEMCACHE_BENCH_SMOKE=1 cargo bench --bench bench_embed_throughput
+
+echo "==> smoke bench: bench_persist_restart (SEMCACHE_BENCH_SMOKE=1)"
+SEMCACHE_BENCH_SMOKE=1 cargo bench --bench bench_persist_restart
 
 echo "==> verify OK"
