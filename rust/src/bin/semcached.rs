@@ -79,8 +79,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut cfg = load_config(args)?;
     if let Some(dir) = args.opt("data-dir") {
         cfg.data_dir = dir.to_string();
-        cfg.validate()?;
     }
+    // Re-validate after *every* override (config file, `--workers`,
+    // `--data-dir`): cross-field invariants like "a data dir requires
+    // snapshot_interval_secs >= 1" must hold no matter which source
+    // supplied each half of the pair.
+    cfg.validate()?;
     // The validating builders are the construction path for the daemon:
     // a bad --similarity_threshold (NaN, out of range) fails here, at
     // startup, not as a panic mid-request — and so do bad batcher knobs

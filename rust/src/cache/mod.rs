@@ -187,9 +187,12 @@ pub struct CachedEntry {
 /// WAL ([`crate::persist::Persistence`]). Hooks fire *after* the mutation
 /// is applied in memory — that ordering is what makes snapshot WAL
 /// rotation race-free (any mutation applied after the snapshot's memory
-/// capture necessarily lands in the post-rotation segment). The journal
-/// is attached only after recovery replay, so replayed mutations are
-/// never re-logged.
+/// capture necessarily lands in the post-rotation segment). Apply + log
+/// happen under the cache's journal gate, so the WAL records dependent
+/// mutations (a remove or clear racing an insert of the same id) in the
+/// exact order they were applied — replay reproduces the applied
+/// history, never an inverted one. The journal is attached only after
+/// recovery replay, so replayed mutations are never re-logged.
 pub trait CacheJournal: Send + Sync {
     /// A new entry: its partition dim, assigned id, raw (unnormalized)
     /// embedding, payload, and absolute wall-clock expiry
@@ -229,6 +232,13 @@ pub struct SemanticCache {
     clock: Arc<dyn Clock>,
     /// Mutation observer (WAL); `None` until durability is enabled.
     journal: std::sync::RwLock<Option<Arc<dyn CacheJournal>>>,
+    /// Serializes journaled mutations across apply + log so WAL order
+    /// always matches in-memory apply order (without it, a remove or
+    /// clear racing an insert of the same id could log before the
+    /// insert's record, and replay would resurrect the removed entry or
+    /// drop an acknowledged one). Uncontended when durability is off —
+    /// the non-journal paths never take it.
+    journal_gate: std::sync::Mutex<()>,
 }
 
 impl SemanticCache {
@@ -242,6 +252,7 @@ impl SemanticCache {
             partitions: std::sync::RwLock::new(HashMap::new()),
             clock,
             journal: std::sync::RwLock::new(None),
+            journal_gate: std::sync::Mutex::new(()),
         }
     }
 
@@ -350,11 +361,15 @@ impl SemanticCache {
         if embedding.is_empty() {
             bail!("cannot insert an empty embedding");
         }
-        let p = self.partition(embedding.len());
         match self.journal() {
-            None => Ok(p.insert_with_ttl(embedding, entry, ttl_ms)),
+            None => Ok(self.partition(embedding.len()).insert_with_ttl(embedding, entry, ttl_ms)),
             Some(journal) => {
-                // Apply first, then log (see [`CacheJournal`] ordering).
+                // Apply first, then log, with the journal gate held
+                // across both (see [`CacheJournal`] ordering). The
+                // partition is resolved inside the gate so a racing
+                // `clear` cannot detach it between apply and log.
+                let _order = self.journal_gate.lock().unwrap();
+                let p = self.partition(embedding.len());
                 let id = p.insert_with_ttl(embedding, entry.clone(), ttl_ms);
                 let ttl = ttl_ms.unwrap_or(self.cfg.ttl_ms);
                 let expires_wall_ms =
@@ -368,16 +383,20 @@ impl SemanticCache {
     /// Remove one entry by partition dim and id (store, index, and
     /// embedding map together). Returns whether a live entry was removed.
     pub fn remove_entry(&self, dim: usize, id: u64) -> bool {
-        let Some(p) = self.partition_if_exists(dim) else {
-            return false;
-        };
-        let removed = p.remove_id(id);
-        if removed {
-            if let Some(journal) = self.journal() {
-                journal.log_remove(dim, id);
+        match self.journal() {
+            None => self.partition_if_exists(dim).map_or(false, |p| p.remove_id(id)),
+            Some(journal) => {
+                let _order = self.journal_gate.lock().unwrap();
+                let Some(p) = self.partition_if_exists(dim) else {
+                    return false;
+                };
+                let removed = p.remove_id(id);
+                if removed {
+                    journal.log_remove(dim, id);
+                }
+                removed
             }
         }
-        removed
     }
 
     /// Pre-v1 insert with the `0 = rejected` sentinel.
@@ -399,6 +418,7 @@ impl SemanticCache {
     /// Drop every entry and partition. Returns the number of live
     /// entries removed (the `/v1/admin` flush operation).
     pub fn clear(&self) -> usize {
+        let _order = self.journal().map(|_| self.journal_gate.lock().unwrap());
         let removed = {
             let mut parts = self.partitions.write().unwrap();
             let removed = parts.values().map(|p| p.len()).sum();

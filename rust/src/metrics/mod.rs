@@ -87,6 +87,10 @@ pub struct Metrics {
     pub wal_records: AtomicU64,
     /// Framed bytes appended to the write-ahead log since startup.
     pub wal_bytes: AtomicU64,
+    /// WAL appends that failed (disk full, dir deleted) for mutations
+    /// that were already acknowledged. Non-zero means durability is
+    /// degraded until the next successful snapshot — alert on it.
+    pub wal_append_errors: AtomicU64,
     /// Snapshots successfully written (temp + atomic rename completed).
     pub snapshots_written: AtomicU64,
     /// Wall time of the startup recovery pass (snapshot load + WAL
@@ -146,6 +150,8 @@ pub struct MetricsSnapshot {
     pub coalesced: u64,
     pub wal_records: u64,
     pub wal_bytes: u64,
+    /// Failed appends of acknowledged mutations (durability degraded).
+    pub wal_append_errors: u64,
     pub snapshots_written: u64,
     pub recovery_ms: u64,
     pub recovered_entries: u64,
@@ -273,6 +279,11 @@ impl Metrics {
         self.wal_bytes.fetch_add(bytes, Ordering::Relaxed);
     }
 
+    /// One WAL append that failed after its mutation was acknowledged.
+    pub fn record_wal_append_error(&self) {
+        self.wal_append_errors.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// One snapshot made durable.
     pub fn record_snapshot_written(&self) {
         self.snapshots_written.fetch_add(1, Ordering::Relaxed);
@@ -342,6 +353,7 @@ impl Metrics {
             coalesced: self.coalesced.load(Ordering::Relaxed),
             wal_records: self.wal_records.load(Ordering::Relaxed),
             wal_bytes: self.wal_bytes.load(Ordering::Relaxed),
+            wal_append_errors: self.wal_append_errors.load(Ordering::Relaxed),
             snapshots_written: self.snapshots_written.load(Ordering::Relaxed),
             recovery_ms: self.recovery_ms.load(Ordering::Relaxed),
             recovered_entries: self.recovered_entries.load(Ordering::Relaxed),
@@ -442,6 +454,7 @@ impl MetricsSnapshot {
             ("lat_dispatch_mean_ms", self.lat_dispatch.mean.into()),
             ("wal_records", self.wal_records.into()),
             ("wal_bytes", self.wal_bytes.into()),
+            ("wal_append_errors", self.wal_append_errors.into()),
             ("snapshots_written", self.snapshots_written.into()),
             ("recovery_ms", self.recovery_ms.into()),
             ("recovered_entries", self.recovered_entries.into()),
@@ -582,17 +595,20 @@ mod tests {
         let m = Metrics::new();
         m.record_wal_append(120);
         m.record_wal_append(80);
+        m.record_wal_append_error();
         m.record_snapshot_written();
         m.record_recovery(42, 17);
         let s = m.snapshot();
         assert_eq!(s.wal_records, 2);
         assert_eq!(s.wal_bytes, 200);
+        assert_eq!(s.wal_append_errors, 1);
         assert_eq!(s.snapshots_written, 1);
         assert_eq!(s.recovery_ms, 42);
         assert_eq!(s.recovered_entries, 17);
         let j = s.to_json();
         assert_eq!(j.get("wal_records").as_usize(), Some(2));
         assert_eq!(j.get("wal_bytes").as_usize(), Some(200));
+        assert_eq!(j.get("wal_append_errors").as_usize(), Some(1));
         assert_eq!(j.get("snapshots_written").as_usize(), Some(1));
         assert_eq!(j.get("recovered_entries").as_usize(), Some(17));
     }

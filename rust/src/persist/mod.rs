@@ -17,6 +17,16 @@
 //! Crash-safety contract:
 //! * an acknowledged mutation is in the WAL before the ack (under
 //!   `wal_sync = "always"` it is also fsynced, surviving power loss);
+//!   if the append itself fails (disk full, dir deleted) the request
+//!   still serves, but the gap is surfaced as `wal_append_errors` on
+//!   `/v1/metrics` — a non-zero value means durability is degraded
+//!   until the next successful snapshot;
+//! * WAL order matches in-memory apply order (the cache's journal gate
+//!   holds across apply + append), so replaying the log reproduces the
+//!   applied history even for racing dependent mutations;
+//! * a torn segment is sealed (truncated to its valid prefix) during
+//!   recovery, so segments written after the recovery are never
+//!   mistaken for post-tear garbage by a later recovery;
 //! * snapshots become visible only via atomic rename — a crash mid-
 //!   snapshot leaves the previous snapshot + full WAL intact;
 //! * recovery never serves a record that fails its checksum.
@@ -185,6 +195,18 @@ impl Persistence {
             if scan.torn {
                 report.torn_tail = true;
                 stop = true;
+                // Seal the torn segment to its valid prefix so the *next*
+                // recovery scans it clean. Without this the tear is
+                // re-detected on every restart, and the discard loop
+                // below would then delete the segment this recovery is
+                // about to start writing — silently losing every
+                // mutation acknowledged between the two restarts.
+                if let Err(e) = wal::truncate_segment(path, scan.valid_len) {
+                    eprintln!(
+                        "semcache: sealing torn wal segment {} failed: {e}",
+                        path.display()
+                    );
+                }
                 // Discard segments past the tear so a future recovery
                 // cannot replay post-tear history after this prefix.
                 for (s2, p2) in &segments {
@@ -273,9 +295,15 @@ impl Persistence {
         match w.append(op) {
             Ok(bytes) => self.metrics.record_wal_append(bytes),
             // An appender that cannot write (disk full, dir deleted)
-            // must not take the serving path down; the loss is bounded
-            // by the next successful snapshot.
-            Err(e) => eprintln!("semcache: wal append failed: {e}"),
+            // must not take the serving path down, but the mutation was
+            // already acknowledged — durability is degraded until the
+            // next successful snapshot. Surface that on /v1/metrics
+            // (`wal_append_errors`) so operators can alert on it instead
+            // of discovering the gap at the next crash.
+            Err(e) => {
+                self.metrics.record_wal_append_error();
+                eprintln!("semcache: wal append failed: {e}");
+            }
         }
     }
 }
@@ -471,6 +499,53 @@ mod tests {
             Persistence::open(&pcfg(&dir), ccfg(), clock, Arc::new(Metrics::new())).unwrap();
         assert_eq!(rep.entries, 1);
         assert_eq!(cache2.lookup(&vec_for(99, 4)).unwrap().entry.response, "alive");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_segment_is_sealed_so_second_restart_keeps_post_crash_writes() {
+        // Regression (review, high): recovery used to leave the torn
+        // segment torn on disk, so the *next* restart re-detected the
+        // tear and discarded every segment written after it — silently
+        // losing all mutations acknowledged between two restarts.
+        let dir = tmpdir("seal");
+        let clock = Arc::new(ManualClock::new(1_000));
+        {
+            let (cache, _p, _) =
+                Persistence::open(&pcfg(&dir), ccfg(), clock.clone(), Arc::new(Metrics::new()))
+                    .unwrap();
+            for i in 0..10u64 {
+                cache.try_insert(&format!("q{i}"), &vec_for(i, 8), &format!("a{i}")).unwrap();
+            }
+        }
+        // Simulate SIGKILL mid-write: tear the tail of the only segment.
+        let (_, seg0) = wal::list_segments(&dir).unwrap().pop().unwrap();
+        let bytes = fs::read(&seg0).unwrap();
+        fs::write(&seg0, &bytes[..bytes.len() - 5]).unwrap();
+
+        // Restart #1: recovers the valid prefix, seals the tear, and
+        // acknowledges new writes (which land in a fresh segment).
+        {
+            let (cache, _p, rep) =
+                Persistence::open(&pcfg(&dir), ccfg(), clock.clone(), Arc::new(Metrics::new()))
+                    .unwrap();
+            assert!(rep.torn_tail);
+            assert_eq!(rep.entries, 9, "last record was torn, prefix recovers");
+            for i in 10..15u64 {
+                cache.try_insert(&format!("q{i}"), &vec_for(i, 8), &format!("a{i}")).unwrap();
+            }
+        }
+        let scan = wal::read_segment(&seg0).unwrap();
+        assert!(!scan.torn, "recovery must seal the torn segment");
+
+        // Restart #2 (no crash in between): the post-tear segment holds
+        // acknowledged history and must be replayed, not discarded.
+        let (cache2, _p2, rep2) =
+            Persistence::open(&pcfg(&dir), ccfg(), clock, Arc::new(Metrics::new())).unwrap();
+        assert!(!rep2.torn_tail, "no new tear on a clean shutdown");
+        assert_eq!(rep2.entries, 14, "9 pre-crash + 5 post-crash acked entries");
+        let hit = cache2.lookup(&vec_for(12, 8)).expect("post-crash acked entry must survive");
+        assert_eq!(hit.entry.response, "a12");
         let _ = fs::remove_dir_all(&dir);
     }
 

@@ -176,6 +176,18 @@ pub fn list_segments(dir: &Path) -> std::io::Result<Vec<(u64, PathBuf)>> {
     Ok(out)
 }
 
+/// Truncate a segment to its valid prefix (as reported by
+/// [`read_segment`]'s `valid_len`) and sync the result, sealing a torn
+/// tail. After sealing, the segment scans clean — which is what lets
+/// recovery keep *later* segments: a segment left torn on disk would be
+/// re-detected as torn by every future recovery, each of which would
+/// then discard the (acknowledged) history written after it.
+pub fn truncate_segment(path: &Path, valid_len: u64) -> std::io::Result<()> {
+    let file = OpenOptions::new().write(true).open(path)?;
+    file.set_len(valid_len)?;
+    file.sync_all()
+}
+
 /// Appender for one WAL segment.
 pub struct WalWriter {
     file: File,
@@ -368,6 +380,27 @@ mod tests {
                 assert!(ops.contains(got), "byte {byte} surfaced altered record");
             }
         }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sealing_a_torn_segment_makes_it_scan_clean() {
+        let dir = tmpdir("seal");
+        let mut w = WalWriter::create(&dir, 0, WalSync::Os).unwrap();
+        for op in &sample_ops() {
+            w.append(op).unwrap();
+        }
+        drop(w);
+        let path = segment_path(&dir, 0);
+        let full = fs::read(&path).unwrap();
+        fs::write(&path, &full[..full.len() - 3]).unwrap(); // tear mid-record
+        let scan = read_segment(&path).unwrap();
+        assert!(scan.torn);
+        truncate_segment(&path, scan.valid_len).unwrap();
+        let sealed = read_segment(&path).unwrap();
+        assert!(!sealed.torn, "a sealed segment must scan clean");
+        assert_eq!(sealed.valid_len, scan.valid_len);
+        assert_eq!(sealed.ops[..], sample_ops()[..sample_ops().len() - 1]);
         let _ = fs::remove_dir_all(&dir);
     }
 

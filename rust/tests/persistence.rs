@@ -451,6 +451,80 @@ fn prop_recovered_state_matches_live_state() {
     );
 }
 
+// ---------- racing dependent mutations: WAL order == apply order ----------
+
+#[test]
+fn wal_order_matches_apply_order_under_racing_dependent_mutations() {
+    // Regression (review, medium): apply-then-log was not atomic per
+    // mutation, so a remove (observed via lookup) or a clear racing an
+    // insert could log its record *before* the insert's, and replay
+    // then resurrected a removed entry or dropped an acknowledged one.
+    // With the journal gate, every interleaving must recover to exactly
+    // the live state.
+    let dir = tmpdir("order");
+    let dim = 8;
+    let clock = Arc::new(ManualClock::new(7_000));
+    let (cache, p, _) =
+        Persistence::open(&pcfg(&dir), ccfg(), clock, Arc::new(Metrics::new())).unwrap();
+    let cache = Arc::new(cache);
+
+    let mut handles = Vec::new();
+    // Writers: steady stream of acknowledged inserts.
+    for t in 0..3u64 {
+        let c = cache.clone();
+        handles.push(std::thread::spawn(move || {
+            for i in 0..200u64 {
+                let emb = vec_for(t * 10_000 + i, dim);
+                c.try_insert(&format!("t{t}q{i}"), &emb, &format!("t{t}a{i}")).unwrap();
+            }
+        }));
+    }
+    // Reaper: the review's exact race — observe an id via lookup, then
+    // remove it while its inserter may still sit between apply and log.
+    {
+        let c = cache.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = SplitMix64::new(0x0D_DE12);
+            for _ in 0..400 {
+                let key = (rng.next_u64() % 3) * 10_000 + rng.next_u64() % 200;
+                if let Some(hit) = c.lookup_with_threshold(&vec_for(key, dim), 0.99) {
+                    c.remove_entry(dim, hit.id);
+                }
+            }
+        }));
+    }
+    // Chaos: occasional full flushes racing everything above.
+    {
+        let c = cache.clone();
+        handles.push(std::thread::spawn(move || {
+            for _ in 0..5 {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+                c.clear();
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let before = state_image(&cache);
+    drop(p);
+    drop(cache);
+    let (cache2, _p2, _rep) = Persistence::open(
+        &pcfg(&dir),
+        ccfg(),
+        Arc::new(ManualClock::new(7_000)),
+        Arc::new(Metrics::new()),
+    )
+    .unwrap();
+    assert_eq!(
+        before,
+        state_image(&cache2),
+        "recovered state must be identical to live state under racing dependent mutations"
+    );
+    let _ = fs::remove_dir_all(&dir);
+}
+
 // ---------- directed: TTL across downtime ----------
 
 #[test]
