@@ -1,0 +1,166 @@
+//! Eviction-policy shootout at a fixed byte budget (ISSUE 7): how much
+//! simulated upstream LLM latency each policy's survivors save on a
+//! skewed trace.
+//!
+//! Workload shape (the semantic-cache pathology byte budgets exist
+//! for): a small set of *recurring, expensive* queries — slow LLM
+//! answers that come back again and again — interleaved with a flood of
+//! *one-shot, cheap* queries that are never asked twice. The byte
+//! budget holds only a fraction of the trace's distinct entries, so the
+//! policy decides which bytes survive:
+//!
+//! * **lru** treats every byte the same — the one-shot flood keeps
+//!   pushing the recurring entries out before they recur.
+//! * **lfu** protects the recurring set once it has been seen twice.
+//! * **cost** scores latency-saved-per-byte
+//!   ([`semcache::eviction::CostAware`]), so the expensive recurring
+//!   answers survive the flood from their *first* sighting.
+//!
+//! Scored metric per arm: total LLM latency saved = Σ `latency_ms` of
+//! every hit (exactly what the entry's miss would have re-paid).
+//! Acceptance floor printed in the banner: **cost ≥ 1.2× lru** on
+//! latency saved at the shared byte budget.
+//!
+//! Run: `cargo bench --bench bench_eviction`
+//! Quick mode (CI / verify.sh): `SEMCACHE_BENCH_SMOKE=1 cargo bench --bench bench_eviction`
+//! Gate on the floor: `SEMCACHE_BENCH_ENFORCE=1`
+
+use semcache::cache::{CacheConfig, CachedEntry, SemanticCache};
+use semcache::eviction::entry_footprint;
+use semcache::util::{l2_normalized, SplitMix64};
+
+fn smoke() -> bool {
+    std::env::var("SEMCACHE_BENCH_SMOKE").is_ok()
+}
+
+const DIM: usize = 64;
+/// Lookup gate: distinct random unit vectors in 64-d sit near cosine 0,
+/// exact repeats at 1.0 — hits are exact-repeat hits only.
+const THRESHOLD: f32 = 0.9;
+
+/// One query class in the trace.
+struct Query {
+    text: String,
+    embedding: Vec<f32>,
+    /// Simulated upstream latency its miss pays (and a later hit saves).
+    llm_ms: f64,
+}
+
+fn unit_vec(rng: &mut SplitMix64) -> Vec<f32> {
+    let v: Vec<f32> = (0..DIM).map(|_| rng.next_f64() as f32 * 2.0 - 1.0).collect();
+    l2_normalized(&v)
+}
+
+/// Replay the trace against one policy; returns (latency saved, hits,
+/// misses, evictions).
+fn run_policy(policy: &str, trace: &[Query], budget: u64) -> (f64, u64, u64, u64) {
+    let cache = SemanticCache::new(CacheConfig {
+        max_bytes: budget,
+        eviction_policy: policy.to_string(),
+        ..Default::default()
+    });
+    let mut saved_ms = 0.0;
+    let mut hits = 0u64;
+    let mut misses = 0u64;
+    for q in trace {
+        match cache.lookup_with_threshold(&q.embedding, THRESHOLD) {
+            Some(hit) => {
+                saved_ms += hit.entry.latency_ms;
+                hits += 1;
+            }
+            None => {
+                misses += 1;
+                cache
+                    .try_insert_entry(
+                        &q.embedding,
+                        CachedEntry {
+                            question: q.text.clone(),
+                            response: format!("answer to: {}", q.text),
+                            cluster: 0,
+                            latency_ms: q.llm_ms,
+                        },
+                    )
+                    .expect("insert fits the budget");
+            }
+        }
+    }
+    let evictions = cache.tenant_stats().iter().map(|t| t.evictions).sum();
+    assert!(
+        cache.bytes() <= budget,
+        "{policy}: resident {} B > budget {budget} B at rest",
+        cache.bytes()
+    );
+    (saved_ms, hits, misses, evictions)
+}
+
+fn main() {
+    let steps: usize = if smoke() { 2_000 } else { 10_000 };
+    let recurring_n = 32usize;
+    // ~30 % of steps re-ask one of the 32 expensive recurring queries;
+    // the rest are a one-shot cheap flood.
+    let recurring_every = 10u64; // of 32 -> ~31 % recurring
+    let mut rng = SplitMix64::new(0x5EED_E71C);
+
+    let recurring: Vec<Query> = (0..recurring_n)
+        .map(|i| Query {
+            text: format!("recurring expensive analytics question number {i}"),
+            embedding: unit_vec(&mut rng),
+            llm_ms: 1_500.0 + (i as f64) * 40.0,
+        })
+        .collect();
+
+    // Budget: ~40 nominal entries — the full recurring set fits with
+    // room to spare, but nowhere near the flood's distinct-entry count.
+    let nominal = entry_footprint(48, 64, DIM);
+    let budget = 40 * nominal;
+
+    let mut trace: Vec<Query> = Vec::with_capacity(steps);
+    let mut one_shots = 0usize;
+    for step in 0..steps {
+        if rng.next_u64() % (recurring_every * recurring_n as u64) < recurring_n as u64 * 3 {
+            let i = (rng.next_u64() as usize) % recurring_n;
+            let q = &recurring[i];
+            trace.push(Query {
+                text: q.text.clone(),
+                embedding: q.embedding.clone(),
+                llm_ms: q.llm_ms,
+            });
+        } else {
+            one_shots += 1;
+            trace.push(Query {
+                text: format!("one-shot cheap lookup number {step}"),
+                embedding: unit_vec(&mut rng),
+                llm_ms: 40.0,
+            });
+        }
+    }
+    println!(
+        "[workload: {steps} steps ({} recurring x{recurring_n} classes, {one_shots} one-shots), \
+         budget {budget} B (~{} entries), {} mode]",
+        steps - one_shots,
+        budget / nominal,
+        if smoke() { "smoke" } else { "full" },
+    );
+
+    let mut saved = std::collections::HashMap::new();
+    for policy in ["lru", "lfu", "cost"] {
+        let (saved_ms, hits, misses, evictions) = run_policy(policy, &trace, budget);
+        println!(
+            "{:<10} saved {:>10.0} ms of LLM latency   ({hits} hits / {misses} misses, {evictions} evictions)",
+            policy, saved_ms,
+        );
+        saved.insert(policy, saved_ms);
+    }
+
+    let ratio = saved["cost"] / saved["lru"].max(1e-9);
+    println!(
+        "\ncost-aware latency saved over lru: {ratio:.2}x  (acceptance floor: >= 1.2x)"
+    );
+    let ok = ratio >= 1.2;
+    println!("[acceptance] cost >= 1.2x lru latency saved: {}", if ok { "PASS" } else { "FAIL" });
+    println!("(SEMCACHE_BENCH_SMOKE=1 for the quick CI variant; SEMCACHE_BENCH_ENFORCE=1 to exit non-zero on FAIL)");
+    if !ok && std::env::var("SEMCACHE_BENCH_ENFORCE").is_ok() {
+        eprintln!("SEMCACHE_BENCH_ENFORCE is set and an acceptance floor was missed; exiting 1");
+        std::process::exit(1);
+    }
+}

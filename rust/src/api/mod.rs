@@ -21,6 +21,12 @@
 //!   [`crate::json`] module (`to_json`/`from_json`); `from_json` is
 //!   strict (unknown fields and wrong types are errors) so malformed
 //!   network input fails loudly at the boundary.
+//! * **Tenancy rides `client_tag`.** The tag is not just an echo: it
+//!   selects the tenant namespace the query runs in (lookups only see
+//!   entries the same tenant inserted; see [`crate::tenancy`]). Untagged
+//!   and whitespace-only tags share the `"default"` tenant. A quota
+//!   rejection (entry footprint larger than the tenant's byte quota)
+//!   surfaces as `Outcome::Rejected`, like any other typed refusal.
 
 use std::collections::BTreeMap;
 
@@ -82,7 +88,10 @@ pub struct QueryRequest {
     /// production callers leave it `None`.
     pub cluster: Option<u64>,
     pub options: QueryOptions,
-    /// Opaque caller identifier, echoed back on the response.
+    /// Caller identifier, echoed back on the response — and the tenant
+    /// namespace this query runs in ([`crate::tenancy::normalize_tag`]:
+    /// `None`/blank share the `"default"` tenant). Lookups never cross
+    /// tenant boundaries.
     pub client_tag: Option<String>,
 }
 

@@ -8,19 +8,43 @@
 //! partitioned by embedding dimensionality (§2.3) so multiple embedding
 //! models can coexist; tombstoned/expired index entries are reclaimed by
 //! the periodic rebuild ("rebalancing", §2.4).
+//!
+//! # Tenancy and byte budgets
+//!
+//! The cache is namespaced by **tenant** (the serving API's
+//! `client_tag`): partitions are keyed on (tenant, dim), so a lookup can
+//! only ever see entries its own tenant inserted — cross-tenant reads
+//! are structurally impossible, not filtered. Memory is accounted in
+//! **bytes**, not entry counts: every entry charges its real footprint
+//! ([`crate::eviction::entry_footprint`] — question + response +
+//! embedding copies + index-node estimate) against an optional global
+//! budget ([`CacheConfig::max_bytes`]) and an optional per-tenant quota
+//! ([`CacheConfig::tenant_quota_bytes`], overridable per tenant).
+//! Budgets are enforced **inserter-pays**: the insert that pushes a
+//! tenant over its quota (or the cache over its global budget) evicts
+//! the lowest-scoring entries *of that tenant* — chosen by the
+//! configured [`crate::eviction::EvictionPolicy`] — until the budgets
+//! hold again. A hot tenant can therefore never evict a cold tenant's
+//! working set, and the global budget can transiently overshoot by at
+//! most one entry footprint.
+//!
+//! [`KvStore`]: crate::store::KvStore
 
 mod adaptive;
 mod partition;
 
 pub use adaptive::AdaptiveThreshold;
-pub use partition::{EntryDump, Partition, PartitionDump};
+pub use partition::{EntryDump, Partition, PartitionDump, PartitionVictim};
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::error::{bail, Result};
+use crate::eviction::{entry_footprint, policy_from_name, EvictionPolicy};
 use crate::index::HnswConfig;
 use crate::store::Clock;
+use crate::tenancy::{TenantOverrides, TenantState, TenantStats, DEFAULT_TENANT};
 
 /// Which ANN index backs each partition.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -38,7 +62,10 @@ pub struct CacheConfig {
     pub threshold: f32,
     /// Entry TTL in ms (0 = immortal; paper §2.7).
     pub ttl_ms: u64,
-    /// Max entries per partition (0 = unbounded, LRU beyond).
+    /// Legacy count bound per partition (0 = unbounded, LRU beyond).
+    /// Superseded by [`Self::max_bytes`]; kept for tests and embedded
+    /// use — the app-config path clamps it to 0 (see
+    /// [`Self::from_app_config`]).
     pub capacity: usize,
     /// Neighbors fetched per lookup before thresholding.
     pub top_k: usize,
@@ -48,6 +75,20 @@ pub struct CacheConfig {
     pub rebuild_garbage_ratio: f64,
     /// KV-store shards per partition.
     pub store_shards: usize,
+    /// Global byte budget across every tenant and partition (0 =
+    /// unbounded). Enforced inserter-pays: the tenant whose insert
+    /// breaches it evicts its own entries.
+    pub max_bytes: u64,
+    /// Which entries the byte budgets sacrifice first: "lru", "lfu", or
+    /// "cost" (simulated LLM latency saved per byte — evicts the
+    /// cheapest-to-recompute bytes first).
+    pub eviction_policy: String,
+    /// Default per-tenant byte quota (0 = unbounded); individual tenants
+    /// can override via [`Self::tenants`].
+    pub tenant_quota_bytes: u64,
+    /// Per-tenant overrides (quota, similarity threshold), keyed by
+    /// tenant name.
+    pub tenants: BTreeMap<String, TenantOverrides>,
 }
 
 impl Default for CacheConfig {
@@ -61,6 +102,10 @@ impl Default for CacheConfig {
             hnsw: HnswConfig::default(),
             rebuild_garbage_ratio: 0.3,
             store_shards: 16,
+            max_bytes: 0,
+            eviction_policy: "lru".to_string(),
+            tenant_quota_bytes: 0,
+            tenants: BTreeMap::new(),
         }
     }
 }
@@ -74,11 +119,16 @@ impl CacheConfig {
 
     /// Assemble a validated cache config from the app-level
     /// [`crate::config::Config`] (shared by both binaries).
+    ///
+    /// Migration note: the legacy count-based `cache_capacity` key is
+    /// accepted but clamped to 0 (unbounded) here — byte-accurate
+    /// budgets (`max_bytes`, `tenant_quota_bytes`) replaced it. The key
+    /// is not rejected so that pre-byte-budget config files keep
+    /// loading.
     pub fn from_app_config(cfg: &crate::config::Config) -> Result<CacheConfig> {
         CacheConfig::builder()
             .threshold(cfg.similarity_threshold)
             .ttl_ms(cfg.ttl_secs * 1000)
-            .capacity(cfg.cache_capacity)
             .top_k(cfg.top_k)
             .index(match cfg.index_kind.as_str() {
                 "flat" => IndexKind::Flat,
@@ -92,12 +142,17 @@ impl CacheConfig {
             })
             .rebuild_garbage_ratio(cfg.rebuild_garbage_ratio)
             .store_shards(cfg.store_shards)
+            .max_bytes(cfg.max_bytes)
+            .eviction_policy(&cfg.eviction_policy)
+            .tenant_quota_bytes(cfg.tenant_quota_bytes)
+            .tenants(cfg.tenants.clone())
             .build()
     }
 
     /// Reject configurations the cache cannot serve correctly: NaN or
     /// out-of-range `threshold`/`rebuild_garbage_ratio`, `top_k == 0`,
-    /// `store_shards == 0`.
+    /// `store_shards == 0`, unknown `eviction_policy`, or an
+    /// out-of-range per-tenant threshold override.
     pub fn validate(&self) -> Result<()> {
         if !self.threshold.is_finite() || !(0.0..=1.0).contains(&self.threshold) {
             bail!("cache threshold must be a finite value in [0, 1], got {}", self.threshold);
@@ -115,6 +170,16 @@ impl CacheConfig {
                 "cache rebuild_garbage_ratio must be a finite value in [0, 1], got {}",
                 self.rebuild_garbage_ratio
             );
+        }
+        policy_from_name(&self.eviction_policy)?;
+        for (name, o) in &self.tenants {
+            if let Some(th) = o.similarity_threshold {
+                if !th.is_finite() || !(0.0..=1.0).contains(&th) {
+                    bail!(
+                        "tenant '{name}' similarity_threshold must be a finite value in [0, 1], got {th}"
+                    );
+                }
+            }
         }
         Ok(())
     }
@@ -167,6 +232,33 @@ impl CacheConfigBuilder {
         self
     }
 
+    pub fn max_bytes(mut self, max_bytes: u64) -> Self {
+        self.cfg.max_bytes = max_bytes;
+        self
+    }
+
+    pub fn eviction_policy(mut self, policy: &str) -> Self {
+        self.cfg.eviction_policy = policy.to_string();
+        self
+    }
+
+    pub fn tenant_quota_bytes(mut self, quota: u64) -> Self {
+        self.cfg.tenant_quota_bytes = quota;
+        self
+    }
+
+    /// Install per-tenant overrides wholesale.
+    pub fn tenants(mut self, tenants: BTreeMap<String, TenantOverrides>) -> Self {
+        self.cfg.tenants = tenants;
+        self
+    }
+
+    /// Add or replace one tenant's overrides.
+    pub fn tenant(mut self, name: &str, overrides: TenantOverrides) -> Self {
+        self.cfg.tenants.insert(name.to_string(), overrides);
+        self
+    }
+
     pub fn build(self) -> Result<CacheConfig> {
         self.cfg.validate()?;
         Ok(self.cfg)
@@ -181,6 +273,9 @@ pub struct CachedEntry {
     /// Ground-truth answer-group id (carried for judge evaluation; a
     /// production deployment would not have this field).
     pub cluster: u64,
+    /// Upstream LLM latency this entry saves per hit (ms) — the value
+    /// signal for the cost-aware eviction policy. 0 when unknown.
+    pub latency_ms: f64,
 }
 
 /// Observer of cache mutations, implemented by the persistence layer's
@@ -194,19 +289,24 @@ pub struct CachedEntry {
 /// history, never an inverted one. The journal is attached only after
 /// recovery replay, so replayed mutations are never re-logged.
 pub trait CacheJournal: Send + Sync {
-    /// A new entry: its partition dim, assigned id, raw (unnormalized)
-    /// embedding, payload, and absolute wall-clock expiry
+    /// A new entry: its tenant, partition dim, assigned id, raw
+    /// (unnormalized) embedding, payload, and absolute wall-clock expiry
     /// (`u64::MAX` = immortal).
     fn log_insert(
         &self,
+        tenant: &str,
         dim: usize,
         id: u64,
         embedding: &[f32],
         entry: &CachedEntry,
         expires_wall_ms: u64,
     );
-    /// An explicit removal of entry `id` in partition `dim`.
-    fn log_remove(&self, dim: usize, id: u64);
+    /// An explicit removal of entry `id` in `tenant`'s partition `dim`.
+    fn log_remove(&self, tenant: &str, dim: usize, id: u64);
+    /// A capacity/byte-budget eviction of entry `id` in `tenant`'s
+    /// partition `dim`. Journaled so a warm restart does not resurrect
+    /// evicted entries from pre-eviction WAL inserts.
+    fn log_evict(&self, tenant: &str, dim: usize, id: u64);
     /// A full flush (`/v1/admin` flush).
     fn log_clear(&self);
 }
@@ -221,14 +321,24 @@ pub struct CacheHit {
     pub id: u64,
 }
 
-/// Dimension-partitioned semantic cache. All methods take `&self`; the
-/// partition map and each partition's ANN index are behind read-mostly
-/// `RwLock`s, so concurrent lookups (the batch serving fan-out) share
-/// the locks and search in parallel; only inserts, tombstoning, and
-/// rebuilds serialize on the write side.
+/// Tenant- and dimension-partitioned semantic cache. All methods take
+/// `&self`; the tenant/partition maps and each partition's ANN index are
+/// behind read-mostly `RwLock`s, so concurrent lookups (the batch
+/// serving fan-out) share the locks and search in parallel; only
+/// inserts, tombstoning, and rebuilds serialize on the write side.
+///
+/// Methods without a `_for` suffix operate on the default tenant
+/// ([`DEFAULT_TENANT`]) — embedded single-tenant use keeps its old API.
 pub struct SemanticCache {
     cfg: CacheConfig,
-    partitions: std::sync::RwLock<HashMap<usize, Arc<Partition>>>,
+    /// Tenant namespaces, created on first use. Each owns its own
+    /// (dim -> partition) map; no partition is ever shared across
+    /// tenants.
+    tenants: std::sync::RwLock<HashMap<String, Arc<TenantState>>>,
+    /// Exact bytes resident across every tenant and partition (each
+    /// partition's store mirrors its mutations here).
+    bytes: Arc<AtomicU64>,
+    policy: Arc<dyn EvictionPolicy>,
     clock: Arc<dyn Clock>,
     /// Mutation observer (WAL); `None` until durability is enabled.
     journal: std::sync::RwLock<Option<Arc<dyn CacheJournal>>>,
@@ -247,9 +357,16 @@ impl SemanticCache {
     }
 
     pub fn with_clock(cfg: CacheConfig, clock: Arc<dyn Clock>) -> Self {
+        // `validate()` already vets the name on every config path; fall
+        // back to LRU rather than panic if an unvalidated config slips
+        // through.
+        let policy =
+            policy_from_name(&cfg.eviction_policy).unwrap_or_else(|_| Arc::new(crate::eviction::Lru));
         Self {
             cfg,
-            partitions: std::sync::RwLock::new(HashMap::new()),
+            tenants: std::sync::RwLock::new(HashMap::new()),
+            bytes: Arc::new(AtomicU64::new(0)),
+            policy,
             clock,
             journal: std::sync::RwLock::new(None),
             journal_gate: std::sync::Mutex::new(()),
@@ -265,6 +382,16 @@ impl SemanticCache {
         self.clock.clone()
     }
 
+    /// Bytes currently resident across all tenants and partitions.
+    pub fn bytes(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+
+    /// The global byte budget (0 = unbounded).
+    pub fn max_bytes(&self) -> u64 {
+        self.cfg.max_bytes
+    }
+
     /// Attach a mutation journal. Called after recovery replay so that
     /// replayed mutations are not logged a second time.
     pub fn set_journal(&self, journal: Arc<dyn CacheJournal>) {
@@ -275,37 +402,109 @@ impl SemanticCache {
         self.journal.read().unwrap().clone()
     }
 
-    /// All populated partitions (snapshot/recovery iteration order is
-    /// made deterministic by sorting on dim).
-    pub fn partitions(&self) -> Vec<Arc<Partition>> {
-        let mut parts: Vec<Arc<Partition>> =
-            self.partitions.read().unwrap().values().cloned().collect();
-        parts.sort_by_key(|p| p.dim());
-        parts
+    /// The per-tenant similarity-threshold override for `tenant`, if the
+    /// configuration declares one. Pure config read — no tenant state is
+    /// created.
+    pub fn tenant_threshold(&self, tenant: &str) -> Option<f32> {
+        self.cfg.tenants.get(tenant).and_then(|o| o.similarity_threshold)
     }
 
-    /// The partition for a given embedding size, created on first use
-    /// (paper §2.3: "the cache is partitioned based on the embedding
-    /// size"). Double-checked read-then-write: the common case (the
-    /// partition exists) never takes the exclusive lock.
-    pub fn partition(&self, dim: usize) -> Arc<Partition> {
-        if let Some(p) = self.partitions.read().unwrap().get(&dim) {
-            return p.clone();
+    /// The tenant namespace for `name`, created on first use with its
+    /// configured quota/threshold overrides. Double-checked
+    /// read-then-write: the common case never takes the exclusive lock.
+    pub fn tenant(&self, name: &str) -> Arc<TenantState> {
+        if let Some(t) = self.tenants.read().unwrap().get(name) {
+            return t.clone();
         }
-        let mut parts = self.partitions.write().unwrap();
-        parts
-            .entry(dim)
-            .or_insert_with(|| Arc::new(Partition::new(dim, &self.cfg, self.clock.clone())))
+        let mut tenants = self.tenants.write().unwrap();
+        tenants
+            .entry(name.to_string())
+            .or_insert_with(|| {
+                let o = self.cfg.tenants.get(name);
+                let quota =
+                    o.and_then(|o| o.quota_bytes).unwrap_or(self.cfg.tenant_quota_bytes);
+                let threshold = o.and_then(|o| o.similarity_threshold);
+                Arc::new(TenantState::new(name, quota, threshold))
+            })
             .clone()
     }
 
-    /// The partition for `dim` if one has been populated, without the
-    /// side effect of creating it.
-    pub fn partition_if_exists(&self, dim: usize) -> Option<Arc<Partition>> {
-        self.partitions.read().unwrap().get(&dim).cloned()
+    /// Every tenant namespace seen so far, sorted by name.
+    pub fn tenants(&self) -> Vec<Arc<TenantState>> {
+        let mut ts: Vec<Arc<TenantState>> =
+            self.tenants.read().unwrap().values().cloned().collect();
+        ts.sort_by(|a, b| a.name().cmp(b.name()));
+        ts
     }
 
-    /// Lookup with the configured threshold.
+    /// Point-in-time per-tenant metric blocks, sorted by tenant name
+    /// (`/v1/metrics` payload).
+    pub fn tenant_stats(&self) -> Vec<TenantStats> {
+        self.tenants().iter().map(|t| t.stats()).collect()
+    }
+
+    /// All populated partitions across every tenant, sorted by
+    /// (tenant, dim) — snapshot/recovery iteration order is
+    /// deterministic.
+    pub fn partitions(&self) -> Vec<Arc<Partition>> {
+        let mut parts: Vec<Arc<Partition>> = Vec::new();
+        for t in self.tenants.read().unwrap().values() {
+            parts.extend(t.partitions.read().unwrap().values().cloned());
+        }
+        parts.sort_by(|a, b| (a.tenant(), a.dim()).cmp(&(b.tenant(), b.dim())));
+        parts
+    }
+
+    /// The default tenant's partition for a given embedding size,
+    /// created on first use (paper §2.3: "the cache is partitioned based
+    /// on the embedding size").
+    pub fn partition(&self, dim: usize) -> Arc<Partition> {
+        self.partition_for(DEFAULT_TENANT, dim)
+    }
+
+    /// `tenant`'s partition for `dim`, created on first use. The new
+    /// partition's store charges its byte mutations to the global and
+    /// tenant ledgers, and tracks access recency/frequency whenever a
+    /// byte budget could require policy-scored eviction.
+    pub fn partition_for(&self, tenant: &str, dim: usize) -> Arc<Partition> {
+        let t = self.tenant(tenant);
+        self.partition_for_state(&t, dim)
+    }
+
+    fn partition_for_state(&self, t: &Arc<TenantState>, dim: usize) -> Arc<Partition> {
+        if let Some(p) = t.partitions.read().unwrap().get(&dim) {
+            return p.clone();
+        }
+        let mut parts = t.partitions.write().unwrap();
+        parts
+            .entry(dim)
+            .or_insert_with(|| {
+                let track = self.cfg.max_bytes > 0 || t.quota_bytes() > 0;
+                Arc::new(Partition::new_for_tenant(
+                    t.name(),
+                    dim,
+                    &self.cfg,
+                    self.clock.clone(),
+                    vec![self.bytes.clone(), t.bytes_ledger()],
+                    track,
+                ))
+            })
+            .clone()
+    }
+
+    /// The default tenant's partition for `dim` if one has been
+    /// populated, without the side effect of creating it.
+    pub fn partition_if_exists(&self, dim: usize) -> Option<Arc<Partition>> {
+        self.partition_if_exists_for(DEFAULT_TENANT, dim)
+    }
+
+    /// `tenant`'s partition for `dim` if populated; never creates tenant
+    /// state or partitions.
+    pub fn partition_if_exists_for(&self, tenant: &str, dim: usize) -> Option<Arc<Partition>> {
+        self.tenants.read().unwrap().get(tenant)?.partitions.read().unwrap().get(&dim).cloned()
+    }
+
+    /// Lookup with the configured threshold (default tenant).
     pub fn lookup(&self, embedding: &[f32]) -> Option<CacheHit> {
         self.lookup_with_threshold(embedding, self.cfg.threshold)
     }
@@ -318,10 +517,23 @@ impl SemanticCache {
         self.lookup_with_opts(embedding, threshold, None)
     }
 
-    /// Lookup with per-request threshold and (optionally) top-k — the
-    /// entry point used by the typed serving API.
+    /// Lookup with per-request threshold and (optionally) top-k (default
+    /// tenant).
     pub fn lookup_with_opts(
         &self,
+        embedding: &[f32],
+        threshold: f32,
+        top_k: Option<usize>,
+    ) -> Option<CacheHit> {
+        self.lookup_with_opts_for(DEFAULT_TENANT, embedding, threshold, top_k)
+    }
+
+    /// Tenant-scoped lookup — the entry point used by the typed serving
+    /// API. Only `tenant`'s own partitions are searched; the result also
+    /// lands in the tenant's hit/miss counters.
+    pub fn lookup_with_opts_for(
+        &self,
+        tenant: &str,
         embedding: &[f32],
         threshold: f32,
         top_k: Option<usize>,
@@ -329,11 +541,22 @@ impl SemanticCache {
         if embedding.is_empty() {
             return None;
         }
-        self.partition_if_exists(embedding.len())?.lookup_k(embedding, threshold, top_k)
+        let hit = self
+            .partition_if_exists_for(tenant, embedding.len())
+            .and_then(|p| p.lookup_k(embedding, threshold, top_k));
+        // Count on the tenant that asked, even if it has no state yet —
+        // a miss-before-first-insert is still that tenant's miss.
+        let t = self.tenant(tenant);
+        if hit.is_some() {
+            t.record_hit();
+        } else {
+            t.record_miss();
+        }
+        hit
     }
 
-    /// Insert a question/response pair under its embedding; returns the
-    /// new entry's id.
+    /// Insert a question/response pair under its embedding (default
+    /// tenant); returns the new entry's id.
     pub fn try_insert(&self, question: &str, embedding: &[f32], response: &str) -> Result<u64> {
         self.try_insert_entry(
             embedding,
@@ -341,19 +564,37 @@ impl SemanticCache {
                 question: question.to_string(),
                 response: response.to_string(),
                 cluster: 0,
+                latency_ms: 0.0,
             },
         )
     }
 
-    /// Insert an entry under the configured TTL; returns its id.
+    /// Insert an entry under the configured TTL (default tenant).
     pub fn try_insert_entry(&self, embedding: &[f32], entry: CachedEntry) -> Result<u64> {
         self.try_insert_entry_ttl(embedding, entry, None)
     }
 
-    /// Insert an entry with a per-entry TTL override (`None` = the
-    /// configured default, `Some(0)` = immortal); returns its id.
+    /// Insert an entry with a per-entry TTL override (default tenant).
     pub fn try_insert_entry_ttl(
         &self,
+        embedding: &[f32],
+        entry: CachedEntry,
+        ttl_ms: Option<u64>,
+    ) -> Result<u64> {
+        self.try_insert_entry_ttl_for(DEFAULT_TENANT, embedding, entry, ttl_ms)
+    }
+
+    /// Tenant-scoped insert with a per-entry TTL override (`None` = the
+    /// configured default, `Some(0)` = immortal); returns the new id.
+    ///
+    /// Budget enforcement happens here, inserter-pays: an entry whose
+    /// footprint alone exceeds the tenant quota or global budget is
+    /// rejected (typed error; the tenant's `quota_rejections` counter is
+    /// bumped); otherwise the entry is admitted and the policy evicts
+    /// this tenant's lowest-scoring entries until both budgets hold.
+    pub fn try_insert_entry_ttl_for(
+        &self,
+        tenant: &str,
         embedding: &[f32],
         entry: CachedEntry,
         ttl_ms: Option<u64>,
@@ -361,38 +602,119 @@ impl SemanticCache {
         if embedding.is_empty() {
             bail!("cannot insert an empty embedding");
         }
-        match self.journal() {
-            None => Ok(self.partition(embedding.len()).insert_with_ttl(embedding, entry, ttl_ms)),
-            Some(journal) => {
-                // Apply first, then log, with the journal gate held
-                // across both (see [`CacheJournal`] ordering). The
-                // partition is resolved inside the gate so a racing
-                // `clear` cannot detach it between apply and log.
-                let _order = self.journal_gate.lock().unwrap();
-                let p = self.partition(embedding.len());
-                let id = p.insert_with_ttl(embedding, entry.clone(), ttl_ms);
-                let ttl = ttl_ms.unwrap_or(self.cfg.ttl_ms);
-                let expires_wall_ms =
-                    if ttl == 0 { u64::MAX } else { self.clock.wall_ms() + ttl };
-                journal.log_insert(embedding.len(), id, embedding, &entry, expires_wall_ms);
-                Ok(id)
+        let t = self.tenant(tenant);
+        let footprint =
+            entry_footprint(entry.question.len(), entry.response.len(), embedding.len());
+        let quota = t.quota_bytes();
+        if quota > 0 && footprint > quota {
+            t.record_quota_rejection();
+            bail!(
+                "entry footprint {footprint} B exceeds tenant '{tenant}' quota {quota} B"
+            );
+        }
+        if self.cfg.max_bytes > 0 && footprint > self.cfg.max_bytes {
+            t.record_quota_rejection();
+            bail!(
+                "entry footprint {footprint} B exceeds global cache budget {} B",
+                self.cfg.max_bytes
+            );
+        }
+        let journal = self.journal();
+        // Apply first, then log, with the journal gate held across both
+        // (see [`CacheJournal`] ordering) — including the budget
+        // evictions this insert triggers, so replay applies them in the
+        // same order.
+        let _order = journal.as_ref().map(|_| self.journal_gate.lock().unwrap());
+        let logged = journal.as_ref().map(|_| entry.clone());
+        let p = self.partition_for_state(&t, embedding.len());
+        let (id, count_evicted) = p.insert_with_ttl(embedding, entry, ttl_ms);
+        t.record_insert();
+        t.record_evictions(count_evicted.len() as u64);
+        if let Some(j) = &journal {
+            let ttl = ttl_ms.unwrap_or(self.cfg.ttl_ms);
+            let expires_wall_ms = if ttl == 0 { u64::MAX } else { self.clock.wall_ms() + ttl };
+            j.log_insert(
+                t.name(),
+                embedding.len(),
+                id,
+                embedding,
+                logged.as_ref().expect("cloned alongside journal"),
+                expires_wall_ms,
+            );
+            for ev in &count_evicted {
+                j.log_evict(t.name(), embedding.len(), *ev);
             }
+        }
+        self.enforce_budgets(&t, journal.as_ref());
+        Ok(id)
+    }
+
+    /// Evict `t`'s lowest-scoring entries until its quota and the global
+    /// budget both hold. Only the inserting tenant's partitions are
+    /// scanned — quota pressure (and even global pressure this tenant
+    /// caused) can never evict another tenant's entries.
+    fn enforce_budgets(&self, t: &Arc<TenantState>, journal: Option<&Arc<dyn CacheJournal>>) {
+        let quota = t.quota_bytes();
+        let max = self.cfg.max_bytes;
+        if quota == 0 && max == 0 {
+            return;
+        }
+        loop {
+            let over_quota = quota > 0 && t.bytes() > quota;
+            let over_global = max > 0 && self.bytes() > max;
+            if !over_quota && !over_global {
+                break;
+            }
+            let parts: Vec<Arc<Partition>> =
+                t.partitions.read().unwrap().values().cloned().collect();
+            let mut best: Option<(Arc<Partition>, PartitionVictim)> = None;
+            for p in parts {
+                if let Some(v) = p.victim(self.policy.as_ref()) {
+                    let better = match &best {
+                        None => true,
+                        Some((_, b)) => {
+                            v.score < b.score || (v.score == b.score && v.seq < b.seq)
+                        }
+                    };
+                    if better {
+                        best = Some((p, v));
+                    }
+                }
+            }
+            let Some((p, v)) = best else {
+                break; // nothing left to evict in this tenant
+            };
+            if p.evict_id(v.id).is_some() {
+                t.record_evictions(1);
+                if let Some(j) = journal {
+                    j.log_evict(t.name(), p.dim(), v.id);
+                }
+            }
+            // A raced eviction (None) just rescans on the next turn.
         }
     }
 
-    /// Remove one entry by partition dim and id (store, index, and
-    /// embedding map together). Returns whether a live entry was removed.
+    /// Remove one entry in the default tenant by partition dim and id.
     pub fn remove_entry(&self, dim: usize, id: u64) -> bool {
+        self.remove_entry_for(DEFAULT_TENANT, dim, id)
+    }
+
+    /// Remove one entry by tenant, partition dim, and id (store, index,
+    /// and embedding map together). Returns whether a live entry was
+    /// removed.
+    pub fn remove_entry_for(&self, tenant: &str, dim: usize, id: u64) -> bool {
         match self.journal() {
-            None => self.partition_if_exists(dim).map_or(false, |p| p.remove_id(id)),
+            None => {
+                self.partition_if_exists_for(tenant, dim).map_or(false, |p| p.remove_id(id))
+            }
             Some(journal) => {
                 let _order = self.journal_gate.lock().unwrap();
-                let Some(p) = self.partition_if_exists(dim) else {
+                let Some(p) = self.partition_if_exists_for(tenant, dim) else {
                     return false;
                 };
                 let removed = p.remove_id(id);
                 if removed {
-                    journal.log_remove(dim, id);
+                    journal.log_remove(tenant, dim, id);
                 }
                 removed
             }
@@ -415,26 +737,33 @@ impl SemanticCache {
         self.try_insert_entry(embedding, entry).unwrap_or(0)
     }
 
-    /// Drop every entry and partition. Returns the number of live
-    /// entries removed (the `/v1/admin` flush operation).
+    /// Drop every entry and partition across every tenant. Returns the
+    /// number of live entries removed (the `/v1/admin` flush operation).
+    /// Tenant namespaces (and their counters) survive the flush; only
+    /// cached data is dropped, and every byte ledger resets to zero.
     pub fn clear(&self) -> usize {
         let _order = self.journal().map(|_| self.journal_gate.lock().unwrap());
         let removed = {
-            let mut parts = self.partitions.write().unwrap();
-            let removed = parts.values().map(|p| p.len()).sum();
-            parts.clear();
+            let tenants = self.tenants.read().unwrap();
+            let mut removed = 0;
+            for t in tenants.values() {
+                let mut parts = t.partitions.write().unwrap();
+                removed += parts.values().map(|p| p.len()).sum::<usize>();
+                parts.clear();
+                t.reset_bytes();
+            }
             removed
         };
+        self.bytes.store(0, Ordering::Relaxed);
         if let Some(journal) = self.journal() {
             journal.log_clear();
         }
         removed
     }
 
-    /// Total live entries across partitions.
+    /// Total live entries across every tenant and partition.
     pub fn len(&self) -> usize {
-        let parts = self.partitions.read().unwrap();
-        parts.values().map(|p| p.len()).sum()
+        self.partitions().iter().map(|p| p.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -442,14 +771,13 @@ impl SemanticCache {
     }
 
     /// Housekeeping pass: sweep expired entries and rebuild indexes whose
-    /// garbage ratio exceeds the configured bound. Returns (expired,
-    /// rebuilt-partition count). Driven by the coordinator's timer.
+    /// garbage ratio exceeds the configured bound, across every tenant.
+    /// Returns (expired, rebuilt-partition count). Driven by the
+    /// coordinator's timer.
     pub fn housekeep(&self) -> (usize, usize) {
-        let parts: Vec<Arc<Partition>> =
-            self.partitions.read().unwrap().values().cloned().collect();
         let mut expired = 0;
         let mut rebuilt = 0;
-        for p in parts {
+        for p in self.partitions() {
             expired += p.sweep_expired();
             if p.garbage_ratio() > self.cfg.rebuild_garbage_ratio && p.rebuild() {
                 rebuilt += 1;
@@ -476,6 +804,10 @@ mod tests {
         v[hot] = cos;
         v[(hot + 1) % dim] = (1.0 - cos * cos).sqrt();
         v
+    }
+
+    fn entry(q: &str, latency_ms: f64) -> CachedEntry {
+        CachedEntry { question: q.into(), response: q.into(), cluster: 0, latency_ms }
     }
 
     #[test]
@@ -591,11 +923,18 @@ mod tests {
             .index(IndexKind::Flat)
             .rebuild_garbage_ratio(0.5)
             .store_shards(4)
+            .max_bytes(1 << 20)
+            .eviction_policy("cost")
+            .tenant_quota_bytes(1 << 16)
+            .tenant("alice", TenantOverrides { quota_bytes: Some(1 << 18), similarity_threshold: Some(0.9) })
             .build()
             .unwrap();
         assert_eq!(cfg.threshold, 0.85);
         assert_eq!(cfg.top_k, 3);
         assert_eq!(cfg.index, IndexKind::Flat);
+        assert_eq!(cfg.max_bytes, 1 << 20);
+        assert_eq!(cfg.eviction_policy, "cost");
+        assert_eq!(cfg.tenants["alice"].quota_bytes, Some(1 << 18));
 
         assert!(CacheConfig::builder().threshold(f32::NAN).build().is_err(), "NaN threshold");
         assert!(CacheConfig::builder().threshold(1.5).build().is_err(), "threshold > 1");
@@ -609,6 +948,17 @@ mod tests {
         assert!(
             CacheConfig::builder().rebuild_garbage_ratio(2.0).build().is_err(),
             "garbage ratio > 1"
+        );
+        assert!(
+            CacheConfig::builder().eviction_policy("random").build().is_err(),
+            "unknown eviction policy"
+        );
+        assert!(
+            CacheConfig::builder()
+                .tenant("bob", TenantOverrides { quota_bytes: None, similarity_threshold: Some(1.5) })
+                .build()
+                .is_err(),
+            "tenant threshold out of range"
         );
     }
 
@@ -633,10 +983,9 @@ mod tests {
         let short = unit(8, 0);
         let default = unit(8, 2);
         let immortal = unit(8, 4);
-        let mk = |q: &str| CachedEntry { question: q.into(), response: q.into(), cluster: 0 };
-        cache.try_insert_entry_ttl(&short, mk("short"), Some(500)).unwrap();
-        cache.try_insert_entry_ttl(&default, mk("default"), None).unwrap();
-        cache.try_insert_entry_ttl(&immortal, mk("immortal"), Some(0)).unwrap();
+        cache.try_insert_entry_ttl(&short, entry("short", 0.0), Some(500)).unwrap();
+        cache.try_insert_entry_ttl(&default, entry("default", 0.0), None).unwrap();
+        cache.try_insert_entry_ttl(&immortal, entry("immortal", 0.0), Some(0)).unwrap();
         clock.advance(1_000);
         assert!(cache.lookup(&short).is_none(), "short-TTL entry must expire first");
         assert!(cache.lookup(&default).is_some());
@@ -660,5 +1009,134 @@ mod tests {
         // Per-request top_k = 5 must behave identically for the best hit.
         let hit = cache.lookup_with_opts(&unit(16, 0), 0.8, Some(5)).unwrap();
         assert_eq!(hit.entry.response, "best-r");
+    }
+
+    #[test]
+    fn tenants_are_isolated_namespaces() {
+        let cache = SemanticCache::new(CacheConfig::default());
+        let e = unit(16, 0);
+        cache
+            .try_insert_entry_ttl_for("alice", &e, entry("alice-q", 0.0), None)
+            .unwrap();
+        // Bob searching the identical embedding must miss: lookups never
+        // cross tenant boundaries.
+        assert!(cache.lookup_with_opts_for("bob", &e, 0.8, None).is_none());
+        assert!(cache.lookup_with_opts_for("alice", &e, 0.8, None).is_some());
+        // The default tenant is just another namespace.
+        assert!(cache.lookup(&e).is_none());
+        let stats: std::collections::HashMap<String, _> =
+            cache.tenant_stats().into_iter().map(|s| (s.name.clone(), s)).collect();
+        assert_eq!(stats["alice"].hits, 1);
+        assert_eq!(stats["alice"].inserts, 1);
+        assert_eq!(stats["bob"].misses, 1);
+        assert_eq!(stats["bob"].entries, 0);
+    }
+
+    #[test]
+    fn global_byte_budget_evicts_inserter_lru_first(){
+        let clock = Arc::new(ManualClock::new(0));
+        // Budget fits ~3 of these entries (q/r 4 bytes each, dim 8).
+        let one = entry_footprint(4, 4, 8);
+        let cfg = CacheConfig { max_bytes: 3 * one, ..Default::default() };
+        let cache = SemanticCache::with_clock(cfg, clock);
+        let ids: Vec<u64> = (0..4)
+            .map(|i| {
+                cache
+                    .try_insert_entry_ttl(&unit(8, i), entry("aaaa", 1.0), None)
+                    .unwrap()
+            })
+            .collect();
+        // 4 inserts under a 3-entry budget: exactly one LRU eviction,
+        // and the survivor set is the 3 youngest.
+        assert_eq!(cache.len(), 3);
+        assert!(cache.bytes() <= 3 * one, "bytes {} > budget {}", cache.bytes(), 3 * one);
+        assert!(cache.lookup(&unit(8, 0)).is_none(), "oldest entry evicted");
+        for i in 1..4 {
+            assert!(cache.lookup(&unit(8, i)).is_some(), "young entry {i} survived");
+        }
+        let _ = ids;
+        let stats = &cache.tenant_stats()[0];
+        assert_eq!(stats.evictions, 1);
+        assert_eq!(stats.bytes, 3 * one);
+    }
+
+    #[test]
+    fn tenant_quota_never_evicts_other_tenants() {
+        let one = entry_footprint(4, 4, 8);
+        let cfg = CacheConfig { tenant_quota_bytes: 2 * one, ..Default::default() };
+        let cache = SemanticCache::new(cfg);
+        // Cold tenant parks two entries well within its own quota.
+        for i in 0..2 {
+            cache
+                .try_insert_entry_ttl_for("cold", &unit(8, i), entry("aaaa", 0.0), None)
+                .unwrap();
+        }
+        // Hot tenant floods 6 entries through a 2-entry quota.
+        for i in 0..6 {
+            cache
+                .try_insert_entry_ttl_for("hot", &unit(8, i), entry("bbbb", 0.0), None)
+                .unwrap();
+        }
+        let stats: std::collections::HashMap<String, _> =
+            cache.tenant_stats().into_iter().map(|s| (s.name.clone(), s)).collect();
+        assert_eq!(stats["hot"].evictions, 4, "hot tenant paid for its own pressure");
+        assert_eq!(stats["cold"].evictions, 0, "cold tenant untouched");
+        assert!(stats["hot"].bytes <= 2 * one);
+        assert_eq!(stats["cold"].entries, 2);
+        for i in 0..2 {
+            assert!(
+                cache.lookup_with_opts_for("cold", &unit(8, i), 0.8, None).is_some(),
+                "cold entry {i} must survive the hot flood"
+            );
+        }
+    }
+
+    #[test]
+    fn oversized_entry_is_a_typed_rejection() {
+        let cfg = CacheConfig { tenant_quota_bytes: 64, ..Default::default() };
+        let cache = SemanticCache::new(cfg);
+        let err = cache
+            .try_insert_entry_ttl_for("t", &unit(8, 0), entry("way too big", 0.0), None)
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("quota"), "reason names the quota: {msg}");
+        assert_eq!(cache.len(), 0);
+        assert_eq!(cache.tenant_stats()[0].quota_rejections, 1);
+    }
+
+    #[test]
+    fn cost_aware_policy_keeps_expensive_entries() {
+        let one = entry_footprint(4, 4, 8);
+        let cfg = CacheConfig {
+            max_bytes: 2 * one,
+            eviction_policy: "cost".to_string(),
+            ..Default::default()
+        };
+        let cache = SemanticCache::new(cfg);
+        // An entry that saves 5s of LLM latency per hit vs one that
+        // saves 1ms: under byte pressure the cheap one goes first even
+        // though the pricey one is older (LRU would pick it).
+        cache.try_insert_entry_ttl(&unit(8, 0), entry("aaaa", 5_000.0), None).unwrap();
+        cache.try_insert_entry_ttl(&unit(8, 1), entry("bbbb", 1.0), None).unwrap();
+        cache.try_insert_entry_ttl(&unit(8, 2), entry("cccc", 1_000.0), None).unwrap();
+        assert!(cache.lookup(&unit(8, 0)).is_some(), "high-value entry must survive");
+        assert!(cache.lookup(&unit(8, 1)).is_none(), "low-value entry sacrificed");
+        assert!(cache.lookup(&unit(8, 2)).is_some());
+    }
+
+    #[test]
+    fn per_tenant_threshold_override_is_exposed() {
+        let cfg = CacheConfig::builder()
+            .tenant(
+                "strict",
+                TenantOverrides { quota_bytes: None, similarity_threshold: Some(0.95) },
+            )
+            .build()
+            .unwrap();
+        let cache = SemanticCache::new(cfg);
+        assert_eq!(cache.tenant_threshold("strict"), Some(0.95));
+        assert_eq!(cache.tenant_threshold("lenient"), None);
+        // And the tenant state carries it for serving-layer resolution.
+        assert_eq!(cache.tenant("strict").threshold(), Some(0.95));
     }
 }

@@ -1,11 +1,20 @@
 //! One embedding-size partition: ANN index + TTL'd entry store.
 //!
 //! The index and the store can disagree transiently: the index may hold
-//! ids whose store entry has expired (TTL) or been LRU-evicted. Lookups
+//! ids whose store entry has expired (TTL) or been evicted. Lookups
 //! treat such ids as dead — they are skipped (and the index tombstoned)
 //! — and the housekeeping rebuild reclaims the slots. This mirrors the
 //! paper's Redis-TTL + ANN-index split, where Redis expiry is the source
 //! of truth (§2.7).
+//!
+//! Since the tenancy refactor a partition belongs to exactly one tenant
+//! ([`Partition::tenant`]); the cache keys partitions on (tenant, dim),
+//! which is what makes cross-tenant lookups structurally impossible.
+//! Every insert charges its [`crate::eviction::entry_footprint`] to the
+//! store's byte ledger (threaded through to the tenant and global
+//! ledgers), and the byte-budget enforcement loop in
+//! [`super::SemanticCache`] uses [`Partition::victim`] /
+//! [`Partition::evict_id`] to pick and reclaim entries.
 //!
 //! Concurrency: the ANN index sits behind a read-mostly `RwLock`, so any
 //! number of batch workers can search one partition in parallel; only
@@ -14,12 +23,15 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
+use crate::eviction::{entry_footprint, EvictionPolicy};
 use crate::index::{FlatIndex, HnswIndex, VectorIndex};
 use crate::store::{Clock, KvStore, StoreConfig};
+use crate::tenancy::DEFAULT_TENANT;
 
 use super::{CacheConfig, CacheHit, CachedEntry, IndexKind};
 
 pub struct Partition {
+    tenant: String,
     dim: usize,
     /// Read-mostly: `search` under the shared lock, mutation under the
     /// exclusive lock.
@@ -29,6 +41,7 @@ pub struct Partition {
     /// Embeddings of live entries, kept for rebuilds (id -> embedding).
     embeddings: Mutex<std::collections::HashMap<u64, Vec<f32>>>,
     top_k: usize,
+    default_ttl_ms: u64,
     clock: Arc<dyn Clock>,
 }
 
@@ -50,6 +63,8 @@ pub struct EntryDump {
 
 /// Point-in-time capture of one partition (snapshot payload).
 pub struct PartitionDump {
+    /// Owning tenant namespace.
+    pub tenant: String,
     pub dim: usize,
     pub next_id: u64,
     /// Live entries, sorted by id (deterministic bytes for a given state).
@@ -58,8 +73,34 @@ pub struct PartitionDump {
     pub graph: Option<Vec<u8>>,
 }
 
+/// A byte-budget eviction candidate ([`Partition::victim`]).
+#[derive(Debug, Clone)]
+pub struct PartitionVictim {
+    pub id: u64,
+    pub score: f64,
+    pub seq: u64,
+    pub bytes: u64,
+}
+
 impl Partition {
+    /// Default-tenant partition with no shared byte ledgers (tests and
+    /// embedded single-tenant use).
     pub fn new(dim: usize, cfg: &CacheConfig, clock: Arc<dyn Clock>) -> Self {
+        Self::new_for_tenant(DEFAULT_TENANT, dim, cfg, clock, Vec::new(), false)
+    }
+
+    /// A partition owned by `tenant`. `ledgers` are the byte counters
+    /// (global + tenant) every weighted store mutation updates;
+    /// `track_access` keeps recency/frequency metadata on reads (needed
+    /// whenever a byte budget can trigger policy-scored eviction).
+    pub fn new_for_tenant(
+        tenant: &str,
+        dim: usize,
+        cfg: &CacheConfig,
+        clock: Arc<dyn Clock>,
+        ledgers: Vec<Arc<AtomicU64>>,
+        track_access: bool,
+    ) -> Self {
         let index: Box<dyn VectorIndex> = match cfg.index {
             IndexKind::Hnsw => Box::new(HnswIndex::new(dim, cfg.hnsw.clone())),
             IndexKind::Flat => Box::new(FlatIndex::new(dim)),
@@ -69,22 +110,36 @@ impl Partition {
                 shards: cfg.store_shards,
                 capacity: cfg.capacity,
                 default_ttl_ms: cfg.ttl_ms,
+                track_access,
+                ledgers,
             },
             clock.clone(),
         );
         Self {
+            tenant: tenant.to_string(),
             dim,
             index: RwLock::new(index),
             store,
             next_id: AtomicU64::new(1),
             embeddings: Mutex::new(std::collections::HashMap::new()),
             top_k: cfg.top_k.max(1),
+            default_ttl_ms: cfg.ttl_ms,
             clock,
         }
     }
 
     pub fn dim(&self) -> usize {
         self.dim
+    }
+
+    /// The tenant namespace this partition belongs to.
+    pub fn tenant(&self) -> &str {
+        &self.tenant
+    }
+
+    /// Bytes resident in this partition's store.
+    pub fn bytes(&self) -> u64 {
+        self.store.bytes()
     }
 
     pub fn lookup(&self, embedding: &[f32], threshold: f32) -> Option<CacheHit> {
@@ -126,26 +181,29 @@ impl Partition {
     }
 
     pub fn insert(&self, embedding: &[f32], entry: CachedEntry) -> u64 {
-        self.insert_with_ttl(embedding, entry, None)
+        self.insert_with_ttl(embedding, entry, None).0
     }
 
     /// Insert with a per-entry TTL override (`None` = store default,
-    /// `Some(0)` = immortal).
+    /// `Some(0)` = immortal). Returns the new id plus the ids evicted by
+    /// the legacy count capacity (already tombstoned here; the caller
+    /// journals them).
     pub fn insert_with_ttl(
         &self,
         embedding: &[f32],
         entry: CachedEntry,
         ttl_ms: Option<u64>,
-    ) -> u64 {
+    ) -> (u64, Vec<u64>) {
         assert_eq!(embedding.len(), self.dim, "embedding dim mismatch");
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        match ttl_ms {
-            Some(ttl) => self.store.set_ttl(&key(id), entry, ttl),
-            None => self.store.set(&key(id), entry),
-        }
+        let bytes = entry_footprint(entry.question.len(), entry.response.len(), self.dim);
+        let cost = entry.latency_ms;
+        let ttl = ttl_ms.unwrap_or(self.default_ttl_ms);
+        let evicted_keys = self.store.set_ttl_weighted(&key(id), entry, ttl, bytes, cost);
         self.embeddings.lock().unwrap().insert(id, embedding.to_vec());
         self.index.write().unwrap().insert(id, embedding);
-        id
+        let evicted = self.tombstone_keys(&evicted_keys);
+        (id, evicted)
     }
 
     /// Live entry count (store is the source of truth).
@@ -164,6 +222,25 @@ impl Partition {
         self.next_id.fetch_max(floor, Ordering::Relaxed);
     }
 
+    /// Tombstone index nodes + embeddings for store keys that were
+    /// removed underneath us (count-capacity eviction); returns the ids.
+    fn tombstone_keys(&self, keys: &[String]) -> Vec<u64> {
+        if keys.is_empty() {
+            return Vec::new();
+        }
+        let mut ids = Vec::with_capacity(keys.len());
+        let mut index = self.index.write().unwrap();
+        let mut embeddings = self.embeddings.lock().unwrap();
+        for k in keys {
+            if let Ok(id) = u64::from_str_radix(&k[1..], 16) {
+                index.remove(id);
+                embeddings.remove(&id);
+                ids.push(id);
+            }
+        }
+        ids
+    }
+
     /// Drop expired entries from the store *and* tombstone their index
     /// nodes + embeddings in the same pass; returns the count.
     ///
@@ -176,15 +253,28 @@ impl Partition {
         if keys.is_empty() {
             return 0;
         }
-        let mut index = self.index.write().unwrap();
-        let mut embeddings = self.embeddings.lock().unwrap();
-        for k in &keys {
-            if let Ok(id) = u64::from_str_radix(&k[1..], 16) {
-                index.remove(id);
-                embeddings.remove(&id);
-            }
-        }
+        self.tombstone_keys(&keys);
         keys.len()
+    }
+
+    /// The lowest-scoring resident entry under `policy` — the byte
+    /// budget's next victim in this partition (expired residents score
+    /// negative infinity). O(n) in resident entries.
+    pub fn victim(&self, policy: &dyn EvictionPolicy) -> Option<PartitionVictim> {
+        let v = self.store.victim(policy)?;
+        let id = u64::from_str_radix(&v.key[1..], 16).ok()?;
+        Some(PartitionVictim { id, score: v.score, seq: v.seq, bytes: v.bytes })
+    }
+
+    /// Byte-budget eviction of one entry: remove it from the store
+    /// (releasing its footprint from every ledger) and tombstone its
+    /// index node + embedding. Returns the freed bytes if it was
+    /// resident.
+    pub fn evict_id(&self, id: u64) -> Option<u64> {
+        let freed = self.store.evict(&key(id))?;
+        self.index.write().unwrap().remove(id);
+        self.embeddings.lock().unwrap().remove(&id);
+        Some(freed)
     }
 
     /// Garbage fraction of the index: tombstoned slots plus entries dead
@@ -265,6 +355,7 @@ impl Partition {
         entries.sort_by_key(|e| e.id);
         let graph = self.index.read().unwrap().dump_graph();
         PartitionDump {
+            tenant: self.tenant.clone(),
             dim: self.dim,
             next_id: self.next_id(),
             entries,
@@ -295,7 +386,11 @@ impl Partition {
             return false;
         }
         let ttl = if expires_wall_ms == u64::MAX { 0 } else { expires_wall_ms - wall_now };
-        self.store.set_ttl(&key(id), entry, ttl);
+        let bytes = entry_footprint(entry.question.len(), entry.response.len(), self.dim);
+        let cost = entry.latency_ms;
+        // Weighted restore: recovered entries re-charge the byte ledgers
+        // exactly like live inserts did.
+        self.store.set_ttl_weighted(&key(id), entry, ttl, bytes, cost);
         self.embeddings.lock().unwrap().insert(id, embedding.to_vec());
         // For graph-loaded ids this is an in-place vector overwrite (the
         // normalization is deterministic, so the stored bits are
@@ -350,7 +445,7 @@ mod tests {
     }
 
     fn entry(s: &str) -> CachedEntry {
-        CachedEntry { question: s.into(), response: s.into(), cluster: 0 }
+        CachedEntry { question: s.into(), response: s.into(), cluster: 0, latency_ms: 0.0 }
     }
 
     #[test]
@@ -369,16 +464,38 @@ mod tests {
     #[test]
     fn lru_eviction_consistency() {
         // Capacity 2 in a 1-shard-ish store: inserting 3 evicts one; the
-        // evicted id must not be returned by lookups.
+        // evicted id must not be returned by lookups, and the eviction is
+        // reported to the caller (the cache journals it).
         let clock = Arc::new(ManualClock::new(0));
         let cfg = CacheConfig { capacity: 2, store_shards: 1, ..Default::default() };
         let p = Partition::new(8, &cfg, clock);
-        p.insert(&axis(0), entry("a"));
+        let (a, ev) = p.insert_with_ttl(&axis(0), entry("a"), None);
+        assert!(ev.is_empty());
         p.insert(&axis(1), entry("b"));
-        p.insert(&axis(2), entry("c")); // evicts "a" (coldest)
+        let (_, ev) = p.insert_with_ttl(&axis(2), entry("c"), None); // evicts "a" (coldest)
+        assert_eq!(ev, vec![a], "count eviction must surface the victim id");
         assert!(p.lookup(&axis(0), 0.8).is_none(), "evicted entry returned");
         assert!(p.lookup(&axis(1), 0.8).is_some());
         assert!(p.lookup(&axis(2), 0.8).is_some());
+    }
+
+    #[test]
+    fn byte_accounting_and_policy_eviction() {
+        let (p, _clock) = part(0, 0);
+        let (a, _) = p.insert_with_ttl(&axis(0), entry("aaaa"), None);
+        let (b, _) = p.insert_with_ttl(&axis(1), entry("bb"), None);
+        let expect = entry_footprint(4, 4, 8) + entry_footprint(2, 2, 8);
+        assert_eq!(p.bytes(), expect, "partition bytes = sum of entry footprints");
+        // LRU victim is the older entry; evicting releases its bytes and
+        // tombstones its index node.
+        let v = p.victim(&crate::eviction::Lru).unwrap();
+        assert_eq!(v.id, a);
+        assert_eq!(p.evict_id(a), Some(entry_footprint(4, 4, 8)));
+        assert_eq!(p.bytes(), entry_footprint(2, 2, 8));
+        assert!(p.lookup(&axis(0), 0.8).is_none(), "evicted entry must not hit");
+        assert!(p.lookup(&axis(1), 0.8).is_some());
+        assert_eq!(p.victim(&crate::eviction::Lru).unwrap().id, b);
+        assert_eq!(p.evict_id(a), None, "double-evict is a no-op");
     }
 
     #[test]

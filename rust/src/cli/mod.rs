@@ -153,14 +153,25 @@ SERVE OPTIONS:
                              --embed_memo_capacity 4096 [0 = no memo tier],
                              --snapshot_interval_secs 60,
                              --wal_sync os|always [os survives SIGKILL,
-                             always also survives power loss])
+                             always also survives power loss],
+                             --max_bytes 67108864 [global cache byte
+                             budget; 0 = unbounded],
+                             --eviction_policy lru|lfu|cost [budget
+                             eviction order; cost = latency saved/byte],
+                             --tenant_quota_bytes 1048576 [default
+                             per-tenant byte quota; 0 = unlimited],
+                             --tenant.<name>.quota_bytes N and
+                             --tenant.<name>.similarity_threshold F
+                             [per-tenant overrides; also `[tenant.<name>]`
+                             tables in the config file])
 
 CLIENT OPTIONS (query | metrics | admin):
     --addr <host:port>       Daemon address (default 127.0.0.1:8080)
     --threshold <f32>        Per-request similarity gate      (query)
     --top-k <n>              Per-request candidate-set width  (query)
     --ttl-ms <ms>            Per-request insert TTL           (query)
-    --tag <string>           client_tag echoed on the reply   (query)
+    --tag <string>           client_tag: selects the tenant
+                             namespace, echoed on the reply   (query)
     --embed-bypass           Skip the embedding memo read; bare flag,
                              place it AFTER the query text    (query)
 

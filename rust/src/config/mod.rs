@@ -14,6 +14,7 @@ use std::collections::BTreeMap;
 use std::path::Path;
 
 use crate::error::{bail, Context, Result};
+use crate::tenancy::TenantOverrides;
 
 /// Full system configuration. Field groups mirror DESIGN.md §4 modules.
 #[derive(Debug, Clone, PartialEq)]
@@ -23,8 +24,25 @@ pub struct Config {
     pub similarity_threshold: f32,
     /// TTL for cached entries, seconds (0 = immortal).
     pub ttl_secs: u64,
-    /// Max cached entries (0 = unbounded); LRU beyond that.
+    /// Legacy count-based cap. Deprecated by the byte-accurate
+    /// `max_bytes` budget: the key is still *accepted* (a config that
+    /// started a pre-tenancy daemon must keep starting one) but its
+    /// value is clamped to unbounded — size caps are byte-denominated
+    /// now. See DESIGN.md "Migration: cache_capacity".
     pub cache_capacity: usize,
+    /// Global cache memory budget in bytes (0 = unbounded). Every entry
+    /// charges its byte-accurate footprint against this; crossing it
+    /// evicts entries of the inserting tenant per `eviction_policy`.
+    pub max_bytes: u64,
+    /// Eviction policy when a byte budget is exceeded: "lru", "lfu", or
+    /// "cost" (simulated-LLM-latency-saved per byte).
+    pub eviction_policy: String,
+    /// Default per-tenant byte quota (0 = unlimited); individual tenants
+    /// override via `[tenant.<name>] quota_bytes`.
+    pub tenant_quota_bytes: u64,
+    /// Per-tenant overrides, keyed by tenant name (`[tenant.<name>]`
+    /// tables / `--tenant.<name>.<field>` flags).
+    pub tenants: BTreeMap<String, TenantOverrides>,
     /// Top-k neighbors fetched per lookup.
     pub top_k: usize,
 
@@ -102,6 +120,10 @@ impl Default for Config {
             similarity_threshold: 0.8,
             ttl_secs: 0,
             cache_capacity: 0,
+            max_bytes: 0,
+            eviction_policy: "lru".into(),
+            tenant_quota_bytes: 0,
+            tenants: BTreeMap::new(),
             top_k: 5,
             index_kind: "hnsw".into(),
             hnsw_m: 16,
@@ -185,6 +207,32 @@ impl Config {
 
     /// Set one key (section-qualified or bare) from its string form.
     pub fn set(&mut self, key: &str, raw: &str) -> Result<()> {
+        // `tenant.<name>.<field>` is the one key family where the middle
+        // component is data (the tenant name), so it must be routed
+        // before the bare-suffix dispatch below ever strips it.
+        if let Some(rest) = key.strip_prefix("tenant.") {
+            let (name, field) = match rest.rsplit_once('.') {
+                Some((n, f)) if !n.is_empty() => (n, f),
+                _ => bail!(
+                    "per-tenant config key must be tenant.<name>.<field>, got '{key}'"
+                ),
+            };
+            let o = self.tenants.entry(name.to_string()).or_default();
+            match field {
+                "quota_bytes" => {
+                    o.quota_bytes =
+                        Some(raw.parse().with_context(|| format!("config {key}={raw}"))?)
+                }
+                "similarity_threshold" => {
+                    o.similarity_threshold =
+                        Some(raw.parse().with_context(|| format!("config {key}={raw}"))?)
+                }
+                other => bail!(
+                    "unknown per-tenant key '{other}' (expected quota_bytes|similarity_threshold)"
+                ),
+            }
+            return Ok(());
+        }
         // Accept both "cache.similarity_threshold" and "similarity_threshold".
         let bare = key.rsplit('.').next().unwrap_or(key);
         macro_rules! num {
@@ -196,6 +244,9 @@ impl Config {
             "similarity_threshold" => self.similarity_threshold = num!(),
             "ttl_secs" => self.ttl_secs = num!(),
             "cache_capacity" => self.cache_capacity = num!(),
+            "max_bytes" => self.max_bytes = num!(),
+            "eviction_policy" => self.eviction_policy = raw.to_string(),
+            "tenant_quota_bytes" => self.tenant_quota_bytes = num!(),
             "top_k" => self.top_k = num!(),
             "index_kind" => self.index_kind = raw.to_string(),
             "hnsw_m" => self.hnsw_m = num!(),
@@ -234,6 +285,18 @@ impl Config {
         }
         if self.top_k == 0 {
             bail!("top_k must be >= 1");
+        }
+        // Resolvable policy name (lru|lfu|cost).
+        crate::eviction::policy_from_name(&self.eviction_policy)?;
+        for (name, o) in &self.tenants {
+            if name.trim().is_empty() {
+                bail!("tenant name must not be blank");
+            }
+            if let Some(t) = o.similarity_threshold {
+                if !(0.0..=1.0).contains(&t) {
+                    bail!("tenant.{name}.similarity_threshold must be in [0,1], got {t}");
+                }
+            }
         }
         match self.index_kind.as_str() {
             "hnsw" | "flat" => {}
@@ -338,6 +401,64 @@ mod tests {
         c.snapshot_interval_secs = 0;
         assert!(c.validate().is_err(), "zero interval with a data dir is a footgun");
         c.data_dir.clear(); // persistence off: interval irrelevant
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn eviction_and_tenancy_keys_roundtrip_and_validate() {
+        let mut c = Config::default();
+        assert_eq!(c.max_bytes, 0, "unbounded by default");
+        assert_eq!(c.eviction_policy, "lru");
+        assert_eq!(c.tenant_quota_bytes, 0);
+        assert!(c.tenants.is_empty());
+        c.set("cache.max_bytes", "1048576").unwrap();
+        c.set("eviction_policy", "cost").unwrap();
+        c.set("tenant_quota_bytes", "65536").unwrap();
+        c.set("tenant.alice.quota_bytes", "4096").unwrap();
+        c.set("tenant.alice.similarity_threshold", "0.9").unwrap();
+        c.set("tenant.bot-7.quota_bytes", "0").unwrap();
+        assert_eq!(c.max_bytes, 1_048_576);
+        assert_eq!(c.eviction_policy, "cost");
+        assert_eq!(c.tenant_quota_bytes, 65_536);
+        assert_eq!(
+            c.tenants["alice"],
+            TenantOverrides { quota_bytes: Some(4096), similarity_threshold: Some(0.9) }
+        );
+        assert_eq!(c.tenants["bot-7"].quota_bytes, Some(0));
+        c.validate().unwrap();
+        // Legacy count-based cap still *parses* (migration: clamped, not
+        // rejected — see Config::cache_capacity).
+        c.set("cache_capacity", "500").unwrap();
+        c.validate().unwrap();
+        c.eviction_policy = "random".into();
+        assert!(c.validate().is_err(), "unknown policy must be rejected");
+        c.eviction_policy = "lfu".into();
+        c.tenants.get_mut("alice").unwrap().similarity_threshold = Some(1.5);
+        assert!(c.validate().is_err(), "tenant threshold outside [0,1]");
+        // Malformed per-tenant keys are routed errors, not silent drops.
+        let mut c = Config::default();
+        assert!(c.set("tenant.alice", "7").is_err(), "missing field");
+        assert!(c.set("tenant.alice.nope", "7").is_err(), "unknown field");
+        assert!(c.set("tenant.alice.quota_bytes", "lots").is_err(), "non-numeric");
+    }
+
+    #[test]
+    fn tenant_tables_parse_from_toml() {
+        let dir = std::env::temp_dir().join("semcache_cfg_tenant_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.toml");
+        std::fs::write(
+            &p,
+            "[cache]\nmax_bytes = 2097152\neviction_policy = \"cost\"\n\n\
+             [tenant.hot]\nquota_bytes = 131072\n\n\
+             [tenant.cold]\nquota_bytes = 65536\nsimilarity_threshold = 0.85\n",
+        )
+        .unwrap();
+        let c = Config::from_file(&p).unwrap();
+        assert_eq!(c.max_bytes, 2_097_152);
+        assert_eq!(c.eviction_policy, "cost");
+        assert_eq!(c.tenants["hot"].quota_bytes, Some(131_072));
+        assert_eq!(c.tenants["cold"].similarity_threshold, Some(0.85));
         c.validate().unwrap();
     }
 

@@ -29,15 +29,18 @@
 //! its queue time). While a dispatch is being served the queue refills,
 //! which is what makes batches form under load without any extra delay.
 //!
-//! **Coalescing.** Identical in-flight requests — same text and same
-//! outcome-affecting options (threshold, ttl_ms, top_k, cluster) — are
-//! served once per dispatch; every duplicate is answered from the
-//! representative's result via [`BatchExecutor::coalesce`] without its
-//! own embedding, lookup, or LLM call. This also *fixes* the documented
-//! `serve_batch` caveat: racing duplicate novel queries no longer each
-//! call the upstream LLM, because the single dispatcher totally orders
-//! dispatches and dedups within them. `client_tag` is not part of the
-//! identity and is echoed per-request.
+//! **Coalescing.** Identical in-flight requests — same text, same
+//! outcome-affecting options (threshold, ttl_ms, top_k, cluster), *and*
+//! same `client_tag` — are served once per dispatch; every duplicate is
+//! answered from the representative's result via
+//! [`BatchExecutor::coalesce`] without its own embedding, lookup, or
+//! LLM call. This also *fixes* the documented `serve_batch` caveat:
+//! racing duplicate novel queries no longer each call the upstream LLM,
+//! because the single dispatcher totally orders dispatches and dedups
+//! within them. `client_tag` is part of the identity because it selects
+//! the tenant namespace ([`crate::tenancy`]): equal texts from
+//! different tenants resolve against different caches and must not
+//! share a result.
 //!
 //! **Backpressure.** The submit queue is bounded; when it is full,
 //! [`Batcher::submit`] fails fast with [`SubmitError::QueueFull`]
@@ -180,10 +183,14 @@ struct Submission {
 }
 
 /// In-flight identity for coalescing: the text plus every option that
-/// can change the outcome. `client_tag` is deliberately excluded.
+/// can change the outcome. `client_tag` is included because it selects
+/// the tenant namespace — equal texts from different tenants hit
+/// different caches (and differently-tagged blank/None tags normalize
+/// to the same default tenant, so they still coalesce).
 #[derive(Hash, PartialEq, Eq)]
 struct CoalesceKey {
     text: String,
+    client_tag: String,
     threshold_bits: Option<u32>,
     ttl_ms: Option<u64>,
     top_k: Option<usize>,
@@ -194,6 +201,7 @@ impl CoalesceKey {
     fn of(req: &QueryRequest) -> Self {
         Self {
             text: req.text.clone(),
+            client_tag: crate::tenancy::normalize_tag(req.client_tag.as_deref()).to_string(),
             threshold_bits: req.options.threshold.map(f32::to_bits),
             ttl_ms: req.options.ttl_ms,
             top_k: req.options.top_k,
@@ -296,7 +304,8 @@ impl Batcher {
             // dispatcher's decrement may transiently beat this
             // increment; the signed gauge absorbs that).
             Ok(()) => {
-                self.depth.fetch_add(1, Ordering::SeqCst);
+                let d = self.depth.fetch_add(1, Ordering::SeqCst) + 1;
+                self.metrics.set_batch_queue_depth(d.max(0) as u64);
                 Ok(())
             }
             Err(TrySendError::Full(_)) => Err(self.reject(SubmitError::QueueFull)),
@@ -335,6 +344,12 @@ fn dispatch_loop(
     cfg: BatchConfig,
 ) {
     let window = Duration::from_micros(cfg.max_wait_us);
+    // Decrement the authoritative gauge and mirror it into the metrics
+    // registry so `/v1/metrics` exposes queue pressure live.
+    let dequeued = |depth: &AtomicI64| {
+        let d = depth.fetch_sub(1, Ordering::SeqCst) - 1;
+        metrics.set_batch_queue_depth(d.max(0) as u64);
+    };
     loop {
         // Block for the window's first request; a disconnected, empty
         // queue means shutdown.
@@ -342,7 +357,7 @@ fn dispatch_loop(
             Ok(s) => s,
             Err(_) => break,
         };
-        depth.fetch_sub(1, Ordering::SeqCst);
+        dequeued(&depth);
         let deadline = first.enqueued + window;
         let mut batch = vec![first];
         loop {
@@ -352,7 +367,7 @@ fn dispatch_loop(
             // Drain whatever is already queued without waiting...
             match rx.try_recv() {
                 Ok(s) => {
-                    depth.fetch_sub(1, Ordering::SeqCst);
+                    dequeued(&depth);
                     batch.push(s);
                     continue;
                 }
@@ -366,7 +381,7 @@ fn dispatch_loop(
             }
             match rx.recv_timeout(deadline.saturating_duration_since(now)) {
                 Ok(s) => {
-                    depth.fetch_sub(1, Ordering::SeqCst);
+                    dequeued(&depth);
                     batch.push(s);
                 }
                 Err(RecvTimeoutError::Timeout) => break,
@@ -628,8 +643,8 @@ mod tests {
     #[test]
     fn identical_inflight_requests_coalesce_within_a_dispatch() {
         // Pin the dispatcher on a warm-up request, queue 4 identical
-        // requests plus one distinct, then release: the next dispatch
-        // must dedup the four into one executed request.
+        // same-tenant requests plus one distinct, then release: the next
+        // dispatch must dedup the four into one executed request.
         let exec = EchoExec::new(true);
         let metrics = Arc::new(Metrics::new());
         let cfg = BatchConfig { max_batch_size: 8, max_wait_us: 0, queue_capacity: 16 };
@@ -644,16 +659,21 @@ mod tests {
                 let b = b.clone();
                 let text = if i < 4 { "dup question" } else { "distinct question" };
                 scope.spawn(move || {
-                    let tag = format!("tag-{i}");
-                    let resp =
-                        b.submit(&QueryRequest::new(text).with_client_tag(tag.clone())).unwrap();
+                    let resp = b
+                        .submit(&QueryRequest::new(text).with_client_tag("tenant-a"))
+                        .unwrap();
                     assert_eq!(resp.response, text, "coalesced reply carries rep's answer");
-                    assert_eq!(resp.client_tag.as_deref(), Some(tag.as_str()), "own tag echoed");
+                    assert_eq!(resp.client_tag.as_deref(), Some("tenant-a"), "own tag echoed");
                 });
             }
             // All 5 must be in the queue before the gate opens, so they
             // land in one dispatch.
             wait_until("all 5 submissions queued", || b.queue_depth() == 5);
+            assert_eq!(
+                metrics.snapshot().batch_queue_depth,
+                5,
+                "queue depth mirrored into the metrics gauge"
+            );
             exec.open_gate();
         });
         b.shutdown();
@@ -662,6 +682,57 @@ mod tests {
         let second: &Vec<String> = &calls[1];
         assert_eq!(second.len(), 2, "4 dups + 1 distinct dedup to 2 uniques: {second:?}");
         assert_eq!(metrics.snapshot().coalesced, 3);
+        assert_eq!(metrics.snapshot().batch_queue_depth, 0, "gauge drains with the queue");
+    }
+
+    #[test]
+    fn equal_texts_from_different_tenants_never_coalesce() {
+        // Same text, four distinct client_tags: each tenant resolves
+        // against its own cache namespace, so all four must be executed
+        // (no cross-tenant answer sharing). Untagged and blank-tagged
+        // requests normalize to the same default tenant and still
+        // coalesce with each other.
+        let exec = EchoExec::new(true);
+        let metrics = Arc::new(Metrics::new());
+        let cfg = BatchConfig { max_batch_size: 8, max_wait_us: 0, queue_capacity: 16 };
+        let b = Batcher::start(exec.clone(), metrics.clone(), cfg).unwrap();
+        std::thread::scope(|scope| {
+            let warm = b.clone();
+            scope.spawn(move || warm.submit(&QueryRequest::new("warm up")).unwrap());
+            wait_until("dispatcher entered execute", || {
+                exec.entered.load(Ordering::SeqCst) == 1
+            });
+            for i in 0..4 {
+                let b = b.clone();
+                scope.spawn(move || {
+                    let tag = format!("tenant-{i}");
+                    b.submit(&QueryRequest::new("same question").with_client_tag(tag)).unwrap();
+                });
+            }
+            // One untagged and one blank-tagged twin: same default tenant.
+            for tag in [None, Some("   ")] {
+                let b = b.clone();
+                scope.spawn(move || {
+                    let mut req = QueryRequest::new("same question");
+                    if let Some(t) = tag {
+                        req = req.with_client_tag(t);
+                    }
+                    b.submit(&req).unwrap();
+                });
+            }
+            wait_until("all 6 submissions queued", || b.queue_depth() == 6);
+            exec.open_gate();
+        });
+        b.shutdown();
+        let calls = exec.calls.lock().unwrap();
+        assert_eq!(calls.len(), 2, "warm-up dispatch + tagged dispatch");
+        assert_eq!(
+            calls[1].len(),
+            5,
+            "4 tenants + 1 default-tenant pair -> 5 uniques: {:?}",
+            calls[1]
+        );
+        assert_eq!(metrics.snapshot().coalesced, 1, "only the default-tenant twin coalesced");
     }
 
     #[test]

@@ -402,6 +402,7 @@ impl Server {
                             question: p.question.clone(),
                             response: p.answer.clone(),
                             cluster: p.answer_group,
+                            latency_ms: 0.0,
                         },
                     )
                     .expect("populate insert (encoder produced an embedding)");
@@ -459,11 +460,19 @@ impl Server {
         embed_ms: f64,
         embed_cached: bool,
     ) -> QueryResponse {
-        let threshold = req.options.threshold.unwrap_or_else(|| self.effective_threshold());
+        // The request's `client_tag` selects the tenant namespace; the
+        // similarity gate resolves per-request override → tenant
+        // override → server-wide threshold.
+        let tenant = crate::tenancy::normalize_tag(req.client_tag.as_deref());
+        let threshold = req
+            .options
+            .threshold
+            .or_else(|| self.cache.tenant_threshold(tenant))
+            .unwrap_or_else(|| self.effective_threshold());
 
-        // 2. ANN lookup (measured).
+        // 2. ANN lookup (measured), scoped to the tenant's partitions.
         let t1 = Instant::now();
-        let hit = self.cache.lookup_with_opts(embedding, threshold, req.options.top_k);
+        let hit = self.cache.lookup_with_opts_for(tenant, embedding, threshold, req.options.top_k);
         let index_ms = t1.elapsed().as_secs_f64() * 1e3;
         self.metrics.observe_index_ms(index_ms);
 
@@ -502,12 +511,16 @@ impl Server {
         self.metrics.observe_llm_ms(resp.latency_ms);
 
         let t2 = Instant::now();
-        let inserted = self.cache.try_insert_entry_ttl(
+        let inserted = self.cache.try_insert_entry_ttl_for(
+            tenant,
             embedding,
             CachedEntry {
                 question: req.text.clone(),
                 response: resp.text.clone(),
                 cluster: req.cluster.unwrap_or(0),
+                // Cost-aware eviction scores entries by the simulated
+                // upstream latency a future hit on them would save.
+                latency_ms: resp.latency_ms,
             },
             req.options.ttl_ms,
         );
@@ -800,9 +813,18 @@ impl Server {
             ]),
             None => Value::Null,
         };
+        let tenants: std::collections::BTreeMap<String, Value> = self
+            .cache
+            .tenant_stats()
+            .into_iter()
+            .map(|t| (t.name.clone(), t.to_json()))
+            .collect();
         obj([
             ("metrics", self.metrics.snapshot().to_json()),
             ("cache_entries", self.cache.len().into()),
+            ("cache_bytes", self.cache.bytes().into()),
+            ("cache_max_bytes", self.cache.max_bytes().into()),
+            ("tenants", Value::Object(tenants)),
             ("embed_memo", memo),
             ("threshold", (self.effective_threshold() as f64).into()),
             ("workers", self.workers.into()),
@@ -971,7 +993,9 @@ mod tests {
         };
         assert!(inserted >= 1, "ids start at 1");
         assert_eq!(r1.client_tag.as_deref(), Some("t-1"));
-        let r2 = s.serve(&QueryRequest::new("how can i reset my password"));
+        // Same tenant: the paraphrase must carry the same tag to see the
+        // entry (client_tag namespaces the cache).
+        let r2 = s.serve(&QueryRequest::new("how can i reset my password").with_client_tag("t-1"));
         match r2.outcome {
             Outcome::Hit { score, entry_id } => {
                 assert!(score >= s.effective_threshold());
@@ -1049,6 +1073,80 @@ mod tests {
         assert!(r.is_hit());
         assert_eq!(r.judged_positive, Some(false), "wrong-cluster hit judged negative");
         assert_eq!(s.effective_threshold(), 0.8, "per-request option leaves the gate alone");
+    }
+
+    #[test]
+    fn client_tags_are_isolated_tenant_namespaces() {
+        let s = server();
+        let r1 = s.serve(&QueryRequest::new("how do i reset my password").with_client_tag("alice"));
+        assert!(matches!(r1.outcome, Outcome::Miss { .. }));
+        // Bob's identical question cannot see Alice's entry.
+        let r2 = s.serve(&QueryRequest::new("how do i reset my password").with_client_tag("bob"));
+        assert!(matches!(r2.outcome, Outcome::Miss { .. }), "cross-tenant lookup must miss");
+        // Alice's paraphrase still hits her own entry.
+        let r3 = s.serve(&QueryRequest::new("how can i reset my password").with_client_tag("alice"));
+        assert!(r3.is_hit(), "{:?}", r3.outcome);
+        // The stats document carries a per-tenant block plus the byte
+        // gauges.
+        let stats = s.stats_json();
+        assert!(s.cache().bytes() > 0);
+        assert_eq!(stats.get("cache_bytes").as_u64(), Some(s.cache().bytes()));
+        assert_eq!(stats.get("cache_max_bytes").as_u64(), Some(0));
+        let alice = stats.get("tenants").get("alice");
+        assert_eq!(alice.get("hits").as_u64(), Some(1));
+        assert_eq!(alice.get("misses").as_u64(), Some(1));
+        let bob = stats.get("tenants").get("bob");
+        assert_eq!(bob.get("hits").as_u64(), Some(0));
+        assert_eq!(bob.get("misses").as_u64(), Some(1));
+    }
+
+    #[test]
+    fn tenant_threshold_override_gates_that_tenant_only() {
+        let cache = CacheConfig::builder()
+            .tenant(
+                "lenient",
+                crate::tenancy::TenantOverrides {
+                    similarity_threshold: Some(-1.0),
+                    ..Default::default()
+                },
+            )
+            .build()
+            .unwrap();
+        let cfg = ServerConfig::builder().cache(cache).build().unwrap();
+        let s = Arc::new(Server::new(small_encoder(), cfg));
+        s.serve(&QueryRequest::new("tell me about the acme laptop").with_client_tag("lenient"));
+        s.serve(&QueryRequest::new("tell me about the acme laptop").with_client_tag("strict"));
+        // Same unrelated follow-up: the lenient tenant's override
+        // admits it, the strict tenant stays on the global gate.
+        let r = s.serve(
+            &QueryRequest::new("completely different topic entirely").with_client_tag("lenient"),
+        );
+        assert!(r.is_hit(), "tenant override must admit the match: {:?}", r.outcome);
+        let r = s.serve(
+            &QueryRequest::new("completely different topic entirely").with_client_tag("strict"),
+        );
+        assert!(!r.is_hit(), "global gate still applies to other tenants");
+        // A per-request threshold beats the tenant override.
+        let r = s.serve(
+            &QueryRequest::new("yet another unrelated topic instead")
+                .with_client_tag("lenient")
+                .with_threshold(0.999),
+        );
+        assert!(!r.is_hit(), "per-request threshold wins over the tenant override");
+    }
+
+    #[test]
+    fn cost_aware_miss_records_llm_latency_on_the_entry() {
+        let s = server();
+        let r = s.serve(&QueryRequest::new("how do i reset my password"));
+        assert!(matches!(r.outcome, Outcome::Miss { .. }));
+        assert!(r.latency.llm_ms > 0.0);
+        let e = s.encoder().encode_text("how do i reset my password");
+        let hit = s.cache().lookup(&e).expect("inserted entry must hit");
+        assert_eq!(
+            hit.entry.latency_ms, r.latency.llm_ms,
+            "entry carries the simulated upstream latency it saves"
+        );
     }
 
     #[test]
@@ -1135,9 +1233,10 @@ mod tests {
             Outcome::Miss { inserted_id } => inserted_id,
             ref o => panic!("expected miss, got {o:?}"),
         };
-        let dup = QueryRequest::new("novel coalesce probe")
-            .with_cluster(7)
-            .with_client_tag("dup-tag");
+        // Coalescing only ever pairs requests from the same tenant (the
+        // batcher keys on client_tag), so the dup shares the rep's
+        // namespace: both untagged here.
+        let dup = QueryRequest::new("novel coalesce probe").with_cluster(7);
         let dup_resp = BatchExecutor::coalesce(s.as_ref(), &dup, &rep, &rep_resp);
         match dup_resp.outcome {
             Outcome::Hit { score, entry_id } => {
@@ -1149,7 +1248,7 @@ mod tests {
         assert_eq!(dup_resp.response, rep_resp.response);
         assert_eq!(dup_resp.judged_positive, Some(true));
         assert_eq!(dup_resp.matched_cluster, Some(7));
-        assert_eq!(dup_resp.client_tag.as_deref(), Some("dup-tag"));
+        assert_eq!(dup_resp.client_tag, None, "dup's own (absent) tag echoed");
         let m = s.metrics().snapshot();
         assert_eq!(m.requests, 2);
         assert_eq!(m.cache_hits, 1);

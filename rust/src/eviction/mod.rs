@@ -1,0 +1,176 @@
+//! Pluggable eviction policies over byte-accurate footprint accounting.
+//!
+//! The store used to bound memory by raw entry count with a hardwired
+//! LRU. This module replaces that with a *byte budget*: every cached
+//! entry charges a deterministic footprint ([`entry_footprint`]) against
+//! the cache's global `max_bytes` and its tenant's quota, and when a
+//! budget is exceeded a policy ([`EvictionPolicy`]) scores the resident
+//! entries and the lowest-scoring one is evicted. Three policies ship:
+//!
+//! * **lru** — score is the last-access stamp; coldest entry goes first
+//!   (the pre-tenancy behaviour, generalized to bytes).
+//! * **lfu** — score is the access count; rarely-hit entries go first.
+//! * **cost** — score is simulated-LLM-latency-saved per byte
+//!   (`latency_ms / bytes`): the cache keeps the entries whose hits
+//!   avoid the most upstream latency per byte of budget they occupy.
+//!   The latency is the one recorded on the entry when its miss was
+//!   served ([`crate::cache::CachedEntry::latency_ms`]).
+//!
+//! Expired-but-unswept entries always score below every live entry
+//! (negative infinity), so budgets reclaim dead weight first.
+//!
+//! Scores are compared as (score, last-access stamp) — lower evicts
+//! first — which makes LFU and cost ties deterministic (colder loses).
+
+use std::sync::Arc;
+
+use crate::error::{bail, Result};
+
+/// Fixed per-entry bookkeeping charge: store key + hash-map slot + TTL /
+/// access metadata + the id ↔ embedding map entry. A deliberate round
+/// estimate — the point is that every entry pays the same recomputable
+/// constant, not allocator-exact bytes.
+pub const ENTRY_OVERHEAD_BYTES: u64 = 160;
+
+/// Estimated ANN index node charge (HNSW links + level bookkeeping, or
+/// a flat-index row header). Same deliberate-estimate caveat as
+/// [`ENTRY_OVERHEAD_BYTES`].
+pub const INDEX_NODE_BYTES: u64 = 96;
+
+/// The byte footprint one cached entry charges against its budgets:
+/// question + response text, the `dim`-float embedding (stored twice:
+/// once in the index, once in the rebuild map), the index node estimate,
+/// and the fixed per-entry overhead. Deterministic in the entry's
+/// contents so accounting can be recomputed and audited (the
+/// byte-accounting property test does exactly that).
+pub fn entry_footprint(question_len: usize, response_len: usize, dim: usize) -> u64 {
+    question_len as u64
+        + response_len as u64
+        + 2 * (dim as u64) * 4
+        + INDEX_NODE_BYTES
+        + ENTRY_OVERHEAD_BYTES
+}
+
+/// Per-entry facts a policy may score on.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EntryMeta {
+    /// Footprint charged at insert ([`entry_footprint`]).
+    pub bytes: u64,
+    /// Monotonic stamp of the last access (insert or hit); larger =
+    /// hotter.
+    pub last_access_seq: u64,
+    /// Number of accesses (insert counts as the first).
+    pub access_count: u64,
+    /// Simulated upstream latency a hit on this entry saves, ms.
+    pub latency_saved_ms: f64,
+}
+
+/// An eviction policy: maps entry metadata to a score. When a byte
+/// budget is exceeded, the resident entry with the *lowest*
+/// (score, last-access stamp) is evicted, repeatedly, until the budget
+/// holds again.
+pub trait EvictionPolicy: Send + Sync {
+    fn name(&self) -> &'static str;
+    /// Lower = evicted earlier. Must be deterministic in `meta`.
+    fn score(&self, meta: &EntryMeta) -> f64;
+}
+
+/// Least-recently-used: evict the coldest entry.
+pub struct Lru;
+
+impl EvictionPolicy for Lru {
+    fn name(&self) -> &'static str {
+        "lru"
+    }
+
+    fn score(&self, meta: &EntryMeta) -> f64 {
+        meta.last_access_seq as f64
+    }
+}
+
+/// Least-frequently-used: evict the entry with the fewest accesses.
+pub struct Lfu;
+
+impl EvictionPolicy for Lfu {
+    fn name(&self) -> &'static str {
+        "lfu"
+    }
+
+    fn score(&self, meta: &EntryMeta) -> f64 {
+        meta.access_count as f64
+    }
+}
+
+/// Cost-aware: evict the entry that saves the least simulated LLM
+/// latency per byte of budget it occupies.
+pub struct CostAware;
+
+impl EvictionPolicy for CostAware {
+    fn name(&self) -> &'static str {
+        "cost"
+    }
+
+    fn score(&self, meta: &EntryMeta) -> f64 {
+        meta.latency_saved_ms / meta.bytes.max(1) as f64
+    }
+}
+
+/// Resolve a policy by its config name (`eviction_policy` key).
+pub fn policy_from_name(name: &str) -> Result<Arc<dyn EvictionPolicy>> {
+    match name {
+        "lru" => Ok(Arc::new(Lru)),
+        "lfu" => Ok(Arc::new(Lfu)),
+        "cost" => Ok(Arc::new(CostAware)),
+        other => bail!("eviction_policy must be lru|lfu|cost, got '{other}'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(bytes: u64, seq: u64, count: u64, latency: f64) -> EntryMeta {
+        EntryMeta { bytes, last_access_seq: seq, access_count: count, latency_saved_ms: latency }
+    }
+
+    #[test]
+    fn footprint_is_deterministic_and_monotonic() {
+        let base = entry_footprint(0, 0, 0);
+        assert_eq!(base, ENTRY_OVERHEAD_BYTES + INDEX_NODE_BYTES);
+        assert_eq!(entry_footprint(10, 20, 8), base + 10 + 20 + 64);
+        // Same inputs, same charge — the accounting must be auditable.
+        assert_eq!(entry_footprint(7, 3, 96), entry_footprint(7, 3, 96));
+        assert!(entry_footprint(100, 0, 8) > entry_footprint(10, 0, 8));
+    }
+
+    #[test]
+    fn policies_order_victims_as_documented() {
+        let cold_rare_cheap = meta(100, 1, 1, 10.0);
+        let hot_frequent_pricey = meta(100, 9, 9, 5_000.0);
+        for (policy, name) in [
+            (&Lru as &dyn EvictionPolicy, "lru"),
+            (&Lfu, "lfu"),
+            (&CostAware, "cost"),
+        ] {
+            assert_eq!(policy.name(), name);
+            assert!(
+                policy.score(&cold_rare_cheap) < policy.score(&hot_frequent_pricey),
+                "{name} must evict the cold/rare/cheap entry first"
+            );
+        }
+        // Cost-aware specifically: a big cheap entry loses to a small
+        // expensive one even when the big one is hotter.
+        let big_cheap_hot = meta(10_000, 9, 9, 100.0);
+        let small_pricey_cold = meta(500, 1, 1, 2_000.0);
+        assert!(CostAware.score(&big_cheap_hot) < CostAware.score(&small_pricey_cold));
+    }
+
+    #[test]
+    fn policy_names_resolve_and_bad_names_reject() {
+        for name in ["lru", "lfu", "cost"] {
+            assert_eq!(policy_from_name(name).unwrap().name(), name);
+        }
+        assert!(policy_from_name("fifo").is_err());
+        assert!(policy_from_name("").is_err());
+    }
+}

@@ -73,6 +73,7 @@ pub fn run_paper_eval(ctx: &EvalContext, cfg: &PaperEvalConfig) -> PaperEval {
                     question: p.question.clone(),
                     response: p.answer.clone(),
                     cluster: p.answer_group,
+                    latency_ms: 0.0,
                 },
             )
             .expect("populate insert");
@@ -157,6 +158,7 @@ pub fn run_paper_eval(ctx: &EvalContext, cfg: &PaperEvalConfig) -> PaperEval {
                             question: q.text.clone(),
                             response: resp.text,
                             cluster: q.answer_group,
+                            latency_ms: resp.latency_ms,
                         },
                     )
                     .expect("miss insert");

@@ -63,6 +63,7 @@ pub fn threshold_sweep(
                     question: p.question.clone(),
                     response: p.answer.clone(),
                     cluster: p.answer_group,
+                    latency_ms: 0.0,
                 },
             )
             .expect("populate insert");

@@ -58,6 +58,7 @@ pub mod config;
 pub mod coordinator;
 pub mod embedding;
 pub mod error;
+pub mod eviction;
 pub mod experiments;
 pub mod index;
 pub mod json;
@@ -66,6 +67,7 @@ pub mod metrics;
 pub mod persist;
 pub mod runtime;
 pub mod store;
+pub mod tenancy;
 pub mod testutil;
 pub mod tokenizer;
 pub mod util;

@@ -82,6 +82,9 @@ pub struct Metrics {
     /// Requests answered from an identical in-flight twin in the same
     /// dispatch window (no embed, no lookup, no LLM call of their own).
     pub coalesced: AtomicU64,
+    /// Gauge: submissions accepted by the batcher but not yet pulled
+    /// into a dispatch (mirrors [`crate::coordinator::Batcher::queue_depth`]).
+    pub batch_queue_depth: AtomicU64,
     // Durability (crate::persist): WAL appends, snapshots, recovery.
     /// Records appended to the write-ahead log since startup.
     pub wal_records: AtomicU64,
@@ -148,6 +151,8 @@ pub struct MetricsSnapshot {
     pub batcher_dispatches: u64,
     pub batcher_queries: u64,
     pub coalesced: u64,
+    /// Gauge at snapshot time: queued-but-undispatched batcher submissions.
+    pub batch_queue_depth: u64,
     pub wal_records: u64,
     pub wal_bytes: u64,
     /// Failed appends of acknowledged mutations (durability degraded).
@@ -273,6 +278,13 @@ impl Metrics {
         self.coalesced.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Refresh the batcher queue-depth gauge (set, not accumulated — the
+    /// batcher owns the authoritative counter and mirrors it here on
+    /// every enqueue/dequeue).
+    pub fn set_batch_queue_depth(&self, depth: u64) {
+        self.batch_queue_depth.store(depth, Ordering::Relaxed);
+    }
+
     /// One WAL record appended (`bytes` = framed length on disk).
     pub fn record_wal_append(&self, bytes: u64) {
         self.wal_records.fetch_add(1, Ordering::Relaxed);
@@ -351,6 +363,7 @@ impl Metrics {
             batcher_dispatches: self.batcher_dispatches.load(Ordering::Relaxed),
             batcher_queries: self.batcher_queries.load(Ordering::Relaxed),
             coalesced: self.coalesced.load(Ordering::Relaxed),
+            batch_queue_depth: self.batch_queue_depth.load(Ordering::Relaxed),
             wal_records: self.wal_records.load(Ordering::Relaxed),
             wal_bytes: self.wal_bytes.load(Ordering::Relaxed),
             wal_append_errors: self.wal_append_errors.load(Ordering::Relaxed),
@@ -447,6 +460,7 @@ impl MetricsSnapshot {
             ("batcher_dispatches", self.batcher_dispatches.into()),
             ("batcher_queries", self.batcher_queries.into()),
             ("coalesced", self.coalesced.into()),
+            ("batch_queue_depth", self.batch_queue_depth.into()),
             ("batcher_batch_mean", self.batcher_batch_size.mean.into()),
             ("batcher_batch_p95", self.batcher_batch_size.p95.into()),
             ("lat_queue_wait_mean_ms", self.lat_queue_wait.mean.into()),
@@ -543,6 +557,17 @@ mod tests {
         assert_eq!(j.get("batcher_dispatches").as_usize(), Some(2));
         assert_eq!(j.get("coalesced").as_usize(), Some(2));
         assert!(j.get("batcher_batch_mean").as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn batch_queue_depth_is_a_gauge() {
+        let m = Metrics::new();
+        m.set_batch_queue_depth(7);
+        assert_eq!(m.snapshot().batch_queue_depth, 7);
+        m.set_batch_queue_depth(2);
+        let s = m.snapshot();
+        assert_eq!(s.batch_queue_depth, 2, "set, not accumulated");
+        assert_eq!(s.to_json().get("batch_queue_depth").as_usize(), Some(2));
     }
 
     #[test]

@@ -150,7 +150,7 @@ impl Persistence {
             replay_from = s.wal_seq;
             report.snapshot_loaded = true;
             for dump in s.partitions {
-                let p = cache.partition(dump.dim);
+                let p = cache.partition_for(&dump.tenant, dump.dim);
                 let mut graph_installed = false;
                 if let Some(bytes) = &dump.graph {
                     if p.index_is_hnsw() {
@@ -169,7 +169,7 @@ impl Persistence {
                     }
                 }
                 for e in dump.entries {
-                    if restore_counted(&cache, dump.dim, e.id, &e.embedding, e.entry, e.expires_wall_ms, &mut report) {
+                    if restore_counted(&cache, &dump.tenant, dump.dim, e.id, &e.embedding, e.entry, e.expires_wall_ms, &mut report) {
                         report.entries += 1;
                     }
                 }
@@ -311,17 +311,22 @@ impl Persistence {
 impl CacheJournal for Persistence {
     fn log_insert(
         &self,
+        tenant: &str,
         dim: usize,
         id: u64,
         embedding: &[f32],
         entry: &CachedEntry,
         expires_wall_ms: u64,
     ) {
-        self.append(&WalOp::insert(dim, id, embedding, entry, expires_wall_ms));
+        self.append(&WalOp::insert(tenant, dim, id, embedding, entry, expires_wall_ms));
     }
 
-    fn log_remove(&self, dim: usize, id: u64) {
-        self.append(&WalOp::Remove { dim: dim as u32, id });
+    fn log_remove(&self, tenant: &str, dim: usize, id: u64) {
+        self.append(&WalOp::Remove { tenant: tenant.to_string(), dim: dim as u32, id });
+    }
+
+    fn log_evict(&self, tenant: &str, dim: usize, id: u64) {
+        self.append(&WalOp::Evict { tenant: tenant.to_string(), dim: dim as u32, id });
     }
 
     fn log_clear(&self) {
@@ -330,16 +335,32 @@ impl CacheJournal for Persistence {
 }
 
 /// Apply one replayed WAL record to the cache.
+///
+/// `Evict` replays as a removal — recovery re-applies the logged history
+/// verbatim and does not re-run budget enforcement itself; the logged
+/// evictions *are* the enforcement decisions, so the recovered resident
+/// set equals the pre-crash one (entries evicted before the crash stay
+/// gone).
 fn apply_op(cache: &SemanticCache, op: WalOp, report: &mut RecoveryReport) {
     match op {
-        WalOp::Insert { dim, id, expires_wall_ms, cluster, question, response, embedding } => {
-            let entry = CachedEntry { question, response, cluster };
-            if restore_counted(cache, dim as usize, id, &embedding, entry, expires_wall_ms, report) {
+        WalOp::Insert {
+            tenant,
+            dim,
+            id,
+            expires_wall_ms,
+            cluster,
+            latency_ms,
+            question,
+            response,
+            embedding,
+        } => {
+            let entry = CachedEntry { question, response, cluster, latency_ms };
+            if restore_counted(cache, &tenant, dim as usize, id, &embedding, entry, expires_wall_ms, report) {
                 report.entries += 1;
             }
         }
-        WalOp::Remove { dim, id } => {
-            if let Some(p) = cache.partition_if_exists(dim as usize) {
+        WalOp::Remove { tenant, dim, id } | WalOp::Evict { tenant, dim, id } => {
+            if let Some(p) = cache.partition_if_exists_for(&tenant, dim as usize) {
                 if p.remove_id(id) {
                     report.entries = report.entries.saturating_sub(1);
                 }
@@ -356,6 +377,7 @@ fn apply_op(cache: &SemanticCache, op: WalOp, report: &mut RecoveryReport) {
 /// malformed records when the restore is refused.
 fn restore_counted(
     cache: &SemanticCache,
+    tenant: &str,
     dim: usize,
     id: u64,
     embedding: &[f32],
@@ -366,7 +388,7 @@ fn restore_counted(
     if dim == 0 || embedding.len() != dim {
         return false; // malformed record: drop, never panic
     }
-    let p = cache.partition(dim);
+    let p = cache.partition_for(tenant, dim);
     let restored = p.restore_entry(id, embedding, entry, expires_wall_ms);
     if !restored
         && embedding.len() == dim
@@ -546,6 +568,99 @@ mod tests {
         assert_eq!(rep2.entries, 14, "9 pre-crash + 5 post-crash acked entries");
         let hit = cache2.lookup(&vec_for(12, 8)).expect("post-crash acked entry must survive");
         assert_eq!(hit.entry.response, "a12");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn warm_restart_does_not_resurrect_evicted_entries() {
+        // Regression: before evictions were journaled, a WAL-only warm
+        // restart replayed every Insert record and brought back entries
+        // the byte budget had already evicted — the recovered cache was
+        // bigger than the pre-crash one and over budget.
+        // Every "q{i}"/"a{i}" pair below has 2-byte question + response.
+        let one = crate::eviction::entry_footprint(2, 2, 8);
+        let budget_cfg = || {
+            CacheConfig::builder()
+                .index(IndexKind::Hnsw)
+                .max_bytes(3 * one)
+                .build()
+                .unwrap()
+        };
+        let dir = tmpdir("evict");
+        let clock = Arc::new(ManualClock::new(1_000));
+        let survivors: Vec<u64> = {
+            let (cache, _p, _) =
+                Persistence::open(&pcfg(&dir), budget_cfg(), clock.clone(), Arc::new(Metrics::new()))
+                    .unwrap();
+            // 8 equal-footprint inserts through a 3-entry budget: 5 LRU
+            // evictions, journaled as they happen.
+            for i in 0..8u64 {
+                cache.try_insert(&format!("q{i}"), &vec_for(i, 8), &format!("a{i}")).unwrap();
+            }
+            assert_eq!(cache.len(), 3);
+            (5..8).collect()
+        };
+
+        let (cache2, _p2, rep) =
+            Persistence::open(&pcfg(&dir), budget_cfg(), clock, Arc::new(Metrics::new())).unwrap();
+        assert_eq!(
+            rep.entries, 3,
+            "replay must net out journaled evictions, not resurrect all 8 inserts"
+        );
+        assert_eq!(cache2.len(), 3);
+        assert!(cache2.bytes() <= 3 * one, "recovered cache must respect the byte budget");
+        for i in 0..5u64 {
+            let hit = cache2.lookup(&vec_for(i, 8));
+            assert!(
+                hit.is_none() || hit.unwrap().entry.response != format!("a{i}"),
+                "evicted entry {i} resurrected by warm restart"
+            );
+        }
+        for i in &survivors {
+            assert_eq!(
+                cache2.lookup(&vec_for(*i, 8)).expect("survivor must hit").entry.response,
+                format!("a{i}")
+            );
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tenants_survive_restart_in_their_own_namespaces() {
+        let dir = tmpdir("tenants");
+        let clock = Arc::new(ManualClock::new(1_000));
+        {
+            let (cache, p, _) =
+                Persistence::open(&pcfg(&dir), ccfg(), clock.clone(), Arc::new(Metrics::new()))
+                    .unwrap();
+            let e = CachedEntry {
+                question: "shared question".into(),
+                response: "alice answer".into(),
+                cluster: 0,
+                latency_ms: 250.0,
+            };
+            cache.try_insert_entry_ttl_for("alice", &vec_for(1, 8), e, None).unwrap();
+            // Snapshot covers alice; bob's insert rides the WAL suffix.
+            p.snapshot(&cache).unwrap();
+            let e2 = CachedEntry {
+                question: "shared question".into(),
+                response: "bob answer".into(),
+                cluster: 0,
+                latency_ms: 0.0,
+            };
+            cache.try_insert_entry_ttl_for("bob", &vec_for(1, 8), e2, None).unwrap();
+        }
+        let (cache2, _p2, rep) =
+            Persistence::open(&pcfg(&dir), ccfg(), clock, Arc::new(Metrics::new())).unwrap();
+        assert!(rep.snapshot_loaded);
+        assert_eq!(rep.entries, 2);
+        let a = cache2.lookup_with_opts_for("alice", &vec_for(1, 8), 0.8, None).unwrap();
+        assert_eq!(a.entry.response, "alice answer");
+        assert_eq!(a.entry.latency_ms, 250.0, "latency survives snapshot roundtrip");
+        let b = cache2.lookup_with_opts_for("bob", &vec_for(1, 8), 0.8, None).unwrap();
+        assert_eq!(b.entry.response, "bob answer");
+        // A third tenant that never inserted still sees nothing.
+        assert!(cache2.lookup_with_opts_for("carol", &vec_for(1, 8), 0.8, None).is_none());
         let _ = fs::remove_dir_all(&dir);
     }
 

@@ -12,8 +12,10 @@ use crate::cache::{CachedEntry, EntryDump, PartitionDump};
 
 use super::codec::{self, DecodeError, DecodeResult, Reader};
 
-/// Snapshot file header.
-pub const SNAP_MAGIC: &[u8; 8] = b"SCSNAP01";
+/// Snapshot file header. v2 (`SCSNAP02`) added the tenant namespace per
+/// partition and the latency cost per entry; a v1 snapshot fails the
+/// magic check and recovery falls back to older snapshots / cold start.
+pub const SNAP_MAGIC: &[u8; 8] = b"SCSNAP02";
 
 /// A decoded snapshot.
 #[derive(Debug)]
@@ -31,13 +33,14 @@ impl Snapshot {
         self.partitions.iter().map(|p| p.entries.len()).sum()
     }
 
-    /// Serialize to `SCSNAP01 | crc32(body) | body`.
+    /// Serialize to `SCSNAP02 | crc32(body) | body`.
     pub fn encode(&self) -> Vec<u8> {
         let mut body = Vec::new();
         codec::put_u64(&mut body, self.wal_seq);
         codec::put_u64(&mut body, self.wall_ms);
         codec::put_u32(&mut body, self.partitions.len() as u32);
         for p in &self.partitions {
+            codec::put_str(&mut body, &p.tenant);
             codec::put_u64(&mut body, p.dim as u64);
             codec::put_u64(&mut body, p.next_id);
             codec::put_u32(&mut body, p.entries.len() as u32);
@@ -45,6 +48,7 @@ impl Snapshot {
                 codec::put_u64(&mut body, e.id);
                 codec::put_u64(&mut body, e.expires_wall_ms);
                 codec::put_u64(&mut body, e.entry.cluster);
+                codec::put_u64(&mut body, e.entry.latency_ms.to_bits());
                 codec::put_str(&mut body, &e.entry.question);
                 codec::put_str(&mut body, &e.entry.response);
                 codec::put_f32s(&mut body, &e.embedding);
@@ -86,17 +90,19 @@ impl Snapshot {
         let n_parts = r.list_len(13)?;
         let mut partitions = Vec::with_capacity(n_parts);
         for _ in 0..n_parts {
+            let tenant = r.str()?;
             let dim = r.u64()? as usize;
             if dim == 0 {
                 return Err(DecodeError("snapshot partition dim 0".into()));
             }
             let next_id = r.u64()?;
-            let n_entries = r.list_len(28)?;
+            let n_entries = r.list_len(36)?;
             let mut entries = Vec::with_capacity(n_entries);
             for _ in 0..n_entries {
                 let id = r.u64()?;
                 let expires_wall_ms = r.u64()?;
                 let cluster = r.u64()?;
+                let latency_ms = f64::from_bits(r.u64()?);
                 let question = r.str()?;
                 let response = r.str()?;
                 let embedding = r.f32s()?;
@@ -109,7 +115,7 @@ impl Snapshot {
                 entries.push(EntryDump {
                     id,
                     expires_wall_ms,
-                    entry: CachedEntry { question, response, cluster },
+                    entry: CachedEntry { question, response, cluster, latency_ms },
                     embedding,
                 });
             }
@@ -121,7 +127,7 @@ impl Snapshot {
                 }
                 other => return Err(DecodeError(format!("bad graph flag {other}"))),
             };
-            partitions.push(PartitionDump { dim, next_id, entries, graph });
+            partitions.push(PartitionDump { tenant, dim, next_id, entries, graph });
         }
         if !r.is_empty() {
             return Err(DecodeError("trailing bytes in snapshot".into()));
@@ -183,6 +189,7 @@ mod tests {
             wall_ms: 1_700_000_000_000,
             partitions: vec![
                 PartitionDump {
+                    tenant: "default".into(),
                     dim: 3,
                     next_id: 11,
                     entries: vec![
@@ -193,6 +200,7 @@ mod tests {
                                 question: "what is the capital of france".into(),
                                 response: "Paris".into(),
                                 cluster: 2,
+                                latency_ms: 731.25,
                             },
                             embedding: vec![0.6, 0.8, 0.0],
                         },
@@ -203,13 +211,20 @@ mod tests {
                                 question: "q2".into(),
                                 response: String::new(),
                                 cluster: 0,
+                                latency_ms: 0.0,
                             },
                             embedding: vec![-1.0, 0.0, 0.25],
                         },
                     ],
                     graph: Some(vec![1, 2, 3, 4, 5]),
                 },
-                PartitionDump { dim: 2, next_id: 0, entries: Vec::new(), graph: None },
+                PartitionDump {
+                    tenant: "bot-7".into(),
+                    dim: 2,
+                    next_id: 0,
+                    entries: Vec::new(),
+                    graph: None,
+                },
             ],
         }
     }
@@ -223,11 +238,14 @@ mod tests {
         assert_eq!(back.wall_ms, 1_700_000_000_000);
         assert_eq!(back.partitions.len(), 2);
         let p = &back.partitions[0];
+        assert_eq!(p.tenant, "default");
         assert_eq!((p.dim, p.next_id), (3, 11));
         assert_eq!(p.entries.len(), 2);
         assert_eq!(p.entries[0].entry.response, "Paris");
+        assert_eq!(p.entries[0].entry.latency_ms, 731.25, "latency bits roundtrip exactly");
         assert_eq!(p.entries[1].embedding, vec![-1.0, 0.0, 0.25]);
         assert_eq!(p.graph.as_deref(), Some(&[1u8, 2, 3, 4, 5][..]));
+        assert_eq!(back.partitions[1].tenant, "bot-7");
         assert!(back.partitions[1].graph.is_none());
         assert_eq!(back.entry_count(), 2);
     }

@@ -1,7 +1,10 @@
 //! Append-only write-ahead log: checksummed, length-prefixed records of
 //! every cache mutation, stored in numbered segment files.
 //!
-//! Segment layout: an 8-byte magic (`SCWAL001`) followed by records of
+//! Segment layout: an 8-byte magic (`SCWAL002`; v2 added the tenant
+//! namespace and latency cost to each record, plus the `Evict` op — a
+//! v1 log from an older build fails the magic check and recovery starts
+//! cold rather than mis-decoding) followed by records of
 //! the form `[u32 payload_len][u32 crc32(payload)][payload]`. A crash can
 //! tear the tail of the newest segment mid-record; the reader treats any
 //! short, oversized, or checksum-failing record as end-of-log and returns
@@ -20,7 +23,7 @@ use crate::cache::CachedEntry;
 use super::codec::{self, DecodeResult, Reader};
 
 /// Segment file header.
-pub const WAL_MAGIC: &[u8; 8] = b"SCWAL001";
+pub const WAL_MAGIC: &[u8; 8] = b"SCWAL002";
 
 /// Ceiling on a single record's payload (a flipped length byte must not
 /// trigger a huge allocation; real records are a few KB).
@@ -59,28 +62,43 @@ impl WalSync {
 #[derive(Debug, Clone, PartialEq)]
 pub enum WalOp {
     Insert {
+        tenant: String,
         dim: u32,
         id: u64,
         /// Absolute wall-clock expiry in ms (`u64::MAX` = immortal).
         expires_wall_ms: u64,
         cluster: u64,
+        /// Upstream latency this entry saves per hit (the cost-aware
+        /// eviction signal); stored as IEEE-754 bits.
+        latency_ms: f64,
         question: String,
         response: String,
         embedding: Vec<f32>,
     },
     Remove {
+        tenant: String,
         dim: u32,
         id: u64,
     },
     Clear,
+    /// A capacity/byte-budget eviction. Replayed as a removal so a warm
+    /// restart does not resurrect evicted entries from earlier Insert
+    /// records in the same log.
+    Evict {
+        tenant: String,
+        dim: u32,
+        id: u64,
+    },
 }
 
 const OP_INSERT: u8 = 1;
 const OP_REMOVE: u8 = 2;
 const OP_CLEAR: u8 = 3;
+const OP_EVICT: u8 = 4;
 
 impl WalOp {
     pub fn insert(
+        tenant: &str,
         dim: usize,
         id: u64,
         embedding: &[f32],
@@ -88,10 +106,12 @@ impl WalOp {
         expires_wall_ms: u64,
     ) -> WalOp {
         WalOp::Insert {
+            tenant: tenant.to_string(),
             dim: dim as u32,
             id,
             expires_wall_ms,
             cluster: entry.cluster,
+            latency_ms: entry.latency_ms,
             question: entry.question.clone(),
             response: entry.response.clone(),
             embedding: embedding.to_vec(),
@@ -100,38 +120,60 @@ impl WalOp {
 
     fn encode_payload(&self, buf: &mut Vec<u8>) {
         match self {
-            WalOp::Insert { dim, id, expires_wall_ms, cluster, question, response, embedding } => {
+            WalOp::Insert {
+                tenant,
+                dim,
+                id,
+                expires_wall_ms,
+                cluster,
+                latency_ms,
+                question,
+                response,
+                embedding,
+            } => {
                 codec::put_u8(buf, OP_INSERT);
+                codec::put_str(buf, tenant);
                 codec::put_u32(buf, *dim);
                 codec::put_u64(buf, *id);
                 codec::put_u64(buf, *expires_wall_ms);
                 codec::put_u64(buf, *cluster);
+                codec::put_u64(buf, latency_ms.to_bits());
                 codec::put_str(buf, question);
                 codec::put_str(buf, response);
                 codec::put_f32s(buf, embedding);
             }
-            WalOp::Remove { dim, id } => {
+            WalOp::Remove { tenant, dim, id } => {
                 codec::put_u8(buf, OP_REMOVE);
+                codec::put_str(buf, tenant);
                 codec::put_u32(buf, *dim);
                 codec::put_u64(buf, *id);
             }
             WalOp::Clear => codec::put_u8(buf, OP_CLEAR),
+            WalOp::Evict { tenant, dim, id } => {
+                codec::put_u8(buf, OP_EVICT);
+                codec::put_str(buf, tenant);
+                codec::put_u32(buf, *dim);
+                codec::put_u64(buf, *id);
+            }
         }
     }
 
     fn decode_payload(r: &mut Reader<'_>) -> DecodeResult<WalOp> {
         let op = match r.u8()? {
             OP_INSERT => WalOp::Insert {
+                tenant: r.str()?,
                 dim: r.u32()?,
                 id: r.u64()?,
                 expires_wall_ms: r.u64()?,
                 cluster: r.u64()?,
+                latency_ms: f64::from_bits(r.u64()?),
                 question: r.str()?,
                 response: r.str()?,
                 embedding: r.f32s()?,
             },
-            OP_REMOVE => WalOp::Remove { dim: r.u32()?, id: r.u64()? },
+            OP_REMOVE => WalOp::Remove { tenant: r.str()?, dim: r.u32()?, id: r.u64()? },
             OP_CLEAR => WalOp::Clear,
+            OP_EVICT => WalOp::Evict { tenant: r.str()?, dim: r.u32()?, id: r.u64()? },
             other => {
                 return Err(codec::DecodeError(format!("unknown wal op {other}")));
             }
@@ -292,25 +334,30 @@ mod tests {
     fn sample_ops() -> Vec<WalOp> {
         vec![
             WalOp::Insert {
+                tenant: "default".into(),
                 dim: 4,
                 id: 1,
                 expires_wall_ms: u64::MAX,
                 cluster: 7,
+                latency_ms: 812.5,
                 question: "how do i reset my password".into(),
                 response: "click forgot password".into(),
                 embedding: vec![0.1, -0.2, 0.3, 0.4],
             },
-            WalOp::Remove { dim: 4, id: 1 },
+            WalOp::Remove { tenant: "default".into(), dim: 4, id: 1 },
             WalOp::Clear,
             WalOp::Insert {
+                tenant: "bot-7".into(),
                 dim: 2,
                 id: 9,
                 expires_wall_ms: 123_456,
                 cluster: 0,
+                latency_ms: 0.0,
                 question: "q".into(),
                 response: String::new(),
                 embedding: vec![1.0, 0.0],
             },
+            WalOp::Evict { tenant: "bot-7".into(), dim: 2, id: 9 },
         ]
     }
 

@@ -6,11 +6,18 @@
 //! * **per-entry TTL** with both lazy expiry (on access) and an active
 //!   sweeper (`sweep_expired`, driven by the coordinator's housekeeping
 //!   thread — Redis' `activeExpireCycle` analogue);
-//! * **bounded memory with LRU eviction** (Redis `allkeys-lru`);
+//! * **bounded memory**: a legacy count capacity with lazy-LRU eviction
+//!   (Redis `allkeys-lru`), plus byte-accurate weight tracking — each
+//!   entry can carry a byte footprint and a latency cost, the store
+//!   keeps an exact byte ledger ([`KvStore::bytes`], mirrored into any
+//!   shared [`StoreConfig::ledgers`] counters), and a pluggable
+//!   [`crate::eviction::EvictionPolicy`] picks byte-budget victims via
+//!   [`KvStore::victim`] / [`KvStore::evict`] (the budget itself is
+//!   enforced by the cache layer, across partitions);
 //! * **read-mostly `RwLock` sharding** to keep lock contention off the
-//!   request path: when the store is unbounded (no LRU bookkeeping, the
-//!   serving default), concurrent `get`s on one shard take only the
-//!   shared lock and proceed in parallel; writers and LRU-tracked reads
+//!   request path: when the store is unbounded *and* untracked (no LRU
+//!   or frequency bookkeeping), concurrent `get`s on one shard take only
+//!   the shared lock and proceed in parallel; writers and tracked reads
 //!   take the exclusive lock;
 //! * hit/miss/expiry/eviction **stats** (Redis `INFO` analogue).
 //!
@@ -27,6 +34,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::sync::RwLock;
 
+use crate::eviction::EvictionPolicy;
 use shard::Shard;
 
 /// Store-wide statistics (monotonic counters).
@@ -56,24 +64,60 @@ pub struct StoreConfig {
     /// Number of shards (power of two recommended).
     pub shards: usize,
     /// Maximum number of live entries across all shards; 0 = unbounded.
+    /// Legacy count bound — byte budgets live at the cache layer.
     pub capacity: usize,
     /// Default TTL in milliseconds applied by [`KvStore::set`]; 0 = no expiry.
     pub default_ttl_ms: u64,
+    /// Maintain recency/frequency metadata on reads even when the store
+    /// is count-unbounded. Required for byte-budget eviction scoring;
+    /// costs the shared-lock read fast path.
+    pub track_access: bool,
+    /// External byte counters mirrored by the store's ledger — the cache
+    /// layer threads its global and per-tenant byte ledgers through here
+    /// so every weighted mutation (insert/overwrite/remove/expiry/evict)
+    /// updates them exactly once.
+    pub ledgers: Vec<Arc<AtomicU64>>,
 }
 
 impl Default for StoreConfig {
     fn default() -> Self {
-        Self { shards: 16, capacity: 0, default_ttl_ms: 0 }
+        Self {
+            shards: 16,
+            capacity: 0,
+            default_ttl_ms: 0,
+            track_access: false,
+            ledgers: Vec::new(),
+        }
     }
 }
 
-/// Sharded TTL+LRU key-value store.
+/// A byte-budget eviction candidate ([`KvStore::victim`]).
+#[derive(Debug, Clone)]
+pub struct StoreVictim {
+    pub key: String,
+    /// Policy score; lower = evict first (expired residents are
+    /// negative infinity).
+    pub score: f64,
+    /// Last-access stamp (tie-break: colder loses).
+    pub seq: u64,
+    /// Footprint the eviction would free.
+    pub bytes: u64,
+}
+
+/// Sharded TTL+LRU key-value store with byte-accurate weight tracking.
 pub struct KvStore<V> {
     shards: Vec<RwLock<Shard<V>>>,
     stats: StoreStats,
     clock: Arc<dyn Clock>,
     per_shard_capacity: usize,
     default_ttl_ms: u64,
+    track_access: bool,
+    /// Exact bytes resident in this store (weighted entries only).
+    bytes: AtomicU64,
+    /// Store-wide access stamp source: one counter across shards, so
+    /// recency comparisons in the victim scan are meaningful globally.
+    seq: AtomicU64,
+    ledgers: Vec<Arc<AtomicU64>>,
 }
 
 impl<V> KvStore<V> {
@@ -93,12 +137,45 @@ impl<V> KvStore<V> {
             clock,
             per_shard_capacity,
             default_ttl_ms: cfg.default_ttl_ms,
+            track_access: cfg.track_access,
+            bytes: AtomicU64::new(0),
+            seq: AtomicU64::new(0),
+            ledgers: cfg.ledgers,
         }
     }
 
     fn shard_for(&self, key: &str) -> &RwLock<Shard<V>> {
         let h = crate::tokenizer::fnv1a64(key.as_bytes());
         &self.shards[(h % self.shards.len() as u64) as usize]
+    }
+
+    fn next_seq(&self) -> u64 {
+        self.seq.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    fn charge(&self, added: u64, freed: u64) {
+        if added == freed {
+            return;
+        }
+        if added > freed {
+            let n = added - freed;
+            self.bytes.fetch_add(n, Ordering::Relaxed);
+            for l in &self.ledgers {
+                l.fetch_add(n, Ordering::Relaxed);
+            }
+        } else {
+            let n = freed - added;
+            self.bytes.fetch_sub(n, Ordering::Relaxed);
+            for l in &self.ledgers {
+                l.fetch_sub(n, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Bytes currently resident (sum of weighted entries' footprints,
+    /// including expired-but-not-yet-reclaimed ones).
+    pub fn bytes(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
     }
 
     /// Insert with the default TTL.
@@ -108,12 +185,38 @@ impl<V> KvStore<V> {
 
     /// Insert with an explicit TTL (ms); 0 = never expires.
     pub fn set_ttl(&self, key: &str, value: V, ttl_ms: u64) {
+        self.set_ttl_weighted(key, value, ttl_ms, 0, 0.0);
+    }
+
+    /// Insert with an explicit TTL, byte footprint, and latency cost.
+    /// The footprint is charged to the store ledger (and any shared
+    /// ledgers) immediately; count-capacity evictions triggered by the
+    /// insert are returned as keys so the caller can reclaim secondary
+    /// structures keyed on the same entries.
+    pub fn set_ttl_weighted(
+        &self,
+        key: &str,
+        value: V,
+        ttl_ms: u64,
+        bytes: u64,
+        cost_ms: f64,
+    ) -> Vec<String> {
         let now = self.clock.now_ms();
         let expires = if ttl_ms == 0 { u64::MAX } else { now + ttl_ms };
-        let mut shard = self.shard_for(key).write().unwrap();
-        let evicted = shard.insert(key.to_string(), value, expires, self.per_shard_capacity);
+        let seq = self.next_seq();
+        let (evicted, freed) = self.shard_for(key).write().unwrap().insert(
+            key.to_string(),
+            value,
+            expires,
+            self.per_shard_capacity,
+            seq,
+            bytes,
+            cost_ms,
+        );
         self.stats.inserts.fetch_add(1, Ordering::Relaxed);
-        self.stats.evicted.fetch_add(evicted, Ordering::Relaxed);
+        self.stats.evicted.fetch_add(evicted.len() as u64, Ordering::Relaxed);
+        self.charge(bytes, freed);
+        evicted
     }
 }
 
@@ -121,15 +224,16 @@ impl<V: Clone> KvStore<V> {
     /// Get a clone of the live value; lazily expires dead entries.
     ///
     /// Read-mostly fast path: when the store is unbounded (capacity 0)
-    /// there is no LRU recency to maintain, so a hit only takes the
-    /// shard's *shared* lock — concurrent readers of one shard proceed in
-    /// parallel. The exclusive lock is taken only to reclaim an entry
-    /// that was observed expired (idempotent under races) or, in the
-    /// bounded configuration, to bump LRU recency.
+    /// and not access-tracked there is no recency or frequency state to
+    /// maintain, so a hit only takes the shard's *shared* lock —
+    /// concurrent readers of one shard proceed in parallel. The
+    /// exclusive lock is taken only to reclaim an entry that was
+    /// observed expired (idempotent under races) or, in the bounded /
+    /// tracked configurations, to bump recency and frequency.
     pub fn get(&self, key: &str) -> Option<V> {
         let now = self.clock.now_ms();
         let lock = self.shard_for(key);
-        if self.per_shard_capacity == 0 {
+        if self.per_shard_capacity == 0 && !self.track_access {
             let shard = lock.read().unwrap();
             match shard.peek(key, now) {
                 shard::Lookup::Hit(v) => {
@@ -146,28 +250,36 @@ impl<V: Clone> KvStore<V> {
             drop(shard);
             // Upgrade to reclaim the expired entry; another thread may have
             // raced us (re-inserted or already reclaimed), so re-check.
-            if lock.write().unwrap().remove_expired(key, now) {
+            if let Some(freed) = lock.write().unwrap().remove_expired(key, now) {
                 self.stats.expired.fetch_add(1, Ordering::Relaxed);
+                self.charge(0, freed);
             }
             self.stats.misses.fetch_add(1, Ordering::Relaxed);
             return None;
         }
-        let mut shard = lock.write().unwrap();
-        match shard.get(key, now) {
-            shard::Lookup::Hit(v) => {
-                self.stats.hits.fetch_add(1, Ordering::Relaxed);
-                Some(v.clone())
-            }
-            shard::Lookup::Expired => {
-                self.stats.expired.fetch_add(1, Ordering::Relaxed);
-                self.stats.misses.fetch_add(1, Ordering::Relaxed);
-                None
-            }
-            shard::Lookup::Miss => {
-                self.stats.misses.fetch_add(1, Ordering::Relaxed);
-                None
-            }
-        }
+        let seq = self.next_seq();
+        let (out, freed) = {
+            let mut shard = lock.write().unwrap();
+            let (lookup, freed) = shard.get(key, now, seq);
+            let out = match lookup {
+                shard::Lookup::Hit(v) => {
+                    self.stats.hits.fetch_add(1, Ordering::Relaxed);
+                    Some(v.clone())
+                }
+                shard::Lookup::Expired => {
+                    self.stats.expired.fetch_add(1, Ordering::Relaxed);
+                    self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                    None
+                }
+                shard::Lookup::Miss => {
+                    self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                    None
+                }
+            };
+            (out, freed)
+        };
+        self.charge(0, freed);
+        out
     }
 }
 
@@ -175,7 +287,43 @@ impl<V> KvStore<V> {
     /// Remove a key; true if it was present and live.
     pub fn remove(&self, key: &str) -> bool {
         let now = self.clock.now_ms();
-        self.shard_for(key).write().unwrap().remove(key, now)
+        let (was_live, freed) = self.shard_for(key).write().unwrap().remove(key, now);
+        self.charge(0, freed);
+        was_live
+    }
+
+    /// Byte-budget eviction: remove `key` unconditionally, releasing its
+    /// footprint. Returns the freed bytes if the key was resident.
+    pub fn evict(&self, key: &str) -> Option<u64> {
+        let freed = self.shard_for(key).write().unwrap().evict(key)?;
+        self.stats.evicted.fetch_add(1, Ordering::Relaxed);
+        self.charge(0, freed);
+        Some(freed)
+    }
+
+    /// The store-wide lowest-scoring entry under `policy` (the byte
+    /// budget's next victim): min over each shard's scan, tie-broken by
+    /// the colder access stamp. O(n) in resident entries.
+    pub fn victim(&self, policy: &dyn EvictionPolicy) -> Option<StoreVictim> {
+        let now = self.clock.now_ms();
+        let mut best: Option<StoreVictim> = None;
+        for shard in &self.shards {
+            if let Some(v) = shard.read().unwrap().victim(policy, now) {
+                let better = match &best {
+                    None => true,
+                    Some(b) => v.score < b.score || (v.score == b.score && v.seq < b.seq),
+                };
+                if better {
+                    best = Some(StoreVictim {
+                        key: v.key,
+                        score: v.score,
+                        seq: v.seq,
+                        bytes: v.bytes,
+                    });
+                }
+            }
+        }
+        best
     }
 
     /// Remaining TTL in ms (None = missing/expired; u64::MAX = immortal).
@@ -190,10 +338,14 @@ impl<V> KvStore<V> {
     pub fn sweep_expired(&self) -> usize {
         let now = self.clock.now_ms();
         let mut total = 0;
+        let mut freed = 0;
         for shard in &self.shards {
-            total += shard.write().unwrap().sweep(now);
+            let (n, f) = shard.write().unwrap().sweep(now);
+            total += n;
+            freed += f;
         }
         self.stats.expired.fetch_add(total as u64, Ordering::Relaxed);
+        self.charge(0, freed);
         total
     }
 
@@ -203,10 +355,12 @@ impl<V> KvStore<V> {
     pub fn sweep_expired_keys(&self) -> Vec<String> {
         let now = self.clock.now_ms();
         let mut keys = Vec::new();
+        let mut freed = 0;
         for shard in &self.shards {
-            shard.write().unwrap().sweep_keys(now, &mut keys);
+            freed += shard.write().unwrap().sweep_keys(now, &mut keys);
         }
         self.stats.expired.fetch_add(keys.len() as u64, Ordering::Relaxed);
+        self.charge(0, freed);
         keys
     }
 
@@ -256,7 +410,7 @@ mod tests {
 
     fn manual_store(capacity: usize, ttl: u64) -> (KvStore<String>, Arc<ManualClock>) {
         let clock = Arc::new(ManualClock::new(1_000));
-        let cfg = StoreConfig { shards: 4, capacity, default_ttl_ms: ttl };
+        let cfg = StoreConfig { shards: 4, capacity, default_ttl_ms: ttl, ..Default::default() };
         (KvStore::with_clock(cfg, clock.clone()), clock)
     }
 
@@ -349,7 +503,7 @@ mod tests {
     fn lru_eviction_prefers_cold_keys() {
         let clock = Arc::new(ManualClock::new(0));
         // Single shard so capacity semantics are exact.
-        let cfg = StoreConfig { shards: 1, capacity: 3, default_ttl_ms: 0 };
+        let cfg = StoreConfig { shards: 1, capacity: 3, default_ttl_ms: 0, ..Default::default() };
         let s: KvStore<String> = KvStore::with_clock(cfg, clock);
         s.set("a", "1".into());
         s.set("b", "2".into());
@@ -364,6 +518,69 @@ mod tests {
         assert!(s.get("d").is_some());
         assert_eq!(s.stats().evicted, 1);
         assert_eq!(s.len(), 3);
+    }
+
+    #[test]
+    fn byte_ledger_tracks_every_mutation() {
+        let shared = Arc::new(AtomicU64::new(0));
+        let clock = Arc::new(ManualClock::new(0));
+        let cfg = StoreConfig {
+            shards: 2,
+            track_access: true,
+            ledgers: vec![shared.clone()],
+            ..Default::default()
+        };
+        let s: KvStore<String> = KvStore::with_clock(cfg, clock.clone());
+        s.set_ttl_weighted("a", "v".into(), 0, 100, 1.0);
+        s.set_ttl_weighted("b", "v".into(), 50, 200, 1.0);
+        assert_eq!(s.bytes(), 300);
+        assert_eq!(shared.load(Ordering::Relaxed), 300, "shared ledger mirrors the store");
+        // Overwrite releases the old footprint.
+        s.set_ttl_weighted("a", "v2".into(), 0, 150, 1.0);
+        assert_eq!(s.bytes(), 350);
+        // Expiry (via sweep) releases bytes.
+        clock.advance(100);
+        assert_eq!(s.sweep_expired(), 1);
+        assert_eq!(s.bytes(), 150);
+        // Removal releases bytes.
+        assert!(s.remove("a"));
+        assert_eq!(s.bytes(), 0);
+        assert_eq!(shared.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn victim_and_evict_follow_the_policy() {
+        let clock = Arc::new(ManualClock::new(0));
+        let cfg = StoreConfig { shards: 2, track_access: true, ..Default::default() };
+        let s: KvStore<String> = KvStore::with_clock(cfg, clock);
+        s.set_ttl_weighted("cheap", "v".into(), 0, 100, 10.0);
+        s.set_ttl_weighted("pricey", "v".into(), 0, 100, 9_000.0);
+        // LRU: "cheap" was inserted first and never touched again.
+        let v = s.victim(&crate::eviction::Lru).unwrap();
+        assert_eq!(v.key, "cheap");
+        // Touch "cheap" so it is the recency winner; LRU flips…
+        assert!(s.get("cheap").is_some());
+        assert_eq!(s.victim(&crate::eviction::Lru).unwrap().key, "pricey");
+        // …but cost-aware still sacrifices the low-value entry.
+        assert_eq!(s.victim(&crate::eviction::CostAware).unwrap().key, "cheap");
+        assert_eq!(s.evict("cheap"), Some(100));
+        assert_eq!(s.evict("cheap"), None, "second eviction is a no-op");
+        assert_eq!(s.bytes(), 100);
+        assert_eq!(s.stats().evicted, 1);
+    }
+
+    #[test]
+    fn tracked_reads_bump_frequency_for_lfu() {
+        let clock = Arc::new(ManualClock::new(0));
+        let cfg = StoreConfig { shards: 1, track_access: true, ..Default::default() };
+        let s: KvStore<String> = KvStore::with_clock(cfg, clock);
+        s.set_ttl_weighted("rare", "v".into(), 0, 10, 0.0);
+        s.set_ttl_weighted("popular", "v".into(), 0, 10, 0.0);
+        for _ in 0..5 {
+            assert!(s.get("popular").is_some());
+        }
+        // "rare" was accessed once (the insert), "popular" six times.
+        assert_eq!(s.victim(&crate::eviction::Lfu).unwrap().key, "rare");
     }
 
     #[test]
@@ -389,12 +606,13 @@ mod tests {
 
     #[test]
     fn concurrent_readers_share_the_fast_path() {
-        // Unbounded store: parallel gets take only the shared lock; all
-        // of them must see consistent values and stats.
+        // Unbounded untracked store: parallel gets take only the shared
+        // lock; all of them must see consistent values and stats.
         let s: Arc<KvStore<String>> = Arc::new(KvStore::new(StoreConfig {
             shards: 2,
             capacity: 0,
             default_ttl_ms: 0,
+            ..Default::default()
         }));
         for i in 0..64 {
             s.set(&format!("k{i}"), format!("v{i}"));
@@ -423,6 +641,7 @@ mod tests {
             shards: 8,
             capacity: 0,
             default_ttl_ms: 0,
+            ..Default::default()
         }));
         let mut handles = Vec::new();
         for t in 0..8u64 {

@@ -1,15 +1,28 @@
-//! One lock's worth of the KV store: a hash map with TTL metadata and a
-//! lazy-LRU queue for eviction (the classic "stale pairs" trick: the queue
-//! may contain outdated (seq, key) pairs; eviction pops until it finds a
-//! pair whose seq still matches the entry).
+//! One lock's worth of the KV store: a hash map with TTL + weight
+//! metadata and a lazy-LRU queue for count-capacity eviction (the
+//! classic "stale pairs" trick: the queue may contain outdated
+//! (seq, key) pairs; eviction pops until it finds a pair whose seq still
+//! matches the entry).
+//!
+//! Access stamps (`access_seq`) are supplied by the owning [`super::KvStore`]
+//! from one store-wide counter, so recency is comparable *across*
+//! shards — the byte-budget victim scan relies on that.
 
 use std::collections::{HashMap, VecDeque};
+
+use crate::eviction::{EntryMeta, EvictionPolicy};
 
 pub(super) struct Entry<V> {
     value: V,
     expires_at_ms: u64,
     /// Last-access sequence number, compared against queue pairs.
     access_seq: u64,
+    /// Byte footprint charged for this entry (0 for unweighted inserts).
+    bytes: u64,
+    /// Accesses, counting the insert as the first.
+    access_count: u64,
+    /// Simulated upstream latency a hit on this entry saves, ms.
+    cost_ms: f64,
 }
 
 pub(super) enum Lookup<'a, V> {
@@ -18,53 +31,74 @@ pub(super) enum Lookup<'a, V> {
     Miss,
 }
 
+/// A byte-budget eviction candidate as seen by one shard's scan.
+pub(super) struct Victim {
+    pub key: String,
+    pub score: f64,
+    pub seq: u64,
+    pub bytes: u64,
+}
+
 pub(super) struct Shard<V> {
     map: HashMap<String, Entry<V>>,
     /// Lazy LRU queue of (access_seq, key); front = coldest candidate.
     lru: VecDeque<(u64, String)>,
-    next_seq: u64,
 }
 
 impl<V> Shard<V> {
     pub fn new() -> Self {
-        Self { map: HashMap::new(), lru: VecDeque::new(), next_seq: 0 }
+        Self { map: HashMap::new(), lru: VecDeque::new() }
     }
 
-    fn bump(&mut self, key: &str) -> u64 {
+    fn bump(&mut self, key: &str, seq: u64) {
         // Bound queue growth from repeated touches: compact when it is far
         // larger than the map (amortized O(1) per access). Runs *before*
-        // pushing the new pair — the caller is about to stamp the entry
-        // with `next_seq + 1`, so the fresh pair must survive compaction.
+        // pushing the new pair, so the fresh pair survives compaction.
         if self.lru.len() > 4 * self.map.len() + 15 {
             let map = &self.map;
             self.lru.retain(|(seq, k)| map.get(k).map(|e| e.access_seq == *seq).unwrap_or(false));
         }
-        self.next_seq += 1;
-        self.lru.push_back((self.next_seq, key.to_string()));
-        self.next_seq
+        self.lru.push_back((seq, key.to_string()));
     }
 
     /// Insert, evicting LRU entries if `capacity > 0` would be exceeded.
-    /// Returns the number of evictions performed.
-    pub fn insert(&mut self, key: String, value: V, expires_at_ms: u64, capacity: usize) -> u64 {
-        let seq = self.bump(&key);
-        let is_new = !self.map.contains_key(&key);
-        self.map.insert(key, Entry { value, expires_at_ms, access_seq: seq });
-        let mut evicted = 0;
+    /// Returns the count-evicted keys (so the caller can reclaim
+    /// secondary structures) and the bytes freed by the overwrite and/or
+    /// evictions.
+    pub fn insert(
+        &mut self,
+        key: String,
+        value: V,
+        expires_at_ms: u64,
+        capacity: usize,
+        seq: u64,
+        bytes: u64,
+        cost_ms: f64,
+    ) -> (Vec<String>, u64) {
+        self.bump(&key, seq);
+        let replaced = self.map.insert(
+            key,
+            Entry { value, expires_at_ms, access_seq: seq, bytes, access_count: 1, cost_ms },
+        );
+        let is_new = replaced.is_none();
+        let mut freed = replaced.map(|e| e.bytes).unwrap_or(0);
+        let mut evicted = Vec::new();
         if capacity > 0 && is_new {
             while self.map.len() > capacity {
                 if let Some((seq, k)) = self.lru.pop_front() {
                     let stale = self.map.get(&k).map(|e| e.access_seq != seq).unwrap_or(true);
                     if !stale {
-                        self.map.remove(&k);
-                        evicted += 1;
+                        if let Some(e) = self.map.remove(&k) {
+                            freed += e.bytes;
+                        }
+                        evicted.push(k);
                     }
                 } else {
                     break; // queue exhausted (shouldn't happen)
                 }
             }
         }
-        evicted
+        (evicted, freed)
     }
 
     /// Read-only lookup: no LRU bump, no lazy removal. Used by the
@@ -80,37 +114,78 @@ impl<V> Shard<V> {
     }
 
     /// Drop `key` only if it is present *and* expired (idempotent: safe
-    /// under read-then-write upgrade races). Returns whether it removed.
-    pub fn remove_expired(&mut self, key: &str, now_ms: u64) -> bool {
+    /// under read-then-write upgrade races). Returns the freed bytes if
+    /// it removed.
+    pub fn remove_expired(&mut self, key: &str, now_ms: u64) -> Option<u64> {
         match self.map.get(key) {
-            Some(e) if e.expires_at_ms <= now_ms => {
-                self.map.remove(key);
-                true
-            }
-            _ => false,
+            Some(e) if e.expires_at_ms <= now_ms => Some(self.map.remove(key).unwrap().bytes),
+            _ => None,
         }
     }
 
-    pub fn get(&mut self, key: &str, now_ms: u64) -> Lookup<'_, V> {
+    /// Lookup with recency/frequency bookkeeping; lazily removes an
+    /// expired entry (its freed bytes ride the second tuple slot).
+    pub fn get(&mut self, key: &str, now_ms: u64, seq: u64) -> (Lookup<'_, V>, u64) {
         let expired = match self.map.get(key) {
-            None => return Lookup::Miss,
+            None => return (Lookup::Miss, 0),
             Some(e) => e.expires_at_ms <= now_ms,
         };
         if expired {
-            self.map.remove(key);
-            return Lookup::Expired;
+            let freed = self.map.remove(key).map(|e| e.bytes).unwrap_or(0);
+            return (Lookup::Expired, freed);
         }
-        let seq = self.bump(key);
+        self.bump(key, seq);
         let e = self.map.get_mut(key).unwrap();
         e.access_seq = seq;
-        Lookup::Hit(&self.map.get(key).unwrap().value)
+        e.access_count += 1;
+        (Lookup::Hit(&self.map.get(key).unwrap().value), 0)
     }
 
-    pub fn remove(&mut self, key: &str, now_ms: u64) -> bool {
+    /// Remove a key outright. Returns (was live, bytes freed) — expired
+    /// residents free their bytes too.
+    pub fn remove(&mut self, key: &str, now_ms: u64) -> (bool, u64) {
         match self.map.remove(key) {
-            Some(e) => e.expires_at_ms > now_ms,
-            None => false,
+            Some(e) => (e.expires_at_ms > now_ms, e.bytes),
+            None => (false, 0),
         }
+    }
+
+    /// Unconditional removal for byte-budget eviction; returns the freed
+    /// bytes if the key was resident.
+    pub fn evict(&mut self, key: &str) -> Option<u64> {
+        self.map.remove(key).map(|e| e.bytes)
+    }
+
+    /// The lowest-scoring resident entry under `policy` (expired
+    /// residents score negative infinity, so dead weight reclaims
+    /// first). Ties break toward the colder access stamp.
+    pub fn victim(&self, policy: &dyn EvictionPolicy, now_ms: u64) -> Option<Victim> {
+        let mut best: Option<Victim> = None;
+        for (k, e) in &self.map {
+            let score = if e.expires_at_ms <= now_ms {
+                f64::NEG_INFINITY
+            } else {
+                policy.score(&EntryMeta {
+                    bytes: e.bytes,
+                    last_access_seq: e.access_seq,
+                    access_count: e.access_count,
+                    latency_saved_ms: e.cost_ms,
+                })
+            };
+            let better = match &best {
+                None => true,
+                Some(b) => score < b.score || (score == b.score && e.access_seq < b.seq),
+            };
+            if better {
+                best = Some(Victim {
+                    key: k.clone(),
+                    score,
+                    seq: e.access_seq,
+                    bytes: e.bytes,
+                });
+            }
+        }
+        best
     }
 
     pub fn ttl_remaining(&self, key: &str, now_ms: u64) -> Option<u64> {
@@ -124,25 +199,37 @@ impl<V> Shard<V> {
         }
     }
 
-    pub fn sweep(&mut self, now_ms: u64) -> usize {
+    /// Drop every expired entry; returns (count, bytes freed).
+    pub fn sweep(&mut self, now_ms: u64) -> (usize, u64) {
         let before = self.map.len();
-        self.map.retain(|_, e| e.expires_at_ms > now_ms);
-        before - self.map.len()
+        let mut freed = 0;
+        self.map.retain(|_, e| {
+            let live = e.expires_at_ms > now_ms;
+            if !live {
+                freed += e.bytes;
+            }
+            live
+        });
+        (before - self.map.len(), freed)
     }
 
     /// Like [`Shard::sweep`], but collects the removed keys so the caller
     /// can propagate the expiry to secondary structures (e.g. tombstone
-    /// the matching vector-index nodes).
-    pub fn sweep_keys(&mut self, now_ms: u64, out: &mut Vec<String>) {
+    /// the matching vector-index nodes). Returns the bytes freed.
+    pub fn sweep_keys(&mut self, now_ms: u64, out: &mut Vec<String>) -> u64 {
         let start = out.len();
         for (k, e) in &self.map {
             if e.expires_at_ms <= now_ms {
                 out.push(k.clone());
             }
         }
+        let mut freed = 0;
         for k in &out[start..] {
-            self.map.remove(k);
+            if let Some(e) = self.map.remove(k) {
+                freed += e.bytes;
+            }
         }
+        freed
     }
 
     pub fn live_len(&self, now_ms: u64) -> usize {
@@ -172,28 +259,34 @@ impl<V> Shard<V> {
 mod tests {
     use super::*;
 
+    fn put(s: &mut Shard<u32>, key: &str, v: u32, exp: u64, cap: usize, seq: u64) -> (Vec<String>, u64) {
+        s.insert(key.into(), v, exp, cap, seq, 0, 0.0)
+    }
+
     #[test]
     fn lazy_queue_compaction_keeps_correctness() {
         let mut s: Shard<u32> = Shard::new();
+        let mut seq = 0u64;
         // Hammer one key to bloat the queue, forcing compaction.
-        s.insert("a".into(), 0, u64::MAX, 2);
+        put(&mut s, "a", 0, u64::MAX, 2, { seq += 1; seq });
         for i in 0..100 {
-            match s.get("a", 0) {
-                Lookup::Hit(_) => {}
+            seq += 1;
+            match s.get("a", 0, seq) {
+                (Lookup::Hit(_), _) => {}
                 _ => panic!("a must stay live (iter {i})"),
             }
         }
         assert!(s.lru.len() <= 4 * s.map.len() + 16, "queue compacted");
         // LRU still works after compaction.
-        s.insert("b".into(), 1, u64::MAX, 2);
-        s.insert("c".into(), 2, u64::MAX, 2); // evicts coldest
+        put(&mut s, "b", 1, u64::MAX, 2, { seq += 1; seq });
+        put(&mut s, "c", 2, u64::MAX, 2, { seq += 1; seq }); // evicts coldest
         assert_eq!(s.map.len(), 2);
     }
 
     #[test]
     fn peek_is_read_only_and_remove_expired_is_idempotent() {
         let mut s: Shard<u32> = Shard::new();
-        s.insert("a".into(), 1, 10, 0);
+        s.insert("a".into(), 1, 10, 0, 1, 64, 0.0);
         let lru_before = s.lru.len();
         match s.peek("a", 5) {
             Lookup::Hit(v) => assert_eq!(*v, 1),
@@ -202,16 +295,44 @@ mod tests {
         assert!(matches!(s.peek("a", 10), Lookup::Expired));
         assert!(matches!(s.peek("b", 0), Lookup::Miss));
         assert_eq!(s.lru.len(), lru_before, "peek must not touch the LRU queue");
-        assert!(!s.remove_expired("a", 5), "live entry must survive");
-        assert!(s.remove_expired("a", 10));
-        assert!(!s.remove_expired("a", 10), "second reclaim is a no-op");
+        assert!(s.remove_expired("a", 5).is_none(), "live entry must survive");
+        assert_eq!(s.remove_expired("a", 10), Some(64), "reclaim reports freed bytes");
+        assert!(s.remove_expired("a", 10).is_none(), "second reclaim is a no-op");
     }
 
     #[test]
-    fn overwrite_does_not_evict() {
+    fn overwrite_does_not_evict_and_frees_old_bytes() {
         let mut s: Shard<u32> = Shard::new();
-        assert_eq!(s.insert("a".into(), 0, u64::MAX, 1), 0);
-        assert_eq!(s.insert("a".into(), 1, u64::MAX, 1), 0);
+        let (ev, freed) = s.insert("a".into(), 0, u64::MAX, 1, 1, 100, 0.0);
+        assert!(ev.is_empty());
+        assert_eq!(freed, 0);
+        let (ev, freed) = s.insert("a".into(), 1, u64::MAX, 1, 2, 150, 0.0);
+        assert!(ev.is_empty(), "overwrite must not trip the count cap");
+        assert_eq!(freed, 100, "the replaced entry's footprint is released");
         assert_eq!(s.map.len(), 1);
+    }
+
+    #[test]
+    fn count_eviction_reports_keys_and_bytes() {
+        let mut s: Shard<u32> = Shard::new();
+        s.insert("a".into(), 0, u64::MAX, 2, 1, 10, 0.0);
+        s.insert("b".into(), 1, u64::MAX, 2, 2, 20, 0.0);
+        let (ev, freed) = s.insert("c".into(), 2, u64::MAX, 2, 3, 30, 0.0);
+        assert_eq!(ev, vec!["a".to_string()], "coldest key evicted and reported");
+        assert_eq!(freed, 10);
+    }
+
+    #[test]
+    fn victim_scan_prefers_expired_then_policy_order() {
+        let mut s: Shard<u32> = Shard::new();
+        s.insert("cold".into(), 0, u64::MAX, 0, 1, 10, 5.0);
+        s.insert("hot".into(), 1, u64::MAX, 0, 2, 10, 5.0);
+        s.insert("dead".into(), 2, 50, 0, 3, 10, 5.0);
+        let v = s.victim(&crate::eviction::Lru, 100).unwrap();
+        assert_eq!(v.key, "dead", "expired resident must be reclaimed first");
+        s.evict("dead").unwrap();
+        let v = s.victim(&crate::eviction::Lru, 100).unwrap();
+        assert_eq!(v.key, "cold", "then the coldest live entry");
+        assert_eq!(v.bytes, 10);
     }
 }

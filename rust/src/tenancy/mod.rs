@@ -1,0 +1,210 @@
+//! Per-tenant namespaces, quotas, and metrics.
+//!
+//! Every query carries an optional `client_tag`; the cache maps it to a
+//! tenant namespace ([`normalize_tag`]: untagged traffic shares the
+//! `"default"` tenant). A tenant owns its own dimension-partitioned
+//! index/store set, so lookups structurally cannot cross tenant
+//! boundaries, and byte-budget pressure is *inserter-pays*: whichever
+//! tenant's insert pushed a budget (its own quota or the global
+//! `max_bytes`) over the line is the only tenant whose entries are
+//! evicted to bring it back. A hot tenant can therefore never evict a
+//! cold tenant's working set (see `tests/tenancy.rs`).
+//!
+//! Per-tenant configuration rides the `tenant.<name>.*` config keys
+//! (quota, similarity-threshold override); per-tenant serving counters
+//! are snapshotted into the `tenants` block of `/v1/metrics`.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::cache::Partition;
+use crate::json::{obj, Value};
+
+/// The namespace untagged requests share.
+pub const DEFAULT_TENANT: &str = "default";
+
+/// Map a request's `client_tag` to its tenant name: `None` and
+/// whitespace-only tags land on [`DEFAULT_TENANT`].
+pub fn normalize_tag(tag: Option<&str>) -> &str {
+    match tag {
+        Some(t) if !t.trim().is_empty() => t,
+        _ => DEFAULT_TENANT,
+    }
+}
+
+/// Per-tenant configuration overrides (the `[tenant.<name>]` config
+/// table). `None` = inherit the global setting.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TenantOverrides {
+    /// Byte quota for this tenant (`0` = unlimited, like the global
+    /// default `tenant_quota_bytes`).
+    pub quota_bytes: Option<u64>,
+    /// Similarity-threshold override for this tenant's lookups (a
+    /// per-request `threshold` still wins).
+    pub similarity_threshold: Option<f32>,
+}
+
+/// One tenant's live state: its partition set, byte ledger, resolved
+/// quota/threshold, and serving counters.
+pub struct TenantState {
+    name: String,
+    /// This tenant's dimension-partitioned caches (same shape as the
+    /// pre-tenancy global map, one per tenant).
+    pub(crate) partitions: RwLock<HashMap<usize, Arc<Partition>>>,
+    /// Bytes resident for this tenant (shared with its partitions'
+    /// stores, which charge it on every insert/remove/expiry/evict).
+    pub(crate) bytes: Arc<AtomicU64>,
+    /// Resolved byte quota (0 = unlimited).
+    pub(crate) quota_bytes: u64,
+    /// Resolved similarity-threshold override.
+    pub(crate) threshold: Option<f32>,
+    pub(crate) hits: AtomicU64,
+    pub(crate) misses: AtomicU64,
+    pub(crate) inserts: AtomicU64,
+    pub(crate) evictions: AtomicU64,
+    pub(crate) quota_rejections: AtomicU64,
+}
+
+impl TenantState {
+    pub(crate) fn new(name: &str, quota_bytes: u64, threshold: Option<f32>) -> Self {
+        Self {
+            name: name.to_string(),
+            partitions: RwLock::new(HashMap::new()),
+            bytes: Arc::new(AtomicU64::new(0)),
+            quota_bytes,
+            threshold,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            inserts: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            quota_rejections: AtomicU64::new(0),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Bytes currently charged to this tenant.
+    pub fn bytes(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+
+    /// This tenant's byte quota (0 = unlimited).
+    pub fn quota_bytes(&self) -> u64 {
+        self.quota_bytes
+    }
+
+    /// The tenant's similarity-threshold override, if configured.
+    pub fn threshold(&self) -> Option<f32> {
+        self.threshold
+    }
+
+    /// The ledger partitions charge this tenant's bytes to.
+    pub(crate) fn bytes_ledger(&self) -> Arc<AtomicU64> {
+        self.bytes.clone()
+    }
+
+    /// Zero the byte ledger (admin flush drops every partition at once,
+    /// bypassing the per-mutation charge path).
+    pub(crate) fn reset_bytes(&self) {
+        self.bytes.store(0, Ordering::Relaxed);
+    }
+
+    pub(crate) fn record_hit(&self) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn record_miss(&self) {
+        self.misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn record_insert(&self) {
+        self.inserts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn record_evictions(&self, n: u64) {
+        if n > 0 {
+            self.evictions.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    pub(crate) fn record_quota_rejection(&self) {
+        self.quota_rejections.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Point-in-time counters for the `/v1/metrics` tenants block.
+    pub fn stats(&self) -> TenantStats {
+        let entries =
+            self.partitions.read().unwrap().values().map(|p| p.len()).sum();
+        TenantStats {
+            name: self.name.clone(),
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            inserts: self.inserts.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            quota_rejections: self.quota_rejections.load(Ordering::Relaxed),
+            bytes: self.bytes(),
+            quota_bytes: self.quota_bytes,
+            entries,
+        }
+    }
+}
+
+/// Point-in-time snapshot of one tenant's serving counters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantStats {
+    pub name: String,
+    pub hits: u64,
+    pub misses: u64,
+    pub inserts: u64,
+    pub evictions: u64,
+    pub quota_rejections: u64,
+    pub bytes: u64,
+    pub quota_bytes: u64,
+    pub entries: usize,
+}
+
+impl TenantStats {
+    pub fn to_json(&self) -> Value {
+        obj([
+            ("hits", self.hits.into()),
+            ("misses", self.misses.into()),
+            ("inserts", self.inserts.into()),
+            ("evictions", self.evictions.into()),
+            ("quota_rejections", self.quota_rejections.into()),
+            ("bytes", self.bytes.into()),
+            ("quota_bytes", self.quota_bytes.into()),
+            ("entries", self.entries.into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tag_normalization_defaults_blank_and_missing() {
+        assert_eq!(normalize_tag(None), DEFAULT_TENANT);
+        assert_eq!(normalize_tag(Some("")), DEFAULT_TENANT);
+        assert_eq!(normalize_tag(Some("   ")), DEFAULT_TENANT);
+        assert_eq!(normalize_tag(Some("bot-7")), "bot-7");
+    }
+
+    #[test]
+    fn stats_snapshot_reflects_counters() {
+        let t = TenantState::new("alice", 4096, Some(0.9));
+        t.hits.fetch_add(3, Ordering::Relaxed);
+        t.quota_rejections.fetch_add(1, Ordering::Relaxed);
+        t.bytes.fetch_add(512, Ordering::Relaxed);
+        let s = t.stats();
+        assert_eq!(s.name, "alice");
+        assert_eq!((s.hits, s.quota_rejections, s.bytes, s.quota_bytes), (3, 1, 512, 4096));
+        assert_eq!(t.threshold(), Some(0.9));
+        let j = s.to_json();
+        assert_eq!(j.get("hits").as_u64(), Some(3));
+        assert_eq!(j.get("bytes").as_u64(), Some(512));
+    }
+}

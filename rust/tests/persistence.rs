@@ -57,7 +57,7 @@ fn axis(i: usize, dim: usize) -> Vec<f32> {
 }
 
 fn entry(q: &str, r: &str) -> CachedEntry {
-    CachedEntry { question: q.to_string(), response: r.to_string(), cluster: 0 }
+    CachedEntry { question: q.to_string(), response: r.to_string(), cluster: 0, latency_ms: 0.0 }
 }
 
 /// Canonical comparable image of the cache's live state: per partition

@@ -5,7 +5,8 @@
 
 use std::sync::Arc;
 
-use semcache::cache::{CacheConfig, SemanticCache};
+use semcache::cache::{CacheConfig, CachedEntry, SemanticCache};
+use semcache::eviction::entry_footprint;
 use semcache::index::{FlatIndex, HnswConfig, HnswIndex, VectorIndex};
 use semcache::store::{KvStore, ManualClock, StoreConfig};
 use semcache::testutil::{prop_check, PropConfig};
@@ -23,7 +24,7 @@ fn prop_store_matches_model() {
     prop_check(cfg(64), "store-vs-model", |g| {
         let clock = Arc::new(ManualClock::new(0));
         let store: KvStore<u64> = KvStore::with_clock(
-            StoreConfig { shards: 4, capacity: 0, default_ttl_ms: 0 },
+            StoreConfig { shards: 4, capacity: 0, default_ttl_ms: 0, ..Default::default() },
             clock.clone(),
         );
         // model: key -> (value, expires_at)
@@ -97,6 +98,7 @@ fn prop_store_capacity_respected() {
             shards: 1,
             capacity: cap,
             default_ttl_ms: 0,
+            ..Default::default()
         });
         let n = g.usize_in(1, 40);
         for i in 0..n {
@@ -203,6 +205,132 @@ fn prop_cache_threshold_monotone() {
         }
         Ok(())
     });
+}
+
+/// Byte accounting is exact for every eviction policy: after a random
+/// trace of tenant-scoped inserts (with TTLs and budget evictions),
+/// removes, clock advances, and lookups, the global ledger, every
+/// tenant ledger, and every partition's ledger must equal the footprint
+/// sum recomputed from scratch over the entries actually resident —
+/// and no budget is ever exceeded at a rest point.
+#[test]
+fn prop_byte_accounting_exact_for_every_policy() {
+    for policy in ["lru", "lfu", "cost"] {
+        prop_check(cfg(24), &format!("byte-accounting-{policy}"), |g| {
+            let clock = Arc::new(ManualClock::new(0));
+            let one = entry_footprint(8, 8, 8);
+            let max_bytes = if g.bool() { g.usize_in(4, 12) as u64 * one } else { 0 };
+            let quota = if g.bool() { g.usize_in(2, 6) as u64 * one } else { 0 };
+            let cache = SemanticCache::with_clock(
+                CacheConfig {
+                    max_bytes,
+                    eviction_policy: policy.to_string(),
+                    tenant_quota_bytes: quota,
+                    ..Default::default()
+                },
+                clock.clone(),
+            );
+            let tenants = ["default", "alice", "bob"];
+            let dims = [8usize, 16];
+            let mut inserted: Vec<(String, usize, u64)> = Vec::new();
+            let ops = g.usize_in(1, 60);
+            for i in 0..ops {
+                match g.usize_below(6) {
+                    0 | 1 | 2 => {
+                        let tenant = *g.choose(&tenants);
+                        let dim = *g.choose(&dims);
+                        let entry = CachedEntry {
+                            question: "q".repeat(g.usize_below(24)),
+                            response: "r".repeat(g.usize_below(24)),
+                            cluster: 0,
+                            latency_ms: g.f32_in(0.0, 5_000.0) as f64,
+                        };
+                        let emb = l2_normalized(&g.vec_f32(dim, -1.0, 1.0));
+                        let ttl = [0u64, 0, 20][g.usize_below(3)];
+                        // An Err here is a typed quota rejection of an
+                        // oversized entry — nothing was admitted.
+                        if let Ok(id) =
+                            cache.try_insert_entry_ttl_for(tenant, &emb, entry, Some(ttl))
+                        {
+                            inserted.push((tenant.to_string(), dim, id));
+                        }
+                    }
+                    3 => {
+                        if !inserted.is_empty() {
+                            let (t, dim, id) = inserted.swap_remove(g.usize_below(inserted.len()));
+                            cache.remove_entry_for(&t, dim, id);
+                        }
+                    }
+                    4 => clock.advance(g.usize_in(1, 30) as u64),
+                    _ => {
+                        let tenant = *g.choose(&tenants);
+                        let dim = *g.choose(&dims);
+                        let q = l2_normalized(&g.vec_f32(dim, -1.0, 1.0));
+                        let _ = cache.lookup_with_opts_for(tenant, &q, 0.5, None);
+                    }
+                }
+                if max_bytes > 0 && cache.bytes() > max_bytes {
+                    return Err(format!(
+                        "global bytes {} > budget {max_bytes} at rest (op {i}, {policy})",
+                        cache.bytes()
+                    ));
+                }
+            }
+            // Sweep expired residents (they legitimately hold bytes until
+            // swept), then audit every ledger against a from-scratch
+            // recompute of the resident footprints.
+            cache.housekeep();
+            let mut global = 0u64;
+            let mut per_tenant: std::collections::HashMap<String, u64> =
+                std::collections::HashMap::new();
+            for p in cache.partitions() {
+                let d = p.dump();
+                let part_bytes: u64 = d
+                    .entries
+                    .iter()
+                    .map(|e| {
+                        entry_footprint(
+                            e.entry.question.len(),
+                            e.entry.response.len(),
+                            e.embedding.len(),
+                        )
+                    })
+                    .sum();
+                if p.bytes() != part_bytes {
+                    return Err(format!(
+                        "partition ({}, {}) ledger {} != recomputed {part_bytes} ({policy})",
+                        d.tenant,
+                        d.dim,
+                        p.bytes()
+                    ));
+                }
+                global += part_bytes;
+                *per_tenant.entry(d.tenant.clone()).or_default() += part_bytes;
+            }
+            if cache.bytes() != global {
+                return Err(format!(
+                    "global ledger {} != recomputed {global} ({policy})",
+                    cache.bytes()
+                ));
+            }
+            for t in cache.tenant_stats() {
+                let want = per_tenant.get(&t.name).copied().unwrap_or(0);
+                if t.bytes != want {
+                    return Err(format!(
+                        "tenant '{}' ledger {} != recomputed {want} ({policy})",
+                        t.name, t.bytes
+                    ));
+                }
+                if t.quota_bytes > 0 && t.bytes > t.quota_bytes {
+                    return Err(format!(
+                        "tenant '{}' bytes {} > quota {} ({policy})",
+                        t.name, t.bytes, t.quota_bytes
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
 }
 
 /// Tokenizer invariants under arbitrary input bytes.

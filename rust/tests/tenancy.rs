@@ -1,0 +1,212 @@
+//! Adversarial tenant-isolation suite against the real `semcached`
+//! daemon (ISSUE 7 satellite): a hot tenant flooding the cache past the
+//! global byte budget must never evict a cold tenant's working set, the
+//! budget must hold at every rest point, and the per-tenant metric
+//! blocks on `/v1/metrics` must tell the story.
+//!
+//! Everything here runs over HTTP — the point is that the isolation
+//! guarantees survive the full wire path (parse → batcher → serve →
+//! tenant-scoped cache), not just the library API.
+
+#![cfg(unix)]
+
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use semcache::api::QueryRequest;
+use semcache::coordinator::http_request;
+use semcache::json::Value;
+
+/// Global byte budget the daemon serves under. Roomy enough for the
+/// cold tenant's 4 entries (~3.5 KiB each at the default 384-d encoder
+/// geometry), far too small for the hot tenant's 40-entry flood.
+const MAX_BYTES: u64 = 64 * 1024;
+const COLD_QUOTA: u64 = 1024 * 1024;
+
+/// Kills the daemon (SIGKILL) when dropped so a failing assertion never
+/// leaks a background `semcached` into the test runner.
+struct Daemon(Child);
+
+impl Drop for Daemon {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("semcache-tenancy-{tag}-{}", std::process::id()));
+    p
+}
+
+fn spawn_daemon(port_file: &Path) -> Daemon {
+    let child = Command::new(env!("CARGO_BIN_EXE_semcached"))
+        .args([
+            "serve",
+            "--port",
+            "0",
+            "--port-file",
+            port_file.to_str().unwrap(),
+            "--max_bytes",
+            &MAX_BYTES.to_string(),
+            "--eviction_policy",
+            "lru",
+            // Exercises the per-tenant config path end-to-end; generous
+            // enough to never fire (the global budget is the pressure
+            // source in this suite).
+            "--tenant.cold.quota_bytes",
+            &COLD_QUOTA.to_string(),
+        ])
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawning semcached");
+    Daemon(child)
+}
+
+/// Ready-signal handshake: wait for the atomically-written port file,
+/// then poll /v1/metrics until the daemon answers.
+fn wait_ready(port_file: &Path, daemon: &mut Daemon) -> String {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let addr = loop {
+        if let Ok(s) = std::fs::read_to_string(port_file) {
+            if !s.is_empty() {
+                break s;
+            }
+        }
+        if let Ok(Some(status)) = daemon.0.try_wait() {
+            panic!("semcached exited before becoming ready: {status}");
+        }
+        assert!(Instant::now() < deadline, "semcached never wrote its port file");
+        std::thread::sleep(Duration::from_millis(50));
+    };
+    loop {
+        if http_request(&addr, "GET", "/v1/metrics", None).is_ok() {
+            break;
+        }
+        assert!(Instant::now() < deadline, "semcached never became healthy at {addr}");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    addr
+}
+
+fn post(addr: &str, req: &QueryRequest) -> (u16, Value) {
+    http_request(addr, "POST", "/v1/query", Some(&req.to_json().to_string()))
+        .expect("query round-trip")
+}
+
+fn metrics(addr: &str) -> Value {
+    let (status, body) = http_request(addr, "GET", "/v1/metrics", None).unwrap();
+    assert_eq!(status, 200);
+    body
+}
+
+fn tenant_counter(m: &Value, tenant: &str, key: &str) -> u64 {
+    m.get("tenants")
+        .get(tenant)
+        .get(key)
+        .as_u64()
+        .unwrap_or_else(|| panic!("metrics missing tenants.{tenant}.{key}: {m}"))
+}
+
+#[test]
+fn hot_tenant_flood_cannot_evict_cold_tenant_over_http() {
+    let port_file = tmpdir("flood").with_extension("port");
+    let _ = std::fs::remove_file(&port_file);
+    let mut daemon = spawn_daemon(&port_file);
+    let addr = wait_ready(&port_file, &mut daemon);
+
+    // Cold tenant parks a small working set. The strict per-request
+    // threshold guarantees each distinct text misses (and inserts)
+    // rather than accidentally hitting a semantic neighbor.
+    let cold_texts = [
+        "how do i reset my password",
+        "what is the refund policy for the pro plan",
+        "my invoice shows a duplicate charge",
+        "how can i export all of my account data",
+    ];
+    for text in cold_texts {
+        let (status, body) =
+            post(&addr, &QueryRequest::new(text).with_client_tag("cold").with_threshold(0.9999));
+        assert_eq!(status, 200, "cold insert failed: {body}");
+        assert_eq!(body.get("outcome").get("type").as_str(), Some("miss"), "cold insert must miss: {body}");
+    }
+    let m = metrics(&addr);
+    let cold_bytes = tenant_counter(&m, "cold", "bytes");
+    assert!(cold_bytes > 0, "cold working set must be charged bytes");
+    assert!(
+        cold_bytes < MAX_BYTES / 2,
+        "test geometry: cold set ({cold_bytes} B) must fit well within the {MAX_BYTES} B budget"
+    );
+    assert_eq!(
+        tenant_counter(&m, "cold", "quota_bytes"),
+        COLD_QUOTA,
+        "--tenant.cold.quota_bytes must reach the tenant state"
+    );
+
+    // Hot tenant floods 40 distinct entries — several times the global
+    // budget — so the budget must evict, repeatedly, mid-flood.
+    for i in 0..40u64 {
+        let text = format!("hot tenant flood query number {i} with unique marker {}", i * 31 + 7);
+        let (status, body) =
+            post(&addr, &QueryRequest::new(text).with_client_tag("hot").with_threshold(0.9999));
+        assert_eq!(status, 200, "hot flood insert failed: {body}");
+    }
+
+    let m = metrics(&addr);
+    // The budget bit: evictions happened, and every one of them was
+    // charged to the tenant that caused the pressure.
+    let hot_evictions = tenant_counter(&m, "hot", "evictions");
+    assert!(hot_evictions >= 1, "flood past the budget must evict: {m}");
+    assert_eq!(
+        tenant_counter(&m, "cold", "evictions"),
+        0,
+        "zero cross-tenant evictions: {m}"
+    );
+    assert_eq!(
+        tenant_counter(&m, "cold", "entries"),
+        cold_texts.len() as u64,
+        "cold working set intact: {m}"
+    );
+    // At rest the global budget holds outright (the one-footprint
+    // overshoot allowance is only for the instant mid-insert).
+    let cache_bytes = m.get("cache_bytes").as_u64().expect("cache_bytes");
+    let cache_max = m.get("cache_max_bytes").as_u64().expect("cache_max_bytes");
+    assert_eq!(cache_max, MAX_BYTES);
+    assert!(cache_bytes <= cache_max, "resident {cache_bytes} B > budget {cache_max} B");
+    // The batcher's queue-depth gauge rides the same payload and reads 0
+    // with nothing in flight.
+    assert_eq!(
+        m.get("metrics").get("batch_queue_depth").as_u64(),
+        Some(0),
+        "queue-depth gauge missing or non-zero at rest: {m}"
+    );
+
+    // The proof that matters: every cold query still hits, verbatim,
+    // after the flood.
+    for text in cold_texts {
+        let (status, body) = post(&addr, &QueryRequest::new(text).with_client_tag("cold"));
+        assert_eq!(status, 200);
+        assert_eq!(
+            body.get("outcome").get("type").as_str(),
+            Some("hit"),
+            "cold entry lost to the hot flood: {body}"
+        );
+    }
+
+    // And the flood never leaked across the namespace boundary: the hot
+    // tenant asking a cold question verbatim must miss (and what it
+    // inserts lands in its own namespace).
+    let (status, body) =
+        post(&addr, &QueryRequest::new(cold_texts[0]).with_client_tag("hot").with_threshold(0.9999));
+    assert_eq!(status, 200);
+    assert_eq!(
+        body.get("outcome").get("type").as_str(),
+        Some("miss"),
+        "hot tenant must not see cold tenant's entries: {body}"
+    );
+
+    let _ = std::fs::remove_file(&port_file);
+}

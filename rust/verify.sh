@@ -9,9 +9,11 @@
 # smoke (32 idle keep-alive connections must not starve a fresh query on
 # the default event loop), a kill-9 durability smoke (populate a
 # --data-dir daemon, SIGKILL, restart <= 3s, paraphrase must still hit
-# with recovered_entries > 0), and a smoke run of the serving benches
-# (SEMCACHE_BENCH_SMOKE=1 keeps each to a few seconds). Fails fast on
-# the first broken step.
+# with recovered_entries > 0), a two-tenant quota-breach smoke (a
+# quota-capped tenant flooding past its byte quota evicts only itself;
+# the other tenant's entry survives and per-tenant metric blocks agree),
+# and a smoke run of the serving benches (SEMCACHE_BENCH_SMOKE=1 keeps
+# each to a few seconds). Fails fast on the first broken step.
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -166,6 +168,59 @@ rm -rf "$DATA_DIR"
 trap - EXIT
 echo "    durability smoke OK (SIGKILL -> restart in $((T1 - T0))s, $RECOVERED entries recovered, paraphrase hit)"
 
+# Two-tenant quota-breach smoke (ISSUE 7): tenant "small" gets an 8 KiB
+# byte quota (~2 entries at the default 384-d encoder geometry) and
+# floods 8 distinct queries past it; tenant "big" parks one entry first.
+# The quota pressure must evict only small's own entries — big's entry
+# survives verbatim, big's eviction counter stays 0, and the per-tenant
+# metric blocks on /v1/metrics tell the story.
+echo "==> two-tenant quota-breach smoke: per-tenant byte quotas over HTTP"
+PORT_FILE="$(mktemp)"
+./target/release/semcached serve --port 0 --port-file "$PORT_FILE" \
+    --max_bytes 262144 --tenant.small.quota_bytes 8192 &
+SRV_PID=$!
+trap 'kill "$SRV_PID" 2>/dev/null || true' EXIT
+for _ in $(seq 1 100); do
+    [ -s "$PORT_FILE" ] && break
+    sleep 0.1
+done
+[ -s "$PORT_FILE" ] || { echo "tenant-smoke semcached did not come up (no port file)"; exit 1; }
+ADDR="$(cat "$PORT_FILE")"
+for _ in $(seq 1 100); do
+    ./target/release/semcached metrics --addr "$ADDR" >/dev/null 2>&1 && break
+    sleep 0.1
+done
+./target/release/semcached query --addr "$ADDR" --tag big \
+    "what is the refund policy for the pro plan" >/dev/null
+for i in $(seq 1 8); do
+    # --threshold 0.9999 forces each distinct flood text to miss (and
+    # insert) instead of hitting a semantic neighbor.
+    ./target/release/semcached query --addr "$ADDR" --tag small --threshold 0.9999 \
+        "small tenant flood query number $i with unique marker $((i * 31 + 7))" >/dev/null
+done
+METRICS="$(./target/release/semcached metrics --addr "$ADDR")"
+# Scope a counter to one tenant's block in the pretty-printed JSON.
+tnum() { echo "$METRICS" | sed -n "/\"$1\": {/,/}/p" | sed -n "s/.*\"$2\": \([0-9][0-9]*\).*/\1/p" | head -1; }
+SMALL_EVICTS="$(tnum small evictions)"; BIG_EVICTS="$(tnum big evictions)"
+SMALL_BYTES="$(tnum small bytes)"; SMALL_QUOTA="$(tnum small quota_bytes)"
+[ -n "$SMALL_EVICTS" ] && [ -n "$BIG_EVICTS" ] && [ -n "$SMALL_BYTES" ] \
+    || { echo "tenant smoke FAILED: per-tenant metric blocks missing"; echo "$METRICS"; exit 1; }
+[ "$SMALL_QUOTA" = 8192 ] \
+    || { echo "tenant smoke FAILED: --tenant.small.quota_bytes did not reach the tenant (got ${SMALL_QUOTA:-none})"; exit 1; }
+[ "$SMALL_EVICTS" -ge 1 ] \
+    || { echo "tenant smoke FAILED: flooding past an 8 KiB quota evicted nothing"; echo "$METRICS"; exit 1; }
+[ "$BIG_EVICTS" -eq 0 ] \
+    || { echo "tenant smoke FAILED: small's quota pressure evicted big's entries ($BIG_EVICTS)"; echo "$METRICS"; exit 1; }
+[ "$SMALL_BYTES" -le 8192 ] \
+    || { echo "tenant smoke FAILED: small holds $SMALL_BYTES B > 8192 B quota at rest"; exit 1; }
+OUT="$(./target/release/semcached query --addr "$ADDR" --tag big "what is the refund policy for the pro plan")"
+echo "$OUT" | grep -q '"type": "hit"' \
+    || { echo "tenant smoke FAILED: big's entry lost under small's quota pressure"; echo "$OUT"; exit 1; }
+kill "$SRV_PID" 2>/dev/null || true
+wait "$SRV_PID" 2>/dev/null || true
+trap - EXIT
+echo "    tenant smoke OK (small: $SMALL_EVICTS self-evictions, $SMALL_BYTES B <= 8192 B quota; big untouched and still hitting)"
+
 echo "==> smoke bench: bench_batch_throughput (SEMCACHE_BENCH_SMOKE=1)"
 SEMCACHE_BENCH_SMOKE=1 cargo bench --bench bench_batch_throughput
 
@@ -177,5 +232,8 @@ SEMCACHE_BENCH_SMOKE=1 cargo bench --bench bench_embed_throughput
 
 echo "==> smoke bench: bench_persist_restart (SEMCACHE_BENCH_SMOKE=1)"
 SEMCACHE_BENCH_SMOKE=1 cargo bench --bench bench_persist_restart
+
+echo "==> smoke bench: bench_eviction (SEMCACHE_BENCH_SMOKE=1, enforced)"
+SEMCACHE_BENCH_SMOKE=1 SEMCACHE_BENCH_ENFORCE=1 cargo bench --bench bench_eviction
 
 echo "==> verify OK"
