@@ -19,10 +19,25 @@
 //! threads (1 reactor + 4 request workers) while the same 8 active
 //! clients replay the pass.
 //!
+//! Two further arms exercise the sharded wire path (PR 8):
+//!
+//! * **reactor scaling** — a wire-bound all-hit replay (memoized
+//!   embeddings, warm cache) at 1 reactor / 1 dispatcher vs 4 reactors
+//!   / 2 dispatchers;
+//! * **massive idle fan-in** — tens of thousands of raw idle keep-alive
+//!   connections (auto-scaled to `RLIMIT_NOFILE`; 256 in smoke) held
+//!   against a 4-reactor server, then one fresh query timed.
+//!
 //! Acceptance floors:
 //! * (ISSUE 3) batched >= 1.5x unbatched queries/sec at 8 connections;
 //! * (ISSUE 5) with the idle fleet held open, the event loop sustains
-//!   >= 0.8x the batched arm's queries/sec.
+//!   >= 0.8x the batched arm's queries/sec;
+//! * (PR 8) 4 reactors sustain >= 2x the 1-reactor queries/sec on the
+//!   wire-bound replay — enforced only with >= 4 cores available (on
+//!   smaller hosts there is nothing to scale onto; the floor degrades
+//!   to a >= 0.6x non-regression check and the waiver is printed);
+//! * (PR 8) a fresh query answers within 3 s with the massive idle
+//!   fleet held open.
 //!
 //! Run: `cargo bench --bench bench_http_loopback`
 //! Quick mode (CI / verify.sh): `SEMCACHE_BENCH_SMOKE=1 cargo bench --bench bench_http_loopback`
@@ -115,6 +130,7 @@ fn build_server(setup: &BenchSetup) -> Arc<Server> {
                 max_batch_size: CLIENTS,
                 max_wait_us: 5_000,
                 queue_capacity: 1024,
+                dispatchers: 1,
             })
             .build()
             .expect("bench server config"),
@@ -178,6 +194,11 @@ fn http_arm(setup: &BenchSetup, batching: bool) -> (f64, usize, Arc<Server>) {
             addr: "127.0.0.1:0".into(),
             workers: CLIENTS,
             batching,
+            // The historical arms (and their 1.5x / 0.8x floors) measure
+            // the single-threaded wire path; the scaling arm below is
+            // the one that varies the widths.
+            reactors: 1,
+            dispatchers: 1,
             ..HttpConfig::default()
         },
     )
@@ -266,6 +287,8 @@ fn fanin_arm(setup: &BenchSetup) -> (f64, usize, Arc<Server>, usize) {
             workers: 4,
             batching: true,
             event_loop: true,
+            reactors: 1,
+            dispatchers: 1,
             max_conns: conns + CLIENTS + 32,
             // The fleet must stay open for the whole active phase.
             read_timeout: Duration::from_secs(600),
@@ -316,6 +339,134 @@ fn fanin_arm(setup: &BenchSetup) -> (f64, usize, Arc<Server>, usize) {
     drop(held);
     handle.shutdown();
     (n as f64 / secs, hits, server, conns)
+}
+
+/// Arm 5 (PR 8): reactor/dispatcher scaling. A wire-bound replay — the
+/// cache is warmed by one preliminary pass, so the measured phase is
+/// all memoized-embedding cache hits and the reactor threads (HTTP
+/// framing, JSON writes) dominate — run at (1 reactor, 1 dispatcher)
+/// and (4 reactors, 2 dispatchers). Returns queries/sec.
+fn scaling_arm(setup: &BenchSetup, reactors: usize, dispatchers: usize) -> f64 {
+    const SCALE_CLIENTS: usize = 16;
+    let repeats = if smoke() { 2 } else { 6 };
+    let server = build_server(setup);
+    let handle = serve_http(
+        server.clone(),
+        HttpConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 8,
+            batching: true,
+            event_loop: true,
+            reactors,
+            dispatchers,
+            max_conns: SCALE_CLIENTS + 64,
+            ..HttpConfig::default()
+        },
+    )
+    .expect("bind loopback");
+    let addr = handle.local_addr().to_string();
+    // Warm pass: fills the cache and the embedding memo so the measured
+    // phase never touches the encoder or the simulated LLM.
+    client_worker(&addr, &setup.pass);
+
+    let n = setup.pass.len() * SCALE_CLIENTS * repeats;
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for _ in 0..SCALE_CLIENTS {
+            let addr = addr.clone();
+            let pass = &setup.pass;
+            scope.spawn(move || {
+                for _ in 0..repeats {
+                    client_worker(&addr, pass);
+                }
+            });
+        }
+    });
+    let secs = t0.elapsed().as_secs_f64();
+    handle.shutdown();
+    n as f64 / secs
+}
+
+/// Arm 6 (PR 8): massive idle fan-in. Tens of thousands of raw idle
+/// keep-alive connections (each costs two fds in this process — both
+/// ends are ours — so the fleet auto-scales to `RLIMIT_NOFILE`; 256 in
+/// smoke) held against a 4-reactor server, then one fresh query timed
+/// end to end. Returns (fleet size, fresh-query seconds, open gauge).
+fn massive_idle_arm(setup: &BenchSetup) -> (usize, f64, usize) {
+    let want = if smoke() { 256 } else { 20_000 };
+    let mut conns = want;
+    #[cfg(unix)]
+    {
+        let effective = semcache::util::poll::raise_nofile_limit((2 * want + 256) as u64);
+        if (effective as usize) < 2 * want + 256 {
+            conns = ((effective as usize).saturating_sub(256) / 2).max(64);
+            eprintln!(
+                "[massive idle arm: RLIMIT_NOFILE {effective} caps the fleet at {conns} connections]"
+            );
+        }
+    }
+    let server = build_server(setup);
+    let handle = serve_http(
+        server.clone(),
+        HttpConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 4,
+            batching: true,
+            event_loop: true,
+            reactors: 4,
+            dispatchers: 2,
+            max_conns: conns + 64,
+            read_timeout: Duration::from_secs(600),
+            ..HttpConfig::default()
+        },
+    )
+    .expect("bind loopback");
+    let addr = handle.local_addr().to_string();
+
+    // Raw idle connections: no request ever sent — each one exercises
+    // exactly the accept -> handoff -> register path and then sits in
+    // the fd table.
+    const OPENERS: usize = 16;
+    let held: Vec<TcpStream> = std::thread::scope(|scope| {
+        let mut joins = Vec::new();
+        for o in 0..OPENERS {
+            let addr = addr.clone();
+            joins.push(scope.spawn(move || {
+                let mut streams = Vec::new();
+                let mut i = o;
+                while i < conns {
+                    streams.push(TcpStream::connect(&addr).expect("idle conn"));
+                    i += OPENERS;
+                }
+                streams
+            }));
+        }
+        joins.into_iter().flat_map(|j| j.join().expect("opener thread")).collect()
+    });
+    assert_eq!(held.len(), conns);
+    // Wait for the reactors to admit the whole fleet (handoff inboxes
+    // drain asynchronously from the opener threads).
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let open_gauge = loop {
+        let open = server.metrics().snapshot().http_conns_open as usize;
+        if open >= conns || Instant::now() >= deadline {
+            break open;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    };
+
+    // One fresh query, timed end to end against the loaded fd table.
+    let body = QueryRequest::new("fresh probe query against the massive idle fleet")
+        .to_json()
+        .to_string();
+    let t0 = Instant::now();
+    let (status, _) = semcache::coordinator::http_request(&addr, "POST", "/v1/query", Some(&body))
+        .expect("fresh query under massive idle fan-in");
+    let fresh_secs = t0.elapsed().as_secs_f64();
+    assert_eq!(status, 200, "fresh query must serve under idle fan-in");
+    drop(held);
+    handle.shutdown();
+    (conns, fresh_secs, open_gauge)
 }
 
 fn main() {
@@ -380,14 +531,52 @@ fn main() {
         fm.batcher_dispatches,
     );
 
+    // --- arm 5: reactor/dispatcher scaling on the wire-bound replay.
+    let one_qps = scaling_arm(&setup, 1, 1);
+    let four_qps = scaling_arm(&setup, 4, 2);
+    println!(
+        "{:<46} {:>10.0} queries/s",
+        "HTTP wire-bound, 1 reactor / 1 dispatcher", one_qps
+    );
+    println!(
+        "{:<46} {:>10.0} queries/s",
+        "HTTP wire-bound, 4 reactors / 2 dispatchers", four_qps
+    );
+
+    // --- arm 6: massive idle fan-in, 4 reactors.
+    let (massive_fleet, fresh_secs, open_gauge) = massive_idle_arm(&setup);
+    println!(
+        "{:<46} {:>10.3} s fresh query  ({} idle conns held, open gauge {})",
+        format!("HTTP massive idle fan-in, {massive_fleet} conns"),
+        fresh_secs,
+        massive_fleet,
+        open_gauge,
+    );
+
     let vs_unbatched = batched_qps / unbatched_qps;
     let vs_direct = batched_qps / direct_qps;
     let fanin_ratio = fanin_qps / batched_qps;
+    let scaling_ratio = four_qps / one_qps;
+    // The 2x scaling floor needs hardware to scale onto: with fewer
+    // than 4 cores the 4-reactor fleet time-slices one or two CPUs and
+    // the honest expectation is "not much slower", not "2x faster".
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let (scaling_floor, scaling_waived) = if cores >= 4 { (2.0, false) } else { (0.6, true) };
     println!("\nbatched-vs-unbatched throughput ratio: {vs_unbatched:.2}x  (acceptance floor: >= 1.50x)");
     println!("batched-vs-direct ratio:               {vs_direct:.2}x  (>1 = coalescing beats even the in-process no-dedup pipeline)");
     println!("fan-in-vs-batched ratio:               {fanin_ratio:.2}x  (acceptance floor: >= 0.80x with {fleet} idle keep-alive conns on <= 8 HTTP threads)");
+    println!(
+        "4-reactor-vs-1 scaling ratio:          {scaling_ratio:.2}x  (acceptance floor: >= {scaling_floor:.2}x{})",
+        if scaling_waived {
+            format!(" — 2x floor WAIVED: only {cores} core(s) available, non-regression floor applies")
+        } else {
+            String::new()
+        }
+    );
     let floor_met = vs_unbatched >= 1.5;
     let fanin_floor_met = fanin_ratio >= 0.8;
+    let scaling_floor_met = scaling_ratio >= scaling_floor;
+    let fresh_floor_met = fresh_secs <= 3.0;
     println!(
         "[acceptance] batched >= 1.5x unbatched at {} connections: {}",
         CLIENTS,
@@ -398,10 +587,20 @@ fn main() {
         fleet,
         if fanin_floor_met { "PASS" } else { "FAIL" }
     );
+    println!(
+        "[acceptance] 4 reactors >= {scaling_floor:.2}x 1 reactor on the wire-bound replay: {}",
+        if scaling_floor_met { "PASS" } else { "FAIL" }
+    );
+    println!(
+        "[acceptance] fresh query <= 3 s with {massive_fleet} idle connections held: {} ({fresh_secs:.3}s)",
+        if fresh_floor_met { "PASS" } else { "FAIL" }
+    );
     println!("(SEMCACHE_BENCH_SMOKE=1 for the quick CI variant; SEMCACHE_BENCH_ENFORCE=1 to exit non-zero on FAIL)");
     // Throughput ratios are machine-dependent, so the floors are printed
     // banners by default; gating environments opt into a hard failure.
-    if (!floor_met || !fanin_floor_met) && std::env::var("SEMCACHE_BENCH_ENFORCE").is_ok() {
+    if (!floor_met || !fanin_floor_met || !scaling_floor_met || !fresh_floor_met)
+        && std::env::var("SEMCACHE_BENCH_ENFORCE").is_ok()
+    {
         eprintln!("SEMCACHE_BENCH_ENFORCE is set and an acceptance floor was missed; exiting 1");
         std::process::exit(1);
     }

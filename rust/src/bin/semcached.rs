@@ -67,6 +67,8 @@ fn load_config(args: &Args) -> Result<Config> {
             "event-loop",
             "threaded-accept",
             "max-conns",
+            "reactors",
+            "dispatchers",
         ],
     )?;
     if let Some(w) = args.opt("workers") {
@@ -173,6 +175,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if max_conns == 0 {
         bail!("--max-conns must be >= 1");
     }
+    // Wire-path widths: `--reactors`/`--dispatchers` over the config
+    // keys over core-count autosizing. 0 = the pre-sharding
+    // single-threaded behavior (normalized to 1 inside serve_http).
+    let reactors: usize = args.opt_parse("reactors", cfg.http_reactors)?;
+    if reactors > 256 {
+        bail!("--reactors must be <= 256");
+    }
+    let dispatchers: usize = args.opt_parse("dispatchers", cfg.http_dispatchers)?;
+    if dispatchers > semcache::coordinator::MAX_DISPATCHERS_LIMIT {
+        bail!("--dispatchers must be <= {}", semcache::coordinator::MAX_DISPATCHERS_LIMIT);
+    }
     let handle = serve_http(
         server,
         HttpConfig {
@@ -181,6 +194,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             batching,
             event_loop,
             max_conns,
+            reactors,
+            dispatchers,
             ..HttpConfig::default()
         },
     )?;
@@ -197,8 +212,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .with_context(|| format!("publishing --port-file {path}"))?;
     }
     println!(
-        "semcached listening on http://{addr} ({} mode, max {max_conns} conns)",
+        "semcached listening on http://{addr} ({} mode, max {max_conns} conns, \
+         {} reactor(s), {} dispatcher(s))",
         if event_loop { "event-loop" } else { "threaded-accept" },
+        reactors.max(1),
+        dispatchers.max(1),
     );
     println!("endpoints: POST /v1/query /v1/query_batch /v1/admin | GET /v1/metrics /v1/health");
     // Serve until killed; the accept/worker threads do all the work.

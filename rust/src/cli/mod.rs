@@ -133,7 +133,13 @@ SERVE OPTIONS:
     --event-loop             Force the default epoll/poll readiness loop
                              (e.g. over a config with http_event_loop=false)
     --max-conns <n>          Event-loop connection cap; beyond it new
-                             connections get 503 at accept (default 1024)
+                             connections get 503 at accept (default 1024;
+                             auto-clamped to the fd limit at startup)
+    --reactors <n>           Event-loop reactor threads (default: sized
+                             from cores; 0 = legacy single-threaded loop)
+    --dispatchers <n>        Batcher dispatcher shards, hash-partitioned
+                             on the coalescing key (default: sized from
+                             cores; 0 = legacy single dispatcher)
     --no-batch               Serve each query in isolation instead of
                              coalescing concurrent in-flight queries
     --batch-max-size <n>     Micro-batch size cap (default 8; >= 1)

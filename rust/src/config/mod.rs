@@ -100,8 +100,17 @@ pub struct Config {
     /// (`--threaded-accept`).
     pub http_event_loop: bool,
     /// Event-loop connection cap; connections beyond it are answered
-    /// 503 at accept time.
+    /// 503 at accept time. Auto-clamped at startup against the
+    /// process's file-descriptor limit (after `raise_nofile_limit`).
     pub http_max_conns: usize,
+    /// Reactor (event-loop) threads on the wire path. The default is
+    /// sized from the core count; `0` is a legacy alias for `1` (the
+    /// pre-sharding single-threaded reactor).
+    pub http_reactors: usize,
+    /// Batcher dispatcher threads, hash-sharded on the coalescing key.
+    /// The default is sized from the core count; `0` is a legacy alias
+    /// for `1` (the pre-sharding single dispatcher).
+    pub http_dispatchers: usize,
 
     // Durability (crate::persist)
     /// Directory for WAL segments + snapshots; empty disables
@@ -147,6 +156,8 @@ impl Default for Config {
             housekeeping_ms: 1000,
             http_event_loop: true,
             http_max_conns: 1024,
+            http_reactors: crate::util::auto_reactors(),
+            http_dispatchers: crate::util::auto_dispatchers(),
             data_dir: String::new(),
             snapshot_interval_secs: 60,
             wal_sync: "os".into(),
@@ -270,6 +281,8 @@ impl Config {
             "housekeeping_ms" => self.housekeeping_ms = num!(),
             "http_event_loop" => self.http_event_loop = num!(),
             "http_max_conns" => self.http_max_conns = num!(),
+            "http_reactors" => self.http_reactors = num!(),
+            "http_dispatchers" => self.http_dispatchers = num!(),
             "data_dir" => self.data_dir = raw.to_string(),
             "snapshot_interval_secs" => self.snapshot_interval_secs = num!(),
             "wal_sync" => self.wal_sync = raw.to_string(),
@@ -317,6 +330,18 @@ impl Config {
         }
         if self.http_max_conns == 0 {
             bail!("http_max_conns must be >= 1");
+        }
+        // 0 is accepted as the legacy "old single-threaded behavior"
+        // alias for both knobs; only absurd widths are rejected.
+        if self.http_reactors > 256 {
+            bail!("http_reactors must be <= 256, got {}", self.http_reactors);
+        }
+        if self.http_dispatchers > crate::coordinator::MAX_DISPATCHERS_LIMIT {
+            bail!(
+                "http_dispatchers must be <= {}, got {}",
+                crate::coordinator::MAX_DISPATCHERS_LIMIT,
+                self.http_dispatchers
+            );
         }
         match self.wal_sync.as_str() {
             "os" | "always" => {}
@@ -373,11 +398,26 @@ mod tests {
         let mut c = Config::default();
         assert!(c.http_event_loop, "event loop is the default");
         assert_eq!(c.http_max_conns, 1024);
+        assert!(c.http_reactors >= 1, "auto-sized reactor fleet is at least 1");
+        assert!(c.http_dispatchers >= 1, "auto-sized dispatcher pool is at least 1");
         c.set("http.http_event_loop", "false").unwrap();
         c.set("http_max_conns", "64").unwrap();
+        c.set("http.http_reactors", "4").unwrap();
+        c.set("http_dispatchers", "2").unwrap();
         assert!(!c.http_event_loop);
         assert_eq!(c.http_max_conns, 64);
+        assert_eq!((c.http_reactors, c.http_dispatchers), (4, 2));
         c.validate().unwrap();
+        // 0 = legacy single-threaded alias: valid, not an error.
+        c.set("http_reactors", "0").unwrap();
+        c.set("http_dispatchers", "0").unwrap();
+        c.validate().unwrap();
+        c.http_reactors = 257;
+        assert!(c.validate().is_err(), "absurd reactor width must be rejected");
+        c.http_reactors = 4;
+        c.http_dispatchers = crate::coordinator::MAX_DISPATCHERS_LIMIT + 1;
+        assert!(c.validate().is_err(), "dispatcher width above the shard cap");
+        c.http_dispatchers = 2;
         c.http_max_conns = 0;
         assert!(c.validate().is_err(), "a zero connection budget serves nothing");
     }

@@ -8,17 +8,18 @@
 //! gap:
 //!
 //! ```text
-//!   conn worker ──submit──► bounded MPSC queue ──► dispatcher thread
-//!   conn worker ──submit──►        │                    │ drain up to
-//!   conn worker ──submit──►        │                    │ max_batch_size
-//!                                  ▼                    │ within
-//!                           (503 when full)             │ max_wait_us
-//!                                                       ▼
-//!                                            dedup identical in-flight
-//!                                                       │
-//!                                                serve_batch(uniques)
-//!                                                       │
-//!                              one-shot reply channel per submitter
+//!   conn worker ──submit──► hash(CoalesceKey) ─┬─► shard 0: bounded MPSC ──► dispatcher 0
+//!   conn worker ──submit──►   % dispatchers    ├─► shard 1: bounded MPSC ──► dispatcher 1
+//!   conn worker ──submit──►                    └─► shard M: bounded MPSC ──► dispatcher M
+//!                                   │                             │ drain up to
+//!                            (503 when full)                      │ max_batch_size
+//!                                                                 │ within max_wait_us
+//!                                                                 ▼
+//!                                                      dedup identical in-flight
+//!                                                                 │
+//!                                                          serve_batch(uniques)
+//!                                                                 │
+//!                                        one-shot reply channel per submitter
 //! ```
 //!
 //! **Window policy.** A dispatch starts with the oldest queued request;
@@ -35,12 +36,19 @@
 //! answered from the representative's result via
 //! [`BatchExecutor::coalesce`] without its own embedding, lookup, or
 //! LLM call. This also *fixes* the documented `serve_batch` caveat:
-//! racing duplicate novel queries no longer each call the upstream LLM,
-//! because the single dispatcher totally orders dispatches and dedups
-//! within them. `client_tag` is part of the identity because it selects
-//! the tenant namespace ([`crate::tenancy`]): equal texts from
-//! different tenants resolve against different caches and must not
-//! share a result.
+//! racing duplicate novel queries no longer each call the upstream LLM.
+//! `client_tag` is part of the identity because it selects the tenant
+//! namespace ([`crate::tenancy`]): equal texts from different tenants
+//! resolve against different caches and must not share a result.
+//!
+//! **Sharding.** The engine runs [`BatchConfig::dispatchers`] dispatcher
+//! threads, each owning its own bounded queue; submissions are routed by
+//! `hash(CoalesceKey) % dispatchers`. Because the route is a pure
+//! function of the coalescing identity, identical in-flight requests
+//! always land on the *same* dispatcher and still dedup within its
+//! windows — the shard count changes throughput, never coalescing
+//! semantics — while a hot key (one tenant flooding one text) can only
+//! ever saturate its own shard, not serialize the others.
 //!
 //! **Backpressure.** The submit queue is bounded; when it is full,
 //! [`Batcher::submit`] fails fast with [`SubmitError::QueueFull`]
@@ -77,6 +85,8 @@ pub const MAX_BATCH_SIZE_LIMIT: usize = 4096;
 /// Hard cap on [`BatchConfig::max_wait_us`] (1 s — a coalescing window,
 /// not a request timeout).
 pub const MAX_WAIT_US_LIMIT: u64 = 1_000_000;
+/// Hard cap on [`BatchConfig::dispatchers`].
+pub const MAX_DISPATCHERS_LIMIT: usize = 64;
 
 /// Micro-batching window policy and queue bound.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -89,14 +99,19 @@ pub struct BatchConfig {
     /// enqueued, microseconds (`0..=`[`MAX_WAIT_US_LIMIT`]; 0 = dispatch
     /// whatever is already queued without waiting for stragglers).
     pub max_wait_us: u64,
-    /// Bound on queued-but-undispatched requests; a full queue answers
-    /// [`SubmitError::QueueFull`] (HTTP 503).
+    /// Bound on queued-but-undispatched requests *per dispatcher shard*;
+    /// a full shard queue answers [`SubmitError::QueueFull`] (HTTP 503).
     pub queue_capacity: usize,
+    /// Dispatcher threads, hash-sharded on the coalescing key (`1..=`
+    /// [`MAX_DISPATCHERS_LIMIT`]). Identical in-flight requests always
+    /// route to the same dispatcher regardless of this count, so raising
+    /// it never weakens coalescing; 1 is the pre-sharding behavior.
+    pub dispatchers: usize,
 }
 
 impl Default for BatchConfig {
     fn default() -> Self {
-        Self { max_batch_size: 32, max_wait_us: 1_000, queue_capacity: 1024 }
+        Self { max_batch_size: 32, max_wait_us: 1_000, queue_capacity: 1024, dispatchers: 1 }
     }
 }
 
@@ -119,6 +134,15 @@ impl BatchConfig {
         }
         if self.queue_capacity == 0 {
             bail!("batch queue_capacity must be >= 1");
+        }
+        if self.dispatchers == 0 {
+            bail!("batch dispatchers must be >= 1");
+        }
+        if self.dispatchers > MAX_DISPATCHERS_LIMIT {
+            bail!(
+                "batch dispatchers must be <= {MAX_DISPATCHERS_LIMIT}, got {}",
+                self.dispatchers
+            );
         }
         Ok(())
     }
@@ -150,6 +174,27 @@ pub trait BatchExecutor: Send + Sync + 'static {
     /// Serve one dispatched micro-batch; must return exactly one
     /// response per request, in input order.
     fn execute(&self, reqs: &[QueryRequest]) -> Vec<QueryResponse>;
+
+    /// [`BatchExecutor::execute`], but advancing `recorded` to the
+    /// number of requests whose per-query serving metrics (`request` +
+    /// outcome counter) the executor has *fully* recorded so far (a
+    /// count, not a prefix — batch workers may finish out of order). The dispatcher reads it only when the executor dies
+    /// mid-batch, so `reject_all` can record `request` + `rejected` for
+    /// exactly the submissions the executor never accounted — keeping
+    /// `cache_hits + cache_misses + rejected == requests` exact across
+    /// executor panics. The default forwards to `execute` and records
+    /// nothing, which is correct for executors that keep no per-query
+    /// metrics (everything they dispatched gets rejected-and-recorded on
+    /// failure). [`super::Server`] overrides this with real progress
+    /// tracking.
+    fn execute_tracked(
+        &self,
+        reqs: &[QueryRequest],
+        recorded: &std::sync::atomic::AtomicUsize,
+    ) -> Vec<QueryResponse> {
+        let _ = recorded;
+        self.execute(reqs)
+    }
 
     /// Answer `dup` — an identical in-flight twin of `rep` within one
     /// dispatch — from the representative's response. The default keeps
@@ -210,42 +255,72 @@ impl CoalesceKey {
     }
 }
 
-/// The cross-request micro-batching engine. Cheap to share via `Arc`;
-/// every HTTP connection worker calls [`Batcher::submit`] concurrently.
-pub struct Batcher {
+/// One dispatcher shard: its bounded queue and its dispatcher thread.
+struct Shard {
     /// `None` once shut down; dropping the sender disconnects the queue.
     tx: RwLock<Option<SyncSender<Submission>>>,
     dispatcher: Mutex<Option<JoinHandle<()>>>,
+}
+
+/// The shard a request routes to: a pure function of the coalescing
+/// identity, so identical in-flight requests always share a dispatcher
+/// (and therefore still coalesce) at any shard count.
+fn shard_of(req: &QueryRequest, shards: usize) -> usize {
+    if shards <= 1 {
+        return 0;
+    }
+    use std::hash::{Hash, Hasher};
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    CoalesceKey::of(req).hash(&mut h);
+    (h.finish() % shards as u64) as usize
+}
+
+/// The cross-request micro-batching engine. Cheap to share via `Arc`;
+/// every HTTP connection worker calls [`Batcher::submit`] concurrently.
+pub struct Batcher {
+    shards: Vec<Shard>,
     metrics: Arc<Metrics>,
-    /// Queued-but-not-yet-dequeued submissions (a gauge: incremented
-    /// after a successful enqueue, decremented as the dispatcher pops;
-    /// signed because a pop can transiently beat its enqueuer's
-    /// increment).
+    /// Queued-but-not-yet-dequeued submissions across all shards (a
+    /// gauge: incremented after a successful enqueue, decremented as a
+    /// dispatcher pops; signed because a pop can transiently beat its
+    /// enqueuer's increment).
     depth: Arc<AtomicI64>,
 }
 
 impl Batcher {
-    /// Validate `cfg`, then spawn the dispatcher thread over `executor`.
+    /// Validate `cfg`, then spawn `cfg.dispatchers` dispatcher threads
+    /// over `executor`, each owning one hash shard of the key space.
     pub fn start(
         executor: Arc<dyn BatchExecutor>,
         metrics: Arc<Metrics>,
         cfg: BatchConfig,
     ) -> Result<Arc<Batcher>> {
         cfg.validate()?;
-        let (tx, rx) = mpsc::sync_channel::<Submission>(cfg.queue_capacity);
         let depth = Arc::new(AtomicI64::new(0));
-        let dispatcher_metrics = metrics.clone();
-        let dispatcher_depth = depth.clone();
-        let handle = std::thread::Builder::new()
-            .name("batch-dispatcher".into())
-            .spawn(move || dispatch_loop(rx, executor, dispatcher_metrics, dispatcher_depth, cfg))
-            .expect("spawn batch dispatcher");
-        Ok(Arc::new(Batcher {
-            tx: RwLock::new(Some(tx)),
-            dispatcher: Mutex::new(Some(handle)),
-            metrics,
-            depth,
-        }))
+        let mut shards = Vec::with_capacity(cfg.dispatchers);
+        for i in 0..cfg.dispatchers {
+            let (tx, rx) = mpsc::sync_channel::<Submission>(cfg.queue_capacity);
+            let executor = executor.clone();
+            let dispatcher_metrics = metrics.clone();
+            let dispatcher_depth = depth.clone();
+            let dispatcher_cfg = cfg.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("batch-dispatcher-{i}"))
+                .spawn(move || {
+                    dispatch_loop(rx, executor, dispatcher_metrics, dispatcher_depth, dispatcher_cfg)
+                })
+                .expect("spawn batch dispatcher");
+            shards.push(Shard {
+                tx: RwLock::new(Some(tx)),
+                dispatcher: Mutex::new(Some(handle)),
+            });
+        }
+        Ok(Arc::new(Batcher { shards, metrics, depth }))
+    }
+
+    /// How many dispatcher shards this batcher runs.
+    pub fn dispatchers(&self) -> usize {
+        self.shards.len()
     }
 
     /// Submissions accepted but not yet pulled into a dispatch. An
@@ -288,7 +363,8 @@ impl Batcher {
     where
         F: FnOnce(QueryResponse) + Send + 'static,
     {
-        let guard = self.tx.read().unwrap();
+        let shard = &self.shards[shard_of(req, self.shards.len())];
+        let guard = shard.tx.read().unwrap();
         let tx = match guard.as_ref() {
             Some(tx) => tx,
             None => return Err(self.reject(SubmitError::Shutdown)),
@@ -319,13 +395,18 @@ impl Batcher {
         e
     }
 
-    /// Stop accepting, serve everything already queued, join the
-    /// dispatcher. Idempotent; also runs on drop.
+    /// Stop accepting, serve everything already queued, join every
+    /// dispatcher. Idempotent; also runs on drop. All senders are
+    /// dropped before any join, so shards drain concurrently.
     pub fn shutdown(&self) {
-        let tx = self.tx.write().unwrap().take();
-        drop(tx); // disconnects the queue once in-queue items drain
-        if let Some(h) = self.dispatcher.lock().unwrap().take() {
-            let _ = h.join();
+        for shard in &self.shards {
+            let tx = shard.tx.write().unwrap().take();
+            drop(tx); // disconnects the shard's queue once it drains
+        }
+        for shard in &self.shards {
+            if let Some(h) = shard.dispatcher.lock().unwrap().take() {
+                let _ = h.join();
+            }
         }
     }
 }
@@ -423,8 +504,11 @@ fn dispatch(executor: &dyn BatchExecutor, metrics: &Metrics, batch: Vec<Submissi
 
     // A panicking executor must not leave submitters blocked forever or
     // kill the dispatcher: catch, reject the whole dispatch, keep going.
+    // `recorded` survives the unwind with the executor's per-query
+    // accounting progress, so rejection accounting stays exact.
+    let recorded = std::sync::atomic::AtomicUsize::new(0);
     let served = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        executor.execute(&unique)
+        executor.execute_tracked(&unique, &recorded)
     }));
     let responses = match served {
         Ok(r) if r.len() == unique.len() => r,
@@ -434,12 +518,12 @@ fn dispatch(executor: &dyn BatchExecutor, metrics: &Metrics, batch: Vec<Submissi
                 r.len(),
                 unique.len()
             );
-            reject_all(metrics, batch);
+            reject_all(metrics, batch, recorded.load(Ordering::SeqCst));
             return;
         }
         Err(_) => {
             eprintln!("[batcher] executor panicked; rejecting dispatch, dispatcher recovered");
-            reject_all(metrics, batch);
+            reject_all(metrics, batch, recorded.load(Ordering::SeqCst));
             return;
         }
     };
@@ -463,17 +547,27 @@ fn dispatch(executor: &dyn BatchExecutor, metrics: &Metrics, batch: Vec<Submissi
 }
 
 /// Answer a failed dispatch: every submission still gets exactly one
-/// reply, recorded as `request` + `rejected`. Like any other
-/// serving-time rejection, the reply rides a normal 200 on the wire
-/// with a typed `Rejected` outcome. Note the accounting here is
-/// best-effort: an executor that recorded some per-query metrics before
-/// panicking mid-batch leaves those queries counted twice — the loud
-/// stderr line above, not the counters, is the signal for this
-/// (exceptional, bug-indicating) path.
-fn reject_all(metrics: &Metrics, batch: Vec<Submission>) {
-    for s in batch {
-        metrics.record_request();
-        metrics.record_rejected();
+/// reply, and the accounting stays exact. Like any other serving-time
+/// rejection, the reply rides a normal 200 on the wire with a typed
+/// `Rejected` outcome.
+///
+/// `already_recorded` is how many queries the executor fully recorded
+/// (`request` + a hit/miss outcome each) before dying mid-batch. The
+/// counters are pure tallies, so skipping `request` + `rejected` for
+/// that many submissions — whichever ones — keeps the totals exact:
+/// `already_recorded` requests carry executor-recorded outcomes, the
+/// remaining `batch.len() - already_recorded` are recorded as rejected
+/// here, and `cache_hits + cache_misses + rejected == requests` holds.
+/// (Coalesced duplicates are never executor-recorded — only unique
+/// representatives reach `execute` — so `already_recorded` can never
+/// exceed the number of submissions.)
+fn reject_all(metrics: &Metrics, batch: Vec<Submission>, already_recorded: usize) {
+    debug_assert!(already_recorded <= batch.len());
+    for (i, s) in batch.into_iter().enumerate() {
+        if i >= already_recorded {
+            metrics.record_request();
+            metrics.record_rejected();
+        }
         let resp = QueryResponse::rejected(&s.req, "internal error: batch executor failed");
         let reply = s.reply;
         let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || reply(resp)));
@@ -560,6 +654,10 @@ mod tests {
         assert!(wait.validate().is_err(), "max_wait_us out of range");
         let q = BatchConfig { queue_capacity: 0, ..Default::default() };
         assert!(q.validate().is_err(), "queue_capacity == 0");
+        let d0 = BatchConfig { dispatchers: 0, ..Default::default() };
+        assert!(d0.validate().is_err(), "dispatchers == 0");
+        let dmany = BatchConfig { dispatchers: MAX_DISPATCHERS_LIMIT + 1, ..Default::default() };
+        assert!(dmany.validate().is_err(), "dispatchers beyond cap");
         assert!(Batcher::start(
             EchoExec::new(false),
             Arc::new(Metrics::new()),
@@ -613,7 +711,7 @@ mod tests {
         let exec = EchoExec::new(true);
         let metrics = Arc::new(Metrics::new());
         let cfg =
-            BatchConfig { max_batch_size: 1, max_wait_us: 0, queue_capacity: 1 };
+            BatchConfig { max_batch_size: 1, max_wait_us: 0, queue_capacity: 1, dispatchers: 1 };
         let b = Batcher::start(exec.clone(), metrics.clone(), cfg).unwrap();
 
         std::thread::scope(|scope| {
@@ -647,7 +745,7 @@ mod tests {
         // dispatch must dedup the four into one executed request.
         let exec = EchoExec::new(true);
         let metrics = Arc::new(Metrics::new());
-        let cfg = BatchConfig { max_batch_size: 8, max_wait_us: 0, queue_capacity: 16 };
+        let cfg = BatchConfig { max_batch_size: 8, max_wait_us: 0, queue_capacity: 16, dispatchers: 1 };
         let b = Batcher::start(exec.clone(), metrics.clone(), cfg).unwrap();
         std::thread::scope(|scope| {
             let warm = b.clone();
@@ -694,7 +792,7 @@ mod tests {
         // coalesce with each other.
         let exec = EchoExec::new(true);
         let metrics = Arc::new(Metrics::new());
-        let cfg = BatchConfig { max_batch_size: 8, max_wait_us: 0, queue_capacity: 16 };
+        let cfg = BatchConfig { max_batch_size: 8, max_wait_us: 0, queue_capacity: 16, dispatchers: 1 };
         let b = Batcher::start(exec.clone(), metrics.clone(), cfg).unwrap();
         std::thread::scope(|scope| {
             let warm = b.clone();
@@ -766,8 +864,203 @@ mod tests {
             // Pin the intended interleaving: only open the gate once
             // shutdown has demonstrably closed the queue (tests live in
             // the batcher module, so the private `tx` is observable).
-            wait_until("shutdown closed the queue", || b.tx.read().unwrap().is_none());
+            wait_until("shutdown closed the queue", || {
+                b.shards.iter().all(|s| s.tx.read().unwrap().is_none())
+            });
             exec.open_gate();
         });
+    }
+
+    /// Server-like executor that records per-query metrics as it goes
+    /// (request + miss, then bumps `recorded`), echoes on its first
+    /// dispatch, and panics partway through its second — emulating
+    /// `Server::serve_batch` dying mid-batch.
+    struct PanicExec {
+        metrics: Arc<Metrics>,
+        entered: AtomicUsize,
+        gate: Mutex<bool>,
+        gate_cv: Condvar,
+        record_before_panic: usize,
+    }
+
+    impl BatchExecutor for PanicExec {
+        fn execute(&self, _reqs: &[QueryRequest]) -> Vec<QueryResponse> {
+            unreachable!("execute_tracked is overridden");
+        }
+
+        fn execute_tracked(
+            &self,
+            reqs: &[QueryRequest],
+            recorded: &AtomicUsize,
+        ) -> Vec<QueryResponse> {
+            let call = self.entered.fetch_add(1, Ordering::SeqCst) + 1;
+            let mut open = self.gate.lock().unwrap();
+            while !*open {
+                open = self.gate_cv.wait(open).unwrap();
+            }
+            drop(open);
+            let mut out = Vec::new();
+            for (i, r) in reqs.iter().enumerate() {
+                if call > 1 && i >= self.record_before_panic {
+                    panic!("injected mid-batch executor failure");
+                }
+                self.metrics.record_request();
+                self.metrics.record_miss();
+                recorded.fetch_add(1, Ordering::SeqCst);
+                out.push(QueryResponse {
+                    response: r.text.clone(),
+                    outcome: Outcome::Miss { inserted_id: 1 },
+                    latency: LatencyBreakdown::default(),
+                    judged_positive: None,
+                    matched_cluster: None,
+                    client_tag: r.client_tag.clone(),
+                });
+            }
+            out
+        }
+    }
+
+    #[test]
+    fn executor_panic_keeps_metrics_invariant_exact() {
+        // Pin a warm-up dispatch behind the gate, queue 4 dups + 2
+        // distinct requests so they land in one dispatch, then let the
+        // executor record exactly one query before panicking. The old
+        // reject_all recorded request+rejected for *every* submission,
+        // double-counting the query the executor had already recorded.
+        let metrics = Arc::new(Metrics::new());
+        let exec = Arc::new(PanicExec {
+            metrics: metrics.clone(),
+            entered: AtomicUsize::new(0),
+            gate: Mutex::new(false),
+            gate_cv: Condvar::new(),
+            record_before_panic: 1,
+        });
+        let cfg = BatchConfig { max_batch_size: 8, max_wait_us: 0, queue_capacity: 16, dispatchers: 1 };
+        let b = Batcher::start(exec.clone(), metrics.clone(), cfg).unwrap();
+        std::thread::scope(|scope| {
+            let warm = b.clone();
+            scope.spawn(move || {
+                let resp = warm.submit(&QueryRequest::new("warm up")).unwrap();
+                assert!(
+                    matches!(resp.outcome, Outcome::Miss { .. }),
+                    "warm-up dispatch succeeds"
+                );
+            });
+            wait_until("dispatcher entered execute", || {
+                exec.entered.load(Ordering::SeqCst) == 1
+            });
+            for i in 0..6 {
+                let b = b.clone();
+                let text = if i < 4 { "doomed dup".to_string() } else { format!("doomed {i}") };
+                scope.spawn(move || {
+                    let resp = b.submit(&QueryRequest::new(text)).unwrap();
+                    // Every submitter still gets exactly one reply, a
+                    // typed rejection.
+                    assert!(
+                        matches!(resp.outcome, Outcome::Rejected { .. }),
+                        "panicked dispatch answers Rejected, got {:?}",
+                        resp.outcome
+                    );
+                });
+            }
+            wait_until("all 6 submissions queued", || b.queue_depth() == 6);
+            *exec.gate.lock().unwrap() = true;
+            exec.gate_cv.notify_all();
+        });
+        b.shutdown();
+        let m = metrics.snapshot();
+        // warm-up (1 recorded miss) + panicked dispatch (1 recorded
+        // miss, 5 rejections) = 7 requests, no double counts.
+        assert_eq!(m.requests, 7, "each submission recorded exactly once");
+        assert_eq!(m.cache_misses, 2, "warm-up + the one query recorded pre-panic");
+        assert_eq!(m.rejected, 5, "remaining submissions rejected exactly once each");
+        assert_eq!(
+            m.cache_hits + m.cache_misses + m.rejected,
+            m.requests,
+            "metrics invariant holds across an executor-panic dispatch"
+        );
+    }
+
+    #[test]
+    fn identical_requests_coalesce_across_sharded_batcher() {
+        // dispatchers = 4: the route is a pure function of the
+        // coalescing key, so 5 identical in-flight requests all land on
+        // one shard and still coalesce — the PR 3 guarantee survives
+        // sharding.
+        let exec = EchoExec::new(true);
+        let metrics = Arc::new(Metrics::new());
+        let cfg = BatchConfig { max_batch_size: 8, max_wait_us: 0, queue_capacity: 16, dispatchers: 4 };
+        let b = Batcher::start(exec.clone(), metrics.clone(), cfg).unwrap();
+        assert_eq!(b.dispatchers(), 4);
+        std::thread::scope(|scope| {
+            let first = b.clone();
+            scope.spawn(move || {
+                let resp = first.submit(&QueryRequest::new("dup question")).unwrap();
+                assert_eq!(resp.response, "dup question");
+            });
+            // The first identical request pins its shard's dispatcher
+            // inside execute (gate closed).
+            wait_until("shard dispatcher entered execute", || {
+                exec.entered.load(Ordering::SeqCst) == 1
+            });
+            for _ in 0..4 {
+                let b = b.clone();
+                scope.spawn(move || {
+                    let resp = b.submit(&QueryRequest::new("dup question")).unwrap();
+                    assert_eq!(resp.response, "dup question");
+                });
+            }
+            wait_until("4 identical requests queued", || b.queue_depth() == 4);
+            // Same key => same shard: were any routed elsewhere, that
+            // shard's (idle) dispatcher would have entered execute and
+            // blocked on the shared gate too.
+            assert_eq!(
+                exec.entered.load(Ordering::SeqCst),
+                1,
+                "identical requests all queued behind the same shard"
+            );
+            exec.open_gate();
+        });
+        b.shutdown();
+        let calls = exec.calls.lock().unwrap();
+        assert_eq!(calls.len(), 2, "pinned dispatch + coalesced dispatch: {calls:?}");
+        assert_eq!(calls[1], vec!["dup question"], "4 queued dups dedup to one execution");
+        assert_eq!(metrics.snapshot().coalesced, 3);
+    }
+
+    #[test]
+    fn hot_shard_does_not_serialize_other_shards() {
+        // Two requests that hash to different shards must be in
+        // execute concurrently: a hot key pinning one dispatcher can
+        // never serialize traffic on the others.
+        let shards = 4;
+        let hot = QueryRequest::new("hot shard probe");
+        let hot_shard = shard_of(&hot, shards);
+        let cold = (0..256)
+            .map(|i| QueryRequest::new(format!("cold probe {i}")))
+            .find(|r| shard_of(r, shards) != hot_shard)
+            .expect("some probe hashes to a different shard");
+        let exec = EchoExec::new(true);
+        let cfg = BatchConfig { max_batch_size: 8, max_wait_us: 0, queue_capacity: 16, dispatchers: shards };
+        let b = Batcher::start(exec.clone(), Arc::new(Metrics::new()), cfg).unwrap();
+        std::thread::scope(|scope| {
+            let (b1, hot) = (b.clone(), hot.clone());
+            scope.spawn(move || b1.submit(&hot).unwrap());
+            wait_until("hot dispatcher entered execute", || {
+                exec.entered.load(Ordering::SeqCst) == 1
+            });
+            let (b2, cold) = (b.clone(), cold.clone());
+            scope.spawn(move || b2.submit(&cold).unwrap());
+            // With the hot dispatcher still gated, the cold request's
+            // dispatcher enters execute on its own — proof the shards
+            // run independently. (Pre-sharding this deadlocked: one
+            // dispatcher, gate never reached twice.)
+            wait_until("cold dispatcher entered execute concurrently", || {
+                exec.entered.load(Ordering::SeqCst) == 2
+            });
+            exec.open_gate();
+        });
+        b.shutdown();
+        assert_eq!(exec.calls.lock().unwrap().len(), 2);
     }
 }

@@ -90,8 +90,25 @@ pub struct HttpConfig {
     pub event_loop: bool,
     /// Event-loop mode only: connections beyond this are answered `503`
     /// and closed at accept time instead of growing the fd table
-    /// without bound.
+    /// without bound. Auto-clamped at startup against what
+    /// `RLIMIT_NOFILE` can actually be raised to (with headroom for the
+    /// listener, wake pipes, workers, and data files), so the budget is
+    /// never an fd-exhaustion trap.
     pub max_conns: usize,
+    /// Event-loop mode only: reactor threads. Each owns its own poller,
+    /// connection table, and completion queue; the first holds the
+    /// listener and deals admitted connections round-robin to the
+    /// fleet. Default: one per core, capped at 8
+    /// ([`crate::util::auto_reactors`]); `0` = the pre-sharding
+    /// single-reactor behavior (same as `1`).
+    pub reactors: usize,
+    /// Batcher dispatcher shards, hash-routed on the coalescing key
+    /// (identical in-flight requests always share a dispatcher, so
+    /// coalescing is unaffected). Default: half the cores, capped at 4
+    /// ([`crate::util::auto_dispatchers`]); `0` = the pre-sharding
+    /// single-dispatcher behavior (same as `1`). Ignored when
+    /// `batching` is off.
+    pub dispatchers: usize,
     /// Event-loop mode only: force the portable `poll(2)` backend even
     /// where epoll is available (the macOS/CI code path; also lets Linux
     /// CI exercise the fallback).
@@ -108,6 +125,8 @@ impl Default for HttpConfig {
             batching: true,
             event_loop: true,
             max_conns: 1024,
+            reactors: crate::util::auto_reactors(),
+            dispatchers: crate::util::auto_dispatchers(),
             poll_fallback: false,
         }
     }
@@ -120,21 +139,50 @@ pub fn serve_http(server: Arc<Server>, cfg: HttpConfig) -> Result<HttpHandle> {
     let listener =
         TcpListener::bind(&cfg.addr).with_context(|| format!("binding {}", cfg.addr))?;
     let addr = listener.local_addr().context("reading bound address")?;
-    // The batcher (when enabled) is shared by every request worker; it
-    // is shut down by the handle after the workers have drained.
-    let batcher = if cfg.batching { Some(server.start_batcher()?) } else { None };
+    // The batcher (when enabled) is shared by every request worker and
+    // hash-sharded over `dispatchers` dispatcher threads; it is shut
+    // down by the handle after the workers have drained. `0` keeps the
+    // pre-sharding single-dispatcher wire path.
+    let dispatchers = cfg.dispatchers.max(1);
+    let batcher =
+        if cfg.batching { Some(server.start_batcher_sharded(dispatchers)?) } else { None };
 
     #[cfg(unix)]
     {
         if cfg.event_loop {
+            // `0` = the pre-sharding single-reactor behavior.
+            let reactors = cfg.reactors.max(1);
+            // Auto-scale the connection budget against RLIMIT_NOFILE:
+            // raise the soft limit toward what max_conns needs (plus
+            // headroom for the listener, per-reactor wake pipes, the
+            // data dir, and stdio), and clamp max_conns down — loudly —
+            // when the hard limit cannot cover it. Without this a
+            // too-generous budget turns into silent accept failures at
+            // fd exhaustion instead of typed 503s.
+            let headroom = 64 + 2 * reactors;
+            let want = cfg.max_conns.max(1);
+            let soft = crate::util::poll::raise_nofile_limit((want + headroom) as u64);
+            let max_conns = if soft == 0 {
+                want // could not read the limit; trust the caller
+            } else {
+                let budget = (soft as usize).saturating_sub(headroom).max(1);
+                if budget < want {
+                    eprintln!(
+                        "[semcached] max_conns {want} exceeds the RLIMIT_NOFILE budget; \
+                         clamping to {budget} (soft limit {soft}, headroom {headroom})"
+                    );
+                }
+                want.min(budget)
+            };
             let handle = super::reactor::serve_event_loop(
                 server,
                 batcher.clone(),
                 listener,
                 super::reactor::ReactorConfig {
                     workers: cfg.workers.max(1),
+                    reactors,
                     max_body: cfg.max_body_bytes,
-                    max_conns: cfg.max_conns.max(1),
+                    max_conns,
                     read_timeout: cfg.read_timeout,
                     poll_fallback: cfg.poll_fallback,
                 },
@@ -787,9 +835,24 @@ pub fn write_response(
     w.flush()
 }
 
-fn write_all_resumable(w: &mut TcpStream, mut buf: &[u8]) -> std::io::Result<()> {
+fn write_all_resumable(w: &mut TcpStream, buf: &[u8]) -> std::io::Result<()> {
     // Bound the total time spent retrying a never-draining socket so a
     // dead peer cannot pin a connection worker forever.
+    write_all_deadline(w, buf, Duration::from_secs(20))
+}
+
+/// Write all of `buf`, resuming across short writes and `EINTR`, and
+/// retrying `EWOULDBLOCK`/`TimedOut` stalls for at most `limit` of
+/// *cumulative* stall time (progress resets the clock). The reactor's
+/// accept-path refusals use a short limit — a 503 is tens of bytes, so
+/// any live peer drains it immediately, while a dead one must not pin
+/// the reactor thread.
+pub(super) fn write_all_deadline(
+    w: &mut TcpStream,
+    mut buf: &[u8],
+    limit: Duration,
+) -> std::io::Result<()> {
+    let limit_ms = limit.as_millis() as u64;
     let mut stalled_ms = 0u64;
     while !buf.is_empty() {
         match w.write(buf) {
@@ -811,7 +874,7 @@ fn write_all_resumable(w: &mut TcpStream, mut buf: &[u8]) -> std::io::Result<()>
                 ) =>
             {
                 stalled_ms += 1;
-                if stalled_ms > 20_000 {
+                if stalled_ms > limit_ms {
                     return Err(std::io::Error::new(
                         std::io::ErrorKind::TimedOut,
                         "peer stopped draining the response",

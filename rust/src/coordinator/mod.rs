@@ -26,13 +26,20 @@
 //! in-flight queries deduplicated so repetitive traffic pays for one
 //! embed/lookup/LLM call instead of N.
 //!
-//! The wire itself is event-driven by default: an epoll/poll readiness
-//! loop (the `reactor` module, via [`crate::util::poll`]) holds every
-//! connection on one thread and hands only complete parsed requests to
-//! a small worker pool, so idle keep-alive connections cost a file
-//! descriptor instead of a pinned thread. The pre-reactor blocking
-//! design survives behind [`HttpConfig::event_loop`]` = false`
-//! (`semcached serve --threaded-accept`).
+//! The wire itself is event-driven by default: a fleet of epoll/poll
+//! readiness loops (the `reactor` module, via [`crate::util::poll`]) —
+//! [`HttpConfig::reactors`] threads, each owning its own poller,
+//! connection table, and completion queue, with accepted connections
+//! dealt round-robin from the listener-owning reactor — holds every
+//! connection without a pinned thread and hands only complete parsed
+//! requests to a small worker pool, so idle keep-alive connections cost
+//! a file descriptor instead of a thread. The batcher is likewise
+//! sharded over [`BatchConfig::dispatchers`] threads, hash-partitioned
+//! on the coalescing key so identical in-flight requests always meet on
+//! the same dispatcher (and still coalesce) while a hot key can never
+//! serialize cold ones. The pre-reactor blocking design survives behind
+//! [`HttpConfig::event_loop`]` = false` (`semcached serve
+//! --threaded-accept`).
 //!
 //! Latency accounting mixes *measured* wall-clock for everything the
 //! Rust process does (tokenize, encode, search, insert) with the
@@ -49,7 +56,7 @@ mod reactor;
 mod server;
 mod trace;
 
-pub use batcher::{BatchConfig, BatchExecutor, Batcher, SubmitError};
+pub use batcher::{BatchConfig, BatchExecutor, Batcher, SubmitError, MAX_DISPATCHERS_LIMIT};
 pub use http::{http_request, serve_http, HttpConfig, HttpHandle};
 pub use server::{
     HousekeepingGuard, Reply, ReplySource, Server, ServerConfig, ServerConfigBuilder,

@@ -1,70 +1,95 @@
-//! Event-driven HTTP serving: one reactor thread, epoll/poll readiness,
-//! nonblocking sockets, resumable per-connection state machines.
+//! Event-driven HTTP serving: a fleet of reactor threads, epoll/poll
+//! readiness, nonblocking sockets, resumable per-connection state
+//! machines.
 //!
 //! The threaded-accept front-end pins one pool worker per open
 //! connection, so a few hundred idle keep-alive chatbot sessions starve
 //! fresh queries — exactly the long-lived-session traffic shape the
 //! paper's cache fronts. This module replaces the wire path with a
-//! readiness loop:
+//! readiness loop, sharded over `reactors` threads once one reactor's
+//! accept/parse throughput becomes the bottleneck:
 //!
 //! ```text
-//!             ┌──────────────────── reactor thread ───────────────────┐
-//!  accept ───►│ nonblocking listener                                  │
-//!  sockets ──►│ per-conn state machine: Reading ─► InFlight ─► Writing│
-//!             │   (incremental RequestParser)        ▲        (partial│
-//!             │                                      │         writes │
-//!             └───── complete parsed requests ───────┼────── resume) ─┘
-//!                          │                         │ wakeup (pipe)
-//!                          ▼                         │
-//!                   request worker pool ── responses ┘
-//!                     │ (route_begin)
-//!                     ├─ batched /v1/query ─► Batcher::submit_with
-//!                     │     (callback fan-back; no thread waits)
-//!                     └─ everything else  ─► served on the worker
+//!            ┌──────────── reactor 0 ────────────┐
+//!  accept ──►│ nonblocking listener              │
+//!  sockets ─►│   │ admit (global max_conns)      │
+//!            │   ├─ keep 1/N locally             │
+//!            │   └─ deal N-1/N round-robin ──────┼──► sibling inboxes
+//!            └───────────────────────────────────┘    (+ wake byte)
+//!            ┌─────────── reactor i (0..N) ──────────────────────────┐
+//!            │ per-conn state machine: Reading ─► InFlight ─► Writing│
+//!            │   (incremental RequestParser)        ▲        (partial│
+//!            │                                      │         writes │
+//!            └───── complete parsed requests ───────┼────── resume) ─┘
+//!                         │ Work{reactor,token}     │ wakeup (pipe)
+//!                         ▼                         │
+//!                  request worker pool ─ responses ─┘
+//!                    │ (route_begin)       (to the owning reactor's
+//!                    │                      completion queue)
+//!                    ├─ batched /v1/query ─► Batcher::submit_with
+//!                    │     (callback fan-back; no thread waits)
+//!                    └─ everything else  ─► served on the worker
 //! ```
+//!
+//! **The fleet.** Every reactor owns its own [`Poller`], connection
+//! table, completion queue, and wake pipe; connections never migrate, so
+//! there is no cross-reactor locking on the hot path. Reactor 0 holds
+//! the (nonblocking) listener and deals admitted connections round-robin
+//! to the whole fleet through per-reactor inboxes (rotating listener
+//! handoff) — a handed-off socket costs one `Mutex` push plus one wake
+//! byte, once per connection lifetime. The shared request worker pool
+//! routes each completion back to the owning reactor via its
+//! `Work.reactor` index. `reactors == 1` is exactly the pre-sharding
+//! single-threaded behavior.
 //!
 //! Connection lifecycle:
 //!
 //! * **Reading** — bytes are pulled until `EWOULDBLOCK` and fed to the
 //!   shared incremental [`RequestParser`]; a slow-drip client costs a
 //!   few buffered bytes, not a thread (each incomplete round bumps the
-//!   `parse_stalls` counter). A complete request moves the connection
-//!   to *InFlight* and clears its readiness interest (pipelined bytes
-//!   stay buffered; TCP backpressure throttles the rest).
+//!   `parse_stalls` counter, aggregate and per-reactor). A complete
+//!   request moves the connection to *InFlight* and clears its readiness
+//!   interest (pipelined bytes stay buffered; TCP backpressure throttles
+//!   the rest).
 //! * **InFlight** — exactly one request per connection is out with the
-//!   worker pool; the response comes back over the completion queue
-//!   plus a wake byte on the self-pipe.
+//!   worker pool; the response comes back over the owning reactor's
+//!   completion queue plus a wake byte on its self-pipe.
 //! * **Writing** — the serialized response is written as far as the
 //!   socket allows; `EWOULDBLOCK` parks the connection on write
 //!   readiness and resumes later (partial-write resumption). When the
 //!   write finishes, buffered pipelined requests are served before the
 //!   connection goes back to waiting on readable.
 //!
-//! Limits: `max_conns` bounds the fd table (beyond it, accepted
-//! connections are answered `503` and closed); `read_timeout` sweeps
-//! idle connections (silent close at a request boundary, `408`/`400`
-//! mid-request — same contract as the threaded mode). Shutdown wakes
-//! the reactor, closes every connection, then joins the worker pool.
+//! Limits: `max_conns` bounds the fd table *globally* (an atomic
+//! admission budget shared by the fleet; beyond it, accepted connections
+//! are answered a complete `503` and closed — see
+//! [`Reactor::refuse`]); `read_timeout` sweeps idle connections
+//! (silent close at a request boundary, `408`/`400` mid-request — same
+//! contract as the threaded mode). Every refusal path — over-budget,
+//! `set_nonblocking` failure, poller registration failure — answers the
+//! 503 and bumps `conns_rejected`; no connection is ever dropped
+//! silently. Shutdown wakes every reactor, closes every connection, then
+//! joins the worker pool.
 
 use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::os::unix::io::AsRawFd;
 use std::os::unix::net::UnixStream;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::error::{Context, Result};
-use crate::metrics::Metrics;
+use crate::metrics::{Metrics, ReactorStats};
 use crate::util::poll::{Interest, PollEvent, Poller};
 
 use super::batcher::Batcher;
 use super::http::{
-    rejected_submit_response, route_begin, serialize_response, HttpRequest, HttpResponse,
-    ParsePhase, ParseStep, RequestParser, Routed,
+    rejected_submit_response, route_begin, serialize_response, write_all_deadline, HttpRequest,
+    HttpResponse, ParsePhase, ParseStep, RequestParser, Routed,
 };
 use super::Server;
 
@@ -72,22 +97,31 @@ const LISTENER_TOKEN: u64 = 0;
 const WAKE_TOKEN: u64 = 1;
 const FIRST_CONN_TOKEN: u64 = 2;
 
+/// Longest a refused connection's 503 write may stall before the
+/// reactor gives up on it. The response is tens of bytes — a live peer
+/// drains it in one write; only a dead or malicious one hits this.
+const REFUSE_WRITE_LIMIT: Duration = Duration::from_millis(250);
+
 /// Event-loop knobs (derived from [`super::http::HttpConfig`]).
+#[derive(Clone)]
 pub(super) struct ReactorConfig {
     pub(super) workers: usize,
+    pub(super) reactors: usize,
     pub(super) max_body: usize,
     pub(super) max_conns: usize,
     pub(super) read_timeout: Duration,
     pub(super) poll_fallback: bool,
 }
 
-/// One complete parsed request on its way to the worker pool.
+/// One complete parsed request on its way to the worker pool;
+/// `reactor` routes the completion back to the connection's owner.
 struct Work {
+    reactor: usize,
     token: u64,
     req: HttpRequest,
 }
 
-/// One finished response on its way back to the reactor.
+/// One finished response on its way back to its reactor.
 struct Completion {
     token: u64,
     resp: HttpResponse,
@@ -96,8 +130,12 @@ struct Completion {
 
 type CompletionQueue = Arc<Mutex<Vec<Completion>>>;
 
-/// Wakes the reactor out of `poll`/`epoll_wait` by writing one byte to
-/// the self-pipe. Nonblocking: a full pipe means a wake is already
+/// Freshly accepted connections handed off to a sibling reactor by the
+/// listener-owning one (rotating listener handoff).
+type Inbox = Arc<Mutex<Vec<TcpStream>>>;
+
+/// Wakes a reactor out of `poll`/`epoll_wait` by writing one byte to
+/// its self-pipe. Nonblocking: a full pipe means a wake is already
 /// pending, which is all we need.
 #[derive(Clone)]
 struct Waker {
@@ -111,36 +149,53 @@ impl Waker {
     }
 }
 
+/// How to reach one reactor from outside its thread: push work results
+/// or fresh connections, then wake it.
+struct ReactorLink {
+    completions: CompletionQueue,
+    waker: Waker,
+    inbox: Inbox,
+}
+
+/// Fleet-wide state: the stop flag and the global connection-admission
+/// budget (`open` counts admitted-but-not-torn-down connections across
+/// every reactor, including ones still in a handoff inbox).
+struct Shared {
+    stop: AtomicBool,
+    open: AtomicUsize,
+}
+
 /// Everything a request worker needs to serve and fan back.
 struct WorkerCtx {
     server: Arc<Server>,
     batcher: Option<Arc<Batcher>>,
-    completions: CompletionQueue,
-    waker: Waker,
+    links: Arc<Vec<ReactorLink>>,
 }
 
 /// Owns the reactor + worker threads; joined on [`EventLoopHandle::shutdown`].
 pub(super) struct EventLoopHandle {
-    stop: Arc<AtomicBool>,
-    waker: Waker,
-    reactor: Option<JoinHandle<()>>,
+    shared: Arc<Shared>,
+    wakers: Vec<Waker>,
+    reactors: Vec<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
 }
 
 impl EventLoopHandle {
-    /// Idempotent: stop the reactor, close every connection, join the
+    /// Idempotent: stop every reactor, close every connection, join the
     /// workers. (The batcher is shut down afterwards by the owning
     /// [`super::http::HttpHandle`], once no worker can submit anymore.)
     pub(super) fn shutdown(&mut self) {
-        if self.stop.swap(true, Ordering::SeqCst) {
+        if self.shared.stop.swap(true, Ordering::SeqCst) {
             return;
         }
-        self.waker.wake();
-        if let Some(h) = self.reactor.take() {
+        for w in &self.wakers {
+            w.wake();
+        }
+        for h in self.reactors.drain(..) {
             let _ = h.join();
         }
-        // The reactor thread owned the work sender; with it gone the
-        // workers drain the queue and exit.
+        // The reactor threads owned the work senders; with them gone
+        // the workers drain the queue and exit.
         for h in self.workers.drain(..) {
             let _ = h.join();
         }
@@ -153,8 +208,11 @@ impl Drop for EventLoopHandle {
     }
 }
 
-/// Start the event loop over an already-bound listener. Returns once
-/// the reactor and worker threads are running.
+/// Start the event loop over an already-bound listener: `cfg.reactors`
+/// reactor threads plus `cfg.workers` request workers. Returns once all
+/// of them are running. Everything fallible (pollers, wake pipes,
+/// registrations) happens before the first thread is spawned, so an
+/// error never leaks half a fleet.
 pub(super) fn serve_event_loop(
     server: Arc<Server>,
     batcher: Option<Arc<Batcher>>,
@@ -162,29 +220,40 @@ pub(super) fn serve_event_loop(
     cfg: ReactorConfig,
 ) -> Result<EventLoopHandle> {
     listener.set_nonblocking(true).context("setting the listener nonblocking")?;
-    let mut poller = Poller::new(cfg.poll_fallback).context("building the readiness poller")?;
-    let (wake_rx, wake_tx) = UnixStream::pair().context("creating the reactor wake pipe")?;
-    wake_rx.set_nonblocking(true).context("wake pipe nonblocking")?;
-    wake_tx.set_nonblocking(true).context("wake pipe nonblocking")?;
-    poller
-        .register(listener.as_raw_fd(), LISTENER_TOKEN, Interest::Read)
-        .context("registering the listener")?;
-    poller
-        .register(wake_rx.as_raw_fd(), WAKE_TOKEN, Interest::Read)
-        .context("registering the wake pipe")?;
+    let n_reactors = cfg.reactors.max(1);
 
-    let waker = Waker { pipe: Arc::new(wake_tx) };
-    let completions: CompletionQueue = Arc::new(Mutex::new(Vec::new()));
-    let stop = Arc::new(AtomicBool::new(false));
+    // Per-reactor plumbing, built up front: poller (+ registered wake
+    // pipe; reactor 0 also gets the listener), completion queue, inbox.
+    let mut pollers = Vec::with_capacity(n_reactors);
+    let mut wake_rxs = Vec::with_capacity(n_reactors);
+    let mut links = Vec::with_capacity(n_reactors);
+    for id in 0..n_reactors {
+        let mut poller = Poller::new(cfg.poll_fallback).context("building a readiness poller")?;
+        let (wake_rx, wake_tx) = UnixStream::pair().context("creating a reactor wake pipe")?;
+        wake_rx.set_nonblocking(true).context("wake pipe nonblocking")?;
+        wake_tx.set_nonblocking(true).context("wake pipe nonblocking")?;
+        poller
+            .register(wake_rx.as_raw_fd(), WAKE_TOKEN, Interest::Read)
+            .context("registering the wake pipe")?;
+        if id == 0 {
+            poller
+                .register(listener.as_raw_fd(), LISTENER_TOKEN, Interest::Read)
+                .context("registering the listener")?;
+        }
+        pollers.push(poller);
+        wake_rxs.push(wake_rx);
+        links.push(ReactorLink {
+            completions: Arc::new(Mutex::new(Vec::new())),
+            waker: Waker { pipe: Arc::new(wake_tx) },
+            inbox: Arc::new(Mutex::new(Vec::new())),
+        });
+    }
+    let links = Arc::new(links);
+    let shared = Arc::new(Shared { stop: AtomicBool::new(false), open: AtomicUsize::new(0) });
     let (work_tx, work_rx) = mpsc::channel::<Work>();
     let work_rx = Arc::new(Mutex::new(work_rx));
 
-    let ctx = Arc::new(WorkerCtx {
-        server: server.clone(),
-        batcher,
-        completions: completions.clone(),
-        waker: waker.clone(),
-    });
+    let ctx = Arc::new(WorkerCtx { server: server.clone(), batcher, links: links.clone() });
     let mut workers = Vec::with_capacity(cfg.workers);
     for w in 0..cfg.workers {
         let rx = work_rx.clone();
@@ -196,24 +265,38 @@ pub(super) fn serve_event_loop(
         workers.push(handle);
     }
 
-    let reactor = Reactor {
-        cfg,
-        poller,
-        listener,
-        conns: HashMap::new(),
-        next_token: FIRST_CONN_TOKEN,
-        work_tx,
-        completions,
-        wake_rx,
-        stop: stop.clone(),
-        metrics: server.metrics(),
-    };
-    let reactor_thread = std::thread::Builder::new()
-        .name("http-reactor".into())
-        .spawn(move || reactor.run())
-        .expect("spawn http reactor");
+    let mut listener = Some(listener);
+    let mut reactors = Vec::with_capacity(n_reactors);
+    for (id, (poller, wake_rx)) in pollers.into_iter().zip(wake_rxs).enumerate() {
+        let reactor = Reactor {
+            id,
+            cfg: cfg.clone(),
+            poller,
+            listener: if id == 0 { listener.take() } else { None },
+            next_handoff: 0,
+            conns: HashMap::new(),
+            next_token: FIRST_CONN_TOKEN,
+            work_tx: work_tx.clone(),
+            completions: links[id].completions.clone(),
+            inbox: links[id].inbox.clone(),
+            links: links.clone(),
+            wake_rx,
+            shared: shared.clone(),
+            metrics: server.metrics(),
+            stats: server.metrics().register_reactor(),
+        };
+        let handle = std::thread::Builder::new()
+            .name(format!("http-reactor-{id}"))
+            .spawn(move || reactor.run())
+            .expect("spawn http reactor");
+        reactors.push(handle);
+    }
+    // The per-reactor clones are the only senders left: when the last
+    // reactor exits, the work channel disconnects and the workers drain.
+    drop(work_tx);
 
-    Ok(EventLoopHandle { stop, waker, reactor: Some(reactor_thread), workers })
+    let wakers = links.iter().map(|l| l.waker.clone()).collect();
+    Ok(EventLoopHandle { shared, wakers, reactors, workers })
 }
 
 // ---------------------------------------------------------------------
@@ -223,13 +306,13 @@ pub(super) fn serve_event_loop(
 fn worker_loop(rx: Arc<Mutex<Receiver<Work>>>, ctx: Arc<WorkerCtx>) {
     loop {
         // Hold the receiver lock only while waiting for the next item;
-        // a disconnected channel (reactor gone) ends the worker.
+        // a disconnected channel (reactors gone) ends the worker.
         let work = rx.lock().unwrap().recv();
         let work = match work {
             Ok(w) => w,
             Err(_) => break,
         };
-        let token = work.token;
+        let (reactor, token) = (work.reactor, work.token);
         let ctx2 = ctx.clone();
         // A panicking handler must not shrink the pool or strand the
         // connection: catch, answer 500, keep serving.
@@ -239,7 +322,7 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Work>>>, ctx: Arc<WorkerCtx>) {
         if outcome.is_err() {
             eprintln!("[semcached] request handler panicked; worker recovered");
             ctx.server.metrics().record_http_error();
-            complete(&ctx, token, HttpResponse::error(500, "internal handler error"), false);
+            complete(&ctx, reactor, token, HttpResponse::error(500, "internal handler error"), false);
         }
     }
 }
@@ -247,35 +330,36 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Work>>>, ctx: Arc<WorkerCtx>) {
 fn handle_work(ctx: Arc<WorkerCtx>, work: Work) {
     let keep_alive = work.req.keep_alive;
     match route_begin(&ctx.server, ctx.batcher.is_some(), &work.req) {
-        Routed::Ready(resp) => complete(&ctx, work.token, resp, keep_alive),
+        Routed::Ready(resp) => complete(&ctx, work.reactor, work.token, resp, keep_alive),
         Routed::BatchedQuery(q) => {
             let batcher = ctx.batcher.as_ref().expect("batched route without a batcher").clone();
             let cb_ctx = ctx.clone();
-            let token = work.token;
+            let (reactor, token) = (work.reactor, work.token);
             // The worker is free as soon as the submit lands: the
             // dispatcher invokes this callback with the response, which
-            // re-enters the reactor as a completion + wakeup.
+            // re-enters the owning reactor as a completion + wakeup.
             let submitted = batcher.submit_with(&q, move |qr| {
                 let resp = HttpResponse::json(200, &qr.to_json());
-                complete(&cb_ctx, token, resp, keep_alive);
+                complete(&cb_ctx, reactor, token, resp, keep_alive);
             });
             if let Err(e) = submitted {
                 let resp = rejected_submit_response(&ctx.server, &q, &e);
-                complete(&ctx, work.token, resp, keep_alive);
+                complete(&ctx, work.reactor, work.token, resp, keep_alive);
             }
         }
     }
 }
 
-fn complete(ctx: &WorkerCtx, token: u64, resp: HttpResponse, keep_alive: bool) {
+fn complete(ctx: &WorkerCtx, reactor: usize, token: u64, resp: HttpResponse, keep_alive: bool) {
+    let link = &ctx.links[reactor];
     {
         // `unwrap_or_else(into_inner)`: a poisoned queue (reactor thread
         // panicked mid-push) must not cascade panics into the batcher's
         // dispatcher via this callback.
-        let mut q = ctx.completions.lock().unwrap_or_else(|e| e.into_inner());
+        let mut q = link.completions.lock().unwrap_or_else(|e| e.into_inner());
         q.push(Completion { token, resp, keep_alive });
     }
-    ctx.waker.wake();
+    link.waker.wake();
 }
 
 // ---------------------------------------------------------------------
@@ -329,16 +413,28 @@ enum Verdict {
 }
 
 struct Reactor {
+    id: usize,
     cfg: ReactorConfig,
     poller: Poller,
-    listener: TcpListener,
+    /// Only reactor 0 holds the listener; the rest receive their
+    /// connections through `inbox`.
+    listener: Option<TcpListener>,
+    /// Round-robin cursor for dealing accepted connections to the fleet
+    /// (listener owner only).
+    next_handoff: usize,
     conns: HashMap<u64, Conn>,
     next_token: u64,
     work_tx: Sender<Work>,
     completions: CompletionQueue,
+    inbox: Inbox,
+    links: Arc<Vec<ReactorLink>>,
     wake_rx: UnixStream,
-    stop: Arc<AtomicBool>,
+    shared: Arc<Shared>,
     metrics: Arc<Metrics>,
+    /// This reactor's block in the `/v1/metrics` `reactors` array;
+    /// bumped alongside the aggregate counters so per-reactor values
+    /// always sum to the aggregates.
+    stats: Arc<ReactorStats>,
 }
 
 impl Reactor {
@@ -346,21 +442,21 @@ impl Reactor {
         let mut events: Vec<PollEvent> = Vec::new();
         let mut last_sweep = Instant::now();
         loop {
-            if self.stop.load(Ordering::SeqCst) {
+            if self.shared.stop.load(Ordering::SeqCst) {
                 break;
             }
             if self.poller.wait(&mut events, Some(Duration::from_millis(100))).is_err() {
                 // A broken poller cannot serve anything; bail out rather
                 // than spin. (Never observed outside fd exhaustion.)
-                eprintln!("[semcached] reactor poller failed; event loop exiting");
+                eprintln!("[semcached] reactor {} poller failed; event loop exiting", self.id);
                 break;
             }
-            if self.stop.load(Ordering::SeqCst) {
+            if self.shared.stop.load(Ordering::SeqCst) {
                 break;
             }
             for ev in events.drain(..) {
                 match ev.token {
-                    LISTENER_TOKEN => {
+                    LISTENER_TOKEN if self.listener.is_some() => {
                         if ev.readable || ev.closed {
                             self.accept_ready();
                         }
@@ -369,6 +465,9 @@ impl Reactor {
                     token => self.conn_event(token, ev),
                 }
             }
+            // Admit handed-off connections even if the wake byte raced
+            // ahead of the inbox push; the check is one uncontended lock.
+            self.drain_inbox();
             self.pump_completions();
             if last_sweep.elapsed() >= Duration::from_millis(200) {
                 self.sweep_idle();
@@ -376,48 +475,123 @@ impl Reactor {
             }
         }
         // Teardown: close every connection so the open-connections gauge
-        // returns to zero.
+        // returns to zero, and release undelivered handoffs' budget.
         let tokens: Vec<u64> = self.conns.keys().copied().collect();
         for t in tokens {
             if let Some(conn) = self.conns.remove(&t) {
                 self.teardown(conn);
             }
         }
+        let leftover: Vec<TcpStream> = std::mem::take(&mut *self.inbox.lock().unwrap());
+        for stream in leftover {
+            // Admitted into the budget but never opened as a connection:
+            // release the slot; no conn_open/closed pair to record.
+            self.shared.open.fetch_sub(1, Ordering::SeqCst);
+            drop(stream);
+        }
     }
 
+    /// Accept until the listener would block, admitting each connection
+    /// into the global budget and dealing it round-robin across the
+    /// fleet (self included). Listener owner only.
     fn accept_ready(&mut self) {
         loop {
-            match self.listener.accept() {
+            let accepted = match &self.listener {
+                Some(l) => l.accept(),
+                None => return,
+            };
+            match accepted {
                 Ok((stream, _)) => {
-                    if self.conns.len() >= self.cfg.max_conns {
-                        // Over the connection budget: answer 503 (one
-                        // best-effort write) and close, instead of
-                        // growing the fd table without bound.
-                        self.metrics.record_conn_rejected();
-                        let resp = HttpResponse::error(503, "connection limit reached");
-                        let bytes = serialize_response(&resp, false);
-                        let mut s = stream;
-                        let _ = s.set_nonblocking(true);
-                        let _ = s.write(&bytes);
+                    // Claim a budget slot first; only the acceptor
+                    // increments, but teardowns decrement concurrently
+                    // from every reactor.
+                    let prev = self.shared.open.fetch_add(1, Ordering::SeqCst);
+                    if prev >= self.cfg.max_conns {
+                        self.shared.open.fetch_sub(1, Ordering::SeqCst);
+                        // Over the connection budget: answer a complete
+                        // 503 and close, instead of growing the fd
+                        // table without bound.
+                        self.refuse(stream, "connection limit reached");
                         continue;
                     }
                     if stream.set_nonblocking(true).is_err() {
+                        // A connection this reactor cannot drive is
+                        // still answered and counted, never dropped on
+                        // the floor (the write below copes with a
+                        // blocking socket; a 503 fits any send buffer).
+                        self.shared.open.fetch_sub(1, Ordering::SeqCst);
+                        self.refuse(stream, "connection setup failed");
                         continue;
                     }
                     let _ = stream.set_nodelay(true);
-                    let token = self.next_token;
-                    self.next_token += 1;
-                    if self.poller.register(stream.as_raw_fd(), token, Interest::Read).is_err() {
-                        continue;
+                    let target = self.next_handoff;
+                    self.next_handoff = (self.next_handoff + 1) % self.links.len();
+                    if target == self.id {
+                        self.admit(stream);
+                    } else {
+                        let link = &self.links[target];
+                        link.inbox.lock().unwrap().push(stream);
+                        link.waker.wake();
                     }
-                    self.metrics.record_conn_open();
-                    self.conns.insert(token, Conn::new(stream, self.cfg.max_body));
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
                 Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
                 // Transient accept failure (e.g. fd exhaustion): retry on
                 // the next readiness report instead of spinning.
                 Err(_) => break,
+            }
+        }
+    }
+
+    /// Take ownership of an admitted (budget-counted, nonblocking)
+    /// connection: register it with this reactor's poller and add it to
+    /// the table. Registration failure refunds the budget slot and
+    /// answers 503 — the fd-exhaustion case must be visible to the
+    /// client and the metrics, not a silent drop.
+    fn admit(&mut self, stream: TcpStream) {
+        let token = self.next_token;
+        self.next_token += 1;
+        if self.poller.register(stream.as_raw_fd(), token, Interest::Read).is_err() {
+            self.shared.open.fetch_sub(1, Ordering::SeqCst);
+            self.refuse(stream, "connection setup failed");
+            return;
+        }
+        self.metrics.record_conn_open();
+        self.stats.conn_open();
+        self.conns.insert(token, Conn::new(stream, self.cfg.max_body));
+    }
+
+    /// Refuse a connection with a best-effort *complete* 503: the whole
+    /// response is written (retrying short writes up to
+    /// [`REFUSE_WRITE_LIMIT`]) and the write side shut down, so the
+    /// client sees a typed refusal rather than a truncated response or
+    /// a bare RST. Always recorded as `conns_rejected`.
+    fn refuse(&self, stream: TcpStream, reason: &str) {
+        self.metrics.record_conn_rejected();
+        let resp = HttpResponse::error(503, reason);
+        let bytes = serialize_response(&resp, false);
+        let mut stream = stream;
+        let _ = stream.set_nonblocking(true);
+        let _ = write_all_deadline(&mut stream, &bytes, REFUSE_WRITE_LIMIT);
+        let _ = stream.shutdown(std::net::Shutdown::Write);
+        // Dropping the stream closes it after the FIN.
+    }
+
+    /// Admit connections handed off by the listener-owning reactor.
+    fn drain_inbox(&mut self) {
+        loop {
+            // Take the batch under the lock, admit outside it: `admit`
+            // can block briefly in `refuse` and must not hold up the
+            // acceptor.
+            let pending: Vec<TcpStream> = {
+                let mut inbox = self.inbox.lock().unwrap();
+                if inbox.is_empty() {
+                    return;
+                }
+                std::mem::take(&mut *inbox)
+            };
+            for stream in pending {
+                self.admit(stream);
             }
         }
     }
@@ -506,6 +680,7 @@ impl Reactor {
             // Bytes arrived and the request is still incomplete: a
             // slow-drip (or just slow) client.
             self.metrics.record_parse_stall();
+            self.stats.parse_stall();
         }
         if conn.saw_eof && matches!(conn.state, ConnState::Reading) {
             return self.resolve_eof(token, conn);
@@ -557,7 +732,7 @@ impl Reactor {
         conn.state = ConnState::InFlight;
         conn.last_activity = Instant::now();
         self.want_interest(token, conn, Interest::None);
-        if self.work_tx.send(Work { token, req }).is_err() {
+        if self.work_tx.send(Work { reactor: self.id, token, req }).is_err() {
             // Only possible when the pool is gone (shutdown mid-flight).
             return Verdict::Close;
         }
@@ -607,7 +782,7 @@ impl Reactor {
         let _ = conn.stream.flush();
         conn.write_buf.clear();
         conn.write_pos = 0;
-        if !conn.keep_alive_after || self.stop.load(Ordering::SeqCst) {
+        if !conn.keep_alive_after || self.shared.stop.load(Ordering::SeqCst) {
             return Verdict::Close;
         }
         conn.state = ConnState::Reading;
@@ -707,7 +882,9 @@ impl Reactor {
 
     fn teardown(&mut self, conn: Conn) {
         let _ = self.poller.deregister(conn.stream.as_raw_fd());
+        self.shared.open.fetch_sub(1, Ordering::SeqCst);
         self.metrics.record_conn_closed();
+        self.stats.conn_closed();
         // Dropping `conn` closes the socket.
     }
 }

@@ -356,6 +356,21 @@ impl Server {
         Batcher::start(self.clone(), self.metrics(), self.batch_cfg.clone())
     }
 
+    /// [`Server::start_batcher`] with an explicit dispatcher-shard
+    /// count, overriding the server's configured window policy:
+    /// submissions are hash-routed on their coalescing key across
+    /// `dispatchers` dispatcher threads (clamped to
+    /// `1..=`[`crate::coordinator::batcher::MAX_DISPATCHERS_LIMIT`]), so
+    /// a hot key can never serialize the others. The HTTP front-end
+    /// wires `HttpConfig::dispatchers` through here.
+    pub fn start_batcher_sharded(self: &Arc<Self>, dispatchers: usize) -> Result<Arc<Batcher>> {
+        let cfg = BatchConfig {
+            dispatchers: dispatchers.clamp(1, crate::coordinator::batcher::MAX_DISPATCHERS_LIMIT),
+            ..self.batch_cfg.clone()
+        };
+        Batcher::start(self.clone(), self.metrics(), cfg)
+    }
+
     /// Override the similarity threshold for every subsequent request;
     /// `None` restores the config value.
     #[deprecated(
@@ -613,6 +628,23 @@ impl Server {
         reqs: &[QueryRequest],
         workers: usize,
     ) -> Vec<QueryResponse> {
+        self.serve_batch_tracked(reqs, workers, &AtomicUsize::new(0))
+    }
+
+    /// [`Server::serve_batch_with_workers`] with an accounting-progress
+    /// counter: `recorded` is bumped once per query whose `request` +
+    /// outcome (hit/miss/rejected) metrics are both recorded, and the
+    /// bump is adjacent to those recordings, so a worker panicking
+    /// mid-batch leaves `recorded` equal to the number of fully
+    /// accounted queries. The batcher reads it to keep
+    /// `cache_hits + cache_misses + rejected == requests` exact when it
+    /// rejects the remainder of a failed dispatch.
+    fn serve_batch_tracked(
+        &self,
+        reqs: &[QueryRequest],
+        workers: usize,
+        recorded: &AtomicUsize,
+    ) -> Vec<QueryResponse> {
         if reqs.is_empty() {
             return Vec::new();
         }
@@ -699,9 +731,10 @@ impl Server {
                     let mut next_embedding = 0;
                     for (off, req) in chunk.iter().enumerate() {
                         let i = start + off;
-                        self.metrics.record_request();
                         if let Some(reason) = rejections[off].take() {
+                            self.metrics.record_request();
                             self.metrics.record_rejected();
+                            recorded.fetch_add(1, Ordering::SeqCst);
                             done.push((i, QueryResponse::rejected(req, reason)));
                             continue;
                         }
@@ -713,15 +746,19 @@ impl Server {
                         if outcome.memo_hit && chunk_all_memo_hits {
                             self.metrics.observe_embed_memo_ms(per_query_ms);
                         }
-                        done.push((
-                            i,
-                            self.serve_embedded(
-                                req,
-                                &outcome.embedding,
-                                per_query_ms,
-                                outcome.memo_hit,
-                            ),
-                        ));
+                        let resp = self.serve_embedded(
+                            req,
+                            &outcome.embedding,
+                            per_query_ms,
+                            outcome.memo_hit,
+                        );
+                        // `request` is recorded only once the outcome is
+                        // too (serve_embedded records hit/miss), and the
+                        // progress bump rides right behind both, so a
+                        // panic can't leave a half-accounted query.
+                        self.metrics.record_request();
+                        recorded.fetch_add(1, Ordering::SeqCst);
+                        done.push((i, resp));
                     }
                     slots.lock().unwrap().extend(done);
                 });
@@ -853,6 +890,14 @@ impl Server {
 impl BatchExecutor for Server {
     fn execute(&self, reqs: &[QueryRequest]) -> Vec<QueryResponse> {
         self.serve_batch(reqs)
+    }
+
+    /// [`BatchExecutor::execute`] with exact accounting progress: the
+    /// batcher's failed-dispatch rejection path reads `recorded` to
+    /// avoid double-counting queries this server already recorded
+    /// before a mid-batch panic.
+    fn execute_tracked(&self, reqs: &[QueryRequest], recorded: &AtomicUsize) -> Vec<QueryResponse> {
+        self.serve_batch_tracked(reqs, self.workers, recorded)
     }
 
     /// Answer an identical in-flight twin from its representative's

@@ -10,7 +10,7 @@ mod histogram;
 pub use histogram::Histogram;
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::json::{obj, Value};
 use crate::util::Summary;
@@ -122,6 +122,52 @@ pub struct Metrics {
     lat_queue_wait: Mutex<Histogram>,
     lat_dispatch: Mutex<Histogram>,
     batcher_batch_size: Mutex<Histogram>,
+    // Per-reactor breakdowns (event-loop front-end): one block per
+    // reactor thread, registered at reactor startup. Reactors bump their
+    // own block and the aggregate gauges at the same sites, so the
+    // per-reactor values always sum to the aggregates.
+    reactors: Mutex<Vec<Arc<ReactorStats>>>,
+}
+
+/// Per-reactor counters for the sharded event loop. Each reactor thread
+/// owns one (via [`Metrics::register_reactor`]) and bumps it alongside
+/// the aggregate connection gauges, giving `/v1/metrics` a per-reactor
+/// `open`/`accepted`/`stalls` breakdown that sums to the aggregates.
+#[derive(Default)]
+pub struct ReactorStats {
+    pub accepted: AtomicU64,
+    pub open: AtomicU64,
+    pub parse_stalls: AtomicU64,
+}
+
+impl ReactorStats {
+    pub fn conn_open(&self) {
+        self.accepted.fetch_add(1, Ordering::Relaxed);
+        self.open.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Saturating, mirroring [`Metrics::record_conn_closed`].
+    pub fn conn_closed(&self) {
+        let _ = self.open.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+            if v > 0 {
+                Some(v - 1)
+            } else {
+                None
+            }
+        });
+    }
+
+    pub fn parse_stall(&self) {
+        self.parse_stalls.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Snapshot of one reactor's block (index = reactor id).
+#[derive(Debug, Clone)]
+pub struct ReactorSnapshot {
+    pub accepted: u64,
+    pub open: u64,
+    pub parse_stalls: u64,
 }
 
 /// Immutable snapshot used by reports and experiments.
@@ -174,6 +220,9 @@ pub struct MetricsSnapshot {
     /// Statistics over dispatched micro-batch sizes (mean/percentiles of
     /// a count, not a latency).
     pub batcher_batch_size: Summary,
+    /// Per-reactor breakdowns (index = reactor id); empty outside
+    /// event-loop serving.
+    pub reactors: Vec<ReactorSnapshot>,
 }
 
 impl Metrics {
@@ -250,6 +299,16 @@ impl Metrics {
     /// One readable round that left a request incomplete.
     pub fn record_parse_stall(&self) {
         self.http_parse_stalls.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Register one reactor thread's per-reactor block; the returned
+    /// handle is bumped by that reactor alongside the aggregate gauges.
+    /// Blocks appear on `/v1/metrics` as the `"reactors"` array, in
+    /// registration order (= reactor id).
+    pub fn register_reactor(&self) -> Arc<ReactorStats> {
+        let stats = Arc::new(ReactorStats::default());
+        self.reactors.lock().unwrap().push(stats.clone());
+        stats
     }
 
     pub fn record_judgement(&self, positive: bool) {
@@ -381,6 +440,17 @@ impl Metrics {
             lat_queue_wait: self.lat_queue_wait.lock().unwrap().summary(),
             lat_dispatch: self.lat_dispatch.lock().unwrap().summary(),
             batcher_batch_size: self.batcher_batch_size.lock().unwrap().summary(),
+            reactors: self
+                .reactors
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|r| ReactorSnapshot {
+                    accepted: r.accepted.load(Ordering::Relaxed),
+                    open: r.open.load(Ordering::Relaxed),
+                    parse_stalls: r.parse_stalls.load(Ordering::Relaxed),
+                })
+                .collect(),
         }
     }
 }
@@ -437,6 +507,27 @@ impl MetricsSnapshot {
             ("conns_rejected", self.http_conns_rejected.into()),
             ("open_connections", self.http_conns_open.into()),
             ("parse_stalls", self.http_parse_stalls.into()),
+            // Per-reactor breakdowns. The block keys (`open`, `accepted`,
+            // `stalls`) are deliberately distinct from the aggregate key
+            // names above so flat text scrapers (verify.sh) can sum them
+            // without ambiguity.
+            (
+                "reactors",
+                Value::Array(
+                    self.reactors
+                        .iter()
+                        .enumerate()
+                        .map(|(id, r)| {
+                            obj([
+                                ("id", (id as u64).into()),
+                                ("accepted", r.accepted.into()),
+                                ("open", r.open.into()),
+                                ("stalls", r.parse_stalls.into()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
             ("hit_rate", self.hit_rate().into()),
             ("positive_rate", self.positive_rate().into()),
             ("api_call_rate", self.api_call_rate().into()),
@@ -613,6 +704,42 @@ mod tests {
         m.record_conn_closed();
         m.record_conn_closed();
         assert_eq!(m.snapshot().http_conns_open, 0);
+    }
+
+    #[test]
+    fn per_reactor_blocks_sum_to_aggregates() {
+        let m = Metrics::new();
+        let r0 = m.register_reactor();
+        let r1 = m.register_reactor();
+        // Reactors bump their own block and the aggregate at the same
+        // sites; mirror that discipline here.
+        for stats in [&r0, &r0, &r1] {
+            m.record_conn_open();
+            stats.conn_open();
+        }
+        m.record_conn_closed();
+        r0.conn_closed();
+        m.record_parse_stall();
+        r1.parse_stall();
+        let s = m.snapshot();
+        assert_eq!(s.reactors.len(), 2);
+        assert_eq!(s.reactors.iter().map(|r| r.accepted).sum::<u64>(), s.http_conns_accepted);
+        assert_eq!(s.reactors.iter().map(|r| r.open).sum::<u64>(), s.http_conns_open);
+        assert_eq!(
+            s.reactors.iter().map(|r| r.parse_stalls).sum::<u64>(),
+            s.http_parse_stalls
+        );
+        let j = s.to_json();
+        let blocks = j.get("reactors").as_array().expect("reactors array");
+        assert_eq!(blocks.len(), 2);
+        assert_eq!(blocks[0].get("id").as_usize(), Some(0));
+        assert_eq!(blocks[0].get("open").as_usize(), Some(1));
+        assert_eq!(blocks[1].get("accepted").as_usize(), Some(1));
+        assert_eq!(blocks[1].get("stalls").as_usize(), Some(1));
+        // Unpaired close saturates per-reactor too.
+        r1.conn_closed();
+        r1.conn_closed();
+        assert_eq!(m.snapshot().reactors[1].open, 0);
     }
 
     #[test]

@@ -13,3 +13,17 @@ mod vecmath;
 pub use rng::{Rng, SplitMix64};
 pub use stats::{mean, percentile, stddev, Summary};
 pub use vecmath::{cosine, dot, l2_normalize, l2_normalized, norm, scale_add};
+
+/// Default reactor-thread count for the event-driven HTTP front-end:
+/// one per core, capped at 8 (past that the accept path is never the
+/// bottleneck and idle pollers just burn wakeups).
+pub fn auto_reactors() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
+}
+
+/// Default batcher-dispatcher shard count: half the cores, capped at 4
+/// — dispatchers only shepherd batches into the worker pool, so they
+/// saturate long before reactors do.
+pub fn auto_dispatchers() -> usize {
+    (std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) / 2).clamp(1, 4)
+}

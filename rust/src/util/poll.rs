@@ -27,7 +27,16 @@
 use std::io;
 use std::os::raw::{c_int, c_uint, c_ulong, c_void};
 use std::os::unix::io::RawFd;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Duration;
+
+/// Test-only fault injection: while non-zero, the next that-many
+/// [`Poller::register`] calls (process-wide, across every poller) fail
+/// with an injected error instead of reaching the backend. Lets tests
+/// drive the reactor's register-failure accept path — which otherwise
+/// needs real fd exhaustion — deterministically.
+#[doc(hidden)]
+pub static FAIL_NEXT_REGISTERS: AtomicUsize = AtomicUsize::new(0);
 
 // ---------------------------------------------------------------------
 // Raw syscall declarations (libc is linked by std; we only declare).
@@ -196,6 +205,15 @@ impl Poller {
     }
 
     pub fn register(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+        if FAIL_NEXT_REGISTERS
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| n.checked_sub(1))
+            .is_ok()
+        {
+            return Err(io::Error::new(
+                io::ErrorKind::Other,
+                "injected register failure (FAIL_NEXT_REGISTERS)",
+            ));
+        }
         match self {
             #[cfg(target_os = "linux")]
             Poller::Epoll(p) => p.register(fd, token, interest),

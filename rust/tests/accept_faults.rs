@@ -1,0 +1,115 @@
+//! Accept-path fault injection: what happens when the reactor *cannot*
+//! take ownership of a freshly accepted connection.
+//!
+//! Historically `set_nonblocking`/`Poller::register` failures at accept
+//! time silently dropped the socket — the client saw a connection that
+//! opened and then died with no bytes, and no counter moved. The
+//! reactor now answers a complete best-effort 503 and bumps
+//! `conns_rejected` on every refusal path. This test drives the
+//! register-failure arm deterministically through the
+//! `FAIL_NEXT_REGISTERS` shim in `util::poll` (real fd exhaustion is
+//! neither portable nor hermetic).
+//!
+//! The shim is process-wide, so this regression lives in its own
+//! integration-test binary: cargo runs tests *within* one binary in
+//! parallel, and an armed shim must never eat another test's legitimate
+//! register call.
+
+#![cfg(unix)]
+
+use std::io::Read;
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use semcache::api::QueryRequest;
+use semcache::coordinator::{http_request, serve_http, HttpConfig, Server, ServerConfig};
+use semcache::embedding::NativeEncoder;
+use semcache::json;
+use semcache::runtime::ModelParams;
+use semcache::util::poll::FAIL_NEXT_REGISTERS;
+
+fn tiny_server() -> Arc<Server> {
+    let mut p = ModelParams::default();
+    p.layers = 1;
+    p.vocab_size = 1024;
+    p.dim = 96;
+    p.hidden = 192;
+    p.heads = 4;
+    Arc::new(Server::new(Arc::new(NativeEncoder::new(p)), ServerConfig::default()))
+}
+
+#[test]
+fn failed_conn_registration_answers_503_and_counts_rejected() {
+    // One reactor so the armed failure deterministically hits the next
+    // accepted connection's registration (with several reactors it
+    // still hits *a* register call, but a single reactor makes the
+    // before/after metrics exact).
+    let server = tiny_server();
+    let handle = serve_http(
+        server.clone(),
+        HttpConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 2,
+            reactors: 1,
+            read_timeout: Duration::from_secs(5),
+            ..HttpConfig::default()
+        },
+    )
+    .expect("bind ephemeral port");
+    let addr = handle.local_addr().to_string();
+
+    // Healthy baseline (also proves startup's own registrations are
+    // done, so the armed failure cannot land on anything but the victim
+    // connection).
+    let body = QueryRequest::new("baseline before the fault").to_json().to_string();
+    let (status, _) = http_request(&addr, "POST", "/v1/query", Some(&body)).expect("baseline");
+    assert_eq!(status, 200);
+    let rejected_before =
+        server.metrics().snapshot().http_conns_rejected;
+
+    FAIL_NEXT_REGISTERS.store(1, Ordering::SeqCst);
+    // The victim: accepted, then its poller registration fails. The old
+    // code dropped it silently (EOF with zero bytes); now it must get a
+    // complete 503 before the close.
+    let mut victim = TcpStream::connect(&addr).expect("victim connect");
+    victim.set_read_timeout(Some(Duration::from_secs(10))).expect("read timeout");
+    let mut raw = Vec::new();
+    victim.read_to_end(&mut raw).expect("read the refusal to EOF");
+    assert_eq!(
+        FAIL_NEXT_REGISTERS.load(Ordering::SeqCst),
+        0,
+        "the armed failure was consumed by the victim's registration"
+    );
+    let text = String::from_utf8_lossy(&raw);
+    assert!(
+        text.starts_with("HTTP/1.1 503 "),
+        "a failed registration must be answered, not silently dropped; got {:?}",
+        text
+    );
+    let (head, resp_body) = text.split_once("\r\n\r\n").expect("complete head/body split");
+    assert!(head.contains("Connection: close"), "{head}");
+    let v = json::parse(resp_body).expect("refusal body is whole, valid JSON");
+    assert_eq!(v.get("error").as_str(), Some("connection setup failed"), "{text}");
+
+    // The refusal is visible in the metrics...
+    let snap = server.metrics().snapshot();
+    assert_eq!(
+        snap.http_conns_rejected,
+        rejected_before + 1,
+        "a dropped registration must count as a rejected connection"
+    );
+    // ...the admission budget was refunded (the victim never became an
+    // open connection)...
+    assert_eq!(
+        snap.reactors.iter().map(|r| r.accepted).sum::<u64>(),
+        snap.http_conns_accepted,
+        "per-reactor accepted stays in sync with the aggregate"
+    );
+    // ...and the server keeps serving afterwards.
+    let body = QueryRequest::new("service resumes after the fault").to_json().to_string();
+    let (status, v) = http_request(&addr, "POST", "/v1/query", Some(&body)).expect("after");
+    assert_eq!(status, 200, "{v}");
+    handle.shutdown();
+}

@@ -107,6 +107,7 @@ fn parity_server(cached: &[QaPair], novel: &[QaPair]) -> Arc<Server> {
         max_batch_size: 8,
         max_wait_us: 2_000,
         queue_capacity: 256,
+        dispatchers: 1,
     });
     s.populate(cached);
     let all = Dataset { base: cached.iter().chain(novel).cloned().collect(), tests: Vec::new() };
@@ -229,6 +230,7 @@ fn stress_16_threads_with_admin_flushes() {
         max_batch_size: 16,
         max_wait_us: 500,
         queue_capacity: 64,
+        dispatchers: 1,
     });
     let handle = serve_http(
         server.clone(),
@@ -424,6 +426,7 @@ fn prop_window_policy_exactly_once_bounded_and_override_preserving() {
                     max_batch_size: max_batch,
                     max_wait_us: wait_us,
                     queue_capacity: 64,
+                    dispatchers: 1,
                 },
             )
             .map_err(|e| format!("start: {e:#}"))?;
@@ -538,6 +541,7 @@ fn per_entry_ttl_expires_under_batching() {
         max_batch_size: 8,
         max_wait_us: 0,
         queue_capacity: 16,
+        dispatchers: 1,
     });
     let batcher = server.start_batcher().unwrap();
     let probe = || QueryRequest::new("ephemeral ttl probe request").with_ttl_ms(150);
@@ -568,6 +572,7 @@ fn concurrent_identical_novel_queries_cost_one_llm_call() {
         max_batch_size: 16,
         max_wait_us: 3_000,
         queue_capacity: 64,
+        dispatchers: 1,
     });
     let batcher = server.start_batcher().unwrap();
     let responses: Vec<QueryResponse> = std::thread::scope(|scope| {
@@ -610,7 +615,7 @@ fn http_backpressure_answers_503_with_rejected_outcome() {
             real_sleep: true,
             ..SimLlmConfig::default()
         })
-        .batch(BatchConfig { max_batch_size: 1, max_wait_us: 0, queue_capacity: 1 })
+        .batch(BatchConfig { max_batch_size: 1, max_wait_us: 0, queue_capacity: 1, dispatchers: 1 })
         .build()
         .expect("config");
     let server = Arc::new(Server::new(small_encoder(), cfg));

@@ -182,10 +182,12 @@ fn health_raw(version: &str, extra_headers: &str) -> Vec<u8> {
 // The protocol suite, shared by every mode/backend combination.
 // ---------------------------------------------------------------------
 
-fn run_protocol_suite(event_loop: bool, poll_fallback: bool) {
+fn run_protocol_suite(event_loop: bool, poll_fallback: bool, reactors: usize, dispatchers: usize) {
     let (handle, addr) = start_with(|c| {
         c.event_loop = event_loop;
         c.poll_fallback = poll_fallback;
+        c.reactors = reactors;
+        c.dispatchers = dispatchers;
     });
 
     // --- slow-drip: the request arrives one byte at a time.
@@ -344,18 +346,28 @@ fn run_protocol_suite(event_loop: bool, poll_fallback: bool) {
 #[cfg(unix)]
 #[test]
 fn protocol_suite_event_loop() {
-    run_protocol_suite(true, false);
+    run_protocol_suite(true, false, 1, 1);
 }
 
 #[cfg(unix)]
 #[test]
 fn protocol_suite_event_loop_poll_fallback() {
-    run_protocol_suite(true, true);
+    run_protocol_suite(true, true, 1, 1);
+}
+
+/// The full adversarial matrix against the sharded wire path: 4 reactor
+/// threads (rotating listener handoff) over 2 hash-sharded batcher
+/// dispatchers. Every framing, keep-alive, and abuse behavior must be
+/// indistinguishable from the single-threaded loop.
+#[cfg(unix)]
+#[test]
+fn protocol_suite_multi_reactor_sharded_dispatch() {
+    run_protocol_suite(true, false, 4, 2);
 }
 
 #[test]
 fn protocol_suite_threaded_accept() {
-    run_protocol_suite(false, false);
+    run_protocol_suite(false, false, 1, 1);
 }
 
 // ---------------------------------------------------------------------
@@ -460,10 +472,18 @@ fn event_loop_max_conns_answers_503_at_accept() {
         (0..4).map(|_| TcpStream::connect(&addr).expect("budget conn")).collect();
     std::thread::sleep(Duration::from_millis(300)); // reactor registers them
 
-    // Over budget: the server answers 503 unprompted and closes.
+    // Over budget: the server answers 503 unprompted and closes. The
+    // body must be the *complete* JSON error (a truncated write would
+    // fail the Content-Length read inside read_response, and the body
+    // comparison pins the payload byte-for-byte) — the accept-path 503
+    // used to be a single unchecked write() that could silently drop
+    // part of the response.
     let mut c = RawClient::connect(&addr);
     let r = c.read_response();
     assert_eq!(r.status, 503, "{}", r.body);
+    let v = json::parse(&r.body).expect("refusal body is whole, valid JSON");
+    assert_eq!(v.get("error").as_str(), Some("connection limit reached"), "{}", r.body);
+    assert_eq!(r.connection, "close", "refusals must advertise the close");
     c.assert_closed();
 
     // Dropping the fleet frees the budget again.
@@ -481,6 +501,122 @@ fn event_loop_max_conns_answers_503_at_accept() {
         std::thread::sleep(Duration::from_millis(50));
     }
     assert!(recovered, "server did not recover after the idle fleet closed");
+    handle.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// Sharded wire path: coalescing across dispatchers, per-reactor gauges.
+// ---------------------------------------------------------------------
+
+/// The PR 3 coalescing guarantee, end to end over the sharded wire
+/// path: N racing identical HTTP requests against a 4-reactor,
+/// 2-dispatcher server cost exactly one LLM call. Identical requests
+/// share a coalescing key, the batcher hash-routes on that key, so they
+/// must all land on the same dispatcher shard and dedup there (any
+/// straggler that misses the batch window finds the entry already
+/// cached — still no second LLM call).
+#[cfg(unix)]
+#[test]
+fn identical_http_requests_coalesce_across_sharded_dispatchers() {
+    use semcache::coordinator::BatchConfig;
+
+    const RACERS: usize = 8;
+    let mut p = ModelParams::default();
+    p.layers = 1;
+    p.vocab_size = 1024;
+    p.dim = 96;
+    p.hidden = 192;
+    p.heads = 4;
+    // A wide dispatch window so every racer is in flight before the
+    // batch fires.
+    let cfg = ServerConfig::builder()
+        .batch(BatchConfig {
+            max_batch_size: RACERS,
+            max_wait_us: 300_000,
+            queue_capacity: 64,
+            dispatchers: 1, // overridden by HttpConfig::dispatchers below
+        })
+        .build()
+        .expect("server config");
+    let server = Arc::new(Server::new(Arc::new(NativeEncoder::new(p)), cfg));
+    let handle = serve_http(
+        server.clone(),
+        HttpConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 4,
+            reactors: 4,
+            dispatchers: 2,
+            ..HttpConfig::default()
+        },
+    )
+    .expect("bind ephemeral port");
+    let addr = handle.local_addr().to_string();
+
+    let body = QueryRequest::new("rendezvous question for every racer")
+        .to_json()
+        .to_string();
+    let answers: Vec<String> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..RACERS)
+            .map(|_| {
+                let (addr, body) = (addr.clone(), body.clone());
+                scope.spawn(move || {
+                    let (status, v) =
+                        http_request(&addr, "POST", "/v1/query", Some(&body)).expect("query");
+                    assert_eq!(status, 200, "{v}");
+                    v.get("response").as_str().expect("response text").to_string()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("racer")).collect()
+    });
+    assert!(answers.windows(2).all(|w| w[0] == w[1]), "all racers share one answer: {answers:?}");
+
+    let m = server.metrics().snapshot();
+    assert_eq!(m.llm_calls, 1, "identical in-flight requests must cost one LLM call");
+    assert_eq!(m.requests, RACERS as u64);
+    assert_eq!(
+        m.cache_hits + m.cache_misses + m.rejected,
+        m.requests,
+        "serving invariant must hold across sharded dispatch"
+    );
+    handle.shutdown();
+}
+
+/// The `/v1/metrics` per-reactor blocks must sum to the aggregate
+/// gauges on a live 4-reactor server, and the round-robin handoff must
+/// actually spread connections past reactor 0.
+#[cfg(unix)]
+#[test]
+fn per_reactor_gauges_sum_to_aggregates_over_http() {
+    const IDLE: usize = 8;
+    let (handle, addr) = start_with(|c| {
+        c.reactors = 4;
+        c.read_timeout = Duration::from_secs(10);
+    });
+    let held: Vec<TcpStream> =
+        (0..IDLE).map(|_| TcpStream::connect(&addr).expect("idle conn")).collect();
+    std::thread::sleep(Duration::from_millis(300)); // reactors register them
+
+    let (status, m) = http_request(&addr, "GET", "/v1/metrics", None).expect("metrics");
+    assert_eq!(status, 200);
+    let mm = m.get("metrics");
+    let blocks = mm.get("reactors").as_array().expect("reactors array");
+    assert_eq!(blocks.len(), 4, "one block per reactor: {m}");
+    let (mut open_sum, mut accepted_sum, mut stall_sum) = (0usize, 0usize, 0usize);
+    for b in blocks {
+        open_sum += b.get("open").as_usize().expect("open");
+        accepted_sum += b.get("accepted").as_usize().expect("accepted");
+        stall_sum += b.get("stalls").as_usize().expect("stalls");
+    }
+    assert_eq!(open_sum, mm.get("open_connections").as_usize().unwrap(), "{m}");
+    assert_eq!(accepted_sum, mm.get("conns_accepted").as_usize().unwrap(), "{m}");
+    assert_eq!(stall_sum, mm.get("parse_stalls").as_usize().unwrap(), "{m}");
+    assert!(open_sum >= IDLE, "the idle fleet shows up in the gauges: {m}");
+    assert!(
+        blocks.iter().filter(|b| b.get("accepted").as_usize().unwrap() > 0).count() >= 2,
+        "round-robin handoff must spread {IDLE} connections past reactor 0: {m}"
+    );
+    drop(held);
     handle.shutdown();
 }
 

@@ -108,6 +108,56 @@ kill "$SRV_PID" 2>/dev/null || true
 wait "$SRV_PID" 2>/dev/null || true
 trap - EXIT
 
+# Multi-reactor smoke (PR 8): a 4-reactor daemon under a 32-idle-conn
+# fleet must answer a fresh query within 3 s, and the per-reactor
+# `reactors` blocks on /v1/metrics must sum to the aggregate gauges
+# (the blocks use the short key `open`, which appears nowhere else in
+# the JSON, so a flat scrape-and-sum is unambiguous).
+echo "==> multi-reactor smoke: --reactors 4 under 32 idle connections"
+PORT_FILE="$(mktemp)"
+./target/release/semcached serve --port 0 --port-file "$PORT_FILE" --reactors 4 --dispatchers 2 &
+SRV_PID=$!
+trap 'kill "$SRV_PID" 2>/dev/null || true' EXIT
+for _ in $(seq 1 100); do
+    [ -s "$PORT_FILE" ] && break
+    sleep 0.1
+done
+[ -s "$PORT_FILE" ] || { echo "multi-reactor semcached did not come up (no port file)"; exit 1; }
+ADDR="$(cat "$PORT_FILE")"
+for _ in $(seq 1 100); do
+    ./target/release/semcached metrics --addr "$ADDR" >/dev/null 2>&1 && break
+    sleep 0.1
+done
+./target/release/semcached stress-idle --addr "$ADDR" --conns 32 --hold-ms 15000 &
+IDLE_PID=$!
+sleep 0.5
+T0=$(date +%s)
+./target/release/semcached query --addr "$ADDR" "does the sharded reactor fleet starve a fresh query" >/dev/null \
+    || { echo "multi-reactor smoke FAILED: query errored under idle fan-in"; kill "$IDLE_PID" 2>/dev/null || true; exit 1; }
+T1=$(date +%s)
+[ $((T1 - T0)) -le 3 ] \
+    || { echo "multi-reactor smoke FAILED: query took $((T1 - T0))s behind 32 idle connections"; kill "$IDLE_PID" 2>/dev/null || true; exit 1; }
+METRICS="$(./target/release/semcached metrics --addr "$ADDR")"
+OPEN="$(num open_connections)"
+ACCEPTED="$(num conns_accepted)"
+REACTOR_BLOCKS="$(echo "$METRICS" | grep -c '"stalls":' || true)"
+ROPEN_SUM="$(echo "$METRICS" | sed -n 's/.*"open": \([0-9][0-9]*\).*/\1/p' | awk '{s+=$1} END {print s+0}')"
+RACCEPTED_SUM="$(echo "$METRICS" | sed -n 's/.*"accepted": \([0-9][0-9]*\).*/\1/p' | awk '{s+=$1} END {print s+0}')"
+[ "${REACTOR_BLOCKS:-0}" -eq 4 ] \
+    || { echo "multi-reactor smoke FAILED: expected 4 per-reactor blocks, got ${REACTOR_BLOCKS:-0}"; echo "$METRICS"; kill "$IDLE_PID" 2>/dev/null || true; exit 1; }
+[ "${ROPEN_SUM:-0}" -eq "${OPEN:-1}" ] \
+    || { echo "multi-reactor smoke FAILED: per-reactor open sum $ROPEN_SUM != open_connections $OPEN"; echo "$METRICS"; kill "$IDLE_PID" 2>/dev/null || true; exit 1; }
+[ "${RACCEPTED_SUM:-0}" -eq "${ACCEPTED:-1}" ] \
+    || { echo "multi-reactor smoke FAILED: per-reactor accepted sum $RACCEPTED_SUM != conns_accepted $ACCEPTED"; echo "$METRICS"; kill "$IDLE_PID" 2>/dev/null || true; exit 1; }
+[ "${OPEN:-0}" -ge 32 ] \
+    || { echo "multi-reactor smoke FAILED: open_connections gauge shows ${OPEN:-0} < 32"; echo "$METRICS"; kill "$IDLE_PID" 2>/dev/null || true; exit 1; }
+kill "$IDLE_PID" 2>/dev/null || true
+wait "$IDLE_PID" 2>/dev/null || true
+kill "$SRV_PID" 2>/dev/null || true
+wait "$SRV_PID" 2>/dev/null || true
+trap - EXIT
+echo "    multi-reactor smoke OK (fresh query in $((T1 - T0))s; 4 reactor blocks sum to aggregates: open $ROPEN_SUM == $OPEN, accepted $RACCEPTED_SUM == $ACCEPTED)"
+
 # Kill-9 durability smoke (ISSUE 6): populate a daemon serving with a
 # data dir, SIGKILL it (no graceful shutdown of any kind), restart on
 # the same dir, and the pre-crash entry must still answer — including
@@ -224,8 +274,11 @@ echo "    tenant smoke OK (small: $SMALL_EVICTS self-evictions, $SMALL_BYTES B <
 echo "==> smoke bench: bench_batch_throughput (SEMCACHE_BENCH_SMOKE=1)"
 SEMCACHE_BENCH_SMOKE=1 cargo bench --bench bench_batch_throughput
 
-echo "==> smoke bench: bench_http_loopback (SEMCACHE_BENCH_SMOKE=1)"
-SEMCACHE_BENCH_SMOKE=1 cargo bench --bench bench_http_loopback
+# Enforced: the batching (1.5x), idle fan-in (0.8x), reactor-scaling
+# (2x with >= 4 cores, else a 0.6x non-regression floor with a printed
+# waiver), and massive-idle fresh-query (<= 3 s) floors all gate.
+echo "==> smoke bench: bench_http_loopback (SEMCACHE_BENCH_SMOKE=1, enforced)"
+SEMCACHE_BENCH_SMOKE=1 SEMCACHE_BENCH_ENFORCE=1 cargo bench --bench bench_http_loopback
 
 echo "==> smoke bench: bench_embed_throughput (SEMCACHE_BENCH_SMOKE=1)"
 SEMCACHE_BENCH_SMOKE=1 cargo bench --bench bench_embed_throughput
