@@ -7,6 +7,10 @@
 #   make test        unit + integration tests (incl. tests/batching.rs:
 #                    trace-replay parity, 16-thread stress, window-policy
 #                    property tests, TTL-under-batching)
+#   make chaos       upstream-fault chaos suite (tests/chaos.rs): outage
+#                    -> degraded serving -> typed 503, breaker
+#                    open/half-open/close over live HTTP, extended
+#                    balance under mixed seeded faults
 #   make serve       run the semcached HTTP daemon on :8080
 #   make bench-batch batch serving throughput baseline (full mode)
 #   make bench-http  batched vs unbatched HTTP loopback throughput vs
@@ -19,7 +23,7 @@
 #                    replayed-trace hit parity (full mode)
 #   make artifacts   lower the JAX/Pallas encoder to HLO (needs python/jax)
 
-.PHONY: verify build test serve bench-batch bench-http bench-embed bench-persist artifacts
+.PHONY: verify build test chaos serve bench-batch bench-http bench-embed bench-persist artifacts
 
 verify:
 	./rust/verify.sh
@@ -29,6 +33,9 @@ build:
 
 test:
 	cd rust && cargo test -q
+
+chaos:
+	cd rust && cargo test --test chaos
 
 serve:
 	cd rust && cargo run --release --bin semcached -- serve --port 8080 --populate small

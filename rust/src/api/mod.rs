@@ -32,6 +32,13 @@ use std::collections::BTreeMap;
 
 use crate::error::{anyhow, bail, Context, Result};
 use crate::json::{obj, Value};
+use crate::llm::FaultPlan;
+
+/// Rejection-reason prefix for "the upstream LLM was unavailable and no
+/// degraded candidate existed". Front-ends key on it: the HTTP layer
+/// maps rejections carrying this prefix to `503` + `Retry-After` instead
+/// of the generic `200`-with-rejected-outcome shape.
+pub const REASON_UPSTREAM_UNAVAILABLE: &str = "upstream unavailable";
 
 /// Largest accepted per-request `top_k`. The ANN search pre-allocates
 /// `O(top_k)` scratch, so an unbounded remote-supplied value would let
@@ -58,6 +65,12 @@ pub struct QueryOptions {
     /// debugging escape hatch — it never changes results, the encoder
     /// is deterministic.
     pub embed_bypass: bool,
+    /// End-to-end serving deadline for this request, ms (overrides the
+    /// server's configured `upstream_deadline_ms`). The budget is
+    /// consumed from the moment the request is accepted — batcher queue
+    /// wait included — and what remains bounds upstream retries; when it
+    /// runs out the request degrades or rejects instead of waiting.
+    pub deadline_ms: Option<u64>,
 }
 
 impl QueryOptions {
@@ -74,6 +87,9 @@ impl QueryOptions {
             if k > MAX_TOP_K {
                 bail!("top_k must be <= {MAX_TOP_K}, got {k}");
             }
+        }
+        if self.deadline_ms == Some(0) {
+            bail!("deadline_ms must be >= 1");
         }
         Ok(())
     }
@@ -130,6 +146,11 @@ impl QueryRequest {
         self
     }
 
+    pub fn with_deadline_ms(mut self, deadline_ms: u64) -> Self {
+        self.options.deadline_ms = Some(deadline_ms);
+        self
+    }
+
     pub fn validate(&self) -> Result<()> {
         if self.text.trim().is_empty() {
             bail!("query text must be non-empty");
@@ -155,6 +176,9 @@ impl QueryRequest {
         if self.options.embed_bypass {
             m.insert("embed_bypass".to_string(), Value::Bool(true));
         }
+        if let Some(d) = self.options.deadline_ms {
+            m.insert("deadline_ms".to_string(), d.into());
+        }
         if let Some(tag) = &self.client_tag {
             m.insert("client_tag".to_string(), Value::Str(tag.clone()));
         }
@@ -168,7 +192,7 @@ impl QueryRequest {
         for key in fields.keys() {
             match key.as_str() {
                 "text" | "cluster" | "threshold" | "ttl_ms" | "top_k" | "client_tag"
-                | "embed_bypass" => {}
+                | "embed_bypass" | "deadline_ms" => {}
                 other => bail!("unknown field '{other}' in query request"),
             }
         }
@@ -201,6 +225,7 @@ impl QueryRequest {
                 ttl_ms: opt_u64(v.get("ttl_ms"), "ttl_ms")?,
                 top_k,
                 embed_bypass,
+                deadline_ms: opt_u64(v.get("deadline_ms"), "deadline_ms")?,
             },
             client_tag,
         };
@@ -217,8 +242,15 @@ pub enum Outcome {
     /// Cache miss: the (simulated) LLM answered and the reply was
     /// inserted under `inserted_id`.
     Miss { inserted_id: u64 },
+    /// Served from the cache at the relaxed `degraded_threshold`
+    /// because the upstream was unavailable (breaker open, retries or
+    /// deadline exhausted). Explicitly *not* a `Hit`: the score may be
+    /// below the request's gate and the answer is best-effort stale —
+    /// clients see the degradation, it is never passed off as fresh.
+    Degraded { score: f32, entry_id: u64 },
     /// The request was not served by the normal workflow (invalid
-    /// options, rejected insert).
+    /// options, rejected insert, upstream unavailable with no degraded
+    /// candidate — see [`REASON_UPSTREAM_UNAVAILABLE`]).
     Rejected { reason: String },
 }
 
@@ -237,6 +269,11 @@ impl Outcome {
             Outcome::Miss { inserted_id } => {
                 obj([("type", "miss".into()), ("inserted_id", (*inserted_id).into())])
             }
+            Outcome::Degraded { score, entry_id } => obj([
+                ("type", "degraded".into()),
+                ("score", Value::Num(*score as f64)),
+                ("entry_id", (*entry_id).into()),
+            ]),
             Outcome::Rejected { reason } => {
                 obj([("type", "rejected".into()), ("reason", reason.as_str().into())])
             }
@@ -259,6 +296,16 @@ impl Outcome {
                     .as_u64()
                     .context("miss outcome missing integer 'inserted_id'")?,
             }),
+            Some("degraded") => Ok(Outcome::Degraded {
+                score: v
+                    .get("score")
+                    .as_f64()
+                    .context("degraded outcome missing number 'score'")? as f32,
+                entry_id: v
+                    .get("entry_id")
+                    .as_u64()
+                    .context("degraded outcome missing integer 'entry_id'")?,
+            }),
             Some("rejected") => Ok(Outcome::Rejected {
                 reason: v
                     .get("reason")
@@ -266,7 +313,7 @@ impl Outcome {
                     .context("rejected outcome missing string 'reason'")?
                     .to_string(),
             }),
-            _ => Err(anyhow!("outcome 'type' must be hit|miss|rejected")),
+            _ => Err(anyhow!("outcome 'type' must be hit|miss|degraded|rejected")),
         }
     }
 }
@@ -284,6 +331,10 @@ pub struct LatencyBreakdown {
     /// True when `embed_ms` was an exact-match memo-tier hit (no
     /// encoder forward pass ran for this request).
     pub embed_cached: bool,
+    /// True when this response was served in degraded mode (mirrors
+    /// `Outcome::Degraded`, so latency rows alone identify stale
+    /// serving windows).
+    pub degraded: bool,
 }
 
 impl LatencyBreakdown {
@@ -294,6 +345,7 @@ impl LatencyBreakdown {
             ("index_ms", self.index_ms.into()),
             ("llm_ms", self.llm_ms.into()),
             ("embed_cached", Value::Bool(self.embed_cached)),
+            ("degraded", Value::Bool(self.degraded)),
         ])
     }
 
@@ -310,6 +362,11 @@ impl LatencyBreakdown {
             embed_cached: match v.get("embed_cached") {
                 Value::Null => false,
                 b => b.as_bool().context("latency field 'embed_cached' must be a boolean")?,
+            },
+            // Absent in pre-resilience payloads: default fresh.
+            degraded: match v.get("degraded") {
+                Value::Null => false,
+                b => b.as_bool().context("latency field 'degraded' must be a boolean")?,
             },
         })
     }
@@ -387,7 +444,7 @@ impl QueryResponse {
 }
 
 /// Administrative operations on a running server.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum AdminRequest {
     /// Drop every cached entry (all partitions).
     Flush,
@@ -398,6 +455,11 @@ pub enum AdminRequest {
     Snapshot,
     /// Snapshot serving metrics and cache state.
     Stats,
+    /// Replace the upstream fault schedule (the chaos harness' wire
+    /// control). The plan replaces the previous one wholesale; an
+    /// all-defaults plan (`"plan": {}` or no plan at all) clears every
+    /// fault.
+    Fault(FaultPlan),
 }
 
 impl AdminRequest {
@@ -407,6 +469,9 @@ impl AdminRequest {
             AdminRequest::Housekeep => "housekeep",
             AdminRequest::Snapshot => "snapshot",
             AdminRequest::Stats => "stats",
+            AdminRequest::Fault(plan) => {
+                return obj([("action", "fault".into()), ("plan", plan.to_json())]);
+            }
         };
         obj([("action", action.into())])
     }
@@ -417,9 +482,16 @@ impl AdminRequest {
             Some("housekeep") => Ok(AdminRequest::Housekeep),
             Some("snapshot") => Ok(AdminRequest::Snapshot),
             Some("stats") => Ok(AdminRequest::Stats),
-            Some(other) => {
-                Err(anyhow!("unknown admin action '{other}' (flush|housekeep|snapshot|stats)"))
+            Some("fault") => {
+                let plan = match v.get("plan") {
+                    Value::Null => FaultPlan::default(),
+                    p => FaultPlan::from_json(p)?,
+                };
+                Ok(AdminRequest::Fault(plan))
             }
+            Some(other) => Err(anyhow!(
+                "unknown admin action '{other}' (flush|housekeep|snapshot|stats|fault)"
+            )),
             None => Err(anyhow!("admin request must carry a string field 'action'")),
         }
     }
@@ -437,6 +509,9 @@ pub enum AdminResponse {
     /// current configuration (e.g. `snapshot` without `--data-dir`).
     Unsupported { reason: String },
     Stats(Value),
+    /// The upstream fault schedule was replaced; echoes the effective
+    /// plan so callers can confirm what the injector is now running.
+    FaultSet { plan: FaultPlan },
 }
 
 impl AdminResponse {
@@ -459,6 +534,9 @@ impl AdminResponse {
                 obj([("error", reason.as_str().into())])
             }
             AdminResponse::Stats(v) => v.clone(),
+            AdminResponse::FaultSet { plan } => {
+                obj([("action", "fault".into()), ("plan", plan.to_json())])
+            }
         }
     }
 }
@@ -486,7 +564,8 @@ mod tests {
             .with_ttl_ms(30_000)
             .with_top_k(3)
             .with_client_tag("bot-7")
-            .with_embed_bypass();
+            .with_embed_bypass()
+            .with_deadline_ms(2_000);
         req.validate().unwrap();
         let wire = req.to_json().to_string();
         let back = QueryRequest::from_json(&parse(&wire).unwrap()).unwrap();
@@ -519,6 +598,9 @@ mod tests {
             (r#"{"text": "q", "ttl_ms": -5}"#, "negative ttl"),
             (r#"{"text": "q", "cluster": 1.5}"#, "fractional cluster"),
             (r#"{"text": "q", "embed_bypass": 1}"#, "non-boolean embed_bypass"),
+            (r#"{"text": "q", "deadline_ms": 0}"#, "zero deadline"),
+            (r#"{"text": "q", "deadline_ms": -1}"#, "negative deadline"),
+            (r#"{"text": "q", "deadline_ms": "soon"}"#, "non-integer deadline"),
         ] {
             let v = parse(src).unwrap();
             assert!(QueryRequest::from_json(&v).is_err(), "should reject {why}: {src}");
@@ -546,6 +628,7 @@ mod tests {
         for o in [
             Outcome::Hit { score: 0.8125, entry_id: 7 },
             Outcome::Miss { inserted_id: 1 },
+            Outcome::Degraded { score: 0.625, entry_id: 3 },
             Outcome::Rejected { reason: "top_k must be >= 1".into() },
         ] {
             let wire = o.to_json().to_string();
@@ -566,6 +649,7 @@ mod tests {
                 index_ms: 0.25,
                 llm_ms: 0.0,
                 embed_cached: true,
+                degraded: false,
             },
             judged_positive: Some(true),
             matched_cluster: Some(42),
@@ -582,11 +666,24 @@ mod tests {
     #[test]
     fn pre_memo_latency_payload_decodes_as_cold() {
         // Wire payloads from before the memo tier carry no
-        // `embed_cached`; they must decode (as a cold embed), not 400.
+        // `embed_cached` (nor, later, `degraded`); they must decode (as
+        // a cold, fresh serve), not 400.
         let v = parse(r#"{"total_ms": 1.0, "embed_ms": 0.5, "index_ms": 0.25, "llm_ms": 0.0}"#)
             .unwrap();
         let lat = LatencyBreakdown::from_json(&v).unwrap();
         assert!(!lat.embed_cached);
+        assert!(!lat.degraded);
+    }
+
+    #[test]
+    fn degraded_outcome_is_marked_and_never_a_hit() {
+        let o = Outcome::Degraded { score: 0.5, entry_id: 9 };
+        assert!(!o.is_hit(), "degraded serving must never masquerade as a fresh hit");
+        let j = o.to_json();
+        assert_eq!(j.get("type").as_str(), Some("degraded"));
+        let lat = LatencyBreakdown { degraded: true, ..LatencyBreakdown::default() };
+        let back = LatencyBreakdown::from_json(&lat.to_json()).unwrap();
+        assert!(back.degraded);
     }
 
     #[test]
@@ -596,6 +693,8 @@ mod tests {
             AdminRequest::Housekeep,
             AdminRequest::Snapshot,
             AdminRequest::Stats,
+            AdminRequest::Fault(FaultPlan::full_outage()),
+            AdminRequest::Fault(FaultPlan { error_prob: 0.25, ..FaultPlan::default() }),
         ] {
             let wire = a.to_json().to_string();
             assert_eq!(AdminRequest::from_json(&parse(&wire).unwrap()).unwrap(), a);
@@ -610,5 +709,31 @@ mod tests {
         assert_eq!(j.get("bytes").as_usize(), Some(4096));
         let r = AdminResponse::Unsupported { reason: "no data dir".into() };
         assert_eq!(r.to_json().get("error").as_str(), Some("no data dir"));
+    }
+
+    #[test]
+    fn admin_fault_verb_decodes_partial_plans() {
+        // No plan at all, or an empty plan, clears every fault.
+        for src in [r#"{"action": "fault"}"#, r#"{"action": "fault", "plan": {}}"#] {
+            match AdminRequest::from_json(&parse(src).unwrap()).unwrap() {
+                AdminRequest::Fault(plan) => assert!(plan.is_noop(), "{src}"),
+                other => panic!("expected Fault, got {other:?}"),
+            }
+        }
+        // The `outage` shorthand opens a down-until-reconfigured window.
+        let v = parse(r#"{"action": "fault", "plan": {"outage": true}}"#).unwrap();
+        match AdminRequest::from_json(&v).unwrap() {
+            AdminRequest::Fault(plan) => {
+                assert_eq!((plan.outage_from_call, plan.outage_until_call), (0, u64::MAX));
+            }
+            other => panic!("expected Fault, got {other:?}"),
+        }
+        // Malformed plans are refused at the boundary.
+        let v = parse(r#"{"action": "fault", "plan": {"error_prob": 7}}"#).unwrap();
+        assert!(AdminRequest::from_json(&v).is_err());
+        let r = AdminResponse::FaultSet { plan: FaultPlan::default() };
+        let j = r.to_json();
+        assert_eq!(j.get("action").as_str(), Some("fault"));
+        assert!(j.get("plan").get("error_prob").as_f64().is_some());
     }
 }

@@ -254,6 +254,9 @@ fn cmd_query(args: &Args) -> Result<()> {
     if let Some(ttl) = args.opt("ttl-ms") {
         req = req.with_ttl_ms(ttl.parse().context("--ttl-ms")?);
     }
+    if let Some(d) = args.opt("deadline-ms") {
+        req = req.with_deadline_ms(d.parse().context("--deadline-ms")?);
+    }
     if let Some(tag) = args.opt("tag") {
         req = req.with_client_tag(tag);
     }
@@ -299,13 +302,60 @@ fn cmd_metrics(args: &Args) -> Result<()> {
     finish(status, &body)
 }
 
+/// Assemble a partial [`semcache::llm::FaultPlan`] from `admin fault`
+/// options. Flags map 1:1 onto the plan's JSON fields and go through
+/// the same strict partial-plan codec the wire uses, so range
+/// validation lives in exactly one place. No options at all decodes
+/// `{}` — "clear all faults".
+fn fault_plan_from_args(args: &Args) -> Result<semcache::llm::FaultPlan> {
+    let mut m = std::collections::BTreeMap::new();
+    for (flag, key) in [
+        ("error-prob", "error_prob"),
+        ("rate-limit-prob", "rate_limit_prob"),
+        ("spike-prob", "spike_prob"),
+        ("spike-min-ms", "spike_min_ms"),
+        ("spike-max-ms", "spike_max_ms"),
+        ("hang-prob", "hang_prob"),
+    ] {
+        if let Some(v) = args.opt(flag) {
+            let p: f64 = v.parse().with_context(|| format!("--{flag}"))?;
+            m.insert(key.to_string(), p.into());
+        }
+    }
+    for (flag, key) in [
+        ("retry-after-ms", "retry_after_ms"),
+        ("hang-ms", "hang_ms"),
+        ("outage-from-call", "outage_from_call"),
+        ("outage-until-call", "outage_until_call"),
+        ("fault-seed", "seed"),
+    ] {
+        if let Some(v) = args.opt(flag) {
+            let n: u64 = v.parse().with_context(|| format!("--{flag}"))?;
+            m.insert(key.to_string(), n.into());
+        }
+    }
+    // Same bare-flag discipline as `--no-batch`: `--outage value` would
+    // silently swallow the next token.
+    if args.opt("outage").is_some() {
+        bail!("--outage is a bare flag and takes no value");
+    }
+    if args.flag("outage") {
+        m.insert("outage".to_string(), semcache::json::Value::Bool(true));
+    }
+    semcache::llm::FaultPlan::from_json(&semcache::json::Value::Object(m))
+        .context("assembling fault plan")
+}
+
 fn cmd_admin(args: &Args) -> Result<()> {
     let action = match args.positional().first().map(|s| s.as_str()) {
         Some("flush") => semcache::api::AdminRequest::Flush,
         Some("housekeep") => semcache::api::AdminRequest::Housekeep,
         Some("snapshot") => semcache::api::AdminRequest::Snapshot,
+        Some("fault") => semcache::api::AdminRequest::Fault(fault_plan_from_args(args)?),
         Some("stats") | None => semcache::api::AdminRequest::Stats,
-        Some(other) => bail!("unknown admin action '{other}' (flush|housekeep|snapshot|stats)"),
+        Some(other) => {
+            bail!("unknown admin action '{other}' (flush|housekeep|snapshot|stats|fault)")
+        }
     };
     let (status, body) = http_request(
         &addr_of(args),

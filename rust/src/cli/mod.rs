@@ -118,7 +118,14 @@ SUBCOMMANDS:
                  /v1/admin; GET /v1/metrics, /v1/health)
     query        Send one query to a running daemon and print the JSON reply
     metrics      Fetch /v1/metrics from a running daemon
-    admin        Send an admin action (flush | housekeep | snapshot | stats)
+    admin        Send an admin action (flush | housekeep | snapshot | stats
+                 | fault) — `fault` reconfigures upstream fault injection
+                 live: no options clears all faults; --outage (bare flag)
+                 is a full outage until reconfigured; --error-prob,
+                 --rate-limit-prob, --retry-after-ms, --spike-prob,
+                 --spike-min-ms, --spike-max-ms, --hang-prob, --hang-ms,
+                 --outage-from-call, --outage-until-call, --fault-seed
+                 set individual knobs (absent knobs keep defaults)
     stress-idle  Hold idle keep-alive connections open against a daemon
                  (--conns N, --hold-ms MS; probes idle-fan-in behavior)
     help         Show this message
@@ -169,13 +176,24 @@ SERVE OPTIONS:
                              --tenant.<name>.quota_bytes N and
                              --tenant.<name>.similarity_threshold F
                              [per-tenant overrides; also `[tenant.<name>]`
-                             tables in the config file])
+                             tables in the config file],
+                             --upstream_deadline_ms 10000 [per-request
+                             LLM budget; 0 = unbounded],
+                             --upstream_max_retries 2,
+                             --upstream_breaker_failures 5 [consecutive
+                             failures that open the circuit breaker],
+                             --upstream_max_inflight 256 [upstream
+                             concurrency cap; excess misses shed],
+                             --degraded_threshold 0.6 [relaxed gate for
+                             cache-only serving while upstream is down])
 
 CLIENT OPTIONS (query | metrics | admin):
     --addr <host:port>       Daemon address (default 127.0.0.1:8080)
     --threshold <f32>        Per-request similarity gate      (query)
     --top-k <n>              Per-request candidate-set width  (query)
     --ttl-ms <ms>            Per-request insert TTL           (query)
+    --deadline-ms <ms>       Per-request upstream deadline override
+                             (>= 1; 0 is rejected)            (query)
     --tag <string>           client_tag: selects the tenant
                              namespace, echoed on the reply   (query)
     --embed-bypass           Skip the embedding memo read; bare flag,

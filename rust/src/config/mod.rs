@@ -83,6 +83,36 @@ pub struct Config {
     /// Wall-clock pacing: if false the latency model is virtual-time only
     /// (experiments run fast); if true the server actually sleeps.
     pub llm_real_sleep: bool,
+    /// Log-normal jitter sigma of the simulated LLM latency model.
+    pub llm_jitter_sigma: f64,
+    /// Seed for the simulated LLM's answer-synthesis RNG (fault
+    /// schedules seed separately, via the fault plan).
+    pub llm_seed: u64,
+
+    // Upstream resilience (coordinator::resilience)
+    /// Default end-to-end serving deadline per request, ms (requests may
+    /// tighten it via `deadline_ms`). 0 disables deadlines.
+    pub upstream_deadline_ms: u64,
+    /// Upstream retry budget per miss (attempts = 1 + retries).
+    pub upstream_max_retries: u32,
+    /// First retry backoff, ms (doubles per retry, jittered).
+    pub upstream_backoff_base_ms: u64,
+    /// Backoff ceiling, ms.
+    pub upstream_backoff_max_ms: u64,
+    /// Consecutive upstream failures that trip the breaker open.
+    pub upstream_breaker_failures: u32,
+    /// How long an open breaker blocks upstream traffic before allowing
+    /// half-open probes, ms.
+    pub upstream_breaker_open_ms: u64,
+    /// Successful half-open probes required to close the breaker.
+    pub upstream_breaker_halfopen_probes: u32,
+    /// In-flight upstream call cap; misses beyond it are shed into
+    /// degraded serving instead of queueing (0 = uncapped).
+    pub upstream_max_inflight: usize,
+    /// Relaxed similarity gate for degraded-mode serving when the
+    /// upstream is unavailable (must be <= 1; lower than the production
+    /// threshold by design).
+    pub degraded_threshold: f32,
 
     // Workload
     pub workload_seed: u64,
@@ -150,6 +180,17 @@ impl Default for Config {
             llm_ms_per_token: 12.0,
             llm_mean_output_tokens: 120.0,
             llm_real_sleep: false,
+            llm_jitter_sigma: 0.25,
+            llm_seed: 0x11AA,
+            upstream_deadline_ms: 10_000,
+            upstream_max_retries: 2,
+            upstream_backoff_base_ms: 50,
+            upstream_backoff_max_ms: 2_000,
+            upstream_breaker_failures: 5,
+            upstream_breaker_open_ms: 1_000,
+            upstream_breaker_halfopen_probes: 2,
+            upstream_max_inflight: 256,
+            degraded_threshold: 0.6,
             workload_seed: 0xC0FFEE,
             trace_qps: 200.0,
             workers: 4,
@@ -275,6 +316,17 @@ impl Config {
             "llm_ms_per_token" => self.llm_ms_per_token = num!(),
             "llm_mean_output_tokens" => self.llm_mean_output_tokens = num!(),
             "llm_real_sleep" => self.llm_real_sleep = num!(),
+            "llm_jitter_sigma" => self.llm_jitter_sigma = num!(),
+            "llm_seed" => self.llm_seed = num!(),
+            "upstream_deadline_ms" => self.upstream_deadline_ms = num!(),
+            "upstream_max_retries" => self.upstream_max_retries = num!(),
+            "upstream_backoff_base_ms" => self.upstream_backoff_base_ms = num!(),
+            "upstream_backoff_max_ms" => self.upstream_backoff_max_ms = num!(),
+            "upstream_breaker_failures" => self.upstream_breaker_failures = num!(),
+            "upstream_breaker_open_ms" => self.upstream_breaker_open_ms = num!(),
+            "upstream_breaker_halfopen_probes" => self.upstream_breaker_halfopen_probes = num!(),
+            "upstream_max_inflight" => self.upstream_max_inflight = num!(),
+            "degraded_threshold" => self.degraded_threshold = num!(),
             "workload_seed" => self.workload_seed = num!(),
             "trace_qps" => self.trace_qps = num!(),
             "workers" => self.workers = num!(),
@@ -341,6 +393,25 @@ impl Config {
                 "http_dispatchers must be <= {}, got {}",
                 crate::coordinator::MAX_DISPATCHERS_LIMIT,
                 self.http_dispatchers
+            );
+        }
+        if !self.llm_jitter_sigma.is_finite() || self.llm_jitter_sigma < 0.0 {
+            bail!("llm_jitter_sigma must be finite and >= 0, got {}", self.llm_jitter_sigma);
+        }
+        if !(-1.0..=1.0).contains(&self.degraded_threshold) {
+            bail!("degraded_threshold must be in [-1,1], got {}", self.degraded_threshold);
+        }
+        if self.upstream_breaker_failures == 0 {
+            bail!("upstream_breaker_failures must be >= 1");
+        }
+        if self.upstream_breaker_halfopen_probes == 0 {
+            bail!("upstream_breaker_halfopen_probes must be >= 1");
+        }
+        if self.upstream_backoff_max_ms < self.upstream_backoff_base_ms {
+            bail!(
+                "upstream_backoff_max_ms ({}) must be >= upstream_backoff_base_ms ({})",
+                self.upstream_backoff_max_ms,
+                self.upstream_backoff_base_ms
             );
         }
         match self.wal_sync.as_str() {
@@ -500,6 +571,46 @@ mod tests {
         assert_eq!(c.tenants["hot"].quota_bytes, Some(131_072));
         assert_eq!(c.tenants["cold"].similarity_threshold, Some(0.85));
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn upstream_resilience_keys_roundtrip_and_validate() {
+        let mut c = Config::default();
+        assert_eq!(c.llm_jitter_sigma, 0.25);
+        assert!(c.degraded_threshold < c.similarity_threshold, "degraded gate is laxer");
+        c.set("llm.llm_jitter_sigma", "0.5").unwrap();
+        c.set("llm_seed", "42").unwrap();
+        c.set("upstream.upstream_deadline_ms", "1500").unwrap();
+        c.set("upstream_max_retries", "4").unwrap();
+        c.set("upstream_backoff_base_ms", "25").unwrap();
+        c.set("upstream_backoff_max_ms", "500").unwrap();
+        c.set("upstream_breaker_failures", "3").unwrap();
+        c.set("upstream_breaker_open_ms", "200").unwrap();
+        c.set("upstream_breaker_halfopen_probes", "1").unwrap();
+        c.set("upstream_max_inflight", "8").unwrap();
+        c.set("degraded_threshold", "0.5").unwrap();
+        assert_eq!(c.llm_jitter_sigma, 0.5);
+        assert_eq!(c.llm_seed, 42);
+        assert_eq!(c.upstream_deadline_ms, 1500);
+        assert_eq!(c.upstream_max_retries, 4);
+        assert_eq!((c.upstream_backoff_base_ms, c.upstream_backoff_max_ms), (25, 500));
+        assert_eq!(c.upstream_breaker_failures, 3);
+        assert_eq!(c.upstream_breaker_open_ms, 200);
+        assert_eq!(c.upstream_breaker_halfopen_probes, 1);
+        assert_eq!(c.upstream_max_inflight, 8);
+        assert_eq!(c.degraded_threshold, 0.5);
+        c.validate().unwrap();
+        c.degraded_threshold = 1.5;
+        assert!(c.validate().is_err(), "degraded gate outside cosine range");
+        c.degraded_threshold = 0.5;
+        c.upstream_breaker_failures = 0;
+        assert!(c.validate().is_err(), "a 0-failure breaker would never close");
+        c.upstream_breaker_failures = 3;
+        c.upstream_backoff_max_ms = 1;
+        assert!(c.validate().is_err(), "backoff ceiling below its base");
+        c.upstream_backoff_max_ms = 500;
+        c.llm_jitter_sigma = -1.0;
+        assert!(c.validate().is_err(), "negative jitter sigma");
     }
 
     #[test]

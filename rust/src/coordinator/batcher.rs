@@ -31,8 +31,8 @@
 //! which is what makes batches form under load without any extra delay.
 //!
 //! **Coalescing.** Identical in-flight requests — same text, same
-//! outcome-affecting options (threshold, ttl_ms, top_k, cluster), *and*
-//! same `client_tag` — are served once per dispatch; every duplicate is
+//! outcome-affecting options (threshold, ttl_ms, top_k, cluster,
+//! deadline_ms), *and* same `client_tag` — are served once per dispatch; every duplicate is
 //! answered from the representative's result via
 //! [`BatchExecutor::coalesce`] without its own embedding, lookup, or
 //! LLM call. This also *fixes* the documented `serve_batch` caveat:
@@ -181,8 +181,8 @@ pub trait BatchExecutor: Send + Sync + 'static {
     /// count, not a prefix — batch workers may finish out of order). The dispatcher reads it only when the executor dies
     /// mid-batch, so `reject_all` can record `request` + `rejected` for
     /// exactly the submissions the executor never accounted — keeping
-    /// `cache_hits + cache_misses + rejected == requests` exact across
-    /// executor panics. The default forwards to `execute` and records
+    /// `cache_hits + cache_misses + degraded_hits + rejected == requests`
+    /// exact across executor panics. The default forwards to `execute` and records
     /// nothing, which is correct for executors that keep no per-query
     /// metrics (everything they dispatched gets rejected-and-recorded on
     /// failure). [`super::Server`] overrides this with real progress
@@ -194,6 +194,21 @@ pub trait BatchExecutor: Send + Sync + 'static {
     ) -> Vec<QueryResponse> {
         let _ = recorded;
         self.execute(reqs)
+    }
+
+    /// [`BatchExecutor::execute_tracked`] plus each request's original
+    /// enqueue instant (`accepted[i]` for `reqs[i]`), so executors that
+    /// enforce per-request deadlines can measure them from the HTTP edge
+    /// — time spent in the batcher's queue and coalescing window counts
+    /// against the budget. The default ignores the instants.
+    fn execute_tracked_since(
+        &self,
+        reqs: &[QueryRequest],
+        accepted: &[Instant],
+        recorded: &std::sync::atomic::AtomicUsize,
+    ) -> Vec<QueryResponse> {
+        let _ = accepted;
+        self.execute_tracked(reqs, recorded)
     }
 
     /// Answer `dup` — an identical in-flight twin of `rep` within one
@@ -240,6 +255,11 @@ struct CoalesceKey {
     ttl_ms: Option<u64>,
     top_k: Option<usize>,
     cluster: Option<u64>,
+    /// Requests with different deadline budgets must not share a fate:
+    /// a tight-deadline twin of a loose-deadline representative could
+    /// otherwise be answered past its own budget (or vice versa see a
+    /// degraded answer it didn't need to accept).
+    deadline_ms: Option<u64>,
 }
 
 impl CoalesceKey {
@@ -251,6 +271,7 @@ impl CoalesceKey {
             ttl_ms: req.options.ttl_ms,
             top_k: req.options.top_k,
             cluster: req.cluster,
+            deadline_ms: req.options.deadline_ms,
         }
     }
 }
@@ -336,7 +357,8 @@ impl Batcher {
     ///
     /// Fails fast (without blocking) when the queue is full or the
     /// batcher is shut down; both failures are recorded as a rejected
-    /// request so `cache_hits + cache_misses + rejected == requests`
+    /// request so
+    /// `cache_hits + cache_misses + degraded_hits + rejected == requests`
     /// stays an invariant of the metrics under backpressure.
     pub fn submit(&self, req: &QueryRequest) -> std::result::Result<QueryResponse, SubmitError> {
         let (reply_tx, reply_rx) = mpsc::sync_channel::<QueryResponse>(1);
@@ -501,6 +523,10 @@ fn dispatch(executor: &dyn BatchExecutor, metrics: &Metrics, batch: Vec<Submissi
         }
     }
     let unique: Vec<QueryRequest> = reps.iter().map(|&i| batch[i].req.clone()).collect();
+    // A representative's deadline is measured from its own enqueue
+    // instant; coalesced twins (same `deadline_ms`, enqueued within one
+    // window of it) share the representative's budget.
+    let accepted: Vec<Instant> = reps.iter().map(|&i| batch[i].enqueued).collect();
 
     // A panicking executor must not leave submitters blocked forever or
     // kill the dispatcher: catch, reject the whole dispatch, keep going.
@@ -508,7 +534,7 @@ fn dispatch(executor: &dyn BatchExecutor, metrics: &Metrics, batch: Vec<Submissi
     // accounting progress, so rejection accounting stays exact.
     let recorded = std::sync::atomic::AtomicUsize::new(0);
     let served = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        executor.execute_tracked(&unique, &recorded)
+        executor.execute_tracked_since(&unique, &accepted, &recorded)
     }));
     let responses = match served {
         Ok(r) if r.len() == unique.len() => r,
@@ -557,7 +583,9 @@ fn dispatch(executor: &dyn BatchExecutor, metrics: &Metrics, batch: Vec<Submissi
 /// that many submissions — whichever ones — keeps the totals exact:
 /// `already_recorded` requests carry executor-recorded outcomes, the
 /// remaining `batch.len() - already_recorded` are recorded as rejected
-/// here, and `cache_hits + cache_misses + rejected == requests` holds.
+/// here, and
+/// `cache_hits + cache_misses + degraded_hits + rejected == requests`
+/// holds.
 /// (Coalesced duplicates are never executor-recorded — only unique
 /// representatives reach `execute` — so `already_recorded` can never
 /// exceed the number of submissions.)
@@ -978,6 +1006,105 @@ mod tests {
             m.cache_hits + m.cache_misses + m.rejected,
             m.requests,
             "metrics invariant holds across an executor-panic dispatch"
+        );
+    }
+
+    /// Server-like executor that serves every query as a *degraded* hit
+    /// (upstream down, relaxed-gate cache answer), recording request +
+    /// degraded as it goes, then panics mid-batch on its second
+    /// dispatch — the degraded analogue of [`PanicExec`].
+    struct DegradedPanicExec {
+        metrics: Arc<Metrics>,
+        entered: AtomicUsize,
+        gate: Mutex<bool>,
+        gate_cv: Condvar,
+        record_before_panic: usize,
+    }
+
+    impl BatchExecutor for DegradedPanicExec {
+        fn execute(&self, _reqs: &[QueryRequest]) -> Vec<QueryResponse> {
+            unreachable!("execute_tracked is overridden");
+        }
+
+        fn execute_tracked(
+            &self,
+            reqs: &[QueryRequest],
+            recorded: &AtomicUsize,
+        ) -> Vec<QueryResponse> {
+            let call = self.entered.fetch_add(1, Ordering::SeqCst) + 1;
+            let mut open = self.gate.lock().unwrap();
+            while !*open {
+                open = self.gate_cv.wait(open).unwrap();
+            }
+            drop(open);
+            let mut out = Vec::new();
+            for (i, r) in reqs.iter().enumerate() {
+                if call > 1 && i >= self.record_before_panic {
+                    panic!("injected mid-batch executor failure");
+                }
+                self.metrics.record_request();
+                self.metrics.record_degraded_hit();
+                recorded.fetch_add(1, Ordering::SeqCst);
+                out.push(QueryResponse {
+                    response: r.text.clone(),
+                    outcome: Outcome::Degraded { score: 0.7, entry_id: 1 },
+                    latency: LatencyBreakdown { degraded: true, ..Default::default() },
+                    judged_positive: None,
+                    matched_cluster: None,
+                    client_tag: r.client_tag.clone(),
+                });
+            }
+            out
+        }
+    }
+
+    #[test]
+    fn executor_panic_keeps_extended_balance_with_degraded_outcomes() {
+        // Same shape as `executor_panic_keeps_metrics_invariant_exact`,
+        // but the executor answers degraded hits: the batcher's failed-
+        // dispatch rejection accounting must keep the *extended* balance
+        // `hits + misses + degraded + rejected == requests` exact.
+        let metrics = Arc::new(Metrics::new());
+        let exec = Arc::new(DegradedPanicExec {
+            metrics: metrics.clone(),
+            entered: AtomicUsize::new(0),
+            gate: Mutex::new(false),
+            gate_cv: Condvar::new(),
+            record_before_panic: 2,
+        });
+        let cfg = BatchConfig { max_batch_size: 8, max_wait_us: 0, queue_capacity: 16, dispatchers: 1 };
+        let b = Batcher::start(exec.clone(), metrics.clone(), cfg).unwrap();
+        std::thread::scope(|scope| {
+            let warm = b.clone();
+            scope.spawn(move || {
+                let resp = warm.submit(&QueryRequest::new("warm up")).unwrap();
+                assert!(
+                    matches!(resp.outcome, Outcome::Degraded { .. }),
+                    "warm-up dispatch answers degraded"
+                );
+            });
+            wait_until("dispatcher entered execute", || {
+                exec.entered.load(Ordering::SeqCst) == 1
+            });
+            for i in 0..5 {
+                let b = b.clone();
+                scope.spawn(move || {
+                    let _ = b.submit(&QueryRequest::new(format!("doomed {i}"))).unwrap();
+                });
+            }
+            wait_until("all 5 submissions queued", || b.queue_depth() == 5);
+            *exec.gate.lock().unwrap() = true;
+            exec.gate_cv.notify_all();
+        });
+        b.shutdown();
+        let m = metrics.snapshot();
+        assert_eq!(m.requests, 6, "warm-up + 5 doomed, each exactly once");
+        assert_eq!(m.degraded_hits, 3, "warm-up + the two recorded pre-panic");
+        assert_eq!(m.rejected, 3, "unaccounted remainder rejected exactly once each");
+        assert_eq!(
+            m.cache_hits + m.cache_misses + m.degraded_hits + m.rejected,
+            m.requests,
+            "extended balance holds across an executor-panic dispatch"
         );
     }
 

@@ -54,7 +54,7 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::api::{AdminRequest, QueryRequest, QueryResponse};
+use crate::api::{AdminRequest, Outcome, QueryRequest, QueryResponse, REASON_UPSTREAM_UNAVAILABLE};
 use crate::error::{anyhow, bail, Context, Result};
 use crate::json::{self, obj, Value};
 
@@ -375,6 +375,22 @@ impl HttpResponse {
 
     pub(super) fn error(status: u16, msg: &str) -> Self {
         Self::json(status, &obj([("error", msg.into())]))
+    }
+}
+
+/// Seconds advertised in the `Retry-After` header on every 503.
+pub(super) const RETRY_AFTER_SECS: u64 = 1;
+
+/// HTTP status for a typed query reply: upstream-unavailable rejections
+/// (breaker open / deadline exhausted / load shed, with no degraded
+/// candidate in cache) are 503 backpressure like a full batcher queue.
+/// Everything else — hits, misses, degraded hits, and rejections the
+/// caller's own options produced — stays 200 with the outcome in the
+/// body.
+pub(super) fn query_response_status(resp: &QueryResponse) -> u16 {
+    match &resp.outcome {
+        Outcome::Rejected { reason } if reason.starts_with(REASON_UPSTREAM_UNAVAILABLE) => 503,
+        _ => 200,
     }
 }
 
@@ -808,11 +824,21 @@ fn next_request(
 /// common case; the event loop resumes from any offset on partial
 /// writes).
 pub(super) fn serialize_response(resp: &HttpResponse, keep_alive: bool) -> Vec<u8> {
+    // Every 503 is backpressure (full batcher queue, over-max_conns, or
+    // upstream unavailable) — advertise when to come back so well-behaved
+    // clients don't hammer an open breaker. One emission point covers
+    // every 503 path by construction.
+    let retry_after = if resp.status == 503 {
+        format!("Retry-After: {RETRY_AFTER_SECS}\r\n")
+    } else {
+        String::new()
+    };
     let head = format!(
-        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n{}Connection: {}\r\n\r\n",
         resp.status,
         status_text(resp.status),
         resp.body.len(),
+        retry_after,
         if keep_alive { "keep-alive" } else { "close" },
     );
     let mut out = Vec::with_capacity(head.len() + resp.body.len());
@@ -908,7 +934,10 @@ pub(super) fn route_begin(server: &Arc<Server>, batched: bool, req: &HttpRequest
     let resp = match (req.method.as_str(), req.path.as_str()) {
         ("POST", "/v1/query") => match parse_query_request(&req.body) {
             Ok(q) if batched => return Routed::BatchedQuery(q),
-            Ok(q) => HttpResponse::json(200, &server.serve(&q).to_json()),
+            Ok(q) => {
+                let r = server.serve(&q);
+                HttpResponse::json(query_response_status(&r), &r.to_json())
+            }
             Err(resp) => resp,
         },
         ("POST", "/v1/query_batch") => post_query_batch(server, &req.body),
@@ -945,7 +974,13 @@ fn route(server: &Arc<Server>, batcher: Option<&Batcher>, req: &HttpRequest) -> 
         Routed::BatchedQuery(q) => {
             let b = batcher.expect("batched route without a batcher");
             match b.submit(&q) {
-                Ok(resp) => HttpResponse::json(200, &resp.to_json()),
+                Ok(resp) => {
+                    let status = query_response_status(&resp);
+                    if status >= 400 {
+                        server.metrics().record_http_error();
+                    }
+                    HttpResponse::json(status, &resp.to_json())
+                }
                 Err(e) => rejected_submit_response(server, &q, &e),
             }
         }

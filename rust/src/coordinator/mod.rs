@@ -53,11 +53,13 @@ pub mod batcher;
 pub mod http;
 #[cfg(unix)]
 mod reactor;
+pub mod resilience;
 mod server;
 mod trace;
 
 pub use batcher::{BatchConfig, BatchExecutor, Batcher, SubmitError, MAX_DISPATCHERS_LIMIT};
 pub use http::{http_request, serve_http, HttpConfig, HttpHandle};
+pub use resilience::{Resilience, ResilienceConfig, UpstreamOutcome, UpstreamUnavailable};
 pub use server::{
     HousekeepingGuard, Reply, ReplySource, Server, ServerConfig, ServerConfigBuilder,
     SnapshotGuard,

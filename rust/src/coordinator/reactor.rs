@@ -339,7 +339,11 @@ fn handle_work(ctx: Arc<WorkerCtx>, work: Work) {
             // dispatcher invokes this callback with the response, which
             // re-enters the owning reactor as a completion + wakeup.
             let submitted = batcher.submit_with(&q, move |qr| {
-                let resp = HttpResponse::json(200, &qr.to_json());
+                let status = super::http::query_response_status(&qr);
+                if status >= 400 {
+                    cb_ctx.server.metrics().record_http_error();
+                }
+                let resp = HttpResponse::json(status, &qr.to_json());
                 complete(&cb_ctx, reactor, token, resp, keep_alive);
             });
             if let Err(e) = submitted {

@@ -1,0 +1,562 @@
+//! Upstream resilience: deadlines, retries, circuit breaker, shedding.
+//!
+//! Sits between the serving workflow ([`super::Server::serve`] /
+//! `serve_batch`) and the simulated LLM. Every miss that must go
+//! upstream is routed through [`Resilience::call`], which:
+//!
+//! 1. consults a closed/open/half-open **circuit breaker** — an open
+//!    breaker refuses instantly (no upstream attempt) until
+//!    `breaker_open_ms` has elapsed, then admits half-open probes and
+//!    closes again after `breaker_halfopen_probes` consecutive
+//!    successes;
+//! 2. enforces an **in-flight cap** (`max_inflight`): excess misses are
+//!    shed immediately instead of queueing behind a dying upstream;
+//! 3. runs a bounded **retry loop** (`max_retries`) with jittered
+//!    exponential backoff, honoring any server-advertised `retry-after`
+//!    and never sleeping past the request's **deadline**;
+//! 4. propagates the remaining deadline budget into each attempt
+//!    ([`SimLlm::call_within`]), so an injected hang costs at most the
+//!    budget, not the hang.
+//!
+//! The caller decides what an [`UpstreamUnavailable`] means: the server
+//! degrades to a relaxed-threshold cache answer when one exists
+//! (`Outcome::Degraded`), else rejects with
+//! [`crate::api::REASON_UPSTREAM_UNAVAILABLE`]. This module never
+//! answers from the cache itself — it only brokers upstream access.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::llm::{LlmError, LlmResponse, SimLlm};
+use crate::metrics::{BreakerState, Metrics};
+use crate::util::Rng;
+
+/// Tuning knobs, mapped 1:1 from the `upstream_*` config keys.
+#[derive(Debug, Clone)]
+pub struct ResilienceConfig {
+    /// Default end-to-end deadline per request, ms (0 = none; requests
+    /// override via `deadline_ms`).
+    pub deadline_ms: u64,
+    /// Retries per miss after the first attempt.
+    pub max_retries: u32,
+    /// First backoff, ms; doubles per retry (jittered ±50%).
+    pub backoff_base_ms: u64,
+    /// Backoff ceiling, ms.
+    pub backoff_max_ms: u64,
+    /// Consecutive failures that trip the breaker open.
+    pub breaker_failures: u32,
+    /// Open-state hold before half-open probes are admitted, ms.
+    pub breaker_open_ms: u64,
+    /// Consecutive half-open successes required to close.
+    pub breaker_halfopen_probes: u32,
+    /// In-flight upstream call cap (0 = uncapped).
+    pub max_inflight: usize,
+}
+
+impl Default for ResilienceConfig {
+    fn default() -> Self {
+        let c = crate::config::Config::default();
+        Self::from_app_config(&c)
+    }
+}
+
+impl ResilienceConfig {
+    pub fn from_app_config(cfg: &crate::config::Config) -> Self {
+        Self {
+            deadline_ms: cfg.upstream_deadline_ms,
+            max_retries: cfg.upstream_max_retries,
+            backoff_base_ms: cfg.upstream_backoff_base_ms,
+            backoff_max_ms: cfg.upstream_backoff_max_ms,
+            breaker_failures: cfg.upstream_breaker_failures,
+            breaker_open_ms: cfg.upstream_breaker_open_ms,
+            breaker_halfopen_probes: cfg.upstream_breaker_halfopen_probes,
+            max_inflight: cfg.upstream_max_inflight,
+        }
+    }
+
+    /// The absolute deadline for a request accepted at `start`, with the
+    /// per-request override taking precedence over the configured
+    /// default. `None` = unbounded.
+    pub fn deadline_from(&self, start: Instant, override_ms: Option<u64>) -> Option<Instant> {
+        let ms = override_ms.unwrap_or(self.deadline_ms);
+        if ms == 0 {
+            None
+        } else {
+            Some(start + Duration::from_millis(ms))
+        }
+    }
+}
+
+/// Why an upstream call was not answered.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum UpstreamUnavailable {
+    /// The breaker was (or tripped) open.
+    BreakerOpen,
+    /// The in-flight cap shed this call before any attempt.
+    Shed,
+    /// The request's deadline ran out (before or between attempts).
+    DeadlineExhausted,
+    /// Every attempt in the retry budget failed; carries the last error.
+    RetriesExhausted(LlmError),
+}
+
+impl UpstreamUnavailable {
+    pub fn describe(&self) -> String {
+        match self {
+            UpstreamUnavailable::BreakerOpen => "circuit breaker open".into(),
+            UpstreamUnavailable::Shed => "shed at upstream in-flight cap".into(),
+            UpstreamUnavailable::DeadlineExhausted => "request deadline exhausted".into(),
+            UpstreamUnavailable::RetriesExhausted(e) => format!("retries exhausted ({e})"),
+        }
+    }
+}
+
+/// The result of one resilient upstream call.
+#[derive(Debug)]
+pub enum UpstreamOutcome {
+    Answered(LlmResponse),
+    Unavailable(UpstreamUnavailable),
+}
+
+struct Breaker {
+    state: BreakerState,
+    consecutive_failures: u32,
+    halfopen_successes: u32,
+    opened_at: Option<Instant>,
+}
+
+/// The resilience layer. One instance per [`super::Server`]; thread-safe
+/// (every serve/dispatch thread calls into the same breaker and cap).
+pub struct Resilience {
+    cfg: ResilienceConfig,
+    metrics: Arc<Metrics>,
+    breaker: Mutex<Breaker>,
+    inflight: AtomicUsize,
+    rng: Mutex<Rng>,
+}
+
+struct InflightGuard<'a>(&'a AtomicUsize);
+
+impl Drop for InflightGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+impl Resilience {
+    pub fn new(cfg: ResilienceConfig, metrics: Arc<Metrics>) -> Self {
+        Self {
+            cfg,
+            metrics,
+            breaker: Mutex::new(Breaker {
+                state: BreakerState::Closed,
+                consecutive_failures: 0,
+                halfopen_successes: 0,
+                opened_at: None,
+            }),
+            inflight: AtomicUsize::new(0),
+            rng: Mutex::new(Rng::new(0xB0FF)),
+        }
+    }
+
+    pub fn config(&self) -> &ResilienceConfig {
+        &self.cfg
+    }
+
+    pub fn breaker_state(&self) -> BreakerState {
+        self.breaker.lock().unwrap().state
+    }
+
+    /// Route one miss upstream under the full resilience policy.
+    pub fn call(
+        &self,
+        llm: &SimLlm,
+        question: &str,
+        ground_truth: Option<&str>,
+        deadline: Option<Instant>,
+    ) -> UpstreamOutcome {
+        if !self.admit() {
+            return UpstreamOutcome::Unavailable(UpstreamUnavailable::BreakerOpen);
+        }
+        let _guard = match self.try_acquire() {
+            Some(g) => g,
+            None => {
+                self.metrics.record_upstream_shed();
+                return UpstreamOutcome::Unavailable(UpstreamUnavailable::Shed);
+            }
+        };
+        let attempts = 1 + self.cfg.max_retries;
+        for attempt in 0..attempts {
+            let budget_ms = match deadline {
+                None => None,
+                Some(d) => {
+                    let left = d.saturating_duration_since(Instant::now()).as_millis() as u64;
+                    if left == 0 {
+                        return UpstreamOutcome::Unavailable(
+                            UpstreamUnavailable::DeadlineExhausted,
+                        );
+                    }
+                    Some(left)
+                }
+            };
+            if attempt > 0 {
+                self.metrics.record_upstream_retry();
+            }
+            match llm.call_within(question, ground_truth, budget_ms) {
+                Ok(resp) => {
+                    self.on_success();
+                    return UpstreamOutcome::Answered(resp);
+                }
+                Err(err) => {
+                    self.metrics.record_upstream_error();
+                    if self.on_failure() {
+                        // The breaker tripped on this failure: stop
+                        // burning retry budget against a dead upstream.
+                        return UpstreamOutcome::Unavailable(UpstreamUnavailable::BreakerOpen);
+                    }
+                    if attempt + 1 == attempts {
+                        return UpstreamOutcome::Unavailable(
+                            UpstreamUnavailable::RetriesExhausted(err),
+                        );
+                    }
+                    let wait_ms = self.backoff_ms(attempt, err.retry_after_ms());
+                    if let Some(d) = deadline {
+                        if Instant::now() + Duration::from_millis(wait_ms) >= d {
+                            return UpstreamOutcome::Unavailable(
+                                UpstreamUnavailable::DeadlineExhausted,
+                            );
+                        }
+                    }
+                    if wait_ms > 0 {
+                        std::thread::sleep(Duration::from_millis(wait_ms));
+                    }
+                }
+            }
+        }
+        unreachable!("retry loop always returns")
+    }
+
+    /// Jittered exponential backoff before retry `attempt + 1`, floored
+    /// at any server-advertised `retry-after`.
+    fn backoff_ms(&self, attempt: u32, retry_after_ms: Option<u64>) -> u64 {
+        let exp = self
+            .cfg
+            .backoff_base_ms
+            .saturating_mul(1u64 << attempt.min(20))
+            .min(self.cfg.backoff_max_ms);
+        let jittered = (exp as f64 * self.rng.lock().unwrap().range_f64(0.5, 1.5)) as u64;
+        jittered.max(retry_after_ms.unwrap_or(0))
+    }
+
+    fn try_acquire(&self) -> Option<InflightGuard<'_>> {
+        if self.cfg.max_inflight == 0 {
+            self.inflight.fetch_add(1, Ordering::Relaxed);
+            return Some(InflightGuard(&self.inflight));
+        }
+        let cap = self.cfg.max_inflight;
+        let mut cur = self.inflight.load(Ordering::Relaxed);
+        loop {
+            if cur >= cap {
+                return None;
+            }
+            match self.inflight.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return Some(InflightGuard(&self.inflight)),
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    /// May this call proceed upstream? Flips an expired open breaker to
+    /// half-open (probing) as a side effect.
+    fn admit(&self) -> bool {
+        let mut b = self.breaker.lock().unwrap();
+        match b.state {
+            BreakerState::Closed | BreakerState::HalfOpen => true,
+            BreakerState::Open => {
+                let expired = b
+                    .opened_at
+                    .map(|t| t.elapsed() >= Duration::from_millis(self.cfg.breaker_open_ms))
+                    .unwrap_or(true);
+                if expired {
+                    b.state = BreakerState::HalfOpen;
+                    b.halfopen_successes = 0;
+                    self.metrics.record_breaker_transition(BreakerState::HalfOpen);
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    fn on_success(&self) {
+        let mut b = self.breaker.lock().unwrap();
+        match b.state {
+            BreakerState::Closed => b.consecutive_failures = 0,
+            BreakerState::HalfOpen => {
+                b.halfopen_successes += 1;
+                if b.halfopen_successes >= self.cfg.breaker_halfopen_probes {
+                    b.state = BreakerState::Closed;
+                    b.consecutive_failures = 0;
+                    b.opened_at = None;
+                    self.metrics.record_breaker_transition(BreakerState::Closed);
+                }
+            }
+            // A success can land while another thread's failure opened
+            // the breaker; leave the open state authoritative.
+            BreakerState::Open => {}
+        }
+    }
+
+    /// Record one failed attempt; returns true when this failure tripped
+    /// the breaker open.
+    fn on_failure(&self) -> bool {
+        let mut b = self.breaker.lock().unwrap();
+        match b.state {
+            BreakerState::Closed => {
+                b.consecutive_failures += 1;
+                if b.consecutive_failures >= self.cfg.breaker_failures {
+                    b.state = BreakerState::Open;
+                    b.opened_at = Some(Instant::now());
+                    self.metrics.record_breaker_transition(BreakerState::Open);
+                    return true;
+                }
+                false
+            }
+            BreakerState::HalfOpen => {
+                // A failed probe slams the breaker shut for another full
+                // open window.
+                b.state = BreakerState::Open;
+                b.opened_at = Some(Instant::now());
+                b.halfopen_successes = 0;
+                self.metrics.record_breaker_transition(BreakerState::Open);
+                true
+            }
+            BreakerState::Open => true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::llm::{FaultPlan, SimLlmConfig};
+
+    fn fast_cfg() -> ResilienceConfig {
+        ResilienceConfig {
+            deadline_ms: 0,
+            max_retries: 1,
+            backoff_base_ms: 0,
+            backoff_max_ms: 0,
+            breaker_failures: 3,
+            breaker_open_ms: 40,
+            breaker_halfopen_probes: 2,
+            max_inflight: 0,
+        }
+    }
+
+    fn llm() -> SimLlm {
+        SimLlm::new(SimLlmConfig::default())
+    }
+
+    #[test]
+    fn healthy_upstream_answers_first_attempt() {
+        let m = Arc::new(Metrics::new());
+        let r = Resilience::new(fast_cfg(), m.clone());
+        let llm = llm();
+        match r.call(&llm, "q", Some("a"), None) {
+            UpstreamOutcome::Answered(resp) => assert_eq!(resp.text, "a"),
+            other => panic!("expected answer, got {other:?}"),
+        }
+        assert_eq!(llm.calls(), 1);
+        assert_eq!(m.snapshot().upstream_errors, 0);
+        assert_eq!(r.breaker_state(), BreakerState::Closed);
+    }
+
+    #[test]
+    fn transient_error_is_retried_to_success() {
+        let m = Arc::new(Metrics::new());
+        let r = Resilience::new(fast_cfg(), m.clone());
+        let llm = llm();
+        // Call 0 lands in the outage window, call 1 survives.
+        llm.set_fault_plan(FaultPlan {
+            outage_from_call: 0,
+            outage_until_call: 1,
+            ..FaultPlan::default()
+        });
+        match r.call(&llm, "q", Some("a"), None) {
+            UpstreamOutcome::Answered(resp) => assert_eq!(resp.text, "a"),
+            other => panic!("expected retried answer, got {other:?}"),
+        }
+        assert_eq!(llm.calls(), 2);
+        let s = m.snapshot();
+        assert_eq!(s.upstream_errors, 1);
+        assert_eq!(s.upstream_retries, 1);
+    }
+
+    #[test]
+    fn retries_exhausted_carries_last_error() {
+        let m = Arc::new(Metrics::new());
+        let cfg = ResilienceConfig { breaker_failures: 100, ..fast_cfg() };
+        let r = Resilience::new(cfg, m.clone());
+        let llm = llm();
+        llm.set_fault_plan(FaultPlan::full_outage());
+        match r.call(&llm, "q", Some("a"), None) {
+            UpstreamOutcome::Unavailable(UpstreamUnavailable::RetriesExhausted(
+                LlmError::Outage,
+            )) => {}
+            other => panic!("expected RetriesExhausted(Outage), got {other:?}"),
+        }
+        assert_eq!(llm.calls(), 2, "1 attempt + 1 retry");
+        assert_eq!(m.snapshot().upstream_errors, 2);
+    }
+
+    #[test]
+    fn breaker_opens_and_refuses_without_upstream_attempts() {
+        let m = Arc::new(Metrics::new());
+        let cfg = ResilienceConfig { breaker_open_ms: 60_000, ..fast_cfg() };
+        let r = Resilience::new(cfg, m.clone());
+        let llm = llm();
+        llm.set_fault_plan(FaultPlan::full_outage());
+        // breaker_failures = 3: the second call's first failure trips it.
+        let _ = r.call(&llm, "q", Some("a"), None);
+        let _ = r.call(&llm, "q", Some("a"), None);
+        assert_eq!(r.breaker_state(), BreakerState::Open);
+        let calls_before = llm.calls();
+        match r.call(&llm, "q", Some("a"), None) {
+            UpstreamOutcome::Unavailable(UpstreamUnavailable::BreakerOpen) => {}
+            other => panic!("expected BreakerOpen, got {other:?}"),
+        }
+        assert_eq!(llm.calls(), calls_before, "open breaker must not touch the upstream");
+        let s = m.snapshot();
+        assert_eq!(s.breaker_state, BreakerState::Open);
+        assert_eq!(s.breaker_opens, 1);
+    }
+
+    #[test]
+    fn breaker_recovers_open_to_half_open_to_closed() {
+        let m = Arc::new(Metrics::new());
+        let r = Resilience::new(fast_cfg(), m.clone());
+        let llm = llm();
+        llm.set_fault_plan(FaultPlan::full_outage());
+        while r.breaker_state() != BreakerState::Open {
+            let _ = r.call(&llm, "q", Some("a"), None);
+        }
+        // Upstream heals; after the open window, probes close the breaker.
+        llm.set_fault_plan(FaultPlan::default());
+        std::thread::sleep(Duration::from_millis(50));
+        for _ in 0..2 {
+            match r.call(&llm, "q", Some("a"), None) {
+                UpstreamOutcome::Answered(_) => {}
+                other => panic!("probe should answer, got {other:?}"),
+            }
+        }
+        assert_eq!(r.breaker_state(), BreakerState::Closed);
+        let s = m.snapshot();
+        assert_eq!(s.breaker_state, BreakerState::Closed);
+        assert!(s.breaker_opens >= 1);
+        assert_eq!(s.breaker_half_opens, 1);
+        assert_eq!(s.breaker_closes, 1);
+    }
+
+    #[test]
+    fn failed_half_open_probe_reopens() {
+        let m = Arc::new(Metrics::new());
+        let r = Resilience::new(fast_cfg(), m.clone());
+        let llm = llm();
+        llm.set_fault_plan(FaultPlan::full_outage());
+        while r.breaker_state() != BreakerState::Open {
+            let _ = r.call(&llm, "q", Some("a"), None);
+        }
+        std::thread::sleep(Duration::from_millis(50));
+        // Still down: the probe fails and the breaker slams shut again.
+        let _ = r.call(&llm, "q", Some("a"), None);
+        assert_eq!(r.breaker_state(), BreakerState::Open);
+        assert!(m.snapshot().breaker_opens >= 2);
+    }
+
+    #[test]
+    fn expired_deadline_refuses_before_any_attempt() {
+        let m = Arc::new(Metrics::new());
+        let r = Resilience::new(fast_cfg(), m.clone());
+        let llm = llm();
+        let past = Instant::now() - Duration::from_millis(10);
+        match r.call(&llm, "q", Some("a"), Some(past)) {
+            UpstreamOutcome::Unavailable(UpstreamUnavailable::DeadlineExhausted) => {}
+            other => panic!("expected DeadlineExhausted, got {other:?}"),
+        }
+        assert_eq!(llm.calls(), 0);
+    }
+
+    #[test]
+    fn deadline_bounds_injected_hangs() {
+        let m = Arc::new(Metrics::new());
+        let cfg = ResilienceConfig { max_retries: 0, ..fast_cfg() };
+        let r = Resilience::new(cfg, m.clone());
+        let llm = llm();
+        llm.set_fault_plan(FaultPlan {
+            hang_prob: 1.0,
+            hang_ms: 120_000,
+            ..FaultPlan::default()
+        });
+        let deadline = Instant::now() + Duration::from_millis(500);
+        match r.call(&llm, "q", Some("a"), Some(deadline)) {
+            UpstreamOutcome::Unavailable(UpstreamUnavailable::RetriesExhausted(
+                LlmError::Timeout { budget_ms },
+            )) => assert!(budget_ms <= 500, "budget {budget_ms} > deadline"),
+            other => panic!("expected Timeout at the deadline, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn inflight_cap_sheds_excess_misses() {
+        let m = Arc::new(Metrics::new());
+        let cfg = ResilienceConfig { max_inflight: 2, ..fast_cfg() };
+        let r = Resilience::new(cfg, m.clone());
+        let llm = llm();
+        // Saturate the cap, then a real call must shed.
+        let g1 = r.try_acquire().expect("slot 1");
+        let _g2 = r.try_acquire().expect("slot 2");
+        assert!(r.try_acquire().is_none(), "cap reached");
+        match r.call(&llm, "q", Some("a"), None) {
+            UpstreamOutcome::Unavailable(UpstreamUnavailable::Shed) => {}
+            other => panic!("expected Shed, got {other:?}"),
+        }
+        assert_eq!(llm.calls(), 0);
+        assert_eq!(m.snapshot().upstream_shed, 1);
+        // Releasing a slot readmits traffic.
+        drop(g1);
+        match r.call(&llm, "q", Some("a"), None) {
+            UpstreamOutcome::Answered(_) => {}
+            other => panic!("expected answer after release, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn backoff_honors_retry_after() {
+        let m = Arc::new(Metrics::new());
+        let cfg = ResilienceConfig { backoff_base_ms: 1, backoff_max_ms: 1, ..fast_cfg() };
+        let r = Resilience::new(cfg, m);
+        assert!(r.backoff_ms(0, Some(250)) >= 250, "retry-after floors the backoff");
+        assert!(r.backoff_ms(0, None) <= 2, "jittered base stays near 1ms");
+    }
+
+    #[test]
+    fn deadline_from_prefers_request_override() {
+        let cfg = ResilienceConfig { deadline_ms: 1_000, ..fast_cfg() };
+        let t0 = Instant::now();
+        let d = cfg.deadline_from(t0, None).expect("configured default");
+        assert_eq!(d, t0 + Duration::from_millis(1_000));
+        let d = cfg.deadline_from(t0, Some(200)).expect("override");
+        assert_eq!(d, t0 + Duration::from_millis(200));
+        let cfg = ResilienceConfig { deadline_ms: 0, ..fast_cfg() };
+        assert!(cfg.deadline_from(t0, None).is_none(), "0 = unbounded");
+        assert!(cfg.deadline_from(t0, Some(300)).is_some());
+    }
+}

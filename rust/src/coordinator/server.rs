@@ -15,10 +15,14 @@ use std::time::{Duration, Instant};
 
 use crate::api::{
     AdminRequest, AdminResponse, LatencyBreakdown, Outcome, QueryRequest, QueryResponse,
+    REASON_UPSTREAM_UNAVAILABLE,
 };
 use crate::cache::{CacheConfig, CachedEntry, SemanticCache};
 use crate::coordinator::batcher::{
     BatchConfig, Batcher, BatchExecutor, MAX_BATCH_SIZE_LIMIT, MAX_WAIT_US_LIMIT,
+};
+use crate::coordinator::resilience::{
+    Resilience, ResilienceConfig, UpstreamOutcome, UpstreamUnavailable,
 };
 use crate::embedding::Encoder;
 use crate::error::{bail, Result};
@@ -44,6 +48,13 @@ pub struct ServerConfig {
     /// With `Some`, [`Server::try_new`] recovers state from the data dir
     /// at startup and journals every cache mutation.
     pub persist: Option<PersistConfig>,
+    /// Upstream fault policy: deadlines, retries, breaker, shedding
+    /// (see [`crate::coordinator::resilience`]).
+    pub resilience: ResilienceConfig,
+    /// Relaxed similarity gate used to answer from the cache while the
+    /// upstream is unavailable (degraded mode). Must be no stricter than
+    /// useful — a miss at the normal gate is retried at this one.
+    pub degraded_threshold: f32,
 }
 
 impl Default for ServerConfig {
@@ -55,6 +66,8 @@ impl Default for ServerConfig {
             workers: 4,
             batch: BatchConfig::default(),
             persist: None,
+            resilience: ResilienceConfig::default(),
+            degraded_threshold: crate::config::Config::default().degraded_threshold,
         }
     }
 }
@@ -79,6 +92,20 @@ impl ServerConfig {
                 bail!("snapshot_interval_secs must be >= 1");
             }
         }
+        if !self.degraded_threshold.is_finite()
+            || !(-1.0..=1.0).contains(&self.degraded_threshold)
+        {
+            bail!(
+                "degraded_threshold must be a finite cosine in [-1, 1], got {}",
+                self.degraded_threshold
+            );
+        }
+        if self.resilience.breaker_failures == 0 {
+            bail!("upstream breaker_failures must be >= 1");
+        }
+        if self.resilience.breaker_halfopen_probes == 0 {
+            bail!("upstream breaker_halfopen_probes must be >= 1");
+        }
         Ok(())
     }
 
@@ -102,6 +129,8 @@ impl ServerConfig {
                 ..BatchConfig::default()
             })
             .persist(PersistConfig::from_app_config(cfg))
+            .resilience(ResilienceConfig::from_app_config(cfg))
+            .degraded_threshold(cfg.degraded_threshold)
             .build()
     }
 }
@@ -140,6 +169,16 @@ impl ServerConfigBuilder {
 
     pub fn persist(mut self, persist: Option<PersistConfig>) -> Self {
         self.cfg.persist = persist;
+        self
+    }
+
+    pub fn resilience(mut self, resilience: ResilienceConfig) -> Self {
+        self.cfg.resilience = resilience;
+        self
+    }
+
+    pub fn degraded_threshold(mut self, t: f32) -> Self {
+        self.cfg.degraded_threshold = t;
         self
     }
 
@@ -192,7 +231,9 @@ impl Reply {
     /// (`Rejected` outcomes map to the LLM source with an empty body).
     pub fn from_response(resp: QueryResponse) -> Self {
         let source = match resp.outcome {
-            Outcome::Hit { score, .. } => ReplySource::Cache { score },
+            Outcome::Hit { score, .. } | Outcome::Degraded { score, .. } => {
+                ReplySource::Cache { score }
+            }
             Outcome::Miss { .. } | Outcome::Rejected { .. } => ReplySource::Llm,
         };
         Self {
@@ -232,6 +273,10 @@ pub struct Server {
     persist: Option<Arc<Persistence>>,
     /// What startup recovery restored (all-zero without persistence).
     recovery: RecoveryReport,
+    /// Upstream fault policy: every miss goes through here.
+    resilience: Resilience,
+    /// Relaxed gate for degraded-mode cache answers.
+    degraded_threshold: f32,
 }
 
 impl Server {
@@ -265,6 +310,8 @@ impl Server {
             cache,
             llm: SimLlm::new(cfg.llm),
             judge: Judge::new(cfg.judge),
+            resilience: Resilience::new(cfg.resilience, metrics.clone()),
+            degraded_threshold: cfg.degraded_threshold,
             metrics,
             workers: cfg.workers.max(1),
             batch_cfg: cfg.batch,
@@ -339,6 +386,16 @@ impl Server {
 
     pub fn llm(&self) -> &SimLlm {
         &self.llm
+    }
+
+    /// The upstream resilience layer (breaker state, policy knobs).
+    pub fn resilience(&self) -> &Resilience {
+        &self.resilience
+    }
+
+    /// The relaxed similarity gate used for degraded-mode answers.
+    pub fn degraded_threshold(&self) -> f32 {
+        self.degraded_threshold
     }
 
     /// The micro-batching window policy this server was built with.
@@ -439,6 +496,7 @@ impl Server {
     /// in-process [`Server::handle`] shim, [`Server::serve_batch`], and
     /// the `semcached` HTTP daemon ([`crate::coordinator::http`]).
     pub fn serve(&self, req: &QueryRequest) -> QueryResponse {
+        let accepted = Instant::now();
         self.metrics.record_request();
         if let Err(e) = req.validate() {
             self.metrics.record_rejected();
@@ -461,19 +519,24 @@ impl Server {
             self.metrics.observe_embed_memo_ms(embed_ms);
         }
 
-        self.serve_embedded(req, &outcome.embedding, embed_ms, outcome.memo_hit)
+        let deadline = self.resilience.config().deadline_from(accepted, req.options.deadline_ms);
+        self.serve_embedded(req, &outcome.embedding, embed_ms, outcome.memo_hit, deadline)
     }
 
     /// Steps 2..3 of the workflow for a request whose embedding is
     /// already computed (`embed_ms` is the — possibly amortized — cost
     /// attributed to it). Shared by [`Server::serve`] and the batch
-    /// workers. The request is assumed validated.
+    /// workers. The request is assumed validated. `deadline` is the
+    /// absolute budget propagated from where the request was accepted
+    /// (the HTTP edge via the batcher's enqueue instant, or `serve()`
+    /// entry); only the upstream leg of a miss consults it.
     fn serve_embedded(
         &self,
         req: &QueryRequest,
         embedding: &[f32],
         embed_ms: f64,
         embed_cached: bool,
+        deadline: Option<Instant>,
     ) -> QueryResponse {
         // The request's `client_tag` selects the tenant namespace; the
         // similarity gate resolves per-request override → tenant
@@ -510,6 +573,7 @@ impl Server {
                     index_ms,
                     llm_ms: 0.0,
                     embed_cached,
+                    degraded: false,
                 },
                 judged_positive: judged,
                 matched_cluster: Some(hit.entry.cluster),
@@ -517,11 +581,23 @@ impl Server {
             };
         }
 
-        // 3b. Miss: call the (simulated) LLM, insert, reply.
-        self.metrics.record_miss();
+        // 3b. Miss: go upstream through the resilience layer (deadline,
+        // retries, breaker, shedding), insert, reply. An unavailable
+        // upstream degrades to a relaxed-threshold cache answer instead.
         let ground_truth =
             req.cluster.and_then(|c| self.ground_truth.read().unwrap().get(&c).cloned());
-        let resp = self.llm.call(&req.text, ground_truth.as_deref());
+        let resp = match self.resilience.call(
+            &self.llm,
+            &req.text,
+            ground_truth.as_deref(),
+            deadline,
+        ) {
+            UpstreamOutcome::Answered(resp) => resp,
+            UpstreamOutcome::Unavailable(why) => {
+                return self.serve_degraded(req, embedding, embed_ms, index_ms, embed_cached, tenant, &why);
+            }
+        };
+        self.metrics.record_miss();
         self.metrics.record_llm_call(resp.input_tokens, resp.output_tokens);
         self.metrics.observe_llm_ms(resp.latency_ms);
 
@@ -559,10 +635,75 @@ impl Server {
                 index_ms,
                 llm_ms: resp.latency_ms,
                 embed_cached,
+                degraded: false,
             },
             judged_positive: None,
             matched_cluster: None,
             client_tag: req.client_tag.clone(),
+        }
+    }
+
+    /// Degraded mode: the upstream is unavailable (`why`), so retry the
+    /// lookup at the relaxed [`ServerConfig::degraded_threshold`] gate
+    /// and answer from the best candidate when one exists — explicitly
+    /// marked (`Outcome::Degraded`, `latency.degraded`) so it is never
+    /// passed off as a fresh or first-class cached answer. With no
+    /// candidate the request is rejected with
+    /// [`REASON_UPSTREAM_UNAVAILABLE`] (the HTTP front-end maps that
+    /// prefix to 503 + `Retry-After`). Nothing is inserted, so an outage
+    /// can never pollute the cache or the WAL.
+    fn serve_degraded(
+        &self,
+        req: &QueryRequest,
+        embedding: &[f32],
+        embed_ms: f64,
+        index_ms: f64,
+        embed_cached: bool,
+        tenant: &str,
+        why: &UpstreamUnavailable,
+    ) -> QueryResponse {
+        let t = Instant::now();
+        let hit = self.cache.lookup_with_opts_for(
+            tenant,
+            embedding,
+            self.degraded_threshold,
+            req.options.top_k,
+        );
+        let relaxed_ms = t.elapsed().as_secs_f64() * 1e3;
+        let index_ms = index_ms + relaxed_ms;
+        match hit {
+            Some(hit) => {
+                self.metrics.record_degraded_hit();
+                let judged = req.cluster.map(|c| {
+                    let ok = self.judge.validate(c, hit.entry.cluster);
+                    self.metrics.record_judgement(ok);
+                    ok
+                });
+                let total_ms = embed_ms + index_ms;
+                self.metrics.observe_total_ms(total_ms);
+                QueryResponse {
+                    response: hit.entry.response.clone(),
+                    outcome: Outcome::Degraded { score: hit.score, entry_id: hit.id },
+                    latency: LatencyBreakdown {
+                        total_ms,
+                        embed_ms,
+                        index_ms,
+                        llm_ms: 0.0,
+                        embed_cached,
+                        degraded: true,
+                    },
+                    judged_positive: judged,
+                    matched_cluster: Some(hit.entry.cluster),
+                    client_tag: req.client_tag.clone(),
+                }
+            }
+            None => {
+                self.metrics.record_rejected();
+                QueryResponse::rejected(
+                    req,
+                    format!("{REASON_UPSTREAM_UNAVAILABLE}: {}", why.describe()),
+                )
+            }
         }
     }
 
@@ -580,7 +721,24 @@ impl Server {
     pub fn handle_without_cache(&self, text: &str, cluster: Option<u64>) -> Reply {
         let ground_truth =
             cluster.and_then(|c| self.ground_truth.read().unwrap().get(&c).cloned());
-        let resp = self.llm.call(text, ground_truth.as_deref());
+        // The baseline has no cache to degrade to; an injected upstream
+        // fault surfaces as an error-shaped reply (benchmarks run with a
+        // no-op fault plan, so this path only fires in chaos tests).
+        let resp = match self.llm.call(text, ground_truth.as_deref()) {
+            Ok(r) => r,
+            Err(e) => {
+                return Reply {
+                    response: format!("<{REASON_UPSTREAM_UNAVAILABLE}: {e}>"),
+                    source: ReplySource::Llm,
+                    total_ms: 0.0,
+                    embed_ms: 0.0,
+                    index_ms: 0.0,
+                    llm_ms: 0.0,
+                    judged_positive: None,
+                    matched_cluster: None,
+                }
+            }
+        };
         Reply {
             response: resp.text,
             source: ReplySource::Llm,
@@ -628,21 +786,27 @@ impl Server {
         reqs: &[QueryRequest],
         workers: usize,
     ) -> Vec<QueryResponse> {
-        self.serve_batch_tracked(reqs, workers, &AtomicUsize::new(0))
+        self.serve_batch_tracked(reqs, workers, &[], &AtomicUsize::new(0))
     }
 
     /// [`Server::serve_batch_with_workers`] with an accounting-progress
     /// counter: `recorded` is bumped once per query whose `request` +
-    /// outcome (hit/miss/rejected) metrics are both recorded, and the
-    /// bump is adjacent to those recordings, so a worker panicking
-    /// mid-batch leaves `recorded` equal to the number of fully
-    /// accounted queries. The batcher reads it to keep
-    /// `cache_hits + cache_misses + rejected == requests` exact when it
-    /// rejects the remainder of a failed dispatch.
+    /// outcome (hit/miss/degraded/rejected) metrics are both recorded,
+    /// and the bump is adjacent to those recordings, so a worker
+    /// panicking mid-batch leaves `recorded` equal to the number of
+    /// fully accounted queries. The batcher reads it to keep
+    /// `cache_hits + cache_misses + degraded_hits + rejected == requests`
+    /// exact when it rejects the remainder of a failed dispatch.
+    ///
+    /// `accepted` carries each request's edge-accept instant (the
+    /// batcher's enqueue time) so upstream deadlines include time spent
+    /// queued; when empty (direct `serve_batch` callers) every request
+    /// is treated as accepted at batch start.
     fn serve_batch_tracked(
         &self,
         reqs: &[QueryRequest],
         workers: usize,
+        accepted: &[Instant],
         recorded: &AtomicUsize,
     ) -> Vec<QueryResponse> {
         if reqs.is_empty() {
@@ -746,11 +910,16 @@ impl Server {
                         if outcome.memo_hit && chunk_all_memo_hits {
                             self.metrics.observe_embed_memo_ms(per_query_ms);
                         }
+                        let deadline = self.resilience.config().deadline_from(
+                            accepted.get(i).copied().unwrap_or(t_batch),
+                            req.options.deadline_ms,
+                        );
                         let resp = self.serve_embedded(
                             req,
                             &outcome.embedding,
                             per_query_ms,
                             outcome.memo_hit,
+                            deadline,
                         );
                         // `request` is recorded only once the outcome is
                         // too (serve_embedded records hit/miss), and the
@@ -834,6 +1003,13 @@ impl Server {
                 Err(e) => AdminResponse::Unsupported { reason: format!("{e:#}") },
             },
             AdminRequest::Stats => AdminResponse::Stats(self.stats_json()),
+            AdminRequest::Fault(plan) => {
+                // Replace the upstream fault schedule wholesale (an
+                // empty plan clears injection); echoes the full plan so
+                // operators see exactly what is now in force.
+                self.llm.set_fault_plan(plan.clone());
+                AdminResponse::FaultSet { plan: self.llm.fault_plan() }
+            }
         }
     }
 
@@ -864,6 +1040,7 @@ impl Server {
             ("tenants", Value::Object(tenants)),
             ("embed_memo", memo),
             ("threshold", (self.effective_threshold() as f64).into()),
+            ("degraded_threshold", (self.degraded_threshold as f64).into()),
             ("workers", self.workers.into()),
         ])
     }
@@ -897,7 +1074,19 @@ impl BatchExecutor for Server {
     /// avoid double-counting queries this server already recorded
     /// before a mid-batch panic.
     fn execute_tracked(&self, reqs: &[QueryRequest], recorded: &AtomicUsize) -> Vec<QueryResponse> {
-        self.serve_batch_tracked(reqs, self.workers, recorded)
+        self.serve_batch_tracked(reqs, self.workers, &[], recorded)
+    }
+
+    /// [`BatchExecutor::execute_tracked`] with each request's original
+    /// enqueue instant, so deadlines measured from the HTTP edge survive
+    /// the trip through the batcher's queue and window.
+    fn execute_tracked_since(
+        &self,
+        reqs: &[QueryRequest],
+        accepted: &[Instant],
+        recorded: &AtomicUsize,
+    ) -> Vec<QueryResponse> {
+        self.serve_batch_tracked(reqs, self.workers, accepted, recorded)
     }
 
     /// Answer an identical in-flight twin from its representative's
@@ -908,11 +1097,15 @@ impl BatchExecutor for Server {
     ///   text ⇒ equal embedding ⇒ equal cosine);
     /// * rep miss → dup hits the entry the representative just inserted
     ///   (equal text ⇒ cosine 1.0 against it);
+    /// * rep degraded → dup degrades onto the same relaxed-gate entry
+    ///   (still marked degraded — coalescing must not launder it into a
+    ///   first-class hit);
     /// * rep rejected → dup rejected for the same reason.
     ///
-    /// Metrics mirror the sequential path (request + hit + judgement);
-    /// embedding tokens and LLM calls are *not* recorded — the whole
-    /// point of coalescing is that the duplicate never pays them.
+    /// Metrics mirror the sequential path (request + hit/degraded +
+    /// judgement); embedding tokens and LLM calls are *not* recorded —
+    /// the whole point of coalescing is that the duplicate never pays
+    /// them.
     fn coalesce(
         &self,
         dup: &QueryRequest,
@@ -928,6 +1121,10 @@ impl BatchExecutor for Server {
                 Outcome::Hit { score: 1.0, entry_id: *inserted_id },
                 Some(rep.cluster.unwrap_or(0)),
             ),
+            Outcome::Degraded { score, entry_id } => (
+                Outcome::Degraded { score: *score, entry_id: *entry_id },
+                rep_resp.matched_cluster,
+            ),
             Outcome::Rejected { reason } => (Outcome::Rejected { reason: reason.clone() }, None),
         };
         if matches!(outcome, Outcome::Rejected { .. }) {
@@ -941,7 +1138,12 @@ impl BatchExecutor for Server {
                 client_tag: dup.client_tag.clone(),
             };
         }
-        self.metrics.record_hit();
+        let degraded = matches!(outcome, Outcome::Degraded { .. });
+        if degraded {
+            self.metrics.record_degraded_hit();
+        } else {
+            self.metrics.record_hit();
+        }
         let judged = dup.cluster.map(|c| {
             let ok = self.judge.validate(c, entry_cluster.unwrap_or(0));
             self.metrics.record_judgement(ok);
@@ -953,7 +1155,7 @@ impl BatchExecutor for Server {
         QueryResponse {
             response: rep_resp.response.clone(),
             outcome,
-            latency: LatencyBreakdown::default(),
+            latency: LatencyBreakdown { degraded, ..LatencyBreakdown::default() },
             judged_positive: judged,
             matched_cluster: entry_cluster,
             client_tag: dup.client_tag.clone(),

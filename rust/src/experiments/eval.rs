@@ -146,7 +146,9 @@ pub fn run_paper_eval(ctx: &EvalContext, cfg: &PaperEvalConfig) -> PaperEval {
             }
             None => {
                 // Miss: LLM call + insert (paper §2.5 step 2).
-                let resp = llm.call(&q.text, ground_truth.get(&q.answer_group).copied());
+                let resp = llm
+                    .call(&q.text, ground_truth.get(&q.answer_group).copied())
+                    .expect("experiments run without fault injection");
                 t.api_calls += 1;
                 t.llm_in_tokens += resp.input_tokens;
                 t.llm_out_tokens += resp.output_tokens;
@@ -166,7 +168,7 @@ pub fn run_paper_eval(ctx: &EvalContext, cfg: &PaperEvalConfig) -> PaperEval {
         }
 
         // Traditional baseline: every query goes to the LLM.
-        let base = llm.call(&q.text, None);
+        let base = llm.call(&q.text, None).expect("experiments run without fault injection");
         t.without_ms += base.latency_ms;
         t.baseline_in_tokens += base.input_tokens;
         t.baseline_out_tokens += base.output_tokens;

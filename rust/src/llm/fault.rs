@@ -1,0 +1,425 @@
+//! Seeded, schedule-driven fault injection for the simulated upstream.
+//!
+//! Real GPT-backed deployments fail in a handful of well-known shapes:
+//! per-call 5xx errors, 429 rate limits carrying a `retry-after`,
+//! long-tail latency spikes, calls that hang past any reasonable
+//! deadline, and full outage windows. [`FaultPlan`] describes a seeded
+//! schedule of all five; [`FaultInjector`] replays it deterministically
+//! per upstream call index, so a chaos run is exactly reproducible from
+//! `(plan, call sequence)`. The plan is runtime-swappable — the
+//! `/v1/admin` `fault` verb replaces it over the wire, which is how the
+//! chaos harness and `verify.sh` drive outages against a live daemon.
+//!
+//! Fault decisions draw from their *own* seeded RNG, separate from the
+//! answer-synthesis RNG in [`super::SimLlm`]: injecting faults never
+//! perturbs the answers a fault-free run would have produced.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::error::{bail, Context, Result};
+use crate::json::Value;
+use crate::util::Rng;
+
+/// A typed upstream failure (the simulated analogue of the OpenAI API's
+/// failure modes).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum LlmError {
+    /// 429: the upstream asked us to back off for `retry_after_ms`.
+    RateLimited { retry_after_ms: u64 },
+    /// 5xx-style transient server error.
+    ServerError,
+    /// The call would not have completed within the caller's budget
+    /// (a hang or extreme latency spike, cut off at the deadline).
+    Timeout { budget_ms: u64 },
+    /// The upstream is inside a scheduled full-outage window.
+    Outage,
+}
+
+impl LlmError {
+    /// The upstream's requested backoff, when it sent one.
+    pub fn retry_after_ms(&self) -> Option<u64> {
+        match self {
+            LlmError::RateLimited { retry_after_ms } => Some(*retry_after_ms),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for LlmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LlmError::RateLimited { retry_after_ms } => {
+                write!(f, "upstream rate-limited (retry after {retry_after_ms} ms)")
+            }
+            LlmError::ServerError => write!(f, "upstream server error"),
+            LlmError::Timeout { budget_ms } => {
+                write!(f, "upstream call exceeded its {budget_ms} ms budget")
+            }
+            LlmError::Outage => write!(f, "upstream outage"),
+        }
+    }
+}
+
+/// One seeded fault schedule. The default plan injects nothing — a
+/// fault-free `SimLlm` behaves exactly as it did before this module
+/// existed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Seed for the fault-decision RNG (separate from the answer RNG).
+    pub seed: u64,
+    /// Per-call probability of a transient `ServerError`.
+    pub error_prob: f64,
+    /// Per-call probability of a 429 `RateLimited`.
+    pub rate_limit_prob: f64,
+    /// `retry-after` advertised by injected 429s, ms.
+    pub retry_after_ms: u64,
+    /// Per-call probability of an added latency spike.
+    pub spike_prob: f64,
+    /// Spike size range, ms (uniform).
+    pub spike_min_ms: f64,
+    pub spike_max_ms: f64,
+    /// Per-call probability of a hang: the sampled latency jumps by
+    /// `hang_ms`, far past any sane deadline, so the caller's budget —
+    /// not this module — decides when to give up.
+    pub hang_prob: f64,
+    pub hang_ms: u64,
+    /// Full-outage window over upstream call indices:
+    /// calls with `outage_from_call <= index < outage_until_call` fail
+    /// with [`LlmError::Outage`]. An empty window (`from >= until`)
+    /// means no outage; `(0, u64::MAX)` is "down until reconfigured".
+    pub outage_from_call: u64,
+    pub outage_until_call: u64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        Self {
+            seed: 0xFA17,
+            error_prob: 0.0,
+            rate_limit_prob: 0.0,
+            retry_after_ms: 250,
+            spike_prob: 0.0,
+            spike_min_ms: 800.0,
+            spike_max_ms: 2_500.0,
+            hang_prob: 0.0,
+            hang_ms: 30_000,
+            outage_from_call: 0,
+            outage_until_call: 0,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Is any fault active under this plan?
+    pub fn is_noop(&self) -> bool {
+        self.error_prob == 0.0
+            && self.rate_limit_prob == 0.0
+            && self.spike_prob == 0.0
+            && self.hang_prob == 0.0
+            && self.outage_from_call >= self.outage_until_call
+    }
+
+    /// A plan whose only effect is a full outage until reconfigured.
+    pub fn full_outage() -> Self {
+        Self { outage_from_call: 0, outage_until_call: u64::MAX, ..Self::default() }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        for (name, p) in [
+            ("error_prob", self.error_prob),
+            ("rate_limit_prob", self.rate_limit_prob),
+            ("spike_prob", self.spike_prob),
+            ("hang_prob", self.hang_prob),
+        ] {
+            if !p.is_finite() || !(0.0..=1.0).contains(&p) {
+                bail!("fault {name} must be a probability in [0, 1], got {p}");
+            }
+        }
+        for (name, ms) in [("spike_min_ms", self.spike_min_ms), ("spike_max_ms", self.spike_max_ms)]
+        {
+            if !ms.is_finite() || ms < 0.0 {
+                bail!("fault {name} must be finite and >= 0, got {ms}");
+            }
+        }
+        if self.spike_max_ms < self.spike_min_ms {
+            bail!(
+                "fault spike_max_ms ({}) must be >= spike_min_ms ({})",
+                self.spike_max_ms,
+                self.spike_min_ms
+            );
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut m = BTreeMap::new();
+        m.insert("seed".to_string(), self.seed.into());
+        m.insert("error_prob".to_string(), self.error_prob.into());
+        m.insert("rate_limit_prob".to_string(), self.rate_limit_prob.into());
+        m.insert("retry_after_ms".to_string(), self.retry_after_ms.into());
+        m.insert("spike_prob".to_string(), self.spike_prob.into());
+        m.insert("spike_min_ms".to_string(), self.spike_min_ms.into());
+        m.insert("spike_max_ms".to_string(), self.spike_max_ms.into());
+        m.insert("hang_prob".to_string(), self.hang_prob.into());
+        m.insert("hang_ms".to_string(), self.hang_ms.into());
+        m.insert("outage_from_call".to_string(), self.outage_from_call.into());
+        m.insert("outage_until_call".to_string(), self.outage_until_call.into());
+        Value::Object(m)
+    }
+
+    /// Strict decode over a *partial* plan: absent fields keep their
+    /// defaults, so `{}` is "clear all faults" and
+    /// `{"outage": true}` is shorthand for a down-until-reconfigured
+    /// window. Unknown fields are errors, like every v1 codec.
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let fields = v.as_object().context("fault plan must be a JSON object")?;
+        for key in fields.keys() {
+            match key.as_str() {
+                "seed" | "error_prob" | "rate_limit_prob" | "retry_after_ms" | "spike_prob"
+                | "spike_min_ms" | "spike_max_ms" | "hang_prob" | "hang_ms"
+                | "outage_from_call" | "outage_until_call" | "outage" => {}
+                other => bail!("unknown field '{other}' in fault plan"),
+            }
+        }
+        let mut plan = FaultPlan::default();
+        let num = |key: &str, out: &mut f64| -> Result<()> {
+            match v.get(key) {
+                Value::Null => Ok(()),
+                x => {
+                    *out = x.as_f64().with_context(|| format!("fault '{key}' must be a number"))?;
+                    Ok(())
+                }
+            }
+        };
+        let int = |key: &str, out: &mut u64| -> Result<()> {
+            match v.get(key) {
+                Value::Null => Ok(()),
+                x => {
+                    *out = x
+                        .as_u64()
+                        .with_context(|| format!("fault '{key}' must be a non-negative integer"))?;
+                    Ok(())
+                }
+            }
+        };
+        int("seed", &mut plan.seed)?;
+        num("error_prob", &mut plan.error_prob)?;
+        num("rate_limit_prob", &mut plan.rate_limit_prob)?;
+        int("retry_after_ms", &mut plan.retry_after_ms)?;
+        num("spike_prob", &mut plan.spike_prob)?;
+        num("spike_min_ms", &mut plan.spike_min_ms)?;
+        num("spike_max_ms", &mut plan.spike_max_ms)?;
+        num("hang_prob", &mut plan.hang_prob)?;
+        int("hang_ms", &mut plan.hang_ms)?;
+        int("outage_from_call", &mut plan.outage_from_call)?;
+        int("outage_until_call", &mut plan.outage_until_call)?;
+        match v.get("outage") {
+            Value::Null => {}
+            b => {
+                if b.as_bool().context("fault 'outage' must be a boolean")? {
+                    plan.outage_from_call = 0;
+                    plan.outage_until_call = u64::MAX;
+                } else {
+                    plan.outage_from_call = 0;
+                    plan.outage_until_call = 0;
+                }
+            }
+        }
+        plan.validate()?;
+        Ok(plan)
+    }
+}
+
+/// What the injector decided for one upstream call.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultDecision {
+    /// `Some` fails the call outright.
+    pub error: Option<LlmError>,
+    /// Extra latency (spike/hang) added to a surviving call, ms.
+    pub extra_latency_ms: f64,
+}
+
+impl FaultDecision {
+    fn clean() -> Self {
+        Self { error: None, extra_latency_ms: 0.0 }
+    }
+}
+
+/// Replays a [`FaultPlan`] deterministically over upstream call indices.
+pub struct FaultInjector {
+    state: Mutex<FaultState>,
+}
+
+struct FaultState {
+    plan: FaultPlan,
+    rng: Rng,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> Self {
+        let rng = Rng::new(plan.seed);
+        Self { state: Mutex::new(FaultState { plan, rng }) }
+    }
+
+    /// Swap in a new plan; the fault RNG is re-seeded from the plan, so
+    /// behavior from this moment is reproducible from the plan alone.
+    pub fn set_plan(&self, plan: FaultPlan) {
+        let mut s = self.state.lock().unwrap();
+        s.rng = Rng::new(plan.seed);
+        s.plan = plan;
+    }
+
+    pub fn plan(&self) -> FaultPlan {
+        self.state.lock().unwrap().plan.clone()
+    }
+
+    /// Decide the fate of upstream call `call_idx`. The outage window is
+    /// checked first (pure schedule, no randomness); the probabilistic
+    /// draws happen in a fixed order so a given plan replays bit-for-bit.
+    pub fn decide(&self, call_idx: u64) -> FaultDecision {
+        let mut s = self.state.lock().unwrap();
+        if s.plan.is_noop() {
+            return FaultDecision::clean();
+        }
+        if call_idx >= s.plan.outage_from_call && call_idx < s.plan.outage_until_call {
+            return FaultDecision { error: Some(LlmError::Outage), extra_latency_ms: 0.0 };
+        }
+        let plan = s.plan.clone();
+        if plan.rate_limit_prob > 0.0 && s.rng.chance(plan.rate_limit_prob) {
+            return FaultDecision {
+                error: Some(LlmError::RateLimited { retry_after_ms: plan.retry_after_ms }),
+                extra_latency_ms: 0.0,
+            };
+        }
+        if plan.error_prob > 0.0 && s.rng.chance(plan.error_prob) {
+            return FaultDecision { error: Some(LlmError::ServerError), extra_latency_ms: 0.0 };
+        }
+        let mut extra = 0.0;
+        if plan.hang_prob > 0.0 && s.rng.chance(plan.hang_prob) {
+            extra += plan.hang_ms as f64;
+        }
+        if plan.spike_prob > 0.0 && s.rng.chance(plan.spike_prob) {
+            extra += s.rng.range_f64(plan.spike_min_ms, plan.spike_max_ms);
+        }
+        FaultDecision { error: None, extra_latency_ms: extra }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::parse;
+
+    #[test]
+    fn default_plan_injects_nothing() {
+        let inj = FaultInjector::new(FaultPlan::default());
+        for i in 0..1000 {
+            assert_eq!(inj.decide(i), FaultDecision::clean());
+        }
+    }
+
+    #[test]
+    fn outage_window_is_schedule_exact() {
+        let plan =
+            FaultPlan { outage_from_call: 3, outage_until_call: 6, ..FaultPlan::default() };
+        let inj = FaultInjector::new(plan);
+        for i in 0..10 {
+            let d = inj.decide(i);
+            if (3..6).contains(&i) {
+                assert_eq!(d.error, Some(LlmError::Outage), "call {i} must be in the outage");
+            } else {
+                assert_eq!(d.error, None, "call {i} must survive");
+            }
+        }
+    }
+
+    #[test]
+    fn seeded_schedules_replay_identically() {
+        let plan = FaultPlan {
+            error_prob: 0.3,
+            rate_limit_prob: 0.2,
+            spike_prob: 0.25,
+            hang_prob: 0.1,
+            ..FaultPlan::default()
+        };
+        let a = FaultInjector::new(plan.clone());
+        let b = FaultInjector::new(plan);
+        let run = |inj: &FaultInjector| -> Vec<FaultDecision> {
+            (0..200).map(|i| inj.decide(i)).collect()
+        };
+        assert_eq!(run(&a), run(&b));
+        // Reconfiguring re-seeds: the same plan replays again.
+        let replay = a.plan();
+        a.set_plan(replay);
+        assert_eq!(run(&a), run(&b).clone());
+    }
+
+    #[test]
+    fn rate_limit_carries_retry_after() {
+        let plan =
+            FaultPlan { rate_limit_prob: 1.0, retry_after_ms: 777, ..FaultPlan::default() };
+        let inj = FaultInjector::new(plan);
+        match inj.decide(0).error {
+            Some(LlmError::RateLimited { retry_after_ms }) => assert_eq!(retry_after_ms, 777),
+            other => panic!("expected RateLimited, got {other:?}"),
+        }
+        assert_eq!(
+            inj.decide(1).error.as_ref().and_then(|e| e.retry_after_ms()),
+            Some(777)
+        );
+    }
+
+    #[test]
+    fn plan_json_roundtrip_and_partial_decode() {
+        let plan = FaultPlan {
+            seed: 9,
+            error_prob: 0.5,
+            rate_limit_prob: 0.125,
+            retry_after_ms: 100,
+            spike_prob: 0.25,
+            spike_min_ms: 10.0,
+            spike_max_ms: 20.0,
+            hang_prob: 0.0625,
+            hang_ms: 5_000,
+            outage_from_call: 2,
+            outage_until_call: 8,
+        };
+        let wire = plan.to_json().to_string();
+        assert_eq!(FaultPlan::from_json(&parse(&wire).unwrap()).unwrap(), plan);
+
+        // `{}` clears everything; `outage` shorthand opens/closes the window.
+        let cleared = FaultPlan::from_json(&parse("{}").unwrap()).unwrap();
+        assert!(cleared.is_noop());
+        let down = FaultPlan::from_json(&parse(r#"{"outage": true}"#).unwrap()).unwrap();
+        assert_eq!((down.outage_from_call, down.outage_until_call), (0, u64::MAX));
+        assert!(!down.is_noop());
+        let up = FaultPlan::from_json(&parse(r#"{"outage": false}"#).unwrap()).unwrap();
+        assert!(up.is_noop());
+
+        // Strictness: unknown fields and bad probabilities are errors.
+        assert!(FaultPlan::from_json(&parse(r#"{"bogus": 1}"#).unwrap()).is_err());
+        assert!(FaultPlan::from_json(&parse(r#"{"error_prob": 1.5}"#).unwrap()).is_err());
+        assert!(FaultPlan::from_json(&parse(r#"{"error_prob": -0.1}"#).unwrap()).is_err());
+        assert!(FaultPlan::from_json(
+            &parse(r#"{"spike_min_ms": 50, "spike_max_ms": 10}"#).unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn hangs_and_spikes_add_latency_without_failing() {
+        let plan = FaultPlan {
+            hang_prob: 1.0,
+            hang_ms: 30_000,
+            spike_prob: 1.0,
+            spike_min_ms: 100.0,
+            spike_max_ms: 200.0,
+            ..FaultPlan::default()
+        };
+        let inj = FaultInjector::new(plan);
+        let d = inj.decide(0);
+        assert_eq!(d.error, None);
+        assert!(d.extra_latency_ms >= 30_100.0, "hang + spike: {}", d.extra_latency_ms);
+    }
+}

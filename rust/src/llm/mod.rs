@@ -13,9 +13,11 @@
 //!   analogue of the paper's LLM judge; an optional error rate models
 //!   judge disagreement).
 
+mod fault;
 mod judge;
 mod sim;
 
+pub use fault::{FaultDecision, FaultInjector, FaultPlan, LlmError};
 pub use judge::{Judge, JudgeConfig};
 pub use sim::{LlmResponse, SimLlm, SimLlmConfig};
 

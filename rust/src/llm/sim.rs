@@ -18,7 +18,7 @@ use std::sync::Mutex;
 use crate::error::{bail, Result};
 use crate::util::Rng;
 
-use super::approx_tokens;
+use super::{approx_tokens, FaultInjector, FaultPlan, LlmError};
 
 /// Upstream configuration.
 #[derive(Debug, Clone)]
@@ -54,12 +54,16 @@ impl SimLlmConfig {
     /// Latency-model parameters from the app-level
     /// [`crate::config::Config`] (shared by both binaries).
     pub fn from_app_config(cfg: &crate::config::Config) -> SimLlmConfig {
+        // Every field maps explicitly: a `..Default::default()` here once
+        // silently dropped `jitter_sigma` and `seed`, making chaos runs
+        // unreproducible from config files.
         SimLlmConfig {
             rtt_ms: cfg.llm_rtt_ms,
             ms_per_token: cfg.llm_ms_per_token,
             mean_output_tokens: cfg.llm_mean_output_tokens,
+            jitter_sigma: cfg.llm_jitter_sigma,
             real_sleep: cfg.llm_real_sleep,
-            ..SimLlmConfig::default()
+            seed: cfg.llm_seed,
         }
     }
 
@@ -92,31 +96,77 @@ pub struct LlmResponse {
     pub latency_ms: f64,
 }
 
-/// Deterministic simulated LLM API.
+/// Deterministic simulated LLM API with a runtime-swappable fault
+/// schedule (see [`FaultInjector`]).
 pub struct SimLlm {
     cfg: SimLlmConfig,
     rng: Mutex<Rng>,
     calls: AtomicU64,
+    faults: FaultInjector,
 }
 
 impl SimLlm {
     pub fn new(cfg: SimLlmConfig) -> Self {
         let seed = cfg.seed;
-        Self { cfg, rng: Mutex::new(Rng::new(seed)), calls: AtomicU64::new(0) }
+        Self {
+            cfg,
+            rng: Mutex::new(Rng::new(seed)),
+            calls: AtomicU64::new(0),
+            faults: FaultInjector::new(FaultPlan::default()),
+        }
     }
 
     pub fn config(&self) -> &SimLlmConfig {
         &self.cfg
     }
 
+    /// Upstream call attempts, including ones that failed.
     pub fn calls(&self) -> u64 {
         self.calls.load(Ordering::Relaxed)
     }
 
+    /// Replace the active fault schedule (the `/v1/admin` fault verb
+    /// lands here). Takes effect on the next call.
+    pub fn set_fault_plan(&self, plan: FaultPlan) {
+        self.faults.set_plan(plan);
+    }
+
+    pub fn fault_plan(&self) -> FaultPlan {
+        self.faults.plan()
+    }
+
     /// Complete a query. `ground_truth` supplies the workload's answer
     /// text when known; otherwise a synthetic completion is generated.
-    pub fn call(&self, question: &str, ground_truth: Option<&str>) -> LlmResponse {
-        self.calls.fetch_add(1, Ordering::Relaxed);
+    /// Fails when the active [`FaultPlan`] says this call fails.
+    pub fn call(&self, question: &str, ground_truth: Option<&str>) -> Result<LlmResponse, LlmError> {
+        self.call_within(question, ground_truth, None)
+    }
+
+    /// [`SimLlm::call`] under a latency budget: a call whose sampled
+    /// latency (including injected hangs/spikes) exceeds `budget_ms`
+    /// fails with [`LlmError::Timeout`] instead of being reported — or
+    /// slept — in full. This is how the resilience layer cuts off hung
+    /// calls at the request deadline without parking a thread.
+    pub fn call_within(
+        &self,
+        question: &str,
+        ground_truth: Option<&str>,
+        budget_ms: Option<u64>,
+    ) -> Result<LlmResponse, LlmError> {
+        let idx = self.calls.fetch_add(1, Ordering::Relaxed);
+        let fault = self.faults.decide(idx);
+        if let Some(err) = fault.error {
+            // A refused call still pays roughly one network round trip
+            // when pacing wall-clock (errors are fast, not free).
+            if self.cfg.real_sleep {
+                let wait_ms = match budget_ms {
+                    Some(b) => self.cfg.rtt_ms.min(b as f64),
+                    None => self.cfg.rtt_ms,
+                };
+                std::thread::sleep(std::time::Duration::from_micros((wait_ms * 1e3) as u64));
+            }
+            return Err(err);
+        }
         let (answer, jr, jd, extra) = {
             let mut rng = self.rng.lock().unwrap();
             let answer = match ground_truth {
@@ -134,11 +184,22 @@ impl SimLlm {
         let output_tokens = approx_tokens(&answer);
         let latency_ms = self.cfg.rtt_ms * jr
             + output_tokens as f64 * self.cfg.ms_per_token * jd
-            + extra;
+            + extra
+            + fault.extra_latency_ms;
+        if let Some(budget) = budget_ms {
+            if latency_ms > budget as f64 {
+                // The caller would have given up at the deadline; when
+                // pacing wall-clock we sleep exactly the budget.
+                if self.cfg.real_sleep {
+                    std::thread::sleep(std::time::Duration::from_millis(budget));
+                }
+                return Err(LlmError::Timeout { budget_ms: budget });
+            }
+        }
         if self.cfg.real_sleep {
             std::thread::sleep(std::time::Duration::from_micros((latency_ms * 1e3) as u64));
         }
-        LlmResponse { text: answer, input_tokens, output_tokens, latency_ms }
+        Ok(LlmResponse { text: answer, input_tokens, output_tokens, latency_ms })
     }
 }
 
@@ -164,7 +225,7 @@ mod tests {
     #[test]
     fn ground_truth_passthrough_and_accounting() {
         let llm = SimLlm::new(SimLlmConfig::default());
-        let r = llm.call("where is my order", Some("It ships tomorrow."));
+        let r = llm.call("where is my order", Some("It ships tomorrow.")).unwrap();
         assert_eq!(r.text, "It ships tomorrow.");
         assert_eq!(r.input_tokens, approx_tokens("where is my order"));
         assert_eq!(r.output_tokens, approx_tokens("It ships tomorrow."));
@@ -174,10 +235,10 @@ mod tests {
     #[test]
     fn latency_positive_and_token_scaled() {
         let llm = SimLlm::new(SimLlmConfig { jitter_sigma: 0.0, ..Default::default() });
-        let short = llm.call("q", Some("short answer here"));
+        let short = llm.call("q", Some("short answer here")).unwrap();
         let long_text: String =
             std::iter::repeat("word").take(300).collect::<Vec<_>>().join(" ");
-        let long = llm.call("q", Some(&long_text));
+        let long = llm.call("q", Some(&long_text)).unwrap();
         assert!(short.latency_ms > 100.0, "rtt floor");
         assert!(long.latency_ms > short.latency_ms + 1000.0, "decode dominates long outputs");
     }
@@ -188,7 +249,7 @@ mod tests {
         let mut total = 0.0;
         let n = 500;
         for i in 0..n {
-            total += llm.call(&format!("question {i}"), None).latency_ms;
+            total += llm.call(&format!("question {i}"), None).unwrap().latency_ms;
         }
         let mean = total / n as f64;
         // rtt 150 + ~mean tokens * 12 with jitter: order of 0.5–3.5 s.
@@ -198,8 +259,53 @@ mod tests {
 
     #[test]
     fn synthetic_answers_deterministic_per_instance() {
-        let a = SimLlm::new(SimLlmConfig::default()).call("q", None).text;
-        let b = SimLlm::new(SimLlmConfig::default()).call("q", None).text;
+        let a = SimLlm::new(SimLlmConfig::default()).call("q", None).unwrap().text;
+        let b = SimLlm::new(SimLlmConfig::default()).call("q", None).unwrap().text;
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn outage_plan_fails_calls_then_clears() {
+        let llm = SimLlm::new(SimLlmConfig::default());
+        llm.set_fault_plan(FaultPlan::full_outage());
+        assert_eq!(llm.call("q", None).unwrap_err(), LlmError::Outage);
+        assert_eq!(llm.call("q", None).unwrap_err(), LlmError::Outage);
+        // Failed attempts are still counted calls.
+        assert_eq!(llm.calls(), 2);
+        llm.set_fault_plan(FaultPlan::default());
+        assert!(llm.call("q", Some("back up")).is_ok());
+    }
+
+    #[test]
+    fn budget_cuts_off_injected_hangs_as_timeouts() {
+        let llm = SimLlm::new(SimLlmConfig { jitter_sigma: 0.0, ..Default::default() });
+        llm.set_fault_plan(FaultPlan { hang_prob: 1.0, hang_ms: 60_000, ..FaultPlan::default() });
+        match llm.call_within("q", Some("a"), Some(2_000)) {
+            Err(LlmError::Timeout { budget_ms }) => assert_eq!(budget_ms, 2_000),
+            other => panic!("expected Timeout, got {other:?}"),
+        }
+        // Without a budget the hang is reported as (huge) latency.
+        let r = llm.call_within("q", Some("a"), None).unwrap();
+        assert!(r.latency_ms > 60_000.0);
+    }
+
+    #[test]
+    fn faults_do_not_perturb_answer_synthesis() {
+        // A faulty run's surviving answers must match the fault-free
+        // run's answers for the same questions (separate RNG streams).
+        let clean = SimLlm::new(SimLlmConfig::default());
+        let faulty = SimLlm::new(SimLlmConfig::default());
+        faulty.set_fault_plan(FaultPlan {
+            spike_prob: 0.5,
+            hang_prob: 0.25,
+            hang_ms: 1,
+            ..FaultPlan::default()
+        });
+        for i in 0..50 {
+            let q = format!("question number {i}");
+            let a = clean.call(&q, None).unwrap().text;
+            let b = faulty.call(&q, None).unwrap().text;
+            assert_eq!(a, b, "answer diverged at {i}");
+        }
     }
 }

@@ -45,8 +45,31 @@ pub struct Metrics {
     pub positive_hits: AtomicU64,
     pub negative_hits: AtomicU64,
     /// Requests answered with `Outcome::Rejected` (invalid options,
-    /// rejected inserts) instead of the normal workflow.
+    /// rejected inserts, upstream unavailable with no degraded
+    /// candidate) instead of the normal workflow.
     pub rejected: AtomicU64,
+    // Upstream fault domain (coordinator::resilience over llm::FaultPlan).
+    /// Requests answered from the cache at the relaxed
+    /// `degraded_threshold` because the upstream was unavailable. A
+    /// degraded hit is neither a `cache_hits` hit nor a `cache_misses`
+    /// miss: the serving balance is
+    /// `cache_hits + cache_misses + degraded_hits + rejected == requests`.
+    pub degraded_hits: AtomicU64,
+    /// Failed upstream call attempts (errors, 429s, timeouts, outage
+    /// refusals), counted per attempt.
+    pub upstream_errors: AtomicU64,
+    /// Upstream attempts that were retries of a failed attempt.
+    pub upstream_retries: AtomicU64,
+    /// Misses shed by the upstream in-flight concurrency cap (never
+    /// attempted upstream).
+    pub upstream_shed: AtomicU64,
+    /// Circuit-breaker state gauge: 0 = closed, 1 = open, 2 = half-open.
+    pub breaker_state: AtomicU64,
+    /// Breaker transition counters (closed/half-open → open, open →
+    /// half-open, half-open → closed).
+    pub breaker_opens: AtomicU64,
+    pub breaker_half_opens: AtomicU64,
+    pub breaker_closes: AtomicU64,
     // HTTP front-end counters.
     pub http_requests: AtomicU64,
     pub http_errors: AtomicU64,
@@ -162,6 +185,42 @@ impl ReactorStats {
     }
 }
 
+/// Circuit-breaker state, mirrored into the `breaker_state` gauge by
+/// `coordinator::resilience` on every transition. The numeric encoding
+/// (0/1/2) is what lives in the atomic; `/v1/metrics` renders the name.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    Closed,
+    Open,
+    HalfOpen,
+}
+
+impl BreakerState {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::Open => "open",
+            BreakerState::HalfOpen => "half_open",
+        }
+    }
+
+    fn from_gauge(v: u64) -> Self {
+        match v {
+            1 => BreakerState::Open,
+            2 => BreakerState::HalfOpen,
+            _ => BreakerState::Closed,
+        }
+    }
+
+    fn gauge(self) -> u64 {
+        match self {
+            BreakerState::Closed => 0,
+            BreakerState::Open => 1,
+            BreakerState::HalfOpen => 2,
+        }
+    }
+}
+
 /// Snapshot of one reactor's block (index = reactor id).
 #[derive(Debug, Clone)]
 pub struct ReactorSnapshot {
@@ -180,6 +239,14 @@ pub struct MetricsSnapshot {
     pub positive_hits: u64,
     pub negative_hits: u64,
     pub rejected: u64,
+    pub degraded_hits: u64,
+    pub upstream_errors: u64,
+    pub upstream_retries: u64,
+    pub upstream_shed: u64,
+    pub breaker_state: BreakerState,
+    pub breaker_opens: u64,
+    pub breaker_half_opens: u64,
+    pub breaker_closes: u64,
     pub http_requests: u64,
     pub http_errors: u64,
     pub http_conns_accepted: u64,
@@ -264,6 +331,39 @@ impl Metrics {
 
     pub fn record_rejected(&self) {
         self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One request answered from the cache at the relaxed degraded
+    /// threshold while the upstream was unavailable.
+    pub fn record_degraded_hit(&self) {
+        self.degraded_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One failed upstream attempt (per attempt, not per request).
+    pub fn record_upstream_error(&self) {
+        self.upstream_errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One retried upstream attempt (attempt number ≥ 2).
+    pub fn record_upstream_retry(&self) {
+        self.upstream_retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One miss shed by the in-flight upstream concurrency cap.
+    pub fn record_upstream_shed(&self) {
+        self.upstream_shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One breaker transition: updates the state gauge and bumps the
+    /// matching transition counter.
+    pub fn record_breaker_transition(&self, to: BreakerState) {
+        self.breaker_state.store(to.gauge(), Ordering::Relaxed);
+        match to {
+            BreakerState::Open => &self.breaker_opens,
+            BreakerState::HalfOpen => &self.breaker_half_opens,
+            BreakerState::Closed => &self.breaker_closes,
+        }
+        .fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn record_http_request(&self) {
@@ -406,6 +506,14 @@ impl Metrics {
             positive_hits: self.positive_hits.load(Ordering::Relaxed),
             negative_hits: self.negative_hits.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
+            degraded_hits: self.degraded_hits.load(Ordering::Relaxed),
+            upstream_errors: self.upstream_errors.load(Ordering::Relaxed),
+            upstream_retries: self.upstream_retries.load(Ordering::Relaxed),
+            upstream_shed: self.upstream_shed.load(Ordering::Relaxed),
+            breaker_state: BreakerState::from_gauge(self.breaker_state.load(Ordering::Relaxed)),
+            breaker_opens: self.breaker_opens.load(Ordering::Relaxed),
+            breaker_half_opens: self.breaker_half_opens.load(Ordering::Relaxed),
+            breaker_closes: self.breaker_closes.load(Ordering::Relaxed),
             http_requests: self.http_requests.load(Ordering::Relaxed),
             http_errors: self.http_errors.load(Ordering::Relaxed),
             http_conns_accepted: self.http_conns_accepted.load(Ordering::Relaxed),
@@ -501,6 +609,14 @@ impl MetricsSnapshot {
             ("positive_hits", self.positive_hits.into()),
             ("negative_hits", self.negative_hits.into()),
             ("rejected", self.rejected.into()),
+            ("degraded_hits", self.degraded_hits.into()),
+            ("upstream_errors", self.upstream_errors.into()),
+            ("upstream_retries", self.upstream_retries.into()),
+            ("shed", self.upstream_shed.into()),
+            ("breaker_state", self.breaker_state.as_str().into()),
+            ("breaker_opens", self.breaker_opens.into()),
+            ("breaker_half_opens", self.breaker_half_opens.into()),
+            ("breaker_closes", self.breaker_closes.into()),
             ("http_requests", self.http_requests.into()),
             ("http_errors", self.http_errors.into()),
             ("conns_accepted", self.http_conns_accepted.into()),
@@ -763,6 +879,41 @@ mod tests {
         assert_eq!(j.get("wal_append_errors").as_usize(), Some(1));
         assert_eq!(j.get("snapshots_written").as_usize(), Some(1));
         assert_eq!(j.get("recovered_entries").as_usize(), Some(17));
+    }
+
+    #[test]
+    fn upstream_fault_counters_and_breaker_gauge() {
+        let m = Metrics::new();
+        assert_eq!(m.snapshot().breaker_state, BreakerState::Closed, "default gauge");
+        m.record_degraded_hit();
+        m.record_degraded_hit();
+        m.record_upstream_error();
+        m.record_upstream_error();
+        m.record_upstream_error();
+        m.record_upstream_retry();
+        m.record_upstream_shed();
+        m.record_breaker_transition(BreakerState::Open);
+        m.record_breaker_transition(BreakerState::HalfOpen);
+        m.record_breaker_transition(BreakerState::Closed);
+        m.record_breaker_transition(BreakerState::Open);
+        let s = m.snapshot();
+        assert_eq!(s.degraded_hits, 2);
+        assert_eq!(s.upstream_errors, 3);
+        assert_eq!(s.upstream_retries, 1);
+        assert_eq!(s.upstream_shed, 1);
+        assert_eq!(s.breaker_state, BreakerState::Open, "gauge tracks latest transition");
+        assert_eq!(s.breaker_opens, 2);
+        assert_eq!(s.breaker_half_opens, 1);
+        assert_eq!(s.breaker_closes, 1);
+        let j = s.to_json();
+        assert_eq!(j.get("degraded_hits").as_usize(), Some(2));
+        assert_eq!(j.get("upstream_errors").as_usize(), Some(3));
+        assert_eq!(j.get("upstream_retries").as_usize(), Some(1));
+        assert_eq!(j.get("shed").as_usize(), Some(1));
+        assert_eq!(j.get("breaker_state").as_str(), Some("open"));
+        assert_eq!(j.get("breaker_opens").as_usize(), Some(2));
+        assert_eq!(j.get("breaker_half_opens").as_usize(), Some(1));
+        assert_eq!(j.get("breaker_closes").as_usize(), Some(1));
     }
 
     #[test]

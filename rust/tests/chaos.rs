@@ -1,0 +1,339 @@
+//! Chaos suite: upstream fault injection against a live HTTP daemon.
+//!
+//! Drives the whole wire path — reactor event loop, sharded batcher,
+//! resilience layer, degraded serving — while the simulated upstream
+//! fails in controlled ways (full outage, per-call errors, rate limits),
+//! and asserts the invariants ISSUE 9 pins down:
+//!
+//! * every request gets exactly one well-formed response (200 or 503,
+//!   never a hang or a dropped connection);
+//! * the extended balance `cache_hits + cache_misses + degraded_hits +
+//!   rejected == requests` holds exactly, including under concurrency
+//!   over multiple reactors and dispatchers;
+//! * a 100% outage is answered in bounded time (deadline, not hang),
+//!   from cache at the relaxed gate when a candidate exists (explicitly
+//!   marked degraded), else 503 — and inserts nothing;
+//! * the circuit breaker walks open → half-open → closed as the fault
+//!   clears, and hit-rate behavior recovers to parity.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use semcache::api::QueryRequest;
+use semcache::coordinator::{
+    http_request, serve_http, HttpConfig, HttpHandle, ResilienceConfig, Server, ServerConfig,
+};
+use semcache::embedding::NativeEncoder;
+use semcache::json;
+use semcache::llm::FaultPlan;
+use semcache::runtime::ModelParams;
+
+// ---------------------------------------------------------------------
+// Harness
+// ---------------------------------------------------------------------
+
+fn chaos_server(resilience: ResilienceConfig, degraded_threshold: f32) -> Arc<Server> {
+    let mut p = ModelParams::default();
+    p.layers = 1;
+    p.vocab_size = 1024;
+    p.dim = 96;
+    p.hidden = 192;
+    p.heads = 4;
+    let cfg = ServerConfig::builder()
+        .resilience(resilience)
+        .degraded_threshold(degraded_threshold)
+        .build()
+        .expect("valid chaos server config");
+    Arc::new(Server::new(Arc::new(NativeEncoder::new(p)), cfg))
+}
+
+/// Fast-failing resilience knobs for tests: tiny backoffs so a rejected
+/// request costs milliseconds, a breaker that (by default) never trips
+/// so individual tests opt into breaker behavior explicitly.
+fn fast_resilience() -> ResilienceConfig {
+    ResilienceConfig {
+        deadline_ms: 2_000,
+        max_retries: 1,
+        backoff_base_ms: 1,
+        backoff_max_ms: 5,
+        breaker_failures: 10_000,
+        breaker_open_ms: 100,
+        breaker_halfopen_probes: 2,
+        max_inflight: 0,
+    }
+}
+
+fn start(server: Arc<Server>, reactors: usize, dispatchers: usize) -> (HttpHandle, String) {
+    let handle = serve_http(
+        server,
+        HttpConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 4,
+            max_body_bytes: 64 * 1024,
+            read_timeout: Duration::from_secs(2),
+            batching: true,
+            reactors,
+            dispatchers,
+            ..HttpConfig::default()
+        },
+    )
+    .expect("bind ephemeral port");
+    let addr = handle.local_addr().to_string();
+    for _ in 0..50 {
+        if let Ok((200, _)) = http_request(&addr, "GET", "/v1/health", None) {
+            return (handle, addr);
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    panic!("front-end at {addr} did not become healthy");
+}
+
+fn query(addr: &str, req: &QueryRequest) -> (u16, json::Value) {
+    http_request(addr, "POST", "/v1/query", Some(&req.to_json().to_string()))
+        .expect("query must always get exactly one well-formed response")
+}
+
+/// Reconfigure fault injection over the wire (the `/v1/admin` fault
+/// verb), exactly as the chaos harness in verify.sh does.
+fn set_fault(addr: &str, plan_json: &str) {
+    let body = format!(r#"{{"action": "fault", "plan": {plan_json}}}"#);
+    let (status, v) = http_request(addr, "POST", "/v1/admin", Some(&body)).expect("admin fault");
+    assert_eq!(status, 200, "fault verb must be accepted: {v}");
+    assert_eq!(v.get("action").as_str(), Some("fault"), "{v}");
+}
+
+fn metrics(addr: &str) -> json::Value {
+    let (status, v) = http_request(addr, "GET", "/v1/metrics", None).expect("metrics");
+    assert_eq!(status, 200);
+    v
+}
+
+fn counter(m: &json::Value, key: &str) -> usize {
+    m.get("metrics").get(key).as_usize().unwrap_or_else(|| panic!("metric {key} in {m}"))
+}
+
+/// The extended balance invariant: every accepted request is accounted
+/// exactly once across the four outcome counters.
+fn assert_balance(m: &json::Value) {
+    let sum = counter(m, "cache_hits")
+        + counter(m, "cache_misses")
+        + counter(m, "degraded_hits")
+        + counter(m, "rejected");
+    assert_eq!(sum, counter(m, "requests"), "extended balance violated: {m}");
+}
+
+// ---------------------------------------------------------------------
+// Tests
+// ---------------------------------------------------------------------
+
+/// Full outage: a paraphrase of a cached answer is served degraded
+/// (explicitly marked, never as a fresh hit); clearing the fault
+/// restores normal miss→hit behavior; the outage inserts nothing.
+#[test]
+fn outage_serves_degraded_from_cache_then_recovers() {
+    let (handle, addr) = start(chaos_server(fast_resilience(), 0.6), 1, 1);
+
+    // Populate: one fault-free miss.
+    let (status, v) = query(&addr, &QueryRequest::new("how do i reset my password"));
+    assert_eq!(status, 200);
+    assert_eq!(v.get("outcome").get("type").as_str(), Some("miss"), "{v}");
+    let cached_answer = v.get("response").as_str().expect("answer text").to_string();
+
+    // Kill the upstream, then ask a paraphrase with a strict per-request
+    // gate so the normal lookup misses and the request must go upstream.
+    set_fault(&addr, r#"{"outage": true}"#);
+    let req = QueryRequest::new("how can i reset my password").with_threshold(0.9999);
+    let t = Instant::now();
+    let (status, v) = query(&addr, &req);
+    let elapsed = t.elapsed();
+    assert_eq!(status, 200, "degraded answers are servable answers: {v}");
+    assert_eq!(v.get("outcome").get("type").as_str(), Some("degraded"), "{v}");
+    assert_eq!(v.get("latency").get("degraded").as_bool(), Some(true), "{v}");
+    assert_eq!(v.get("latency").get("llm_ms").as_f64(), Some(0.0), "no upstream leg: {v}");
+    assert_eq!(v.get("response").as_str(), Some(cached_answer.as_str()), "{v}");
+    assert!(
+        elapsed < Duration::from_secs(10),
+        "outage answer must be deadline-bounded, took {elapsed:?}"
+    );
+
+    let m = metrics(&addr);
+    assert_eq!(counter(&m, "degraded_hits"), 1, "{m}");
+    assert!(counter(&m, "upstream_errors") >= 1, "outage attempts recorded: {m}");
+    assert_eq!(m.get("cache_entries").as_usize(), Some(1), "outage inserted nothing: {m}");
+    assert_balance(&m);
+
+    // Clear the fault: a fresh topic misses (upstream answers again) and
+    // its paraphrase is a first-class hit — parity restored.
+    set_fault(&addr, "{}");
+    let (status, v) = query(&addr, &QueryRequest::new("where is the nearest train station"));
+    assert_eq!(status, 200);
+    assert_eq!(v.get("outcome").get("type").as_str(), Some("miss"), "{v}");
+    let (status, v) = query(&addr, &QueryRequest::new("where is the closest train station"));
+    assert_eq!(status, 200);
+    assert_eq!(v.get("outcome").get("type").as_str(), Some("hit"), "{v}");
+    assert_eq!(v.get("latency").get("degraded").as_bool(), Some(false), "{v}");
+
+    let m = metrics(&addr);
+    assert_eq!(m.get("cache_entries").as_usize(), Some(2), "{m}");
+    assert_balance(&m);
+    handle.shutdown();
+}
+
+/// Full outage against an *empty* cache: no degraded candidate exists at
+/// any gate, so every query is a typed 503 rejection, answered within
+/// its (per-request) deadline, and the cache stays empty.
+#[test]
+fn outage_with_empty_cache_rejects_503_bounded_and_pollution_free() {
+    let (handle, addr) = start(chaos_server(fast_resilience(), 0.6), 1, 1);
+    set_fault(&addr, r#"{"outage": true}"#);
+
+    for i in 0..3 {
+        let req =
+            QueryRequest::new(format!("unanswerable question number {i}")).with_deadline_ms(500);
+        let t = Instant::now();
+        let (status, v) = query(&addr, &req);
+        let elapsed = t.elapsed();
+        assert_eq!(status, 503, "upstream-unavailable rejections are 503: {v}");
+        assert_eq!(v.get("outcome").get("type").as_str(), Some("rejected"), "{v}");
+        let reason = v.get("outcome").get("reason").as_str().expect("reason");
+        assert!(
+            reason.starts_with("upstream unavailable"),
+            "typed reason prefix, got: {reason}"
+        );
+        assert!(
+            elapsed < Duration::from_secs(5),
+            "rejection {i} must be bounded by the deadline, took {elapsed:?}"
+        );
+    }
+
+    let m = metrics(&addr);
+    assert_eq!(counter(&m, "requests"), 3, "{m}");
+    assert_eq!(counter(&m, "rejected"), 3, "{m}");
+    assert_eq!(counter(&m, "cache_hits") + counter(&m, "cache_misses"), 0, "{m}");
+    assert_eq!(m.get("cache_entries").as_usize(), Some(0), "outage polluted the cache: {m}");
+    assert_balance(&m);
+    handle.shutdown();
+}
+
+/// Breaker lifecycle over live HTTP: consecutive failures open it, an
+/// open breaker refuses without burning upstream attempts, and after the
+/// fault clears it walks half-open → closed and serving recovers.
+#[test]
+fn breaker_opens_halfopens_closes_over_http() {
+    // The open hold is generous relative to the few milliseconds the
+    // while-open probe below needs, so a loaded CI machine cannot let
+    // the hold expire early and turn the instant refusal into a
+    // half-open upstream attempt.
+    let resilience = ResilienceConfig {
+        max_retries: 0,
+        breaker_failures: 2,
+        breaker_open_ms: 800,
+        breaker_halfopen_probes: 2,
+        ..fast_resilience()
+    };
+    let (handle, addr) = start(chaos_server(resilience, 0.6), 1, 1);
+    set_fault(&addr, r#"{"outage": true}"#);
+
+    // Two failing misses trip the breaker (one attempt each).
+    for i in 0..2 {
+        let (status, _) = query(&addr, &QueryRequest::new(format!("doomed question {i}")));
+        assert_eq!(status, 503);
+    }
+    let m = metrics(&addr);
+    assert_eq!(m.get("metrics").get("breaker_state").as_str(), Some("open"), "{m}");
+    assert_eq!(counter(&m, "breaker_opens"), 1, "{m}");
+    let errors_at_open = counter(&m, "upstream_errors");
+
+    // While open, requests are refused instantly — no upstream attempt.
+    let (status, _) = query(&addr, &QueryRequest::new("refused at the breaker"));
+    assert_eq!(status, 503);
+    let m = metrics(&addr);
+    assert_eq!(
+        counter(&m, "upstream_errors"),
+        errors_at_open,
+        "an open breaker must not burn upstream attempts: {m}"
+    );
+
+    // Clear the fault and wait out the open hold: the next two misses
+    // are half-open probes; both succeed, closing the breaker.
+    set_fault(&addr, "{}");
+    std::thread::sleep(Duration::from_millis(1_000));
+    for i in 0..2 {
+        let (status, v) = query(&addr, &QueryRequest::new(format!("recovery probe {i}")));
+        assert_eq!(status, 200, "half-open probes serve normally: {v}");
+        assert_eq!(v.get("outcome").get("type").as_str(), Some("miss"), "{v}");
+    }
+    let m = metrics(&addr);
+    assert_eq!(m.get("metrics").get("breaker_state").as_str(), Some("closed"), "{m}");
+    assert!(counter(&m, "breaker_half_opens") >= 1, "{m}");
+    assert_eq!(counter(&m, "breaker_closes"), 1, "{m}");
+
+    // Hit-rate parity after recovery: a paraphrase of a recovery miss is
+    // a first-class hit.
+    let (status, v) = query(&addr, &QueryRequest::new("recovery probe 0"));
+    assert_eq!(status, 200);
+    assert_eq!(v.get("outcome").get("type").as_str(), Some("hit"), "{v}");
+
+    let m = metrics(&addr);
+    // 2 tripping rejections + 1 breaker-open rejection + 2 recovery
+    // misses + 1 hit = 6 requests, balanced exactly.
+    assert_eq!(counter(&m, "requests"), 6, "{m}");
+    assert_eq!(counter(&m, "rejected"), 3, "{m}");
+    assert_eq!(counter(&m, "cache_misses"), 2, "{m}");
+    assert_eq!(counter(&m, "cache_hits"), 1, "{m}");
+    assert_balance(&m);
+    handle.shutdown();
+}
+
+/// Seeded mixed faults under concurrency over the full sharded wire path
+/// (multiple reactors, multiple dispatchers, coalescing batcher): every
+/// request gets exactly one response and the extended balance holds
+/// exactly when the dust settles.
+#[test]
+fn mixed_faults_keep_extended_balance_over_sharded_wire_path() {
+    let (handle, addr) = start(chaos_server(fast_resilience(), 0.6), 4, 2);
+    set_fault(
+        &addr,
+        r#"{"error_prob": 0.3, "rate_limit_prob": 0.2, "retry_after_ms": 1, "seed": 7}"#,
+    );
+
+    const THREADS: usize = 8;
+    const PER_THREAD: usize = 6;
+    // A pool smaller than the request count so identical in-flight texts
+    // exercise coalescing while faults fail some representatives.
+    let texts: Vec<String> =
+        (0..12).map(|i| format!("chaos workload question number {i}")).collect();
+    let mut joins = Vec::new();
+    for t in 0..THREADS {
+        let addr = addr.clone();
+        let texts = texts.clone();
+        joins.push(std::thread::spawn(move || {
+            for i in 0..PER_THREAD {
+                let text = &texts[(t * PER_THREAD + i) % texts.len()];
+                let (status, v) = http_request(
+                    &addr,
+                    "POST",
+                    "/v1/query",
+                    Some(&QueryRequest::new(text.as_str()).to_json().to_string()),
+                )
+                .expect("exactly one response per request");
+                assert!(status == 200 || status == 503, "unexpected status {status}: {v}");
+                let kind = v.get("outcome").get("type").as_str().expect("typed outcome");
+                assert!(
+                    ["hit", "miss", "degraded", "rejected"].contains(&kind),
+                    "unknown outcome {kind}: {v}"
+                );
+            }
+        }));
+    }
+    for j in joins {
+        j.join().expect("chaos client thread");
+    }
+
+    let m = metrics(&addr);
+    assert_eq!(counter(&m, "requests"), THREADS * PER_THREAD, "{m}");
+    assert_balance(&m);
+    assert!(counter(&m, "upstream_errors") > 0, "faults were injected: {m}");
+    assert!(counter(&m, "upstream_retries") > 0, "failed attempts were retried: {m}");
+    handle.shutdown();
+}

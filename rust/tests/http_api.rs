@@ -43,13 +43,17 @@ fn gen_request(g: &mut Gen) -> QueryRequest {
     if g.bool() {
         req = req.with_embed_bypass();
     }
+    if g.bool() {
+        req = req.with_deadline_ms(1 + g.u64() % 60_000);
+    }
     req
 }
 
 fn gen_outcome(g: &mut Gen) -> Outcome {
-    match g.usize_below(3) {
+    match g.usize_below(4) {
         0 => Outcome::Hit { score: g.f32_in(-1.0, 1.0), entry_id: 1 + g.u64() % (1 << 48) },
         1 => Outcome::Miss { inserted_id: 1 + g.u64() % (1 << 48) },
+        2 => Outcome::Degraded { score: g.f32_in(-1.0, 1.0), entry_id: 1 + g.u64() % (1 << 48) },
         _ => Outcome::Rejected { reason: gen_text(g) },
     }
 }
@@ -64,6 +68,7 @@ fn gen_response(g: &mut Gen) -> QueryResponse {
             index_ms: g.f32_in(0.0, 10.0) as f64,
             llm_ms: g.f32_in(0.0, 5_000.0) as f64,
             embed_cached: g.bool(),
+            degraded: g.bool(),
         },
         judged_positive: if g.bool() { Some(g.bool()) } else { None },
         matched_cluster: if g.bool() { Some(g.u64() % (1 << 32)) } else { None },

@@ -74,6 +74,10 @@ struct RawResponse {
     status: u16,
     /// Lower-cased `Connection` header value ("" if absent).
     connection: String,
+    /// Parsed `Retry-After` header, seconds (`None` if absent). Every
+    /// 503 — queue-full, over-max_conns, upstream-unavailable — must
+    /// carry one.
+    retry_after: Option<u64>,
     body: String,
 }
 
@@ -130,6 +134,7 @@ impl RawClient {
             .unwrap_or_else(|| panic!("malformed status line {status_line:?}"));
         let mut content_length = 0usize;
         let mut connection = String::new();
+        let mut retry_after = None;
         for l in lines {
             if let Some((k, v)) = l.split_once(':') {
                 let k = k.trim().to_ascii_lowercase();
@@ -137,6 +142,8 @@ impl RawClient {
                     content_length = v.trim().parse().expect("content-length value");
                 } else if k == "connection" {
                     connection = v.trim().to_ascii_lowercase();
+                } else if k == "retry-after" {
+                    retry_after = Some(v.trim().parse().expect("retry-after seconds"));
                 }
             }
         }
@@ -146,7 +153,20 @@ impl RawClient {
         let body =
             String::from_utf8_lossy(&self.buf[header_end..header_end + content_length]).to_string();
         self.buf.drain(..header_end + content_length);
-        RawResponse { status, connection, body }
+        let resp = RawResponse { status, connection, retry_after, body };
+        // Protocol-wide invariant, checked on every raw read: 503s are
+        // backpressure and always advertise when to retry; success
+        // responses never carry the header.
+        if resp.status == 503 {
+            assert!(
+                resp.retry_after.is_some(),
+                "503 without a Retry-After header: {}",
+                resp.body
+            );
+        } else if resp.status == 200 {
+            assert_eq!(resp.retry_after, None, "200 with a Retry-After header: {}", resp.body);
+        }
+        resp
     }
 
     /// Assert the server closes the connection (no further bytes).
@@ -484,6 +504,7 @@ fn event_loop_max_conns_answers_503_at_accept() {
     let v = json::parse(&r.body).expect("refusal body is whole, valid JSON");
     assert_eq!(v.get("error").as_str(), Some("connection limit reached"), "{}", r.body);
     assert_eq!(r.connection, "close", "refusals must advertise the close");
+    assert_eq!(r.retry_after, Some(1), "accept-path 503 advertises Retry-After");
     c.assert_closed();
 
     // Dropping the fleet frees the budget again.
@@ -501,6 +522,37 @@ fn event_loop_max_conns_answers_503_at_accept() {
         std::thread::sleep(Duration::from_millis(50));
     }
     assert!(recovered, "server did not recover after the idle fleet closed");
+    handle.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// Upstream-unavailable 503 over the wire.
+// ---------------------------------------------------------------------
+
+/// A full upstream outage with no degraded candidate in cache answers
+/// a typed 503 on the batched query path — with the `Retry-After`
+/// header, like every other 503 (the read_response invariant re-checks
+/// that on every raw response in this file).
+#[cfg(unix)]
+#[test]
+fn upstream_outage_rejection_is_503_with_retry_after() {
+    let (handle, addr) = start_with(|_| {});
+    let fault = r#"{"action": "fault", "plan": {"outage": true}}"#;
+    let (status, _) = http_request(&addr, "POST", "/v1/admin", Some(fault)).expect("admin");
+    assert_eq!(status, 200);
+
+    let mut c = RawClient::connect(&addr);
+    c.send(&post_query_raw("a question the dead upstream cannot answer", "t503"));
+    let r = c.read_response();
+    assert_eq!(r.status, 503, "{}", r.body);
+    assert_eq!(r.retry_after, Some(1), "upstream-unavailable 503 advertises Retry-After");
+    let v = json::parse(&r.body).expect("typed rejection body");
+    assert_eq!(v.get("outcome").get("type").as_str(), Some("rejected"), "{}", r.body);
+    assert!(
+        v.get("outcome").get("reason").as_str().expect("reason").starts_with("upstream unavailable"),
+        "{}",
+        r.body
+    );
     handle.shutdown();
 }
 

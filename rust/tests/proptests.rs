@@ -1,13 +1,19 @@
 //! Property-based tests over the coordinator-side invariants, using the
 //! in-tree choice-stream harness (`semcache::testutil`): routing
-//! (lookup/threshold), batching (embedding service), and state (store
-//! TTL/LRU vs a model, HNSW vs flat oracle, partition consistency).
+//! (lookup/threshold), batching (embedding service), state (store
+//! TTL/LRU vs a model, HNSW vs flat oracle, partition consistency), and
+//! outcome accounting under seeded upstream fault schedules.
 
 use std::sync::Arc;
 
+use semcache::api::{Outcome, QueryRequest};
 use semcache::cache::{CacheConfig, CachedEntry, SemanticCache};
+use semcache::coordinator::{ResilienceConfig, Server, ServerConfig};
+use semcache::embedding::NativeEncoder;
 use semcache::eviction::entry_footprint;
 use semcache::index::{FlatIndex, HnswConfig, HnswIndex, VectorIndex};
+use semcache::llm::FaultPlan;
+use semcache::runtime::ModelParams;
 use semcache::store::{KvStore, ManualClock, StoreConfig};
 use semcache::testutil::{prop_check, PropConfig};
 use semcache::tokenizer::Tokenizer;
@@ -331,6 +337,118 @@ fn prop_byte_accounting_exact_for_every_policy() {
             Ok(())
         });
     }
+}
+
+/// The extended outcome balance `cache_hits + cache_misses +
+/// degraded_hits + rejected == requests` holds *exactly* for any
+/// request trace replayed under any seeded upstream fault schedule —
+/// and every counter equals the number of typed outcomes actually
+/// returned, so nothing is double- or un-counted on any path
+/// (retries, breaker trips, shedding, degraded serving, deadline
+/// exhaustion, insert failure).
+#[test]
+fn prop_extended_balance_under_seeded_upstream_faults() {
+    let mut p = ModelParams::default();
+    p.layers = 1;
+    p.vocab_size = 1024;
+    p.dim = 96;
+    p.hidden = 192;
+    p.heads = 4;
+    let encoder = Arc::new(NativeEncoder::new(p));
+    prop_check(cfg(6), "extended-balance-under-faults", |g| {
+        let resilience = ResilienceConfig {
+            deadline_ms: 1_000,
+            max_retries: g.usize_below(3) as u32,
+            backoff_base_ms: 1,
+            backoff_max_ms: 2,
+            breaker_failures: [2u32, 5, 10_000][g.usize_below(3)],
+            breaker_open_ms: 10,
+            breaker_halfopen_probes: 1 + g.usize_below(2) as u32,
+            max_inflight: [0usize, 1, 4][g.usize_below(3)],
+        };
+        let server = Server::new(
+            encoder.clone(),
+            ServerConfig::builder()
+                .resilience(resilience)
+                .degraded_threshold(0.6)
+                .build()
+                .map_err(|e| format!("config: {e:#}"))?,
+        );
+        // Hangs carry a latency far past the deadline, so with a
+        // deadline always configured they surface as typed timeouts
+        // (never a wall-clock sleep — `real_sleep` is off).
+        server.llm().set_fault_plan(FaultPlan {
+            seed: g.u64(),
+            error_prob: g.f32_in(0.0, 0.6) as f64,
+            rate_limit_prob: g.f32_in(0.0, 0.4) as f64,
+            retry_after_ms: 1,
+            hang_prob: g.f32_in(0.0, 0.3) as f64,
+            hang_ms: 60_000,
+            outage_from_call: if g.bool() { 0 } else { 4 },
+            outage_until_call: if g.bool() { 8 } else { 0 },
+            ..FaultPlan::default()
+        });
+
+        // A trace over a small text pool (repeats ⇒ real cache hits),
+        // some requests carrying their own deadline override; a random
+        // prefix goes through serve(), the rest through serve_batch().
+        let n = g.usize_in(1, 24);
+        let reqs: Vec<QueryRequest> = (0..n)
+            .map(|_| {
+                let mut req =
+                    QueryRequest::new(format!("fault trace question {}", g.usize_below(8)));
+                if g.bool() {
+                    req = req.with_deadline_ms(1 + g.usize_below(500) as u64);
+                }
+                req
+            })
+            .collect();
+        let split = g.usize_below(n + 1);
+        let mut responses = Vec::with_capacity(n);
+        for r in &reqs[..split] {
+            responses.push(server.serve(r));
+        }
+        responses.extend(server.serve_batch(&reqs[split..]));
+
+        let m = server.metrics().snapshot();
+        if m.requests != n as u64 {
+            return Err(format!("{n} requests sent, {} recorded", m.requests));
+        }
+        let sum = m.cache_hits + m.cache_misses + m.degraded_hits + m.rejected;
+        if sum != m.requests {
+            return Err(format!(
+                "balance violated: {} + {} + {} + {} = {sum} != {}",
+                m.cache_hits, m.cache_misses, m.degraded_hits, m.rejected, m.requests
+            ));
+        }
+        let (mut hits, mut misses, mut degraded, mut rejected) = (0u64, 0u64, 0u64, 0u64);
+        for resp in &responses {
+            match &resp.outcome {
+                Outcome::Hit { .. } => hits += 1,
+                Outcome::Miss { .. } => misses += 1,
+                Outcome::Degraded { .. } => {
+                    degraded += 1;
+                    if !resp.latency.degraded {
+                        return Err("degraded outcome without the latency flag".into());
+                    }
+                }
+                Outcome::Rejected { .. } => rejected += 1,
+            }
+        }
+        for (name, counted, returned) in [
+            ("cache_hits", m.cache_hits, hits),
+            ("cache_misses", m.cache_misses, misses),
+            ("degraded_hits", m.degraded_hits, degraded),
+            ("rejected", m.rejected, rejected),
+        ] {
+            if counted != returned {
+                return Err(format!(
+                    "counter {name} = {counted} but {returned} such outcomes were returned"
+                ));
+            }
+        }
+        Ok(())
+    });
 }
 
 /// Tokenizer invariants under arbitrary input bytes.

@@ -12,8 +12,13 @@
 # with recovered_entries > 0), a two-tenant quota-breach smoke (a
 # quota-capped tenant flooding past its byte quota evicts only itself;
 # the other tenant's entry survives and per-tenant metric blocks agree),
-# and a smoke run of the serving benches (SEMCACHE_BENCH_SMOKE=1 keeps
-# each to a few seconds). Fails fast on the first broken step.
+# an upstream-outage chaos smoke (flip the simulated LLM into full
+# outage via `admin fault --outage`: a paraphrase must be served from
+# cache as a marked *degraded* hit, a novel query must get a typed 503
+# instead of hanging, and clearing the fault must restore fresh
+# misses), and a smoke run of the serving benches
+# (SEMCACHE_BENCH_SMOKE=1 keeps each to a few seconds). Fails fast on
+# the first broken step.
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -69,18 +74,19 @@ METRICS="$(./target/release/semcached metrics --addr "$ADDR")"
 echo "$METRICS" | grep -q '"cache_hits": 1' \
     || { echo "loopback smoke FAILED: /v1/metrics does not reflect the hit"; exit 1; }
 # Batcher smoke: both queries must have flowed through the dispatcher,
-# and the serving counters must be consistent:
-#   cache_hits + cache_misses + rejected == requests
+# and the serving counters must satisfy the extended balance:
+#   cache_hits + cache_misses + degraded_hits + rejected == requests
 num() { echo "$METRICS" | sed -n "s/.*\"$1\": \([0-9][0-9]*\).*/\1/p" | head -1; }
-REQS="$(num requests)"; HITS="$(num cache_hits)"; MISSES="$(num cache_misses)"; REJ="$(num rejected)"
+REQS="$(num requests)"; HITS="$(num cache_hits)"; MISSES="$(num cache_misses)"
+DEG="$(num degraded_hits)"; REJ="$(num rejected)"
 DISPATCHES="$(num batcher_dispatches)"
-[ -n "$REQS" ] && [ -n "$HITS" ] && [ -n "$MISSES" ] && [ -n "$REJ" ] \
+[ -n "$REQS" ] && [ -n "$HITS" ] && [ -n "$MISSES" ] && [ -n "$DEG" ] && [ -n "$REJ" ] \
     || { echo "batcher smoke FAILED: could not parse metrics"; echo "$METRICS"; exit 1; }
-[ "$((HITS + MISSES + REJ))" -eq "$REQS" ] \
-    || { echo "batcher smoke FAILED: hits($HITS)+misses($MISSES)+rejected($REJ) != requests($REQS)"; exit 1; }
+[ "$((HITS + MISSES + DEG + REJ))" -eq "$REQS" ] \
+    || { echo "batcher smoke FAILED: hits($HITS)+misses($MISSES)+degraded($DEG)+rejected($REJ) != requests($REQS)"; exit 1; }
 [ "${DISPATCHES:-0}" -ge 1 ] \
     || { echo "batcher smoke FAILED: /v1/query did not go through the batcher"; echo "$METRICS"; exit 1; }
-echo "    loopback smoke OK (miss -> paraphrase hit via the batcher; metrics consistent: $HITS+$MISSES+$REJ == $REQS, $DISPATCHES dispatches)"
+echo "    loopback smoke OK (miss -> paraphrase hit via the batcher; metrics consistent: $HITS+$MISSES+$DEG+$REJ == $REQS, $DISPATCHES dispatches)"
 
 # Idle-fan-in smoke (ISSUE 5): hold 8x more idle keep-alive connections
 # than the daemon has request workers (4), then a fresh query must still
@@ -270,6 +276,80 @@ kill "$SRV_PID" 2>/dev/null || true
 wait "$SRV_PID" 2>/dev/null || true
 trap - EXIT
 echo "    tenant smoke OK (small: $SMALL_EVICTS self-evictions, $SMALL_BYTES B <= 8192 B quota; big untouched and still hitting)"
+
+# Upstream-outage chaos smoke (ISSUE 9): park one entry, then flip the
+# simulated LLM into full outage through the live `admin fault` verb.
+# The daemon must degrade instead of dying: a paraphrase pushed past
+# the strict gate (--threshold 0.9999) is answered from cache as a
+# *degraded* hit carrying the pre-outage response verbatim, a novel
+# query is refused promptly with a typed upstream-unavailable 503
+# (the CLI exits nonzero on it, body still printed), and clearing the
+# fault restores fresh misses — with the extended balance holding
+# across the whole episode. Retries are off and the breaker-trip bar
+# is set unreachably high so every step is deterministic and instant.
+echo "==> chaos smoke: admin fault outage -> degraded hit -> typed 503 -> recovery"
+PORT_FILE="$(mktemp)"
+./target/release/semcached serve --port 0 --port-file "$PORT_FILE" \
+    --upstream_max_retries 0 --upstream_deadline_ms 2000 \
+    --upstream_breaker_failures 1000000 &
+SRV_PID=$!
+trap 'kill "$SRV_PID" 2>/dev/null || true' EXIT
+for _ in $(seq 1 100); do
+    [ -s "$PORT_FILE" ] && break
+    sleep 0.1
+done
+[ -s "$PORT_FILE" ] || { echo "chaos semcached did not come up (no port file)"; exit 1; }
+ADDR="$(cat "$PORT_FILE")"
+for _ in $(seq 1 100); do
+    ./target/release/semcached metrics --addr "$ADDR" >/dev/null 2>&1 && break
+    sleep 0.1
+done
+ORIG="$(./target/release/semcached query --addr "$ADDR" "how do i reset my password")"
+./target/release/semcached admin fault --addr "$ADDR" --outage >/dev/null \
+    || { echo "chaos smoke FAILED: admin fault --outage was refused"; exit 1; }
+T0=$(date +%s)
+OUT="$(./target/release/semcached query --addr "$ADDR" --threshold 0.9999 \
+    "how can i reset my password")" \
+    || { echo "chaos smoke FAILED: degraded-path query errored"; echo "$OUT"; exit 1; }
+T1=$(date +%s)
+echo "$OUT" | grep -q '"type": "degraded"' \
+    || { echo "chaos smoke FAILED: outage paraphrase was not a degraded hit"; echo "$OUT"; exit 1; }
+echo "$OUT" | grep -q '"degraded": true' \
+    || { echo "chaos smoke FAILED: degraded hit not marked in the latency breakdown"; echo "$OUT"; exit 1; }
+echo "$ORIG" | grep -qF "$(echo "$OUT" | sed -n 's/.*"response": "\([^"]*\)".*/\1/p')" \
+    || { echo "chaos smoke FAILED: degraded response differs from the cached one"; exit 1; }
+[ $((T1 - T0)) -le 5 ] \
+    || { echo "chaos smoke FAILED: degraded hit took $((T1 - T0))s during the outage"; exit 1; }
+T0=$(date +%s)
+REJOUT="$(./target/release/semcached query --addr "$ADDR" --deadline-ms 500 \
+    "a question the dead upstream cannot answer" || true)"
+T1=$(date +%s)
+echo "$REJOUT" | grep -q '"type": "rejected"' \
+    || { echo "chaos smoke FAILED: novel query during outage was not rejected"; echo "$REJOUT"; exit 1; }
+echo "$REJOUT" | grep -q 'upstream unavailable' \
+    || { echo "chaos smoke FAILED: rejection reason is not typed upstream-unavailable"; echo "$REJOUT"; exit 1; }
+[ $((T1 - T0)) -le 5 ] \
+    || { echo "chaos smoke FAILED: outage rejection took $((T1 - T0))s (unbounded?)"; exit 1; }
+./target/release/semcached admin fault --addr "$ADDR" >/dev/null \
+    || { echo "chaos smoke FAILED: clearing the fault plan was refused"; exit 1; }
+OUT="$(./target/release/semcached query --addr "$ADDR" "an entirely new topic after recovery")"
+echo "$OUT" | grep -q '"type": "miss"' \
+    || { echo "chaos smoke FAILED: fresh miss did not resume after the fault cleared"; echo "$OUT"; exit 1; }
+METRICS="$(./target/release/semcached metrics --addr "$ADDR")"
+REQS="$(num requests)"; HITS="$(num cache_hits)"; MISSES="$(num cache_misses)"
+DEG="$(num degraded_hits)"; REJ="$(num rejected)"; UPERR="$(num upstream_errors)"
+[ "${DEG:-0}" -eq 1 ] \
+    || { echo "chaos smoke FAILED: degraded_hits shows ${DEG:-0}, want 1"; echo "$METRICS"; exit 1; }
+[ "${REJ:-0}" -eq 1 ] \
+    || { echo "chaos smoke FAILED: rejected shows ${REJ:-0}, want 1"; echo "$METRICS"; exit 1; }
+[ "${UPERR:-0}" -ge 1 ] \
+    || { echo "chaos smoke FAILED: upstream_errors shows ${UPERR:-0} after a full outage"; echo "$METRICS"; exit 1; }
+[ "$((HITS + MISSES + DEG + REJ))" -eq "$REQS" ] \
+    || { echo "chaos smoke FAILED: hits($HITS)+misses($MISSES)+degraded($DEG)+rejected($REJ) != requests($REQS)"; echo "$METRICS"; exit 1; }
+kill "$SRV_PID" 2>/dev/null || true
+wait "$SRV_PID" 2>/dev/null || true
+trap - EXIT
+echo "    chaos smoke OK (degraded hit in $((T1 - T0))s-bounded outage, typed 503, recovery miss; balance $HITS+$MISSES+$DEG+$REJ == $REQS)"
 
 echo "==> smoke bench: bench_batch_throughput (SEMCACHE_BENCH_SMOKE=1)"
 SEMCACHE_BENCH_SMOKE=1 cargo bench --bench bench_batch_throughput
