@@ -16,6 +16,15 @@
 //!    arms encode byte-identical input). Acceptance floor: **memo p50 ≥
 //!    20× faster than cold p50**.
 //!
+//! 4. **Blocked vs naive matmul** — mul-add throughput of the
+//!    register-tiled `matmul_acc_blocked` against the seed ikj loop at
+//!    the encoder's FFN GEMM shape, bit-identity asserted. Acceptance
+//!    floor: **≥ 2× the naive kernel on ≥ 2-core hosts** (WAIVED
+//!    banner on single-core hosts).
+//!
+//! With `SEMCACHE_BENCH_JSON=<path>` every headline number is also
+//! appended to that file as JSON lines (see `benches/common`).
+//!
 //! The memoized arm is the paper's dominant traffic shape (repetitive
 //! customer-service queries, 61.6–68.8% hit rates): every verbatim
 //! repeat skips the transformer entirely. Compare the end-to-end effect
@@ -25,9 +34,13 @@
 //! Run: `cargo bench --bench bench_embed_throughput`
 //! Quick mode (CI / verify.sh): `SEMCACHE_BENCH_SMOKE=1 cargo bench --bench bench_embed_throughput`
 
+mod common;
+
 use std::time::Instant;
 
-use semcache::embedding::{Encoder, MemoConfig, NativeEncoder};
+use semcache::embedding::{
+    matmul_acc_blocked, matmul_acc_naive, Encoder, MemoConfig, NativeEncoder,
+};
 use semcache::runtime::ModelParams;
 
 fn smoke() -> bool {
@@ -124,22 +137,93 @@ fn main() {
     );
     println!("{:<44} {:>10.4} ms p50", "memoized repeat query", memo_p50);
 
+    // --- arm 4: blocked vs naive matmul kernel (ISSUE 10), at the
+    // encoder's FFN GEMM shape (seq x dim @ dim x hidden) — the single
+    // hottest loop of the forward pass. Both kernels run the same
+    // matrices and must stay bit-identical (the property tests pin the
+    // same contract; the bench re-checks on real sizes for free).
+    let (rows, inner, cols) = if smoke() { (32, p.dim, p.hidden) } else { (64, p.dim, p.hidden) };
+    let kernel_reps = if smoke() { 40 } else { 120 };
+    let mut seed = 0x5eed_cafe_u64;
+    let mut next = move || {
+        // xorshift64*: deterministic fill, no external RNG.
+        seed ^= seed << 13;
+        seed ^= seed >> 7;
+        seed ^= seed << 17;
+        (seed >> 40) as f32 / 16_777_216.0 - 0.5
+    };
+    let a: Vec<f32> = (0..rows * inner).map(|_| next()).collect();
+    let b: Vec<f32> = (0..inner * cols).map(|_| next()).collect();
+    let mut out_naive = vec![0.0f32; rows * cols];
+    let mut out_blocked = vec![0.0f32; rows * cols];
+
+    let t0 = Instant::now();
+    for _ in 0..kernel_reps {
+        matmul_acc_naive(&a, &b, &mut out_naive, rows, inner, cols);
+    }
+    let naive_secs = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    for _ in 0..kernel_reps {
+        matmul_acc_blocked(&a, &b, &mut out_blocked, rows, inner, cols);
+    }
+    let blocked_secs = t0.elapsed().as_secs_f64();
+    assert_eq!(
+        out_naive, out_blocked,
+        "blocked matmul must stay bit-identical to the seed kernel"
+    );
+    let madds = (rows * inner * cols * kernel_reps) as f64;
+    let naive_gmadds = madds / naive_secs / 1e9;
+    let blocked_gmadds = madds / blocked_secs / 1e9;
+    println!(
+        "{:<44} {:>10.2} Gmadd/s  ({rows}x{inner}x{cols}, {kernel_reps} reps)",
+        "naive ikj matmul (seed kernel)", naive_gmadds
+    );
+    println!(
+        "{:<44} {:>10.2} Gmadd/s  ({rows}x{inner}x{cols}, {kernel_reps} reps)",
+        "blocked 4x8 matmul (dispatch default)", blocked_gmadds
+    );
+
     // --- acceptance floors.
     let par_ratio = par_qps / seq_qps;
     let memo_ratio = cold_p50 / memo_p50.max(1e-9);
+    let kernel_ratio = naive_secs / blocked_secs.max(1e-12);
+    let multi_core = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) >= 2;
     println!("\nparallel-vs-sequential throughput ratio: {par_ratio:.2}x  (acceptance floor: >= 2.00x at 4 workers)");
     println!("cold-vs-memo p50 latency ratio:          {memo_ratio:.1}x  (acceptance floor: >= 20x)");
+    println!("blocked-vs-naive matmul throughput ratio: {kernel_ratio:.2}x  (acceptance floor: >= 2.00x on >= 2-core hosts)");
     let par_ok = par_ratio >= 2.0;
     let memo_ok = memo_ratio >= 20.0;
+    let kernel_ok = kernel_ratio >= 2.0;
     println!(
-        "[acceptance] parallel >= 2x sequential: {}   memo >= 20x cold: {}",
+        "[acceptance] parallel >= 2x sequential: {}   memo >= 20x cold: {}   blocked >= 2x naive: {}",
         if par_ok { "PASS" } else { "FAIL" },
         if memo_ok { "PASS" } else { "FAIL" },
+        if kernel_ok {
+            "PASS"
+        } else if !multi_core {
+            "WAIVED (single-core host)"
+        } else {
+            "FAIL"
+        },
     );
-    println!("(SEMCACHE_BENCH_SMOKE=1 for the quick CI variant; SEMCACHE_BENCH_ENFORCE=1 to exit non-zero on FAIL; the parallel floor needs >= 2 usable cores)");
+    println!("(SEMCACHE_BENCH_SMOKE=1 for the quick CI variant; SEMCACHE_BENCH_ENFORCE=1 to exit non-zero on FAIL; the parallel and kernel floors need >= 2 usable cores)");
+
+    common::emit_json("embed", "sequential_qps", seq_qps, "queries/s");
+    common::emit_json("embed", "parallel_qps", par_qps, "queries/s");
+    common::emit_json("embed", "parallel_ratio", par_ratio, "x");
+    common::emit_json("embed", "cold_p50_ms", cold_p50, "ms");
+    common::emit_json("embed", "memo_p50_ms", memo_p50, "ms");
+    common::emit_json("embed", "memo_ratio", memo_ratio, "x");
+    common::emit_json("embed", "matmul_naive_gmadds", naive_gmadds, "Gmadd/s");
+    common::emit_json("embed", "matmul_blocked_gmadds", blocked_gmadds, "Gmadd/s");
+    common::emit_json("embed", "matmul_blocked_ratio", kernel_ratio, "x");
+
     // Throughput ratios are machine-dependent, so the floors are printed
     // banners by default; gating environments opt into a hard failure.
-    if (!par_ok || !memo_ok) && std::env::var("SEMCACHE_BENCH_ENFORCE").is_ok() {
+    // The kernel floor follows the WAIVED convention: single-core hosts
+    // print the banner but never fail it.
+    let kernel_gate = kernel_ok || !multi_core;
+    if (!par_ok || !memo_ok || !kernel_gate) && std::env::var("SEMCACHE_BENCH_ENFORCE").is_ok() {
         eprintln!("SEMCACHE_BENCH_ENFORCE is set and an acceptance floor was missed; exiting 1");
         std::process::exit(1);
     }

@@ -1,6 +1,57 @@
-//! §2.4 regeneration: HNSW O(log n) vs exhaustive O(n) scaling study.
+//! §2.4 regeneration: HNSW O(log n) vs exhaustive O(n) scaling study,
+//! plus the ISSUE 10 quantized-scan arm.
+//!
+//! The quantized arm measures, at 10k stored vectors:
+//!
+//! * **candidate-scoring throughput** — vectors scored per second by the
+//!   flat index's exact f32 scan vs its int8 scan (quantized dot +
+//!   exact-f32 rerank of survivors). Acceptance floor: **≥ 2×** exact.
+//! * **recall vs exact** — the same HNSW graph searched with the exact
+//!   kernel and the quantized kernel (construction is always exact, so
+//!   the graph is shared); average top-k id overlap on a planted
+//!   near-duplicate workload at the default 0.8 threshold. Acceptance
+//!   floor: **recall ≥ 0.99**.
+//!
+//! Both floors are printed banners by default and hard failures under
+//! `SEMCACHE_BENCH_ENFORCE=1`. `SEMCACHE_BENCH_SMOKE=1` shrinks the
+//! scaling sweep and query counts for CI; `SEMCACHE_BENCH_JSON=<path>`
+//! appends machine-readable results (see `benches/common`).
+//!
+//! Run: `cargo bench --bench bench_hnsw_scaling`
 mod common;
+
+use std::time::Instant;
+
 use semcache::experiments::{render_scaling, scaling_study, ScalingConfig};
+use semcache::index::{FlatIndex, HnswConfig, HnswIndex, VectorIndex};
+use semcache::util::l2_normalized;
+
+fn smoke() -> bool {
+    std::env::var("SEMCACHE_BENCH_SMOKE").is_ok()
+}
+
+/// xorshift64*-style deterministic stream: no external RNG offline.
+struct Rng(u64);
+
+impl Rng {
+    fn f32(&mut self) -> f32 {
+        self.0 ^= self.0 << 13;
+        self.0 ^= self.0 >> 7;
+        self.0 ^= self.0 << 17;
+        (self.0 >> 40) as f32 / 16_777_216.0 - 0.5
+    }
+
+    fn vec(&mut self, dim: usize) -> Vec<f32> {
+        l2_normalized(&(0..dim).map(|_| self.f32()).collect::<Vec<_>>())
+    }
+
+    fn below(&mut self, n: usize) -> usize {
+        self.0 ^= self.0 << 13;
+        self.0 ^= self.0 >> 7;
+        self.0 ^= self.0 << 17;
+        (self.0 % n as u64) as usize
+    }
+}
 
 fn main() {
     let mut cfg = ScalingConfig::default();
@@ -8,7 +59,105 @@ fn main() {
         cfg.sizes = vec![1_000, 2_000, 4_000, 8_000, 16_000];
         cfg.queries = 100;
     }
+    if smoke() {
+        cfg.sizes = vec![1_000, 4_000];
+        cfg.queries = 25;
+    }
     let rows = scaling_study(&cfg);
     println!("\n{}", render_scaling(&rows));
     println!("paper §2.4 claim: HNSW reduces O(n) search to ~O(log n)");
+
+    // --- quantized-scan arm (ISSUE 10): 10k vectors, MiniLM dim.
+    let n = 10_000usize;
+    let dim = 384usize;
+    let k = 5usize;
+    let queries = if smoke() { 40 } else { 200 };
+    let mut rng = Rng(0x5eed_cafe);
+    println!("\n[quantized-scan arm: {n} vectors, dim {dim}, top-{k}, {queries} planted queries]");
+
+    let mut stored: Vec<Vec<f32>> = Vec::with_capacity(n);
+    let mut flat_exact = FlatIndex::new(dim);
+    let mut flat_quant = FlatIndex::with_quantized(dim, true);
+    for id in 0..n as u64 {
+        let v = rng.vec(dim);
+        flat_exact.insert(id, &v);
+        flat_quant.insert(id, &v);
+        stored.push(v);
+    }
+    // Planted near-duplicates: the cache's hit-path shape at the default
+    // 0.8 threshold (each query's true top-1 scores ~0.999).
+    let qs: Vec<Vec<f32>> = (0..queries)
+        .map(|_| {
+            let base = &stored[rng.below(n)];
+            let jittered: Vec<f32> = base.iter().map(|x| x + 0.02 * rng.f32()).collect();
+            l2_normalized(&jittered)
+        })
+        .collect();
+
+    // Candidate-scoring throughput: every query scores all n rows.
+    let t0 = Instant::now();
+    let mut exact_tops = Vec::with_capacity(queries);
+    for q in &qs {
+        exact_tops.push(flat_exact.search(q, k));
+    }
+    let exact_secs = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let mut quant_tops = Vec::with_capacity(queries);
+    for q in &qs {
+        quant_tops.push(flat_quant.search(q, k));
+    }
+    let quant_secs = t0.elapsed().as_secs_f64();
+    let scored = (n * queries) as f64;
+    let exact_vps = scored / exact_secs;
+    let quant_vps = scored / quant_secs;
+    let speedup = exact_secs / quant_secs.max(1e-12);
+    println!(
+        "{:<44} {:>12.0} vectors/s  ({:.3}s)",
+        "flat exact f32 scan", exact_vps, exact_secs
+    );
+    println!(
+        "{:<44} {:>12.0} vectors/s  ({:.3}s)",
+        "flat int8 scan + exact rerank", quant_vps, quant_secs
+    );
+
+    // Recall of the quantized kernel over a shared HNSW graph: edges are
+    // built exactly either way, so flipping the flag isolates the
+    // query-time kernel.
+    let mut hnsw = HnswIndex::new(dim, HnswConfig::default());
+    for (id, v) in stored.iter().enumerate() {
+        hnsw.insert(id as u64, v);
+    }
+    let mut overlap = 0usize;
+    let mut wanted = 0usize;
+    for q in &qs {
+        let exact: Vec<u64> = hnsw.search(q, k).iter().map(|r| r.id).collect();
+        hnsw.set_quantized(true);
+        let quant: Vec<u64> = hnsw.search(q, k).iter().map(|r| r.id).collect();
+        hnsw.set_quantized(false);
+        wanted += exact.len();
+        overlap += quant.iter().filter(|id| exact.contains(id)).count();
+    }
+    let recall = overlap as f64 / wanted.max(1) as f64;
+    println!("{:<44} {:>12.4}", "quantized recall vs exact (same graph)", recall);
+
+    let speed_ok = speedup >= 2.0;
+    let recall_ok = recall >= 0.99;
+    println!("\nint8-vs-f32 candidate-scoring speedup:   {speedup:.2}x  (acceptance floor: >= 2.00x at {n} vectors)");
+    println!("quantized-vs-exact recall:               {recall:.4}  (acceptance floor: >= 0.99)");
+    println!(
+        "[acceptance] int8 scan >= 2x f32: {}   recall >= 0.99: {}",
+        if speed_ok { "PASS" } else { "FAIL" },
+        if recall_ok { "PASS" } else { "FAIL" },
+    );
+    println!("(SEMCACHE_BENCH_SMOKE=1 for the quick CI variant; SEMCACHE_BENCH_ENFORCE=1 to exit non-zero on FAIL)");
+
+    common::emit_json("hnsw", "exact_scan_vps", exact_vps, "vectors/s");
+    common::emit_json("hnsw", "quantized_scan_vps", quant_vps, "vectors/s");
+    common::emit_json("hnsw", "quantized_speedup", speedup, "x");
+    common::emit_json("hnsw", "quantized_recall", recall, "ratio");
+
+    if (!speed_ok || !recall_ok) && std::env::var("SEMCACHE_BENCH_ENFORCE").is_ok() {
+        eprintln!("SEMCACHE_BENCH_ENFORCE is set and an acceptance floor was missed; exiting 1");
+        std::process::exit(1);
+    }
 }

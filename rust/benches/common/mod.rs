@@ -46,6 +46,34 @@ pub fn bench_throughput<F: FnMut() -> usize>(name: &str, warmup: usize, iters: u
     );
 }
 
+/// Append one machine-readable result record to the JSON-lines file
+/// named by `SEMCACHE_BENCH_JSON` (no-op when the variable is unset, so
+/// interactive runs stay banner-only). Each line is a self-contained
+/// object — `{"bench": ..., "metric": ..., "value": ..., "unit": ...}` —
+/// so verify.sh can accumulate a perf trajectory across PRs by plain
+/// append without parsing prior contents.
+pub fn emit_json(bench: &str, metric: &str, value: f64, unit: &str) {
+    let Ok(path) = std::env::var("SEMCACHE_BENCH_JSON") else { return };
+    if path.is_empty() {
+        return;
+    }
+    use std::io::Write;
+    let record = semcache::json::obj([
+        ("bench", bench.into()),
+        ("metric", metric.into()),
+        ("value", value.into()),
+        ("unit", unit.into()),
+    ]);
+    match std::fs::OpenOptions::new().create(true).append(true).open(&path) {
+        Ok(mut f) => {
+            if let Err(e) = writeln!(f, "{record}") {
+                eprintln!("[bench json: append to {path} failed: {e}]");
+            }
+        }
+        Err(e) => eprintln!("[bench json: open {path} failed: {e}]"),
+    }
+}
+
 /// Evaluation fixture shared by the paper-table benches: a small-scale
 /// context (fast) or paper-scale when `SEMCACHE_BENCH_SCALE=paper`.
 pub fn eval_context() -> semcache::experiments::EvalContext {

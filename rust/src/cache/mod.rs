@@ -71,6 +71,11 @@ pub struct CacheConfig {
     pub top_k: usize,
     pub index: IndexKind,
     pub hnsw: HnswConfig,
+    /// Score ANN candidates through the int8 code matrix (exact-f32
+    /// rerank of survivors) instead of full f32 dots. Returned scores
+    /// are exact either way; `SEMCACHE_SCALAR_KERNELS=1` forces the
+    /// exact path at runtime regardless of this flag.
+    pub quantized_scan: bool,
     /// Rebuild a partition's index when its tombstone ratio exceeds this.
     pub rebuild_garbage_ratio: f64,
     /// KV-store shards per partition.
@@ -100,6 +105,7 @@ impl Default for CacheConfig {
             top_k: 5,
             index: IndexKind::Hnsw,
             hnsw: HnswConfig::default(),
+            quantized_scan: true,
             rebuild_garbage_ratio: 0.3,
             store_shards: 16,
             max_bytes: 0,
@@ -140,6 +146,7 @@ impl CacheConfig {
                 ef_search: cfg.hnsw_ef_search,
                 ..HnswConfig::default()
             })
+            .quantized_scan(cfg.quantized_scan)
             .rebuild_garbage_ratio(cfg.rebuild_garbage_ratio)
             .store_shards(cfg.store_shards)
             .max_bytes(cfg.max_bytes)
@@ -219,6 +226,11 @@ impl CacheConfigBuilder {
 
     pub fn hnsw(mut self, hnsw: HnswConfig) -> Self {
         self.cfg.hnsw = hnsw;
+        self
+    }
+
+    pub fn quantized_scan(mut self, on: bool) -> Self {
+        self.cfg.quantized_scan = on;
         self
     }
 

@@ -42,6 +42,11 @@ pub struct Partition {
     embeddings: Mutex<std::collections::HashMap<u64, Vec<f32>>>,
     top_k: usize,
     default_ttl_ms: u64,
+    /// Whether indexes built for this partition use the int8 quantized
+    /// candidate scan (`quantized_scan` config key). Recorded so
+    /// rebuilds and recovered-graph installs reproduce the same kernel
+    /// choice as the original construction.
+    quantized: bool,
     clock: Arc<dyn Clock>,
 }
 
@@ -102,8 +107,10 @@ impl Partition {
         track_access: bool,
     ) -> Self {
         let index: Box<dyn VectorIndex> = match cfg.index {
-            IndexKind::Hnsw => Box::new(HnswIndex::new(dim, cfg.hnsw.clone())),
-            IndexKind::Flat => Box::new(FlatIndex::new(dim)),
+            IndexKind::Hnsw => {
+                Box::new(HnswIndex::with_quantized(dim, cfg.hnsw.clone(), cfg.quantized_scan))
+            }
+            IndexKind::Flat => Box::new(FlatIndex::with_quantized(dim, cfg.quantized_scan)),
         };
         let store = KvStore::with_clock(
             StoreConfig {
@@ -124,8 +131,15 @@ impl Partition {
             embeddings: Mutex::new(std::collections::HashMap::new()),
             top_k: cfg.top_k.max(1),
             default_ttl_ms: cfg.ttl_ms,
+            quantized: cfg.quantized_scan,
             clock,
         }
+    }
+
+    /// Whether this partition's indexes run the quantized candidate
+    /// scan (recovery re-applies this to loaded graphs).
+    pub fn quantized(&self) -> bool {
+        self.quantized
     }
 
     pub fn dim(&self) -> usize {
@@ -311,9 +325,13 @@ impl Partition {
         }
         // Recreate the same concrete index kind, populated with live rows.
         let mut fresh: Box<dyn VectorIndex> = if index.is_hnsw() {
-            Box::new(HnswIndex::new(self.dim, index.hnsw_config().expect("hnsw").clone()))
+            Box::new(HnswIndex::with_quantized(
+                self.dim,
+                index.hnsw_config().expect("hnsw").clone(),
+                self.quantized,
+            ))
         } else {
-            Box::new(FlatIndex::new(self.dim))
+            Box::new(FlatIndex::with_quantized(self.dim, self.quantized))
         };
         for (id, e) in &live {
             fresh.insert(*id, e);

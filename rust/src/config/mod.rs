@@ -54,6 +54,12 @@ pub struct Config {
     pub hnsw_ef_search: usize,
     /// Rebuild when tombstone ratio exceeds this (paper's rebalancing).
     pub rebuild_garbage_ratio: f64,
+    /// Score ANN candidates through the int8-quantized code matrix
+    /// (per-vector scale, exact-f32 rerank of the survivors) instead of
+    /// full f32 dots — 4× more vectors per cache line. `false` keeps
+    /// the exact-only scan; `SEMCACHE_SCALAR_KERNELS=1` overrides at
+    /// runtime. See DESIGN.md §Perf.
+    pub quantized_scan: bool,
 
     // Embedding (paper §2.2)
     /// "pjrt" (AOT artifacts) or "native" (pure-Rust twin).
@@ -169,6 +175,7 @@ impl Default for Config {
             hnsw_ef_construction: 200,
             hnsw_ef_search: 64,
             rebuild_garbage_ratio: 0.3,
+            quantized_scan: true,
             encoder_kind: "native".into(),
             batch_window_us: 200,
             max_batch: 8,
@@ -305,6 +312,7 @@ impl Config {
             "hnsw_ef_construction" => self.hnsw_ef_construction = num!(),
             "hnsw_ef_search" => self.hnsw_ef_search = num!(),
             "rebuild_garbage_ratio" => self.rebuild_garbage_ratio = num!(),
+            "quantized_scan" => self.quantized_scan = num!(),
             "encoder_kind" => self.encoder_kind = raw.to_string(),
             "batch_window_us" => self.batch_window_us = num!(),
             "max_batch" => self.max_batch = num!(),
@@ -462,6 +470,18 @@ mod tests {
         assert!(c.validate().is_err(), "enabled tier needs >= 1 shard");
         c.embed_memo_capacity = 0; // disabled tier: shards irrelevant
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn quantized_scan_key_roundtrips_and_defaults_on() {
+        let mut c = Config::default();
+        assert!(c.quantized_scan, "quantized scan is the default");
+        c.set("index.quantized_scan", "false").unwrap();
+        assert!(!c.quantized_scan);
+        c.set("quantized_scan", "true").unwrap();
+        assert!(c.quantized_scan);
+        c.validate().unwrap();
+        assert!(c.set("quantized_scan", "maybe").is_err(), "non-bool must be rejected");
     }
 
     #[test]

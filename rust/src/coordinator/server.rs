@@ -553,6 +553,9 @@ impl Server {
         let hit = self.cache.lookup_with_opts_for(tenant, embedding, threshold, req.options.top_k);
         let index_ms = t1.elapsed().as_secs_f64() * 1e3;
         self.metrics.observe_index_ms(index_ms);
+        if self.cache.config().quantized_scan && !crate::util::scalar_kernels_forced() {
+            self.metrics.record_quantized_lookup();
+        }
 
         if let Some(hit) = hit {
             // 3a. Cache hit: validate when ground truth is available.

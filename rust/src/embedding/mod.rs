@@ -31,7 +31,7 @@ mod service;
 mod weights;
 
 pub use memo::{memo_key, EmbeddingMemo, MemoConfig, MemoCounters};
-pub use native::{EncodeScratch, NativeEncoder};
+pub use native::{matmul_acc_blocked, matmul_acc_naive, EncodeScratch, NativeEncoder};
 pub use pjrt::PjrtEncoder;
 pub use service::{BatcherConfig, EmbeddingHandle, EmbeddingService, EncoderSpec};
 pub use weights::EncoderWeights;

@@ -425,11 +425,7 @@ fn layer_norm_rows(x: &[f32], out: &mut [f32], rows: usize, cols: usize) {
     }
 }
 
-/// out = a (rows×inner) @ b (inner×cols). b is row-major; we walk it
-/// column-by-row via a transposed scratch — at these sizes (≤768) a
-/// simple k-blocked loop with the vectorized `dot` on transposed tiles
-/// costs more than it saves, so use the classic ikj order which keeps
-/// `b` rows streaming and autovectorizes the inner j loop.
+/// out = a (rows×inner) @ b (inner×cols), both row-major.
 fn matmul(a: &[f32], b: &[f32], out: &mut [f32], rows: usize, inner: usize, cols: usize) {
     out.fill(0.0);
     matmul_acc(a, b, out, rows, inner, cols);
@@ -440,11 +436,42 @@ fn matmul_add(a: &[f32], b: &[f32], out: &mut [f32], rows: usize, inner: usize, 
     matmul_acc(a, b, out, rows, inner, cols);
 }
 
+/// Rows per register tile of the blocked kernel.
+const MR: usize = 4;
+/// Columns per register tile (one cache-line-friendly strip; two SSE /
+/// one AVX vector per row, so MR×NR accumulators fit the register file).
+const NR: usize = 8;
+
+/// out += a @ b, dispatching between the blocked kernel and the seed
+/// scalar loop (`SEMCACHE_SCALAR_KERNELS=1` forces the latter so CI
+/// exercises both). Both orders are bit-identical: see
+/// `matmul_acc_blocked`.
 #[inline]
 fn matmul_acc(a: &[f32], b: &[f32], out: &mut [f32], rows: usize, inner: usize, cols: usize) {
     debug_assert_eq!(a.len(), rows * inner);
     debug_assert_eq!(b.len(), inner * cols);
     debug_assert_eq!(out.len(), rows * cols);
+    if crate::util::scalar_kernels_forced() {
+        matmul_acc_naive(a, b, out, rows, inner, cols);
+    } else {
+        matmul_acc_blocked(a, b, out, rows, inner, cols);
+    }
+}
+
+/// The seed kernel: classic ikj order, `b` rows streaming, the inner j
+/// loop autovectorized. Kept verbatim as the scalar reference arm and
+/// the bit-compatibility oracle — every output element accumulates its
+/// k terms in strictly ascending k order. Public for the kernel-ratio
+/// arm of `bench_embed_throughput`; serving code goes through the
+/// [`matmul_acc`] dispatcher.
+pub fn matmul_acc_naive(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    rows: usize,
+    inner: usize,
+    cols: usize,
+) {
     for i in 0..rows {
         let a_row = &a[i * inner..(i + 1) * inner];
         let o_row = &mut out[i * cols..(i + 1) * cols];
@@ -454,6 +481,84 @@ fn matmul_acc(a: &[f32], b: &[f32], out: &mut [f32], rows: usize, inner: usize, 
                 o_row[j] += aik * b_row[j];
             }
         }
+    }
+}
+
+/// Register-tiled kernel: an MR×NR tile of `out` is held in local
+/// accumulators while k sweeps the full inner dimension, so each `b`
+/// row strip is reused across MR rows of `a` and `out` is loaded and
+/// stored once per tile instead of once per k (the ikj loop's
+/// bandwidth bottleneck). The independent per-tile accumulators
+/// autovectorize the same way `util::vecmath::dot`'s 8-lane array does.
+///
+/// Bit-compatible with `matmul_acc_naive` by construction: floating-
+/// point addition order only changes *per output element* if the k
+/// order changes, and here every element still accumulates k = 0..inner
+/// in ascending order onto its prior value — the tiling only reorders
+/// *across* independent output elements. (This is also why the kernel
+/// must never be "improved" with a split-k reduction or FMA
+/// contraction: both change per-element rounding. The parity property
+/// tests in `tests/embed_hotpath.rs` and below pin this.) Public for
+/// the kernel-ratio arm of `bench_embed_throughput`.
+pub fn matmul_acc_blocked(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    rows: usize,
+    inner: usize,
+    cols: usize,
+) {
+    let mut i = 0;
+    while i + MR <= rows {
+        let a0 = &a[i * inner..(i + 1) * inner];
+        let a1 = &a[(i + 1) * inner..(i + 2) * inner];
+        let a2 = &a[(i + 2) * inner..(i + 3) * inner];
+        let a3 = &a[(i + 3) * inner..(i + 4) * inner];
+        let mut j = 0;
+        while j + NR <= cols {
+            let mut acc = [[0.0f32; NR]; MR];
+            for (r, acc_row) in acc.iter_mut().enumerate() {
+                acc_row.copy_from_slice(&out[(i + r) * cols + j..(i + r) * cols + j + NR]);
+            }
+            for k in 0..inner {
+                let b_row = &b[k * cols + j..k * cols + j + NR];
+                let aik = [a0[k], a1[k], a2[k], a3[k]];
+                for r in 0..MR {
+                    for c in 0..NR {
+                        acc[r][c] += aik[r] * b_row[c];
+                    }
+                }
+            }
+            for (r, acc_row) in acc.iter().enumerate() {
+                out[(i + r) * cols + j..(i + r) * cols + j + NR].copy_from_slice(acc_row);
+            }
+            j += NR;
+        }
+        // Column remainder of the MR-row band: plain k-ascending loop.
+        if j < cols {
+            for r in 0..MR {
+                let a_row = &a[(i + r) * inner..(i + r + 1) * inner];
+                let o_row = &mut out[(i + r) * cols + j..(i + r + 1) * cols];
+                for (kk, &aik) in a_row.iter().enumerate() {
+                    let b_row = &b[kk * cols + j..(kk + 1) * cols];
+                    for (o, &bv) in o_row.iter_mut().zip(b_row) {
+                        *o += aik * bv;
+                    }
+                }
+            }
+        }
+        i += MR;
+    }
+    // Row remainder: the seed loop over the leftover rows.
+    if i < rows {
+        matmul_acc_naive(
+            &a[i * inner..],
+            b,
+            &mut out[i * cols..],
+            rows - i,
+            inner,
+            cols,
+        );
     }
 }
 
@@ -520,6 +625,36 @@ mod tests {
         // matmul_add accumulates.
         matmul_add(&a, &b, &mut out, 2, 3, 2);
         assert_eq!(out, [116.0, 128.0, 278.0, 308.0]);
+    }
+
+    #[test]
+    fn prop_blocked_matmul_bit_identical_to_naive() {
+        // Scalar-parity property in the tests/embed_hotpath.rs
+        // convention: the blocked tile kernel must be *bitwise* equal
+        // to the seed ikj loop for arbitrary shapes (including tile
+        // edges: rows % MR != 0, cols % NR != 0) and arbitrary
+        // pre-existing `out` contents (the accumulate contract).
+        use crate::testutil::{prop_check, PropConfig};
+        prop_check(PropConfig { cases: 48, ..Default::default() }, "blocked-matmul-parity", |g| {
+            let rows = g.usize_in(1, 3 * MR + 1);
+            let inner = g.usize_in(1, 40);
+            let cols = g.usize_in(1, 3 * NR + 3);
+            let a = g.vec_f32(rows * inner, -2.0, 2.0);
+            let b = g.vec_f32(inner * cols, -2.0, 2.0);
+            let seed_out = g.vec_f32(rows * cols, -1.0, 1.0);
+            let mut blocked = seed_out.clone();
+            let mut naive = seed_out;
+            matmul_acc_blocked(&a, &b, &mut blocked, rows, inner, cols);
+            matmul_acc_naive(&a, &b, &mut naive, rows, inner, cols);
+            for (i, (x, y)) in blocked.iter().zip(&naive).enumerate() {
+                if x.to_bits() != y.to_bits() {
+                    return Err(format!(
+                        "{rows}x{inner}x{cols}: element {i} diverged ({x:?} vs {y:?})"
+                    ));
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -37,16 +37,26 @@ pub const ENTRY_OVERHEAD_BYTES: u64 = 160;
 /// [`ENTRY_OVERHEAD_BYTES`].
 pub const INDEX_NODE_BYTES: u64 = 96;
 
-/// The byte footprint one cached entry charges against its budgets:
-/// question + response text, the `dim`-float embedding (stored twice:
-/// once in the index, once in the rebuild map), the index node estimate,
-/// and the fixed per-entry overhead. Deterministic in the entry's
-/// contents so accounting can be recomputed and audited (the
-/// byte-accounting property test does exactly that).
+/// The byte footprint one cached entry charges against its budgets,
+/// term by term (re-derived for the quantized-scan representation —
+/// the old "2 embedding copies" constant went stale the moment a third
+/// copy appeared):
+///
+/// * question + response text bytes;
+/// * two f32 embedding copies (`dim * 4` each: one in the index
+///   matrix, one in the rebuild map);
+/// * one int8 embedding copy + its f32 scale (`dim + 4`): the
+///   quantized code row every index row now carries;
+/// * the index node estimate + the fixed per-entry overhead.
+///
+/// Deterministic in the entry's contents so accounting can be
+/// recomputed and audited (the byte-accounting property test does
+/// exactly that).
 pub fn entry_footprint(question_len: usize, response_len: usize, dim: usize) -> u64 {
     question_len as u64
         + response_len as u64
         + 2 * (dim as u64) * 4
+        + (dim as u64 + 4)
         + INDEX_NODE_BYTES
         + ENTRY_OVERHEAD_BYTES
 }
@@ -136,11 +146,17 @@ mod tests {
     #[test]
     fn footprint_is_deterministic_and_monotonic() {
         let base = entry_footprint(0, 0, 0);
-        assert_eq!(base, ENTRY_OVERHEAD_BYTES + INDEX_NODE_BYTES);
-        assert_eq!(entry_footprint(10, 20, 8), base + 10 + 20 + 64);
+        // dim = 0 still pays the 4-byte quantization scale.
+        assert_eq!(base, ENTRY_OVERHEAD_BYTES + INDEX_NODE_BYTES + 4);
+        // dim = 8: two f32 copies (64) + one int8 copy (8); the scale
+        // is already in `base`.
+        assert_eq!(entry_footprint(10, 20, 8), base + 10 + 20 + 64 + 8);
         // Same inputs, same charge — the accounting must be auditable.
         assert_eq!(entry_footprint(7, 3, 96), entry_footprint(7, 3, 96));
         assert!(entry_footprint(100, 0, 8) > entry_footprint(10, 0, 8));
+        // The quantized copy is charged per dimension: 9 bytes/dim
+        // (2×4 f32 + 1 int8) beyond the fixed terms.
+        assert_eq!(entry_footprint(0, 0, 96) - entry_footprint(0, 0, 0), 96 * 9);
     }
 
     #[test]

@@ -4,31 +4,79 @@
 use std::collections::BinaryHeap;
 use std::collections::HashMap;
 
-use super::{Neighbor, OrdF32, VectorIndex};
-use crate::util::{dot, l2_normalized};
+use super::{quantized_preselect_width, Neighbor, OrdF32, VectorIndex};
+use crate::util::{dot, dot_i8, l2_normalized, quantize_i8};
 
 /// Flat (brute-force) cosine index. Vectors live in one contiguous
 /// row-major matrix for scan locality; removals tombstone the row and
 /// `compact()` reclaims it.
+///
+/// An int8 code matrix (per-row scale, symmetric quantization — see
+/// `util::vecmath::quantize_i8`) is maintained alongside the f32 rows.
+/// With `quantized` scanning enabled, `search` preselects a widened
+/// candidate set by streaming the 4×-denser code matrix, then
+/// exact-reranks only those candidates in f32 — returned scores are
+/// always exact f32 dots.
 pub struct FlatIndex {
     dim: usize,
     data: Vec<f32>,
+    /// Int8 codes, same row layout as `data`; re-derived, never persisted.
+    qdata: Vec<i8>,
+    /// Per-row quantization scales.
+    qscales: Vec<f32>,
     ids: Vec<u64>,
     live: Vec<bool>,
     by_id: HashMap<u64, usize>,
     n_live: usize,
+    quantized: bool,
 }
 
 impl FlatIndex {
     pub fn new(dim: usize) -> Self {
+        Self::with_quantized(dim, false)
+    }
+
+    /// `quantized = true` scores scan candidates through the int8 code
+    /// matrix before the exact f32 rerank (the `quantized_scan` config
+    /// key); `false` keeps the seed exact-only scan.
+    pub fn with_quantized(dim: usize, quantized: bool) -> Self {
         assert!(dim > 0);
-        Self { dim, data: Vec::new(), ids: Vec::new(), live: Vec::new(), by_id: HashMap::new(), n_live: 0 }
+        Self {
+            dim,
+            data: Vec::new(),
+            qdata: Vec::new(),
+            qscales: Vec::new(),
+            ids: Vec::new(),
+            live: Vec::new(),
+            by_id: HashMap::new(),
+            n_live: 0,
+            quantized,
+        }
+    }
+
+    /// Whether searches use the quantized preselect path.
+    pub fn quantized(&self) -> bool {
+        self.quantized
     }
 
     /// Row slice for internal row index.
     #[inline]
     fn row(&self, r: usize) -> &[f32] {
         &self.data[r * self.dim..(r + 1) * self.dim]
+    }
+
+    /// Int8 code row for internal row index.
+    #[inline]
+    fn qrow(&self, r: usize) -> &[i8] {
+        &self.qdata[r * self.dim..(r + 1) * self.dim]
+    }
+
+    /// (Re)derive the int8 codes for row `r` from its f32 contents.
+    fn requantize_row(&mut self, r: usize) {
+        let mut codes = Vec::new();
+        let scale = quantize_i8(&self.data[r * self.dim..(r + 1) * self.dim], &mut codes);
+        self.qdata[r * self.dim..(r + 1) * self.dim].copy_from_slice(&codes);
+        self.qscales[r] = scale;
     }
 
     /// Fraction of tombstoned rows.
@@ -43,16 +91,22 @@ impl FlatIndex {
     /// Rebuild the matrix without tombstones.
     pub fn compact(&mut self) {
         let mut data = Vec::with_capacity(self.n_live * self.dim);
+        let mut qdata = Vec::with_capacity(self.n_live * self.dim);
+        let mut qscales = Vec::with_capacity(self.n_live);
         let mut ids = Vec::with_capacity(self.n_live);
         for r in 0..self.ids.len() {
             if self.live[r] {
                 data.extend_from_slice(self.row(r));
+                qdata.extend_from_slice(self.qrow(r));
+                qscales.push(self.qscales[r]);
                 ids.push(self.ids[r]);
             }
         }
         self.by_id = ids.iter().enumerate().map(|(r, &id)| (id, r)).collect();
         self.live = vec![true; ids.len()];
         self.data = data;
+        self.qdata = qdata;
+        self.qscales = qscales;
         self.ids = ids;
     }
 
@@ -74,6 +128,7 @@ impl VectorIndex for FlatIndex {
             // Overwrite in place.
             let normalized = l2_normalized(vec);
             self.data[r * self.dim..(r + 1) * self.dim].copy_from_slice(&normalized);
+            self.requantize_row(r);
             if !self.live[r] {
                 self.live[r] = true;
                 self.n_live += 1;
@@ -82,6 +137,9 @@ impl VectorIndex for FlatIndex {
         }
         let r = self.ids.len();
         self.data.extend_from_slice(&l2_normalized(vec));
+        self.qdata.resize((r + 1) * self.dim, 0);
+        self.qscales.push(0.0);
+        self.requantize_row(r);
         self.ids.push(id);
         self.live.push(true);
         self.by_id.insert(id, r);
@@ -105,6 +163,40 @@ impl VectorIndex for FlatIndex {
             return Vec::new();
         }
         let q = l2_normalized(query);
+        // Quantized path: preselect a widened candidate set by int8
+        // score, then exact-rerank only those rows in f32. Skipped when
+        // the widened set would cover (nearly) every live row anyway,
+        // or when `SEMCACHE_SCALAR_KERNELS` forces the reference path.
+        let pre = quantized_preselect_width(k);
+        if self.quantized && !crate::util::scalar_kernels_forced() && pre < self.n_live {
+            let mut qcodes = Vec::new();
+            let qs = quantize_i8(&q, &mut qcodes);
+            // Min-heap of size `pre` over approximate (score, row).
+            let mut heap: BinaryHeap<std::cmp::Reverse<(OrdF32, usize)>> =
+                BinaryHeap::with_capacity(pre + 1);
+            for r in 0..self.ids.len() {
+                if !self.live[r] {
+                    continue;
+                }
+                let s = qs * self.qscales[r] * dot_i8(&qcodes, self.qrow(r)) as f32;
+                if heap.len() < pre {
+                    heap.push(std::cmp::Reverse((OrdF32(s), r)));
+                } else if s > heap.peek().unwrap().0 .0 .0 {
+                    heap.pop();
+                    heap.push(std::cmp::Reverse((OrdF32(s), r)));
+                }
+            }
+            let mut out: Vec<Neighbor> = heap
+                .into_iter()
+                .map(|std::cmp::Reverse((_, r))| Neighbor {
+                    id: self.ids[r],
+                    score: dot(&q, self.row(r)),
+                })
+                .collect();
+            out.sort_by(|a, b| b.score.total_cmp(&a.score));
+            out.truncate(k);
+            return out;
+        }
         // Min-heap of size k over (score, id): keep the k best.
         let mut heap: BinaryHeap<std::cmp::Reverse<(OrdF32, u64)>> = BinaryHeap::with_capacity(k + 1);
         for r in 0..self.ids.len() {
@@ -204,6 +296,47 @@ mod tests {
             before.iter().map(|n| n.id).collect::<Vec<_>>(),
             after.iter().map(|n| n.id).collect::<Vec<_>>()
         );
+    }
+
+    #[test]
+    fn quantized_scan_returns_exact_scores_and_survives_compact() {
+        let mut exact = FlatIndex::new(24);
+        let mut quant = FlatIndex::with_quantized(24, true);
+        let mut rng = Rng::new(9);
+        for id in 0..400u64 {
+            let v: Vec<f32> = (0..24).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+            exact.insert(id, &v);
+            quant.insert(id, &v);
+        }
+        let q: Vec<f32> = (0..24).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+        let a = exact.search(&q, 5);
+        let b = quant.search(&q, 5);
+        // Rerank is exact f32, so every returned score must be an exact
+        // dot; at modest n the top-5 sets agree on this data.
+        assert_eq!(
+            a.iter().map(|n| n.id).collect::<Vec<_>>(),
+            b.iter().map(|n| n.id).collect::<Vec<_>>()
+        );
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.score.to_bits(), y.score.to_bits(), "rerank must return exact f32 scores");
+        }
+        // Tombstone half, compact: code matrix must stay row-aligned.
+        for id in 0..200u64 {
+            quant.remove(id);
+        }
+        let before = quant.search(&q, 5);
+        quant.compact();
+        let after = quant.search(&q, 5);
+        assert_eq!(
+            before.iter().map(|n| n.id).collect::<Vec<_>>(),
+            after.iter().map(|n| n.id).collect::<Vec<_>>()
+        );
+        // Overwrite requantizes in place.
+        let unit: Vec<f32> = (0..24).map(|i| if i == 0 { 1.0 } else { 0.0 }).collect();
+        quant.insert(333, &unit);
+        let hit = quant.search(&unit, 1);
+        assert_eq!(hit[0].id, 333);
+        assert!(hit[0].score > 0.999);
     }
 
     #[test]

@@ -25,8 +25,8 @@ use std::collections::BinaryHeap;
 use std::collections::HashMap;
 use std::cmp::Reverse;
 
-use super::{Neighbor, OrdF32, VectorIndex};
-use crate::util::{dot, l2_normalized, SplitMix64};
+use super::{quantized_preselect_width, Neighbor, OrdF32, VectorIndex};
+use crate::util::{dot, dot_i8, l2_normalized, quantize_i8, SplitMix64};
 
 /// Tunables; defaults follow hnswlib's.
 #[derive(Debug, Clone)]
@@ -61,17 +61,33 @@ struct Node {
 }
 
 /// HNSW index over cosine similarity.
+///
+/// Alongside the exact f32 matrix the index maintains an int8 code
+/// matrix (per-node scale; `util::vecmath::quantize_i8`). When built
+/// `with_quantized(.., true)`, the *query-time* beam traversal scores
+/// candidates through the codes — 4× more vectors per cache line — and
+/// the surviving candidate set is exact-reranked in f32 before results
+/// are returned, so scores and the top-k ordering stay exact-f32.
+/// Graph *construction* always uses exact scores: the edge set of a
+/// graph is identical whether or not quantized scanning is enabled,
+/// and codes are deterministically re-derived from the f32 vectors on
+/// [`HnswIndex::load`] (the dump format is unchanged).
 pub struct HnswIndex {
     dim: usize,
     cfg: HnswConfig,
     ml: f64,
     data: Vec<f32>,
+    /// Int8 codes, same slot layout as `data`; re-derived, never persisted.
+    qdata: Vec<i8>,
+    /// Per-slot quantization scales.
+    qscales: Vec<f32>,
     nodes: Vec<Node>,
     by_id: HashMap<u64, u32>,
     entry: Option<u32>,
     max_level: usize,
     n_live: usize,
     rng: SplitMix64,
+    quantized: bool,
 }
 
 /// Per-thread search scratch: epoch-stamped visited marks, reused heaps.
@@ -86,6 +102,13 @@ thread_local! {
 
 impl HnswIndex {
     pub fn new(dim: usize, cfg: HnswConfig) -> Self {
+        Self::with_quantized(dim, cfg, false)
+    }
+
+    /// `quantized = true` routes query-time beam scoring through the
+    /// int8 code matrix (the `quantized_scan` config key); `false`
+    /// keeps the seed exact-f32 traversal.
+    pub fn with_quantized(dim: usize, cfg: HnswConfig, quantized: bool) -> Self {
         assert!(dim > 0 && cfg.m >= 2);
         let ml = 1.0 / (cfg.m as f64).ln();
         let rng = SplitMix64::new(cfg.seed);
@@ -94,13 +117,21 @@ impl HnswIndex {
             cfg,
             ml,
             data: Vec::new(),
+            qdata: Vec::new(),
+            qscales: Vec::new(),
             nodes: Vec::new(),
             by_id: HashMap::new(),
             entry: None,
             max_level: 0,
             n_live: 0,
             rng,
+            quantized,
         }
+    }
+
+    /// Whether query-time traversal uses the quantized scoring path.
+    pub fn quantized(&self) -> bool {
+        self.quantized
     }
 
     #[inline]
@@ -110,8 +141,37 @@ impl HnswIndex {
     }
 
     #[inline]
+    fn qvec_of(&self, n: u32) -> &[i8] {
+        let r = n as usize;
+        &self.qdata[r * self.dim..(r + 1) * self.dim]
+    }
+
+    #[inline]
     fn sim(&self, n: u32, q: &[f32]) -> f32 {
         dot(self.vec_of(n), q)
+    }
+
+    /// Approximate similarity of node `n` against pre-quantized query
+    /// codes (`qs` = query scale). Exact 0 for zero vectors, matching
+    /// the f32 dot.
+    #[inline]
+    fn qsim(&self, n: u32, qcodes: &[i8], qs: f32) -> f32 {
+        qs * self.qscales[n as usize] * dot_i8(self.qvec_of(n), qcodes) as f32
+    }
+
+    /// (Re)derive the int8 codes for `slot` from its f32 vector.
+    fn requantize_slot(&mut self, slot: u32) {
+        let r = slot as usize;
+        let mut codes = Vec::new();
+        let scale = quantize_i8(&self.data[r * self.dim..(r + 1) * self.dim], &mut codes);
+        if self.qdata.len() < (r + 1) * self.dim {
+            self.qdata.resize((r + 1) * self.dim, 0);
+        }
+        if self.qscales.len() < r + 1 {
+            self.qscales.resize(r + 1, 0.0);
+        }
+        self.qdata[r * self.dim..(r + 1) * self.dim].copy_from_slice(&codes);
+        self.qscales[r] = scale;
     }
 
     fn sample_level(&mut self) -> usize {
@@ -120,12 +180,18 @@ impl HnswIndex {
     }
 
     /// Greedy 1-best descent on one layer (upper-layer routing).
-    fn greedy_step(&self, q: &[f32], mut cur: u32, layer: usize) -> u32 {
-        let mut cur_sim = self.sim(cur, q);
+    fn greedy_step(&self, q: &[f32], cur: u32, layer: usize) -> u32 {
+        self.greedy_step_by(&|n| self.sim(n, q), cur, layer)
+    }
+
+    /// [`greedy_step`](Self::greedy_step) over an arbitrary node scorer
+    /// (monomorphized; the quantized path passes the int8 scorer).
+    fn greedy_step_by<F: Fn(u32) -> f32>(&self, score: &F, mut cur: u32, layer: usize) -> u32 {
+        let mut cur_sim = score(cur);
         loop {
             let mut improved = false;
             for &nb in &self.nodes[cur as usize].neighbors[layer] {
-                let s = self.sim(nb, q);
+                let s = score(nb);
                 if s > cur_sim {
                     cur_sim = s;
                     cur = nb;
@@ -140,6 +206,19 @@ impl HnswIndex {
 
     /// Beam search on one layer (Alg. 2). Returns candidates best-first.
     fn search_layer(&self, q: &[f32], entry: u32, ef: usize, layer: usize) -> Vec<(f32, u32)> {
+        self.search_layer_by(&|n| self.sim(n, q), entry, ef, layer)
+    }
+
+    /// [`search_layer`](Self::search_layer) over an arbitrary node
+    /// scorer (monomorphized; the quantized path passes the int8
+    /// scorer).
+    fn search_layer_by<F: Fn(u32) -> f32>(
+        &self,
+        score: &F,
+        entry: u32,
+        ef: usize,
+        layer: usize,
+    ) -> Vec<(f32, u32)> {
         SCRATCH.with(|s| {
             let mut s = s.borrow_mut();
             if s.visited.len() < self.nodes.len() {
@@ -155,7 +234,7 @@ impl HnswIndex {
             // candidates: max-heap by sim; results: min-heap of size ef.
             let mut candidates: BinaryHeap<(OrdF32, u32)> = BinaryHeap::new();
             let mut results: BinaryHeap<Reverse<(OrdF32, u32)>> = BinaryHeap::new();
-            let e_sim = self.sim(entry, q);
+            let e_sim = score(entry);
             s.visited[entry as usize] = epoch;
             candidates.push((OrdF32(e_sim), entry));
             results.push(Reverse((OrdF32(e_sim), entry)));
@@ -170,7 +249,7 @@ impl HnswIndex {
                         continue;
                     }
                     s.visited[nb as usize] = epoch;
-                    let nb_sim = self.sim(nb, q);
+                    let nb_sim = score(nb);
                     let worst = results.peek().map(|Reverse((OrdF32(s), _))| *s).unwrap_or(f32::MIN);
                     if results.len() < ef || nb_sim > worst {
                         candidates.push((OrdF32(nb_sim), nb));
@@ -243,7 +322,7 @@ impl HnswIndex {
                 pairs.push((n.id, self.vec_of(self.by_id[&n.id]).to_vec()));
             }
         }
-        let mut fresh = HnswIndex::new(self.dim, self.cfg.clone());
+        let mut fresh = HnswIndex::with_quantized(self.dim, self.cfg.clone(), self.quantized);
         for (id, v) in pairs {
             fresh.insert_normalized(id, v);
         }
@@ -277,6 +356,33 @@ impl HnswIndex {
             return Vec::new();
         }
         let q = l2_normalized(query);
+        if self.quantized && !crate::util::scalar_kernels_forced() {
+            // Quantized traversal: score the descent and the layer-0
+            // beam through the int8 code matrix, then exact-rerank the
+            // surviving candidates in f32. The beam is widened to the
+            // preselect width so quantization noise near the cut line
+            // cannot evict true top-k candidates; returned scores are
+            // exact f32 dots either way.
+            let mut qcodes = Vec::new();
+            let qs = quantize_i8(&q, &mut qcodes);
+            let score = |n: u32| self.qsim(n, &qcodes, qs);
+            for layer in (1..=self.max_level).rev() {
+                cur = self.greedy_step_by(&score, cur, layer);
+            }
+            let ef = ef.max(k).max(quantized_preselect_width(k)).max(1);
+            let found = self.search_layer_by(&score, cur, ef, 0);
+            let mut out: Vec<Neighbor> = found
+                .iter()
+                .filter(|&&(_, n)| !self.nodes[n as usize].deleted)
+                .map(|&(_, n)| Neighbor {
+                    id: self.nodes[n as usize].id,
+                    score: self.sim(n, &q),
+                })
+                .collect();
+            out.sort_by(|a, b| b.score.total_cmp(&a.score));
+            out.truncate(k);
+            return out;
+        }
         for layer in (1..=self.max_level).rev() {
             cur = self.greedy_step(&q, cur, layer);
         }
@@ -292,6 +398,23 @@ impl HnswIndex {
             }
         }
         out
+    }
+
+    /// Exhaustive exact scan over live nodes — the last-resort
+    /// fallback when beam widening cannot surface `k` live results
+    /// (e.g. live islands unreachable through a tombstone-saturated
+    /// neighborhood). O(n), but only ever taken on pathological graphs.
+    fn exhaustive_search(&self, q: &[f32], k: usize) -> Vec<Neighbor> {
+        let mut scored: Vec<Neighbor> = self
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| !n.deleted)
+            .map(|(slot, n)| Neighbor { id: n.id, score: self.sim(slot as u32, q) })
+            .collect();
+        scored.sort_by(|a, b| b.score.total_cmp(&a.score));
+        scored.truncate(k);
+        scored
     }
 
     /// Serialize the full graph (vectors, adjacency, tombstones, entry
@@ -431,19 +554,40 @@ impl HnswIndex {
         if data.len() != n_nodes * dim {
             return Err(fail("vector matrix size mismatch"));
         }
+        // Re-derive the int8 codes from the exact dumped vectors:
+        // quantization is a pure function of the f32 data, so a loaded
+        // graph scores identically to the pre-dump original and the
+        // dump format stays at version 1.
+        let mut qdata = Vec::with_capacity(data.len());
+        let mut qscales = Vec::with_capacity(n_nodes);
+        let mut codes = Vec::new();
+        for slot in 0..n_nodes {
+            qscales.push(quantize_i8(&data[slot * dim..(slot + 1) * dim], &mut codes));
+            qdata.extend_from_slice(&codes);
+        }
         let ml = 1.0 / (cfg.m as f64).ln();
         Ok(HnswIndex {
             dim,
             cfg,
             ml,
             data,
+            qdata,
+            qscales,
             nodes,
             by_id,
             entry,
             max_level,
             n_live,
             rng: SplitMix64::from_state(rng_state),
+            quantized: false,
         })
+    }
+
+    /// Enable/disable the quantized query path on a loaded graph
+    /// (snapshot recovery re-applies the `quantized_scan` config after
+    /// [`HnswIndex::load`], which defaults to the exact path).
+    pub fn set_quantized(&mut self, on: bool) {
+        self.quantized = on;
     }
 
     fn insert_normalized(&mut self, id: u64, v: Vec<f32>) {
@@ -451,6 +595,7 @@ impl HnswIndex {
             // Overwrite: update vector in place, revive if tombstoned.
             self.data[slot as usize * self.dim..(slot as usize + 1) * self.dim]
                 .copy_from_slice(&v);
+            self.requantize_slot(slot);
             if self.nodes[slot as usize].deleted {
                 self.nodes[slot as usize].deleted = false;
                 self.n_live += 1;
@@ -460,6 +605,7 @@ impl HnswIndex {
         let level = self.sample_level();
         let slot = self.nodes.len() as u32;
         self.data.extend_from_slice(&v);
+        self.requantize_slot(slot);
         self.nodes.push(Node {
             id,
             level,
@@ -521,9 +667,29 @@ impl VectorIndex for HnswIndex {
     }
 
     fn search(&self, query: &[f32], k: usize) -> Vec<Neighbor> {
-        // Widen the beam when many tombstones may hide results.
-        let ef = self.cfg.ef_search + 2 * (self.nodes.len() - self.n_live).min(64);
-        self.search_ef(query, k, ef)
+        // Widen the beam when many tombstones may hide results. The
+        // static widening is capped, so it alone cannot guarantee
+        // coverage on tombstone-saturated graphs — and quantized
+        // approximation error must not compound with that shrinkage.
+        // Contract: whenever >= min(k, n_live) live nodes exist, the
+        // candidate set handed to the exact rerank is at least that
+        // large. Enforced by doubling ef until the beam covers the
+        // graph, then falling back to an exhaustive live scan (live
+        // islands can be unreachable no matter how wide the beam).
+        let tombstones = self.nodes.len() - self.n_live;
+        // `.max(1)` keeps the doubling below progressing even under a
+        // pathological `ef_search = 0` config.
+        let mut ef = (self.cfg.ef_search + 2 * tombstones.min(64)).max(1);
+        let want = k.min(self.n_live);
+        let mut out = self.search_ef(query, k, ef);
+        while out.len() < want && ef < self.nodes.len() {
+            ef = (ef * 2).min(self.nodes.len());
+            out = self.search_ef(query, k, ef);
+        }
+        if out.len() < want {
+            out = self.exhaustive_search(&l2_normalized(query), k);
+        }
+        out
     }
 
     fn len(&self) -> usize {
@@ -767,6 +933,121 @@ mod tests {
         assert!(HnswIndex::load(&buf[..buf.len() - 3]).is_err());
         // A loaded-then-validated graph must round-trip.
         assert!(HnswIndex::load(&buf).is_ok());
+    }
+
+    #[test]
+    fn tombstone_heavy_search_returns_every_live_node() {
+        // Directed regression for the beam-widening bug: the static
+        // widening (ef_search + 2 * tombstones.min(64)) is capped, so a
+        // graph with thousands of tombstones hiding a handful of live
+        // nodes could return fewer than min(k, n_live) results — and
+        // quantized approximation error must not compound with that.
+        // Contract: >= min(k, n_live) results whenever that many live
+        // nodes exist.
+        for quantized in [false, true] {
+            let dim = 16;
+            let n = 2_000u64;
+            let mut rng = Rng::new(77);
+            let mut idx = HnswIndex::with_quantized(dim, HnswConfig::default(), quantized);
+            let mut vecs = Vec::new();
+            for id in 0..n {
+                let v = random_vec(&mut rng, dim);
+                idx.insert(id, &v);
+                vecs.push(v);
+            }
+            // Keep 12 scattered survivors; everything else tombstones.
+            let live: Vec<u64> = (0..12).map(|i| i * 167).collect();
+            for id in 0..n {
+                if !live.contains(&id) {
+                    idx.remove(id);
+                }
+            }
+            assert_eq!(idx.len(), 12);
+            for qi in 0..10 {
+                let q = &vecs[(qi * 191) as usize];
+                let res = idx.search(q, 12);
+                assert_eq!(
+                    res.len(),
+                    12,
+                    "quantized={quantized}: search must surface all live nodes"
+                );
+                let mut got: Vec<u64> = res.iter().map(|n| n.id).collect();
+                got.sort_unstable();
+                assert_eq!(got, live, "quantized={quantized}: wrong live set");
+                for w in res.windows(2) {
+                    assert!(w[0].score >= w[1].score);
+                }
+                // A smaller k still fills up.
+                assert_eq!(idx.search(q, 5).len(), 5);
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_search_matches_exact_graph() {
+        // Construction is always exact, so the exact and quantized
+        // graphs are structurally identical; the quantized query path
+        // must (a) return exact f32 scores and (b) track the exact
+        // path's results closely.
+        let dim = 24;
+        let mut rng = Rng::new(55);
+        let mut exact = HnswIndex::new(dim, HnswConfig::default());
+        let mut quant = HnswIndex::with_quantized(dim, HnswConfig::default(), true);
+        for id in 0..2_000u64 {
+            let v = random_vec(&mut rng, dim);
+            exact.insert(id, &v);
+            quant.insert(id, &v);
+        }
+        let mut overlap = 0usize;
+        let queries = 40;
+        for _ in 0..queries {
+            let q = random_vec(&mut rng, dim);
+            let a = exact.search(&q, 10);
+            let b = quant.search(&q, 10);
+            assert_eq!(b.len(), 10);
+            let truth: Vec<u64> = a.iter().map(|n| n.id).collect();
+            for nb in &b {
+                if truth.contains(&nb.id) {
+                    overlap += 1;
+                    // Shared ids must carry the identical exact score.
+                    let sa = a.iter().find(|x| x.id == nb.id).unwrap().score;
+                    assert_eq!(sa.to_bits(), nb.score.to_bits(), "rerank must be exact f32");
+                }
+            }
+        }
+        let agreement = overlap as f64 / (10 * queries) as f64;
+        assert!(agreement > 0.9, "quantized-vs-exact top-10 agreement = {agreement}");
+    }
+
+    #[test]
+    fn quantized_dump_load_search_parity() {
+        // Codes are re-derived from the exact dumped f32 vectors, so a
+        // loaded quantized graph must search bit-identically to the
+        // original (same dump format version as exact graphs).
+        let dim = 16;
+        let mut rng = Rng::new(66);
+        let mut idx = HnswIndex::with_quantized(dim, HnswConfig::default(), true);
+        for id in 0..600u64 {
+            idx.insert(id, &random_vec(&mut rng, dim));
+        }
+        for id in (0..600u64).step_by(4) {
+            idx.remove(id);
+        }
+        let mut buf = Vec::new();
+        idx.dump(&mut buf);
+        let mut loaded = HnswIndex::load(&buf).expect("dump must load");
+        assert!(!loaded.quantized(), "load defaults to the exact path");
+        loaded.set_quantized(true);
+        for _ in 0..25 {
+            let q = random_vec(&mut rng, dim);
+            let a = idx.search(&q, 7);
+            let b = loaded.search(&q, 7);
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.id, y.id);
+                assert_eq!(x.score.to_bits(), y.score.to_bits());
+            }
+        }
     }
 
     #[test]

@@ -68,6 +68,14 @@ pub trait VectorIndex: Send + Sync {
     }
 }
 
+/// Candidate-set width for the quantized preselect stage: the int8
+/// scan keeps `max(4k, 32)` rows for the exact f32 rerank, absorbing
+/// quantization-induced rank swaps near the cut line. Shared by both
+/// indexes so the recall floor is measured against one contract.
+pub(crate) fn quantized_preselect_width(k: usize) -> usize {
+    (4 * k).max(32)
+}
+
 /// Max-heap ordering helper for f32 scores (NaN-free by construction).
 #[derive(PartialEq)]
 pub(crate) struct OrdF32(pub f32);
@@ -133,8 +141,18 @@ mod tests {
     }
 
     #[test]
+    fn flat_quantized_conformance() {
+        conformance(Box::new(FlatIndex::with_quantized(32, true)));
+    }
+
+    #[test]
     fn hnsw_conformance() {
         conformance(Box::new(HnswIndex::new(32, HnswConfig::default())));
+    }
+
+    #[test]
+    fn hnsw_quantized_conformance() {
+        conformance(Box::new(HnswIndex::with_quantized(32, HnswConfig::default(), true)));
     }
 
     #[test]

@@ -124,6 +124,12 @@ pub struct Metrics {
     pub recovery_ms: AtomicU64,
     /// Entries restored live by the startup recovery pass.
     pub recovered_entries: AtomicU64,
+    // Index kernel selection (crate::index quantized scan).
+    /// ANN lookups served while the int8 quantized candidate scan was
+    /// active (`quantized_scan` on and not overridden by
+    /// `SEMCACHE_SCALAR_KERNELS`). Lookups minus this = exact-scan
+    /// lookups, so a deploy can confirm which kernel actually ran.
+    pub quantized_lookups: AtomicU64,
     // Latency histograms (ms), mutex-guarded (record is a few ns anyway).
     lat_total: Mutex<Histogram>,
     lat_embed: Mutex<Histogram>,
@@ -273,6 +279,8 @@ pub struct MetricsSnapshot {
     pub snapshots_written: u64,
     pub recovery_ms: u64,
     pub recovered_entries: u64,
+    /// Lookups served by the quantized candidate scan.
+    pub quantized_lookups: u64,
     pub lat_total: Summary,
     pub lat_embed: Summary,
     /// Embed latency over memo-tier hits only.
@@ -460,6 +468,11 @@ impl Metrics {
         self.snapshots_written.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// One ANN lookup that ran the int8 quantized candidate scan.
+    pub fn record_quantized_lookup(&self) {
+        self.quantized_lookups.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Result of the startup recovery pass.
     pub fn record_recovery(&self, ms: u64, entries: u64) {
         self.recovery_ms.store(ms, Ordering::Relaxed);
@@ -537,6 +550,7 @@ impl Metrics {
             snapshots_written: self.snapshots_written.load(Ordering::Relaxed),
             recovery_ms: self.recovery_ms.load(Ordering::Relaxed),
             recovered_entries: self.recovered_entries.load(Ordering::Relaxed),
+            quantized_lookups: self.quantized_lookups.load(Ordering::Relaxed),
             lat_total: self.lat_total.lock().unwrap().summary(),
             lat_embed: self.lat_embed.lock().unwrap().summary(),
             lat_embed_memo: self.lat_embed_memo.lock().unwrap().summary(),
@@ -679,6 +693,7 @@ impl MetricsSnapshot {
             ("snapshots_written", self.snapshots_written.into()),
             ("recovery_ms", self.recovery_ms.into()),
             ("recovered_entries", self.recovered_entries.into()),
+            ("quantized_lookups", self.quantized_lookups.into()),
         ])
     }
 }
@@ -879,6 +894,17 @@ mod tests {
         assert_eq!(j.get("wal_append_errors").as_usize(), Some(1));
         assert_eq!(j.get("snapshots_written").as_usize(), Some(1));
         assert_eq!(j.get("recovered_entries").as_usize(), Some(17));
+    }
+
+    #[test]
+    fn quantized_lookup_counter() {
+        let m = Metrics::new();
+        assert_eq!(m.snapshot().quantized_lookups, 0);
+        m.record_quantized_lookup();
+        m.record_quantized_lookup();
+        let s = m.snapshot();
+        assert_eq!(s.quantized_lookups, 2);
+        assert_eq!(s.to_json().get("quantized_lookups").as_usize(), Some(2));
     }
 
     #[test]

@@ -155,7 +155,12 @@ impl Persistence {
                 if let Some(bytes) = &dump.graph {
                     if p.index_is_hnsw() {
                         match HnswIndex::load(bytes) {
-                            Ok(idx) if idx.dim() == dump.dim => {
+                            Ok(mut idx) if idx.dim() == dump.dim => {
+                                // Loads default to the exact scan; re-apply
+                                // the partition's configured kernel so a
+                                // recovered graph searches exactly like one
+                                // built live.
+                                idx.set_quantized(p.quantized());
                                 graph_installed = p.install_index(Box::new(idx));
                             }
                             _ => {}

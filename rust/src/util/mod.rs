@@ -12,7 +12,19 @@ mod vecmath;
 
 pub use rng::{Rng, SplitMix64};
 pub use stats::{mean, percentile, stddev, Summary};
-pub use vecmath::{cosine, dot, l2_normalize, l2_normalized, norm, scale_add};
+pub use vecmath::{cosine, dot, dot_i8, l2_normalize, l2_normalized, norm, quantize_i8, scale_add};
+
+/// `SEMCACHE_SCALAR_KERNELS=1` forces the scalar reference kernels on
+/// the compute hot paths (naive matmul in the encoder, exact-f32
+/// candidate scoring in the indexes), mirroring the `poll_fallback`
+/// convention so CI can exercise both the optimized and reference
+/// arms. Read once; the choice is process-wide.
+pub fn scalar_kernels_forced() -> bool {
+    static FORCED: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *FORCED.get_or_init(|| {
+        std::env::var("SEMCACHE_SCALAR_KERNELS").map(|v| v != "0" && !v.is_empty()).unwrap_or(false)
+    })
+}
 
 /// Default reactor-thread count for the event-driven HTTP front-end:
 /// one per core, capped at 8 (past that the accept path is never the

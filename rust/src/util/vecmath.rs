@@ -8,9 +8,14 @@
 /// Dot product with an 8-lane accumulator array: LLVM maps the inner
 /// loop to one SIMD register of independent FMAs (verified ~9x faster
 /// than the scalar/2-way form — see DESIGN.md §Perf / `bench_micro`).
+///
+/// Length mismatch is a hard panic in every build profile: the
+/// chunked+zipped loops would otherwise silently drop the longer
+/// vector's tail and return a plausible-but-wrong score, which a
+/// similarity cache turns into wrong answers rather than crashes.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
+    assert_eq!(a.len(), b.len(), "dot: length mismatch {} vs {}", a.len(), b.len());
     let mut acc = [0.0f32; 8];
     let ca = a.chunks_exact(8);
     let cb = b.chunks_exact(8);
@@ -64,11 +69,70 @@ pub fn l2_normalized(v: &[f32]) -> Vec<f32> {
 }
 
 /// `acc += s * v` (used by pooling in the native encoder).
+///
+/// Same contract as [`dot`]: mismatched lengths panic instead of
+/// silently updating only a prefix of `acc`.
 pub fn scale_add(acc: &mut [f32], v: &[f32], s: f32) {
-    debug_assert_eq!(acc.len(), v.len());
+    assert_eq!(acc.len(), v.len(), "scale_add: length mismatch {} vs {}", acc.len(), v.len());
     for (a, x) in acc.iter_mut().zip(v) {
         *a += s * x;
     }
+}
+
+// ---------------------------------------------------------------------------
+// Int8 symmetric quantization (quantized candidate scan — DESIGN.md §Perf).
+// ---------------------------------------------------------------------------
+
+/// Quantize a vector to symmetric int8 codes plus a per-vector scale.
+///
+/// Format: `scale = max|v| / 127`, `code[i] = round(v[i] / scale)`
+/// clamped to `[-127, 127]` (−128 is never produced, keeping the code
+/// range symmetric), so `v[i] ≈ code[i] * scale`. The all-zero vector
+/// gets `scale == 0.0` and all-zero codes; every quantized score
+/// against it is exactly 0, matching the f32 dot. Quantization is a
+/// pure function of the input vector, so codes can be re-derived
+/// deterministically from the exact f32 copy after a snapshot/WAL
+/// restart instead of being persisted.
+pub fn quantize_i8(v: &[f32], codes: &mut Vec<i8>) -> f32 {
+    codes.clear();
+    codes.reserve(v.len());
+    let max_abs = v.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+    if max_abs == 0.0 {
+        codes.extend(std::iter::repeat(0i8).take(v.len()));
+        return 0.0;
+    }
+    let scale = max_abs / 127.0;
+    let inv = 127.0 / max_abs;
+    for &x in v {
+        codes.push((x * inv).round().clamp(-127.0, 127.0) as i8);
+    }
+    scale
+}
+
+/// Widening-i32 dot product of two int8 code vectors, in the same
+/// 8-lane independent-accumulator style as [`dot`] so LLVM
+/// auto-vectorizes it. Products of `[-127, 127]` codes fit i32 for any
+/// realistic dim (127² · dim < 2³¹ up to dim ≈ 133k).
+///
+/// The approximate similarity of vectors `a`/`b` with scales
+/// `sa`/`sb` is `sa * sb * dot_i8(ca, cb) as f32`.
+#[inline]
+pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    assert_eq!(a.len(), b.len(), "dot_i8: length mismatch {} vs {}", a.len(), b.len());
+    let mut acc = [0i32; 8];
+    let ca = a.chunks_exact(8);
+    let cb = b.chunks_exact(8);
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    for (xa, xb) in ca.zip(cb) {
+        for i in 0..8 {
+            acc[i] += xa[i] as i32 * xb[i] as i32;
+        }
+    }
+    let mut tail = 0i32;
+    for (&x, &y) in ra.iter().zip(rb) {
+        tail += x as i32 * y as i32;
+    }
+    acc.iter().sum::<i32>() + tail
 }
 
 #[cfg(test)]
@@ -106,6 +170,68 @@ mod tests {
         let mut z = vec![0.0; 4];
         l2_normalize(&mut z);
         assert_eq!(z, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn dot_length_mismatch_panics_in_release_too() {
+        // Regression: release builds used to silently drop the longer
+        // vector's tail (chunks_exact + zip) and return a wrong score.
+        let a = vec![1.0f32; 9];
+        let b = vec![1.0f32; 8];
+        let r = std::panic::catch_unwind(|| dot(&a, &b));
+        assert!(r.is_err(), "dot must panic on length mismatch, not truncate");
+        let r = std::panic::catch_unwind(|| {
+            let mut acc = vec![0.0f32; 4];
+            scale_add(&mut acc, &[1.0; 5], 2.0);
+        });
+        assert!(r.is_err(), "scale_add must panic on length mismatch");
+    }
+
+    #[test]
+    fn quantize_roundtrip_error_is_bounded() {
+        let v: Vec<f32> = (0..103).map(|i| ((i * 31 % 17) as f32 - 8.0) * 0.11).collect();
+        let mut codes = Vec::new();
+        let scale = quantize_i8(&v, &mut codes);
+        assert_eq!(codes.len(), v.len());
+        let max_abs = v.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+        // Reconstruction error per element is at most half a step.
+        for (&c, &x) in codes.iter().zip(&v) {
+            assert!((c as f32 * scale - x).abs() <= scale * 0.5 + 1e-6, "x={x} c={c}");
+            assert!((-127..=127).contains(&(c as i32)));
+        }
+        assert!((scale - max_abs / 127.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quantize_zero_vector_scores_zero() {
+        let mut ca = Vec::new();
+        let mut cb = Vec::new();
+        let sa = quantize_i8(&[0.0; 16], &mut ca);
+        let sb = quantize_i8(&[1.0; 16], &mut cb);
+        assert_eq!(sa, 0.0);
+        assert_eq!(sa * sb * dot_i8(&ca, &cb) as f32, 0.0);
+    }
+
+    #[test]
+    fn dot_i8_matches_scalar_and_approximates_f32() {
+        let a: Vec<f32> = (0..96).map(|i| ((i * 7 % 23) as f32 - 11.0) * 0.09).collect();
+        let b: Vec<f32> = (0..96).map(|i| ((i * 13 % 19) as f32 - 9.0) * 0.07).collect();
+        let (mut ca, mut cb) = (Vec::new(), Vec::new());
+        let sa = quantize_i8(&a, &mut ca);
+        let sb = quantize_i8(&b, &mut cb);
+        let naive: i32 = ca.iter().zip(&cb).map(|(&x, &y)| x as i32 * y as i32).sum();
+        assert_eq!(dot_i8(&ca, &cb), naive);
+        let approx = sa * sb * naive as f32;
+        let exact = dot(&a, &b);
+        // int8 with per-vector scales keeps dot error small relative to
+        // the vector norms (|err| <= ~(|a|+|b|) * step/2).
+        assert!((approx - exact).abs() < 0.05 * norm(&a) * norm(&b) + 1e-3, "{approx} vs {exact}");
+    }
+
+    #[test]
+    fn dot_i8_length_mismatch_panics() {
+        let r = std::panic::catch_unwind(|| dot_i8(&[1, 2, 3], &[1, 2]));
+        assert!(r.is_err());
     }
 
     #[test]

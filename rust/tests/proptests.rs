@@ -213,6 +213,79 @@ fn prop_cache_threshold_monotone() {
     });
 }
 
+/// Recall of the int8 quantized scan vs the exact path, measured at the
+/// cache API over a seeded workload (ISSUE 10 acceptance): two caches
+/// differing only in `quantized_scan` must agree on the hit/miss
+/// outcome for >= 99% of queries at the default threshold, and every
+/// planted near-duplicate ("positive") query that hits must return the
+/// identical cached answer on both sides. Quantized rerank scores are
+/// exact f32 dots, so any residual disagreement can only come from the
+/// candidate preselect — which the 1% budget bounds.
+#[test]
+fn prop_quantized_recall_matches_exact() {
+    prop_check(cfg(8), "quantized-recall-vs-exact", |g| {
+        let dim = 24;
+        let mut exact_cfg = CacheConfig::default();
+        exact_cfg.quantized_scan = false;
+        let exact = SemanticCache::new(exact_cfg);
+        let quant = SemanticCache::new(CacheConfig::default());
+        let n = g.usize_in(60, 250);
+        let mut rows = Vec::new();
+        for i in 0..n {
+            let v = l2_normalized(&g.vec_f32(dim, -1.0, 1.0));
+            let question = format!("q{i}");
+            let answer = format!("r{i}");
+            exact.try_insert(&question, &v, &answer).map_err(|e| format!("insert: {e:#}"))?;
+            quant.try_insert(&question, &v, &answer).map_err(|e| format!("insert: {e:#}"))?;
+            rows.push(v);
+        }
+        let queries = 200;
+        let mut disagreements = 0usize;
+        for qi in 0..queries {
+            let positive = qi % 2 == 0;
+            let q: Vec<f32> = if positive {
+                // Near-duplicate of a stored row: unambiguous top-1
+                // with score ~0.999 >> the ~0.3 typical of the rest.
+                let t = g.usize_below(n);
+                rows[t].iter().map(|x| x + g.f32_in(-0.02, 0.02)).collect()
+            } else {
+                g.vec_f32(dim, -1.0, 1.0)
+            };
+            let he = exact.lookup(&q);
+            let hq = quant.lookup(&q);
+            match (&he, &hq) {
+                (Some(a), Some(b)) => {
+                    if positive && a.entry.response != b.entry.response {
+                        return Err(format!(
+                            "positive hit answers diverge: '{}' vs '{}' (scores {:.6}/{:.6})",
+                            a.entry.response, b.entry.response, a.score, b.score
+                        ));
+                    }
+                    if a.entry.response != b.entry.response {
+                        disagreements += 1;
+                    }
+                }
+                (None, None) => {}
+                _ => {
+                    if positive {
+                        return Err(format!(
+                            "positive query hit on one side only: exact={} quantized={}",
+                            he.is_some(),
+                            hq.is_some()
+                        ));
+                    }
+                    disagreements += 1;
+                }
+            }
+        }
+        // >= 99% outcome parity over the whole workload.
+        if disagreements * 100 > queries {
+            return Err(format!("{disagreements}/{queries} outcome disagreements (> 1%)"));
+        }
+        Ok(())
+    });
+}
+
 /// Byte accounting is exact for every eviction policy: after a random
 /// trace of tenant-scoped inserts (with TTLs and budget evictions),
 /// removes, clock advances, and lookups, the global ledger, every

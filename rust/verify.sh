@@ -16,9 +16,12 @@
 # outage via `admin fault --outage`: a paraphrase must be served from
 # cache as a marked *degraded* hit, a novel query must get a typed 503
 # instead of hanging, and clearing the fault must restore fresh
-# misses), and a smoke run of the serving benches
-# (SEMCACHE_BENCH_SMOKE=1 keeps each to a few seconds). Fails fast on
-# the first broken step.
+# misses), a forced-scalar kernel arm (SEMCACHE_SCALAR_KERNELS=1 re-runs
+# the unit + hot-path suites on the seed matmul / exact-scan paths), and
+# a smoke run of the serving benches (SEMCACHE_BENCH_SMOKE=1 keeps each
+# to a few seconds; the embed and hnsw benches append JSON-lines results
+# to BENCH_embed.json / BENCH_hnsw.json). Fails fast on the first
+# broken step.
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -40,6 +43,16 @@ cargo test -q
 
 echo "==> cargo test --doc -q"
 cargo test --doc -q
+
+# Forced-scalar kernel arm (ISSUE 10): SEMCACHE_SCALAR_KERNELS=1 routes
+# the encoder matmul and the ANN candidate scan through the seed scalar
+# paths, so both sides of every kernel dispatch stay covered. The unit
+# suite plus the two hot-path integration suites re-run under it; the
+# parity properties make any blocked/quantized-vs-scalar divergence a
+# hard failure.
+echo "==> forced-scalar kernel arm: SEMCACHE_SCALAR_KERNELS=1 cargo test (unit + hot-path suites)"
+SEMCACHE_SCALAR_KERNELS=1 cargo test -q --lib
+SEMCACHE_SCALAR_KERNELS=1 cargo test -q --test embed_hotpath --test proptests
 
 echo "==> HTTP loopback smoke: semcached serve (batched query path)"
 PORT_FILE="$(mktemp)"
@@ -360,8 +373,15 @@ SEMCACHE_BENCH_SMOKE=1 cargo bench --bench bench_batch_throughput
 echo "==> smoke bench: bench_http_loopback (SEMCACHE_BENCH_SMOKE=1, enforced)"
 SEMCACHE_BENCH_SMOKE=1 SEMCACHE_BENCH_ENFORCE=1 cargo bench --bench bench_http_loopback
 
-echo "==> smoke bench: bench_embed_throughput (SEMCACHE_BENCH_SMOKE=1)"
-SEMCACHE_BENCH_SMOKE=1 cargo bench --bench bench_embed_throughput
+# The embed and hnsw benches also append machine-readable results
+# (JSON lines) so perf floors become a tracked trajectory across PRs.
+echo "==> smoke bench: bench_embed_throughput (SEMCACHE_BENCH_SMOKE=1, json -> BENCH_embed.json)"
+: > BENCH_embed.json
+SEMCACHE_BENCH_SMOKE=1 SEMCACHE_BENCH_JSON=BENCH_embed.json cargo bench --bench bench_embed_throughput
+
+echo "==> smoke bench: bench_hnsw_scaling (SEMCACHE_BENCH_SMOKE=1, json -> BENCH_hnsw.json)"
+: > BENCH_hnsw.json
+SEMCACHE_BENCH_SMOKE=1 SEMCACHE_BENCH_JSON=BENCH_hnsw.json cargo bench --bench bench_hnsw_scaling
 
 echo "==> smoke bench: bench_persist_restart (SEMCACHE_BENCH_SMOKE=1)"
 SEMCACHE_BENCH_SMOKE=1 cargo bench --bench bench_persist_restart
